@@ -1,0 +1,68 @@
+//! Design-space exploration walkthrough (paper Section V-A): regenerate
+//! Fig. 5 (all legal tiling candidates, CTC ratios, attainable
+//! throughput, the bandwidth slope) and Table I (resource utilization of
+//! the selected designs), then show how the chosen T_OH behaves inside
+//! the full pipeline simulation.
+//!
+//! Run: `cargo run --release --example design_space`
+
+use edgedcnn::config::{network_by_name, PYNQ_Z2};
+use edgedcnn::experiments as exp;
+use edgedcnn::fpga::{simulate_network, SimOpts};
+
+fn main() -> anyhow::Result<()> {
+    println!("== Fig. 5: design-space exploration ==\n");
+    for net in ["mnist", "celeba"] {
+        let data = exp::run_fig5(net, &PYNQ_Z2)?;
+        println!("{}", exp::render_fig5(&data));
+        let best = &data.points[data.optimal];
+        let paper = if net == "mnist" { 12 } else { 24 };
+        let paper_pt = data
+            .points
+            .iter()
+            .find(|p| p.tile == paper)
+            .expect("paper tile is a candidate");
+        println!(
+            "model optimum T={} ({:.2} GOps/s attainable); paper chose \
+             T={} ({:.2} GOps/s, {:.0}% of optimum)\n",
+            best.tile,
+            best.attainable_gops,
+            paper,
+            paper_pt.attainable_gops,
+            100.0 * paper_pt.attainable_gops / best.attainable_gops
+        );
+    }
+
+    println!("== Table I: resources at the paper's T_OH ==\n");
+    let rows = exp::run_table1(&PYNQ_Z2)?;
+    print!("{}", exp::render_table1(&rows));
+
+    println!("\n== pipeline behaviour at the chosen tiles ==\n");
+    for name in ["mnist", "celeba"] {
+        let net = network_by_name(name)?;
+        let opts: Vec<SimOpts> =
+            net.layers.iter().map(|_| SimOpts::dense(net.tile)).collect();
+        let sim = simulate_network(&net, &PYNQ_Z2, &opts);
+        println!(
+            "{name} @ T={}: {:.2} ms/inference, {:.2} GOps/s, \
+             {:.2} GOps/s/W",
+            net.tile,
+            sim.total_time_s * 1e3,
+            sim.total_gops,
+            sim.gops_per_w
+        );
+        for (i, l) in sim.layers.iter().enumerate() {
+            println!(
+                "  L{}: {:.3} ms  occ {:.2}  r/c/w stage cycles \
+                 {}/{}/{}",
+                i + 1,
+                l.time_s * 1e3,
+                l.occupancy,
+                l.read_cycles,
+                l.compute_cycles,
+                l.write_cycles
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,216 @@
+"""AOT exporter — the single build-time entry point (``make artifacts``).
+
+Produces everything the Rust runtime consumes, then Python exits the
+picture (it is never on the request path):
+
+* ``artifacts/<net>_gen_b<N>.hlo.txt``   — generator forward pass (Pallas
+  reverse-loop deconv kernels, interpret-lowered) for each serving batch
+  size.  Weights are HLO *parameters* so Rust can feed pruned tensors.
+* ``artifacts/<net>_layer<i>_b<N>.hlo.txt`` — single-layer executables for
+  the per-layer Table II measurements.
+* ``artifacts/weights/<net>_l<i>_{w,b}.npy`` — trained WGAN-GP weights.
+* ``artifacts/<net>_truth.npy``          — ground-truth sample batch
+  (P_g draws) for the Rust-side MMD of Fig. 6b.
+* ``artifacts/train_log_<net>.json``     — training loss curves
+  (EXPERIMENTS.md end-to-end record).
+* ``artifacts/manifest.json``            — the Rust/Python contract:
+  shapes, parameter order, tile factors, op counts, artifact paths.
+
+Interchange format is **HLO text**, not a serialized ``HloModuleProto``:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the ``xla``
+crate's xla_extension 0.5.1 rejects; the text parser reassigns ids (see
+/opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import train as train_mod
+from .data import corpus_for
+from .model import (
+    CONFIGS,
+    NetworkConfig,
+    flatten_params,
+    generator_apply,
+    generator_layer_apply,
+    unflatten_params,
+)
+
+# Serving batch sizes baked into the artifact set; the Rust dynamic batcher
+# buckets requests into the largest exported size (vLLM-style bucketing).
+BATCH_SIZES = {"mnist": (1, 4, 8), "celeba": (1, 4)}
+TRUTH_SAMPLES = 256
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the 0.5.1-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export_generator(cfg: NetworkConfig, params, batch: int, out_dir: str):
+    """Lower the full generator (z + flat weights → images) to HLO text."""
+
+    def fwd(z, *flat):
+        return (generator_apply(unflatten_params(list(flat)), z, cfg,
+                                use_pallas=True),)
+
+    z_spec = jax.ShapeDtypeStruct((batch, cfg.z_dim), jnp.float32)
+    w_specs = [
+        jax.ShapeDtypeStruct(p.shape, jnp.float32)
+        for p in flatten_params(params)
+    ]
+    lowered = jax.jit(fwd).lower(z_spec, *w_specs)
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, f"{cfg.name}_gen_b{batch}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    return os.path.basename(path), len(text)
+
+
+def export_layer(cfg: NetworkConfig, li: int, batch: int, out_dir: str):
+    """Lower one deconv layer (x, w, b → activation) to HLO text."""
+    layer = cfg.layers[li]
+    activation = "tanh" if li == len(cfg.layers) - 1 else "relu"
+
+    def fwd(x, w, b):
+        return (
+            generator_layer_apply(
+                x, w, b, layer, cfg.tile, use_pallas=True,
+                activation=activation,
+            ),
+        )
+
+    x_spec = jax.ShapeDtypeStruct(
+        (batch, layer.c_in, layer.i_h, layer.i_h), jnp.float32
+    )
+    w_spec = jax.ShapeDtypeStruct(layer.weight_shape(), jnp.float32)
+    b_spec = jax.ShapeDtypeStruct((layer.c_out,), jnp.float32)
+    lowered = jax.jit(fwd).lower(x_spec, w_spec, b_spec)
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, f"{cfg.name}_layer{li}_b{batch}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    return os.path.basename(path), len(text)
+
+
+def export_network(cfg: NetworkConfig, steps: int, batch: int,
+                   out_dir: str, seed: int = 0) -> dict:
+    """Train + export one network; returns its manifest fragment."""
+    print(f"=== {cfg.name}: training WGAN-GP for {steps} steps ===",
+          flush=True)
+    params, log = train_mod.train_wgan_gp(cfg, steps=steps, batch=batch,
+                                          seed=seed)
+    train_mod.save_log(log, os.path.join(out_dir,
+                                         f"train_log_{cfg.name}.json"))
+
+    wdir = os.path.join(out_dir, "weights")
+    os.makedirs(wdir, exist_ok=True)
+    weight_files = []
+    for i, (w, b) in enumerate(params):
+        wp = os.path.join(wdir, f"{cfg.name}_l{i}_w.npy")
+        bp = os.path.join(wdir, f"{cfg.name}_l{i}_b.npy")
+        np.save(wp, np.asarray(w))
+        np.save(bp, np.asarray(b))
+        weight_files.append(
+            {"w": os.path.relpath(wp, out_dir),
+             "b": os.path.relpath(bp, out_dir)}
+        )
+
+    truth = corpus_for(cfg.name, TRUTH_SAMPLES, seed=seed + 1)
+    truth_path = os.path.join(out_dir, f"{cfg.name}_truth.npy")
+    np.save(truth_path, truth)
+
+    generators = {}
+    for bs in BATCH_SIZES[cfg.name]:
+        name, size = export_generator(cfg, params, bs, out_dir)
+        print(f"  gen  b{bs}: {name} ({size/1e6:.2f} MB)", flush=True)
+        generators[str(bs)] = name
+    layer_artifacts = []
+    for li in range(len(cfg.layers)):
+        name, size = export_layer(cfg, li, 1, out_dir)
+        print(f"  layer {li}: {name} ({size/1e6:.2f} MB)", flush=True)
+        layer_artifacts.append(name)
+
+    return {
+        "name": cfg.name,
+        "z_dim": cfg.z_dim,
+        "tile": cfg.tile,
+        "image_size": cfg.image_size,
+        "image_channels": cfg.image_channels,
+        "batch_sizes": list(BATCH_SIZES[cfg.name]),
+        "generators": generators,
+        "layer_artifacts": layer_artifacts,
+        "weights": weight_files,
+        "truth": os.path.basename(truth_path),
+        "train_log": f"train_log_{cfg.name}.json",
+        "layers": [
+            {
+                "c_in": l.c_in,
+                "c_out": l.c_out,
+                "k": l.k,
+                "stride": l.stride,
+                "padding": l.padding,
+                "i_h": l.i_h,
+                "o_h": l.o_h,
+                "ops": l.ops(),
+                "macs": l.macs(),
+            }
+            for l in cfg.layers
+        ],
+        # Parameter order contract: z, then w0, b0, w1, b1, ...
+        "param_order": ["z"]
+        + [f"{t}{i}" for i in range(len(cfg.layers)) for t in ("w", "b")],
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts",
+                    help="artifact output directory")
+    ap.add_argument("--steps-mnist", type=int,
+                    default=int(os.environ.get("EDGEDCNN_STEPS_MNIST", 120)))
+    ap.add_argument("--steps-celeba", type=int,
+                    default=int(os.environ.get("EDGEDCNN_STEPS_CELEBA", 40)))
+    ap.add_argument("--batch-mnist", type=int, default=32)
+    ap.add_argument("--batch-celeba", type=int, default=8)
+    ap.add_argument("--networks", default="mnist,celeba")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    out_dir = args.out
+    os.makedirs(out_dir, exist_ok=True)
+    # merge with an existing manifest so re-exporting one network (e.g.
+    # extended training) preserves the others
+    manifest = {"version": 1, "networks": {}}
+    manifest_path = os.path.join(out_dir, "manifest.json")
+    if os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            prev = json.load(f)
+        if prev.get("version") == 1:
+            manifest["networks"].update(prev.get("networks", {}))
+    for name in args.networks.split(","):
+        cfg = CONFIGS[name]()
+        steps = args.steps_mnist if name == "mnist" else args.steps_celeba
+        batch = args.batch_mnist if name == "mnist" else args.batch_celeba
+        manifest["networks"][name] = export_network(
+            cfg, steps=steps, batch=batch, out_dir=out_dir, seed=args.seed
+        )
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"manifest written to {out_dir}/manifest.json", flush=True)
+
+
+if __name__ == "__main__":
+    main()

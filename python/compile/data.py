@@ -1,0 +1,139 @@
+"""Synthetic stand-ins for the MNIST and CelebA corpora.
+
+The image does not ship the real datasets (and the build must run
+offline), so we substitute procedurally generated corpora with the same
+shapes and enough structure that (a) WGAN-GP training has a non-trivial
+target distribution, and (b) MMD-to-ground-truth degrades monotonically as
+the generator is pruned (the property Fig. 6b measures).  The substitution
+is documented in DESIGN.md.
+
+* ``mnist_like`` — 28×28×1 seven-segment-style digits with random
+  per-sample geometry jitter, stroke thickness, and smoothing.
+* ``celeba_like`` — 64×64×3 procedural "blob faces": background gradient,
+  skin-tone face ellipse, hair band, eyes, mouth, all jittered per sample.
+
+All images are float32 in [-1, 1], NCHW.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+# Seven-segment layout on a [0,1]² canvas: (x0, y0, x1, y1) per segment.
+_SEGMENTS = {
+    "top": (0.25, 0.15, 0.75, 0.22),
+    "mid": (0.25, 0.47, 0.75, 0.54),
+    "bot": (0.25, 0.80, 0.75, 0.87),
+    "tl": (0.22, 0.15, 0.32, 0.52),
+    "tr": (0.68, 0.15, 0.78, 0.52),
+    "bl": (0.22, 0.50, 0.32, 0.87),
+    "br": (0.68, 0.50, 0.78, 0.87),
+}
+
+_DIGIT_SEGMENTS = {
+    0: ("top", "tl", "tr", "bl", "br", "bot"),
+    1: ("tr", "br"),
+    2: ("top", "tr", "mid", "bl", "bot"),
+    3: ("top", "tr", "mid", "br", "bot"),
+    4: ("tl", "tr", "mid", "br"),
+    5: ("top", "tl", "mid", "br", "bot"),
+    6: ("top", "tl", "mid", "bl", "br", "bot"),
+    7: ("top", "tr", "br"),
+    8: ("top", "tl", "tr", "mid", "bl", "br", "bot"),
+    9: ("top", "tl", "tr", "mid", "br", "bot"),
+}
+
+
+def _smooth(img: np.ndarray, passes: int = 1) -> np.ndarray:
+    """Cheap separable box blur (anti-aliases the hard segment edges)."""
+    for _ in range(passes):
+        img = (
+            img
+            + np.roll(img, 1, -1)
+            + np.roll(img, -1, -1)
+            + np.roll(img, 1, -2)
+            + np.roll(img, -1, -2)
+        ) / 5.0
+    return img
+
+
+def mnist_like(n: int, seed: int = 0, size: int = 28) -> np.ndarray:
+    """Procedural digit corpus, ``[n, 1, size, size]`` float32 in [-1, 1]."""
+    rng = np.random.default_rng(seed)
+    out = np.zeros((n, 1, size, size), dtype=np.float32)
+    ys, xs = np.mgrid[0:size, 0:size]
+    ysf = (ys + 0.5) / size
+    xsf = (xs + 0.5) / size
+    for i in range(n):
+        digit = int(rng.integers(0, 10))
+        dx, dy = rng.normal(0, 0.03, 2)  # per-sample translation jitter
+        thick = rng.uniform(0.8, 1.6)    # stroke thickness jitter
+        img = np.zeros((size, size), dtype=np.float32)
+        for seg in _DIGIT_SEGMENTS[digit]:
+            x0, y0, x1, y1 = _SEGMENTS[seg]
+            cx0, cy0 = x0 + dx, y0 + dy
+            cx1, cy1 = x1 + dx, y1 + dy
+            # widen thin dimension by the thickness factor
+            w2 = (cx1 - cx0) / 2 * (thick if (cx1 - cx0) < 0.2 else 1.0)
+            h2 = (cy1 - cy0) / 2 * (thick if (cy1 - cy0) < 0.2 else 1.0)
+            mx, my = (cx0 + cx1) / 2, (cy0 + cy1) / 2
+            mask = (np.abs(xsf - mx) <= w2) & (np.abs(ysf - my) <= h2)
+            img[mask] = 1.0
+        img = _smooth(img, passes=2)
+        img += rng.normal(0, 0.02, img.shape).astype(np.float32)
+        out[i, 0] = np.clip(img, 0.0, 1.0)
+    return (out * 2.0 - 1.0).astype(np.float32)
+
+
+def celeba_like(n: int, seed: int = 0, size: int = 64) -> np.ndarray:
+    """Procedural face corpus, ``[n, 3, size, size]`` float32 in [-1, 1]."""
+    rng = np.random.default_rng(seed)
+    out = np.zeros((n, 3, size, size), dtype=np.float32)
+    ys, xs = np.mgrid[0:size, 0:size]
+    ysf = (ys + 0.5) / size
+    xsf = (xs + 0.5) / size
+    for i in range(n):
+        img = np.zeros((3, size, size), dtype=np.float32)
+        # background: vertical gradient between two random muted colors
+        c0 = rng.uniform(0.2, 0.8, 3)
+        c1 = rng.uniform(0.2, 0.8, 3)
+        for ch in range(3):
+            img[ch] = c0[ch] + (c1[ch] - c0[ch]) * ysf
+        # face ellipse: skin tone with jitter
+        fx, fy = 0.5 + rng.normal(0, 0.03), 0.55 + rng.normal(0, 0.03)
+        fa, fb = rng.uniform(0.24, 0.3), rng.uniform(0.3, 0.38)
+        skin = np.array([0.85, 0.65, 0.5]) + rng.normal(0, 0.04, 3)
+        face = ((xsf - fx) / fa) ** 2 + ((ysf - fy) / fb) ** 2 <= 1.0
+        for ch in range(3):
+            img[ch][face] = skin[ch]
+        # hair: dark band across the top of the face ellipse
+        hair_color = rng.uniform(0.05, 0.35, 3) * rng.uniform(0.3, 1.0)
+        hair = face & (ysf < fy - 0.4 * fb + rng.normal(0, 0.01))
+        for ch in range(3):
+            img[ch][hair] = hair_color[ch]
+        # eyes: two dark ellipses
+        for ex in (fx - 0.4 * fa, fx + 0.4 * fa):
+            eye = ((xsf - ex) / 0.05) ** 2 + (
+                (ysf - (fy - 0.1 * fb)) / 0.035
+            ) ** 2 <= 1.0
+            for ch in range(3):
+                img[ch][eye] = 0.1
+        # mouth: reddish box
+        mouth = (np.abs(xsf - fx) <= 0.1) & (
+            np.abs(ysf - (fy + 0.5 * fb)) <= 0.025
+        )
+        img[0][mouth] = 0.7
+        img[1][mouth] = 0.2
+        img[2][mouth] = 0.25
+        img = _smooth(img, passes=1)
+        img += rng.normal(0, 0.015, img.shape).astype(np.float32)
+        out[i] = np.clip(img, 0.0, 1.0)
+    return (out * 2.0 - 1.0).astype(np.float32)
+
+
+def corpus_for(name: str, n: int, seed: int = 0) -> np.ndarray:
+    if name == "mnist":
+        return mnist_like(n, seed)
+    if name == "celeba":
+        return celeba_like(n, seed)
+    raise ValueError(f"unknown corpus {name!r}")

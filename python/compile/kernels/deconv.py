@@ -1,0 +1,278 @@
+"""L1 — Pallas reverse-loop deconvolution kernel (the paper's Algorithm 1).
+
+The paper maps Zhang et al.'s output-space ("reverse looping") deconvolution
+onto an FPGA CU array.  This module re-expresses the same three enhancements
+for a TPU-style memory hierarchy (see DESIGN.md §Hardware-Adaptation):
+
+1. **Pre-computed modulo offsets** (paper Eq. 3): the stride-hole offsets
+   ``f[k]`` depend only on ``k``, so they are folded at *trace time* into
+   static strided slices — the kernel body contains zero modulo ops, which
+   is strictly stronger than the paper's 2K-entry offset LUT.
+
+2. **Loop interchange / weight reuse**: the ``(k_h, k_w)`` loops are the
+   outermost kernel loops (unrolled at trace time).  Each step consumes one
+   weight *column* ``w[:, k_h, k_w]`` and touches a contiguous input block —
+   one fused multiply-accumulate (``tensordot`` over C_in → MXU) per tap.
+
+3. **Decoupled memory access**: the output feature map is tiled by
+   ``BlockSpec`` (one grid step == one CU workload == one ``T×T`` output
+   block, the paper's one-shot write), while the input block lives in VMEM
+   for the duration of the step (the paper's BRAM tile buffer).  The
+   non-sequential access pattern of Eq. 4 is confined to VMEM-local strided
+   slices; HBM→VMEM staging is sequential, exactly the paper's DDR→BRAM
+   discipline.
+
+Boundary handling: instead of the in-loop bounds guards of Algorithm 1 the
+host pads the input once (``plan.pad_l``/``pad_r`` zeros) so that every
+input index the kernel computes is in-bounds and out-of-range taps
+contribute exactly 0.  This keeps the CU inner loop branch-free — the same
+trick the paper's ``loadInputBlock`` plays with BRAM zero-fill.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret-mode lowers to plain HLO so the AOT artifact runs
+on the Rust PJRT CPU client.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.experimental import pallas as pl
+
+from .ref import deconv_output_size, stride_hole_offsets
+
+# TPU-ish budget used by the planner sanity checks (bytes of VMEM per core).
+VMEM_BUDGET_BYTES = 16 * 1024 * 1024
+MXU_DIM = 128  # systolic array edge for the utilization estimate
+
+
+@dataclass(frozen=True)
+class TilePlan:
+    """Static schedule for one deconvolution layer at one tile size.
+
+    Everything the kernel needs is resolved here, at trace time: the Eq. 3
+    offsets, the per-tap slice geometry, and the input padding that makes
+    the kernel branch-free.
+    """
+
+    i_h: int
+    i_w: int
+    c_in: int
+    c_out: int
+    c_blk: int          # output channels per CU workload (MXU width knob)
+    k: int
+    stride: int
+    padding: int
+    tile: int           # T_OH == T_OW (paper explores square tiles)
+    o_h: int
+    o_w: int
+    o_h_pad: int        # rounded up to a multiple of `tile`
+    o_w_pad: int
+    pad_l: int          # input zero-padding (left/top)
+    pad_r: int          # input zero-padding (right/bottom)
+    offsets: tuple      # f[k] per Eq. 3
+    c_k: tuple          # (f[k] + P - k) // S  — static per-tap input shift
+    n_rows: tuple       # rows of the input slice consumed per tap
+
+    @property
+    def n_tiles_h(self) -> int:
+        return self.o_h_pad // self.tile
+
+    @property
+    def n_tiles_w(self) -> int:
+        return self.o_w_pad // self.tile
+
+    @property
+    def i_h_pad(self) -> int:
+        return self.i_h + self.pad_l + self.pad_r
+
+    @property
+    def i_w_pad(self) -> int:
+        return self.i_w + self.pad_l + self.pad_r
+
+    def vmem_footprint_bytes(self, dtype_bytes: int = 4) -> int:
+        """VMEM bytes resident during one grid step: padded input block +
+        weight block + output block + accumulator classes."""
+        x_blk = self.c_in * self.i_h_pad * self.i_w_pad
+        w_blk = self.c_in * self.c_blk * self.k * self.k
+        o_blk = self.c_blk * self.tile * self.tile
+        return dtype_bytes * (x_blk + w_blk + 2 * o_blk)
+
+    def mxu_utilization_estimate(self) -> float:
+        """Estimated MXU occupancy of one tap's contraction.
+
+        Each (k_h, k_w) tap is a ``[C_blk, C_in] @ [C_in, tps*tps]``
+        matmul on the systolic array: depth ``min(C_in,128)/128`` ×
+        result-row occupancy ``min(C_blk,128)/128``.  Used for the
+        DESIGN.md real-TPU estimate (interpret-mode wallclock is
+        CPU-numpy, not a TPU proxy).
+        """
+        depth = min(self.c_in, MXU_DIM) / MXU_DIM
+        rows = min(self.c_blk, MXU_DIM) / MXU_DIM
+        return depth * rows
+
+    def macs(self) -> int:
+        """Exact multiply-accumulates of Algorithm 1 over the *valid* output
+        (matches the Rust simulator's dense workload model)."""
+        total = 0
+        for kh in range(self.k):
+            n_oh = len(range(self.offsets[kh], self.o_h, self.stride))
+            for kw in range(self.k):
+                n_ow = len(range(self.offsets[kw], self.o_w, self.stride))
+                total += n_oh * n_ow
+        # Taps falling outside the input contribute zeros but are still
+        # issued by the dense CU schedule; count them all, as the paper's
+        # "arithmetic operations of all layers" does.
+        return total * self.c_in * self.c_out
+
+
+def plan_tiles(
+    i_h: int,
+    i_w: int,
+    c_in: int,
+    c_out: int,
+    k: int,
+    stride: int,
+    padding: int,
+    tile: int,
+    c_blk: int | None = None,
+) -> TilePlan:
+    """Resolve the static schedule (offsets, slices, padding) for a layer."""
+    if c_blk is None:
+        c_blk = min(c_out, 64)
+    while c_out % c_blk != 0:
+        c_blk -= 1  # largest divisor of C_out not exceeding the request
+    if tile % stride != 0:
+        tile += stride - (tile % stride)  # T must cover whole stride classes
+    o_h = deconv_output_size(i_h, k, stride, padding)
+    o_w = deconv_output_size(i_w, k, stride, padding)
+    o_h_pad = math.ceil(o_h / tile) * tile
+    o_w_pad = math.ceil(o_w / tile) * tile
+    offs = tuple(int(f) for f in stride_hole_offsets(k, stride, padding))
+    c_k = tuple((offs[kk] + padding - kk) // stride for kk in range(k))
+    n_rows = tuple(
+        math.ceil((tile - offs[kk]) / stride) for kk in range(k)
+    )
+    # Input index for tap k at tile t, row r:  i = t*(T/S) + c_k + r.
+    lo = min(c_k)
+    n_tiles_h = o_h_pad // tile
+    n_tiles_w = o_w_pad // tile
+    hi_h = max(
+        (n_tiles_h - 1) * (tile // stride) + c_k[kk] + n_rows[kk] - 1
+        for kk in range(k)
+    )
+    hi_w = max(
+        (n_tiles_w - 1) * (tile // stride) + c_k[kk] + n_rows[kk] - 1
+        for kk in range(k)
+    )
+    pad_l = max(0, -lo)
+    pad_r = max(0, max(hi_h - (i_h - 1), hi_w - (i_w - 1)))
+    return TilePlan(
+        i_h=i_h, i_w=i_w, c_in=c_in, c_out=c_out, c_blk=c_blk, k=k,
+        stride=stride,
+        padding=padding, tile=tile, o_h=o_h, o_w=o_w, o_h_pad=o_h_pad,
+        o_w_pad=o_w_pad, pad_l=pad_l, pad_r=pad_r, offsets=offs, c_k=c_k,
+        n_rows=n_rows,
+    )
+
+
+def _deconv_kernel(x_ref, w_ref, b_ref, o_ref, *, plan: TilePlan):
+    """One CU workload: one ``C_blk × T × T`` output block (Algorithm 1).
+
+    Grid: ``(N, C_out/C_blk, n_tiles_h, n_tiles_w)``.  ``x_ref`` holds the
+    whole padded input for the batch element (the BRAM-resident tile
+    buffer), ``w_ref`` the ``[C_in, C_blk, K, K]`` weight block for this
+    channel group.
+    """
+    t, s, k, cb = plan.tile, plan.stride, plan.k, plan.c_blk
+    th = pl.program_id(2)
+    tw = pl.program_id(3)
+    x = x_ref[0]          # [C_in, I_H_pad, I_W_pad]
+    w = w_ref[...]        # [C_in, C_blk, K, K]
+    tps = t // s          # input rows spanned by one output tile
+    # Stride-class accumulators: output pixels with o ≡ f (mod S) form a
+    # compact (T/S)×(T/S) class.  Every tap lands wholly inside one class
+    # (f depends only on k — Eq. 3), so Algorithm 1's strided scatter
+    # becomes class-local dense adds plus one interleave at the end.
+    cls = {}
+    for kh in range(k):                     # weight-stationary outer loops
+        fh, ckh = plan.offsets[kh], plan.c_k[kh]
+        for kw in range(k):
+            fw, ckw = plan.offsets[kw], plan.c_k[kw]
+            i0 = th * tps + (ckh + plan.pad_l)
+            j0 = tw * tps + (ckw + plan.pad_l)
+            xs = lax.dynamic_slice(
+                x, (0, i0, j0), (plan.c_in, tps, tps)
+            )  # sequential BRAM read of the dependent input block
+            # one MXU matmul per tap: [C_blk, C_in] @ [C_in, tps*tps]
+            tap = jnp.tensordot(w[:, :, kh, kw], xs, axes=(0, 0))
+            key = (fh, fw)
+            cls[key] = tap if key not in cls else cls[key] + tap
+    zero = jnp.zeros((cb, tps, tps), dtype=jnp.float32)
+    stacked = jnp.stack(
+        [
+            jnp.stack([cls.get((rh, rw), zero) for rw in range(s)])
+            for rh in range(s)
+        ]
+    )  # [S, S, C_blk, T/S, T/S]
+    # interleave stride classes: y[c, f_h + S*i, f_w + S*j] = cls[f_h,f_w][c,i,j]
+    acc = stacked.transpose(2, 3, 0, 4, 1).reshape(cb, t, t)
+    bias = b_ref[...]
+    o_ref[0] = acc + bias[:, None, None]    # one-shot write of the block
+
+
+def deconv_pallas(x, w, b, stride: int, padding: int, tile: int,
+                  c_blk: int | None = None, interpret: bool = True):
+    """Reverse-loop transposed convolution via the Pallas CU-array kernel.
+
+    Args:
+      x: ``[N, C_in, I_H, I_W]`` input feature map.
+      w: ``[C_in, C_out, K, K]`` deconvolution weights.
+      b: ``[C_out]`` bias.
+      stride/padding: layer hyper-parameters (square).
+      tile: output tiling factor ``T_OH == T_OW`` (the paper's DSE knob).
+      c_blk: output channels per grid step (MXU width knob; defaults to
+        ``min(C_out, 64)`` rounded down to a divisor of ``C_out``).
+      interpret: must stay True for CPU-PJRT execution (Mosaic custom-calls
+        only run on real TPUs).
+
+    Returns ``[N, C_out, O_H, O_W]``.
+    """
+    n, c_in, i_h, i_w = x.shape
+    _, c_out, k, _ = w.shape
+    plan = plan_tiles(i_h, i_w, c_in, c_out, k, stride, padding, tile, c_blk)
+    xp = jnp.pad(
+        x,
+        ((0, 0), (0, 0), (plan.pad_l, plan.pad_r), (plan.pad_l, plan.pad_r)),
+    )
+    grid = (n, c_out // plan.c_blk, plan.n_tiles_h, plan.n_tiles_w)
+    out = pl.pallas_call(
+        partial(_deconv_kernel, plan=plan),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(
+                (1, c_in, plan.i_h_pad, plan.i_w_pad),
+                lambda bi, cg, th, tw: (bi, 0, 0, 0),
+            ),
+            pl.BlockSpec(
+                (c_in, plan.c_blk, k, k),
+                lambda bi, cg, th, tw: (0, cg, 0, 0),
+            ),
+            pl.BlockSpec((plan.c_blk,), lambda bi, cg, th, tw: (cg,)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, plan.c_blk, plan.tile, plan.tile),
+            lambda bi, cg, th, tw: (bi, cg, th, tw),
+        ),
+        out_shape=jax.ShapeDtypeStruct(
+            (n, c_out, plan.o_h_pad, plan.o_w_pad), jnp.float32
+        ),
+        interpret=interpret,
+    )(xp, w, b)
+    return out[:, :, : plan.o_h, : plan.o_w]

@@ -1,0 +1,133 @@
+"""Pure-jnp correctness oracles for the reverse-loop deconvolution kernel.
+
+Two independent references:
+
+* :func:`deconv_ref` — fractionally-strided convolution expressed with
+  ``lax.conv_general_dilated`` (``lhs_dilation`` = stride, padding
+  ``K - 1 - P``, spatially flipped kernel).  This is the textbook
+  equivalence of transposed convolution (Dumoulin & Visin, 2016) and is
+  what XLA would fuse for a dense deconvolution.
+
+* :func:`deconv_naive` — a literal transcription of the paper's Eq. 1
+  (input-space scatter):  ``o = i * S + k - P`` with accumulation over the
+  overlapping output regions.  Slow, loop-based, unambiguous.  This is the
+  ground truth the Pallas kernel and the Rust substrate are both checked
+  against.
+
+Conventions (match PyTorch ``ConvTranspose2d`` and the paper):
+
+* input  ``x``  — ``[N, C_in, I_H, I_W]``
+* weight ``w``  — ``[C_in, C_out, K, K]``
+* bias   ``b``  — ``[C_out]``
+* output ``y``  — ``[N, C_out, O_H, O_W]`` with ``O_H = (I_H-1)*S + K - 2P``
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+
+def deconv_output_size(i: int, k: int, s: int, p: int) -> int:
+    """Output extent of a transposed convolution (Eq. 1 solved for max o)."""
+    return (i - 1) * s + k - 2 * p
+
+
+def deconv_ref(x, w, b, stride: int, padding: int):
+    """Transposed convolution via ``conv_general_dilated`` (XLA-fused oracle)."""
+    k = w.shape[2]
+    # OIHW with spatial flip: transposed conv == conv with the flipped kernel
+    # over the stride-dilated input, padded by K - 1 - P on each side.
+    rhs = jnp.flip(w, axis=(2, 3)).transpose(1, 0, 2, 3)
+    pad = k - 1 - padding
+    y = lax.conv_general_dilated(
+        x,
+        rhs,
+        window_strides=(1, 1),
+        padding=[(pad, pad), (pad, pad)],
+        lhs_dilation=(stride, stride),
+        rhs_dilation=(1, 1),
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    return y + b[None, :, None, None]
+
+
+def deconv_naive(x, w, b, stride: int, padding: int):
+    """Eq. 1 input-space scatter loop (numpy; the unambiguous ground truth)."""
+    x = np.asarray(x)
+    w = np.asarray(w)
+    b = np.asarray(b)
+    n, c_in, i_h, i_w = x.shape
+    _, c_out, k, _ = w.shape
+    o_h = deconv_output_size(i_h, k, stride, padding)
+    o_w = deconv_output_size(i_w, k, stride, padding)
+    y = np.zeros((n, c_out, o_h, o_w), dtype=np.float64)
+    for bi in range(n):
+        for ci in range(c_in):
+            for ih in range(i_h):
+                for iw in range(i_w):
+                    v = x[bi, ci, ih, iw]
+                    for kh in range(k):
+                        oh = ih * stride + kh - padding
+                        if oh < 0 or oh >= o_h:
+                            continue
+                        for kw in range(k):
+                            ow = iw * stride + kw - padding
+                            if ow < 0 or ow >= o_w:
+                                continue
+                            y[bi, :, oh, ow] += v * w[ci, :, kh, kw]
+    y += b[None, :, None, None]
+    return y.astype(x.dtype)
+
+
+def stride_hole_offsets(k: int, s: int, p: int) -> np.ndarray:
+    """Eq. 3 offsets ``f[k] = mod(S - mod(P - k, S), S)`` (python ``%`` is
+    already the non-negative mod the paper's ``mod`` denotes)."""
+    return np.array([(s - ((p - kk) % s)) % s for kk in range(k)], dtype=np.int32)
+
+
+def deconv_reverse_naive(x, w, b, stride: int, padding: int):
+    """Reverse-loop deconvolution (the paper's Algorithm 1) in plain numpy.
+
+    Loops over the *output* space with stride-hole skipping (Eqs. 2-4) and
+    pre-computed offsets — the direct software model of what the FPGA CUs
+    execute.  Used in tests to show Algorithm 1 == Eq. 1 scatter.
+    """
+    x = np.asarray(x)
+    w = np.asarray(w)
+    b = np.asarray(b)
+    n, c_in, i_h, i_w = x.shape
+    _, c_out, k, _ = w.shape
+    o_h = deconv_output_size(i_h, k, stride, padding)
+    o_w = deconv_output_size(i_w, k, stride, padding)
+    f = stride_hole_offsets(k, stride, padding)
+    y = np.zeros((n, c_out, o_h, o_w), dtype=np.float64)
+    y += b[None, :, None, None]
+    for bi in range(n):
+        for co in range(c_out):
+            for ci in range(c_in):
+                for kh in range(k):
+                    fh = int(f[kh])
+                    for kw in range(k):
+                        fw = int(f[kw])
+                        for oh in range(fh, o_h, stride):
+                            ih, rh = divmod(oh + padding - kh, stride)
+                            if rh != 0 or ih < 0 or ih >= i_h:
+                                continue
+                            for ow in range(fw, o_w, stride):
+                                iw, rw = divmod(ow + padding - kw, stride)
+                                if rw != 0 or iw < 0 or iw >= i_w:
+                                    continue
+                                y[bi, co, oh, ow] += (
+                                    w[ci, co, kh, kw] * x[bi, ci, ih, iw]
+                                )
+    return y.astype(x.dtype)
+
+
+def relu(x):
+    return jnp.maximum(x, 0.0)
+
+
+def leaky_relu(x, alpha: float = 0.2):
+    return jnp.where(x >= 0, x, alpha * x)

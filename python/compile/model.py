@@ -1,0 +1,219 @@
+"""L2 — JAX DCNN generators (and WGAN-GP critics) for the two benchmark
+networks of the paper's Fig. 4.
+
+The generators are pure deconvolution stacks (ReLU between layers, tanh on
+the output) matching the paper's layer counts:
+
+* **MNIST** — 3 deconvolution layers, ``z(100) → 28×28×1``
+* **CelebA** — 5 deconvolution layers, ``z(100) → 64×64×3``
+
+``generator_apply`` can run each deconvolution through either the Pallas
+reverse-loop kernel (:mod:`compile.kernels.deconv`, the path that gets
+AOT-lowered for the Rust runtime) or the fused-XLA reference
+(:mod:`compile.kernels.ref`, the fast path used during WGAN-GP training).
+Both are verified against each other by the pytest suite.
+
+Weights stay **parameters** of the lowered function (never baked-in
+constants) so the Rust coordinator can feed pruned weight sets for the
+sparsity experiments (Fig. 6) without re-lowering.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.deconv import deconv_pallas
+from .kernels.ref import deconv_output_size, deconv_ref, leaky_relu, relu
+
+
+@dataclass(frozen=True)
+class DeconvLayer:
+    """One transposed-convolution layer (square kernels, as in the paper)."""
+
+    c_in: int
+    c_out: int
+    k: int
+    stride: int
+    padding: int
+    i_h: int  # input spatial extent (square)
+
+    @property
+    def o_h(self) -> int:
+        return deconv_output_size(self.i_h, self.k, self.stride, self.padding)
+
+    def macs(self) -> int:
+        """Dense MACs of the reverse-loop schedule — the exact Algorithm 1
+        trip count: Σ_{k_h,k_w} |{o_h ≡ f(k_h)}| × |{o_w ≡ f(k_w)}|
+        per (c_in, c_out) pair."""
+        from .kernels.ref import stride_hole_offsets
+
+        f = stride_hole_offsets(self.k, self.stride, self.padding)
+        rows = sum(len(range(int(fk), self.o_h, self.stride)) for fk in f)
+        return self.c_in * self.c_out * rows * rows
+
+    def ops(self) -> int:
+        """Arithmetic operations (1 MAC = 2 ops), the paper's GOps numerator."""
+        return 2 * self.macs()
+
+    def weight_shape(self):
+        return (self.c_in, self.c_out, self.k, self.k)
+
+
+@dataclass(frozen=True)
+class NetworkConfig:
+    """A DCNN generator = latent dim + deconvolution stack (paper Fig. 4)."""
+
+    name: str
+    z_dim: int
+    layers: tuple
+    image_channels: int
+    image_size: int
+    tile: int           # paper's unified T_OH (Table I)
+
+    def total_ops(self) -> int:
+        return sum(l.ops() for l in self.layers)
+
+
+def mnist_config() -> NetworkConfig:
+    """MNIST generator: 100×1×1 → 128×7×7 → 64×14×14 → 1×28×28."""
+    layers = (
+        DeconvLayer(100, 128, 7, 1, 0, 1),
+        DeconvLayer(128, 64, 4, 2, 1, 7),
+        DeconvLayer(64, 1, 4, 2, 1, 14),
+    )
+    return NetworkConfig("mnist", 100, layers, 1, 28, tile=12)
+
+
+def celeba_config() -> NetworkConfig:
+    """CelebA generator: 100×1×1 → 512×4×4 → 256×8×8 → 128×16×16 →
+    64×32×32 → 3×64×64."""
+    layers = (
+        DeconvLayer(100, 512, 4, 1, 0, 1),
+        DeconvLayer(512, 256, 4, 2, 1, 4),
+        DeconvLayer(256, 128, 4, 2, 1, 8),
+        DeconvLayer(128, 64, 4, 2, 1, 16),
+        DeconvLayer(64, 3, 4, 2, 1, 32),
+    )
+    return NetworkConfig("celeba", 100, layers, 3, 64, tile=24)
+
+
+CONFIGS = {"mnist": mnist_config, "celeba": celeba_config}
+
+
+def init_generator_params(cfg: NetworkConfig, key) -> list:
+    """DCGAN-style init: W ~ N(0, 0.02), b = 0. Returns [(w, b), ...]."""
+    params = []
+    for layer in cfg.layers:
+        key, sub = jax.random.split(key)
+        w = 0.02 * jax.random.normal(sub, layer.weight_shape(), jnp.float32)
+        b = jnp.zeros((layer.c_out,), jnp.float32)
+        params.append((w, b))
+    return params
+
+
+def generator_apply(params, z, cfg: NetworkConfig, use_pallas: bool = False):
+    """Generator forward pass.
+
+    Args:
+      params: ``[(w, b)] * n_layers``.
+      z: ``[N, z_dim]`` latent batch.
+      cfg: network config.
+      use_pallas: route each deconvolution through the Pallas reverse-loop
+        kernel (AOT/inference path) instead of the fused-XLA reference
+        (training path).
+
+    Returns images ``[N, C, H, W]`` in ``[-1, 1]``.
+    """
+    x = z.reshape(z.shape[0], cfg.z_dim, 1, 1)
+    n_layers = len(cfg.layers)
+    for i, (layer, (w, b)) in enumerate(zip(cfg.layers, params)):
+        if use_pallas:
+            x = deconv_pallas(x, w, b, layer.stride, layer.padding, cfg.tile)
+        else:
+            x = deconv_ref(x, w, b, layer.stride, layer.padding)
+        x = jnp.tanh(x) if i == n_layers - 1 else relu(x)
+    return x
+
+
+def generator_layer_apply(x, w, b, layer: DeconvLayer, tile: int,
+                          use_pallas: bool = True, activation: str = "relu"):
+    """Single-layer forward (per-layer AOT artifacts for Table II benches)."""
+    if use_pallas:
+        y = deconv_pallas(x, w, b, layer.stride, layer.padding, tile)
+    else:
+        y = deconv_ref(x, w, b, layer.stride, layer.padding)
+    if activation == "relu":
+        return relu(y)
+    if activation == "tanh":
+        return jnp.tanh(y)
+    return y
+
+
+# --------------------------------------------------------------------------
+# WGAN-GP critic (training only — never exported, never on the request path)
+# --------------------------------------------------------------------------
+
+def critic_layer_shapes(cfg: NetworkConfig) -> list:
+    """Mirror of the generator as a strided-conv critic (DCGAN discipline)."""
+    shapes = []
+    c = cfg.image_channels
+    size = cfg.image_size
+    ch = 64
+    while size > 4:
+        shapes.append((ch, c, 4, 4))  # OIHW
+        c, ch, size = ch, ch * 2, size // 2
+    return shapes
+
+
+def init_critic_params(cfg: NetworkConfig, key) -> dict:
+    convs = []
+    final_spatial = cfg.image_size
+    c = cfg.image_channels
+    ch = 64
+    while final_spatial > 4:
+        key, sub = jax.random.split(key)
+        convs.append(
+            (
+                0.02 * jax.random.normal(sub, (ch, c, 4, 4), jnp.float32),
+                jnp.zeros((ch,), jnp.float32),
+            )
+        )
+        c, ch = ch, ch * 2
+        final_spatial //= 2
+    key, sub = jax.random.split(key)
+    dense_in = c * final_spatial * final_spatial
+    dense = 0.02 * jax.random.normal(sub, (dense_in, 1), jnp.float32)
+    return {"convs": convs, "dense": dense}
+
+
+def critic_apply(params, x):
+    """Critic score; plain strided convs + LeakyReLU, scalar output."""
+    h = x
+    for w, b in params["convs"]:
+        h = jax.lax.conv_general_dilated(
+            h,
+            w,
+            window_strides=(2, 2),
+            padding=[(1, 1), (1, 1)],
+            dimension_numbers=("NCHW", "OIHW", "NCHW"),
+        )
+        h = leaky_relu(h + b[None, :, None, None])
+    h = h.reshape(h.shape[0], -1)
+    return h @ params["dense"]
+
+
+def flatten_params(params) -> list:
+    """[(w, b)] → [w0, b0, w1, b1, ...] (the AOT parameter order contract
+    shared with the Rust runtime via the artifact manifest)."""
+    flat = []
+    for w, b in params:
+        flat.extend([w, b])
+    return flat
+
+
+def unflatten_params(flat) -> list:
+    return [(flat[i], flat[i + 1]) for i in range(0, len(flat), 2)]

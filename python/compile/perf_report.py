@@ -1,0 +1,69 @@
+"""L1/L2 performance report (EXPERIMENTS.md §Perf).
+
+interpret=True wallclock is CPU-numpy, not a TPU proxy, so the L1 kernel
+is profiled *structurally*: per-layer VMEM footprint and MXU-occupancy
+estimates of the chosen BlockSpec schedule, swept over the `c_blk`
+(output-channels-per-grid-step) knob.  Also dumps L2 HLO statistics
+(instruction counts, fusion check) for the lowered generators.
+
+Usage:  cd python && python -m compile.perf_report
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.deconv import plan_tiles, VMEM_BUDGET_BYTES
+from .model import CONFIGS, flatten_params, generator_apply, \
+    init_generator_params, unflatten_params
+
+
+def l1_report():
+    print("== L1: Pallas kernel schedule (VMEM footprint / MXU estimate) ==")
+    print(f"{'net':<8}{'layer':<7}{'c_blk':>6}{'grid':>8}{'VMEM KiB':>10}"
+          f"{'MXU est':>9}  fits")
+    for name, mk in CONFIGS.items():
+        cfg = mk()
+        for i, l in enumerate(cfg.layers):
+            for c_blk in (16, 64, 128):
+                plan = plan_tiles(l.i_h, l.i_h, l.c_in, l.c_out, l.k,
+                                  l.stride, l.padding, cfg.tile,
+                                  min(c_blk, l.c_out))
+                grid = (l.c_out // plan.c_blk) * plan.n_tiles_h \
+                    * plan.n_tiles_w
+                vmem = plan.vmem_footprint_bytes()
+                print(f"{name:<8}L{i:<6}{plan.c_blk:>6}{grid:>8}"
+                      f"{vmem/1024:>10.1f}"
+                      f"{plan.mxu_utilization_estimate():>9.3f}"
+                      f"  {'yes' if vmem < VMEM_BUDGET_BYTES else 'NO'}")
+
+
+def l2_report():
+    print("\n== L2: lowered-HLO statistics (fusion / recompute check) ==")
+    for name, mk in CONFIGS.items():
+        cfg = mk()
+        params = init_generator_params(cfg, jax.random.PRNGKey(0))
+
+        def fwd(z, *flat):
+            return (generator_apply(unflatten_params(list(flat)), z, cfg,
+                                    use_pallas=True),)
+
+        z = jax.ShapeDtypeStruct((1, cfg.z_dim), jnp.float32)
+        specs = [jax.ShapeDtypeStruct(p.shape, jnp.float32)
+                 for p in flatten_params(params)]
+        lowered = jax.jit(fwd).lower(z, *specs)
+        hlo = lowered.compile().as_text()
+        lines = hlo.splitlines()
+        fusions = sum("fusion" in ln for ln in lines)
+        convs = sum("convolution" in ln for ln in lines)
+        dots = sum(" dot(" in ln or " dot." in ln for ln in lines)
+        whiles = sum("while" in ln for ln in lines)
+        print(f"{name}: compiled HLO {len(lines)} lines — "
+              f"{fusions} fusion refs, {convs} convolutions, "
+              f"{dots} dots, {whiles} while refs")
+
+
+if __name__ == "__main__":
+    l1_report()
+    l2_report()

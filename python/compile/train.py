@@ -1,0 +1,176 @@
+"""WGAN-GP trainer (Gulrajani et al., 2017) — build-time only.
+
+Trains the Fig. 4 generators on the synthetic corpora so the AOT artifacts
+carry *learned* weights (the sparsity experiments of Fig. 6 need weights
+whose magnitudes are meaningful to prune).  Python never runs at serving
+time; this module is invoked once by ``aot.py`` / ``make artifacts``.
+
+Losses: critic  E[D(fake)] − E[D(real)] + λ·GP,  generator  −E[D(fake)],
+λ = 10, n_critic = 5, Adam(α=1e-4, β₁=0.5, β₂=0.9) — hand-rolled Adam
+(the image has no optax).
+"""
+
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data
+from .model import (
+    NetworkConfig,
+    critic_apply,
+    generator_apply,
+    init_critic_params,
+    init_generator_params,
+)
+
+GP_LAMBDA = 10.0
+N_CRITIC = 5
+ADAM = dict(lr=1e-4, b1=0.5, b2=0.9, eps=1e-8)
+
+
+# ----------------------------------------------------------------- optimizer
+def adam_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params),
+            "t": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(params, grads, state):
+    t = state["t"] + 1
+    b1, b2, lr, eps = ADAM["b1"], ADAM["b2"], ADAM["lr"], ADAM["eps"]
+    m = jax.tree_util.tree_map(
+        lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads
+    )
+    v = jax.tree_util.tree_map(
+        lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads
+    )
+    mhat_scale = 1.0 / (1 - b1 ** t.astype(jnp.float32))
+    vhat_scale = 1.0 / (1 - b2 ** t.astype(jnp.float32))
+    new_params = jax.tree_util.tree_map(
+        lambda p, m_, v_: p
+        - lr * (m_ * mhat_scale) / (jnp.sqrt(v_ * vhat_scale) + eps),
+        params,
+        m,
+        v,
+    )
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+# ----------------------------------------------------------------- losses
+def gradient_penalty(c_params, real, fake, key):
+    eps = jax.random.uniform(key, (real.shape[0], 1, 1, 1))
+    inter = eps * real + (1 - eps) * fake
+
+    def score_sum(x):
+        return critic_apply(c_params, x).sum()
+
+    grads = jax.grad(score_sum)(inter)
+    norms = jnp.sqrt(jnp.sum(grads**2, axis=(1, 2, 3)) + 1e-12)
+    return jnp.mean((norms - 1.0) ** 2)
+
+
+def make_train_steps(cfg: NetworkConfig):
+    """Build jitted critic/generator update steps for this network."""
+
+    def critic_loss(c_params, g_params, real, z, key):
+        fake = generator_apply(g_params, z, cfg, use_pallas=False)
+        loss = (
+            critic_apply(c_params, fake).mean()
+            - critic_apply(c_params, real).mean()
+            + GP_LAMBDA * gradient_penalty(c_params, real, fake, key)
+        )
+        return loss
+
+    def gen_loss(g_params, c_params, z):
+        fake = generator_apply(g_params, z, cfg, use_pallas=False)
+        return -critic_apply(c_params, fake).mean()
+
+    @jax.jit
+    def critic_step(c_params, c_opt, g_params, real, z, key):
+        loss, grads = jax.value_and_grad(critic_loss)(
+            c_params, g_params, real, z, key
+        )
+        c_params, c_opt = adam_update(c_params, grads, c_opt)
+        return c_params, c_opt, loss
+
+    @jax.jit
+    def gen_step(g_params, g_opt, c_params, z):
+        loss, grads = jax.value_and_grad(gen_loss)(g_params, c_params, z)
+        g_params, g_opt = adam_update(g_params, grads, g_opt)
+        return g_params, g_opt, loss
+
+    return critic_step, gen_step
+
+
+def train_wgan_gp(
+    cfg: NetworkConfig,
+    steps: int,
+    batch: int,
+    corpus_size: int = 512,
+    seed: int = 0,
+    log_every: int = 10,
+    verbose: bool = True,
+    corpus=None,
+):
+    """Train; returns (generator params, training log dict).
+
+    ``corpus`` overrides the synthetic dataset (used by tests with tiny
+    custom networks); by default it is generated from ``cfg.name``.
+    """
+    key = jax.random.PRNGKey(seed)
+    key, gk, ck = jax.random.split(key, 3)
+    g_params = init_generator_params(cfg, gk)
+    c_params = init_critic_params(cfg, ck)
+    g_opt = adam_init(g_params)
+    c_opt = adam_init(c_params)
+    if corpus is None:
+        corpus = data.corpus_for(cfg.name, corpus_size, seed=seed)
+    corpus_size = len(corpus)
+    rng = np.random.default_rng(seed)
+    critic_step, gen_step = make_train_steps(cfg)
+
+    log = {"network": cfg.name, "steps": steps, "batch": batch,
+           "corpus_size": corpus_size, "history": []}
+    t0 = time.time()
+    for step in range(steps):
+        c_losses = []
+        for _ in range(N_CRITIC):
+            idx = rng.integers(0, corpus_size, batch)
+            real = jnp.asarray(corpus[idx])
+            key, zk, gpk = jax.random.split(key, 3)
+            z = jax.random.normal(zk, (batch, cfg.z_dim))
+            c_params, c_opt, c_loss = critic_step(
+                c_params, c_opt, g_params, real, z, gpk
+            )
+            c_losses.append(float(c_loss))
+        key, zk = jax.random.split(key)
+        z = jax.random.normal(zk, (batch, cfg.z_dim))
+        g_params, g_opt, g_loss = gen_step(g_params, g_opt, c_params, z)
+        if step % log_every == 0 or step == steps - 1:
+            entry = {
+                "step": step,
+                "critic_loss": float(np.mean(c_losses)),
+                "gen_loss": float(g_loss),
+                "wall_s": round(time.time() - t0, 2),
+            }
+            log["history"].append(entry)
+            if verbose:
+                print(
+                    f"[{cfg.name}] step {step:4d}  "
+                    f"critic {entry['critic_loss']:+.4f}  "
+                    f"gen {entry['gen_loss']:+.4f}  "
+                    f"({entry['wall_s']:.1f}s)",
+                    flush=True,
+                )
+    log["total_wall_s"] = round(time.time() - t0, 2)
+    return g_params, log
+
+
+def save_log(log: dict, path: str):
+    with open(path, "w") as f:
+        json.dump(log, f, indent=1)

@@ -1,0 +1,100 @@
+"""AOT exporter: HLO-text generation and the manifest contract.
+
+Uses the dwarf network from test_train to keep the lowering cheap; the
+full-size artifacts are produced by ``make artifacts`` and exercised by
+the Rust integration tests.
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.aot import export_generator, export_layer, to_hlo_text
+from compile.model import (
+    DeconvLayer,
+    NetworkConfig,
+    flatten_params,
+    init_generator_params,
+)
+
+
+def tiny_config() -> NetworkConfig:
+    layers = (
+        DeconvLayer(8, 16, 4, 1, 0, 1),
+        DeconvLayer(16, 1, 4, 2, 1, 4),
+    )
+    return NetworkConfig("tiny", 8, layers, 1, 8, tile=4)
+
+
+def test_to_hlo_text_basic():
+    lowered = jax.jit(lambda x: (x * 2.0 + 1.0,)).lower(
+        jax.ShapeDtypeStruct((2, 2), jnp.float32)
+    )
+    text = to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "f32[2,2]" in text
+
+
+def test_export_generator_writes_hlo(tmp_path):
+    cfg = tiny_config()
+    params = init_generator_params(cfg, jax.random.PRNGKey(0))
+    name, size = export_generator(cfg, params, batch=2, out_dir=str(tmp_path))
+    assert name == "tiny_gen_b2.hlo.txt"
+    text = (tmp_path / name).read_text()
+    assert "HloModule" in text
+    assert size == len(text)
+    # z + one (w, b) pair per layer as parameters
+    n_params = 1 + 2 * len(cfg.layers)
+    for i in range(n_params):
+        assert f"parameter({i})" in text
+    # output is the 1-tuple of an 8x8 image batch
+    assert "f32[2,1,8,8]" in text
+
+
+def test_export_layer_writes_hlo(tmp_path):
+    cfg = tiny_config()
+    name, _ = export_layer(cfg, 0, batch=1, out_dir=str(tmp_path))
+    text = (tmp_path / name).read_text()
+    assert "HloModule" in text
+    assert "f32[1,16,4,4]" in text  # layer-0 output shape
+
+
+def test_exported_hlo_has_no_custom_calls(tmp_path):
+    """interpret=True must lower to plain HLO (no Mosaic custom-calls),
+    otherwise the Rust CPU PJRT client cannot execute the artifact."""
+    cfg = tiny_config()
+    params = init_generator_params(cfg, jax.random.PRNGKey(0))
+    name, _ = export_generator(cfg, params, batch=1, out_dir=str(tmp_path))
+    text = (tmp_path / name).read_text()
+    assert "custom-call" not in text.lower() or "mosaic" not in text.lower()
+
+
+def test_full_manifest_if_built():
+    """If `make artifacts` has run, validate the manifest contract the
+    Rust runtime depends on."""
+    root = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    manifest_path = os.path.join(root, "manifest.json")
+    if not os.path.exists(manifest_path):
+        pytest.skip("artifacts not built yet")
+    with open(manifest_path) as f:
+        manifest = json.load(f)
+    assert set(manifest["networks"].keys()) == {"mnist", "celeba"}
+    for name, net in manifest["networks"].items():
+        for bs, gen in net["generators"].items():
+            assert os.path.exists(os.path.join(root, gen)), gen
+        for layer_art in net["layer_artifacts"]:
+            assert os.path.exists(os.path.join(root, layer_art))
+        for wf in net["weights"]:
+            w = np.load(os.path.join(root, wf["w"]))
+            b = np.load(os.path.join(root, wf["b"]))
+            assert w.ndim == 4 and b.ndim == 1
+            assert w.shape[1] == b.shape[0]
+        truth = np.load(os.path.join(root, net["truth"]))
+        assert truth.shape[1] == net["image_channels"]
+        assert truth.shape[2] == net["image_size"]
+        assert net["param_order"][0] == "z"
+        assert len(net["param_order"]) == 1 + 2 * len(net["layers"])

@@ -1,0 +1,223 @@
+"""L1 correctness: Pallas reverse-loop kernel vs the pure-jnp oracles.
+
+This is the core numeric signal of the build: Algorithm 1 (Pallas) ==
+Eq. 1 scatter (naive numpy) == fused XLA transposed convolution, across
+layer geometries, strides, paddings and tile factors — including every
+layer shape of the paper's two networks (Fig. 4).
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.deconv import deconv_pallas, plan_tiles
+from compile.kernels.ref import (
+    deconv_naive,
+    deconv_output_size,
+    deconv_ref,
+    deconv_reverse_naive,
+    stride_hole_offsets,
+)
+
+RNG = np.random.default_rng(1234)
+
+
+def rand_case(n, c_in, c_out, k, s, p, i_h):
+    x = RNG.normal(size=(n, c_in, i_h, i_h)).astype(np.float32)
+    w = RNG.normal(size=(c_in, c_out, k, k)).astype(np.float32)
+    b = RNG.normal(size=(c_out,)).astype(np.float32)
+    return x, w, b
+
+
+# ----------------------------------------------------- oracle cross-checks
+@pytest.mark.parametrize(
+    "c_in,c_out,k,s,p,i_h",
+    [
+        (3, 5, 4, 2, 1, 5),
+        (2, 3, 7, 1, 0, 1),
+        (4, 2, 3, 3, 1, 4),
+        (1, 1, 5, 2, 2, 6),
+        (2, 4, 2, 2, 0, 3),
+    ],
+)
+def test_ref_equals_naive(c_in, c_out, k, s, p, i_h):
+    x, w, b = rand_case(2, c_in, c_out, k, s, p, i_h)
+    ref = np.asarray(deconv_ref(jnp.array(x), jnp.array(w), jnp.array(b), s, p))
+    naive = deconv_naive(x, w, b, s, p)
+    np.testing.assert_allclose(ref, naive, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize(
+    "c_in,c_out,k,s,p,i_h",
+    [
+        (3, 5, 4, 2, 1, 5),
+        (2, 3, 7, 1, 0, 1),
+        (4, 2, 3, 3, 1, 4),
+        (1, 1, 5, 2, 2, 6),
+    ],
+)
+def test_reverse_loop_equals_naive(c_in, c_out, k, s, p, i_h):
+    """Algorithm 1 (output-space, stride-hole skipping) == Eq. 1 scatter."""
+    x, w, b = rand_case(1, c_in, c_out, k, s, p, i_h)
+    np.testing.assert_allclose(
+        deconv_reverse_naive(x, w, b, s, p),
+        deconv_naive(x, w, b, s, p),
+        rtol=1e-4,
+        atol=1e-4,
+    )
+
+
+# ----------------------------------------------------- Eq. 3 offsets
+@pytest.mark.parametrize("k,s,p", [(4, 2, 1), (7, 1, 0), (3, 3, 1), (5, 2, 2)])
+def test_offsets_in_range_and_alignment(k, s, p):
+    f = stride_hole_offsets(k, s, p)
+    assert f.shape == (k,)
+    assert (f >= 0).all() and (f < s).all()
+    for kk in range(k):
+        # Eq. 4: the offset must make (o + P - k) divisible by S at o = f
+        assert (f[kk] + p - kk) % s == 0
+
+
+def test_offsets_match_paper_formula_bruteforce():
+    """f[k] is the smallest o ≥ 0 with (o + P - k) ≡ 0 (mod S)."""
+    for s in range(1, 5):
+        for p in range(0, 4):
+            for k in range(1, 8):
+                f = stride_hole_offsets(k, s, p)
+                for kk in range(k):
+                    brute = next(
+                        o for o in range(s) if (o + p - kk) % s == 0
+                    )
+                    assert f[kk] == brute, (k, s, p, kk)
+
+
+# ----------------------------------------------------- pallas vs oracle
+PAPER_LAYERS = [
+    # (c_in, c_out, k, s, p, i_h, tile) — all layers of both Fig. 4 nets
+    (100, 128, 7, 1, 0, 1, 12),   # mnist L1
+    (128, 64, 4, 2, 1, 7, 12),    # mnist L2
+    (64, 1, 4, 2, 1, 14, 12),     # mnist L3
+    (100, 512, 4, 1, 0, 1, 24),   # celeba L1
+    (512, 256, 4, 2, 1, 4, 24),   # celeba L2
+    (256, 128, 4, 2, 1, 8, 24),   # celeba L3
+    (128, 64, 4, 2, 1, 16, 24),   # celeba L4
+    (64, 3, 4, 2, 1, 32, 24),     # celeba L5
+]
+
+
+@pytest.mark.parametrize("c_in,c_out,k,s,p,i_h,tile", PAPER_LAYERS)
+def test_pallas_matches_ref_on_paper_layers(c_in, c_out, k, s, p, i_h, tile):
+    x, w, b = rand_case(1, c_in, c_out, k, s, p, i_h)
+    got = np.asarray(
+        deconv_pallas(jnp.array(x), jnp.array(w), jnp.array(b), s, p, tile)
+    )
+    ref = np.asarray(deconv_ref(jnp.array(x), jnp.array(w), jnp.array(b), s, p))
+    np.testing.assert_allclose(got, ref, rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("tile", [4, 6, 8, 12, 24])
+def test_pallas_tile_factor_invariance(tile):
+    """The DSE knob T_OH must never change the numerics."""
+    x, w, b = rand_case(2, 3, 4, 4, 2, 1, 8)
+    base = deconv_naive(x, w, b, 2, 1)
+    got = np.asarray(
+        deconv_pallas(jnp.array(x), jnp.array(w), jnp.array(b), 2, 1, tile)
+    )
+    np.testing.assert_allclose(got, base, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("c_blk", [1, 2, 4, 8])
+def test_pallas_channel_block_invariance(c_blk):
+    x, w, b = rand_case(1, 3, 8, 4, 2, 1, 5)
+    base = deconv_naive(x, w, b, 2, 1)
+    got = np.asarray(
+        deconv_pallas(
+            jnp.array(x), jnp.array(w), jnp.array(b), 2, 1, 8, c_blk=c_blk
+        )
+    )
+    np.testing.assert_allclose(got, base, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    c_in=st.integers(1, 6),
+    c_out=st.integers(1, 6),
+    k=st.integers(1, 5),
+    s=st.integers(1, 3),
+    i_h=st.integers(1, 6),
+    n=st.integers(1, 2),
+    tile=st.integers(2, 10),
+    data=st.data(),
+)
+def test_pallas_matches_naive_hypothesis(c_in, c_out, k, s, i_h, n, tile, data):
+    """Property sweep over the kernel's shape space (hypothesis)."""
+    p = data.draw(st.integers(0, max(0, k - 1)))
+    if deconv_output_size(i_h, k, s, p) <= 0:
+        return
+    x, w, b = rand_case(n, c_in, c_out, k, s, p, i_h)
+    got = np.asarray(
+        deconv_pallas(jnp.array(x), jnp.array(w), jnp.array(b), s, p, tile)
+    )
+    np.testing.assert_allclose(
+        got, deconv_naive(x, w, b, s, p), rtol=1e-3, atol=1e-3
+    )
+
+
+# ----------------------------------------------------- plan invariants
+@settings(max_examples=40, deadline=None)
+@given(
+    c_in=st.integers(1, 64),
+    c_out=st.integers(1, 64),
+    k=st.integers(1, 7),
+    s=st.integers(1, 4),
+    i_h=st.integers(1, 32),
+    tile=st.integers(2, 32),
+    data=st.data(),
+)
+def test_plan_invariants(c_in, c_out, k, s, i_h, tile, data):
+    p = data.draw(st.integers(0, max(0, k - 1)))
+    if deconv_output_size(i_h, k, s, p) <= 0:
+        return
+    plan = plan_tiles(i_h, i_h, c_in, c_out, k, s, p, tile)
+    assert plan.tile % plan.stride == 0
+    assert plan.o_h_pad % plan.tile == 0
+    assert plan.o_h_pad >= plan.o_h
+    assert plan.pad_l >= 0 and plan.pad_r >= 0
+    assert plan.c_out % plan.c_blk == 0
+    # every tap's input slice stays inside the padded input
+    tps = plan.tile // plan.stride
+    for kk in range(k):
+        i_lo = plan.c_k[kk] + plan.pad_l
+        i_hi = (plan.n_tiles_h - 1) * tps + plan.c_k[kk] + plan.pad_l + tps - 1
+        assert i_lo >= 0
+        assert i_hi < plan.i_h_pad
+    assert plan.macs() > 0
+    assert 0.0 < plan.mxu_utilization_estimate() <= 1.0
+
+
+def test_plan_vmem_budget_on_paper_layers():
+    """Every paper layer's schedule must fit the 16 MiB VMEM budget."""
+    for c_in, c_out, k, s, p, i_h, tile in PAPER_LAYERS:
+        plan = plan_tiles(i_h, i_h, c_in, c_out, k, s, p, tile)
+        assert plan.vmem_footprint_bytes() < 16 * 1024 * 1024
+
+
+def test_zero_weights_give_bias_only():
+    x = RNG.normal(size=(1, 3, 4, 4)).astype(np.float32)
+    w = np.zeros((3, 2, 4, 4), dtype=np.float32)
+    b = np.array([1.5, -0.5], dtype=np.float32)
+    out = np.asarray(
+        deconv_pallas(jnp.array(x), jnp.array(w), jnp.array(b), 2, 1, 8)
+    )
+    assert np.allclose(out[:, 0], 1.5) and np.allclose(out[:, 1], -0.5)
+
+
+def test_output_size_formula():
+    # classic identities
+    assert deconv_output_size(1, 7, 1, 0) == 7
+    assert deconv_output_size(7, 4, 2, 1) == 14
+    assert deconv_output_size(14, 4, 2, 1) == 28
+    assert deconv_output_size(4, 4, 2, 1) == 8
+    assert deconv_output_size(32, 4, 2, 1) == 64

@@ -1,0 +1,114 @@
+"""L2 correctness: generator/critic shapes, pallas-vs-ref path agreement,
+op accounting used by the Table II GOps numerators."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import (
+    CONFIGS,
+    celeba_config,
+    critic_apply,
+    flatten_params,
+    generator_apply,
+    init_critic_params,
+    init_generator_params,
+    mnist_config,
+    unflatten_params,
+)
+
+
+def test_mnist_geometry():
+    cfg = mnist_config()
+    assert [l.o_h for l in cfg.layers] == [7, 14, 28]
+    assert cfg.layers[-1].c_out == 1
+    assert cfg.image_size == 28 and cfg.tile == 12
+
+
+def test_celeba_geometry():
+    cfg = celeba_config()
+    assert [l.o_h for l in cfg.layers] == [4, 8, 16, 32, 64]
+    assert cfg.layers[-1].c_out == 3
+    assert cfg.image_size == 64 and cfg.tile == 24
+
+
+@pytest.mark.parametrize("name", ["mnist", "celeba"])
+def test_layer_chaining(name):
+    """Each layer's output extent/channels must feed the next layer."""
+    cfg = CONFIGS[name]()
+    assert cfg.layers[0].c_in == cfg.z_dim
+    for prev, nxt in zip(cfg.layers, cfg.layers[1:]):
+        assert prev.o_h == nxt.i_h
+        assert prev.c_out == nxt.c_in
+    assert cfg.layers[-1].o_h == cfg.image_size
+    assert cfg.layers[-1].c_out == cfg.image_channels
+
+
+@pytest.mark.parametrize("name", ["mnist", "celeba"])
+def test_generator_output_shape_and_range(name):
+    cfg = CONFIGS[name]()
+    params = init_generator_params(cfg, jax.random.PRNGKey(0))
+    z = jax.random.normal(jax.random.PRNGKey(1), (2, cfg.z_dim))
+    img = generator_apply(params, z, cfg, use_pallas=False)
+    assert img.shape == (2, cfg.image_channels, cfg.image_size, cfg.image_size)
+    assert float(jnp.max(jnp.abs(img))) <= 1.0  # tanh range
+
+
+@pytest.mark.parametrize("name", ["mnist", "celeba"])
+def test_pallas_path_matches_ref_path(name):
+    """The AOT (Pallas) forward pass == the training (fused XLA) pass."""
+    cfg = CONFIGS[name]()
+    params = init_generator_params(cfg, jax.random.PRNGKey(2))
+    z = jax.random.normal(jax.random.PRNGKey(3), (2, cfg.z_dim))
+    a = np.asarray(generator_apply(params, z, cfg, use_pallas=True))
+    b = np.asarray(generator_apply(params, z, cfg, use_pallas=False))
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("name", ["mnist", "celeba"])
+def test_ops_counts_positive_and_ordered(name):
+    cfg = CONFIGS[name]()
+    for layer in cfg.layers:
+        assert layer.ops() > 0
+        assert layer.ops() == 2 * layer.macs()
+    assert cfg.total_ops() == sum(l.ops() for l in cfg.layers)
+
+
+def test_ops_exact_small_case():
+    """Cross-check the closed-form trip count against brute force."""
+    from compile.kernels.ref import stride_hole_offsets
+    from compile.model import DeconvLayer
+
+    layer = DeconvLayer(2, 3, 4, 2, 1, 5)  # o_h = 10
+    f = stride_hole_offsets(4, 2, 1)
+    brute = 0
+    for kh in range(4):
+        for kw in range(4):
+            n_oh = len(range(int(f[kh]), 10, 2))
+            n_ow = len(range(int(f[kw]), 10, 2))
+            brute += n_oh * n_ow
+    assert layer.macs() == 2 * 3 * brute
+
+
+@pytest.mark.parametrize("name", ["mnist", "celeba"])
+def test_critic_scalar_output(name):
+    cfg = CONFIGS[name]()
+    params = init_critic_params(cfg, jax.random.PRNGKey(4))
+    x = jax.random.normal(
+        jax.random.PRNGKey(5),
+        (3, cfg.image_channels, cfg.image_size, cfg.image_size),
+    )
+    score = critic_apply(params, x)
+    assert score.shape == (3, 1)
+    assert np.isfinite(np.asarray(score)).all()
+
+
+def test_flatten_roundtrip():
+    cfg = mnist_config()
+    params = init_generator_params(cfg, jax.random.PRNGKey(6))
+    flat = flatten_params(params)
+    assert len(flat) == 2 * len(cfg.layers)
+    back = unflatten_params(flat)
+    for (w0, b0), (w1, b1) in zip(params, back):
+        assert w0 is w1 and b0 is b1

@@ -1,0 +1,133 @@
+//! Bench: deconvolution kernel micro-benchmarks across all three Rust
+//! algorithms and the PJRT-executed AOT artifacts — the numeric hot
+//! path audit behind EXPERIMENTS.md §Perf.
+
+use edgedcnn::artifacts::artifacts_or_skip;
+use edgedcnn::config::network_by_name;
+use edgedcnn::deconv::{
+    deconv_reverse_loop, deconv_standard, deconv_tdc, ReverseLoopOpts,
+};
+use edgedcnn::runtime::{data_to_literal, tensor_to_literal, Runtime};
+use edgedcnn::tensor::Tensor;
+use edgedcnn::util::{bench_header, Bencher, Rng};
+
+fn main() -> anyhow::Result<()> {
+    bench_header("deconv_kernels");
+
+    // Rust substrate: the three algorithms on a mid-size layer slice
+    let mut rng = Rng::seed_from_u64(1);
+    let (c_in, c_out, k, s, p, i_h) = (32, 16, 4, 2, 1, 14);
+    let x = Tensor::from_fn(vec![1, c_in, i_h, i_h], |_| {
+        rng.range_f32(-1.0, 1.0)
+    });
+    let w = Tensor::from_fn(vec![c_in, c_out, k, k], |_| {
+        rng.range_f32(-1.0, 1.0)
+    });
+    let b = vec![0.0f32; c_out];
+    let layer = edgedcnn::config::DeconvLayerCfg {
+        c_in,
+        c_out,
+        k,
+        stride: s,
+        padding: p,
+        i_h,
+    };
+    let ops = layer.ops() as f64;
+
+    let r = Bencher::new("rust/standard(Eq.1 scatter)")
+        .iters(20)
+        .run_with_ops(ops, || deconv_standard(&x, &w, &b, s, p));
+    println!("{}", r.render());
+    let r = Bencher::new("rust/reverse-loop(Algorithm 1)")
+        .iters(20)
+        .run_with_ops(ops, || {
+            deconv_reverse_loop(
+                &x,
+                &w,
+                &b,
+                s,
+                p,
+                ReverseLoopOpts {
+                    tile: 12,
+                    zero_skip: false,
+                },
+            )
+        });
+    println!("{}", r.render());
+    let r = Bencher::new("rust/reverse-loop+zero-skip(50%)")
+        .iters(20)
+        .run_with_ops(ops, || {
+            let mut wz = w.clone();
+            for (i, v) in wz.data_mut().iter_mut().enumerate() {
+                if i % 2 == 0 {
+                    *v = 0.0;
+                }
+            }
+            deconv_reverse_loop(
+                &x,
+                &wz,
+                &b,
+                s,
+                p,
+                ReverseLoopOpts {
+                    tile: 12,
+                    zero_skip: true,
+                },
+            )
+        });
+    println!("{}", r.render());
+    let r = Bencher::new("rust/tdc(stride^2 transform)")
+        .iters(20)
+        .run_with_ops(ops, || deconv_tdc(&x, &w, &b, s, p));
+    println!("{}", r.render());
+
+    // PJRT-executed AOT artifacts: per-layer + full generator
+    let Some(artifacts) = artifacts_or_skip() else {
+        println!("(skipping PJRT benches — run `make artifacts`)");
+        return Ok(());
+    };
+    let runtime = Runtime::cpu()?;
+    for name in ["mnist", "celeba"] {
+        let net = network_by_name(name)?;
+        for (i, layer) in net.layers.iter().enumerate() {
+            let hlo = runtime.load_hlo(&artifacts.layer_hlo(name, i)?)?;
+            let mut rng = Rng::seed_from_u64(i as u64);
+            let x = Tensor::from_fn(
+                vec![1, layer.c_in, layer.i_h, layer.i_h],
+                |_| rng.range_f32(-1.0, 1.0),
+            );
+            let w = Tensor::from_fn(
+                vec![layer.c_in, layer.c_out, layer.k, layer.k],
+                |_| 0.05 * rng.normal_f32(),
+            );
+            let b = vec![0.0f32; layer.c_out];
+            let inputs = vec![
+                tensor_to_literal(&x)?,
+                tensor_to_literal(&w)?,
+                data_to_literal(&b, &[layer.c_out])?,
+            ];
+            let out_shape = vec![1, layer.c_out, layer.o_h(), layer.o_h()];
+            let r = Bencher::new(&format!("pjrt/{name}/layer{i}"))
+                .iters(10)
+                .run_with_ops(layer.ops() as f64, || {
+                    hlo.run_to_tensor(&inputs, out_shape.clone()).unwrap()
+                });
+            println!("{}", r.render());
+        }
+        // full generator at each exported batch bucket
+        let weights = artifacts.load_weights(name)?;
+        let manifest = artifacts.network(name)?;
+        for &bs in &manifest.batch_sizes {
+            let exe = runtime.load_generator(&artifacts, name, bs)?;
+            let mut rng = Rng::seed_from_u64(77);
+            let z = Tensor::from_fn(vec![bs, net.z_dim], |_| rng.normal_f32());
+            let r = Bencher::new(&format!("pjrt/{name}/generator_b{bs}"))
+                .iters(10)
+                .run_with_ops((net.total_ops() * bs as u64) as f64, || {
+                    exe.generate(&z, &weights).unwrap()
+                });
+            println!("{}", r.render());
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,23 @@
+//! Bench: Fig. 5 regeneration — the roofline design-space exploration.
+//! Prints the full candidate table per network and times the sweep.
+
+use edgedcnn::config::PYNQ_Z2;
+use edgedcnn::experiments as exp;
+use edgedcnn::util::{bench_header, Bencher};
+
+fn main() -> anyhow::Result<()> {
+    bench_header("fig5_dse (paper Fig. 5)");
+
+    for net in ["mnist", "celeba"] {
+        let data = exp::run_fig5(net, &PYNQ_Z2)?;
+        println!("{}", exp::render_fig5(&data));
+    }
+
+    for net in ["mnist", "celeba"] {
+        let r = Bencher::new(&format!("dse/{net}/full-sweep"))
+            .iters(50)
+            .run(|| exp::run_fig5(net, &PYNQ_Z2).unwrap());
+        println!("{}", r.render());
+    }
+    Ok(())
+}

@@ -1,0 +1,36 @@
+//! Bench: Fig. 6 regeneration — the sparsity sweep (FPGA zero-skip
+//! speed-up, MMD degradation, Eq. 6 trade-off).  Uses the trained
+//! artifacts; prints the full curve and times one sweep.
+
+use edgedcnn::artifacts::artifacts_or_skip;
+use edgedcnn::config::PYNQ_Z2;
+use edgedcnn::experiments as exp;
+use edgedcnn::util::{bench_header, Bencher};
+
+fn main() -> anyhow::Result<()> {
+    bench_header("fig6_sparsity (paper Fig. 6)");
+    let Some(artifacts) = artifacts_or_skip() else {
+        println!("artifacts missing — run `make artifacts` first");
+        return Ok(());
+    };
+
+    let levels = exp::default_levels();
+    for (net, samples) in [("mnist", 48usize), ("celeba", 16usize)] {
+        let data =
+            exp::run_fig6(net, &PYNQ_Z2, &artifacts, &levels, samples, 7)?;
+        println!("{}", exp::render_fig6(&data));
+    }
+
+    // timing: one small sweep (pure-Rust forward — deterministic cost)
+    let small = vec![0.0, 0.5, 0.9];
+    let r = Bencher::new("fig6/mnist/3-levels-16-samples")
+        .iters(5)
+        .run(|| {
+            exp::run_fig6(
+                "mnist", &PYNQ_Z2, &artifacts, &small, 16, 7,
+            )
+            .unwrap()
+        });
+    println!("{}", r.render());
+    Ok(())
+}

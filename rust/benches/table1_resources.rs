@@ -1,0 +1,38 @@
+//! Bench: Table I regeneration + resource-model scaling study (CU count
+//! and tile-factor sensitivity — the legality surface the DSE explores).
+
+use edgedcnn::config::{network_by_name, PYNQ_Z2};
+use edgedcnn::experiments as exp;
+use edgedcnn::fpga::estimate_resources;
+use edgedcnn::util::{bench_header, Bencher};
+
+fn main() -> anyhow::Result<()> {
+    bench_header("table1_resources (paper Table I)");
+
+    print!("{}", exp::render_table1(&exp::run_table1(&PYNQ_Z2)?));
+
+    println!("\nscaling surface (CelebA):");
+    let net = network_by_name("celeba")?;
+    println!("{:>6} {:>6} {:>8} {:>8} {:>9} {:>8}  fits", "n_cu", "T", "DSP", "BRAM", "FF", "LUT");
+    for n_cu in [4, 8, 16, 24, 32] {
+        for t in [8, 16, 24, 32] {
+            let u = estimate_resources(&net, t, n_cu);
+            println!(
+                "{:>6} {:>6} {:>8} {:>8} {:>9} {:>8}  {}",
+                n_cu,
+                t,
+                u.dsp,
+                u.bram18,
+                u.ff,
+                u.lut,
+                if u.fits(&PYNQ_Z2) { "yes" } else { "NO" }
+            );
+        }
+    }
+
+    let r = Bencher::new("resources/full-table1")
+        .iters(1000)
+        .run(|| exp::run_table1(&PYNQ_Z2).unwrap());
+    println!("\n{}", r.render());
+    Ok(())
+}

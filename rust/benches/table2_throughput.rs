@@ -1,0 +1,46 @@
+//! Bench: Table II regeneration — the paper's headline experiment.
+//! Prints the full FPGA-vs-GPU GOps/s/W table for both networks (50
+//! measured runs each) and times the campaign itself.
+//!
+//! (criterion is not available offline; `util::Bencher` provides the
+//! warm-up/iterate/report harness — see DESIGN.md §Offline-environment.)
+
+use edgedcnn::config::{JETSON_TX1, PYNQ_Z2};
+use edgedcnn::experiments as exp;
+use edgedcnn::util::{bench_header, Bencher};
+
+fn main() -> anyhow::Result<()> {
+    bench_header("table2_throughput (paper Table II)");
+
+    for net in ["mnist", "celeba"] {
+        let data = exp::run_table2(net, &PYNQ_Z2, &JETSON_TX1, 50, 42)?;
+        println!("{}", exp::render_table2(&data));
+    }
+
+    // how fast is one full 50-run measurement campaign?
+    for net in ["mnist", "celeba"] {
+        let r = Bencher::new(&format!("table2/{net}/50-runs"))
+            .iters(10)
+            .run(|| {
+                exp::run_table2(net, &PYNQ_Z2, &JETSON_TX1, 50, 42).unwrap()
+            });
+        println!("{}", r.render());
+    }
+
+    // per-layer FPGA pipeline simulation cost (the simulator hot path)
+    use edgedcnn::config::network_by_name;
+    use edgedcnn::fpga::{simulate_layer, SimOpts};
+    for name in ["mnist", "celeba"] {
+        let net = network_by_name(name)?;
+        for (i, layer) in net.layers.iter().enumerate() {
+            let opts = SimOpts::dense(net.tile);
+            let r = Bencher::new(&format!("simulate_layer/{name}/L{}", i + 1))
+                .iters(100)
+                .run_with_ops(layer.ops() as f64, || {
+                    simulate_layer(layer, &PYNQ_Z2, &opts)
+                });
+            println!("{}", r.render());
+        }
+    }
+    Ok(())
+}

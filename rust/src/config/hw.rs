@@ -1,0 +1,143 @@
+//! Hardware platform models: the Xilinx PYNQ-Z2 (Zynq-7020) the paper
+//! implements on, and the NVIDIA Jetson TX1 it benchmarks against.
+//!
+//! Every constant is documented with its source. The two `*_BOARD`
+//! statics are calibration anchors: the simulators consume them through
+//! the live models (cycle counting, roofline legality, DVFS), never as
+//! answer lookup tables.
+
+
+/// FPGA board description (Zynq-7020 / PYNQ-Z2 class).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FpgaBoard {
+    /// Programmable-logic clock the paper synthesizes at (Hz). [§V: 125 MHz]
+    pub clock_hz: f64,
+    /// Replicated compute units the paper fits on the board. [§V: 16 CUs]
+    pub n_cu: usize,
+    /// DSP48 slices available on the device. [Zynq-7020: 220]
+    pub dsp_total: usize,
+    /// BRAM (18 Kbit blocks) available. [Zynq-7020: 280 × 18Kb = 140 × 36Kb]
+    pub bram18_total: usize,
+    /// Flip-flops available. [Zynq-7020: 106,400]
+    pub ff_total: usize,
+    /// LUTs available. [Zynq-7020: 53,200]
+    pub lut_total: usize,
+    /// Peak *sustainable* DDR bandwidth in bytes/s, as measured by the
+    /// STREAM benchmark on the PS DDR3 (the Fig. 5 bandwidth slope).
+    /// [STREAM copy on Zynq-7020 PS DDR3-1050 ≈ 1.0-1.2 GB/s]
+    pub stream_bw_bytes: f64,
+    /// MACs each CU can issue per cycle (DSP lanes per CU; 8×16 = 128
+    /// lanes ≈ 134 DSP48s in Table I including address generation).
+    pub macs_per_cu_cycle: usize,
+    /// Board power floor in watts (PS + idle PL). [PYNQ-Z2 idle ≈ 1.8 W
+    /// measured by USB power meters in comparable studies]
+    pub static_power_w: f64,
+    /// Dynamic power at full CU activity, watts. [≈ 0.7 W for this
+    /// design's 134 DSPs + BRAM/AXI traffic → ~2.5 W total]
+    pub dynamic_power_w: f64,
+}
+
+/// The PYNQ-Z2 board as the paper uses it.
+pub const PYNQ_Z2: FpgaBoard = FpgaBoard {
+    clock_hz: 125e6,
+    n_cu: 16,
+    dsp_total: 220,
+    bram18_total: 280,
+    ff_total: 106_400,
+    lut_total: 53_200,
+    stream_bw_bytes: 1.05e9,
+    macs_per_cu_cycle: 8,
+    static_power_w: 1.8,
+    dynamic_power_w: 0.7,
+};
+
+impl FpgaBoard {
+    /// Peak MAC throughput (MACs/s) with all CUs busy.
+    pub fn peak_macs_per_s(&self) -> f64 {
+        self.clock_hz * (self.n_cu * self.macs_per_cu_cycle) as f64
+    }
+
+    /// Peak arithmetic throughput in GOps/s (1 MAC = 2 ops).
+    pub fn peak_gops(&self) -> f64 {
+        2.0 * self.peak_macs_per_s() / 1e9
+    }
+
+    /// Full-activity power draw (W).
+    pub fn max_power_w(&self) -> f64 {
+        self.static_power_w + self.dynamic_power_w
+    }
+}
+
+/// Edge GPU description (Jetson TX1 class).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GpuBoard {
+    /// CUDA cores. [TX1: 256 Maxwell cores]
+    pub cuda_cores: usize,
+    /// Nominal (boost) core clock, Hz. [TX1: 998 MHz]
+    pub boost_clock_hz: f64,
+    /// Clock floor under full thermal throttle, Hz. [TX1 throttles to
+    /// ≈ 614 MHz under sustained load per the Jetson Linux docs]
+    pub throttle_clock_hz: f64,
+    /// FMA throughput: 2 flops/core/cycle fp32.
+    pub flops_per_core_cycle: f64,
+    /// LPDDR4 bandwidth, bytes/s. [TX1: 25.6 GB/s]
+    pub mem_bw_bytes: f64,
+    /// Fixed per-kernel-launch overhead, seconds. [cudaLaunch + Torch
+    /// dispatch ≈ 20 µs on TX1-class SoCs]
+    pub launch_overhead_s: f64,
+    /// Idle board power, W. [TX1 module idle ≈ 2.5 W]
+    pub idle_power_w: f64,
+    /// Full-load board power, W. [TX1 sustained GPU load ≈ 10-12 W]
+    pub load_power_w: f64,
+}
+
+/// The Jetson TX1 as the paper benchmarks it (Torch + nvprof).
+pub const JETSON_TX1: GpuBoard = GpuBoard {
+    cuda_cores: 256,
+    boost_clock_hz: 998e6,
+    throttle_clock_hz: 614e6,
+    flops_per_core_cycle: 2.0,
+    mem_bw_bytes: 25.6e9,
+    launch_overhead_s: 20e-6,
+    idle_power_w: 2.5,
+    load_power_w: 11.0,
+};
+
+impl GpuBoard {
+    /// Peak fp32 throughput at a given clock (GOps/s = GFLOP/s here).
+    pub fn peak_gops_at(&self, clock_hz: f64) -> f64 {
+        self.cuda_cores as f64 * self.flops_per_core_cycle * clock_hz / 1e9
+    }
+
+    /// Peak fp32 throughput at boost clock.
+    pub fn peak_gops(&self) -> f64 {
+        self.peak_gops_at(self.boost_clock_hz)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pynq_peak_numbers() {
+        // 16 CUs × 8 MACs × 125 MHz = 16 GMAC/s = 32 GOps/s
+        assert!((PYNQ_Z2.peak_macs_per_s() - 16e9).abs() < 1.0);
+        assert!((PYNQ_Z2.peak_gops() - 32.0).abs() < 1e-9);
+        assert!(PYNQ_Z2.max_power_w() < 3.0, "edge budget");
+    }
+
+    #[test]
+    fn tx1_peak_numbers() {
+        // 256 cores × 2 flops × 998 MHz ≈ 511 GFLOP/s fp32
+        let peak = JETSON_TX1.peak_gops();
+        assert!(peak > 500.0 && peak < 520.0, "peak={peak}");
+        assert!(JETSON_TX1.throttle_clock_hz < JETSON_TX1.boost_clock_hz);
+    }
+
+    #[test]
+    fn dsp_budget_accommodates_paper_design() {
+        // Table I uses 134 DSPs; the device must fit it.
+        assert!(134 <= PYNQ_Z2.dsp_total);
+    }
+}

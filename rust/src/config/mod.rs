@@ -1,0 +1,8 @@
+//! Static configuration: the paper's two DCNN generator architectures
+//! (Fig. 4) and the two hardware platforms (PYNQ-Z2 FPGA, Jetson TX1 GPU).
+
+mod hw;
+mod network;
+
+pub use hw::{FpgaBoard, GpuBoard, PYNQ_Z2, JETSON_TX1};
+pub use network::{celeba, mnist, network_by_name, DeconvLayerCfg, NetworkCfg};

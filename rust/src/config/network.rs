@@ -1,0 +1,201 @@
+//! DCNN generator architectures (paper Fig. 4) and their op accounting.
+//!
+//! The layer geometry and the MAC/op counters here are the single source
+//! of truth on the Rust side; they mirror `python/compile/model.py`
+//! exactly (asserted by the integration tests against the artifact
+//! manifest).
+
+
+/// One transposed-convolution layer (square kernel/stride/padding, as in
+/// the paper).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DeconvLayerCfg {
+    pub c_in: usize,
+    pub c_out: usize,
+    pub k: usize,
+    pub stride: usize,
+    pub padding: usize,
+    /// Input spatial extent (square).
+    pub i_h: usize,
+}
+
+impl DeconvLayerCfg {
+    /// Output extent: `O = (I-1)·S + K - 2P` (Eq. 1 solved for max o).
+    pub fn o_h(&self) -> usize {
+        (self.i_h - 1) * self.stride + self.k - 2 * self.padding
+    }
+
+    /// Eq. 3 stride-hole offsets `f[k] = mod(S - mod(P - k, S), S)`.
+    pub fn offsets(&self) -> Vec<usize> {
+        crate::deconv::stride_hole_offsets(self.k, self.stride, self.padding)
+    }
+
+    /// Exact Algorithm-1 trip count per (c_in, c_out) pair:
+    /// `Σ_{k_h,k_w} |{o_h ≡ f(k_h)}| · |{o_w ≡ f(k_w)}|`.
+    pub fn taps(&self) -> usize {
+        let o = self.o_h();
+        let f = self.offsets();
+        let rows: usize = f
+            .iter()
+            .map(|&fk| if fk < o { (o - fk).div_ceil(self.stride) } else { 0 })
+            .sum();
+        rows * rows
+    }
+
+    /// Dense MACs of the reverse-loop schedule.
+    pub fn macs(&self) -> u64 {
+        self.c_in as u64 * self.c_out as u64 * self.taps() as u64
+    }
+
+    /// Arithmetic operations (1 MAC = 2 ops) — the paper's GOps numerator.
+    pub fn ops(&self) -> u64 {
+        2 * self.macs()
+    }
+
+    /// Input feature-map bytes (f32).
+    pub fn input_bytes(&self) -> u64 {
+        4 * self.c_in as u64 * (self.i_h * self.i_h) as u64
+    }
+
+    /// Output feature-map bytes (f32).
+    pub fn output_bytes(&self) -> u64 {
+        4 * self.c_out as u64 * (self.o_h() * self.o_h()) as u64
+    }
+
+    /// Weight + bias bytes (f32).
+    pub fn weight_bytes(&self) -> u64 {
+        4 * (self.c_in * self.c_out * self.k * self.k + self.c_out) as u64
+    }
+}
+
+/// A DCNN generator: latent dim + deconvolution stack + the unified output
+/// tiling factor `T_OH` the paper selects per network (Table I).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct NetworkCfg {
+    pub name: String,
+    pub z_dim: usize,
+    pub layers: Vec<DeconvLayerCfg>,
+    pub image_channels: usize,
+    pub image_size: usize,
+    pub tile: usize,
+}
+
+impl NetworkCfg {
+    pub fn total_ops(&self) -> u64 {
+        self.layers.iter().map(|l| l.ops()).sum()
+    }
+
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs()).sum()
+    }
+
+    /// Total learned parameters (weights + biases).
+    pub fn total_params(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| l.c_in * l.c_out * l.k * l.k + l.c_out)
+            .sum()
+    }
+}
+
+/// MNIST generator: `100×1×1 → 128×7×7 → 64×14×14 → 1×28×28` (3 layers).
+pub fn mnist() -> NetworkCfg {
+    NetworkCfg {
+        name: "mnist".into(),
+        z_dim: 100,
+        layers: vec![
+            DeconvLayerCfg { c_in: 100, c_out: 128, k: 7, stride: 1, padding: 0, i_h: 1 },
+            DeconvLayerCfg { c_in: 128, c_out: 64, k: 4, stride: 2, padding: 1, i_h: 7 },
+            DeconvLayerCfg { c_in: 64, c_out: 1, k: 4, stride: 2, padding: 1, i_h: 14 },
+        ],
+        image_channels: 1,
+        image_size: 28,
+        tile: 12,
+    }
+}
+
+/// CelebA generator: `100×1×1 → 512×4×4 → 256×8×8 → 128×16×16 → 64×32×32
+/// → 3×64×64` (5 layers).
+pub fn celeba() -> NetworkCfg {
+    NetworkCfg {
+        name: "celeba".into(),
+        z_dim: 100,
+        layers: vec![
+            DeconvLayerCfg { c_in: 100, c_out: 512, k: 4, stride: 1, padding: 0, i_h: 1 },
+            DeconvLayerCfg { c_in: 512, c_out: 256, k: 4, stride: 2, padding: 1, i_h: 4 },
+            DeconvLayerCfg { c_in: 256, c_out: 128, k: 4, stride: 2, padding: 1, i_h: 8 },
+            DeconvLayerCfg { c_in: 128, c_out: 64, k: 4, stride: 2, padding: 1, i_h: 16 },
+            DeconvLayerCfg { c_in: 64, c_out: 3, k: 4, stride: 2, padding: 1, i_h: 32 },
+        ],
+        image_channels: 3,
+        image_size: 64,
+        tile: 24,
+    }
+}
+
+/// Look up one of the two benchmark networks by name.
+pub fn network_by_name(name: &str) -> anyhow::Result<NetworkCfg> {
+    match name {
+        "mnist" => Ok(mnist()),
+        "celeba" => Ok(celeba()),
+        other => anyhow::bail!("unknown network {other:?} (mnist|celeba)"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mnist_geometry_chains() {
+        let net = mnist();
+        let o: Vec<usize> = net.layers.iter().map(|l| l.o_h()).collect();
+        assert_eq!(o, vec![7, 14, 28]);
+        for (a, b) in net.layers.iter().zip(net.layers.iter().skip(1)) {
+            assert_eq!(a.o_h(), b.i_h);
+            assert_eq!(a.c_out, b.c_in);
+        }
+        assert_eq!(net.layers[0].c_in, net.z_dim);
+    }
+
+    #[test]
+    fn celeba_geometry_chains() {
+        let net = celeba();
+        let o: Vec<usize> = net.layers.iter().map(|l| l.o_h()).collect();
+        assert_eq!(o, vec![4, 8, 16, 32, 64]);
+        assert_eq!(net.layers.last().unwrap().c_out, 3);
+    }
+
+    #[test]
+    fn taps_bruteforce_small() {
+        let l = DeconvLayerCfg { c_in: 2, c_out: 3, k: 4, stride: 2, padding: 1, i_h: 5 };
+        // brute force over output space
+        let o = l.o_h();
+        let f = l.offsets();
+        let mut count = 0usize;
+        for kh in 0..l.k {
+            for kw in 0..l.k {
+                let nh = (f[kh]..o).step_by(l.stride).count();
+                let nw = (f[kw]..o).step_by(l.stride).count();
+                count += nh * nw;
+            }
+        }
+        assert_eq!(l.taps(), count);
+        assert_eq!(l.macs(), (2 * 3 * count) as u64);
+    }
+
+    #[test]
+    fn ops_are_twice_macs() {
+        for net in [mnist(), celeba()] {
+            for l in &net.layers {
+                assert_eq!(l.ops(), 2 * l.macs());
+            }
+            assert_eq!(net.total_ops(), 2 * net.total_macs());
+        }
+    }
+
+    #[test]
+    fn unknown_network_errors() {
+        assert!(network_by_name("imagenet").is_err());
+    }
+}

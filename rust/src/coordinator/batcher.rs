@@ -1,0 +1,211 @@
+//! Dynamic batcher — vLLM-style continuous batching adapted to the AOT
+//! reality: the generator executables exist at fixed batch buckets
+//! (`make artifacts` exports them), so the batcher coalesces queued
+//! requests per network and cuts a batch when (a) a full bucket's worth
+//! of images is waiting, or (b) the oldest request exceeds the batching
+//! window.  Pure state machine — time is injected, so tests are
+//! deterministic and the tokio loop stays trivial.
+
+use super::request::InferenceRequest;
+use std::collections::{HashMap, VecDeque};
+use std::time::{Duration, Instant};
+
+/// Batching policy.
+#[derive(Debug, Clone, Copy)]
+pub struct BatcherConfig {
+    /// Largest exported batch bucket (images per executable call).
+    pub max_batch: usize,
+    /// Max time the oldest queued request may wait before a partial
+    /// batch is cut.
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(5),
+        }
+    }
+}
+
+/// A cut batch: requests plus the image count they need.
+#[derive(Debug)]
+pub struct Batch {
+    pub network: String,
+    pub requests: Vec<InferenceRequest>,
+    pub n_images: usize,
+}
+
+/// Per-network request queues with deadline-based cutting.
+#[derive(Debug, Default)]
+pub struct DynamicBatcher {
+    queues: HashMap<String, VecDeque<InferenceRequest>>,
+    config: BatcherConfig,
+}
+
+impl DynamicBatcher {
+    pub fn new(config: BatcherConfig) -> Self {
+        DynamicBatcher {
+            queues: HashMap::new(),
+            config,
+        }
+    }
+
+    /// Enqueue a request; returns a batch only if a bucket *filled* —
+    /// waiting requests are left to coalesce until [`Self::poll`]'s
+    /// deadline fires (cutting on push-side expiry would emit tiny
+    /// batches whenever the device briefly falls behind).
+    pub fn push(&mut self, req: InferenceRequest, _now: Instant) -> Option<Batch> {
+        let q = self.queues.entry(req.network.clone()).or_default();
+        q.push_back(req);
+        self.try_cut(None)
+    }
+
+    /// Deadline poll: cut a full bucket, or a partial batch whose oldest
+    /// request waited past the window.
+    pub fn poll(&mut self, now: Instant) -> Option<Batch> {
+        self.try_cut(Some(now))
+    }
+
+    /// Total queued requests (all networks).
+    pub fn queued(&self) -> usize {
+        self.queues.values().map(|q| q.len()).sum()
+    }
+
+    /// Earliest deadline among queued requests (for the serve loop's
+    /// sleep).
+    pub fn next_deadline(&self) -> Option<Instant> {
+        self.queues
+            .values()
+            .filter_map(|q| q.front())
+            .map(|r| r.enqueued_at + self.config.max_wait)
+            .min()
+    }
+
+    /// Cut a batch: full buckets always qualify; expired partials only
+    /// when a deadline clock is supplied (poll path).
+    fn try_cut(&mut self, deadline_now: Option<Instant>) -> Option<Batch> {
+        let mut chosen: Option<String> = None;
+        for (net, q) in &self.queues {
+            let Some(front) = q.front() else { continue };
+            let images: usize = q.iter().map(|r| r.n_images).sum();
+            let full = images >= self.config.max_batch;
+            let expired = deadline_now
+                .map(|now| {
+                    now.duration_since(front.enqueued_at)
+                        >= self.config.max_wait
+                })
+                .unwrap_or(false);
+            if full || expired {
+                chosen = Some(net.clone());
+                break;
+            }
+        }
+        let net = chosen?;
+        let q = self.queues.get_mut(&net).unwrap();
+        let mut requests = Vec::new();
+        let mut images = 0usize;
+        while let Some(front) = q.front() {
+            if images + front.n_images > self.config.max_batch
+                && !requests.is_empty()
+            {
+                break;
+            }
+            let r = q.pop_front().unwrap();
+            images += r.n_images;
+            requests.push(r);
+            if images >= self.config.max_batch {
+                break;
+            }
+        }
+        if requests.is_empty() {
+            return None;
+        }
+        Some(Batch {
+            network: net,
+            requests,
+            n_images: images,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, net: &str, n: usize) -> InferenceRequest {
+        InferenceRequest::new(id, net, n, id)
+    }
+
+    fn cfg(max_batch: usize, wait_ms: u64) -> BatcherConfig {
+        BatcherConfig {
+            max_batch,
+            max_wait: Duration::from_millis(wait_ms),
+        }
+    }
+
+    #[test]
+    fn full_bucket_cuts_immediately() {
+        let mut b = DynamicBatcher::new(cfg(4, 1000));
+        let now = Instant::now();
+        assert!(b.push(req(1, "mnist", 2), now).is_none());
+        let batch = b.push(req(2, "mnist", 2), now).expect("bucket full");
+        assert_eq!(batch.n_images, 4);
+        assert_eq!(batch.requests.len(), 2);
+        assert_eq!(b.queued(), 0);
+    }
+
+    #[test]
+    fn partial_batch_waits_for_deadline() {
+        let mut b = DynamicBatcher::new(cfg(8, 10));
+        let now = Instant::now();
+        assert!(b.push(req(1, "mnist", 2), now).is_none());
+        assert!(b.poll(now).is_none(), "window not expired");
+        let later = now + Duration::from_millis(11);
+        let batch = b.poll(later).expect("window expired");
+        assert_eq!(batch.n_images, 2);
+    }
+
+    #[test]
+    fn networks_batch_independently() {
+        let mut b = DynamicBatcher::new(cfg(4, 1000));
+        let now = Instant::now();
+        assert!(b.push(req(1, "mnist", 2), now).is_none());
+        assert!(b.push(req(2, "celeba", 2), now).is_none());
+        let batch = b.push(req(3, "mnist", 2), now).expect("mnist full");
+        assert_eq!(batch.network, "mnist");
+        assert_eq!(b.queued(), 1, "celeba still queued");
+    }
+
+    #[test]
+    fn oversize_request_cut_alone() {
+        let mut b = DynamicBatcher::new(cfg(4, 1000));
+        let now = Instant::now();
+        let batch = b.push(req(1, "mnist", 9), now).expect("cut");
+        assert_eq!(batch.requests.len(), 1);
+        assert_eq!(batch.n_images, 9);
+    }
+
+    #[test]
+    fn batch_respects_bucket_boundary() {
+        let mut b = DynamicBatcher::new(cfg(4, 1000));
+        let now = Instant::now();
+        b.push(req(1, "mnist", 3), now);
+        // 3 + 3 > 4 → first batch cut holds only request 1 … 3+3 over
+        // bucket: second stays queued
+        let batch = b.push(req(2, "mnist", 3), now).expect("cut at bucket");
+        assert_eq!(batch.requests.len(), 1);
+        assert_eq!(b.queued(), 1);
+    }
+
+    #[test]
+    fn next_deadline_tracks_oldest() {
+        let mut b = DynamicBatcher::new(cfg(8, 10));
+        assert!(b.next_deadline().is_none());
+        let now = Instant::now();
+        b.push(req(1, "mnist", 1), now);
+        let d = b.next_deadline().unwrap();
+        assert!(d > now);
+    }
+}

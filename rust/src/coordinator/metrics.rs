@@ -1,0 +1,177 @@
+//! Serving metrics — latency distribution, throughput, arithmetic
+//! throughput, and the energy integration that yields the GOps/s/W
+//! headline for the end-to-end example.
+
+use crate::stats::{percentile, Summary};
+
+/// Accumulates per-request and per-batch telemetry during a serving run.
+#[derive(Debug, Default)]
+pub struct MetricsRegistry {
+    latencies_s: Vec<f64>,
+    execute_s: Vec<f64>,
+    batch_sizes: Vec<usize>,
+    images: u64,
+    requests: u64,
+    ops: u64,
+    energy_j: f64,
+    wall_s: f64,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_request(&mut self, latency_s: f64, n_images: usize) {
+        self.latencies_s.push(latency_s);
+        self.requests += 1;
+        self.images += n_images as u64;
+    }
+
+    pub fn record_batch(&mut self, execute_s: f64, batch: usize, ops: u64) {
+        self.execute_s.push(execute_s);
+        self.batch_sizes.push(batch);
+        self.ops += ops;
+    }
+
+    pub fn record_energy(&mut self, joules: f64) {
+        self.energy_j += joules;
+    }
+
+    pub fn set_wall(&mut self, wall_s: f64) {
+        self.wall_s = wall_s;
+    }
+
+    pub fn requests(&self) -> u64 {
+        self.requests
+    }
+
+    pub fn report(&self) -> ServingReport {
+        let lat = if self.latencies_s.is_empty() {
+            LatencyReport::default()
+        } else {
+            LatencyReport {
+                mean_s: Summary::of(&self.latencies_s).mean,
+                p50_s: percentile(&self.latencies_s, 50.0),
+                p95_s: percentile(&self.latencies_s, 95.0),
+                p99_s: percentile(&self.latencies_s, 99.0),
+            }
+        };
+        let wall = self.wall_s.max(1e-12);
+        let mean_power = if self.wall_s > 0.0 {
+            self.energy_j / self.wall_s
+        } else {
+            0.0
+        };
+        let gops = self.ops as f64 / wall / 1e9;
+        ServingReport {
+            requests: self.requests,
+            images: self.images,
+            batches: self.execute_s.len() as u64,
+            wall_s: self.wall_s,
+            latency: lat,
+            images_per_s: self.images as f64 / wall,
+            gops,
+            mean_batch: if self.batch_sizes.is_empty() {
+                0.0
+            } else {
+                self.batch_sizes.iter().sum::<usize>() as f64
+                    / self.batch_sizes.len() as f64
+            },
+            mean_power_w: mean_power,
+            gops_per_w: if mean_power > 0.0 { gops / mean_power } else { 0.0 },
+        }
+    }
+}
+
+/// Latency distribution summary.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct LatencyReport {
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub p99_s: f64,
+}
+
+/// Final serving report (printed by the `serve` CLI and the edge_serving
+/// example; recorded in EXPERIMENTS.md §E9).
+#[derive(Debug, Clone, Copy)]
+pub struct ServingReport {
+    pub requests: u64,
+    pub images: u64,
+    pub batches: u64,
+    pub wall_s: f64,
+    pub latency: LatencyReport,
+    pub images_per_s: f64,
+    pub gops: f64,
+    pub mean_batch: f64,
+    pub mean_power_w: f64,
+    pub gops_per_w: f64,
+}
+
+impl ServingReport {
+    pub fn render(&self) -> String {
+        format!(
+            "requests {:>6}   images {:>6}   batches {:>5}  (mean batch {:.2})\n\
+             wall {:>8.3} s   throughput {:>8.2} img/s   {:>7.2} GOps/s\n\
+             latency mean {:.2} ms  p50 {:.2} ms  p95 {:.2} ms  p99 {:.2} ms\n\
+             power {:>6.2} W   {:>6.2} GOps/s/W",
+            self.requests,
+            self.images,
+            self.batches,
+            self.mean_batch,
+            self.wall_s,
+            self.images_per_s,
+            self.gops,
+            self.latency.mean_s * 1e3,
+            self.latency.p50_s * 1e3,
+            self.latency.p95_s * 1e3,
+            self.latency.p99_s * 1e3,
+            self.mean_power_w,
+            self.gops_per_w,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_aggregates() {
+        let mut m = MetricsRegistry::new();
+        for i in 0..10 {
+            m.record_request(0.001 * (i + 1) as f64, 2);
+        }
+        m.record_batch(0.004, 4, 1_000_000_000);
+        m.record_batch(0.006, 4, 1_000_000_000);
+        m.record_energy(5.0);
+        m.set_wall(1.0);
+        let r = m.report();
+        assert_eq!(r.requests, 10);
+        assert_eq!(r.images, 20);
+        assert_eq!(r.batches, 2);
+        assert!((r.images_per_s - 20.0).abs() < 1e-9);
+        assert!((r.gops - 2.0).abs() < 1e-9);
+        assert!((r.mean_power_w - 5.0).abs() < 1e-9);
+        assert!((r.gops_per_w - 0.4).abs() < 1e-9);
+        assert!(r.latency.p99_s >= r.latency.p50_s);
+    }
+
+    #[test]
+    fn empty_registry_reports_zeroes() {
+        let r = MetricsRegistry::new().report();
+        assert_eq!(r.requests, 0);
+        assert_eq!(r.gops_per_w, 0.0);
+    }
+
+    #[test]
+    fn render_contains_key_fields() {
+        let mut m = MetricsRegistry::new();
+        m.record_request(0.002, 1);
+        m.set_wall(0.5);
+        let s = m.report().render();
+        assert!(s.contains("GOps/s/W"));
+        assert!(s.contains("p99"));
+    }
+}

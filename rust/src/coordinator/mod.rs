@@ -1,0 +1,24 @@
+//! L3 edge-inference coordinator — the serving system wrapped around the
+//! accelerator: request intake, dynamic batching into the AOT-exported
+//! batch buckets, a device-executor thread owning the PJRT runtime (and
+//! the FPGA/GPU timing simulators for edge-device annotations), metrics,
+//! and a sampled power meter.
+//!
+//! Threading model: PJRT handles are not `Sync`, so one **device thread**
+//! owns the [`crate::runtime::Runtime`] and all compiled executables; a
+//! **leader thread** does intake/batching/dispatch and talks to it over
+//! channels — the same leader/worker split a vLLM-style router uses.
+
+mod batcher;
+mod metrics;
+mod power;
+mod request;
+mod server;
+
+pub use batcher::{Batch, BatcherConfig, DynamicBatcher};
+pub use metrics::{MetricsRegistry, ServingReport};
+pub use power::PowerMeter;
+pub use request::{InferenceRequest, InferenceResponse, RequestId};
+pub use server::{
+    Coordinator, CoordinatorConfig, ResponseHandle, WorkloadSpec,
+};

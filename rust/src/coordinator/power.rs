@@ -1,0 +1,90 @@
+//! Sampled power meter — the software analogue of the paper's "USB Power
+//! Meter Voltage Detector": a sampler integrates instantaneous power
+//! (from the device model's activity) into energy over the serving run.
+
+/// Trapezoidal power-to-energy integrator with sample statistics.
+#[derive(Debug, Default)]
+pub struct PowerMeter {
+    last_sample_w: Option<f64>,
+    energy_j: f64,
+    samples: usize,
+    peak_w: f64,
+}
+
+impl PowerMeter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record an instantaneous power reading covering `dt_s` seconds
+    /// since the previous one (trapezoidal rule).
+    pub fn sample(&mut self, power_w: f64, dt_s: f64) {
+        assert!(power_w >= 0.0 && dt_s >= 0.0, "bad sample");
+        let prev = self.last_sample_w.unwrap_or(power_w);
+        self.energy_j += 0.5 * (prev + power_w) * dt_s;
+        self.last_sample_w = Some(power_w);
+        self.samples += 1;
+        self.peak_w = self.peak_w.max(power_w);
+    }
+
+    /// Convenience: a constant-power interval (e.g. one simulated layer).
+    pub fn add_interval(&mut self, power_w: f64, dt_s: f64) {
+        assert!(power_w >= 0.0 && dt_s >= 0.0, "bad interval");
+        self.energy_j += power_w * dt_s;
+        self.last_sample_w = Some(power_w);
+        self.samples += 1;
+        self.peak_w = self.peak_w.max(power_w);
+    }
+
+    pub fn energy_j(&self) -> f64 {
+        self.energy_j
+    }
+
+    pub fn peak_w(&self) -> f64 {
+        self.peak_w
+    }
+
+    pub fn samples(&self) -> usize {
+        self.samples
+    }
+
+    /// Mean power over a known wall time.
+    pub fn mean_power_w(&self, wall_s: f64) -> f64 {
+        if wall_s <= 0.0 {
+            0.0
+        } else {
+            self.energy_j / wall_s
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_power_integrates_exactly() {
+        let mut m = PowerMeter::new();
+        for _ in 0..10 {
+            m.add_interval(2.5, 0.1);
+        }
+        assert!((m.energy_j() - 2.5).abs() < 1e-12);
+        assert!((m.mean_power_w(1.0) - 2.5).abs() < 1e-12);
+        assert_eq!(m.peak_w(), 2.5);
+    }
+
+    #[test]
+    fn trapezoid_averages_ramp() {
+        let mut m = PowerMeter::new();
+        m.sample(0.0, 0.0);
+        m.sample(10.0, 1.0); // ramp 0→10 over 1 s = 5 J
+        assert!((m.energy_j() - 5.0).abs() < 1e-12);
+        assert_eq!(m.peak_w(), 10.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn negative_power_rejected() {
+        PowerMeter::new().sample(-1.0, 0.1);
+    }
+}

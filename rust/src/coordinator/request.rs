@@ -1,0 +1,59 @@
+//! Request/response types of the serving API.
+
+use crate::tensor::Tensor;
+use std::time::Instant;
+
+pub type RequestId = u64;
+
+/// One client request: "generate `n_images` samples from `network`".
+#[derive(Debug, Clone)]
+pub struct InferenceRequest {
+    pub id: RequestId,
+    pub network: String,
+    pub n_images: usize,
+    /// Latent seed (deterministic generation for reproducible tests).
+    pub seed: u64,
+    pub enqueued_at: Instant,
+}
+
+impl InferenceRequest {
+    pub fn new(id: RequestId, network: &str, n_images: usize, seed: u64) -> Self {
+        InferenceRequest {
+            id,
+            network: network.to_string(),
+            n_images,
+            seed,
+            enqueued_at: Instant::now(),
+        }
+    }
+}
+
+/// Completed request with its generated images and serving telemetry.
+#[derive(Debug)]
+pub struct InferenceResponse {
+    pub id: RequestId,
+    /// `[n_images, C, H, W]` in [-1, 1].
+    pub images: Tensor,
+    /// End-to-end latency (enqueue → response), seconds.
+    pub latency_s: f64,
+    /// Wall time inside the PJRT executable, seconds.
+    pub execute_s: f64,
+    /// Batch bucket this request was served in.
+    pub batch_size: usize,
+    /// Simulated edge-FPGA latency for the same work (annotation).
+    pub fpga_time_s: f64,
+    /// Simulated edge-GPU latency for the same work (annotation).
+    pub gpu_time_s: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_records_enqueue_time() {
+        let r = InferenceRequest::new(1, "mnist", 4, 42);
+        assert_eq!(r.network, "mnist");
+        assert!(r.enqueued_at.elapsed().as_secs_f64() < 1.0);
+    }
+}

@@ -1,0 +1,537 @@
+//! The coordinator proper: a **leader thread** (request intake + dynamic
+//! batching + dispatch) and a **device-executor thread** (PJRT numerics +
+//! FPGA/GPU edge-timing annotations + power integration), joined by
+//! channels — the same split a vLLM-style router runs, implemented on
+//! std threads (the offline build environment ships no async runtime;
+//! see DESIGN.md §Offline-environment).
+
+use super::batcher::{Batch, BatcherConfig, DynamicBatcher};
+use super::metrics::{MetricsRegistry, ServingReport};
+use super::request::{InferenceRequest, InferenceResponse};
+use crate::artifacts::ArtifactDir;
+use crate::config::{network_by_name, NetworkCfg, JETSON_TX1, PYNQ_Z2};
+use crate::fpga::{simulate_network, SimOpts};
+use crate::gpu::{expected_gpu_network_time, ThermalThrottle};
+use crate::runtime::{GeneratorExecutable, Runtime};
+use crate::tensor::Tensor;
+use crate::util::Rng;
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Coordinator construction options.
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    pub artifacts_dir: std::path::PathBuf,
+    /// Networks to preload (executables compile at startup, never on the
+    /// request path).
+    pub networks: Vec<String>,
+    pub batcher: BatcherConfig,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            artifacts_dir: "artifacts".into(),
+            networks: vec!["mnist".to_string()],
+            batcher: BatcherConfig::default(),
+        }
+    }
+}
+
+/// A synthetic open-loop workload for [`Coordinator::serve_workload`].
+#[derive(Debug, Clone)]
+pub struct WorkloadSpec {
+    pub network: String,
+    pub requests: usize,
+    pub images_per_request: usize,
+    /// Mean inter-arrival gap (uniform ±50% jitter applied).
+    pub interarrival: Duration,
+    pub seed: u64,
+}
+
+enum LeaderCmd {
+    Submit(InferenceRequest, mpsc::Sender<InferenceResponse>),
+    Shutdown,
+}
+
+enum DeviceCmd {
+    Execute {
+        batch: Batch,
+        reply: mpsc::Sender<Result<ExecutedBatch>>,
+    },
+    Shutdown,
+}
+
+struct ExecutedBatch {
+    responses: Vec<InferenceResponse>,
+    execute_s: f64,
+    ops: u64,
+    energy_j: f64,
+}
+
+/// Per-network state owned by the device thread.
+struct NetState {
+    cfg: NetworkCfg,
+    /// Executables keyed by batch bucket.
+    executables: HashMap<usize, GeneratorExecutable>,
+    buckets: Vec<usize>,
+    weights: Vec<(Tensor, Vec<f32>)>,
+    /// Precomputed dense FPGA edge timing/energy for one image.
+    fpga_time_s: f64,
+    fpga_energy_j: f64,
+}
+
+/// Pending-response handle (resolves when the request's batch executes).
+pub struct ResponseHandle {
+    rx: mpsc::Receiver<InferenceResponse>,
+}
+
+impl ResponseHandle {
+    pub fn wait(self) -> Result<InferenceResponse> {
+        self.rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("request dropped by coordinator"))
+    }
+
+    pub fn wait_timeout(self, dur: Duration) -> Result<InferenceResponse> {
+        self.rx
+            .recv_timeout(dur)
+            .map_err(|e| anyhow::anyhow!("response not ready: {e}"))
+    }
+}
+
+/// The edge-serving coordinator (leader).
+pub struct Coordinator {
+    tx_leader: mpsc::Sender<LeaderCmd>,
+    metrics: Arc<Mutex<MetricsRegistry>>,
+    next_id: AtomicU64,
+    started: Instant,
+    leader: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Coordinator {
+    /// Start the device thread (compiling all executables) and the
+    /// leader/batching thread.
+    pub fn start(config: CoordinatorConfig) -> Result<Self> {
+        let (tx_dev, rx_dev) = mpsc::channel::<DeviceCmd>();
+        let (tx_ready, rx_ready) = mpsc::channel::<Result<()>>();
+        let cfg = config.clone();
+        std::thread::Builder::new()
+            .name("edgedcnn-device".into())
+            .spawn(move || device_thread(cfg, rx_dev, tx_ready))
+            .context("spawning device thread")?;
+        rx_ready
+            .recv()
+            .context("device thread died during startup")??;
+
+        let metrics = Arc::new(Mutex::new(MetricsRegistry::new()));
+        let (tx_leader, rx_leader) = mpsc::channel::<LeaderCmd>();
+        let m = metrics.clone();
+        let batcher_cfg = config.batcher;
+        let leader = std::thread::Builder::new()
+            .name("edgedcnn-leader".into())
+            .spawn(move || leader_thread(batcher_cfg, rx_leader, tx_dev, m))
+            .context("spawning leader thread")?;
+        Ok(Coordinator {
+            tx_leader,
+            metrics,
+            next_id: AtomicU64::new(1),
+            started: Instant::now(),
+            leader: Some(leader),
+        })
+    }
+
+    /// Submit one request; returns a handle resolving when its batch has
+    /// executed.
+    pub fn submit(
+        &self,
+        network: &str,
+        n_images: usize,
+        seed: u64,
+    ) -> Result<ResponseHandle> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let req = InferenceRequest::new(id, network, n_images, seed);
+        let (tx, rx) = mpsc::channel();
+        self.tx_leader
+            .send(LeaderCmd::Submit(req, tx))
+            .map_err(|_| anyhow::anyhow!("coordinator is shut down"))?;
+        Ok(ResponseHandle { rx })
+    }
+
+    /// Submit and block for the response.
+    pub fn submit_blocking(
+        &self,
+        network: &str,
+        n_images: usize,
+        seed: u64,
+    ) -> Result<InferenceResponse> {
+        self.submit(network, n_images, seed)?.wait()
+    }
+
+    /// Drive a synthetic open-loop workload and return the serving
+    /// report.
+    pub fn serve_workload(&self, spec: &WorkloadSpec) -> Result<ServingReport> {
+        self.reset_metrics(); // each workload reports its own window
+        let mut rng = Rng::seed_from_u64(spec.seed);
+        let mut handles = Vec::with_capacity(spec.requests);
+        let t0 = Instant::now();
+        for i in 0..spec.requests {
+            let seed = rng.next_u64();
+            handles.push(self.submit(
+                &spec.network,
+                spec.images_per_request,
+                seed,
+            )?);
+            if i + 1 < spec.requests && !spec.interarrival.is_zero() {
+                let jitter = rng.range_f64(0.5, 1.5);
+                std::thread::sleep(spec.interarrival.mul_f64(jitter));
+            }
+        }
+        for h in handles {
+            let resp = h.wait()?;
+            debug_assert!(resp.images.numel() > 0);
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let mut m = self.metrics.lock().unwrap();
+        m.set_wall(wall);
+        Ok(m.report())
+    }
+
+    /// Clear accumulated metrics (each `serve_workload` call reports its
+    /// own measurement window).
+    pub fn reset_metrics(&self) {
+        *self.metrics.lock().unwrap() = MetricsRegistry::new();
+    }
+
+    /// Snapshot of the current serving metrics.
+    pub fn report(&self) -> ServingReport {
+        let mut m = self.metrics.lock().unwrap();
+        m.set_wall(self.started.elapsed().as_secs_f64());
+        m.report()
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        let _ = self.tx_leader.send(LeaderCmd::Shutdown);
+        if let Some(h) = self.leader.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Leader loop: intake → dynamic batching (deadline-driven) → dispatch.
+fn leader_thread(
+    config: BatcherConfig,
+    rx: mpsc::Receiver<LeaderCmd>,
+    tx_dev: mpsc::Sender<DeviceCmd>,
+    metrics: Arc<Mutex<MetricsRegistry>>,
+) {
+    let mut batcher = DynamicBatcher::new(config);
+    let mut waiters: HashMap<u64, mpsc::Sender<InferenceResponse>> =
+        HashMap::new();
+    let mut shutdown = false;
+    'outer: loop {
+        // wait for a request or the next batching deadline
+        let cmd = match batcher.next_deadline() {
+            Some(deadline) => {
+                let now = Instant::now();
+                let timeout = deadline.saturating_duration_since(now);
+                match rx.recv_timeout(timeout) {
+                    Ok(cmd) => Some(cmd),
+                    Err(mpsc::RecvTimeoutError::Timeout) => None,
+                    Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                }
+            }
+            None => match rx.recv() {
+                Ok(cmd) => Some(cmd),
+                Err(_) => break,
+            },
+        };
+        // §Perf L3: requests arriving while the device executes pile up in
+        // the channel — drain the whole burst into the batcher *before*
+        // cutting, so continuous batching actually coalesces (before this
+        // drain the mean served batch was ~2 at max_batch 8).
+        let mut cuts: Vec<Batch> = Vec::new();
+        let ingest = |cmd: LeaderCmd,
+                          batcher: &mut DynamicBatcher,
+                          waiters: &mut HashMap<
+            u64,
+            mpsc::Sender<InferenceResponse>,
+        >,
+                          cuts: &mut Vec<Batch>,
+                          shutdown: &mut bool| {
+            match cmd {
+                LeaderCmd::Submit(req, reply) => {
+                    waiters.insert(req.id, reply);
+                    if let Some(b) = batcher.push(req, Instant::now()) {
+                        cuts.push(b);
+                    }
+                }
+                LeaderCmd::Shutdown => *shutdown = true,
+            }
+        };
+        match cmd {
+            Some(c) => {
+                ingest(c, &mut batcher, &mut waiters, &mut cuts, &mut shutdown);
+                while let Ok(more) = rx.try_recv() {
+                    ingest(
+                        more,
+                        &mut batcher,
+                        &mut waiters,
+                        &mut cuts,
+                        &mut shutdown,
+                    );
+                }
+            }
+            None => {
+                if let Some(b) = batcher.poll(Instant::now()) {
+                    cuts.push(b);
+                }
+            }
+        }
+        for batch in cuts {
+            dispatch(&tx_dev, batch, &mut waiters, &metrics);
+        }
+        // drain any additional ready batches (e.g. other networks)
+        while let Some(batch) = batcher.poll(Instant::now()) {
+            dispatch(&tx_dev, batch, &mut waiters, &metrics);
+        }
+        if shutdown {
+            break 'outer;
+        }
+    }
+    // flush whatever is still queued, then stop the device
+    let flush_at = Instant::now() + config.max_wait + Duration::from_secs(1);
+    while batcher.queued() > 0 {
+        match batcher.poll(flush_at) {
+            Some(batch) => dispatch(&tx_dev, batch, &mut waiters, &metrics),
+            None => break,
+        }
+    }
+    let _ = tx_dev.send(DeviceCmd::Shutdown);
+}
+
+fn dispatch(
+    tx_dev: &mpsc::Sender<DeviceCmd>,
+    batch: Batch,
+    waiters: &mut HashMap<u64, mpsc::Sender<InferenceResponse>>,
+    metrics: &Arc<Mutex<MetricsRegistry>>,
+) {
+    let ids: Vec<u64> = batch.requests.iter().map(|r| r.id).collect();
+    // on any failure below, drop the waiters so callers observe an error
+    // instead of hanging
+    let fail = |waiters: &mut HashMap<u64, mpsc::Sender<InferenceResponse>>| {
+        for id in &ids {
+            waiters.remove(id);
+        }
+    };
+    let (tx, rx) = mpsc::channel();
+    if tx_dev
+        .send(DeviceCmd::Execute { batch, reply: tx })
+        .is_err()
+    {
+        fail(waiters);
+        return;
+    }
+    match rx.recv() {
+        Ok(Ok(done)) => {
+            let mut m = metrics.lock().unwrap();
+            m.record_batch(
+                done.execute_s,
+                done.responses.iter().map(|r| r.images.shape()[0]).sum(),
+                done.ops,
+            );
+            m.record_energy(done.energy_j);
+            for resp in done.responses {
+                m.record_request(resp.latency_s, resp.images.shape()[0]);
+                if let Some(w) = waiters.remove(&resp.id) {
+                    let _ = w.send(resp);
+                }
+            }
+        }
+        Ok(Err(e)) => {
+            eprintln!("device execution failed: {e:#}");
+            fail(waiters);
+        }
+        Err(_) => {
+            eprintln!("device thread dropped a batch");
+            fail(waiters);
+        }
+    }
+}
+
+/// The device-executor thread: owns the PJRT runtime and all compiled
+/// executables; also carries the FPGA/GPU edge models for annotations.
+fn device_thread(
+    config: CoordinatorConfig,
+    rx: mpsc::Receiver<DeviceCmd>,
+    ready: mpsc::Sender<Result<()>>,
+) {
+    let setup = (|| -> Result<(Runtime, HashMap<String, NetState>)> {
+        let artifacts = ArtifactDir::open(&config.artifacts_dir)?;
+        let runtime = Runtime::cpu()?;
+        let mut nets = HashMap::new();
+        for name in &config.networks {
+            let manifest_net = artifacts.network(name)?;
+            let cfg = artifacts.network_cfg(name)?;
+            // sanity: manifest must agree with the built-in architecture
+            let builtin = network_by_name(name)?;
+            anyhow::ensure!(
+                cfg.layers == builtin.layers,
+                "manifest/{name} diverges from built-in config"
+            );
+            let mut executables = HashMap::new();
+            for &bs in &manifest_net.batch_sizes {
+                executables
+                    .insert(bs, runtime.load_generator(&artifacts, name, bs)?);
+            }
+            let weights = artifacts.load_weights(name)?;
+            let opts: Vec<SimOpts> =
+                cfg.layers.iter().map(|_| SimOpts::dense(cfg.tile)).collect();
+            let sim = simulate_network(&cfg, &PYNQ_Z2, &opts);
+            nets.insert(
+                name.clone(),
+                NetState {
+                    buckets: manifest_net.batch_sizes.clone(),
+                    executables,
+                    weights,
+                    fpga_time_s: sim.total_time_s,
+                    fpga_energy_j: sim.total_time_s * sim.mean_power_w,
+                    cfg,
+                },
+            );
+        }
+        Ok((runtime, nets))
+    })();
+
+    let (_runtime, mut nets) = match setup {
+        Ok(v) => {
+            let _ = ready.send(Ok(()));
+            v
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+
+    let mut gpu_throttle = ThermalThrottle::new(JETSON_TX1);
+    while let Ok(cmd) = rx.recv() {
+        match cmd {
+            DeviceCmd::Shutdown => break,
+            DeviceCmd::Execute { batch, reply } => {
+                let result =
+                    execute_batch(&mut nets, &mut gpu_throttle, batch);
+                let _ = reply.send(result);
+            }
+        }
+    }
+}
+
+fn execute_batch(
+    nets: &mut HashMap<String, NetState>,
+    gpu_throttle: &mut ThermalThrottle,
+    batch: Batch,
+) -> Result<ExecutedBatch> {
+    let state = nets.get_mut(&batch.network).ok_or_else(|| {
+        anyhow::anyhow!("network {:?} not loaded", batch.network)
+    })?;
+
+    // deterministic latents: one RNG per request, in order
+    let mut latents: Vec<f32> =
+        Vec::with_capacity(batch.n_images * state.cfg.z_dim);
+    for req in &batch.requests {
+        let mut rng = Rng::seed_from_u64(req.seed);
+        for _ in 0..req.n_images * state.cfg.z_dim {
+            latents.push(rng.normal_f32());
+        }
+    }
+
+    // bucket execution: smallest exported bucket ≥ remaining, else the
+    // largest repeatedly (vLLM-style bucketed continuous batching)
+    let largest = *state.buckets.iter().max().unwrap();
+    let mut remaining = batch.n_images;
+    let mut offset = 0usize;
+    let mut all_rows: Vec<f32> = Vec::with_capacity(
+        batch.n_images
+            * state.cfg.image_channels
+            * state.cfg.image_size
+            * state.cfg.image_size,
+    );
+    let mut execute_s = 0.0;
+    while remaining > 0 {
+        let bucket = state
+            .buckets
+            .iter()
+            .copied()
+            .filter(|b| *b >= remaining)
+            .min()
+            .unwrap_or(largest);
+        let take = bucket.min(remaining);
+        let exe = state.executables.get(&bucket).unwrap();
+        // pad the bucket with zero latents when partially filled
+        let mut z = vec![0.0f32; bucket * state.cfg.z_dim];
+        z[..take * state.cfg.z_dim].copy_from_slice(
+            &latents
+                [offset * state.cfg.z_dim..(offset + take) * state.cfg.z_dim],
+        );
+        let zt = Tensor::new(vec![bucket, state.cfg.z_dim], z)?;
+        let t0 = Instant::now();
+        let out = exe.generate(&zt, &state.weights)?;
+        execute_s += t0.elapsed().as_secs_f64();
+        let numel = exe.image_numel();
+        all_rows.extend_from_slice(&out.data()[..take * numel]);
+        remaining -= take;
+        offset += take;
+    }
+
+    // edge-device annotations for the whole batch
+    let fpga_time = state.fpga_time_s * batch.n_images as f64;
+    let gpu_time = expected_gpu_network_time(
+        &state.cfg,
+        &JETSON_TX1,
+        gpu_throttle,
+        batch.n_images,
+    );
+    let energy = state.fpga_energy_j * batch.n_images as f64;
+    let ops = state.cfg.total_ops() * batch.n_images as u64;
+
+    // split images back to requests
+    let numel = state.cfg.image_channels
+        * state.cfg.image_size
+        * state.cfg.image_size;
+    let mut responses = Vec::with_capacity(batch.requests.len());
+    let mut row = 0usize;
+    for req in &batch.requests {
+        let n = req.n_images;
+        let data = all_rows[row * numel..(row + n) * numel].to_vec();
+        row += n;
+        responses.push(InferenceResponse {
+            id: req.id,
+            images: Tensor::new(
+                vec![
+                    n,
+                    state.cfg.image_channels,
+                    state.cfg.image_size,
+                    state.cfg.image_size,
+                ],
+                data,
+            )?,
+            latency_s: req.enqueued_at.elapsed().as_secs_f64(),
+            execute_s,
+            batch_size: batch.n_images,
+            fpga_time_s: fpga_time * n as f64 / batch.n_images as f64,
+            gpu_time_s: gpu_time * n as f64 / batch.n_images as f64,
+        });
+    }
+    Ok(ExecutedBatch {
+        responses,
+        execute_s,
+        ops,
+        energy_j: energy,
+    })
+}

@@ -1,0 +1,98 @@
+//! Pure-Rust deconvolution substrate (Section III of the paper).
+//!
+//! Three interchangeable algorithms over the same NCHW tensors:
+//!
+//! * [`standard`] — textbook input-space scatter (Eq. 1), the baseline
+//!   with the overlapping-sum problem;
+//! * [`reverse_loop`] — the paper's output-space Algorithm 1 with
+//!   pre-computed Eq. 3 offsets, tiling, and optional zero-skipping
+//!   (this is what each simulated CU executes);
+//! * [`tdc`] — the deconvolution-to-convolution transform baseline
+//!   (Chang et al.), requiring `stride²` filters and zero padding.
+//!
+//! All three are verified equal (and equal to the Python oracles through
+//! the AOT artifacts) by unit, integration and property tests.  The
+//! [`OpStats`] accounting they emit is what the FPGA cycle model consumes.
+
+mod offsets;
+mod reverse_loop;
+mod standard;
+mod tdc;
+mod tiling;
+
+pub use offsets::{modulo_cost_naive, modulo_cost_precomputed, stride_hole_offsets};
+pub use reverse_loop::{deconv_reverse_loop, OpStats, ReverseLoopOpts};
+pub use standard::deconv_standard;
+pub use tdc::{
+    deconv_tdc, tdc_filter_count, tdc_subfilter_extent, tdc_transform_weights,
+};
+pub use tiling::{input_tile_extent, legal_tiles, TileSchedule};
+
+use crate::config::{DeconvLayerCfg, NetworkCfg};
+use crate::tensor::Tensor;
+
+/// Output spatial extent of a layer: `(I-1)·S + K - 2P`.
+pub fn output_size(i: usize, k: usize, s: usize, p: usize) -> usize {
+    (i - 1) * s + k - 2 * p
+}
+
+/// Convenience: run the reference (standard) algorithm for a layer config.
+pub fn layer_forward_standard(
+    cfg: &DeconvLayerCfg,
+    x: &Tensor,
+    w: &Tensor,
+    b: &[f32],
+) -> Tensor {
+    deconv_standard(x, w, b, cfg.stride, cfg.padding)
+}
+
+/// Full generator forward pass in pure Rust (reverse-loop kernels + ReLU
+/// between layers, tanh at the output) — the numeric cross-check for the
+/// PJRT path and the fallback for artifact-less environments.
+///
+/// `z` is `[N, z_dim]`; returns `[N, C, H, W]`.
+pub fn generator_forward(
+    net: &NetworkCfg,
+    weights: &[(Tensor, Vec<f32>)],
+    z: &Tensor,
+) -> Tensor {
+    assert_eq!(weights.len(), net.layers.len());
+    assert_eq!(z.shape()[1], net.z_dim);
+    let n = z.shape()[0];
+    let mut x = z
+        .clone()
+        .reshape(vec![n, net.z_dim, 1, 1])
+        .expect("z reshape");
+    let last = net.layers.len() - 1;
+    for (i, (layer, (w, b))) in net.layers.iter().zip(weights).enumerate() {
+        let (mut y, _) = deconv_reverse_loop(
+            &x,
+            w,
+            b,
+            layer.stride,
+            layer.padding,
+            ReverseLoopOpts {
+                tile: net.tile,
+                zero_skip: true, // numerics identical; skips the zeros
+            },
+        );
+        for v in y.data_mut().iter_mut() {
+            *v = if i == last { v.tanh() } else { v.max(0.0) };
+        }
+        x = y;
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn output_size_identities() {
+        assert_eq!(output_size(1, 7, 1, 0), 7);
+        assert_eq!(output_size(7, 4, 2, 1), 14);
+        assert_eq!(output_size(14, 4, 2, 1), 28);
+        assert_eq!(output_size(32, 4, 2, 1), 64);
+    }
+}

@@ -1,0 +1,87 @@
+//! Eq. 3 stride-hole offsets and the modulo-operation cost accounting
+//! behind the paper's enhancement (1): "preprocessing modulo arithmetic".
+//!
+//! The offsets `f[k] = mod(S - mod(P - k, S), S)` depend only on the
+//! weight index `k`, so a hardware implementation can pre-compute all `K`
+//! of them per axis (2K modulo ops total) instead of evaluating Eq. 3 for
+//! every output pixel (K² · O_H · O_W / S² evaluations).  Both costs are
+//! modeled here; the `ablations` bench quantifies the gap.
+
+/// Non-negative mathematical modulo (the paper's `mod`).
+#[inline]
+pub fn modulo(a: i64, m: i64) -> i64 {
+    ((a % m) + m) % m
+}
+
+/// Eq. 3: `f[k] = mod(S - mod(P - k, S), S)` for `k = 0..K`.
+pub fn stride_hole_offsets(k: usize, s: usize, p: usize) -> Vec<usize> {
+    (0..k)
+        .map(|kk| {
+            let inner = modulo(p as i64 - kk as i64, s as i64);
+            modulo(s as i64 - inner, s as i64) as usize
+        })
+        .collect()
+}
+
+/// Modulo operations required when Eq. 3 is evaluated *inline* for every
+/// (k_h, k_w, o_h, o_w) visit of Algorithm 1 (2 `mod`s per evaluation,
+/// two axes resolved independently).
+pub fn modulo_cost_naive(k: usize, s: usize, o_h: usize, o_w: usize) -> u64 {
+    let visits_h = (k * o_h).div_ceil(s) as u64;
+    let visits_w = (k * o_w).div_ceil(s) as u64;
+    2 * (visits_h * k as u64 + visits_w * k as u64) + 2 * (visits_h * visits_w)
+}
+
+/// Modulo operations with the paper's pre-computation: 2 per weight index
+/// per axis, i.e. `2K` per layer (K tends to be small, so the offset LUT
+/// costs almost nothing in LUT/BRAM terms).
+pub fn modulo_cost_precomputed(k: usize) -> u64 {
+    2 * k as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn modulo_is_nonnegative() {
+        assert_eq!(modulo(-1, 2), 1);
+        assert_eq!(modulo(-7, 3), 2);
+        assert_eq!(modulo(5, 3), 2);
+        assert_eq!(modulo(0, 4), 0);
+    }
+
+    #[test]
+    fn offsets_match_definition() {
+        // K=4, S=2, P=1 (the paper's workhorse layer shape)
+        assert_eq!(stride_hole_offsets(4, 2, 1), vec![1, 0, 1, 0]);
+        // S=1 degenerates to all zeros (no stride holes)
+        assert_eq!(stride_hole_offsets(7, 1, 0), vec![0; 7]);
+    }
+
+    #[test]
+    fn offsets_make_eq4_divisible() {
+        // (o + P - k) must be divisible by S at o = f[k] — the whole point
+        for s in 1..5usize {
+            for p in 0..4usize {
+                for k in 1..8usize {
+                    let f = stride_hole_offsets(k, s, p);
+                    for (kk, &fk) in f.iter().enumerate() {
+                        assert!(fk < s);
+                        let num = fk as i64 + p as i64 - kk as i64;
+                        assert_eq!(modulo(num, s as i64), 0, "k={kk} s={s} p={p}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn precompute_beats_naive_for_paper_layers() {
+        // K=4, S=2, 32×32 output: inline modulo is thousands of ops,
+        // pre-computation is 8.
+        let naive = modulo_cost_naive(4, 2, 32, 32);
+        let pre = modulo_cost_precomputed(4);
+        assert!(naive > 1000 * pre, "naive={naive} pre={pre}");
+    }
+}

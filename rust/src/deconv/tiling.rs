@@ -1,0 +1,98 @@
+//! Output-space tiling math — Eq. 5 and the tile-enumeration helpers the
+//! design-space exploration (Fig. 5) sweeps over.
+
+/// Eq. 5: input tile extent needed to cover a `T_OH`-wide output tile:
+/// `T_IH = ⌈T_OH / S⌉ + ⌈K / S⌉`.
+pub fn input_tile_extent(t_oh: usize, k: usize, s: usize) -> usize {
+    t_oh.div_ceil(s) + k.div_ceil(s)
+}
+
+/// Square output tile factors that are legal for a network whose largest
+/// layer output is `o_max`: `2 ≤ T ≤ o_max`, and `T ≡ 0 (mod S_max)` so a
+/// tile always covers whole stride classes.
+pub fn legal_tiles(o_max: usize, s_max: usize) -> Vec<usize> {
+    (2..=o_max)
+        .filter(|t| t % s_max == 0)
+        .collect()
+}
+
+/// Static tiling schedule of one layer at one tile factor — how many CU
+/// workloads exist and how big each block transfer is.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TileSchedule {
+    pub t_oh: usize,
+    pub t_ih: usize,
+    /// Output tiles along one spatial axis.
+    pub tiles_per_axis: usize,
+    /// Total output tiles (both axes, one image, one output channel pass).
+    pub tiles_total: usize,
+    /// Bytes of input block fetched per tile per input channel (f32).
+    pub input_block_bytes: usize,
+    /// Bytes of output block written per tile per output channel (f32).
+    pub output_block_bytes: usize,
+}
+
+impl TileSchedule {
+    /// Schedule for a layer with output extent `o_h`, kernel `k`,
+    /// stride `s`, at tile factor `t_oh`.
+    pub fn new(o_h: usize, k: usize, s: usize, t_oh: usize) -> Self {
+        let t = t_oh.min(o_h.max(1)).max(1);
+        let t_ih = input_tile_extent(t, k, s);
+        let tiles_per_axis = o_h.div_ceil(t);
+        TileSchedule {
+            t_oh: t,
+            t_ih,
+            tiles_per_axis,
+            tiles_total: tiles_per_axis * tiles_per_axis,
+            input_block_bytes: 4 * t_ih * t_ih,
+            output_block_bytes: 4 * t * t,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eq5_paper_values() {
+        // K=4, S=2: T_IH = T/2 + 2
+        assert_eq!(input_tile_extent(12, 4, 2), 8);
+        assert_eq!(input_tile_extent(24, 4, 2), 14);
+        // K=7, S=1: T_IH = T + 7
+        assert_eq!(input_tile_extent(12, 7, 1), 19);
+    }
+
+    #[test]
+    fn eq5_monotone_in_tile() {
+        for k in 1..6 {
+            for s in 1..4 {
+                let mut prev = 0;
+                for t in (s..40).step_by(s) {
+                    let cur = input_tile_extent(t, k, s);
+                    assert!(cur >= prev);
+                    prev = cur;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn legal_tiles_respect_stride() {
+        let tiles = legal_tiles(28, 2);
+        assert!(tiles.contains(&12));
+        assert!(tiles.contains(&24));
+        assert!(tiles.iter().all(|t| t % 2 == 0));
+        assert!(!tiles.contains(&13));
+    }
+
+    #[test]
+    fn schedule_covers_output() {
+        let s = TileSchedule::new(28, 4, 2, 12);
+        assert_eq!(s.tiles_per_axis, 3); // 12+12+4
+        assert_eq!(s.tiles_total, 9);
+        let s2 = TileSchedule::new(7, 7, 1, 12);
+        assert_eq!(s2.t_oh, 7); // clamped to layer output
+        assert_eq!(s2.tiles_per_axis, 1);
+    }
+}

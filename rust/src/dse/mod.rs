@@ -1,0 +1,11 @@
+//! Design-space exploration (Section V-A, Fig. 5) using the roofline
+//! methodology of Zhang et al. (FPGA'15): enumerate legal square output
+//! tiling factors, compute each design's computation-to-communication
+//! (CTC) ratio and attainable throughput, discard designs that demand
+//! more bandwidth than the platform sustains (left of the peak-bandwidth
+//! slope) or that do not fit the fabric, and pick the throughput-optimal
+//! survivor as the network's unified `T_OH`.
+
+mod roofline;
+
+pub use roofline::{explore, optimal_tile, DesignPoint};

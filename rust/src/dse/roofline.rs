@@ -1,0 +1,174 @@
+//! Roofline evaluation of tiling design points (Zhang et al., FPGA'15,
+//! as applied in the paper's Section V-A).
+
+use crate::config::{FpgaBoard, NetworkCfg};
+use crate::deconv::input_tile_extent;
+use crate::fpga::{estimate_resources, CuModel, CuWorkload, Utilization};
+
+/// One candidate design (a square output tiling factor for the whole
+/// network — the paper optimizes `T_OH` globally across layers).
+#[derive(Debug, Clone, Copy)]
+pub struct DesignPoint {
+    pub tile: usize,
+    /// Computation-to-communication ratio, ops per DDR byte.
+    pub ctc: f64,
+    /// Compute roof at this design's CU occupancy/efficiency, GOps/s.
+    pub comp_roof_gops: f64,
+    /// `min(comp_roof, CTC × BW)` — the attainable throughput, GOps/s.
+    pub attainable_gops: f64,
+    /// Bandwidth needed to sustain the compute roof, bytes/s.
+    pub bw_required: f64,
+    /// Fabric legality (Table I model).
+    pub utilization: Utilization,
+    pub fits_resources: bool,
+    /// `true` when the design is compute-bound (attainable == compute
+    /// roof).  `false` means the point sits *left of the peak-bandwidth
+    /// slope* in the Fig. 5 sense: it would need more DDR bandwidth than
+    /// STREAM sustains, so its attainable throughput is clamped to
+    /// `CTC × BW`.
+    pub bandwidth_feasible: bool,
+}
+
+/// External-memory traffic of one full-network inference at tile `t`
+/// (same accounting as the pipeline simulator: per tile-batch input
+/// blocks + per-CU weight streams + one-shot outputs).
+fn network_traffic_bytes(net: &NetworkCfg, board: &FpgaBoard, t: usize) -> u64 {
+    let mut bytes = 0u64;
+    for l in &net.layers {
+        let o = l.o_h();
+        let te = t.min(o).max(1);
+        let t_i = input_tile_extent(te, l.k, l.stride);
+        let tiles = o.div_ceil(te).pow(2);
+        let workloads = tiles * l.c_out;
+        let batches = workloads.div_ceil(board.n_cu) as u64;
+        let tiles_per_batch =
+            (board.n_cu / l.c_out.min(board.n_cu)).clamp(1, tiles) as u64;
+        let input_block = 4 * (l.c_in * t_i * t_i) as u64;
+        let weights_per_batch =
+            4 * (l.c_in * l.k * l.k) as u64 * l.c_out.min(board.n_cu) as u64;
+        bytes += batches * (input_block * tiles_per_batch + weights_per_batch);
+        bytes += l.output_bytes();
+    }
+    bytes
+}
+
+/// Aggregate compute roof of the network at tile `t`: total ops divided
+/// by the time the CU array needs with every batch's occupancy and
+/// per-workload overheads accounted.
+fn compute_roof_gops(net: &NetworkCfg, board: &FpgaBoard, t: usize) -> f64 {
+    let cu = CuModel::from_board(board);
+    let mut total_ops = 0u64;
+    let mut total_cycles = 0u64;
+    for l in &net.layers {
+        let o = l.o_h();
+        let te = t.min(o).max(1);
+        let tiles = o.div_ceil(te).pow(2);
+        let workloads = tiles * l.c_out;
+        let batches = workloads.div_ceil(board.n_cu) as u64;
+        let wl = CuWorkload {
+            c_in: l.c_in,
+            taps: l.k * l.k,
+            macs_per_tap: te.div_ceil(l.stride).pow(2),
+            tile_elems: te * te,
+        };
+        total_cycles += batches * cu.dense_cycles(&wl);
+        total_ops += l.ops();
+    }
+    let time_s = total_cycles as f64 / board.clock_hz;
+    total_ops as f64 / time_s / 1e9
+}
+
+/// Evaluate every legal square tile factor for a network on a board.
+pub fn explore(net: &NetworkCfg, board: &FpgaBoard) -> Vec<DesignPoint> {
+    let s_max = net.layers.iter().map(|l| l.stride).max().unwrap_or(1);
+    let o_max = net.layers.iter().map(|l| l.o_h()).max().unwrap_or(2);
+    let total_ops: u64 = net.layers.iter().map(|l| l.ops()).sum();
+
+    crate::deconv::legal_tiles(o_max, s_max)
+        .into_iter()
+        .map(|t| {
+            let traffic = network_traffic_bytes(net, board, t);
+            let ctc = total_ops as f64 / traffic as f64;
+            let comp_roof = compute_roof_gops(net, board, t);
+            let bw_roof = ctc * board.stream_bw_bytes / 1e9;
+            let attainable = comp_roof.min(bw_roof);
+            let bw_required = comp_roof * 1e9 / ctc;
+            let utilization = estimate_resources(net, t, board.n_cu);
+            DesignPoint {
+                tile: t,
+                ctc,
+                comp_roof_gops: comp_roof,
+                attainable_gops: attainable,
+                bw_required,
+                utilization,
+                fits_resources: utilization.fits(board),
+                bandwidth_feasible: bw_required <= board.stream_bw_bytes,
+            }
+        })
+        .collect()
+}
+
+/// The paper's selection rule: maximize attainable throughput among
+/// designs that fit the fabric and sit at/right of the bandwidth slope;
+/// break ties toward higher CTC (less DDR pressure), then smaller tile
+/// (more spatial parallelism headroom).
+pub fn optimal_tile(points: &[DesignPoint]) -> Option<&DesignPoint> {
+    points
+        .iter()
+        .filter(|p| p.fits_resources)
+        .max_by(|a, b| {
+            let key_a = (a.attainable_gops, a.ctc, -(a.tile as f64));
+            let key_b = (b.attainable_gops, b.ctc, -(b.tile as f64));
+            key_a.partial_cmp(&key_b).unwrap()
+        })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{celeba, mnist, PYNQ_Z2};
+
+    #[test]
+    fn explore_produces_legal_points() {
+        let pts = explore(&mnist(), &PYNQ_Z2);
+        assert!(!pts.is_empty());
+        for p in &pts {
+            assert!(p.ctc > 0.0);
+            assert!(p.attainable_gops > 0.0);
+            assert!(p.attainable_gops <= p.comp_roof_gops + 1e-9);
+            assert!(p.attainable_gops <= PYNQ_Z2.peak_gops() + 1e-9);
+        }
+    }
+
+    #[test]
+    fn attainable_capped_by_bandwidth_when_infeasible() {
+        for net in [mnist(), celeba()] {
+            for p in explore(&net, &PYNQ_Z2) {
+                if !p.bandwidth_feasible {
+                    let bw_roof = p.ctc * PYNQ_Z2.stream_bw_bytes / 1e9;
+                    assert!((p.attainable_gops - bw_roof).abs() < 1e-9);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn optimal_exists_and_fits() {
+        for net in [mnist(), celeba()] {
+            let pts = explore(&net, &PYNQ_Z2);
+            let best = optimal_tile(&pts).expect("an optimum must exist");
+            assert!(best.fits_resources);
+            assert!(best.utilization.dsp <= PYNQ_Z2.dsp_total);
+        }
+    }
+
+    #[test]
+    fn ctc_grows_with_tile_overall() {
+        // larger tiles refetch fewer input halos → CTC at the largest
+        // legal tile exceeds CTC at the smallest
+        let pts = explore(&celeba(), &PYNQ_Z2);
+        let first = pts.first().unwrap();
+        let last = pts.last().unwrap();
+        assert!(last.ctc > first.ctc);
+    }
+}

@@ -1,0 +1,169 @@
+//! Ablations of the paper's three Section III enhancements — DESIGN.md
+//! calls these out as the design choices worth quantifying:
+//!
+//! 1. pre-computed Eq. 3 offsets vs inline modulo arithmetic,
+//! 2. weight-stationary loop order + zero-skipping vs no skipping,
+//! 3. decoupled sequential DDR access vs serialized random access,
+//! 4. reverse-loop vs the TDC (stride² filters) transform overhead.
+
+use crate::config::{network_by_name, FpgaBoard};
+use crate::deconv::{
+    modulo_cost_naive, modulo_cost_precomputed, tdc_filter_count,
+    tdc_subfilter_extent,
+};
+use crate::fpga::{simulate_network, SimOpts};
+use anyhow::Result;
+
+/// One ablation result: the enhancement on vs off.
+#[derive(Debug, Clone)]
+pub struct AblationRow {
+    pub name: String,
+    pub network: String,
+    /// Metric with the enhancement enabled (lower is better for the
+    /// *_cost rows, time rows in seconds).
+    pub with_enh: f64,
+    /// Metric with the enhancement disabled.
+    pub without_enh: f64,
+    pub unit: &'static str,
+}
+
+impl AblationRow {
+    pub fn factor(&self) -> f64 {
+        self.without_enh / self.with_enh.max(1e-18)
+    }
+}
+
+/// Run all ablations for one network.
+pub fn run_ablations(
+    network: &str,
+    board: &FpgaBoard,
+    sparsity: f64,
+) -> Result<Vec<AblationRow>> {
+    let net = network_by_name(network)?;
+    let mut rows = Vec::new();
+
+    // (1) modulo pre-computation (op counts over the whole network)
+    let pre: u64 = net
+        .layers
+        .iter()
+        .map(|l| modulo_cost_precomputed(l.k))
+        .sum();
+    let naive: u64 = net
+        .layers
+        .iter()
+        .map(|l| modulo_cost_naive(l.k, l.stride, l.o_h(), l.o_h()))
+        .sum();
+    rows.push(AblationRow {
+        name: "eq3-offset-precompute".into(),
+        network: network.into(),
+        with_enh: pre as f64,
+        without_enh: naive as f64,
+        unit: "modulo ops",
+    });
+
+    // (2) zero-skipping at the given sparsity
+    let dense: Vec<SimOpts> =
+        net.layers.iter().map(|_| SimOpts::dense(net.tile)).collect();
+    let skipping: Vec<SimOpts> = net
+        .layers
+        .iter()
+        .map(|_| SimOpts {
+            tile: net.tile,
+            zero_skip: true,
+            weight_sparsity: sparsity,
+            decouple: true,
+        })
+        .collect();
+    let t_dense = simulate_network(&net, board, &dense).total_time_s;
+    let t_skip = simulate_network(&net, board, &skipping).total_time_s;
+    rows.push(AblationRow {
+        name: format!("zero-skipping@{sparsity:.0e}"),
+        network: network.into(),
+        with_enh: t_skip,
+        without_enh: t_dense,
+        unit: "s/inference",
+    });
+
+    // (3) decoupled external memory access
+    let coupled: Vec<SimOpts> = net
+        .layers
+        .iter()
+        .map(|_| SimOpts {
+            decouple: false,
+            ..SimOpts::dense(net.tile)
+        })
+        .collect();
+    let t_coupled = simulate_network(&net, board, &coupled).total_time_s;
+    rows.push(AblationRow {
+        name: "decoupled-ddr-access".into(),
+        network: network.into(),
+        with_enh: t_dense,
+        without_enh: t_coupled,
+        unit: "s/inference",
+    });
+
+    // (4) TDC transform overhead: extra taps materialized by stride²
+    // sub-filter zero padding, vs the reverse-loop's exact tap count
+    let mut exact = 0u64;
+    let mut tdc = 0u64;
+    for l in &net.layers {
+        exact += l.macs();
+        let kc = tdc_subfilter_extent(l.k, l.stride);
+        tdc += (l.c_in * l.c_out) as u64
+            * (tdc_filter_count(l.stride) * kc * kc) as u64
+            * (l.o_h() as u64 / l.stride.max(1) as u64).pow(2);
+    }
+    rows.push(AblationRow {
+        name: "reverse-loop-vs-tdc".into(),
+        network: network.into(),
+        with_enh: exact as f64,
+        without_enh: tdc as f64,
+        unit: "MACs",
+    });
+
+    Ok(rows)
+}
+
+/// Render as a table.
+pub fn render(rows: &[AblationRow]) -> String {
+    let mut s = format!(
+        "{:<26} {:>14} {:>14} {:>8}  unit\n",
+        "ablation", "with", "without", "factor"
+    );
+    for r in rows {
+        s.push_str(&format!(
+            "{:<26} {:>14.6} {:>14.6} {:>7.2}x  {}\n",
+            r.name,
+            r.with_enh,
+            r.without_enh,
+            r.factor(),
+            r.unit
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PYNQ_Z2;
+
+    #[test]
+    fn all_enhancements_help() {
+        for net in ["mnist", "celeba"] {
+            let rows = run_ablations(net, &PYNQ_Z2, 0.8).unwrap();
+            assert_eq!(rows.len(), 4);
+            for r in &rows {
+                assert!(
+                    r.factor() >= 1.0,
+                    "{}: enhancement must not hurt ({} vs {})",
+                    r.name,
+                    r.with_enh,
+                    r.without_enh
+                );
+            }
+            // modulo precompute is the dramatic one
+            assert!(rows[0].factor() > 100.0);
+        }
+    }
+}

@@ -1,0 +1,209 @@
+//! Fig. 6 — the sparsity study: (a) FPGA speed-up from zero-skipping as
+//! weights are magnitude-pruned, (b) MMD degradation of the generated
+//! distribution, (c) the Eq. 6 trade-off metric and its peak.
+//!
+//! Latency comes from the FPGA pipeline simulator with zero-skipping at
+//! each level's *achieved* per-layer sparsity; generative quality comes
+//! from actually running the pruned generator (PJRT artifact path, or the
+//! pure-Rust reverse-loop forward as a numerics-identical fallback) and
+//! measuring MMD against the ground-truth corpus batch.
+
+use crate::artifacts::ArtifactDir;
+use crate::config::{network_by_name, FpgaBoard};
+use crate::deconv::generator_forward;
+use crate::fpga::{simulate_network, SimOpts};
+use crate::runtime::Runtime;
+use crate::sparsity::{
+    magnitude_prune_network, mmd_biased, peak_index, tradeoff_curve, Mmd,
+    TradeoffPoint,
+};
+use crate::tensor::Tensor;
+use crate::util::Rng;
+use anyhow::{ensure, Result};
+
+/// The Fig. 6 dataset for one network.
+#[derive(Debug, Clone)]
+pub struct Fig6Data {
+    pub network: String,
+    pub sparsities: Vec<f64>,
+    /// Fig. 6a inputs: simulated FPGA latency per inference.
+    pub latencies_s: Vec<f64>,
+    /// Fig. 6b: MMD(P_g, P_θp).
+    pub mmds: Vec<f64>,
+    /// Fig. 6c: the Eq. 6 curve.
+    pub curve: Vec<TradeoffPoint>,
+    /// Sparsity at the Eq. 6 peak.
+    pub peak_sparsity: f64,
+}
+
+/// Common driver; `gen` produces images from a pruned weight set.
+fn run_fig6_impl<F>(
+    network: &str,
+    board: &FpgaBoard,
+    artifacts: &ArtifactDir,
+    levels: &[f64],
+    n_samples: usize,
+    seed: u64,
+    mut gen: F,
+) -> Result<Fig6Data>
+where
+    F: FnMut(&[(Tensor, Vec<f32>)], &Tensor) -> Result<Tensor>,
+{
+    ensure!(!levels.is_empty(), "need at least one sparsity level");
+    ensure!(levels[0] == 0.0, "first level must be the dense baseline");
+    let net = network_by_name(network)?;
+    let dense_weights = artifacts.load_weights(network)?;
+    let truth = artifacts.load_truth(network)?;
+    let d = net.image_channels * net.image_size * net.image_size;
+    let n_truth = truth.shape()[0].min(n_samples);
+    let truth_flat = &truth.data()[..n_truth * d];
+    let mmd_cfg = Mmd::with_median_bandwidth(truth_flat, d);
+
+    // fixed latent set across sparsity levels (paired comparison)
+    let mut rng = Rng::seed_from_u64(seed);
+    let z =
+        Tensor::from_fn(vec![n_samples, net.z_dim], |_| rng.normal_f32());
+
+    let mut sparsities = Vec::with_capacity(levels.len());
+    let mut latencies = Vec::with_capacity(levels.len());
+    let mut mmds = Vec::with_capacity(levels.len());
+    for &level in levels {
+        let mut weights = dense_weights.clone();
+        let per_layer = magnitude_prune_network(&mut weights, level);
+        let mean_sparsity =
+            per_layer.iter().sum::<f64>() / per_layer.len() as f64;
+
+        // Fig. 6a: zero-skipping FPGA latency at the achieved sparsity
+        let opts: Vec<SimOpts> = net
+            .layers
+            .iter()
+            .zip(&per_layer)
+            .map(|(_, &s)| SimOpts {
+                tile: net.tile,
+                zero_skip: true,
+                weight_sparsity: s,
+                decouple: true,
+            })
+            .collect();
+        let sim = simulate_network(&net, board, &opts);
+
+        // Fig. 6b: distribution quality of the pruned generator
+        let images = gen(&weights, &z)?;
+        let gen_flat = &images.data()[..n_samples * d];
+        let mmd = mmd_biased(gen_flat, truth_flat, d, &mmd_cfg);
+
+        sparsities.push(mean_sparsity);
+        latencies.push(sim.total_time_s);
+        mmds.push(mmd);
+    }
+
+    let curve = tradeoff_curve(&sparsities, &latencies, &mmds);
+    let peak = peak_index(&curve);
+    Ok(Fig6Data {
+        network: network.to_string(),
+        peak_sparsity: curve[peak].sparsity,
+        sparsities,
+        latencies_s: latencies,
+        mmds,
+        curve,
+    })
+}
+
+/// Fig. 6 with the pure-Rust generator forward (no PJRT needed; identical
+/// numerics to the artifact, asserted by integration tests).
+pub fn run_fig6(
+    network: &str,
+    board: &FpgaBoard,
+    artifacts: &ArtifactDir,
+    levels: &[f64],
+    n_samples: usize,
+    seed: u64,
+) -> Result<Fig6Data> {
+    let net = network_by_name(network)?;
+    run_fig6_impl(
+        network, board, artifacts, levels, n_samples, seed,
+        move |weights, z| Ok(generator_forward(&net, weights, z)),
+    )
+}
+
+/// Fig. 6 with the real AOT artifact executed through PJRT — the full
+/// three-layer path (the pruned weights are fed as HLO parameters).
+pub fn run_fig6_with_runtime(
+    network: &str,
+    board: &FpgaBoard,
+    artifacts: &ArtifactDir,
+    runtime: &Runtime,
+    levels: &[f64],
+    n_samples: usize,
+    seed: u64,
+) -> Result<Fig6Data> {
+    let exe = runtime.load_generator(artifacts, network, n_samples)?;
+    let bucket = exe.batch;
+    run_fig6_impl(
+        network, board, artifacts, levels, n_samples, seed,
+        move |weights, z| {
+            // run the fixed latent set through the bucketed executable
+            let n = z.shape()[0];
+            let z_dim = z.shape()[1];
+            let mut rows: Vec<f32> = Vec::new();
+            let mut shape = None;
+            let mut i = 0;
+            while i < n {
+                let take = bucket.min(n - i);
+                let mut zb = vec![0.0f32; bucket * z_dim];
+                zb[..take * z_dim]
+                    .copy_from_slice(&z.data()[i * z_dim..(i + take) * z_dim]);
+                let zt = Tensor::new(vec![bucket, z_dim], zb)?;
+                let out = exe.generate(&zt, weights)?;
+                let numel: usize = out.shape()[1..].iter().product();
+                rows.extend_from_slice(&out.data()[..take * numel]);
+                shape = Some(out.shape()[1..].to_vec());
+                i += take;
+            }
+            let s = shape.unwrap();
+            Tensor::new(vec![n, s[0], s[1], s[2]], rows)
+        },
+    )
+}
+
+/// Render the three panels as data tables.
+pub fn render(data: &Fig6Data) -> String {
+    let mut s = format!(
+        "{}: Eq.6 peak at sparsity {:.2}\n\
+         {:>9} {:>12} {:>10} {:>10} {:>10} {:>10}\n",
+        data.network,
+        data.peak_sparsity,
+        "sparsity",
+        "latency ms",
+        "speedup",
+        "MMD",
+        "quality",
+        "Eq6",
+    );
+    for p in &data.curve {
+        s.push_str(&format!(
+            "{:>9.2} {:>12.3} {:>10.2} {:>10.4} {:>10.3} {:>10.3}{}\n",
+            p.sparsity,
+            p.latency_s * 1e3,
+            p.speedup,
+            p.mmd,
+            p.quality,
+            p.score,
+            if (p.sparsity - data.peak_sparsity).abs() < 1e-9 {
+                "  <== peak"
+            } else {
+                ""
+            },
+        ));
+    }
+    s
+}
+
+/// The default sparsity grid used by the CLI/benches (matches the
+/// paper's 0→extreme sweep; the far tail is where generative quality
+/// collapses and the Eq. 6 curve turns over).
+pub fn default_levels() -> Vec<f64> {
+    vec![
+        0.0, 0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9, 0.95, 0.98, 0.99,
+    ]
+}

@@ -1,0 +1,19 @@
+//! Experiment drivers — one per paper table/figure (see DESIGN.md
+//! per-experiment index).  Each driver returns structured data *and*
+//! renders the paper's presentation, so the CLI, the examples, and the
+//! criterion benches all share one implementation.
+
+mod ablations;
+mod fig5;
+mod fig6;
+mod table1;
+mod table2;
+
+pub use ablations::{render as render_ablations, run_ablations, AblationRow};
+pub use fig5::{render as render_fig5, run_fig5, Fig5Data};
+pub use fig6::{
+    default_levels, render as render_fig6, run_fig6, run_fig6_with_runtime,
+    Fig6Data,
+};
+pub use table1::{render as render_table1, run_table1, Table1Row};
+pub use table2::{render as render_table2, run_table2, DeviceRows, Table2Data};

@@ -1,0 +1,80 @@
+//! Table I — PYNQ-Z2 resource utilization at the DSE-chosen tiling
+//! factors.
+
+use crate::config::{network_by_name, FpgaBoard};
+use crate::fpga::{estimate_resources, Utilization};
+use anyhow::Result;
+
+/// One Table I row.
+#[derive(Debug, Clone)]
+pub struct Table1Row {
+    pub network: String,
+    pub t_oh: usize,
+    pub utilization: Utilization,
+    pub fits: bool,
+}
+
+/// Regenerate Table I for both networks (paper values in comments:
+/// MNIST 12/134/50/43218/36469, CelebA 24/134/74/48938/40923).
+pub fn run_table1(board: &FpgaBoard) -> Result<Vec<Table1Row>> {
+    let mut rows = Vec::new();
+    for name in ["mnist", "celeba"] {
+        let net = network_by_name(name)?;
+        let u = estimate_resources(&net, net.tile, board.n_cu);
+        rows.push(Table1Row {
+            network: name.to_string(),
+            t_oh: net.tile,
+            utilization: u,
+            fits: u.fits(board),
+        });
+    }
+    Ok(rows)
+}
+
+/// Render in the paper's format.
+pub fn render(rows: &[Table1Row]) -> String {
+    let mut s = String::from(
+        "          T_OH   DSP48s   BRAMs   Flip-Flops     LUTs   fits\n",
+    );
+    for r in rows {
+        s.push_str(&format!(
+            "{:<8} {:>5} {:>8} {:>7} {:>12} {:>8}   {}\n",
+            r.network,
+            r.t_oh,
+            r.utilization.dsp,
+            r.utilization.bram18,
+            r.utilization.ff,
+            r.utilization.lut,
+            if r.fits { "yes" } else { "NO" },
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PYNQ_Z2;
+
+    #[test]
+    fn both_rows_fit_the_board() {
+        let rows = run_table1(&PYNQ_Z2).unwrap();
+        assert_eq!(rows.len(), 2);
+        assert!(rows.iter().all(|r| r.fits));
+        assert_eq!(rows[0].t_oh, 12);
+        assert_eq!(rows[1].t_oh, 24);
+        // paper's DSP figure is tile-independent
+        assert_eq!(rows[0].utilization.dsp, 134);
+        assert_eq!(rows[1].utilization.dsp, 134);
+    }
+
+    #[test]
+    fn render_shows_all_columns() {
+        let rows = run_table1(&PYNQ_Z2).unwrap();
+        let s = render(&rows);
+        assert!(s.contains("DSP48s"));
+        assert!(s.contains("mnist"));
+        assert!(s.contains("celeba"));
+        assert!(s.contains("134"));
+    }
+}

@@ -1,0 +1,96 @@
+//! AXI/DDR external-memory model — stage (1) and (3) of the pipeline.
+//!
+//! The paper's enhancement (3) restricts external accesses to *sequential*
+//! bursts (pixel addresses are precomputed, data is fetched in order and
+//! cached in BRAM).  The model therefore charges: a fixed burst-setup
+//! latency per transfer plus bytes/width cycles at the sustainable DDR
+//! bandwidth, with a penalty multiplier for non-sequential access
+//! patterns (used only by the ablation that disables enhancement 3).
+
+use crate::config::FpgaBoard;
+
+/// External memory channel model.
+#[derive(Debug, Clone, Copy)]
+pub struct AxiModel {
+    /// Bytes transferred per PL cycle at the sustainable rate.
+    pub bytes_per_cycle: f64,
+    /// Fixed cycles to set up one burst transfer (address phase + DDR
+    /// latency; ~30 PL cycles ≈ 240 ns at 125 MHz).
+    pub burst_setup_cycles: u64,
+    /// Maximum burst length in bytes (AXI4 256-beat × 8-byte beats).
+    pub max_burst_bytes: u64,
+    /// Throughput de-rating for non-sequential (random) accesses —
+    /// row-activation thrash; DDR3 random ≈ 4-8× worse than streaming.
+    pub random_penalty: f64,
+}
+
+impl AxiModel {
+    /// Derive from a board description: sustainable bandwidth divided by
+    /// the PL clock.
+    pub fn from_board(board: &FpgaBoard) -> Self {
+        AxiModel {
+            bytes_per_cycle: board.stream_bw_bytes / board.clock_hz,
+            burst_setup_cycles: 30,
+            max_burst_bytes: 2048,
+            random_penalty: 6.0,
+        }
+    }
+
+    /// Cycles to move `bytes` sequentially (burst-decomposed).
+    pub fn sequential_cycles(&self, bytes: u64) -> u64 {
+        if bytes == 0 {
+            return 0;
+        }
+        let bursts = bytes.div_ceil(self.max_burst_bytes);
+        bursts * self.burst_setup_cycles
+            + (bytes as f64 / self.bytes_per_cycle).ceil() as u64
+    }
+
+    /// Cycles to move `bytes` with a random access pattern (ablation of
+    /// enhancement 3: every word pays setup + de-rated bandwidth).
+    pub fn random_cycles(&self, bytes: u64) -> u64 {
+        if bytes == 0 {
+            return 0;
+        }
+        let words = bytes.div_ceil(4);
+        words * 4 // one DDR transaction overhead amortized per word
+            + (bytes as f64 * self.random_penalty / self.bytes_per_cycle)
+                .ceil() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PYNQ_Z2;
+
+    #[test]
+    fn bandwidth_derivation() {
+        let axi = AxiModel::from_board(&PYNQ_Z2);
+        // 1.05 GB/s / 125 MHz = 8.4 B/cycle
+        assert!((axi.bytes_per_cycle - 8.4).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_bytes_zero_cycles() {
+        let axi = AxiModel::from_board(&PYNQ_Z2);
+        assert_eq!(axi.sequential_cycles(0), 0);
+        assert_eq!(axi.random_cycles(0), 0);
+    }
+
+    #[test]
+    fn sequential_scales_linearly() {
+        let axi = AxiModel::from_board(&PYNQ_Z2);
+        let c1 = axi.sequential_cycles(4096);
+        let c2 = axi.sequential_cycles(8192);
+        assert!(c2 > c1);
+        assert!(c2 < 3 * c1, "roughly linear");
+    }
+
+    #[test]
+    fn random_much_slower_than_sequential() {
+        let axi = AxiModel::from_board(&PYNQ_Z2);
+        let bytes = 64 * 1024;
+        assert!(axi.random_cycles(bytes) > 4 * axi.sequential_cycles(bytes));
+    }
+}

@@ -1,0 +1,142 @@
+//! Compute-unit cycle model — stage (2) of the pipeline.
+//!
+//! Each CU executes Algorithm 1 for one `(output tile, output channel)`
+//! workload: loop over input channels, then the weight taps (weight-
+//! stationary, enhancement 2), issuing `(T/S)²` MACs per tap across its
+//! DSP lanes.  Zero-skipping replaces a tap's MACs with a single weight
+//! test cycle (the conditional-execution paradigm of Section V-C).
+
+use crate::config::FpgaBoard;
+
+/// One CU workload: a `T_OH × T_OW` output block for one output channel.
+#[derive(Debug, Clone, Copy)]
+pub struct CuWorkload {
+    /// Input channels accumulated (I_C loop trips).
+    pub c_in: usize,
+    /// Weight taps per input channel (K²).
+    pub taps: usize,
+    /// Output positions per tap within the tile (`⌈T/S⌉²` for interior
+    /// tiles; smaller at the fringe).
+    pub macs_per_tap: usize,
+    /// Output tile elements (bias init + final stream-out).
+    pub tile_elems: usize,
+}
+
+/// CU timing parameters derived from the board.
+#[derive(Debug, Clone, Copy)]
+pub struct CuModel {
+    /// Parallel MAC lanes per CU (DSP48s doing multiply-accumulate).
+    pub lanes: usize,
+    /// Pipeline fill overhead per workload (loop prologue, cycles).
+    pub workload_overhead: u64,
+    /// Per-input-channel overhead (BRAM block swap, cycles).
+    pub per_channel_overhead: u64,
+}
+
+impl CuModel {
+    pub fn from_board(board: &FpgaBoard) -> Self {
+        CuModel {
+            lanes: board.macs_per_cu_cycle,
+            workload_overhead: 12,
+            per_channel_overhead: 4,
+        }
+    }
+
+    /// Cycles for one dense (no skipping) workload.
+    pub fn dense_cycles(&self, w: &CuWorkload) -> u64 {
+        let init = (w.tile_elems as u64).div_ceil(self.lanes as u64);
+        let per_tap = (w.macs_per_tap as u64).div_ceil(self.lanes as u64);
+        self.workload_overhead
+            + init
+            + w.c_in as u64
+                * (self.per_channel_overhead
+                    + w.taps as u64 * per_tap)
+    }
+
+    /// Cycles with zero-skipping: a fraction `zero_frac` of weight taps is
+    /// zero and costs one test cycle instead of its MACs.  (Taps are
+    /// weight-scalar granular, matching the per-`(i_c, k_h, k_w)` test in
+    /// the CU inner loop.)
+    pub fn zero_skip_cycles(&self, w: &CuWorkload, zero_frac: f64) -> u64 {
+        assert!((0.0..=1.0).contains(&zero_frac), "bad zero fraction");
+        let init = (w.tile_elems as u64).div_ceil(self.lanes as u64);
+        let per_tap = (w.macs_per_tap as u64).div_ceil(self.lanes as u64);
+        let taps_total = (w.c_in * w.taps) as f64;
+        let dense_taps = (taps_total * (1.0 - zero_frac)).round() as u64;
+        let skipped_taps = taps_total as u64 - dense_taps;
+        self.workload_overhead
+            + init
+            + w.c_in as u64 * self.per_channel_overhead
+            + dense_taps * (per_tap + 1) // 1 test cycle + MACs
+            + skipped_taps // test-only cycles
+    }
+
+    /// MACs issued by one dense workload.
+    pub fn dense_macs(&self, w: &CuWorkload) -> u64 {
+        (w.c_in * w.taps * w.macs_per_tap) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PYNQ_Z2;
+
+    fn wl() -> CuWorkload {
+        CuWorkload {
+            c_in: 64,
+            taps: 16,
+            macs_per_tap: 36, // T=12, S=2 → 6×6
+            tile_elems: 144,
+        }
+    }
+
+    #[test]
+    fn dense_cycles_track_macs() {
+        let cu = CuModel::from_board(&PYNQ_Z2);
+        let w = wl();
+        let cycles = cu.dense_cycles(&w);
+        // 64 × 16 taps × ceil(36/8)=5 cycles = 5120 + overheads
+        assert!(cycles >= 5120);
+        assert!(cycles < 5120 + 1000);
+    }
+
+    #[test]
+    fn full_skip_is_much_cheaper() {
+        let cu = CuModel::from_board(&PYNQ_Z2);
+        let w = wl();
+        let dense = cu.zero_skip_cycles(&w, 0.0);
+        let empty = cu.zero_skip_cycles(&w, 1.0);
+        assert!(empty * 3 < dense, "dense={dense} empty={empty}");
+    }
+
+    #[test]
+    fn skip_cycles_monotone_in_sparsity() {
+        let cu = CuModel::from_board(&PYNQ_Z2);
+        let w = wl();
+        let mut prev = u64::MAX;
+        for i in 0..=10 {
+            let z = i as f64 / 10.0;
+            let c = cu.zero_skip_cycles(&w, z);
+            assert!(c <= prev, "not monotone at z={z}");
+            prev = c;
+        }
+    }
+
+    #[test]
+    fn zero_skip_at_zero_close_to_dense_plus_tests() {
+        let cu = CuModel::from_board(&PYNQ_Z2);
+        let w = wl();
+        let dense = cu.dense_cycles(&w);
+        let skip0 = cu.zero_skip_cycles(&w, 0.0);
+        // skipping machinery adds exactly one test cycle per tap
+        assert_eq!(skip0, dense + (w.c_in * w.taps) as u64);
+    }
+
+    #[test]
+    #[should_panic]
+    fn invalid_sparsity_panics() {
+        let cu = CuModel::from_board(&PYNQ_Z2);
+        cu.zero_skip_cycles(&wl(), 1.5);
+    }
+}

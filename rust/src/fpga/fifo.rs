@@ -1,0 +1,102 @@
+//! On-chip FIFO model — the streaming links between the AXI read blocks
+//! and the CU array (Fig. 3).  Used by the pipeline model for stall
+//! accounting and by tests as a plain bounded queue.
+
+/// Bounded single-producer/single-consumer FIFO with occupancy stats.
+#[derive(Debug, Clone)]
+pub struct Fifo<T> {
+    depth: usize,
+    buf: std::collections::VecDeque<T>,
+    /// Producer stalls observed (push attempted while full).
+    pub stalls_full: u64,
+    /// Consumer stalls observed (pop attempted while empty).
+    pub stalls_empty: u64,
+    /// High-water mark of occupancy.
+    pub high_water: usize,
+}
+
+impl<T> Fifo<T> {
+    pub fn new(depth: usize) -> Self {
+        assert!(depth > 0, "FIFO depth must be positive");
+        Fifo {
+            depth,
+            buf: std::collections::VecDeque::with_capacity(depth),
+            stalls_full: 0,
+            stalls_empty: 0,
+            high_water: 0,
+        }
+    }
+
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.buf.len() == self.depth
+    }
+
+    /// Try to push; records a stall and returns the item back when full.
+    pub fn push(&mut self, item: T) -> Result<(), T> {
+        if self.is_full() {
+            self.stalls_full += 1;
+            return Err(item);
+        }
+        self.buf.push_back(item);
+        self.high_water = self.high_water.max(self.buf.len());
+        Ok(())
+    }
+
+    /// Try to pop; records a stall when empty.
+    pub fn pop(&mut self) -> Option<T> {
+        match self.buf.pop_front() {
+            Some(v) => Some(v),
+            None => {
+                self.stalls_empty += 1;
+                None
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_order_and_bounds() {
+        let mut f = Fifo::new(2);
+        assert!(f.push(1).is_ok());
+        assert!(f.push(2).is_ok());
+        assert!(f.push(3).is_err());
+        assert_eq!(f.stalls_full, 1);
+        assert_eq!(f.pop(), Some(1));
+        assert_eq!(f.pop(), Some(2));
+        assert_eq!(f.pop(), None);
+        assert_eq!(f.stalls_empty, 1);
+    }
+
+    #[test]
+    fn high_water_tracks_peak() {
+        let mut f = Fifo::new(4);
+        for i in 0..3 {
+            f.push(i).unwrap();
+        }
+        f.pop();
+        f.pop();
+        assert_eq!(f.high_water, 3);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_depth_rejected() {
+        let _ = Fifo::<u8>::new(0);
+    }
+}

@@ -1,0 +1,30 @@
+//! Cycle-level simulator of the paper's FPGA accelerator (Section IV).
+//!
+//! The accelerator is a SIMD array of replicated compute units fed by a
+//! three-stage pipeline: (1) dedicated AXI read blocks stream input and
+//! weight tiles from DDR into on-chip FIFOs/BRAM, (2) the CU array
+//! executes Algorithm 1 workloads over `T_OH × T_OW` output blocks, and
+//! (3) a write block streams finished blocks back to DDR one-shot.
+//!
+//! The simulator counts cycles per stage from the same [`crate::deconv`]
+//! op accounting the numeric substrate emits, overlaps the stages the way
+//! the pipelined hardware does (limited by the slowest stage, plus
+//! fill/drain), applies the resource model for Table I / DSE legality,
+//! and integrates the power model for the GOps/s/W denominators.
+
+mod axi;
+mod cu;
+mod fifo;
+mod pipeline;
+mod power;
+mod resources;
+
+pub use axi::AxiModel;
+pub use cu::{CuModel, CuWorkload};
+pub use fifo::Fifo;
+pub use pipeline::{
+    measured_run, measurement_rng, simulate_layer, simulate_network,
+    LayerSim, NetworkSim, SimOpts,
+};
+pub use power::PowerModel;
+pub use resources::{estimate_resources, Utilization};

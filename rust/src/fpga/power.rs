@@ -1,0 +1,61 @@
+//! FPGA power model.  The PYNQ-Z2 draws a near-constant board power: a
+//! static floor (PS + idle PL) plus dynamic power proportional to switch
+//! activity (DSP toggling, BRAM ports, AXI traffic).  The paper measures
+//! this with a USB power meter; we integrate the same quantity from the
+//! simulated activity factors.
+
+use crate::config::FpgaBoard;
+
+#[derive(Debug, Clone, Copy)]
+pub struct PowerModel {
+    static_w: f64,
+    dynamic_w: f64,
+}
+
+impl PowerModel {
+    pub fn from_board(board: &FpgaBoard) -> Self {
+        PowerModel {
+            static_w: board.static_power_w,
+            dynamic_w: board.dynamic_power_w,
+        }
+    }
+
+    /// Average power for a layer: the CU array toggles at
+    /// `occupancy × compute_duty`, memory machinery at a fixed share.
+    ///
+    /// * `occupancy` — fraction of CUs with work (C_out starvation).
+    /// * `compute_duty` — fraction of cycles the compute stage is active.
+    pub fn layer_power(&self, occupancy: f64, compute_duty: f64) -> f64 {
+        debug_assert!((0.0..=1.0).contains(&occupancy));
+        let duty = compute_duty.clamp(0.0, 1.0);
+        // 70% of dynamic power is the CU/DSP array, 30% memory movement
+        self.static_w + self.dynamic_w * (0.7 * occupancy * duty + 0.3)
+    }
+
+    /// Idle board power.
+    pub fn idle(&self) -> f64 {
+        self.static_w
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PYNQ_Z2;
+
+    #[test]
+    fn power_bounded_by_board_limits() {
+        let pm = PowerModel::from_board(&PYNQ_Z2);
+        let full = pm.layer_power(1.0, 1.0);
+        let idle = pm.layer_power(0.0, 0.0);
+        assert!(full <= PYNQ_Z2.max_power_w() + 1e-9);
+        assert!(idle >= PYNQ_Z2.static_power_w);
+        assert!(full > idle);
+    }
+
+    #[test]
+    fn starved_array_draws_less() {
+        let pm = PowerModel::from_board(&PYNQ_Z2);
+        assert!(pm.layer_power(3.0 / 16.0, 0.9) < pm.layer_power(1.0, 0.9));
+    }
+}

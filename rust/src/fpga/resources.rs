@@ -1,0 +1,149 @@
+//! Analytical resource model — Table I and the DSE legality check.
+//!
+//! The model mirrors how the HLS design consumes the Zynq-7020 fabric:
+//!
+//! * **DSP48** — `8 per CU` (MAC lanes) + 6 for address generation and
+//!   the offset pre-computation unit.  Independent of `T_OH`, which is
+//!   why both Table I rows report 134.
+//! * **BRAM18** — per-CU double-buffered input tile (`T_IH²`, Eq. 5, at
+//!   the network's worst-case layer) and output tile (`T_OH²`) ping-pong
+//!   buffers, plus a fixed infrastructure pool (AXI DMA staging, weight
+//!   FIFOs, offset LUT).
+//! * **FF/LUT** — linear in the CU count with a `T_OH`-dependent term
+//!   (wider address counters, deeper line buffers).  Coefficients are
+//!   calibrated against the paper's Vivado reports (Table I) and
+//!   documented below; the *scaling laws* are what the DSE consumes.
+//!
+//! Calibration quality (documented, also asserted in tests):
+//! MNIST row reproduced exactly (134/50/43218/36469 → model
+//! 134/50/43218/36469); CelebA row within 11% on BRAM (66 vs 74) and
+//! <0.1% on FF/LUT.  The BRAM gap is Vivado packing slack the linear
+//! model does not capture; see EXPERIMENTS.md §Table I.
+
+use crate::config::{FpgaBoard, NetworkCfg};
+use crate::deconv::input_tile_extent;
+
+/// Bytes per BRAM18 block (18 Kbit).
+const BRAM18_BYTES: usize = 2304;
+/// DSP48 MAC lanes per CU.
+const DSP_PER_CU: usize = 8;
+/// DSPs for address generation + offset precompute unit.
+const DSP_INFRA: usize = 6;
+/// BRAM18 blocks for AXI DMA staging, weight FIFOs and the offset LUT.
+const BRAM_INFRA: usize = 18;
+/// FF cost: per CU / per unit of T_OH / fixed control.
+const FF_PER_CU: usize = 2000;
+const FF_PER_T: usize = 477;
+const FF_BASE: usize = 5494;
+/// LUT cost: per CU / per unit of T_OH / fixed control.
+const LUT_PER_CU: usize = 1700;
+const LUT_PER_T: usize = 371;
+const LUT_BASE: usize = 4817;
+
+/// Estimated fabric utilization of the accelerator at one design point.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Utilization {
+    pub dsp: usize,
+    pub bram18: usize,
+    pub ff: usize,
+    pub lut: usize,
+}
+
+impl Utilization {
+    /// Does the design fit the device?
+    pub fn fits(&self, board: &FpgaBoard) -> bool {
+        self.dsp <= board.dsp_total
+            && self.bram18 <= board.bram18_total
+            && self.ff <= board.ff_total
+            && self.lut <= board.lut_total
+    }
+}
+
+/// Estimate resources for `n_cu` CUs at output tile factor `t_oh` for a
+/// network (the worst-case layer sizes the buffers, since the accelerator
+/// multiplexes all layers through one configuration).
+pub fn estimate_resources(
+    net: &NetworkCfg,
+    t_oh: usize,
+    n_cu: usize,
+) -> Utilization {
+    // worst-case input tile across layers (Eq. 5 with each layer's K, S)
+    let t_i_max = net
+        .layers
+        .iter()
+        .map(|l| input_tile_extent(t_oh.min(l.o_h()).max(1), l.k, l.stride))
+        .max()
+        .unwrap_or(1);
+    let t_eff = net
+        .layers
+        .iter()
+        .map(|l| t_oh.min(l.o_h()).max(1))
+        .max()
+        .unwrap_or(t_oh);
+
+    // input tile single-buffered (sequential stream-in), output tile
+    // ping-pong double-buffered so the one-shot write overlaps the next
+    // tile's compute (stage 3 of the pipeline)
+    let in_buf = (4 * t_i_max * t_i_max).div_ceil(BRAM18_BYTES);
+    let out_buf = (2 * 4 * t_eff * t_eff).div_ceil(BRAM18_BYTES);
+    let bram = BRAM_INFRA + n_cu * (in_buf + out_buf);
+
+    Utilization {
+        dsp: n_cu * DSP_PER_CU + DSP_INFRA,
+        bram18: bram,
+        ff: FF_BASE + n_cu * FF_PER_CU + FF_PER_T * t_eff,
+        lut: LUT_BASE + n_cu * LUT_PER_CU + LUT_PER_T * t_eff,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{celeba, mnist, PYNQ_Z2};
+
+    #[test]
+    fn table1_mnist_row_exact() {
+        let u = estimate_resources(&mnist(), 12, 16);
+        assert_eq!(u.dsp, 134);
+        assert_eq!(u.bram18, 50);
+        assert_eq!(u.ff, 43218);
+        assert_eq!(u.lut, 36469);
+        assert!(u.fits(&PYNQ_Z2));
+    }
+
+    #[test]
+    fn table1_celeba_row_close() {
+        let u = estimate_resources(&celeba(), 24, 16);
+        assert_eq!(u.dsp, 134);
+        // paper: 74 — linear model lands at 66 (11% under; see module doc)
+        assert!((u.bram18 as i64 - 74).unsigned_abs() <= 10, "bram={}", u.bram18);
+        assert!((u.ff as i64 - 48938).unsigned_abs() <= 200, "ff={}", u.ff);
+        assert!((u.lut as i64 - 40923).unsigned_abs() <= 200, "lut={}", u.lut);
+        assert!(u.fits(&PYNQ_Z2));
+    }
+
+    #[test]
+    fn dsp_independent_of_tile() {
+        let a = estimate_resources(&mnist(), 4, 16);
+        let b = estimate_resources(&mnist(), 24, 16);
+        assert_eq!(a.dsp, b.dsp);
+    }
+
+    #[test]
+    fn bram_monotone_in_tile() {
+        let net = celeba();
+        let mut prev = 0;
+        for t in [4, 8, 16, 24, 32, 48, 64] {
+            let u = estimate_resources(&net, t, 16);
+            assert!(u.bram18 >= prev, "bram must grow with T");
+            prev = u.bram18;
+        }
+    }
+
+    #[test]
+    fn oversized_design_does_not_fit() {
+        // 64 CUs blows the DSP budget of the -7020
+        let u = estimate_resources(&mnist(), 12, 64);
+        assert!(!u.fits(&PYNQ_Z2));
+    }
+}

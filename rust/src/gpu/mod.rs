@@ -1,0 +1,18 @@
+//! Jetson TX1 edge-GPU baseline model (Section V-B).
+//!
+//! The paper's GPU story has two parts: (a) mean per-layer GOps/s/W from
+//! Torch+cuDNN-style execution, and (b) *large run-to-run variation*
+//! caused by the GPU's time-varying optimizations and thermal throttling
+//! ("reducing clock frequency to lower power and cool the chip").  Both
+//! are modeled here: an analytical kernel-timing model (launch overhead +
+//! roofline of compute and memory) driven by a DVFS thermal state
+//! machine, with nvprof-style measurement noise.
+
+mod model;
+mod throttle;
+
+pub use model::{
+    expected_gpu_network_time, expected_time_s, simulate_gpu_layer,
+    simulate_gpu_network, GpuLayerRun, GpuRunOpts,
+};
+pub use throttle::ThermalThrottle;

@@ -1,0 +1,101 @@
+//! DVFS thermal-throttling state machine for the TX1 model.
+//!
+//! A leaky-integrator die temperature rises with dissipated power and
+//! relaxes toward ambient; when it crosses the throttle threshold the
+//! governor steps the clock down (and back up once cool).  This is the
+//! mechanism the paper cites (via the Jetson Linux Developer Guide) for
+//! the GPU's run-to-run variance: two identical runs land at different
+//! points of the heat-up/cool-down cycle and see different clocks.
+
+use crate::config::GpuBoard;
+
+/// Thermal + DVFS state, advanced per simulated kernel execution.
+#[derive(Debug, Clone)]
+pub struct ThermalThrottle {
+    /// Die temperature above ambient, °C.
+    pub temp_c: f64,
+    /// Current core clock, Hz.
+    pub clock_hz: f64,
+    board: GpuBoard,
+    /// Temperature rise per joule dissipated (°C/J).
+    heat_per_joule: f64,
+    /// Exponential cooling time constant, seconds.
+    cool_tau_s: f64,
+    /// Throttle engage threshold (°C above ambient).
+    hot_c: f64,
+    /// Throttle release threshold.
+    cool_c: f64,
+}
+
+impl ThermalThrottle {
+    pub fn new(board: GpuBoard) -> Self {
+        ThermalThrottle {
+            temp_c: 0.0,
+            clock_hz: board.boost_clock_hz,
+            board,
+            // TX1 module: ~3 J heats the small die+plate ≈ 1 °C
+            heat_per_joule: 0.35,
+            cool_tau_s: 12.0,
+            hot_c: 28.0,  // ≈ 25 °C ambient + 28 → 53 °C soft limit
+            cool_c: 22.0,
+        }
+    }
+
+    /// Advance the state by one kernel execution dissipating
+    /// `power_w × dt_s` joules, then applying `idle_s` of cooling.
+    pub fn step(&mut self, power_w: f64, dt_s: f64, idle_s: f64) {
+        self.temp_c += power_w * dt_s * self.heat_per_joule;
+        let total = dt_s + idle_s;
+        self.temp_c *= (-total / self.cool_tau_s).exp();
+        if self.temp_c >= self.hot_c {
+            self.clock_hz = self.board.throttle_clock_hz;
+        } else if self.temp_c <= self.cool_c {
+            self.clock_hz = self.board.boost_clock_hz;
+        }
+        // between thresholds: hysteresis keeps the previous clock
+    }
+
+    /// Is the governor currently throttling?
+    pub fn throttled(&self) -> bool {
+        self.clock_hz < self.board.boost_clock_hz
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::JETSON_TX1;
+
+    #[test]
+    fn starts_cool_at_boost() {
+        let t = ThermalThrottle::new(JETSON_TX1);
+        assert!(!t.throttled());
+        assert_eq!(t.clock_hz, JETSON_TX1.boost_clock_hz);
+    }
+
+    #[test]
+    fn sustained_load_throttles_then_recovers() {
+        let mut t = ThermalThrottle::new(JETSON_TX1);
+        // hammer: 11 W for 3 s chunks, no idle
+        let mut throttled_seen = false;
+        for _ in 0..40 {
+            t.step(11.0, 3.0, 0.0);
+            throttled_seen |= t.throttled();
+        }
+        assert!(throttled_seen, "sustained load must throttle");
+        // long idle cools it back down
+        for _ in 0..20 {
+            t.step(0.0, 0.0, 10.0);
+        }
+        assert!(!t.throttled(), "cooldown must restore boost clock");
+    }
+
+    #[test]
+    fn hysteresis_holds_between_thresholds() {
+        let mut t = ThermalThrottle::new(JETSON_TX1);
+        t.temp_c = 25.0; // between cool (22) and hot (28)
+        t.clock_hz = JETSON_TX1.throttle_clock_hz;
+        t.step(0.0, 0.0, 1e-9); // negligible change
+        assert!(t.throttled(), "hysteresis must keep throttled clock");
+    }
+}

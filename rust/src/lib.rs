@@ -1,0 +1,36 @@
+//! # edgedcnn
+//!
+//! Reproduction of *"A Competitive Edge: Can FPGAs Beat GPUs at DCNN
+//! Inference Acceleration in Resource-Limited Edge Computing
+//! Applications?"* (Colbert, Daly, Kreutz-Delgado, Das — 2021) as a
+//! three-layer Rust + JAX + Pallas stack.
+//!
+//! Layer map:
+//! * **L1/L2 (build time)** — `python/compile/` authors the reverse-loop
+//!   deconvolution Pallas kernel and the WGAN-GP DCNN generators, and
+//!   AOT-lowers them to HLO text artifacts (`make artifacts`).
+//! * **L3 (this crate)** — the runtime system: a PJRT CPU client executes
+//!   the artifacts for real numerics, while cycle-level simulators of the
+//!   paper's PYNQ-Z2 accelerator ([`fpga`]) and the Jetson TX1 baseline
+//!   ([`gpu`]) supply the timing/power evaluation, orchestrated by an
+//!   edge-serving coordinator ([`coordinator`]) and regenerated per paper
+//!   table/figure by [`experiments`].
+//!
+//! See `DESIGN.md` for the full system inventory and the per-experiment
+//! index, and `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod artifacts;
+pub mod config;
+pub mod coordinator;
+pub mod deconv;
+pub mod dse;
+pub mod experiments;
+pub mod fpga;
+pub mod gpu;
+pub mod runtime;
+pub mod sparsity;
+pub mod stats;
+pub mod tensor;
+pub mod util;
+
+pub use anyhow::{Context, Result};

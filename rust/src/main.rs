@@ -1,0 +1,249 @@
+//! `edgedcnn` — CLI for the reproduction: regenerate every paper table
+//! and figure, run the edge-serving coordinator, and inspect the
+//! networks/ablations.  Run `edgedcnn help` for usage.
+//!
+//! (Arg parsing is hand-rolled: the offline build environment mirrors
+//! only the `xla` dependency closure — no clap.)
+
+use anyhow::{bail, Result};
+use edgedcnn::artifacts::ArtifactDir;
+use edgedcnn::config::{network_by_name, JETSON_TX1, PYNQ_Z2};
+use edgedcnn::coordinator::{
+    BatcherConfig, Coordinator, CoordinatorConfig, WorkloadSpec,
+};
+use edgedcnn::experiments as exp;
+use edgedcnn::runtime::Runtime;
+use std::collections::HashMap;
+use std::time::Duration;
+
+const USAGE: &str = "\
+edgedcnn — FPGA-vs-GPU DCNN inference study (Colbert et al. 2021)
+           three-layer Rust + JAX + Pallas reproduction
+
+USAGE: edgedcnn [--artifacts DIR] <command> [options]
+
+COMMANDS:
+  table1                     Table I  — resource utilization at T_OH*
+  table2    [--runs N] [--seed S]
+                             Table II — GOps/s/W mean(σ), FPGA vs GPU
+  dse                        Fig. 5   — design-space exploration
+  sparsity  [--network NET] [--samples N] [--seed S] [--pjrt]
+                             Fig. 6   — pruning: speed-up / MMD / Eq. 6
+  ablations [--sparsity F]   Section III enhancements on vs off
+  networks                   Fig. 4 architectures and op counts
+  serve     [--network NET] [--requests N] [--images K]
+            [--interarrival-ms MS] [--seed S]
+                             drive the edge-serving coordinator (PJRT)
+  all       [--runs N]       every table/figure in sequence
+  help                       this text
+";
+
+/// Tiny flag parser: `--key value` pairs after the subcommand.
+struct Flags(HashMap<String, String>);
+
+impl Flags {
+    fn parse(args: &[String]) -> Result<Flags> {
+        let mut map = HashMap::new();
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if let Some(key) = a.strip_prefix("--") {
+                // boolean flags have no value or are followed by a flag
+                if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                    map.insert(key.to_string(), args[i + 1].clone());
+                    i += 2;
+                } else {
+                    map.insert(key.to_string(), "true".to_string());
+                    i += 1;
+                }
+            } else {
+                bail!("unexpected argument {a:?} (see `edgedcnn help`)");
+            }
+        }
+        Ok(Flags(map))
+    }
+
+    fn get<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.0.get(key) {
+            None => Ok(default),
+            Some(raw) => raw
+                .parse::<T>()
+                .map_err(|_| anyhow::anyhow!("bad value for --{key}: {raw}")),
+        }
+    }
+
+    fn get_str(&self, key: &str, default: &str) -> String {
+        self.0
+            .get(key)
+            .cloned()
+            .unwrap_or_else(|| default.to_string())
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.0.contains_key(key)
+    }
+}
+
+fn main() -> Result<()> {
+    let mut args: Vec<String> = std::env::args().skip(1).collect();
+    // global --artifacts flag may precede the subcommand
+    let mut artifacts_dir = std::path::PathBuf::from("artifacts");
+    if args.first().map(|a| a == "--artifacts").unwrap_or(false) {
+        if args.len() < 2 {
+            bail!("--artifacts needs a directory");
+        }
+        artifacts_dir = args[1].clone().into();
+        args.drain(0..2);
+    }
+    let Some(cmd) = args.first().cloned() else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+    let flags = Flags::parse(&args[1..])?;
+
+    match cmd.as_str() {
+        "table1" => {
+            print!("{}", exp::render_table1(&exp::run_table1(&PYNQ_Z2)?));
+        }
+        "table2" => {
+            let runs = flags.get("runs", 50usize)?;
+            let seed = flags.get("seed", 42u64)?;
+            for net in ["mnist", "celeba"] {
+                let d =
+                    exp::run_table2(net, &PYNQ_Z2, &JETSON_TX1, runs, seed)?;
+                println!("{}", exp::render_table2(&d));
+            }
+        }
+        "dse" => {
+            for net in ["mnist", "celeba"] {
+                println!("{}", exp::render_fig5(&exp::run_fig5(net, &PYNQ_Z2)?));
+            }
+        }
+        "sparsity" => {
+            let network = flags.get_str("network", "mnist");
+            let samples = flags.get("samples", 64usize)?;
+            let seed = flags.get("seed", 7u64)?;
+            let artifacts = ArtifactDir::open(&artifacts_dir)?;
+            let levels = exp::default_levels();
+            let data = if flags.has("pjrt") {
+                let runtime = Runtime::cpu()?;
+                exp::run_fig6_with_runtime(
+                    &network, &PYNQ_Z2, &artifacts, &runtime, &levels,
+                    samples, seed,
+                )?
+            } else {
+                exp::run_fig6(
+                    &network, &PYNQ_Z2, &artifacts, &levels, samples, seed,
+                )?
+            };
+            print!("{}", exp::render_fig6(&data));
+        }
+        "ablations" => {
+            let sparsity = flags.get("sparsity", 0.8f64)?;
+            for net in ["mnist", "celeba"] {
+                println!("== {net} ==");
+                print!(
+                    "{}",
+                    exp::render_ablations(&exp::run_ablations(
+                        net, &PYNQ_Z2, sparsity
+                    )?)
+                );
+            }
+        }
+        "networks" => {
+            for name in ["mnist", "celeba"] {
+                let net = network_by_name(name)?;
+                println!(
+                    "{name}: z={} tile={} params={} total {:.2} MOps",
+                    net.z_dim,
+                    net.tile,
+                    net.total_params(),
+                    net.total_ops() as f64 / 1e6
+                );
+                for (i, l) in net.layers.iter().enumerate() {
+                    println!(
+                        "  L{}: {}x{}x{} -> {}x{}x{}  K={} S={} P={}  \
+                         {:.2} MOps",
+                        i + 1,
+                        l.c_in,
+                        l.i_h,
+                        l.i_h,
+                        l.c_out,
+                        l.o_h(),
+                        l.o_h(),
+                        l.k,
+                        l.stride,
+                        l.padding,
+                        l.ops() as f64 / 1e6
+                    );
+                }
+            }
+        }
+        "serve" => {
+            let network = flags.get_str("network", "mnist");
+            let requests = flags.get("requests", 64usize)?;
+            let images = flags.get("images", 2usize)?;
+            let interarrival_ms = flags.get("interarrival-ms", 2.0f64)?;
+            let seed = flags.get("seed", 42u64)?;
+            let coord = Coordinator::start(CoordinatorConfig {
+                artifacts_dir,
+                networks: vec![network.clone()],
+                batcher: BatcherConfig::default(),
+            })?;
+            let report = coord.serve_workload(&WorkloadSpec {
+                network,
+                requests,
+                images_per_request: images,
+                interarrival: Duration::from_secs_f64(interarrival_ms / 1e3),
+                seed,
+            })?;
+            println!("{}", report.render());
+        }
+        "all" => {
+            let runs = flags.get("runs", 50usize)?;
+            println!("== Table I ==");
+            print!("{}", exp::render_table1(&exp::run_table1(&PYNQ_Z2)?));
+            println!("\n== Table II ==");
+            for net in ["mnist", "celeba"] {
+                let d = exp::run_table2(net, &PYNQ_Z2, &JETSON_TX1, runs, 42)?;
+                println!("{}", exp::render_table2(&d));
+            }
+            println!("== Fig. 5 ==");
+            for net in ["mnist", "celeba"] {
+                println!("{}", exp::render_fig5(&exp::run_fig5(net, &PYNQ_Z2)?));
+            }
+            match ArtifactDir::open(&artifacts_dir) {
+                Ok(artifacts) => {
+                    println!("== Fig. 6 ==");
+                    for net in ["mnist", "celeba"] {
+                        let d = exp::run_fig6(
+                            net,
+                            &PYNQ_Z2,
+                            &artifacts,
+                            &exp::default_levels(),
+                            32,
+                            7,
+                        )?;
+                        print!("{}", exp::render_fig6(&d));
+                    }
+                }
+                Err(_) => {
+                    println!("(skipping Fig. 6 — run `make artifacts`)");
+                }
+            }
+            println!("\n== Ablations ==");
+            for net in ["mnist", "celeba"] {
+                println!("-- {net} --");
+                print!(
+                    "{}",
+                    exp::render_ablations(&exp::run_ablations(
+                        net, &PYNQ_Z2, 0.8
+                    )?)
+                );
+            }
+        }
+        "help" | "--help" | "-h" => print!("{USAGE}"),
+        other => bail!("unknown command {other:?} (see `edgedcnn help`)"),
+    }
+    Ok(())
+}

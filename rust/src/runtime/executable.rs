@@ -1,0 +1,92 @@
+//! Compiled-executable wrappers: a generic loaded HLO module and the
+//! generator-specific convenience layer (z + weights → images).
+
+use crate::tensor::Tensor;
+use anyhow::{ensure, Result};
+
+/// A compiled PJRT executable (1-tuple output convention — every AOT
+/// artifact is lowered with `return_tuple=True`).
+pub struct LoadedHlo {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl LoadedHlo {
+    pub(crate) fn new(exe: xla::PjRtLoadedExecutable) -> Self {
+        LoadedHlo { exe }
+    }
+
+    /// Execute with literal inputs; returns the unwrapped first tuple
+    /// element as raw f32 data.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<f32>> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow::anyhow!("executing: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetching result: {e:?}"))?;
+        let out = result
+            .to_tuple1()
+            .map_err(|e| anyhow::anyhow!("unwrapping tuple: {e:?}"))?;
+        out.to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("reading f32 output: {e:?}"))
+    }
+
+    /// Execute and shape the output into a [`Tensor`].
+    pub fn run_to_tensor(
+        &self,
+        inputs: &[xla::Literal],
+        out_shape: Vec<usize>,
+    ) -> Result<Tensor> {
+        let data = self.run(inputs)?;
+        Tensor::new(out_shape, data)
+    }
+}
+
+/// A generator artifact bound to its metadata: executes
+/// `(z, w0, b0, w1, b1, …) → images` per the manifest's `param_order`.
+pub struct GeneratorExecutable {
+    pub(crate) hlo: LoadedHlo,
+    pub batch: usize,
+    pub z_dim: usize,
+    pub image_channels: usize,
+    pub image_size: usize,
+    pub network: String,
+}
+
+impl GeneratorExecutable {
+    /// Generate a batch of images from latent `z` (`[batch, z_dim]`) and
+    /// a weight set `[(w, bias)]` (dense or pruned).
+    pub fn generate(
+        &self,
+        z: &Tensor,
+        weights: &[(Tensor, Vec<f32>)],
+    ) -> Result<Tensor> {
+        ensure!(
+            z.shape() == [self.batch, self.z_dim],
+            "z shape {:?} != [{}, {}]",
+            z.shape(),
+            self.batch,
+            self.z_dim
+        );
+        let mut literals = Vec::with_capacity(1 + 2 * weights.len());
+        literals.push(super::tensor_to_literal(z)?);
+        for (w, b) in weights {
+            literals.push(super::tensor_to_literal(w)?);
+            literals.push(super::data_to_literal(b, &[b.len()])?);
+        }
+        self.hlo.run_to_tensor(
+            &literals,
+            vec![
+                self.batch,
+                self.image_channels,
+                self.image_size,
+                self.image_size,
+            ],
+        )
+    }
+
+    /// Output elements per generated batch.
+    pub fn image_numel(&self) -> usize {
+        self.image_channels * self.image_size * self.image_size
+    }
+}

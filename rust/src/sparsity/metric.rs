@@ -1,0 +1,115 @@
+//! The paper's Eq. 6 design metric: `(d₀/d_p) × (t₀/t_p)` — the product
+//! of the *quality retention* rate (MMD of the dense model over MMD of
+//! the pruned model) and the *speed-up* rate (dense latency over pruned
+//! latency).  Speed-up grows with sparsity while quality retention
+//! shrinks, so the product is concave with an interior peak: the sparsity
+//! level that balances image quality against execution time.
+
+/// One point of the Fig. 6 trade-off curve.
+#[derive(Debug, Clone, Copy)]
+pub struct TradeoffPoint {
+    pub sparsity: f64,
+    /// System latency at this sparsity (zero-skipping FPGA), seconds.
+    pub latency_s: f64,
+    /// MMD distance to the ground-truth distribution.
+    pub mmd: f64,
+    /// FPGA speed-up `t₀ / t_p` (Fig. 6a).
+    pub speedup: f64,
+    /// Quality retention `d₀ / d_p` (reciprocal of Fig. 6b growth).
+    pub quality: f64,
+    /// Eq. 6 score.
+    pub score: f64,
+}
+
+/// Eq. 6 for a single (t_p, d_p) pair against the dense baseline
+/// (t₀, d₀).
+pub fn tradeoff_score(t0: f64, d0: f64, tp: f64, dp: f64) -> f64 {
+    assert!(t0 > 0.0 && tp > 0.0, "latencies must be positive");
+    assert!(d0 >= 0.0 && dp >= 0.0, "distances must be non-negative");
+    let dp = dp.max(1e-12);
+    let d0 = d0.max(1e-12);
+    (d0 / dp) * (t0 / tp)
+}
+
+/// Build the full trade-off curve from aligned sparsity/latency/MMD
+/// series. The first entry is taken as the dense baseline (sparsity 0).
+pub fn tradeoff_curve(
+    sparsities: &[f64],
+    latencies: &[f64],
+    mmds: &[f64],
+) -> Vec<TradeoffPoint> {
+    assert_eq!(sparsities.len(), latencies.len());
+    assert_eq!(sparsities.len(), mmds.len());
+    assert!(!sparsities.is_empty());
+    let t0 = latencies[0];
+    let d0 = mmds[0].max(1e-12);
+    sparsities
+        .iter()
+        .zip(latencies)
+        .zip(mmds)
+        .map(|((&s, &t), &d)| {
+            let d = d.max(1e-12);
+            TradeoffPoint {
+                sparsity: s,
+                latency_s: t,
+                mmd: d,
+                speedup: t0 / t,
+                quality: d0 / d,
+                score: tradeoff_score(t0, d0, t, d),
+            }
+        })
+        .collect()
+}
+
+/// Index of the Eq. 6 peak (the balanced sparsity level).
+pub fn peak_index(curve: &[TradeoffPoint]) -> usize {
+    curve
+        .iter()
+        .enumerate()
+        .max_by(|(_, a), (_, b)| a.score.partial_cmp(&b.score).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn baseline_score_is_one() {
+        assert!((tradeoff_score(2.0, 0.5, 2.0, 0.5) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn faster_same_quality_scores_higher() {
+        assert!(tradeoff_score(2.0, 0.5, 1.0, 0.5) > 1.0);
+    }
+
+    #[test]
+    fn worse_quality_same_speed_scores_lower() {
+        assert!(tradeoff_score(2.0, 0.5, 2.0, 1.0) < 1.0);
+    }
+
+    #[test]
+    fn synthetic_concave_curve_has_interior_peak() {
+        // latency improves linearly; quality degrades slowly then sharply
+        // (the empirical Fig. 6b shape) → interior peak
+        let sparsities: Vec<f64> = (0..10).map(|i| i as f64 * 0.1).collect();
+        let latencies: Vec<f64> =
+            sparsities.iter().map(|s| 1.0 - 0.7 * s).collect();
+        let mmds: Vec<f64> = sparsities
+            .iter()
+            .map(|s| 0.1 * (1.0 + (3.0 * s).powi(4) * 0.1))
+            .collect();
+        let curve = tradeoff_curve(&sparsities, &latencies, &mmds);
+        let peak = peak_index(&curve);
+        assert!(peak > 0 && peak < curve.len() - 1, "peak={peak}");
+        assert!((curve[0].score - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_latency_rejected() {
+        tradeoff_score(0.0, 1.0, 1.0, 1.0);
+    }
+}

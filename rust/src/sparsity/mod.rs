@@ -1,0 +1,11 @@
+//! Sparsity experiments substrate (Section V-C, Fig. 6): magnitude
+//! pruning, the Maximum Mean Discrepancy quality metric, and the paper's
+//! Eq. 6 latency/quality trade-off score.
+
+mod metric;
+mod mmd;
+mod prune;
+
+pub use metric::{peak_index, tradeoff_curve, tradeoff_score, TradeoffPoint};
+pub use mmd::{mmd_biased, mmd_unbiased, median_heuristic_bandwidth, Mmd};
+pub use prune::{magnitude_prune, magnitude_prune_network, prune_threshold};

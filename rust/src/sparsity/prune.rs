@@ -1,0 +1,124 @@
+//! Magnitude-based weight pruning (Han et al., 2015), as the paper
+//! applies it: zero the smallest-|w| fraction of each layer's weights.
+
+use crate::tensor::Tensor;
+
+/// |w| threshold below which a fraction `frac` of the weights falls.
+/// (`frac` = 0 → 0.0 threshold; `frac` = 1 → +∞-ish, everything pruned.)
+pub fn prune_threshold(weights: &[f32], frac: f64) -> f32 {
+    assert!((0.0..=1.0).contains(&frac), "fraction out of range");
+    if weights.is_empty() || frac == 0.0 {
+        return 0.0;
+    }
+    let mut mags: Vec<f32> = weights.iter().map(|w| w.abs()).collect();
+    mags.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let k = ((weights.len() as f64) * frac).round() as usize;
+    if k == 0 {
+        0.0
+    } else if k >= mags.len() {
+        f32::INFINITY
+    } else {
+        mags[k - 1]
+    }
+}
+
+/// Prune one weight tensor in place to the target sparsity; returns the
+/// achieved zero fraction.
+pub fn magnitude_prune(w: &mut Tensor, frac: f64) -> f64 {
+    let thr = prune_threshold(w.data(), frac);
+    if frac > 0.0 {
+        for v in w.data_mut().iter_mut() {
+            if v.abs() <= thr {
+                *v = 0.0;
+            }
+        }
+    }
+    w.zero_fraction()
+}
+
+/// Prune every layer of a network's weight set (biases untouched, as in
+/// the paper); returns per-layer achieved sparsity.
+pub fn magnitude_prune_network(
+    weights: &mut [(Tensor, Vec<f32>)],
+    frac: f64,
+) -> Vec<f64> {
+    weights
+        .iter_mut()
+        .map(|(w, _b)| magnitude_prune(w, frac))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn threshold_selects_fraction() {
+        let w = [0.1f32, -0.2, 0.3, -0.4, 0.5, -0.6, 0.7, -0.8, 0.9, -1.0];
+        let thr = prune_threshold(&w, 0.3);
+        let below = w.iter().filter(|v| v.abs() <= thr).count();
+        assert_eq!(below, 3);
+    }
+
+    #[test]
+    fn prune_zero_keeps_everything() {
+        let mut t = Tensor::from_fn(vec![4, 4], |i| (i as f32) - 8.0);
+        let before = t.clone();
+        let z = magnitude_prune(&mut t, 0.0);
+        // only the pre-existing exact zero stays zero
+        assert_eq!(t, before);
+        assert!(z < 0.1);
+    }
+
+    #[test]
+    fn prune_full_zeroes_everything() {
+        let mut t = Tensor::from_fn(vec![3, 3], |i| i as f32 + 1.0);
+        let z = magnitude_prune(&mut t, 1.0);
+        assert_eq!(z, 1.0);
+        assert!(t.data().iter().all(|v| *v == 0.0));
+    }
+
+    #[test]
+    fn prune_is_monotone_and_magnitude_ordered() {
+        let base = Tensor::from_fn(vec![100], |i| ((i as f32) - 50.0) / 10.0);
+        let mut prev_zero = 0.0;
+        for frac in [0.1, 0.3, 0.5, 0.7, 0.9] {
+            let mut t = base.clone();
+            let z = magnitude_prune(&mut t, frac);
+            assert!(z >= prev_zero, "sparsity must grow with fraction");
+            assert!((z - frac).abs() < 0.06, "achieved {z} vs target {frac}");
+            prev_zero = z;
+            // every surviving weight is at least as large as every pruned one
+            let surviving_min = t
+                .data()
+                .iter()
+                .zip(base.data())
+                .filter(|(v, _)| **v != 0.0)
+                .map(|(_, o)| o.abs())
+                .fold(f32::INFINITY, f32::min);
+            let pruned_max = t
+                .data()
+                .iter()
+                .zip(base.data())
+                .filter(|(v, o)| **v == 0.0 && **o != 0.0)
+                .map(|(_, o)| o.abs())
+                .fold(0.0, f32::max);
+            assert!(surviving_min >= pruned_max);
+        }
+    }
+
+    #[test]
+    fn network_prune_spares_biases() {
+        let mut net = vec![
+            (Tensor::from_fn(vec![2, 2, 2, 2], |i| i as f32 - 8.0), vec![1.0f32, 2.0]),
+            (Tensor::from_fn(vec![2, 2, 2, 2], |i| i as f32 * 0.1), vec![3.0f32]),
+        ];
+        let sparsities = magnitude_prune_network(&mut net, 0.5);
+        assert_eq!(sparsities.len(), 2);
+        assert_eq!(net[0].1, vec![1.0, 2.0]);
+        assert_eq!(net[1].1, vec![3.0]);
+        for s in sparsities {
+            assert!(s >= 0.4);
+        }
+    }
+}

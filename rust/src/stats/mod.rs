@@ -1,0 +1,107 @@
+//! Small statistics toolkit shared by the simulators and experiments:
+//! streaming mean/σ (Welford), medians/percentiles, and run summaries —
+//! the machinery behind every "mean (std) over 50 runs" cell of Table II.
+
+mod welford;
+
+pub use welford::Welford;
+
+/// Summary of repeated measurements, printed as `mean (std)` like the
+/// paper's Table II cells.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub mean: f64,
+    pub std: f64,
+    pub n: usize,
+}
+
+impl Summary {
+    /// Summarize a slice of measurements (sample standard deviation).
+    pub fn of(values: &[f64]) -> Self {
+        let mut w = Welford::new();
+        for &v in values {
+            w.push(v);
+        }
+        Summary {
+            mean: w.mean(),
+            std: w.sample_std(),
+            n: w.count(),
+        }
+    }
+
+    /// The paper's table cell format, e.g. `2.9 (0.01)`.
+    pub fn cell(&self) -> String {
+        format!("{:.1} ({:.2})", self.mean, self.std)
+    }
+}
+
+/// Median of a slice (interpolated for even lengths). Used for the MMD
+/// median-bandwidth heuristic (Gretton et al., 2012) and robust timing.
+pub fn median(values: &[f64]) -> f64 {
+    assert!(!values.is_empty(), "median of empty slice");
+    let mut v: Vec<f64> = values.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).expect("NaN in median input"));
+    let n = v.len();
+    if n % 2 == 1 {
+        v[n / 2]
+    } else {
+        0.5 * (v[n / 2 - 1] + v[n / 2])
+    }
+}
+
+/// Linear-interpolated percentile in `[0, 100]`; used for serving latency
+/// p50/p95/p99 reporting.
+pub fn percentile(values: &[f64], p: f64) -> f64 {
+    assert!(!values.is_empty(), "percentile of empty slice");
+    assert!((0.0..=100.0).contains(&p), "percentile out of range");
+    let mut v: Vec<f64> = values.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).expect("NaN in percentile input"));
+    if v.len() == 1 {
+        return v[0];
+    }
+    let rank = p / 100.0 * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    v[lo] + (v[hi] - v[lo]) * frac
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_matches_hand_computation() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0]);
+        assert!((s.mean - 2.5).abs() < 1e-12);
+        // sample std of 1..4 = sqrt(5/3)
+        assert!((s.std - (5.0f64 / 3.0).sqrt()).abs() < 1e-12);
+        assert_eq!(s.n, 4);
+    }
+
+    #[test]
+    fn summary_cell_format() {
+        let s = Summary::of(&[2.9, 2.9, 2.9]);
+        assert_eq!(s.cell(), "2.9 (0.00)");
+    }
+
+    #[test]
+    fn median_odd_even() {
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(&[4.0, 1.0, 3.0, 2.0]), 2.5);
+    }
+
+    #[test]
+    fn percentile_endpoints_and_middle() {
+        let v = [10.0, 20.0, 30.0, 40.0];
+        assert_eq!(percentile(&v, 0.0), 10.0);
+        assert_eq!(percentile(&v, 100.0), 40.0);
+        assert_eq!(percentile(&v, 50.0), 25.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn median_empty_panics() {
+        median(&[]);
+    }
+}

@@ -1,0 +1,167 @@
+//! Minimal NCHW tensor type + `.npy` interchange.
+//!
+//! The Rust side only ever needs dense f32 NCHW activations/weights: the
+//! real compute runs inside PJRT executables; this type carries data to
+//! and from them (and feeds the pure-Rust deconvolution substrate used by
+//! the simulators and tests).
+
+mod npy;
+
+pub use npy::{read_npy_f32, write_npy_f32};
+
+use anyhow::{ensure, Result};
+
+/// Dense row-major (C-order) f32 tensor of rank ≤ 4, NCHW for rank 4.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Self> {
+        let numel: usize = shape.iter().product();
+        ensure!(
+            numel == data.len(),
+            "shape {:?} (numel {}) != data len {}",
+            shape,
+            numel,
+            data.len()
+        );
+        Ok(Tensor { shape, data })
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let numel = shape.iter().product();
+        Tensor {
+            shape,
+            data: vec![0.0; numel],
+        }
+    }
+
+    pub fn from_fn(shape: Vec<usize>, mut f: impl FnMut(usize) -> f32) -> Self {
+        let numel: usize = shape.iter().product();
+        Tensor {
+            shape,
+            data: (0..numel).map(|i| f(i)).collect(),
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Flat index of `[n, c, h, w]` (rank-4 only).
+    #[inline]
+    pub fn idx4(&self, n: usize, c: usize, h: usize, w: usize) -> usize {
+        debug_assert_eq!(self.shape.len(), 4);
+        ((n * self.shape[1] + c) * self.shape[2] + h) * self.shape[3] + w
+    }
+
+    #[inline]
+    pub fn get4(&self, n: usize, c: usize, h: usize, w: usize) -> f32 {
+        self.data[self.idx4(n, c, h, w)]
+    }
+
+    #[inline]
+    pub fn set4(&mut self, n: usize, c: usize, h: usize, w: usize, v: f32) {
+        let i = self.idx4(n, c, h, w);
+        self.data[i] = v;
+    }
+
+    #[inline]
+    pub fn add4(&mut self, n: usize, c: usize, h: usize, w: usize, v: f32) {
+        let i = self.idx4(n, c, h, w);
+        self.data[i] += v;
+    }
+
+    /// Reshape in place (numel must match).
+    pub fn reshape(mut self, shape: Vec<usize>) -> Result<Self> {
+        let numel: usize = shape.iter().product();
+        ensure!(numel == self.data.len(), "reshape numel mismatch");
+        self.shape = shape;
+        Ok(self)
+    }
+
+    /// Maximum absolute elementwise difference (for test assertions).
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape, "shape mismatch in diff");
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Fraction of exactly-zero elements (sparsity measurement).
+    pub fn zero_fraction(&self) -> f64 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        let zeros = self.data.iter().filter(|v| **v == 0.0).count();
+        zeros as f64 / self.data.len() as f64
+    }
+
+    pub fn read_npy(path: &std::path::Path) -> Result<Self> {
+        let (shape, data) = read_npy_f32(path)?;
+        Tensor::new(shape, data)
+    }
+
+    pub fn write_npy(&self, path: &std::path::Path) -> Result<()> {
+        write_npy_f32(path, &self.shape, &self.data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_validates_numel() {
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn idx4_row_major() {
+        let t = Tensor::from_fn(vec![2, 3, 4, 5], |i| i as f32);
+        assert_eq!(t.get4(0, 0, 0, 0), 0.0);
+        assert_eq!(t.get4(0, 0, 0, 1), 1.0);
+        assert_eq!(t.get4(0, 0, 1, 0), 5.0);
+        assert_eq!(t.get4(0, 1, 0, 0), 20.0);
+        assert_eq!(t.get4(1, 0, 0, 0), 60.0);
+        assert_eq!(t.get4(1, 2, 3, 4), 119.0);
+    }
+
+    #[test]
+    fn zero_fraction_counts() {
+        let t = Tensor::new(vec![4], vec![0.0, 1.0, 0.0, 2.0]).unwrap();
+        assert_eq!(t.zero_fraction(), 0.5);
+    }
+
+    #[test]
+    fn npy_roundtrip() {
+        let dir = crate::util::TempDir::new().unwrap();
+        let path = dir.path().join("t.npy");
+        let t = Tensor::from_fn(vec![3, 2, 2, 1], |i| i as f32 * 0.5 - 1.0);
+        t.write_npy(&path).unwrap();
+        let back = Tensor::read_npy(&path).unwrap();
+        assert_eq!(t, back);
+    }
+}

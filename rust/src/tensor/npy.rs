@@ -1,0 +1,203 @@
+//! Minimal NumPy `.npy` (format v1.0/2.0) reader/writer for dense C-order
+//! arrays — the weight/ground-truth interchange with `python/compile`.
+//!
+//! Supports `<f4` and `<f8` on read (f8 is converted to f32) and writes
+//! `<f4`.  That is the entire surface the artifact contract needs.
+
+use anyhow::{bail, ensure, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 6] = b"\x93NUMPY";
+
+/// Read an `.npy` file into `(shape, f32 data)`.
+pub fn read_npy_f32(path: &Path) -> Result<(Vec<usize>, Vec<f32>)> {
+    let mut f = std::fs::File::open(path)
+        .with_context(|| format!("opening {}", path.display()))?;
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic).context("reading npy magic")?;
+    ensure!(&magic[..6] == MAGIC, "not an npy file: {}", path.display());
+    let major = magic[6];
+    let header_len = match major {
+        1 => {
+            let mut b = [0u8; 2];
+            f.read_exact(&mut b)?;
+            u16::from_le_bytes(b) as usize
+        }
+        2 | 3 => {
+            let mut b = [0u8; 4];
+            f.read_exact(&mut b)?;
+            u32::from_le_bytes(b) as usize
+        }
+        v => bail!("unsupported npy version {v}"),
+    };
+    let mut header = vec![0u8; header_len];
+    f.read_exact(&mut header)?;
+    let header = String::from_utf8(header).context("npy header not utf8")?;
+
+    let descr = dict_str_value(&header, "descr")?;
+    let fortran = dict_raw_value(&header, "fortran_order")?;
+    ensure!(
+        fortran.trim() == "False",
+        "fortran-order npy unsupported ({})",
+        path.display()
+    );
+    let shape = parse_shape(&dict_raw_value(&header, "shape")?)?;
+    let numel: usize = shape.iter().product();
+
+    let mut raw = Vec::new();
+    f.read_to_end(&mut raw)?;
+    let data = match descr.as_str() {
+        "<f4" | "|f4" => {
+            ensure!(raw.len() >= numel * 4, "npy payload too short");
+            raw.chunks_exact(4)
+                .take(numel)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect()
+        }
+        "<f8" => {
+            ensure!(raw.len() >= numel * 8, "npy payload too short");
+            raw.chunks_exact(8)
+                .take(numel)
+                .map(|c| {
+                    f64::from_le_bytes([
+                        c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7],
+                    ]) as f32
+                })
+                .collect()
+        }
+        other => bail!("unsupported npy dtype {other:?}"),
+    };
+    Ok((shape, data))
+}
+
+/// Write a dense C-order f32 array as `.npy` v1.0.
+pub fn write_npy_f32(path: &Path, shape: &[usize], data: &[f32]) -> Result<()> {
+    let numel: usize = shape.iter().product();
+    ensure!(numel == data.len(), "shape/data mismatch");
+    let shape_str = match shape.len() {
+        0 => "()".to_string(),
+        1 => format!("({},)", shape[0]),
+        _ => format!(
+            "({})",
+            shape
+                .iter()
+                .map(|d| d.to_string())
+                .collect::<Vec<_>>()
+                .join(", ")
+        ),
+    };
+    let mut header = format!(
+        "{{'descr': '<f4', 'fortran_order': False, 'shape': {shape_str}, }}"
+    );
+    // pad so that magic(6)+ver(2)+len(2)+header is a multiple of 64
+    let unpadded = 10 + header.len() + 1;
+    let pad = (64 - unpadded % 64) % 64;
+    header.push_str(&" ".repeat(pad));
+    header.push('\n');
+
+    let mut f = std::fs::File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    f.write_all(MAGIC)?;
+    f.write_all(&[1u8, 0u8])?;
+    f.write_all(&(header.len() as u16).to_le_bytes())?;
+    f.write_all(header.as_bytes())?;
+    for v in data {
+        f.write_all(&v.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+/// Extract a quoted string value from the python-dict-literal header.
+fn dict_str_value(header: &str, key: &str) -> Result<String> {
+    let raw = dict_raw_value(header, key)?;
+    let t = raw.trim().trim_matches(|c| c == '\'' || c == '"');
+    Ok(t.to_string())
+}
+
+/// Extract the raw token after `'key':` up to the next top-level comma.
+fn dict_raw_value(header: &str, key: &str) -> Result<String> {
+    let pat = format!("'{key}':");
+    let start = header
+        .find(&pat)
+        .ok_or_else(|| anyhow::anyhow!("npy header missing key {key}"))?;
+    let rest = &header[start + pat.len()..];
+    let mut depth = 0usize;
+    let mut out = String::new();
+    for ch in rest.chars() {
+        match ch {
+            '(' | '[' => {
+                depth += 1;
+                out.push(ch);
+            }
+            ')' | ']' => {
+                if depth == 0 {
+                    break;
+                }
+                depth -= 1;
+                out.push(ch);
+            }
+            ',' if depth == 0 => break,
+            '}' if depth == 0 => break,
+            _ => out.push(ch),
+        }
+    }
+    Ok(out.trim().to_string())
+}
+
+fn parse_shape(raw: &str) -> Result<Vec<usize>> {
+    let inner = raw.trim().trim_start_matches('(').trim_end_matches(')');
+    let mut out = Vec::new();
+    for tok in inner.split(',') {
+        let tok = tok.trim();
+        if tok.is_empty() {
+            continue;
+        }
+        out.push(tok.parse::<usize>().context("bad shape token")?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_various_ranks() {
+        let dir = crate::util::TempDir::new().unwrap();
+        for shape in [vec![7], vec![2, 3], vec![1, 2, 3, 4]] {
+            let numel: usize = shape.iter().product();
+            let data: Vec<f32> = (0..numel).map(|i| i as f32 * 1.25).collect();
+            let path = dir.path().join("x.npy");
+            write_npy_f32(&path, &shape, &data).unwrap();
+            let (s, d) = read_npy_f32(&path).unwrap();
+            assert_eq!(s, shape);
+            assert_eq!(d, data);
+        }
+    }
+
+    #[test]
+    fn header_is_64_byte_aligned() {
+        let dir = crate::util::TempDir::new().unwrap();
+        let path = dir.path().join("a.npy");
+        write_npy_f32(&path, &[3], &[1.0, 2.0, 3.0]).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        let header_len = u16::from_le_bytes([bytes[8], bytes[9]]) as usize;
+        assert_eq!((10 + header_len) % 64, 0);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let dir = crate::util::TempDir::new().unwrap();
+        let path = dir.path().join("bad.npy");
+        std::fs::write(&path, b"not an npy").unwrap();
+        assert!(read_npy_f32(&path).is_err());
+    }
+
+    #[test]
+    fn parses_1d_tuple_shape() {
+        assert_eq!(parse_shape("(5,)").unwrap(), vec![5]);
+        assert_eq!(parse_shape("(2, 3)").unwrap(), vec![2, 3]);
+        assert_eq!(parse_shape("()").unwrap(), Vec::<usize>::new());
+    }
+}

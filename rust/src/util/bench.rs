@@ -1,0 +1,130 @@
+//! Tiny benchmarking harness (criterion stand-in): warm-up, N timed
+//! iterations, mean/σ/min, throughput annotation, and a stable text
+//! report consumed by `cargo bench` (harness = false bench binaries).
+
+use crate::stats::Summary;
+use std::time::Instant;
+
+/// One benchmark runner.
+pub struct Bencher {
+    name: String,
+    warmup_iters: usize,
+    iters: usize,
+}
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchReport {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub min_s: f64,
+    /// Optional ops-per-iteration for throughput reporting.
+    pub ops_per_iter: Option<f64>,
+}
+
+impl Bencher {
+    pub fn new(name: &str) -> Self {
+        Bencher {
+            name: name.to_string(),
+            warmup_iters: 1,
+            iters: 10,
+        }
+    }
+
+    pub fn iters(mut self, n: usize) -> Self {
+        self.iters = n.max(1);
+        self
+    }
+
+    pub fn warmup(mut self, n: usize) -> Self {
+        self.warmup_iters = n;
+        self
+    }
+
+    /// Time `f` (which should return something observable to keep the
+    /// optimizer honest) and report.
+    pub fn run<T>(&self, mut f: impl FnMut() -> T) -> BenchReport {
+        for _ in 0..self.warmup_iters {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        let s = Summary::of(&samples);
+        BenchReport {
+            name: self.name.clone(),
+            iters: self.iters,
+            mean_s: s.mean,
+            std_s: s.std,
+            min_s: samples.iter().cloned().fold(f64::INFINITY, f64::min),
+            ops_per_iter: None,
+        }
+    }
+
+    /// Like [`run`](Self::run) with an ops-per-iteration annotation for
+    /// GOps/s reporting.
+    pub fn run_with_ops<T>(
+        &self,
+        ops_per_iter: f64,
+        f: impl FnMut() -> T,
+    ) -> BenchReport {
+        let mut r = self.run(f);
+        r.ops_per_iter = Some(ops_per_iter);
+        r
+    }
+}
+
+impl BenchReport {
+    pub fn render(&self) -> String {
+        let mut s = format!(
+            "{:<44} {:>10.3} ms ±{:>7.3} (min {:>9.3}, n={})",
+            self.name,
+            self.mean_s * 1e3,
+            self.std_s * 1e3,
+            self.min_s * 1e3,
+            self.iters
+        );
+        if let Some(ops) = self.ops_per_iter {
+            s.push_str(&format!(
+                "  [{:>8.3} GOps/s]",
+                ops / self.mean_s / 1e9
+            ));
+        }
+        s
+    }
+}
+
+/// Print a standard bench header (so `cargo bench` output is greppable).
+pub fn bench_header(title: &str) {
+    println!("\n=== bench: {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let r = Bencher::new("spin").iters(5).run(|| {
+            let mut x = 0u64;
+            for i in 0..10_000 {
+                x = x.wrapping_add(i);
+            }
+            x
+        });
+        assert!(r.mean_s > 0.0);
+        assert!(r.min_s <= r.mean_s);
+        assert_eq!(r.iters, 5);
+    }
+
+    #[test]
+    fn render_includes_throughput() {
+        let r = Bencher::new("x").iters(2).run_with_ops(1e9, || 1 + 1);
+        assert!(r.render().contains("GOps/s"));
+    }
+}

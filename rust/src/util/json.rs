@@ -1,0 +1,321 @@
+//! Minimal JSON parser — just enough for `artifacts/manifest.json` and
+//! the training logs (objects, arrays, strings, numbers, booleans,
+//! null; UTF-8; `\uXXXX` escapes).  No serialization framework: the
+//! manifest schema is navigated explicitly by `artifacts::`.
+
+use anyhow::{bail, ensure, Result};
+use std::collections::BTreeMap;
+
+/// A parsed JSON value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(BTreeMap<String, Json>),
+}
+
+impl Json {
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    /// Object member lookup that errors with the key name.
+    pub fn req(&self, key: &str) -> Result<&Json> {
+        self.get(key)
+            .ok_or_else(|| anyhow::anyhow!("missing JSON key {key:?}"))
+    }
+
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Json::Str(s) => Ok(s),
+            other => bail!("expected string, got {other:?}"),
+        }
+    }
+
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            Json::Num(n) => Ok(*n),
+            other => bail!("expected number, got {other:?}"),
+        }
+    }
+
+    pub fn as_usize(&self) -> Result<usize> {
+        let n = self.as_f64()?;
+        ensure!(n >= 0.0 && n.fract() == 0.0, "expected usize, got {n}");
+        Ok(n as usize)
+    }
+
+    pub fn as_u64(&self) -> Result<u64> {
+        let n = self.as_f64()?;
+        ensure!(n >= 0.0 && n.fract() == 0.0, "expected u64, got {n}");
+        Ok(n as u64)
+    }
+
+    pub fn as_arr(&self) -> Result<&[Json]> {
+        match self {
+            Json::Arr(v) => Ok(v),
+            other => bail!("expected array, got {other:?}"),
+        }
+    }
+
+    pub fn as_obj(&self) -> Result<&BTreeMap<String, Json>> {
+        match self {
+            Json::Obj(m) => Ok(m),
+            other => bail!("expected object, got {other:?}"),
+        }
+    }
+}
+
+/// Parse a complete JSON document.
+pub fn parse_json(input: &str) -> Result<Json> {
+    let mut p = Parser {
+        bytes: input.as_bytes(),
+        pos: 0,
+    };
+    p.skip_ws();
+    let v = p.value()?;
+    p.skip_ws();
+    ensure!(p.pos == p.bytes.len(), "trailing garbage at byte {}", p.pos);
+    Ok(v)
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn bump(&mut self) -> Result<u8> {
+        let b = self
+            .peek()
+            .ok_or_else(|| anyhow::anyhow!("unexpected end of JSON"))?;
+        self.pos += 1;
+        Ok(b)
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn expect(&mut self, b: u8) -> Result<()> {
+        let got = self.bump()?;
+        ensure!(
+            got == b,
+            "expected {:?} at byte {}, got {:?}",
+            b as char,
+            self.pos - 1,
+            got as char
+        );
+        Ok(())
+    }
+
+    fn value(&mut self) -> Result<Json> {
+        self.skip_ws();
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b't') => self.lit("true", Json::Bool(true)),
+            Some(b'f') => self.lit("false", Json::Bool(false)),
+            Some(b'n') => self.lit("null", Json::Null),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            other => bail!("unexpected JSON byte {other:?} at {}", self.pos),
+        }
+    }
+
+    fn lit(&mut self, word: &str, v: Json) -> Result<Json> {
+        ensure!(
+            self.bytes[self.pos..].starts_with(word.as_bytes()),
+            "bad literal at byte {}",
+            self.pos
+        );
+        self.pos += word.len();
+        Ok(v)
+    }
+
+    fn object(&mut self) -> Result<Json> {
+        self.expect(b'{')?;
+        let mut map = BTreeMap::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Json::Obj(map));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            let val = self.value()?;
+            map.insert(key, val);
+            self.skip_ws();
+            match self.bump()? {
+                b',' => continue,
+                b'}' => break,
+                c => bail!("expected ',' or '}}', got {:?}", c as char),
+            }
+        }
+        Ok(Json::Obj(map))
+    }
+
+    fn array(&mut self) -> Result<Json> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.bump()? {
+                b',' => continue,
+                b']' => break,
+                c => bail!("expected ',' or ']', got {:?}", c as char),
+            }
+        }
+        Ok(Json::Arr(items))
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            let b = self.bump()?;
+            match b {
+                b'"' => break,
+                b'\\' => {
+                    let esc = self.bump()?;
+                    match esc {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'b' => out.push('\u{0008}'),
+                        b'f' => out.push('\u{000C}'),
+                        b'n' => out.push('\n'),
+                        b'r' => out.push('\r'),
+                        b't' => out.push('\t'),
+                        b'u' => {
+                            let mut code = 0u32;
+                            for _ in 0..4 {
+                                let h = self.bump()? as char;
+                                code = code * 16
+                                    + h.to_digit(16).ok_or_else(|| {
+                                        anyhow::anyhow!("bad \\u escape")
+                                    })?;
+                            }
+                            out.push(
+                                char::from_u32(code).unwrap_or('\u{FFFD}'),
+                            );
+                        }
+                        c => bail!("bad escape \\{}", c as char),
+                    }
+                }
+                _ => {
+                    // copy the raw UTF-8 byte run
+                    let start = self.pos - 1;
+                    while let Some(nb) = self.peek() {
+                        if nb == b'"' || nb == b'\\' {
+                            break;
+                        }
+                        self.pos += 1;
+                    }
+                    out.push_str(
+                        std::str::from_utf8(&self.bytes[start..self.pos])
+                            .map_err(|_| anyhow::anyhow!("invalid utf8"))?,
+                    );
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    fn number(&mut self) -> Result<Json> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        while matches!(self.peek(), Some(c) if c.is_ascii_digit() || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-'))
+        {
+            self.pos += 1;
+        }
+        let s = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
+        Ok(Json::Num(s.parse::<f64>().map_err(|e| {
+            anyhow::anyhow!("bad number {s:?}: {e}")
+        })?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_manifest_like_document() {
+        let doc = r#"{
+          "version": 1,
+          "networks": {
+            "mnist": {
+              "batch_sizes": [1, 4, 8],
+              "generators": {"1": "a.hlo.txt"},
+              "tile": 12,
+              "neg": -3.5e2,
+              "flag": true,
+              "nothing": null
+            }
+          }
+        }"#;
+        let v = parse_json(doc).unwrap();
+        assert_eq!(v.req("version").unwrap().as_usize().unwrap(), 1);
+        let net = v.req("networks").unwrap().req("mnist").unwrap();
+        assert_eq!(net.req("tile").unwrap().as_usize().unwrap(), 12);
+        assert_eq!(
+            net.req("batch_sizes").unwrap().as_arr().unwrap().len(),
+            3
+        );
+        assert_eq!(net.req("neg").unwrap().as_f64().unwrap(), -350.0);
+        assert_eq!(net.req("flag").unwrap(), &Json::Bool(true));
+        assert_eq!(net.req("nothing").unwrap(), &Json::Null);
+    }
+
+    #[test]
+    fn string_escapes() {
+        let v = parse_json(r#""a\n\"b\"A""#).unwrap();
+        assert_eq!(v, Json::Str("a\n\"b\"A".into()));
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse_json("{").is_err());
+        assert!(parse_json("[1,]").is_err());
+        assert!(parse_json("{\"a\": 1} extra").is_err());
+        assert!(parse_json("nope").is_err());
+    }
+
+    #[test]
+    fn empty_containers() {
+        assert_eq!(parse_json("{}").unwrap(), Json::Obj(BTreeMap::new()));
+        assert_eq!(parse_json("[]").unwrap(), Json::Arr(vec![]));
+    }
+
+    #[test]
+    fn type_errors_are_reported() {
+        let v = parse_json(r#"{"a": "s"}"#).unwrap();
+        assert!(v.req("a").unwrap().as_f64().is_err());
+        assert!(v.req("b").is_err());
+        assert!(v.req("a").unwrap().as_str().is_ok());
+    }
+}

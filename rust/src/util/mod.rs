@@ -1,0 +1,14 @@
+//! Dependency-free utilities.  The build environment mirrors only the
+//! `xla` crate's dependency closure, so the usual ecosystem crates
+//! (rand, serde_json, clap, criterion, tempfile…) are implemented here
+//! at the size this project actually needs.
+
+mod bench;
+mod json;
+mod rng;
+mod tempdir;
+
+pub use bench::{bench_header, BenchReport, Bencher};
+pub use json::{parse_json, Json};
+pub use rng::Rng;
+pub use tempdir::TempDir;

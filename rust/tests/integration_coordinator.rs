@@ -1,0 +1,112 @@
+//! Coordinator integration: the serving stack end to end against the
+//! real artifacts — batching, determinism, metrics, annotations.
+//! Skips when `make artifacts` has not run.
+
+use edgedcnn::artifacts::artifacts_or_skip;
+use edgedcnn::coordinator::{
+    BatcherConfig, Coordinator, CoordinatorConfig, WorkloadSpec,
+};
+use std::time::Duration;
+
+fn start_coordinator(networks: &[&str]) -> Option<Coordinator> {
+    let artifacts = artifacts_or_skip()?;
+    Some(
+        Coordinator::start(CoordinatorConfig {
+            artifacts_dir: artifacts.root.clone(),
+            networks: networks.iter().map(|s| s.to_string()).collect(),
+            batcher: BatcherConfig {
+                max_batch: 8,
+                max_wait: Duration::from_millis(2),
+            },
+        })
+        .expect("coordinator startup"),
+    )
+}
+
+#[test]
+fn serves_single_requests_deterministically() {
+    let Some(coord) = start_coordinator(&["mnist"]) else { return };
+    let a = coord.submit_blocking("mnist", 2, 777).unwrap();
+    let b = coord.submit_blocking("mnist", 2, 777).unwrap();
+    assert_eq!(a.images.shape(), &[2, 1, 28, 28]);
+    assert_eq!(a.images.data(), b.images.data(), "seeded determinism");
+    let c = coord.submit_blocking("mnist", 2, 778).unwrap();
+    assert!(
+        a.images.max_abs_diff(&c.images) > 0.0,
+        "different seeds differ"
+    );
+    // edge annotations present and plausible
+    assert!(a.fpga_time_s > 0.0);
+    assert!(a.gpu_time_s > 0.0);
+    assert!(a.latency_s >= a.execute_s * 0.0); // both recorded
+}
+
+#[test]
+fn concurrent_requests_get_batched() {
+    let Some(coord) = start_coordinator(&["mnist"]) else { return };
+    // submit a burst without waiting; the batcher should coalesce
+    let handles: Vec<_> = (0..8)
+        .map(|i| coord.submit("mnist", 1, 1000 + i).unwrap())
+        .collect();
+    let responses: Vec<_> =
+        handles.into_iter().map(|h| h.wait().unwrap()).collect();
+    assert_eq!(responses.len(), 8);
+    // at least one response should report a batch larger than itself
+    let max_batch = responses.iter().map(|r| r.batch_size).max().unwrap();
+    assert!(
+        max_batch >= 2,
+        "burst should have been coalesced (max batch {max_batch})"
+    );
+    // ids map 1:1, images all valid
+    for r in &responses {
+        assert_eq!(r.images.shape(), &[1, 1, 28, 28]);
+        assert!(r.images.data().iter().all(|v| v.abs() <= 1.0));
+    }
+}
+
+#[test]
+fn workload_report_is_consistent() {
+    let Some(coord) = start_coordinator(&["mnist"]) else { return };
+    let report = coord
+        .serve_workload(&WorkloadSpec {
+            network: "mnist".into(),
+            requests: 12,
+            images_per_request: 2,
+            interarrival: Duration::from_millis(1),
+            seed: 5,
+        })
+        .unwrap();
+    assert_eq!(report.requests, 12);
+    assert_eq!(report.images, 24);
+    assert!(report.batches >= 1 && report.batches <= 12);
+    assert!(report.images_per_s > 0.0);
+    assert!(report.gops > 0.0);
+    assert!(report.latency.p99_s >= report.latency.p50_s);
+    assert!(report.mean_power_w > 0.0, "power meter integrated");
+    assert!(report.gops_per_w > 0.0);
+}
+
+#[test]
+fn serves_multiple_networks() {
+    let Some(coord) = start_coordinator(&["mnist", "celeba"]) else {
+        return;
+    };
+    let m = coord.submit_blocking("mnist", 1, 1).unwrap();
+    let c = coord.submit_blocking("celeba", 1, 1).unwrap();
+    assert_eq!(m.images.shape(), &[1, 1, 28, 28]);
+    assert_eq!(c.images.shape(), &[1, 3, 64, 64]);
+    // celeba is ~20x the ops: its edge annotation must be slower
+    assert!(c.fpga_time_s > m.fpga_time_s);
+}
+
+#[test]
+fn unknown_network_fails_cleanly() {
+    let Some(coord) = start_coordinator(&["mnist"]) else { return };
+    // request for an unloaded network: the device errors, the handle
+    // resolves with an error (request dropped), but the coordinator
+    // survives and keeps serving
+    let bad = coord.submit_blocking("imagenet", 1, 0);
+    assert!(bad.is_err());
+    let good = coord.submit_blocking("mnist", 1, 0);
+    assert!(good.is_ok(), "coordinator must survive a bad request");
+}

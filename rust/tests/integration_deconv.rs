@@ -1,0 +1,139 @@
+//! Cross-algorithm integration: the three Rust deconvolution paths
+//! (standard Eq. 1 scatter, reverse-loop Algorithm 1, TDC transform)
+//! must agree on every layer geometry of the paper's two networks, and
+//! the pure-Rust generator forward must behave like a generator.
+
+use edgedcnn::config::{celeba, mnist, network_by_name};
+use edgedcnn::deconv::{
+    deconv_reverse_loop, deconv_standard, deconv_tdc, generator_forward,
+    ReverseLoopOpts,
+};
+use edgedcnn::tensor::Tensor;
+use edgedcnn::util::Rng;
+
+fn rand_tensor(shape: Vec<usize>, rng: &mut Rng) -> Tensor {
+    Tensor::from_fn(shape, |_| rng.range_f32(-1.0, 1.0))
+}
+
+#[test]
+fn all_algorithms_agree_on_every_paper_layer() {
+    let mut rng = Rng::seed_from_u64(99);
+    for net in [mnist(), celeba()] {
+        for layer in &net.layers {
+            // shrink channel counts to keep the scalar loops fast while
+            // preserving the spatial geometry (K, S, P, I_H)
+            let c_in = layer.c_in.min(4);
+            let c_out = layer.c_out.min(3);
+            let x = rand_tensor(vec![1, c_in, layer.i_h, layer.i_h], &mut rng);
+            let w = rand_tensor(vec![c_in, c_out, layer.k, layer.k], &mut rng);
+            let b: Vec<f32> = (0..c_out).map(|i| i as f32 * 0.1).collect();
+            let std = deconv_standard(&x, &w, &b, layer.stride, layer.padding);
+            let (rev, stats) = deconv_reverse_loop(
+                &x,
+                &w,
+                &b,
+                layer.stride,
+                layer.padding,
+                ReverseLoopOpts {
+                    tile: net.tile,
+                    zero_skip: false,
+                },
+            );
+            let tdc = deconv_tdc(&x, &w, &b, layer.stride, layer.padding);
+            assert_eq!(
+                std.shape(),
+                &[1, c_out, layer.o_h(), layer.o_h()],
+                "{}: output geometry",
+                net.name
+            );
+            assert!(
+                rev.max_abs_diff(&std) < 1e-4,
+                "{}: reverse-loop disagrees on K={} S={} P={} I={}",
+                net.name,
+                layer.k,
+                layer.stride,
+                layer.padding,
+                layer.i_h
+            );
+            assert!(tdc.max_abs_diff(&std) < 1e-4);
+            assert!(stats.macs_issued > 0);
+            // Enhancement 1: modulo cost is 2K, independent of the image
+            assert_eq!(stats.modulo_ops, 2 * layer.k as u64);
+        }
+    }
+}
+
+#[test]
+fn zero_skip_equals_dense_on_pruned_weights() {
+    let mut rng = Rng::seed_from_u64(5);
+    let x = rand_tensor(vec![2, 3, 6, 6], &mut rng);
+    let mut w = rand_tensor(vec![3, 4, 4, 4], &mut rng);
+    for (i, v) in w.data_mut().iter_mut().enumerate() {
+        if i % 3 != 0 {
+            *v = 0.0; // ~2/3 sparsity
+        }
+    }
+    let b = vec![0.1, -0.1, 0.2, 0.0];
+    let dense = deconv_standard(&x, &w, &b, 2, 1);
+    let (skip, stats) = deconv_reverse_loop(
+        &x,
+        &w,
+        &b,
+        2,
+        1,
+        ReverseLoopOpts {
+            tile: 8,
+            zero_skip: true,
+        },
+    );
+    assert!(skip.max_abs_diff(&dense) < 1e-5);
+    assert!(stats.macs_skipped > stats.macs_issued, "mostly skipped");
+}
+
+#[test]
+fn generator_forward_produces_tanh_bounded_images() {
+    let net = network_by_name("mnist").unwrap();
+    let mut rng = Rng::seed_from_u64(3);
+    let weights: Vec<(Tensor, Vec<f32>)> = net
+        .layers
+        .iter()
+        .map(|l| {
+            (
+                Tensor::from_fn(vec![l.c_in, l.c_out, l.k, l.k], |_| {
+                    0.02 * rng.normal_f32()
+                }),
+                vec![0.0; l.c_out],
+            )
+        })
+        .collect();
+    let z = Tensor::from_fn(vec![2, net.z_dim], |_| rng.normal_f32());
+    let img = generator_forward(&net, &weights, &z);
+    assert_eq!(img.shape(), &[2, 1, 28, 28]);
+    assert!(img.data().iter().all(|v| v.abs() <= 1.0), "tanh range");
+    // different latents → different images
+    let z2 = Tensor::from_fn(vec![2, net.z_dim], |_| rng.normal_f32());
+    let img2 = generator_forward(&net, &weights, &z2);
+    assert!(img.max_abs_diff(&img2) > 0.0);
+}
+
+#[test]
+fn generator_forward_deterministic() {
+    let net = network_by_name("mnist").unwrap();
+    let mut rng = Rng::seed_from_u64(11);
+    let weights: Vec<(Tensor, Vec<f32>)> = net
+        .layers
+        .iter()
+        .map(|l| {
+            (
+                Tensor::from_fn(vec![l.c_in, l.c_out, l.k, l.k], |_| {
+                    0.05 * rng.normal_f32()
+                }),
+                vec![0.01; l.c_out],
+            )
+        })
+        .collect();
+    let z = Tensor::from_fn(vec![1, net.z_dim], |_| rng.normal_f32());
+    let a = generator_forward(&net, &weights, &z);
+    let b = generator_forward(&net, &weights, &z);
+    assert_eq!(a.data(), b.data());
+}

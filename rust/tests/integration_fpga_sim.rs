@@ -1,0 +1,163 @@
+//! FPGA simulator integration: whole-network behaviour, the paper's
+//! qualitative claims (workload-insensitive throughput, zero-skipping
+//! speed-ups, pipelining benefits), and Table I legality.
+
+use edgedcnn::config::{celeba, mnist, network_by_name, PYNQ_Z2};
+use edgedcnn::fpga::{
+    estimate_resources, measured_run, measurement_rng, simulate_layer,
+    simulate_network, SimOpts,
+};
+use edgedcnn::stats::Summary;
+
+fn dense_opts(net: &edgedcnn::config::NetworkCfg) -> Vec<SimOpts> {
+    net.layers.iter().map(|_| SimOpts::dense(net.tile)).collect()
+}
+
+#[test]
+fn network_time_is_sum_of_multiplexed_layers() {
+    for net in [mnist(), celeba()] {
+        let sim = simulate_network(&net, &PYNQ_Z2, &dense_opts(&net));
+        let sum: f64 = sim.layers.iter().map(|l| l.time_s).sum();
+        assert!((sim.total_time_s - sum).abs() < 1e-12);
+        assert_eq!(sim.total_ops, net.total_ops());
+        assert!(sim.gops_per_w > 0.5 && sim.gops_per_w < 20.0);
+    }
+}
+
+#[test]
+fn throughput_never_exceeds_rooflines() {
+    for net in [mnist(), celeba()] {
+        for l in &simulate_network(&net, &PYNQ_Z2, &dense_opts(&net)).layers {
+            assert!(l.gops <= PYNQ_Z2.peak_gops() + 1e-9);
+            let bw_roof_gops =
+                (l.ops as f64 / (l.read_cycles.max(1) as f64 / PYNQ_Z2.clock_hz))
+                    / 1e9;
+            // sanity: read stage really moves the bytes it claims
+            assert!(bw_roof_gops.is_finite());
+        }
+    }
+}
+
+#[test]
+fn fpga_run_to_run_variation_is_workload_insensitive() {
+    // the paper's core FPGA claim: deterministic dataflow → tiny σ on
+    // EVERY layer, dense or sparse
+    let net = celeba();
+    let mut rng = measurement_rng(9);
+    for (i, layer) in net.layers.iter().enumerate() {
+        for sparsity in [0.0, 0.7] {
+            let opts = SimOpts {
+                tile: net.tile,
+                zero_skip: sparsity > 0.0,
+                weight_sparsity: sparsity,
+                decouple: true,
+            };
+            let base = simulate_layer(layer, &PYNQ_Z2, &opts);
+            let runs: Vec<f64> = (0..50)
+                .map(|_| measured_run(&base, &mut rng).gops_per_w)
+                .collect();
+            let s = Summary::of(&runs);
+            assert!(
+                s.std / s.mean < 0.01,
+                "L{} sparsity {sparsity}: cv={}",
+                i + 1,
+                s.std / s.mean
+            );
+        }
+    }
+}
+
+#[test]
+fn zero_skip_speedup_grows_with_sparsity() {
+    for net in [mnist(), celeba()] {
+        let dense =
+            simulate_network(&net, &PYNQ_Z2, &dense_opts(&net)).total_time_s;
+        let mut prev = dense * 1.0001; // skipping machinery overhead slack
+        for sparsity in [0.2, 0.5, 0.8, 0.95] {
+            let opts: Vec<SimOpts> = net
+                .layers
+                .iter()
+                .map(|_| SimOpts {
+                    tile: net.tile,
+                    zero_skip: true,
+                    weight_sparsity: sparsity,
+                    decouple: true,
+                })
+                .collect();
+            let t = simulate_network(&net, &PYNQ_Z2, &opts).total_time_s;
+            assert!(
+                t <= prev,
+                "{}: time must fall with sparsity ({t} vs {prev} at {sparsity})",
+                net.name
+            );
+            prev = t;
+        }
+        assert!(
+            dense / prev > 1.5,
+            "{}: 95% sparsity must give a clear speed-up (got {:.2}x)",
+            net.name,
+            dense / prev
+        );
+    }
+}
+
+#[test]
+fn decoupled_access_beats_serialized_random() {
+    for net in [mnist(), celeba()] {
+        let on = simulate_network(&net, &PYNQ_Z2, &dense_opts(&net));
+        let coupled: Vec<SimOpts> = net
+            .layers
+            .iter()
+            .map(|_| SimOpts {
+                decouple: false,
+                ..SimOpts::dense(net.tile)
+            })
+            .collect();
+        let off = simulate_network(&net, &PYNQ_Z2, &coupled);
+        assert!(
+            off.total_time_s > 1.5 * on.total_time_s,
+            "{}: enhancement 3 must matter",
+            net.name
+        );
+    }
+}
+
+#[test]
+fn table1_designs_fit_and_scale() {
+    for net in [mnist(), celeba()] {
+        let u = estimate_resources(&net, net.tile, PYNQ_Z2.n_cu);
+        assert!(u.fits(&PYNQ_Z2), "{}: paper design must fit", net.name);
+        assert_eq!(u.dsp, 134);
+        // doubling the CU array busts the DSP budget (the paper's 16 is
+        // near the -7020 limit)
+        let u2 = estimate_resources(&net, net.tile, PYNQ_Z2.n_cu * 2);
+        assert!(!u2.fits(&PYNQ_Z2));
+    }
+}
+
+#[test]
+fn unified_tile_is_suboptimal_for_some_layers() {
+    // the paper's own observation (Section V-B): a single T_OH across
+    // layers leaves some layers worse than their per-layer best
+    let net = network_by_name("celeba").unwrap();
+    for (i, layer) in net.layers.iter().enumerate() {
+        let unified =
+            simulate_layer(layer, &PYNQ_Z2, &SimOpts::dense(net.tile));
+        let mut best = unified.gops_per_w;
+        for t in [2, 4, 8, 16, 32, 64] {
+            let s = simulate_layer(layer, &PYNQ_Z2, &SimOpts::dense(t));
+            best = best.max(s.gops_per_w);
+        }
+        if best > unified.gops_per_w * 1.05 {
+            // at least one layer benefits from a different tile: done
+            println!(
+                "L{}: unified {:.2} vs per-layer best {:.2}",
+                i + 1,
+                unified.gops_per_w,
+                best
+            );
+            return;
+        }
+    }
+    panic!("expected ≥1 CelebA layer where the unified T_OH is sub-optimal");
+}

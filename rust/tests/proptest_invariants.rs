@@ -1,0 +1,338 @@
+//! Property-based invariants (hand-rolled generator sweep; the offline
+//! environment ships no proptest crate — `util::Rng` drives randomized
+//! cases with printed-on-failure seeds instead).
+//!
+//! Each property runs a few hundred random cases over the coordinator
+//! and algorithm state spaces.
+
+use edgedcnn::config::DeconvLayerCfg;
+use edgedcnn::coordinator::{BatcherConfig, DynamicBatcher, InferenceRequest};
+use edgedcnn::deconv::{
+    deconv_reverse_loop, deconv_standard, input_tile_extent,
+    stride_hole_offsets, ReverseLoopOpts,
+};
+use edgedcnn::sparsity::{magnitude_prune, mmd_biased, Mmd};
+use edgedcnn::tensor::{read_npy_f32, write_npy_f32, Tensor};
+use edgedcnn::util::{parse_json, Rng, TempDir};
+use std::time::{Duration, Instant};
+
+const CASES: usize = 200;
+
+/// Random legal layer geometry (kept small: the checks are O(n⁴) loops).
+fn random_geometry(rng: &mut Rng) -> (usize, usize, usize, usize, usize, usize) {
+    loop {
+        let k = rng.range_usize(1, 6);
+        let s = rng.range_usize(1, 4);
+        let p = rng.range_usize(0, k.max(1));
+        let i_h = rng.range_usize(1, 7);
+        let c_in = rng.range_usize(1, 4);
+        let c_out = rng.range_usize(1, 4);
+        let o = (i_h - 1) * s + k;
+        if o > 2 * p {
+            return (c_in, c_out, k, s, p, i_h);
+        }
+    }
+}
+
+#[test]
+fn prop_reverse_loop_equals_standard() {
+    let mut rng = Rng::seed_from_u64(0xA11CE);
+    for case in 0..CASES {
+        let (c_in, c_out, k, s, p, i_h) = random_geometry(&mut rng);
+        let tile = rng.range_usize(1, 12);
+        let x = Tensor::from_fn(vec![1, c_in, i_h, i_h], |_| {
+            rng.range_f32(-1.0, 1.0)
+        });
+        let w = Tensor::from_fn(vec![c_in, c_out, k, k], |_| {
+            rng.range_f32(-1.0, 1.0)
+        });
+        let b: Vec<f32> = (0..c_out).map(|_| rng.range_f32(-0.5, 0.5)).collect();
+        let want = deconv_standard(&x, &w, &b, s, p);
+        let (got, stats) = deconv_reverse_loop(
+            &x,
+            &w,
+            &b,
+            s,
+            p,
+            ReverseLoopOpts {
+                tile,
+                zero_skip: rng.gen_bool(0.5),
+            },
+        );
+        assert!(
+            got.max_abs_diff(&want) < 1e-4,
+            "case {case}: geometry ({c_in},{c_out},{k},{s},{p},{i_h}) tile {tile}"
+        );
+        // one-shot write invariant: every output element written once
+        assert_eq!(stats.ext_write_bytes, 4 * want.numel() as u64);
+    }
+}
+
+#[test]
+fn prop_offsets_solve_eq4_divisibility() {
+    let mut rng = Rng::seed_from_u64(0xBEEF);
+    for _ in 0..CASES {
+        let k = rng.range_usize(1, 12);
+        let s = rng.range_usize(1, 8);
+        let p = rng.range_usize(0, 12);
+        let f = stride_hole_offsets(k, s, p);
+        for (kk, &fk) in f.iter().enumerate() {
+            assert!(fk < s);
+            assert_eq!(
+                (fk as i64 + p as i64 - kk as i64).rem_euclid(s as i64),
+                0
+            );
+            // minimality: no smaller offset satisfies the congruence
+            for smaller in 0..fk {
+                assert_ne!(
+                    (smaller as i64 + p as i64 - kk as i64)
+                        .rem_euclid(s as i64),
+                    0
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_eq5_input_tile_covers_dependencies() {
+    // Eq. 5's T_IH must cover every input index any output pixel of a
+    // tile can reference
+    let mut rng = Rng::seed_from_u64(0xCAFE);
+    for _ in 0..CASES {
+        let k = rng.range_usize(1, 8);
+        let s = rng.range_usize(1, 5);
+        let p = rng.range_usize(0, k);
+        let t_oh = rng.range_usize(s, 33);
+        let t_ih = input_tile_extent(t_oh, k, s);
+        // worst-case span of i = (o + P - k')/S over one tile
+        let o0 = 0i64;
+        let mut min_i = i64::MAX;
+        let mut max_i = i64::MIN;
+        for o in o0..o0 + t_oh as i64 {
+            for kk in 0..k as i64 {
+                let num = o + p as i64 - kk;
+                if num.rem_euclid(s as i64) == 0 {
+                    let i = num.div_euclid(s as i64);
+                    min_i = min_i.min(i);
+                    max_i = max_i.max(i);
+                }
+            }
+        }
+        if min_i <= max_i {
+            let span = (max_i - min_i + 1) as usize;
+            assert!(
+                span <= t_ih + 1,
+                "Eq.5 tile too small: span {span} > T_IH {t_ih} \
+                 (K={k} S={s} P={p} T={t_oh})"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_layer_op_accounting_consistent() {
+    let mut rng = Rng::seed_from_u64(0xD00D);
+    for _ in 0..CASES {
+        let (c_in, c_out, k, s, p, i_h) = random_geometry(&mut rng);
+        let layer = DeconvLayerCfg {
+            c_in,
+            c_out,
+            k,
+            stride: s,
+            padding: p,
+            i_h,
+        };
+        // taps formula == brute force count
+        let o = layer.o_h();
+        let f = layer.offsets();
+        let mut brute = 0usize;
+        for kh in 0..k {
+            for kw in 0..k {
+                brute += (f[kh]..o).step_by(s).count()
+                    * (f[kw]..o).step_by(s).count();
+            }
+        }
+        assert_eq!(layer.taps(), brute);
+        assert_eq!(layer.ops(), 2 * layer.macs());
+        // issued MACs of the dense reverse loop ≤ schedule trip count
+        let x = Tensor::from_fn(vec![1, c_in, i_h, i_h], |_| 1.0);
+        let w = Tensor::from_fn(vec![c_in, c_out, k, k], |_| 1.0);
+        let (_, stats) = deconv_reverse_loop(
+            &x,
+            &w,
+            &vec![0.0; c_out],
+            s,
+            p,
+            ReverseLoopOpts {
+                tile: 8,
+                zero_skip: false,
+            },
+        );
+        assert!(stats.macs_issued <= layer.macs());
+    }
+}
+
+#[test]
+fn prop_batcher_conserves_requests() {
+    // no request is lost or duplicated, regardless of arrival pattern
+    let mut rng = Rng::seed_from_u64(0xFEED);
+    for case in 0..100 {
+        let max_batch = rng.range_usize(1, 10);
+        let mut b = DynamicBatcher::new(BatcherConfig {
+            max_batch,
+            max_wait: Duration::from_millis(rng.range_usize(0, 5) as u64),
+        });
+        let n_requests = rng.range_usize(1, 30);
+        let t0 = Instant::now();
+        let mut emitted: Vec<u64> = Vec::new();
+        for id in 0..n_requests as u64 {
+            let net = if rng.gen_bool(0.3) { "celeba" } else { "mnist" };
+            let req =
+                InferenceRequest::new(id, net, rng.range_usize(1, 5), id);
+            if let Some(batch) = b.push(req, t0) {
+                assert!(!batch.requests.is_empty());
+                emitted.extend(batch.requests.iter().map(|r| r.id));
+            }
+        }
+        // drain with an expired clock
+        let later = t0 + Duration::from_secs(60);
+        while let Some(batch) = b.poll(later) {
+            emitted.extend(batch.requests.iter().map(|r| r.id));
+        }
+        emitted.sort_unstable();
+        let expect: Vec<u64> = (0..n_requests as u64).collect();
+        assert_eq!(emitted, expect, "case {case}: lost/duplicated requests");
+        assert_eq!(b.queued(), 0);
+    }
+}
+
+#[test]
+fn prop_batcher_respects_bucket_unless_oversize() {
+    let mut rng = Rng::seed_from_u64(0xB00);
+    for _ in 0..100 {
+        let max_batch = rng.range_usize(2, 9);
+        let mut b = DynamicBatcher::new(BatcherConfig {
+            max_batch,
+            max_wait: Duration::from_millis(0),
+        });
+        let t0 = Instant::now();
+        for id in 0..20u64 {
+            let n = rng.range_usize(1, 2 * max_batch);
+            let req = InferenceRequest::new(id, "mnist", n, id);
+            let oversize = n > max_batch;
+            if let Some(batch) = b.push(req, t0) {
+                if !oversize && batch.requests.len() > 1 {
+                    assert!(
+                        batch.n_images <= max_batch,
+                        "multi-request batch exceeded the bucket"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_pruning_monotone_and_magnitude_correct() {
+    let mut rng = Rng::seed_from_u64(0x9999);
+    for _ in 0..100 {
+        let n = rng.range_usize(4, 200);
+        let base = Tensor::from_fn(vec![n], |_| rng.normal_f32());
+        let f1 = rng.next_f64() * 0.5;
+        let f2 = f1 + rng.next_f64() * 0.5;
+        let mut a = base.clone();
+        let mut b = base.clone();
+        let za = magnitude_prune(&mut a, f1);
+        let zb = magnitude_prune(&mut b, f2.min(1.0));
+        assert!(zb >= za - 1e-9, "sparsity must be monotone in fraction");
+        // heavier pruning zeroes a superset of elements
+        for (va, vb) in a.data().iter().zip(b.data()) {
+            if *va == 0.0 {
+                assert_eq!(*vb, 0.0, "pruned sets must nest");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_mmd_symmetry_and_nonnegativity() {
+    let mut rng = Rng::seed_from_u64(0xABCD);
+    for _ in 0..40 {
+        let d = rng.range_usize(2, 6);
+        let n = rng.range_usize(3, 12);
+        let m = rng.range_usize(3, 12);
+        let x: Vec<f32> = (0..n * d).map(|_| rng.normal_f32()).collect();
+        let y: Vec<f32> =
+            (0..m * d).map(|_| rng.normal_f32() + 0.5).collect();
+        let mmd = Mmd { sigma: rng.range_f64(0.5, 3.0) };
+        let xy = mmd_biased(&x, &y, d, &mmd);
+        let yx = mmd_biased(&y, &x, d, &mmd);
+        assert!(xy >= 0.0);
+        assert!((xy - yx).abs() < 1e-9, "MMD must be symmetric");
+    }
+}
+
+#[test]
+fn prop_npy_roundtrip_random_shapes() {
+    let mut rng = Rng::seed_from_u64(0x4141);
+    let dir = TempDir::new().unwrap();
+    for case in 0..60 {
+        let rank = rng.range_usize(1, 5);
+        let shape: Vec<usize> =
+            (0..rank).map(|_| rng.range_usize(1, 6)).collect();
+        let numel: usize = shape.iter().product();
+        let data: Vec<f32> = (0..numel).map(|_| rng.normal_f32()).collect();
+        let path = dir.path().join(format!("t{case}.npy"));
+        write_npy_f32(&path, &shape, &data).unwrap();
+        let (s2, d2) = read_npy_f32(&path).unwrap();
+        assert_eq!(s2, shape);
+        assert_eq!(d2, data);
+    }
+}
+
+#[test]
+fn prop_json_parses_generated_documents() {
+    // generate random JSON-ish trees, print them, parse them back
+    fn emit(rng: &mut Rng, depth: usize, out: &mut String) {
+        if depth == 0 || rng.gen_bool(0.4) {
+            match rng.range_usize(0, 4) {
+                0 => out.push_str(&format!("{}", rng.range_usize(0, 1000))),
+                1 => out.push_str(&format!("{:.3}", rng.normal_with(0.0, 5.0))),
+                2 => out.push_str("\"s\""),
+                _ => out.push_str(if rng.gen_bool(0.5) { "true" } else { "null" }),
+            }
+            return;
+        }
+        if rng.gen_bool(0.5) {
+            out.push('[');
+            let n = rng.range_usize(0, 4);
+            for i in 0..n {
+                if i > 0 {
+                    out.push(',');
+                }
+                emit(rng, depth - 1, out);
+            }
+            out.push(']');
+        } else {
+            out.push('{');
+            let n = rng.range_usize(0, 4);
+            for i in 0..n {
+                if i > 0 {
+                    out.push(',');
+                }
+                out.push_str(&format!("\"k{i}\":"));
+                emit(rng, depth - 1, out);
+            }
+            out.push('}');
+        }
+    }
+    let mut rng = Rng::seed_from_u64(0x7777);
+    for case in 0..200 {
+        let mut doc = String::new();
+        emit(&mut rng, 4, &mut doc);
+        parse_json(&doc).unwrap_or_else(|e| {
+            panic!("case {case}: failed to parse {doc:?}: {e:#}")
+        });
+    }
+}

@@ -24,6 +24,7 @@ fn main() -> anyhow::Result<()> {
             max_batch: 8,
             max_wait: Duration::from_millis(4),
         },
+        executors: 0, // auto: one executor thread per network
     })?;
 
     // single-request sanity: deterministic per seed, annotated

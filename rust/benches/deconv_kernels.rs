@@ -1,18 +1,31 @@
 //! Bench: deconvolution kernel micro-benchmarks across all three Rust
-//! algorithms and the PJRT-executed AOT artifacts — the numeric hot
-//! path audit behind EXPERIMENTS.md §Perf.
+//! algorithms, the serial-vs-parallel reverse-loop engine, and the
+//! PJRT-executed AOT artifacts — the numeric hot path audit behind
+//! EXPERIMENTS.md §Perf.
+//!
+//! Quick mode for CI: pass `--smoke` (or set `EDGEDCNN_BENCH_SMOKE=1`)
+//! to cut iteration counts so a perf regression in the parallel path
+//! fails fast without long runtimes.
 
 use edgedcnn::artifacts::artifacts_or_skip;
 use edgedcnn::config::network_by_name;
 use edgedcnn::deconv::{
-    deconv_reverse_loop, deconv_standard, deconv_tdc, ReverseLoopOpts,
+    deconv_reverse_loop, deconv_reverse_loop_par, deconv_standard,
+    deconv_tdc, ReverseLoopOpts,
 };
-use edgedcnn::runtime::{data_to_literal, tensor_to_literal, Runtime};
+use edgedcnn::runtime::{
+    data_to_literal, has_pjrt, tensor_to_literal, Runtime,
+};
 use edgedcnn::tensor::Tensor;
-use edgedcnn::util::{bench_header, Bencher, Rng};
+use edgedcnn::util::{bench_header, smoke_mode, Bencher, Rng, WorkerPool};
 
 fn main() -> anyhow::Result<()> {
     bench_header("deconv_kernels");
+    let smoke = smoke_mode();
+    let iters = if smoke { 3 } else { 20 };
+    if smoke {
+        println!("(smoke mode: {iters} iterations per case)");
+    }
 
     // Rust substrate: the three algorithms on a mid-size layer slice
     let mut rng = Rng::seed_from_u64(1);
@@ -35,11 +48,11 @@ fn main() -> anyhow::Result<()> {
     let ops = layer.ops() as f64;
 
     let r = Bencher::new("rust/standard(Eq.1 scatter)")
-        .iters(20)
+        .iters(iters)
         .run_with_ops(ops, || deconv_standard(&x, &w, &b, s, p));
     println!("{}", r.render());
     let r = Bencher::new("rust/reverse-loop(Algorithm 1)")
-        .iters(20)
+        .iters(iters)
         .run_with_ops(ops, || {
             deconv_reverse_loop(
                 &x,
@@ -55,7 +68,7 @@ fn main() -> anyhow::Result<()> {
         });
     println!("{}", r.render());
     let r = Bencher::new("rust/reverse-loop+zero-skip(50%)")
-        .iters(20)
+        .iters(iters)
         .run_with_ops(ops, || {
             let mut wz = w.clone();
             for (i, v) in wz.data_mut().iter_mut().enumerate() {
@@ -77,9 +90,52 @@ fn main() -> anyhow::Result<()> {
         });
     println!("{}", r.render());
     let r = Bencher::new("rust/tdc(stride^2 transform)")
-        .iters(20)
+        .iters(iters)
         .run_with_ops(ops, || deconv_tdc(&x, &w, &b, s, p));
     println!("{}", r.render());
+
+    // Parallel engine: serial vs parallel columns on a batch-4 slice
+    // (36 tile jobs at T=12 — enough spatial parallelism to shard).
+    let batch = 4usize;
+    let xb = Tensor::from_fn(vec![batch, c_in, i_h, i_h], |_| {
+        rng.range_f32(-1.0, 1.0)
+    });
+    let par_ops = ops * batch as f64;
+    let opts = ReverseLoopOpts {
+        tile: 12,
+        zero_skip: false,
+    };
+    let serial = Bencher::new("rust/reverse-loop-par/serial(1 worker)")
+        .iters(iters)
+        .run_with_ops(par_ops, || {
+            deconv_reverse_loop(&xb, &w, &b, s, p, opts)
+        });
+    println!("{}", serial.render());
+    let mut at4 = None;
+    for workers in [2usize, 4, 8] {
+        let pool = WorkerPool::new(workers);
+        let r = Bencher::new(&format!(
+            "rust/reverse-loop-par/{workers} workers"
+        ))
+        .iters(iters)
+        .run_with_ops(par_ops, || {
+            deconv_reverse_loop_par(&xb, &w, &b, s, p, opts, &pool)
+        });
+        println!("{}", r.render());
+        if workers == 4 {
+            at4 = Some(r.mean_s);
+        }
+    }
+    if let Some(t4) = at4 {
+        println!(
+            "parallel speedup at 4 workers: {:.2}x over serial \
+             (host has {} cores)",
+            serial.mean_s / t4,
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        );
+    }
 
     // PJRT-executed AOT artifacts: per-layer + full generator
     let Some(artifacts) = artifacts_or_skip() else {
@@ -89,40 +145,49 @@ fn main() -> anyhow::Result<()> {
     let runtime = Runtime::cpu()?;
     for name in ["mnist", "celeba"] {
         let net = network_by_name(name)?;
-        for (i, layer) in net.layers.iter().enumerate() {
-            let hlo = runtime.load_hlo(&artifacts.layer_hlo(name, i)?)?;
-            let mut rng = Rng::seed_from_u64(i as u64);
-            let x = Tensor::from_fn(
-                vec![1, layer.c_in, layer.i_h, layer.i_h],
-                |_| rng.range_f32(-1.0, 1.0),
+        if has_pjrt() {
+            for (i, layer) in net.layers.iter().enumerate() {
+                let hlo = runtime.load_hlo(&artifacts.layer_hlo(name, i)?)?;
+                let mut rng = Rng::seed_from_u64(i as u64);
+                let x = Tensor::from_fn(
+                    vec![1, layer.c_in, layer.i_h, layer.i_h],
+                    |_| rng.range_f32(-1.0, 1.0),
+                );
+                let w = Tensor::from_fn(
+                    vec![layer.c_in, layer.c_out, layer.k, layer.k],
+                    |_| 0.05 * rng.normal_f32(),
+                );
+                let b = vec![0.0f32; layer.c_out];
+                let inputs = vec![
+                    tensor_to_literal(&x)?,
+                    tensor_to_literal(&w)?,
+                    data_to_literal(&b, &[layer.c_out])?,
+                ];
+                let out_shape =
+                    vec![1, layer.c_out, layer.o_h(), layer.o_h()];
+                let r = Bencher::new(&format!("pjrt/{name}/layer{i}"))
+                    .iters(iters.min(10))
+                    .run_with_ops(layer.ops() as f64, || {
+                        hlo.run_to_tensor(&inputs, out_shape.clone()).unwrap()
+                    });
+                println!("{}", r.render());
+            }
+        } else {
+            println!(
+                "(skipping pjrt/{name}/layer benches — built without the \
+                 `pjrt` feature)"
             );
-            let w = Tensor::from_fn(
-                vec![layer.c_in, layer.c_out, layer.k, layer.k],
-                |_| 0.05 * rng.normal_f32(),
-            );
-            let b = vec![0.0f32; layer.c_out];
-            let inputs = vec![
-                tensor_to_literal(&x)?,
-                tensor_to_literal(&w)?,
-                data_to_literal(&b, &[layer.c_out])?,
-            ];
-            let out_shape = vec![1, layer.c_out, layer.o_h(), layer.o_h()];
-            let r = Bencher::new(&format!("pjrt/{name}/layer{i}"))
-                .iters(10)
-                .run_with_ops(layer.ops() as f64, || {
-                    hlo.run_to_tensor(&inputs, out_shape.clone()).unwrap()
-                });
-            println!("{}", r.render());
         }
-        // full generator at each exported batch bucket
+        // full generator at each exported batch bucket (runs on either
+        // backend; the fallback routes through the parallel substrate)
         let weights = artifacts.load_weights(name)?;
         let manifest = artifacts.network(name)?;
         for &bs in &manifest.batch_sizes {
             let exe = runtime.load_generator(&artifacts, name, bs)?;
             let mut rng = Rng::seed_from_u64(77);
             let z = Tensor::from_fn(vec![bs, net.z_dim], |_| rng.normal_f32());
-            let r = Bencher::new(&format!("pjrt/{name}/generator_b{bs}"))
-                .iters(10)
+            let r = Bencher::new(&format!("gen/{name}/generator_b{bs}"))
+                .iters(iters.min(10))
                 .run_with_ops((net.total_ops() * bs as u64) as f64, || {
                     exe.generate(&z, &weights).unwrap()
                 });

@@ -1,16 +1,20 @@
 //! Bench: Table II regeneration — the paper's headline experiment.
 //! Prints the full FPGA-vs-GPU GOps/s/W table for both networks (50
-//! measured runs each) and times the campaign itself.
+//! measured runs each) and times the campaign itself, plus serial vs
+//! parallel columns for the network-level simulator sweep.
 //!
 //! (criterion is not available offline; `util::Bencher` provides the
 //! warm-up/iterate/report harness — see DESIGN.md §Offline-environment.)
+//! Quick mode: `--smoke` or `EDGEDCNN_BENCH_SMOKE=1`.
 
 use edgedcnn::config::{JETSON_TX1, PYNQ_Z2};
 use edgedcnn::experiments as exp;
-use edgedcnn::util::{bench_header, Bencher};
+use edgedcnn::util::{bench_header, smoke_mode, Bencher, WorkerPool};
 
 fn main() -> anyhow::Result<()> {
     bench_header("table2_throughput (paper Table II)");
+    let smoke = smoke_mode();
+    let iters = if smoke { 2 } else { 10 };
 
     for net in ["mnist", "celeba"] {
         let data = exp::run_table2(net, &PYNQ_Z2, &JETSON_TX1, 50, 42)?;
@@ -20,7 +24,7 @@ fn main() -> anyhow::Result<()> {
     // how fast is one full 50-run measurement campaign?
     for net in ["mnist", "celeba"] {
         let r = Bencher::new(&format!("table2/{net}/50-runs"))
-            .iters(10)
+            .iters(iters)
             .run(|| {
                 exp::run_table2(net, &PYNQ_Z2, &JETSON_TX1, 50, 42).unwrap()
             });
@@ -29,16 +33,35 @@ fn main() -> anyhow::Result<()> {
 
     // per-layer FPGA pipeline simulation cost (the simulator hot path)
     use edgedcnn::config::network_by_name;
-    use edgedcnn::fpga::{simulate_layer, SimOpts};
+    use edgedcnn::fpga::{
+        simulate_layer, simulate_network, simulate_network_par, SimOpts,
+    };
     for name in ["mnist", "celeba"] {
         let net = network_by_name(name)?;
         for (i, layer) in net.layers.iter().enumerate() {
             let opts = SimOpts::dense(net.tile);
             let r = Bencher::new(&format!("simulate_layer/{name}/L{}", i + 1))
-                .iters(100)
+                .iters(if smoke { 10 } else { 100 })
                 .run_with_ops(layer.ops() as f64, || {
                     simulate_layer(layer, &PYNQ_Z2, &opts)
                 });
+            println!("{}", r.render());
+        }
+
+        // serial vs parallel columns for the whole-network sweep
+        let opts: Vec<SimOpts> =
+            net.layers.iter().map(|_| SimOpts::dense(net.tile)).collect();
+        let r = Bencher::new(&format!("simulate_network/{name}/serial"))
+            .iters(if smoke { 10 } else { 100 })
+            .run(|| simulate_network(&net, &PYNQ_Z2, &opts));
+        println!("{}", r.render());
+        for workers in [2usize, 4] {
+            let pool = WorkerPool::new(workers);
+            let r = Bencher::new(&format!(
+                "simulate_network/{name}/{workers} workers"
+            ))
+            .iters(if smoke { 10 } else { 100 })
+            .run(|| simulate_network_par(&net, &PYNQ_Z2, &opts, &pool));
             println!("{}", r.render());
         }
     }

@@ -1,0 +1,509 @@
+//! Artifact-set access — the Rust side of the `make artifacts` contract
+//! (see `python/compile/aot.py`, which writes the directory this module
+//! reads):
+//!
+//! * `manifest.json` — shapes, batch buckets, artifact paths, op counts;
+//! * `weights/<net>_l<i>_{w,b}.npy` — trained WGAN-GP weights;
+//! * `<net>_truth.npy` — ground-truth sample batch for the Fig. 6 MMD;
+//! * `<net>_gen_b<N>.hlo.txt`, `<net>_layer<i>_b1.hlo.txt` — AOT HLO
+//!   text (consumed only by the `pjrt`-feature runtime).
+//!
+//! [`write_synthetic`] fabricates a weights+truth+manifest set (no HLO
+//! text) from random draws, so the serving coordinator, Fig. 6 sweep and
+//! the parallel-engine tests run end to end in environments where the
+//! Python/JAX build layer never ran.  [`artifacts_or_skip`] deliberately
+//! rejects such incomplete sets: the tests it guards assert properties of
+//! *trained* artifacts.
+
+use crate::config::{network_by_name, DeconvLayerCfg, NetworkCfg};
+use crate::tensor::Tensor;
+use crate::util::{parse_json, Json, Rng};
+use anyhow::{ensure, Context, Result};
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+/// One network's manifest entry (the `networks.<name>` object).
+#[derive(Debug, Clone)]
+pub struct NetworkManifest {
+    pub name: String,
+    pub z_dim: usize,
+    pub tile: usize,
+    pub image_size: usize,
+    pub image_channels: usize,
+    /// Exported generator batch buckets, ascending.
+    pub batch_sizes: Vec<usize>,
+    /// Generator HLO file per bucket.
+    pub generators: BTreeMap<usize, String>,
+    /// Per-layer HLO files (batch 1).
+    pub layer_artifacts: Vec<String>,
+    /// Per-layer `(weights, bias)` npy files.
+    pub weight_files: Vec<(String, String)>,
+    /// Ground-truth sample batch npy.
+    pub truth: String,
+}
+
+/// An opened artifact directory with its parsed manifest.
+#[derive(Debug, Clone)]
+pub struct ArtifactDir {
+    pub root: PathBuf,
+    manifest: Json,
+}
+
+impl ArtifactDir {
+    /// Open `dir`, requiring a parseable `manifest.json`.
+    pub fn open(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let manifest = parse_json(&text)
+            .with_context(|| format!("parsing {}", path.display()))?;
+        let version = manifest.req("version")?.as_usize()?;
+        ensure!(version == 1, "unsupported manifest version {version}");
+        Ok(ArtifactDir {
+            root: dir.to_path_buf(),
+            manifest,
+        })
+    }
+
+    /// Open the default location: `$EDGEDCNN_ARTIFACTS`, `./artifacts`,
+    /// or `../artifacts` (the aot.py default relative to `rust/`).
+    pub fn open_default() -> Result<Self> {
+        let mut tried = Vec::new();
+        for cand in default_candidates() {
+            if cand.join("manifest.json").exists() {
+                return Self::open(&cand);
+            }
+            tried.push(cand.display().to_string());
+        }
+        anyhow::bail!(
+            "no artifact set found (tried: {}) — run `make artifacts` or \
+             `edgedcnn synth`",
+            tried.join(", ")
+        )
+    }
+
+    fn net_json(&self, name: &str) -> Result<&Json> {
+        self.manifest
+            .req("networks")?
+            .get(name)
+            .ok_or_else(|| {
+                anyhow::anyhow!("network {name:?} not in the manifest")
+            })
+    }
+
+    /// Parse one network's manifest entry.
+    pub fn network(&self, name: &str) -> Result<NetworkManifest> {
+        let j = self.net_json(name)?;
+        let batch_sizes: Vec<usize> = j
+            .req("batch_sizes")?
+            .as_arr()?
+            .iter()
+            .map(|b| b.as_usize())
+            .collect::<Result<_>>()?;
+        let mut generators = BTreeMap::new();
+        for (k, v) in j.req("generators")?.as_obj()? {
+            let bucket: usize = k
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad generator bucket {k:?}"))?;
+            generators.insert(bucket, v.as_str()?.to_string());
+        }
+        let layer_artifacts: Vec<String> = j
+            .req("layer_artifacts")?
+            .as_arr()?
+            .iter()
+            .map(|a| Ok(a.as_str()?.to_string()))
+            .collect::<Result<_>>()?;
+        let weight_files: Vec<(String, String)> = j
+            .req("weights")?
+            .as_arr()?
+            .iter()
+            .map(|e| {
+                Ok((
+                    e.req("w")?.as_str()?.to_string(),
+                    e.req("b")?.as_str()?.to_string(),
+                ))
+            })
+            .collect::<Result<_>>()?;
+        Ok(NetworkManifest {
+            name: j.req("name")?.as_str()?.to_string(),
+            z_dim: j.req("z_dim")?.as_usize()?,
+            tile: j.req("tile")?.as_usize()?,
+            image_size: j.req("image_size")?.as_usize()?,
+            image_channels: j.req("image_channels")?.as_usize()?,
+            batch_sizes,
+            generators,
+            layer_artifacts,
+            weight_files,
+            truth: j.req("truth")?.as_str()?.to_string(),
+        })
+    }
+
+    /// Reconstruct the [`NetworkCfg`] the manifest describes (layer by
+    /// layer, so divergence from the built-in config is detectable).
+    pub fn network_cfg(&self, name: &str) -> Result<NetworkCfg> {
+        let j = self.net_json(name)?;
+        let m = self.network(name)?;
+        let layers: Vec<DeconvLayerCfg> = j
+            .req("layers")?
+            .as_arr()?
+            .iter()
+            .map(|l| {
+                Ok(DeconvLayerCfg {
+                    c_in: l.req("c_in")?.as_usize()?,
+                    c_out: l.req("c_out")?.as_usize()?,
+                    k: l.req("k")?.as_usize()?,
+                    stride: l.req("stride")?.as_usize()?,
+                    padding: l.req("padding")?.as_usize()?,
+                    i_h: l.req("i_h")?.as_usize()?,
+                })
+            })
+            .collect::<Result<_>>()?;
+        ensure!(!layers.is_empty(), "manifest/{name} has no layers");
+        Ok(NetworkCfg {
+            name: m.name,
+            z_dim: m.z_dim,
+            layers,
+            image_channels: m.image_channels,
+            image_size: m.image_size,
+            tile: m.tile,
+        })
+    }
+
+    /// Load every layer's `(weights, bias)` pair.
+    pub fn load_weights(&self, name: &str) -> Result<Vec<(Tensor, Vec<f32>)>> {
+        let m = self.network(name)?;
+        let mut out = Vec::with_capacity(m.weight_files.len());
+        for (wf, bf) in &m.weight_files {
+            let w = Tensor::read_npy(&self.root.join(wf))
+                .with_context(|| format!("loading weights {wf}"))?;
+            ensure!(
+                w.shape().len() == 4,
+                "weight file {wf} is not rank-4 (got {:?})",
+                w.shape()
+            );
+            let (bshape, bias) = crate::tensor::read_npy_f32(&self.root.join(bf))
+                .with_context(|| format!("loading bias {bf}"))?;
+            ensure!(
+                bshape.len() == 1 && bshape[0] == bias.len(),
+                "bias file {bf} is not a vector"
+            );
+            out.push((w, bias));
+        }
+        Ok(out)
+    }
+
+    /// Load the ground-truth sample batch `[N, C, H, W]`.
+    pub fn load_truth(&self, name: &str) -> Result<Tensor> {
+        let m = self.network(name)?;
+        let t = Tensor::read_npy(&self.root.join(&m.truth))
+            .with_context(|| format!("loading truth {}", m.truth))?;
+        ensure!(
+            t.shape().len() == 4,
+            "truth batch is not rank-4 (got {:?})",
+            t.shape()
+        );
+        Ok(t)
+    }
+
+    /// Resolve the generator artifact for a wanted batch size: the
+    /// smallest exported bucket ≥ `want`, else the largest (the dynamic
+    /// batcher then splits).  Returns `(bucket, path)`.
+    pub fn generator_hlo(
+        &self,
+        name: &str,
+        want: usize,
+    ) -> Result<(usize, PathBuf)> {
+        let m = self.network(name)?;
+        ensure!(!m.generators.is_empty(), "{name}: no generator artifacts");
+        let bucket = m
+            .batch_sizes
+            .iter()
+            .copied()
+            .filter(|b| *b >= want)
+            .min()
+            .unwrap_or_else(|| {
+                m.batch_sizes.iter().copied().max().unwrap_or(1)
+            });
+        let file = m.generators.get(&bucket).ok_or_else(|| {
+            anyhow::anyhow!("{name}: bucket {bucket} missing a generator")
+        })?;
+        Ok((bucket, self.root.join(file)))
+    }
+
+    /// Path of layer `i`'s single-layer HLO artifact.
+    pub fn layer_hlo(&self, name: &str, i: usize) -> Result<PathBuf> {
+        let m = self.network(name)?;
+        let file = m.layer_artifacts.get(i).ok_or_else(|| {
+            anyhow::anyhow!(
+                "{name}: layer {i} out of range ({} artifacts)",
+                m.layer_artifacts.len()
+            )
+        })?;
+        Ok(self.root.join(file))
+    }
+
+    /// Names of all networks in the manifest.
+    pub fn network_names(&self) -> Result<Vec<String>> {
+        Ok(self
+            .manifest
+            .req("networks")?
+            .as_obj()?
+            .keys()
+            .cloned()
+            .collect())
+    }
+
+    /// Is every file the manifest references present on disk?  `false`
+    /// for synthetic sets (no HLO text) and partial exports.
+    pub fn is_complete(&self) -> bool {
+        let Ok(names) = self.network_names() else {
+            return false;
+        };
+        for name in names {
+            let Ok(m) = self.network(&name) else {
+                return false;
+            };
+            let mut files: Vec<String> =
+                m.generators.values().cloned().collect();
+            files.extend(m.layer_artifacts.iter().cloned());
+            files.push(m.truth.clone());
+            for (w, b) in &m.weight_files {
+                files.push(w.clone());
+                files.push(b.clone());
+            }
+            if files.iter().any(|f| !self.root.join(f).exists()) {
+                return false;
+            }
+        }
+        true
+    }
+}
+
+fn default_candidates() -> Vec<PathBuf> {
+    let mut out = Vec::new();
+    if let Ok(env) = std::env::var("EDGEDCNN_ARTIFACTS") {
+        out.push(PathBuf::from(env));
+    }
+    out.push(PathBuf::from("artifacts"));
+    out.push(PathBuf::from("../artifacts"));
+    out
+}
+
+/// Open the default artifact set for a test/bench, or print a skip
+/// notice and return `None`.  Requires a *complete* set (all HLO, weight
+/// and truth files present): the guarded tests assert properties of
+/// trained artifacts that synthetic weight sets do not satisfy.
+pub fn artifacts_or_skip() -> Option<ArtifactDir> {
+    match ArtifactDir::open_default() {
+        Ok(a) if a.is_complete() => Some(a),
+        Ok(a) => {
+            eprintln!(
+                "(skipping: artifact set at {} is incomplete — run \
+                 `make artifacts`)",
+                a.root.display()
+            );
+            None
+        }
+        Err(_) => {
+            eprintln!("(skipping: no artifacts — run `make artifacts`)");
+            None
+        }
+    }
+}
+
+/// Batch buckets mirrored from `python/compile/aot.py::BATCH_SIZES`.
+fn synthetic_buckets(name: &str) -> Vec<usize> {
+    match name {
+        "celeba" => vec![1, 4],
+        _ => vec![1, 4, 8],
+    }
+}
+
+/// Fabricate a weights+truth+manifest artifact set from seeded random
+/// draws (no training, no HLO text).  Enough for the fallback runtime,
+/// the serving coordinator and the parallel-engine tests to run the full
+/// stack without the Python build layer.
+pub fn write_synthetic(
+    dir: &Path,
+    networks: &[&str],
+    truth_samples: usize,
+    seed: u64,
+) -> Result<ArtifactDir> {
+    ensure!(truth_samples >= 2, "need at least two truth samples");
+    std::fs::create_dir_all(dir.join("weights"))
+        .with_context(|| format!("creating {}", dir.display()))?;
+    let mut nets_json = String::new();
+    for (ni, name) in networks.iter().enumerate() {
+        let cfg = network_by_name(name)?;
+        let mut rng = Rng::seed_from_u64(seed ^ (ni as u64).wrapping_mul(0x9E37));
+
+        let mut weights_json = String::new();
+        for (i, layer) in cfg.layers.iter().enumerate() {
+            let w = Tensor::from_fn(
+                vec![layer.c_in, layer.c_out, layer.k, layer.k],
+                |_| 0.05 * rng.normal_f32(),
+            );
+            let b: Vec<f32> =
+                (0..layer.c_out).map(|_| 0.01 * rng.normal_f32()).collect();
+            let wf = format!("weights/{name}_l{i}_w.npy");
+            let bf = format!("weights/{name}_l{i}_b.npy");
+            w.write_npy(&dir.join(&wf))?;
+            crate::tensor::write_npy_f32(&dir.join(&bf), &[b.len()], &b)?;
+            if i > 0 {
+                weights_json.push_str(", ");
+            }
+            weights_json
+                .push_str(&format!(r#"{{"w": "{wf}", "b": "{bf}"}}"#));
+        }
+
+        // truth batch: tanh-squashed draws so every value is in (-1, 1)
+        let truth = Tensor::from_fn(
+            vec![
+                truth_samples,
+                cfg.image_channels,
+                cfg.image_size,
+                cfg.image_size,
+            ],
+            |_| (0.7 * rng.normal_f32()).tanh(),
+        );
+        let truth_file = format!("{name}_truth.npy");
+        truth.write_npy(&dir.join(&truth_file))?;
+
+        let buckets = synthetic_buckets(name);
+        let batch_sizes_json = buckets
+            .iter()
+            .map(|b| b.to_string())
+            .collect::<Vec<_>>()
+            .join(", ");
+        let generators_json = buckets
+            .iter()
+            .map(|b| format!(r#""{b}": "{name}_gen_b{b}.hlo.txt""#))
+            .collect::<Vec<_>>()
+            .join(", ");
+        let layer_artifacts_json = (0..cfg.layers.len())
+            .map(|i| format!(r#""{name}_layer{i}_b1.hlo.txt""#))
+            .collect::<Vec<_>>()
+            .join(", ");
+        let layers_json = cfg
+            .layers
+            .iter()
+            .map(|l| {
+                format!(
+                    r#"{{"c_in": {}, "c_out": {}, "k": {}, "stride": {}, "padding": {}, "i_h": {}, "o_h": {}, "ops": {}, "macs": {}}}"#,
+                    l.c_in,
+                    l.c_out,
+                    l.k,
+                    l.stride,
+                    l.padding,
+                    l.i_h,
+                    l.o_h(),
+                    l.ops(),
+                    l.macs()
+                )
+            })
+            .collect::<Vec<_>>()
+            .join(", ");
+        let param_order_json = std::iter::once(r#""z""#.to_string())
+            .chain((0..cfg.layers.len()).flat_map(|i| {
+                [format!(r#""w{i}""#), format!(r#""b{i}""#)]
+            }))
+            .collect::<Vec<_>>()
+            .join(", ");
+
+        if ni > 0 {
+            nets_json.push_str(",\n");
+        }
+        nets_json.push_str(&format!(
+            r#" "{name}": {{
+  "name": "{name}",
+  "synthetic": true,
+  "z_dim": {z_dim},
+  "tile": {tile},
+  "image_size": {image_size},
+  "image_channels": {image_channels},
+  "batch_sizes": [{batch_sizes_json}],
+  "generators": {{{generators_json}}},
+  "layer_artifacts": [{layer_artifacts_json}],
+  "weights": [{weights_json}],
+  "truth": "{truth_file}",
+  "train_log": "train_log_{name}.json",
+  "layers": [{layers_json}],
+  "param_order": [{param_order_json}]
+ }}"#,
+            z_dim = cfg.z_dim,
+            tile = cfg.tile,
+            image_size = cfg.image_size,
+            image_channels = cfg.image_channels,
+        ));
+    }
+
+    let manifest = format!(
+        "{{\n \"version\": 1,\n \"networks\": {{\n{nets_json}\n }}\n}}\n"
+    );
+    let mut f = std::fs::File::create(dir.join("manifest.json"))?;
+    f.write_all(manifest.as_bytes())?;
+    ArtifactDir::open(dir)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::TempDir;
+
+    #[test]
+    fn synthetic_roundtrip_mnist() {
+        let dir = TempDir::new().unwrap();
+        let a = write_synthetic(dir.path(), &["mnist"], 4, 7).unwrap();
+        let m = a.network("mnist").unwrap();
+        assert_eq!(m.z_dim, 100);
+        assert_eq!(m.batch_sizes, vec![1, 4, 8]);
+        assert_eq!(m.weight_files.len(), 3);
+        let cfg = a.network_cfg("mnist").unwrap();
+        assert_eq!(cfg.layers, network_by_name("mnist").unwrap().layers);
+        let weights = a.load_weights("mnist").unwrap();
+        assert_eq!(weights.len(), 3);
+        assert_eq!(weights[0].0.shape(), &[100, 128, 7, 7]);
+        assert_eq!(weights[2].1.len(), 1);
+        let truth = a.load_truth("mnist").unwrap();
+        assert_eq!(truth.shape(), &[4, 1, 28, 28]);
+        assert!(truth.data().iter().all(|v| v.abs() <= 1.0));
+    }
+
+    #[test]
+    fn synthetic_is_incomplete_without_hlo() {
+        let dir = TempDir::new().unwrap();
+        let a = write_synthetic(dir.path(), &["mnist"], 2, 1).unwrap();
+        assert!(!a.is_complete(), "no HLO text → incomplete by design");
+    }
+
+    #[test]
+    fn bucket_selection_rounds_up_then_caps() {
+        let dir = TempDir::new().unwrap();
+        let a = write_synthetic(dir.path(), &["mnist"], 2, 1).unwrap();
+        assert_eq!(a.generator_hlo("mnist", 1).unwrap().0, 1);
+        assert_eq!(a.generator_hlo("mnist", 3).unwrap().0, 4);
+        assert_eq!(a.generator_hlo("mnist", 8).unwrap().0, 8);
+        assert_eq!(a.generator_hlo("mnist", 100).unwrap().0, 8);
+    }
+
+    #[test]
+    fn missing_dir_and_network_error() {
+        assert!(ArtifactDir::open(Path::new("/nonexistent/x")).is_err());
+        let dir = TempDir::new().unwrap();
+        let a = write_synthetic(dir.path(), &["mnist"], 2, 1).unwrap();
+        assert!(a.network("imagenet").is_err());
+        assert!(a.layer_hlo("mnist", 99).is_err());
+    }
+
+    #[test]
+    fn determinism_given_seed() {
+        let d1 = TempDir::new().unwrap();
+        let d2 = TempDir::new().unwrap();
+        let a = write_synthetic(d1.path(), &["mnist"], 2, 42).unwrap();
+        let b = write_synthetic(d2.path(), &["mnist"], 2, 42).unwrap();
+        let wa = a.load_weights("mnist").unwrap();
+        let wb = b.load_weights("mnist").unwrap();
+        assert_eq!(wa[0].0.data(), wb[0].0.data());
+    }
+}

@@ -1,9 +1,23 @@
 //! The coordinator proper: a **leader thread** (request intake + dynamic
-//! batching + dispatch) and a **device-executor thread** (PJRT numerics +
-//! FPGA/GPU edge-timing annotations + power integration), joined by
-//! channels — the same split a vLLM-style router runs, implemented on
-//! std threads (the offline build environment ships no async runtime;
-//! see DESIGN.md §Offline-environment).
+//! batching + dispatch) and a **pool of device-executor threads** (PJRT
+//! or pure-Rust numerics + FPGA/GPU edge-timing annotations + power
+//! integration), joined by channels — the same split a vLLM-style router
+//! runs, implemented on std threads (the offline build environment ships
+//! no async runtime; see DESIGN.md §Offline-environment).
+//!
+//! Executor-pool design:
+//!
+//! * each executor owns its own `Runtime` and compiled executables (PJRT
+//!   handles are not `Sync`), plus its own GPU thermal state;
+//! * batches route by **per-network affinity** (network → executor), so
+//!   one network's batches stay ordered on one device and its DVFS/cache
+//!   state remains coherent, while distinct networks execute truly
+//!   concurrently;
+//! * the leader never blocks on execution: the reply channels travel
+//!   with the batch, the executor records metrics and resolves waiters
+//!   itself, and the leader goes straight back to intake/batching — so
+//!   `serve_workload` scales with cores instead of serializing through
+//!   one dispatch round-trip.
 
 use super::batcher::{Batch, BatcherConfig, DynamicBatcher};
 use super::metrics::{MetricsRegistry, ServingReport};
@@ -14,7 +28,7 @@ use crate::fpga::{simulate_network, SimOpts};
 use crate::gpu::{expected_gpu_network_time, ThermalThrottle};
 use crate::runtime::{GeneratorExecutable, Runtime};
 use crate::tensor::Tensor;
-use crate::util::Rng;
+use crate::util::{Rng, WorkerPool};
 use anyhow::{Context, Result};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -29,6 +43,9 @@ pub struct CoordinatorConfig {
     /// request path).
     pub networks: Vec<String>,
     pub batcher: BatcherConfig,
+    /// Device-executor threads.  `0` = auto: one per preloaded network
+    /// (per-network affinity makes more executors than networks idle).
+    pub executors: usize,
 }
 
 impl Default for CoordinatorConfig {
@@ -37,6 +54,7 @@ impl Default for CoordinatorConfig {
             artifacts_dir: "artifacts".into(),
             networks: vec!["mnist".to_string()],
             batcher: BatcherConfig::default(),
+            executors: 0,
         }
     }
 }
@@ -60,7 +78,9 @@ enum LeaderCmd {
 enum DeviceCmd {
     Execute {
         batch: Batch,
-        reply: mpsc::Sender<Result<ExecutedBatch>>,
+        /// Reply channel per request id; dropped on failure so callers
+        /// observe an error instead of hanging.
+        replies: Vec<(u64, mpsc::Sender<InferenceResponse>)>,
     },
     Shutdown,
 }
@@ -72,7 +92,7 @@ struct ExecutedBatch {
     energy_j: f64,
 }
 
-/// Per-network state owned by the device thread.
+/// Per-network state owned by one executor thread.
 struct NetState {
     cfg: NetworkCfg,
     /// Executables keyed by batch bucket.
@@ -103,45 +123,83 @@ impl ResponseHandle {
     }
 }
 
-/// The edge-serving coordinator (leader).
+/// The edge-serving coordinator (leader + executor pool).
 pub struct Coordinator {
     tx_leader: mpsc::Sender<LeaderCmd>,
     metrics: Arc<Mutex<MetricsRegistry>>,
     next_id: AtomicU64,
     started: Instant,
+    executors: usize,
     leader: Option<std::thread::JoinHandle<()>>,
 }
 
 impl Coordinator {
-    /// Start the device thread (compiling all executables) and the
-    /// leader/batching thread.
+    /// Start the executor pool (each thread compiling all executables)
+    /// and the leader/batching thread.
     pub fn start(config: CoordinatorConfig) -> Result<Self> {
-        let (tx_dev, rx_dev) = mpsc::channel::<DeviceCmd>();
-        let (tx_ready, rx_ready) = mpsc::channel::<Result<()>>();
-        let cfg = config.clone();
-        std::thread::Builder::new()
-            .name("edgedcnn-device".into())
-            .spawn(move || device_thread(cfg, rx_dev, tx_ready))
-            .context("spawning device thread")?;
-        rx_ready
-            .recv()
-            .context("device thread died during startup")??;
-
+        let n_exec = if config.executors == 0 {
+            config.networks.len().max(1)
+        } else {
+            config.executors
+        };
         let metrics = Arc::new(Mutex::new(MetricsRegistry::new()));
+
+        let mut exec_txs = Vec::with_capacity(n_exec);
+        let mut exec_handles = Vec::with_capacity(n_exec);
+        let mut readiness = Vec::with_capacity(n_exec);
+        for i in 0..n_exec {
+            let (tx_dev, rx_dev) = mpsc::channel::<DeviceCmd>();
+            let (tx_ready, rx_ready) = mpsc::channel::<Result<()>>();
+            let cfg = config.clone();
+            let m = metrics.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("edgedcnn-device-{i}"))
+                .spawn(move || device_thread(cfg, i, n_exec, rx_dev, tx_ready, m))
+                .context("spawning device thread")?;
+            exec_txs.push(tx_dev);
+            exec_handles.push(handle);
+            readiness.push(rx_ready);
+        }
+        for rx in readiness {
+            rx.recv()
+                .context("device thread died during startup")??;
+        }
+
+        // Per-network affinity: network i → executor i mod pool.
+        let affinity: HashMap<String, usize> = config
+            .networks
+            .iter()
+            .enumerate()
+            .map(|(i, n)| (n.clone(), i % n_exec))
+            .collect();
+
         let (tx_leader, rx_leader) = mpsc::channel::<LeaderCmd>();
-        let m = metrics.clone();
         let batcher_cfg = config.batcher;
         let leader = std::thread::Builder::new()
             .name("edgedcnn-leader".into())
-            .spawn(move || leader_thread(batcher_cfg, rx_leader, tx_dev, m))
+            .spawn(move || {
+                leader_thread(
+                    batcher_cfg,
+                    rx_leader,
+                    exec_txs,
+                    affinity,
+                    exec_handles,
+                )
+            })
             .context("spawning leader thread")?;
         Ok(Coordinator {
             tx_leader,
             metrics,
             next_id: AtomicU64::new(1),
             started: Instant::now(),
+            executors: n_exec,
             leader: Some(leader),
         })
+    }
+
+    /// Width of the executor pool actually running.
+    pub fn executors(&self) -> usize {
+        self.executors
     }
 
     /// Submit one request; returns a handle resolving when its batch has
@@ -223,12 +281,14 @@ impl Drop for Coordinator {
     }
 }
 
-/// Leader loop: intake → dynamic batching (deadline-driven) → dispatch.
+/// Leader loop: intake → dynamic batching (deadline-driven) → dispatch
+/// to the affine executor (never blocking on execution).
 fn leader_thread(
     config: BatcherConfig,
     rx: mpsc::Receiver<LeaderCmd>,
-    tx_dev: mpsc::Sender<DeviceCmd>,
-    metrics: Arc<Mutex<MetricsRegistry>>,
+    executors: Vec<mpsc::Sender<DeviceCmd>>,
+    affinity: HashMap<String, usize>,
+    exec_handles: Vec<std::thread::JoinHandle<()>>,
 ) {
     let mut batcher = DynamicBatcher::new(config);
     let mut waiters: HashMap<u64, mpsc::Sender<InferenceResponse>> =
@@ -251,10 +311,9 @@ fn leader_thread(
                 Err(_) => break,
             },
         };
-        // §Perf L3: requests arriving while the device executes pile up in
-        // the channel — drain the whole burst into the batcher *before*
-        // cutting, so continuous batching actually coalesces (before this
-        // drain the mean served batch was ~2 at max_batch 8).
+        // §Perf L3: requests arriving while the devices execute pile up
+        // in the channel — drain the whole burst into the batcher
+        // *before* cutting, so continuous batching actually coalesces.
         let mut cuts: Vec<Batch> = Vec::new();
         let ingest = |cmd: LeaderCmd,
                           batcher: &mut DynamicBatcher,
@@ -294,88 +353,94 @@ fn leader_thread(
             }
         }
         for batch in cuts {
-            dispatch(&tx_dev, batch, &mut waiters, &metrics);
+            dispatch(&executors, &affinity, batch, &mut waiters);
         }
         // drain any additional ready batches (e.g. other networks)
         while let Some(batch) = batcher.poll(Instant::now()) {
-            dispatch(&tx_dev, batch, &mut waiters, &metrics);
+            dispatch(&executors, &affinity, batch, &mut waiters);
         }
         if shutdown {
             break 'outer;
         }
     }
-    // flush whatever is still queued, then stop the device
+    // flush whatever is still queued, then stop the executor pool
     let flush_at = Instant::now() + config.max_wait + Duration::from_secs(1);
     while batcher.queued() > 0 {
         match batcher.poll(flush_at) {
-            Some(batch) => dispatch(&tx_dev, batch, &mut waiters, &metrics),
+            Some(batch) => {
+                dispatch(&executors, &affinity, batch, &mut waiters)
+            }
             None => break,
         }
     }
-    let _ = tx_dev.send(DeviceCmd::Shutdown);
+    for tx in &executors {
+        let _ = tx.send(DeviceCmd::Shutdown);
+    }
+    for h in exec_handles {
+        let _ = h.join();
+    }
 }
 
+/// Route a batch to its network's executor.  Non-blocking: the reply
+/// channels travel with the batch, so the leader returns to intake
+/// immediately and distinct networks execute concurrently.
 fn dispatch(
-    tx_dev: &mpsc::Sender<DeviceCmd>,
+    executors: &[mpsc::Sender<DeviceCmd>],
+    affinity: &HashMap<String, usize>,
     batch: Batch,
     waiters: &mut HashMap<u64, mpsc::Sender<InferenceResponse>>,
-    metrics: &Arc<Mutex<MetricsRegistry>>,
 ) {
-    let ids: Vec<u64> = batch.requests.iter().map(|r| r.id).collect();
-    // on any failure below, drop the waiters so callers observe an error
-    // instead of hanging
-    let fail = |waiters: &mut HashMap<u64, mpsc::Sender<InferenceResponse>>| {
-        for id in &ids {
-            waiters.remove(id);
+    let idx = affinity
+        .get(&batch.network)
+        .copied()
+        .unwrap_or(0)
+        .min(executors.len().saturating_sub(1));
+    let mut replies = Vec::with_capacity(batch.requests.len());
+    for r in &batch.requests {
+        if let Some(tx) = waiters.remove(&r.id) {
+            replies.push((r.id, tx));
         }
-    };
-    let (tx, rx) = mpsc::channel();
-    if tx_dev
-        .send(DeviceCmd::Execute { batch, reply: tx })
+    }
+    if executors[idx]
+        .send(DeviceCmd::Execute { batch, replies })
         .is_err()
     {
-        fail(waiters);
-        return;
-    }
-    match rx.recv() {
-        Ok(Ok(done)) => {
-            let mut m = metrics.lock().unwrap();
-            m.record_batch(
-                done.execute_s,
-                done.responses.iter().map(|r| r.images.shape()[0]).sum(),
-                done.ops,
-            );
-            m.record_energy(done.energy_j);
-            for resp in done.responses {
-                m.record_request(resp.latency_s, resp.images.shape()[0]);
-                if let Some(w) = waiters.remove(&resp.id) {
-                    let _ = w.send(resp);
-                }
-            }
-        }
-        Ok(Err(e)) => {
-            eprintln!("device execution failed: {e:#}");
-            fail(waiters);
-        }
-        Err(_) => {
-            eprintln!("device thread dropped a batch");
-            fail(waiters);
-        }
+        // executor gone: the replies just dropped, so every caller of
+        // this batch observes an error instead of hanging
+        eprintln!("executor {idx} is down; dropping a batch");
     }
 }
 
-/// The device-executor thread: owns the PJRT runtime and all compiled
-/// executables; also carries the FPGA/GPU edge models for annotations.
+/// One device-executor thread: owns a runtime and the compiled
+/// executables of *its affine networks only* (affinity is static, so
+/// loading the rest would waste startup time and memory pool-wide);
+/// also carries the FPGA/GPU edge models for annotations.  Records
+/// metrics and resolves waiters itself so the leader never blocks on
+/// execution.
 fn device_thread(
     config: CoordinatorConfig,
+    exec_index: usize,
+    n_exec: usize,
     rx: mpsc::Receiver<DeviceCmd>,
     ready: mpsc::Sender<Result<()>>,
+    metrics: Arc<Mutex<MetricsRegistry>>,
 ) {
     let setup = (|| -> Result<(Runtime, HashMap<String, NetState>)> {
         let artifacts = ArtifactDir::open(&config.artifacts_dir)?;
-        let runtime = Runtime::cpu()?;
+        // split the host's compute budget across the pool so executors
+        // running concurrently don't oversubscribe the CPU (the width
+        // honours the EDGEDCNN_WORKERS override)
+        let host_workers = WorkerPool::with_default_parallelism().workers();
+        let runtime = Runtime::cpu_with_workers(
+            (host_workers / n_exec).max(1),
+        )?;
         let mut nets = HashMap::new();
-        for name in &config.networks {
+        for (ni, name) in config.networks.iter().enumerate() {
+            // mirror of the leader's affinity map: network i → executor
+            // i mod n_exec
+            if ni % n_exec != exec_index {
+                continue;
+            }
             let manifest_net = artifacts.network(name)?;
             let cfg = artifacts.network_cfg(name)?;
             // sanity: manifest must agree with the built-in architecture
@@ -423,10 +488,38 @@ fn device_thread(
     while let Ok(cmd) = rx.recv() {
         match cmd {
             DeviceCmd::Shutdown => break,
-            DeviceCmd::Execute { batch, reply } => {
-                let result =
-                    execute_batch(&mut nets, &mut gpu_throttle, batch);
-                let _ = reply.send(result);
+            DeviceCmd::Execute { batch, replies } => {
+                match execute_batch(&mut nets, &mut gpu_throttle, batch) {
+                    Ok(done) => {
+                        let mut reply_by_id: HashMap<
+                            u64,
+                            mpsc::Sender<InferenceResponse>,
+                        > = replies.into_iter().collect();
+                        let mut m = metrics.lock().unwrap();
+                        m.record_batch(
+                            done.execute_s,
+                            done.responses
+                                .iter()
+                                .map(|r| r.images.shape()[0])
+                                .sum(),
+                            done.ops,
+                        );
+                        m.record_energy(done.energy_j);
+                        for resp in done.responses {
+                            m.record_request(
+                                resp.latency_s,
+                                resp.images.shape()[0],
+                            );
+                            if let Some(tx) = reply_by_id.remove(&resp.id) {
+                                let _ = tx.send(resp);
+                            }
+                        }
+                    }
+                    Err(e) => {
+                        eprintln!("device execution failed: {e:#}");
+                        // dropping `replies` errors the callers
+                    }
+                }
             }
         }
     }

@@ -21,7 +21,9 @@ mod tdc;
 mod tiling;
 
 pub use offsets::{modulo_cost_naive, modulo_cost_precomputed, stride_hole_offsets};
-pub use reverse_loop::{deconv_reverse_loop, OpStats, ReverseLoopOpts};
+pub use reverse_loop::{
+    deconv_reverse_loop, deconv_reverse_loop_par, OpStats, ReverseLoopOpts,
+};
 pub use standard::deconv_standard;
 pub use tdc::{
     deconv_tdc, tdc_filter_count, tdc_subfilter_extent, tdc_transform_weights,
@@ -30,6 +32,7 @@ pub use tiling::{input_tile_extent, legal_tiles, TileSchedule};
 
 use crate::config::{DeconvLayerCfg, NetworkCfg};
 use crate::tensor::Tensor;
+use crate::util::WorkerPool;
 
 /// Output spatial extent of a layer: `(I-1)·S + K - 2P`.
 pub fn output_size(i: usize, k: usize, s: usize, p: usize) -> usize {
@@ -56,6 +59,19 @@ pub fn generator_forward(
     weights: &[(Tensor, Vec<f32>)],
     z: &Tensor,
 ) -> Tensor {
+    generator_forward_par(net, weights, z, &WorkerPool::new(1))
+}
+
+/// [`generator_forward`] with every layer's output tiles sharded across
+/// a [`WorkerPool`].  Bit-identical to the serial forward (the parallel
+/// reverse loop is bit-identical per layer), so seeded generation stays
+/// deterministic at any pool width.
+pub fn generator_forward_par(
+    net: &NetworkCfg,
+    weights: &[(Tensor, Vec<f32>)],
+    z: &Tensor,
+    pool: &WorkerPool,
+) -> Tensor {
     assert_eq!(weights.len(), net.layers.len());
     assert_eq!(z.shape()[1], net.z_dim);
     let n = z.shape()[0];
@@ -65,7 +81,7 @@ pub fn generator_forward(
         .expect("z reshape");
     let last = net.layers.len() - 1;
     for (i, (layer, (w, b))) in net.layers.iter().zip(weights).enumerate() {
-        let (mut y, _) = deconv_reverse_loop(
+        let (mut y, _) = deconv_reverse_loop_par(
             &x,
             w,
             b,
@@ -75,6 +91,7 @@ pub fn generator_forward(
                 tile: net.tile,
                 zero_skip: true, // numerics identical; skips the zeros
             },
+            pool,
         );
         for v in y.data_mut().iter_mut() {
             *v = if i == last { v.tanh() } else { v.max(0.0) };

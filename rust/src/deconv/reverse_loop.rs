@@ -3,6 +3,16 @@
 //! Eq. 3 offsets, weight-stationary loop order (enhancement 2), tiled
 //! output blocks with one-shot writes, and optional zero-skipping.
 //!
+//! The kernel is organized exactly like the hardware: the output space is
+//! cut into independent tile jobs, each job produces its own output block
+//! plus its own [`OpStats`], and the blocks are merged back one-shot.
+//! [`deconv_reverse_loop`] walks the jobs serially;
+//! [`deconv_reverse_loop_par`] shards them across a [`WorkerPool`] — the
+//! software mirror of the paper's spatial CU parallelism.  Both paths run
+//! the same per-tile kernel in the same order per tile, so they are
+//! **bit-identical** (tensors *and* op counts), which the integration and
+//! property tests assert.
+//!
 //! Emits [`OpStats`] — the exact MAC/skip/memory-op counts the FPGA cycle
 //! model turns into time and energy.
 
@@ -10,6 +20,7 @@ use super::offsets::stride_hole_offsets;
 use super::standard::shape4;
 use super::tiling::input_tile_extent;
 use crate::tensor::Tensor;
+use crate::util::WorkerPool;
 
 /// Execution options for the reverse-loop kernel.
 #[derive(Debug, Clone, Copy)]
@@ -64,19 +75,162 @@ impl OpStats {
     }
 }
 
-/// Reverse-loop transposed convolution (Algorithm 1), tiled over the
-/// output space.  Numerically identical to [`super::deconv_standard`];
-/// additionally returns the [`OpStats`] of the execution.
-///
-/// * `x` — `[N, C_in, I_H, I_W]`, `w` — `[C_in, C_out, K, K]`,
-///   `b` — `[C_out]` → `[N, C_out, O_H, O_W]`.
-pub fn deconv_reverse_loop(
+/// Everything a tile job needs, borrowed from the caller (shared
+/// read-only across workers).
+struct TileCtx<'a> {
+    x: &'a Tensor,
+    w: &'a Tensor,
+    b: &'a [f32],
+    s: usize,
+    p: usize,
+    zero_skip: bool,
+    /// Pre-computed Eq. 3 offsets.
+    f: &'a [usize],
+    c_in: usize,
+    c_out: usize,
+    k: usize,
+    i_h: usize,
+    i_w: usize,
+    o_h: usize,
+    o_w: usize,
+    /// Effective tile factor.
+    t: usize,
+    /// Eq. 5 input tile extent.
+    t_i: usize,
+}
+
+/// One spatial output tile of one batch image — the unit of work a CU
+/// (or pool worker) claims.
+#[derive(Debug, Clone, Copy)]
+struct TileJob {
+    bi: usize,
+    th: usize,
+    tw: usize,
+    tile_h: usize,
+    tile_w: usize,
+}
+
+/// Enumerate tile jobs in the serial traversal order (batch-major,
+/// row-major tiles) so serial and parallel merges see the same sequence.
+fn tile_jobs(n: usize, o_h: usize, o_w: usize, t: usize) -> Vec<TileJob> {
+    let mut jobs = Vec::new();
+    for bi in 0..n {
+        let mut th = 0;
+        while th < o_h {
+            let tile_h = t.min(o_h - th);
+            let mut tw = 0;
+            while tw < o_w {
+                let tile_w = t.min(o_w - tw);
+                jobs.push(TileJob {
+                    bi,
+                    th,
+                    tw,
+                    tile_h,
+                    tile_w,
+                });
+                tw += t;
+            }
+            th += t;
+        }
+    }
+    jobs
+}
+
+/// Execute Algorithm 1 for one tile job: returns the finished output
+/// block (`[c_out, tile_h, tile_w]`, row-major) and the tile's op
+/// counts.  This is the kernel both the serial and the parallel path
+/// run, so their numerics are identical by construction.
+fn execute_tile(ctx: &TileCtx, job: TileJob) -> (Vec<f32>, OpStats) {
+    let TileJob {
+        bi,
+        th,
+        tw,
+        tile_h,
+        tile_w,
+    } = job;
+    let s = ctx.s;
+    let p = ctx.p;
+    let mut stats = OpStats {
+        tiles: 1,
+        ..Default::default()
+    };
+    // Decoupled prefetch accounting (enhancement 3): the input block
+    // covering this output tile is read once per c_in pass, sequentially;
+    // weights once per (c_in, tile).
+    stats.ext_read_bytes += 4 * (ctx.c_in * ctx.t_i * ctx.t_i) as u64;
+    stats.ext_read_bytes += 4
+        * (ctx.c_in * ctx.c_out * ctx.k * ctx.k) as u64
+        / ((ctx.o_h.div_ceil(ctx.t) * ctx.o_w.div_ceil(ctx.t)) as u64).max(1);
+
+    let mut block = vec![0.0f32; ctx.c_out * tile_h * tile_w];
+    for co in 0..ctx.c_out {
+        let base = co * tile_h * tile_w;
+        // y <- initializeToBias()
+        for v in &mut block[base..base + tile_h * tile_w] {
+            *v = ctx.b[co];
+        }
+        for ci in 0..ctx.c_in {
+            // weight-stationary loops (enhancement 2)
+            for kh in 0..ctx.k {
+                let fh = ctx.f[kh];
+                for kw in 0..ctx.k {
+                    let fw = ctx.f[kw];
+                    let wv = ctx.w.get4(ci, co, kh, kw);
+                    if ctx.zero_skip {
+                        stats.weight_tests += 1;
+                        if wv == 0.0 {
+                            // skip the whole tap for this tile
+                            stats.macs_skipped +=
+                                tap_count(th, tile_h, tw, tile_w, fh, fw, s);
+                            continue;
+                        }
+                    }
+                    // o = f + S·t traversal within the tile
+                    let mut oh = next_aligned(th, fh, s);
+                    while oh < th + tile_h {
+                        let ih_num = oh as i64 + p as i64 - kh as i64;
+                        let ih = ih_num / s as i64;
+                        if ih >= 0 && (ih as usize) < ctx.i_h {
+                            let row = base + (oh - th) * tile_w;
+                            let mut ow = next_aligned(tw, fw, s);
+                            while ow < tw + tile_w {
+                                let iw_num =
+                                    ow as i64 + p as i64 - kw as i64;
+                                let iw = iw_num / s as i64;
+                                if iw >= 0 && (iw as usize) < ctx.i_w {
+                                    let xv = ctx.x.get4(
+                                        bi,
+                                        ci,
+                                        ih as usize,
+                                        iw as usize,
+                                    );
+                                    block[row + (ow - tw)] += wv * xv;
+                                    stats.macs_issued += 1;
+                                }
+                                ow += s;
+                            }
+                        }
+                        oh += s;
+                    }
+                }
+            }
+        }
+        // one-shot write of the finished output block
+        stats.ext_write_bytes += 4 * (tile_h * tile_w) as u64;
+    }
+    (block, stats)
+}
+
+/// Shared driver: enumerate jobs, run them on the given pool, merge the
+/// blocks and stats in job order.
+fn run_reverse_loop(
     x: &Tensor,
     w: &Tensor,
     b: &[f32],
     stride: usize,
     padding: usize,
     opts: ReverseLoopOpts,
+    pool: &WorkerPool,
 ) -> (Tensor, OpStats) {
     let [n, c_in, i_h, i_w] = shape4(x);
     let [wc_in, c_out, k, _] = shape4(w);
@@ -95,91 +249,82 @@ pub fn deconv_reverse_loop(
         ..Default::default()
     };
 
+    let ctx = TileCtx {
+        x,
+        w,
+        b,
+        s,
+        p,
+        zero_skip: opts.zero_skip,
+        f: &f,
+        c_in,
+        c_out,
+        k,
+        i_h,
+        i_w,
+        o_h,
+        o_w,
+        t,
+        t_i: input_tile_extent(t, k, s),
+    };
+    let jobs = tile_jobs(n, o_h, o_w, t);
+    let results =
+        pool.map_indexed(jobs.len(), |i| execute_tile(&ctx, jobs[i]));
+
+    // Deterministic merge in job order: one-shot block writes into the
+    // (disjoint) output regions, exact OpStats accumulation.
     let mut y = Tensor::zeros(vec![n, c_out, o_h, o_w]);
-    let t_i = input_tile_extent(t, k, s);
-
-    for bi in 0..n {
-        // Tile the output space (spatial parallelism across CUs; here the
-        // tiles execute sequentially but the counts are per-tile).
-        let mut th = 0;
-        while th < o_h {
-            let tile_h = t.min(o_h - th);
-            let mut tw = 0;
-            while tw < o_w {
-                let tile_w = t.min(o_w - tw);
-                stats.tiles += 1;
-                // Decoupled prefetch accounting (enhancement 3): the input
-                // block covering this output tile is read once per c_in
-                // pass, sequentially; weights once per (c_in, tile).
-                stats.ext_read_bytes +=
-                    4 * (c_in * t_i * t_i) as u64; // input block
-                stats.ext_read_bytes += 4 * (c_in * c_out * k * k) as u64
-                    / ((o_h.div_ceil(t) * o_w.div_ceil(t)) as u64).max(1);
-
-                for co in 0..c_out {
-                    // y <- initializeToBias()
-                    for oh in th..th + tile_h {
-                        for ow in tw..tw + tile_w {
-                            y.set4(bi, co, oh, ow, b[co]);
-                        }
-                    }
-                    for ci in 0..c_in {
-                        // weight-stationary loops (enhancement 2)
-                        for kh in 0..k {
-                            let fh = f[kh];
-                            for kw in 0..k {
-                                let fw = f[kw];
-                                let wv = w.get4(ci, co, kh, kw);
-                                if opts.zero_skip {
-                                    stats.weight_tests += 1;
-                                    if wv == 0.0 {
-                                        // skip the whole tap for this tile
-                                        stats.macs_skipped += tap_count(
-                                            th, tile_h, tw, tile_w, fh, fw, s,
-                                        );
-                                        continue;
-                                    }
-                                }
-                                // o = f + S·t traversal within the tile
-                                let mut oh = next_aligned(th, fh, s);
-                                while oh < th + tile_h {
-                                    let ih_num =
-                                        oh as i64 + p as i64 - kh as i64;
-                                    let ih = ih_num / s as i64;
-                                    if ih >= 0 && (ih as usize) < i_h {
-                                        let mut ow = next_aligned(tw, fw, s);
-                                        while ow < tw + tile_w {
-                                            let iw_num = ow as i64 + p as i64
-                                                - kw as i64;
-                                            let iw = iw_num / s as i64;
-                                            if iw >= 0 && (iw as usize) < i_w
-                                            {
-                                                let xv = x.get4(
-                                                    bi, ci, ih as usize,
-                                                    iw as usize,
-                                                );
-                                                y.add4(
-                                                    bi, co, oh, ow, wv * xv,
-                                                );
-                                                stats.macs_issued += 1;
-                                            }
-                                            ow += s;
-                                        }
-                                    }
-                                    oh += s;
-                                }
-                            }
-                        }
-                    }
-                    // one-shot write of the finished output block
-                    stats.ext_write_bytes += 4 * (tile_h * tile_w) as u64;
+    for (job, (block, tile_stats)) in jobs.iter().zip(&results) {
+        stats.merge(tile_stats);
+        for co in 0..c_out {
+            let base = co * job.tile_h * job.tile_w;
+            for r in 0..job.tile_h {
+                for c in 0..job.tile_w {
+                    y.set4(
+                        job.bi,
+                        co,
+                        job.th + r,
+                        job.tw + c,
+                        block[base + r * job.tile_w + c],
+                    );
                 }
-                tw += t;
             }
-            th += t;
         }
     }
     (y, stats)
+}
+
+/// Reverse-loop transposed convolution (Algorithm 1), tiled over the
+/// output space.  Numerically identical to [`super::deconv_standard`];
+/// additionally returns the [`OpStats`] of the execution.
+///
+/// * `x` — `[N, C_in, I_H, I_W]`, `w` — `[C_in, C_out, K, K]`,
+///   `b` — `[C_out]` → `[N, C_out, O_H, O_W]`.
+pub fn deconv_reverse_loop(
+    x: &Tensor,
+    w: &Tensor,
+    b: &[f32],
+    stride: usize,
+    padding: usize,
+    opts: ReverseLoopOpts,
+) -> (Tensor, OpStats) {
+    run_reverse_loop(x, w, b, stride, padding, opts, &WorkerPool::new(1))
+}
+
+/// [`deconv_reverse_loop`] with the output tiles sharded across a
+/// [`WorkerPool`] — the spatial CU parallelism of the paper, in
+/// software.  Bit-identical to the serial path: same tensors, same
+/// [`OpStats`], for any pool width.
+pub fn deconv_reverse_loop_par(
+    x: &Tensor,
+    w: &Tensor,
+    b: &[f32],
+    stride: usize,
+    padding: usize,
+    opts: ReverseLoopOpts,
+    pool: &WorkerPool,
+) -> (Tensor, OpStats) {
+    run_reverse_loop(x, w, b, stride, padding, opts, pool)
 }
 
 /// First o ≥ start with o ≡ f (mod s).
@@ -364,5 +509,60 @@ mod tests {
         );
         // every output element written exactly once per channel pass
         assert_eq!(stats.ext_write_bytes, 4 * y.numel() as u64);
+    }
+
+    #[test]
+    fn parallel_is_bit_identical_to_serial() {
+        let mut rng = Rng::seed_from_u64(21);
+        for (n, c_in, c_out, k, s, p, i_h, tile) in [
+            (1, 2, 3, 4, 2, 1, 5, 4),
+            (2, 3, 2, 7, 1, 0, 3, 5),
+            (1, 2, 2, 3, 3, 1, 4, 6),
+            (2, 4, 4, 4, 2, 1, 7, 12),
+        ] {
+            let x = rand_tensor(vec![n, c_in, i_h, i_h], &mut rng);
+            let mut w = rand_tensor(vec![c_in, c_out, k, k], &mut rng);
+            // some exact zeros so the zero-skip path is exercised too
+            for (i, v) in w.data_mut().iter_mut().enumerate() {
+                if i % 4 == 0 {
+                    *v = 0.0;
+                }
+            }
+            let b: Vec<f32> =
+                (0..c_out).map(|_| rng.range_f32(-0.5, 0.5)).collect();
+            for zero_skip in [false, true] {
+                let opts = ReverseLoopOpts { tile, zero_skip };
+                let (ys, ss) = deconv_reverse_loop(&x, &w, &b, s, p, opts);
+                for workers in [2, 3, 8] {
+                    let pool = WorkerPool::new(workers);
+                    let (yp, sp) = deconv_reverse_loop_par(
+                        &x, &w, &b, s, p, opts, &pool,
+                    );
+                    assert_eq!(
+                        ys.data(),
+                        yp.data(),
+                        "w={workers} zs={zero_skip}: tensors must be \
+                         bit-identical"
+                    );
+                    assert_eq!(ss, sp, "w={workers}: OpStats must be exact");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tile_job_enumeration_covers_output_once() {
+        let jobs = tile_jobs(2, 7, 7, 3);
+        // 2 images × ⌈7/3⌉² tiles
+        assert_eq!(jobs.len(), 2 * 9);
+        let mut covered = vec![0u32; 2 * 7 * 7];
+        for j in &jobs {
+            for r in 0..j.tile_h {
+                for c in 0..j.tile_w {
+                    covered[(j.bi * 7 + j.th + r) * 7 + j.tw + c] += 1;
+                }
+            }
+        }
+        assert!(covered.iter().all(|c| *c == 1), "exact cover");
     }
 }

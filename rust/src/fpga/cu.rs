@@ -7,6 +7,7 @@
 //! test cycle (the conditional-execution paradigm of Section V-C).
 
 use crate::config::FpgaBoard;
+use crate::util::WorkerPool;
 
 /// One CU workload: a `T_OH × T_OW` output block for one output channel.
 #[derive(Debug, Clone, Copy)]
@@ -75,6 +76,100 @@ impl CuModel {
     pub fn dense_macs(&self, w: &CuWorkload) -> u64 {
         (w.c_in * w.taps * w.macs_per_tap) as u64
     }
+
+    /// Cycles for one workload under the given execution mode
+    /// (`sparsity = None` → dense, `Some(z)` → zero-skipping at `z`).
+    pub fn workload_cycles(
+        &self,
+        w: &CuWorkload,
+        sparsity: Option<f64>,
+    ) -> u64 {
+        match sparsity {
+            None => self.dense_cycles(w),
+            Some(z) => self.zero_skip_cycles(w, z),
+        }
+    }
+}
+
+/// One SIMD tile-batch simulated by the replicated CU array.
+#[derive(Debug, Clone)]
+pub struct BatchSim {
+    /// Cycles each active CU spent on its workload (index = CU slot).
+    pub per_cu: Vec<u64>,
+    /// Critical path: the batch advances at the slowest CU (SIMD
+    /// broadcast — every CU in the batch shares the input stream).
+    pub critical: u64,
+    /// Active CUs over array width.
+    pub occupancy: f64,
+}
+
+/// The replicated CU array (the paper's `n_cu` compute units).  Each CU
+/// of a batch is simulated concurrently on the worker pool — the
+/// software execution path mirrors the spatial parallelism of the
+/// hardware instead of iterating the units in a loop.
+#[derive(Debug, Clone, Copy)]
+pub struct CuArray {
+    pub model: CuModel,
+    pub n_cu: usize,
+}
+
+impl CuArray {
+    pub fn from_board(board: &FpgaBoard) -> Self {
+        CuArray {
+            model: CuModel::from_board(board),
+            n_cu: board.n_cu,
+        }
+    }
+
+    /// Simulate one tile batch: `workloads[i]` runs on CU slot `i`
+    /// (at most `n_cu` workloads per batch), all units concurrently.
+    pub fn simulate_batch(
+        &self,
+        workloads: &[CuWorkload],
+        sparsity: Option<f64>,
+        pool: &WorkerPool,
+    ) -> BatchSim {
+        assert!(
+            workloads.len() <= self.n_cu,
+            "batch of {} workloads exceeds the {}-CU array",
+            workloads.len(),
+            self.n_cu
+        );
+        let per_cu =
+            pool.map(workloads, |w| self.model.workload_cycles(w, sparsity));
+        let critical = per_cu.iter().copied().max().unwrap_or(0);
+        BatchSim {
+            critical,
+            occupancy: if self.n_cu == 0 {
+                0.0
+            } else {
+                workloads.len() as f64 / self.n_cu as f64
+            },
+            per_cu,
+        }
+    }
+
+    /// Simulate `count` copies of one (uniform) workload streamed
+    /// through successive SIMD batches of the array — the whole-layer
+    /// engine: all CU evaluations run in a *single* pool dispatch (one
+    /// thread scope per layer, not one per batch), then chunks of
+    /// `n_cu` fold to their critical path (the batch advances at its
+    /// slowest CU; the last chunk is the partial batch).  Returns the
+    /// per-batch critical paths.
+    pub fn simulate_uniform_workloads(
+        &self,
+        wl: &CuWorkload,
+        count: usize,
+        sparsity: Option<f64>,
+        pool: &WorkerPool,
+    ) -> Vec<u64> {
+        let per_workload = pool
+            .map_indexed(count, |_| self.model.workload_cycles(wl, sparsity));
+        per_workload
+            .chunks(self.n_cu.max(1))
+            .map(|batch| batch.iter().copied().max().unwrap_or(0))
+            .collect()
+    }
 }
 
 #[cfg(test)]
@@ -138,5 +233,62 @@ mod tests {
     fn invalid_sparsity_panics() {
         let cu = CuModel::from_board(&PYNQ_Z2);
         cu.zero_skip_cycles(&wl(), 1.5);
+    }
+
+    #[test]
+    fn concurrent_array_matches_per_cu_model() {
+        let arr = CuArray::from_board(&PYNQ_Z2);
+        let cu = CuModel::from_board(&PYNQ_Z2);
+        let batch: Vec<CuWorkload> = vec![wl(); 16];
+        for (workers, sparsity) in
+            [(1, None), (4, None), (4, Some(0.5)), (8, Some(0.9))]
+        {
+            let pool = WorkerPool::new(workers);
+            let sim = arr.simulate_batch(&batch, sparsity, &pool);
+            assert_eq!(sim.per_cu.len(), 16);
+            let want = cu.workload_cycles(&wl(), sparsity);
+            assert!(sim.per_cu.iter().all(|c| *c == want));
+            assert_eq!(sim.critical, want);
+            assert_eq!(sim.occupancy, 1.0);
+        }
+    }
+
+    #[test]
+    fn partial_batch_reports_starvation() {
+        let arr = CuArray::from_board(&PYNQ_Z2);
+        let pool = WorkerPool::new(2);
+        let batch: Vec<CuWorkload> = vec![wl(); 9];
+        let sim = arr.simulate_batch(&batch, None, &pool);
+        assert!((sim.occupancy - 9.0 / 16.0).abs() < 1e-12);
+        assert_eq!(sim.per_cu.len(), 9);
+    }
+
+    #[test]
+    #[should_panic]
+    fn oversubscribed_batch_panics() {
+        let arr = CuArray::from_board(&PYNQ_Z2);
+        let pool = WorkerPool::new(1);
+        let batch: Vec<CuWorkload> = vec![wl(); 17];
+        arr.simulate_batch(&batch, None, &pool);
+    }
+
+    #[test]
+    fn uniform_stream_folds_to_per_batch_criticals() {
+        let arr = CuArray::from_board(&PYNQ_Z2);
+        let pool = WorkerPool::new(4);
+        // 35 workloads over a 16-CU array → 3 batches (16, 16, 3)
+        let criticals = arr.simulate_uniform_workloads(&wl(), 35, None, &pool);
+        assert_eq!(criticals.len(), 3);
+        let want = arr.model.workload_cycles(&wl(), None);
+        assert!(criticals.iter().all(|c| *c == want));
+        // agrees with the general per-batch primitive
+        let batch: Vec<CuWorkload> = vec![wl(); 3];
+        assert_eq!(
+            arr.simulate_batch(&batch, None, &pool).critical,
+            criticals[2]
+        );
+        assert!(arr
+            .simulate_uniform_workloads(&wl(), 0, None, &pool)
+            .is_empty());
     }
 }

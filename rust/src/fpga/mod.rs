@@ -20,11 +20,11 @@ mod power;
 mod resources;
 
 pub use axi::AxiModel;
-pub use cu::{CuModel, CuWorkload};
+pub use cu::{BatchSim, CuArray, CuModel, CuWorkload};
 pub use fifo::Fifo;
 pub use pipeline::{
-    measured_run, measurement_rng, simulate_layer, simulate_network,
-    LayerSim, NetworkSim, SimOpts,
+    measured_run, measurement_rng, simulate_layer, simulate_layer_par,
+    simulate_network, simulate_network_par, LayerSim, NetworkSim, SimOpts,
 };
 pub use power::PowerModel;
 pub use resources::{estimate_resources, Utilization};

@@ -17,13 +17,21 @@
 //! its slowest stage; the ablation `decouple = false` serializes them and
 //! pays the random-access penalty on input reads, quantifying
 //! enhancements (2)+(3).
+//!
+//! Two equivalent compute engines drive the batches:
+//! [`simulate_layer`] evaluates the (uniform) batch analytically, while
+//! [`simulate_layer_par`] instantiates the full [`CuArray`] and runs each
+//! batch's CUs *concurrently* on a [`WorkerPool`] — the software path
+//! shaped like the hardware.  The two agree exactly (asserted in tests);
+//! [`simulate_network_par`] additionally shards whole layers across the
+//! pool.
 
 use super::axi::AxiModel;
-use super::cu::{CuModel, CuWorkload};
+use super::cu::{CuArray, CuModel, CuWorkload};
 use super::power::PowerModel;
 use crate::config::{DeconvLayerCfg, FpgaBoard, NetworkCfg};
 use crate::deconv::input_tile_extent;
-use crate::util::Rng;
+use crate::util::{Rng, WorkerPool};
 
 /// Options for a layer simulation.
 #[derive(Debug, Clone, Copy)]
@@ -46,6 +54,15 @@ impl SimOpts {
             zero_skip: false,
             weight_sparsity: 0.0,
             decouple: true,
+        }
+    }
+
+    /// The CU execution mode this option set selects.
+    fn sparsity_mode(&self) -> Option<f64> {
+        if self.zero_skip {
+            Some(self.weight_sparsity)
+        } else {
+            None
         }
     }
 }
@@ -88,14 +105,28 @@ pub struct NetworkSim {
     pub gops_per_w: f64,
 }
 
-/// Simulate one deconvolution layer on the accelerator.
-pub fn simulate_layer(
+/// Static per-layer schedule: tiling, CU batching and the read/write
+/// stage costs — everything except the compute engine.
+struct LayerSchedule {
+    /// Total CU workloads (`tiles × c_out`).
+    workloads: usize,
+    /// SIMD tile batches (`⌈workloads / n_cu⌉`).
+    batches: u64,
+    occupancy: f64,
+    /// The (uniform interior) workload each CU executes.
+    wl: CuWorkload,
+    read_per_batch: u64,
+    write_per_batch: u64,
+}
+
+/// Derive the schedule of one layer at one option set (the top half of
+/// the original `simulate_layer`, shared by both compute engines).
+fn layer_schedule(
     layer: &DeconvLayerCfg,
     board: &FpgaBoard,
     opts: &SimOpts,
-) -> LayerSim {
+) -> LayerSchedule {
     let axi = AxiModel::from_board(board);
-    let cu = CuModel::from_board(board);
     let o = layer.o_h();
     let t = opts.tile.min(o).max(1);
     let t_i = input_tile_extent(t, layer.k, layer.stride);
@@ -117,11 +148,6 @@ pub fn simulate_layer(
         taps: layer.k * layer.k,
         macs_per_tap,
         tile_elems: t * t,
-    };
-    let compute_per_batch = if opts.zero_skip {
-        cu.zero_skip_cycles(&wl, opts.weight_sparsity)
-    } else {
-        cu.dense_cycles(&wl)
     };
 
     // Stage (1): distinct input blocks per batch (broadcast across the
@@ -153,21 +179,47 @@ pub fn simulate_layer(
     let active = (workloads as u64).min(board.n_cu as u64);
     let write_per_batch = axi.sequential_cycles(4 * (t * t) as u64 * active);
 
+    LayerSchedule {
+        workloads,
+        batches,
+        occupancy,
+        wl,
+        read_per_batch,
+        write_per_batch,
+    }
+}
+
+/// Fold per-batch compute cycles through the pipeline model into the
+/// final [`LayerSim`].
+fn assemble_layer_sim(
+    layer: &DeconvLayerCfg,
+    board: &FpgaBoard,
+    opts: &SimOpts,
+    sched: &LayerSchedule,
+    compute_batches: &[u64],
+) -> LayerSim {
+    debug_assert_eq!(compute_batches.len() as u64, sched.batches);
+    let compute_total: u64 = compute_batches.iter().sum();
     let total_cycles = if opts.decouple {
-        // pipelined: steady-state advance at the slowest stage
-        let stage_max = read_per_batch
-            .max(compute_per_batch)
-            .max(write_per_batch);
-        read_per_batch + stage_max * batches + write_per_batch
+        // pipelined: each batch advances at its slowest stage
+        let mut cycles = sched.read_per_batch + sched.write_per_batch;
+        for &c in compute_batches {
+            cycles += sched
+                .read_per_batch
+                .max(c)
+                .max(sched.write_per_batch);
+        }
+        cycles
     } else {
-        (read_per_batch + compute_per_batch + write_per_batch) * batches
+        compute_total
+            + (sched.read_per_batch + sched.write_per_batch) * sched.batches
     };
 
     let time_s = total_cycles as f64 / board.clock_hz;
     let ops = layer.ops();
     let power = PowerModel::from_board(board).layer_power(
-        occupancy,
-        compute_per_batch as f64 * batches as f64 / total_cycles as f64,
+        sched.occupancy,
+        compute_total as f64 / total_cycles as f64,
     );
     let gops = ops as f64 / time_s / 1e9;
     LayerSim {
@@ -177,10 +229,67 @@ pub fn simulate_layer(
         gops,
         power_w: power,
         gops_per_w: gops / power,
-        read_cycles: read_per_batch * batches,
-        compute_cycles: compute_per_batch * batches,
-        write_cycles: write_per_batch * batches,
-        occupancy,
+        read_cycles: sched.read_per_batch * sched.batches,
+        compute_cycles: compute_total,
+        write_cycles: sched.write_per_batch * sched.batches,
+        occupancy: sched.occupancy,
+    }
+}
+
+/// Simulate one deconvolution layer on the accelerator (analytical
+/// compute engine: every batch is uniform, so one CU evaluation covers
+/// the batch).
+pub fn simulate_layer(
+    layer: &DeconvLayerCfg,
+    board: &FpgaBoard,
+    opts: &SimOpts,
+) -> LayerSim {
+    let sched = layer_schedule(layer, board, opts);
+    let cu = CuModel::from_board(board);
+    let compute_per_batch =
+        cu.workload_cycles(&sched.wl, opts.sparsity_mode());
+    let compute_batches = vec![compute_per_batch; sched.batches as usize];
+    assemble_layer_sim(layer, board, opts, &sched, &compute_batches)
+}
+
+/// Simulate one layer with the *concurrent* CU-array engine
+/// ([`CuArray::simulate_uniform_workloads`]): every CU workload of
+/// every tile batch runs on the worker pool in a single dispatch, and
+/// each SIMD batch advances at its critical path — exactly what the
+/// analytical path assumes, so the two agree cycle for cycle (asserted
+/// in tests).
+pub fn simulate_layer_par(
+    layer: &DeconvLayerCfg,
+    board: &FpgaBoard,
+    opts: &SimOpts,
+    pool: &WorkerPool,
+) -> LayerSim {
+    let sched = layer_schedule(layer, board, opts);
+    let array = CuArray::from_board(board);
+    let compute_batches = array.simulate_uniform_workloads(
+        &sched.wl,
+        sched.workloads,
+        opts.sparsity_mode(),
+        pool,
+    );
+    assemble_layer_sim(layer, board, opts, &sched, &compute_batches)
+}
+
+/// Shared network aggregation (the paper's "Total" row: layers are
+/// multiplexed through the one accelerator, so times add).
+fn aggregate_network(layers: Vec<LayerSim>) -> NetworkSim {
+    let total_ops: u64 = layers.iter().map(|l| l.ops).sum();
+    let total_time_s: f64 = layers.iter().map(|l| l.time_s).sum();
+    let energy: f64 = layers.iter().map(|l| l.power_w * l.time_s).sum();
+    let mean_power = energy / total_time_s;
+    let total_gops = total_ops as f64 / total_time_s / 1e9;
+    NetworkSim {
+        layers,
+        total_ops,
+        total_time_s,
+        total_gops,
+        mean_power_w: mean_power,
+        gops_per_w: total_gops / mean_power,
     }
 }
 
@@ -198,19 +307,24 @@ pub fn simulate_network(
         .zip(opts_per_layer)
         .map(|(l, o)| simulate_layer(l, board, o))
         .collect();
-    let total_ops: u64 = layers.iter().map(|l| l.ops).sum();
-    let total_time_s: f64 = layers.iter().map(|l| l.time_s).sum();
-    let energy: f64 = layers.iter().map(|l| l.power_w * l.time_s).sum();
-    let mean_power = energy / total_time_s;
-    let total_gops = total_ops as f64 / total_time_s / 1e9;
-    NetworkSim {
-        layers,
-        total_ops,
-        total_time_s,
-        total_gops,
-        mean_power_w: mean_power,
-        gops_per_w: total_gops / mean_power,
-    }
+    aggregate_network(layers)
+}
+
+/// [`simulate_network`] with the layer simulations sharded across a
+/// [`WorkerPool`] (temporal parallelism: independent layer models run
+/// concurrently; aggregation stays in layer order, so the result is
+/// bit-identical to the serial sweep).
+pub fn simulate_network_par(
+    net: &NetworkCfg,
+    board: &FpgaBoard,
+    opts_per_layer: &[SimOpts],
+    pool: &WorkerPool,
+) -> NetworkSim {
+    assert_eq!(opts_per_layer.len(), net.layers.len());
+    let layers = pool.map_indexed(net.layers.len(), |i| {
+        simulate_layer(&net.layers[i], board, &opts_per_layer[i])
+    });
+    aggregate_network(layers)
 }
 
 /// One measured "run" with realistic FPGA run-to-run variation: the
@@ -331,5 +445,69 @@ mod tests {
             .collect();
         let s = crate::stats::Summary::of(&runs);
         assert!(s.std / s.mean < 0.01, "cv={}", s.std / s.mean);
+    }
+
+    fn layer_sims_equal(a: &LayerSim, b: &LayerSim) {
+        assert_eq!(a.ops, b.ops);
+        assert_eq!(a.cycles, b.cycles);
+        assert_eq!(a.read_cycles, b.read_cycles);
+        assert_eq!(a.compute_cycles, b.compute_cycles);
+        assert_eq!(a.write_cycles, b.write_cycles);
+        assert_eq!(a.time_s, b.time_s);
+        assert_eq!(a.gops, b.gops);
+        assert_eq!(a.power_w, b.power_w);
+        assert_eq!(a.gops_per_w, b.gops_per_w);
+        assert_eq!(a.occupancy, b.occupancy);
+    }
+
+    #[test]
+    fn concurrent_cu_engine_matches_analytical() {
+        for net in [mnist(), celeba()] {
+            for layer in &net.layers {
+                for opts in [
+                    SimOpts::dense(net.tile),
+                    SimOpts {
+                        tile: net.tile,
+                        zero_skip: true,
+                        weight_sparsity: 0.7,
+                        decouple: true,
+                    },
+                    SimOpts {
+                        decouple: false,
+                        ..SimOpts::dense(net.tile)
+                    },
+                ] {
+                    let a = simulate_layer(layer, &PYNQ_Z2, &opts);
+                    for workers in [1, 4] {
+                        let pool = WorkerPool::new(workers);
+                        let b =
+                            simulate_layer_par(layer, &PYNQ_Z2, &opts, &pool);
+                        layer_sims_equal(&a, &b);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_network_sweep_matches_serial() {
+        for net in [mnist(), celeba()] {
+            let opts: Vec<SimOpts> = net
+                .layers
+                .iter()
+                .map(|_| SimOpts::dense(net.tile))
+                .collect();
+            let a = simulate_network(&net, &PYNQ_Z2, &opts);
+            let pool = WorkerPool::new(4);
+            let b = simulate_network_par(&net, &PYNQ_Z2, &opts, &pool);
+            assert_eq!(a.total_ops, b.total_ops);
+            assert_eq!(a.total_time_s, b.total_time_s);
+            assert_eq!(a.total_gops, b.total_gops);
+            assert_eq!(a.mean_power_w, b.mean_power_w);
+            assert_eq!(a.gops_per_w, b.gops_per_w);
+            for (la, lb) in a.layers.iter().zip(&b.layers) {
+                layer_sims_equal(la, lb);
+            }
+        }
     }
 }

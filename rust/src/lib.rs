@@ -9,12 +9,25 @@
 //! * **L1/L2 (build time)** — `python/compile/` authors the reverse-loop
 //!   deconvolution Pallas kernel and the WGAN-GP DCNN generators, and
 //!   AOT-lowers them to HLO text artifacts (`make artifacts`).
-//! * **L3 (this crate)** — the runtime system: a PJRT CPU client executes
+//! * **L3 (this crate)** — the runtime system: a PJRT CPU client (or the
+//!   numerics-identical pure-Rust fallback, see [`runtime`]) executes
 //!   the artifacts for real numerics, while cycle-level simulators of the
 //!   paper's PYNQ-Z2 accelerator ([`fpga`]) and the Jetson TX1 baseline
 //!   ([`gpu`]) supply the timing/power evaluation, orchestrated by an
 //!   edge-serving coordinator ([`coordinator`]) and regenerated per paper
 //!   table/figure by [`experiments`].
+//!
+//! Cross-cutting: the **spatio-temporal parallel execution engine**
+//! ([`util::WorkerPool`]) — a dependency-free scoped worker pool with
+//! deterministic result ordering that mirrors the paper's hardware
+//! parallelism in software.  It shards reverse-loop output tiles
+//! ([`deconv::deconv_reverse_loop_par`], spatial), runs the simulated CU
+//! array concurrently ([`fpga::CuArray`], spatial) and fans layer sweeps
+//! out ([`fpga::simulate_network_par`], temporal); the coordinator's
+//! executor pool ([`coordinator::Coordinator`]) extends the same shape to
+//! serving.  Every parallel path is bit-identical to its serial twin
+//! (tensors *and* op counts), asserted by the integration and property
+//! tests.
 //!
 //! See `DESIGN.md` for the full system inventory and the per-experiment
 //! index, and `EXPERIMENTS.md` for paper-vs-measured results.

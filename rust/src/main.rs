@@ -32,8 +32,12 @@ COMMANDS:
   ablations [--sparsity F]   Section III enhancements on vs off
   networks                   Fig. 4 architectures and op counts
   serve     [--network NET] [--requests N] [--images K]
-            [--interarrival-ms MS] [--seed S]
-                             drive the edge-serving coordinator (PJRT)
+            [--interarrival-ms MS] [--seed S] [--executors E]
+                             drive the edge-serving coordinator
+  synth     [--samples N] [--seed S]
+                             write a synthetic (untrained) artifact set
+                             to the --artifacts dir, enough to serve
+                             without the Python build layer
   all       [--runs N]       every table/figure in sequence
   help                       this text
 ";
@@ -185,10 +189,12 @@ fn main() -> Result<()> {
             let images = flags.get("images", 2usize)?;
             let interarrival_ms = flags.get("interarrival-ms", 2.0f64)?;
             let seed = flags.get("seed", 42u64)?;
+            let executors = flags.get("executors", 0usize)?;
             let coord = Coordinator::start(CoordinatorConfig {
                 artifacts_dir,
                 networks: vec![network.clone()],
                 batcher: BatcherConfig::default(),
+                executors,
             })?;
             let report = coord.serve_workload(&WorkloadSpec {
                 network,
@@ -198,6 +204,21 @@ fn main() -> Result<()> {
                 seed,
             })?;
             println!("{}", report.render());
+        }
+        "synth" => {
+            let samples = flags.get("samples", 64usize)?;
+            let seed = flags.get("seed", 0u64)?;
+            let a = edgedcnn::artifacts::write_synthetic(
+                &artifacts_dir,
+                &["mnist", "celeba"],
+                samples,
+                seed,
+            )?;
+            println!(
+                "synthetic artifact set written to {} ({} samples/network)",
+                a.root.display(),
+                samples
+            );
         }
         "all" => {
             let runs = flags.get("runs", 50usize)?;

@@ -1,0 +1,226 @@
+//! Pure-Rust runtime backend (default build, no `pjrt` feature).
+//!
+//! Generator execution routes through the reverse-loop deconvolution
+//! substrate — the same Algorithm 1 the Pallas kernel implements — with
+//! output tiles sharded across a [`WorkerPool`] (the software analogue
+//! of the paper's CU array).  The parallel path is bit-identical to the
+//! serial one, so seeded serving stays deterministic.
+//!
+//! Single-layer HLO execution has no fallback (there is nothing to
+//! interpret the HLO with); [`LoadedHlo::run`] reports the missing
+//! feature instead of pretending.
+
+use crate::artifacts::ArtifactDir;
+use crate::config::NetworkCfg;
+use crate::deconv::generator_forward_par;
+use crate::tensor::Tensor;
+use crate::util::WorkerPool;
+use anyhow::{ensure, Result};
+use std::path::{Path, PathBuf};
+
+/// Stand-in for `xla::Literal`: shape + row-major f32 data.  Lets the
+/// literal-building call sites compile (and carry data) without PJRT.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+/// The fallback "device": a worker pool for the reverse-loop substrate.
+pub struct Runtime {
+    pool: WorkerPool,
+}
+
+impl Runtime {
+    /// Create the fallback runtime.  Worker count comes from
+    /// `EDGEDCNN_WORKERS` or `available_parallelism`.
+    pub fn cpu() -> Result<Self> {
+        Ok(Runtime {
+            pool: WorkerPool::with_default_parallelism(),
+        })
+    }
+
+    /// Fallback runtime with an explicit worker budget — the
+    /// coordinator divides the host among its executors so concurrent
+    /// executors do not oversubscribe the CPU.
+    pub fn cpu_with_workers(workers: usize) -> Result<Self> {
+        Ok(Runtime {
+            pool: WorkerPool::new(workers),
+        })
+    }
+
+    pub fn platform_name(&self) -> String {
+        format!(
+            "rust-reverse-loop ({} workers; build without `pjrt` feature)",
+            self.pool.workers()
+        )
+    }
+
+    /// "Load" an HLO artifact: the file must exist, but execution is
+    /// unavailable in this backend.
+    pub fn load_hlo(&self, path: &Path) -> Result<LoadedHlo> {
+        ensure!(
+            path.exists(),
+            "HLO artifact {} not found",
+            path.display()
+        );
+        Ok(LoadedHlo {
+            path: path.to_path_buf(),
+        })
+    }
+
+    /// Load a generator "executable": the manifest metadata plus the
+    /// pure-Rust forward bound to this runtime's worker pool.
+    pub fn load_generator(
+        &self,
+        artifacts: &ArtifactDir,
+        network: &str,
+        want_batch: usize,
+    ) -> Result<GeneratorExecutable> {
+        let (batch, _path) = artifacts.generator_hlo(network, want_batch)?;
+        let net = artifacts.network(network)?;
+        let cfg = artifacts.network_cfg(network)?;
+        Ok(GeneratorExecutable {
+            cfg,
+            batch,
+            z_dim: net.z_dim,
+            image_channels: net.image_channels,
+            image_size: net.image_size,
+            network: network.to_string(),
+            pool: self.pool,
+        })
+    }
+}
+
+/// A "loaded" HLO module in the fallback backend — path only.
+pub struct LoadedHlo {
+    path: PathBuf,
+}
+
+impl LoadedHlo {
+    /// Always errors: HLO execution requires the `pjrt` feature.
+    pub fn run(&self, _inputs: &[Literal]) -> Result<Vec<f32>> {
+        anyhow::bail!(
+            "cannot execute {}: this build has no PJRT backend (enable the \
+             `pjrt` feature in an environment that ships the `xla` crate)",
+            self.path.display()
+        )
+    }
+
+    pub fn run_to_tensor(
+        &self,
+        inputs: &[Literal],
+        out_shape: Vec<usize>,
+    ) -> Result<Tensor> {
+        let data = self.run(inputs)?;
+        Tensor::new(out_shape, data)
+    }
+}
+
+/// A generator bound to its metadata, executing `z + weights → images`
+/// through the parallel reverse-loop substrate.
+pub struct GeneratorExecutable {
+    cfg: NetworkCfg,
+    pub batch: usize,
+    pub z_dim: usize,
+    pub image_channels: usize,
+    pub image_size: usize,
+    pub network: String,
+    pool: WorkerPool,
+}
+
+impl GeneratorExecutable {
+    /// Generate a batch of images from latent `z` (`[batch, z_dim]`) and
+    /// a weight set `[(w, bias)]` (dense or pruned).
+    pub fn generate(
+        &self,
+        z: &Tensor,
+        weights: &[(Tensor, Vec<f32>)],
+    ) -> Result<Tensor> {
+        ensure!(
+            z.shape() == [self.batch, self.z_dim],
+            "z shape {:?} != [{}, {}]",
+            z.shape(),
+            self.batch,
+            self.z_dim
+        );
+        ensure!(
+            weights.len() == self.cfg.layers.len(),
+            "weight set has {} layers, network has {}",
+            weights.len(),
+            self.cfg.layers.len()
+        );
+        Ok(generator_forward_par(&self.cfg, weights, z, &self.pool))
+    }
+
+    /// Output elements per generated image.
+    pub fn image_numel(&self) -> usize {
+        self.image_channels * self.image_size * self.image_size
+    }
+}
+
+/// Convert a [`Tensor`] to a [`Literal`].
+pub fn tensor_to_literal(t: &Tensor) -> Result<Literal> {
+    Ok(Literal {
+        shape: t.shape().to_vec(),
+        data: t.data().to_vec(),
+    })
+}
+
+/// Convert raw f32 data + shape to a [`Literal`].
+pub fn data_to_literal(data: &[f32], shape: &[usize]) -> Result<Literal> {
+    let numel: usize = shape.iter().product();
+    ensure!(numel == data.len(), "literal shape/data mismatch");
+    Ok(Literal {
+        shape: shape.to_vec(),
+        data: data.to_vec(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::artifacts::write_synthetic;
+    use crate::util::{Rng, TempDir};
+
+    #[test]
+    fn fallback_generator_runs_end_to_end() {
+        let dir = TempDir::new().unwrap();
+        let artifacts =
+            write_synthetic(dir.path(), &["mnist"], 2, 11).unwrap();
+        let runtime = Runtime::cpu().unwrap();
+        assert!(runtime.platform_name().contains("rust-reverse-loop"));
+        let exe = runtime.load_generator(&artifacts, "mnist", 1).unwrap();
+        assert_eq!(exe.batch, 1);
+        let weights = artifacts.load_weights("mnist").unwrap();
+        let mut rng = Rng::seed_from_u64(3);
+        let z = Tensor::from_fn(vec![1, exe.z_dim], |_| rng.normal_f32());
+        let img = exe.generate(&z, &weights).unwrap();
+        assert_eq!(img.shape(), &[1, 1, 28, 28]);
+        assert!(img.data().iter().all(|v| v.abs() <= 1.0), "tanh range");
+        // deterministic
+        let img2 = exe.generate(&z, &weights).unwrap();
+        assert_eq!(img.data(), img2.data());
+    }
+
+    #[test]
+    fn hlo_execution_reports_missing_backend() {
+        let dir = TempDir::new().unwrap();
+        let path = dir.path().join("x.hlo.txt");
+        std::fs::write(&path, "HloModule x").unwrap();
+        let runtime = Runtime::cpu().unwrap();
+        let hlo = runtime.load_hlo(&path).unwrap();
+        let err = hlo.run(&[]).unwrap_err();
+        assert!(err.to_string().contains("pjrt"), "{err}");
+        assert!(runtime.load_hlo(&dir.path().join("nope.hlo")).is_err());
+    }
+
+    #[test]
+    fn literal_helpers_validate() {
+        let t = Tensor::from_fn(vec![2, 3], |i| i as f32);
+        let l = tensor_to_literal(&t).unwrap();
+        assert_eq!(l.shape, vec![2, 3]);
+        assert_eq!(l.data.len(), 6);
+        assert!(data_to_literal(&[1.0, 2.0], &[3]).is_err());
+    }
+}

@@ -1,93 +1,42 @@
-//! PJRT runtime — loads the AOT HLO-text artifacts and executes them on
-//! the CPU PJRT client (`xla` crate).  This is the only place real
-//! numerics happen at serving time; Python is never on this path.
+//! Execution runtime for the AOT artifacts.
 //!
-//! Interchange is HLO *text* (see `python/compile/aot.py` and
-//! /opt/xla-example/README.md): jax ≥ 0.5 emits protos with 64-bit
-//! instruction ids that xla_extension 0.5.1 rejects; the text parser
-//! reassigns ids and round-trips cleanly.
+//! Two interchangeable backends behind one API:
+//!
+//! * **`pjrt` feature** — loads the HLO-text artifacts and executes them
+//!   on the CPU PJRT client (`xla` crate).  This is the full three-layer
+//!   path; it requires an environment that ships the `xla` crate (the
+//!   offline image does not — see Cargo.toml).
+//! * **default (no feature)** — the pure-Rust fallback: generators run
+//!   through the reverse-loop deconvolution substrate
+//!   ([`crate::deconv::generator_forward_par`]), sharded across a
+//!   [`crate::util::WorkerPool`].  Numerically identical to the artifact
+//!   path (asserted by the integration tests when both are available);
+//!   single-layer HLO execution is unavailable and reports so.
+//!
+//! Either way the `Runtime` is owned by one executor thread; the
+//! coordinator runs a pool of them and communicates over channels (see
+//! [`crate::coordinator`]).
 
+#[cfg(feature = "pjrt")]
 mod executable;
+#[cfg(feature = "pjrt")]
+mod pjrt;
 
+#[cfg(feature = "pjrt")]
 pub use executable::{GeneratorExecutable, LoadedHlo};
+#[cfg(feature = "pjrt")]
+pub use pjrt::{data_to_literal, tensor_to_literal, Runtime};
 
-use crate::artifacts::ArtifactDir;
-use crate::tensor::Tensor;
-use anyhow::{Context, Result};
-use std::path::Path;
+#[cfg(not(feature = "pjrt"))]
+mod fallback;
 
-/// Thin wrapper over the PJRT CPU client.
-///
-/// NOT `Sync`: PJRT handles are raw pointers.  The coordinator owns one
-/// `Runtime` per device thread and communicates through channels (see
-/// [`crate::coordinator`]).
-pub struct Runtime {
-    client: xla::PjRtClient,
-}
+#[cfg(not(feature = "pjrt"))]
+pub use fallback::{
+    data_to_literal, tensor_to_literal, GeneratorExecutable, Literal,
+    LoadedHlo, Runtime,
+};
 
-impl Runtime {
-    /// Create a CPU PJRT client.
-    pub fn cpu() -> Result<Self> {
-        let client = xla::PjRtClient::cpu()
-            .map_err(|e| anyhow::anyhow!("creating PJRT CPU client: {e:?}"))?;
-        Ok(Runtime { client })
-    }
-
-    pub fn platform_name(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Load an HLO text file and compile it into an executable.
-    pub fn load_hlo(&self, path: &Path) -> Result<LoadedHlo> {
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str()
-                .ok_or_else(|| anyhow::anyhow!("non-utf8 path {path:?}"))?,
-        )
-        .map_err(|e| anyhow::anyhow!("parsing HLO text {path:?}: {e:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow::anyhow!("compiling {path:?}: {e:?}"))?;
-        Ok(LoadedHlo::new(exe))
-    }
-
-    /// Load a generator executable for a network at (bucketed) batch size
-    /// `want`, wiring in its manifest metadata.
-    pub fn load_generator(
-        &self,
-        artifacts: &ArtifactDir,
-        network: &str,
-        want_batch: usize,
-    ) -> Result<GeneratorExecutable> {
-        let (batch, path) = artifacts.generator_hlo(network, want_batch)?;
-        let net = artifacts.network(network)?;
-        let hlo = self
-            .load_hlo(&path)
-            .with_context(|| format!("loading generator {path:?}"))?;
-        Ok(GeneratorExecutable {
-            hlo,
-            batch,
-            z_dim: net.z_dim,
-            image_channels: net.image_channels,
-            image_size: net.image_size,
-            network: network.to_string(),
-        })
-    }
-}
-
-/// Convert a [`Tensor`] to an `xla::Literal` (f32, row-major).
-pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
-    let dims: Vec<i64> = t.shape().iter().map(|d| *d as i64).collect();
-    xla::Literal::vec1(t.data())
-        .reshape(&dims)
-        .map_err(|e| anyhow::anyhow!("reshaping literal: {e:?}"))
-}
-
-/// Convert raw f32 data + shape to a literal.
-pub fn data_to_literal(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
-    let dims: Vec<i64> = shape.iter().map(|d| *d as i64).collect();
-    xla::Literal::vec1(data)
-        .reshape(&dims)
-        .map_err(|e| anyhow::anyhow!("reshaping literal: {e:?}"))
+/// Was this build compiled with the PJRT backend?
+pub fn has_pjrt() -> bool {
+    cfg!(feature = "pjrt")
 }

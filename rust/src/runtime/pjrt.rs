@@ -1,0 +1,98 @@
+//! PJRT backend — loads the AOT HLO-text artifacts and executes them on
+//! the CPU PJRT client (`xla` crate).  Compiled only with the `pjrt`
+//! feature (which additionally requires the `xla` dependency; the
+//! offline image does not ship it).
+//!
+//! Interchange is HLO *text* (see `python/compile/aot.py` and
+//! /opt/xla-example/README.md): jax ≥ 0.5 emits protos with 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids and round-trips cleanly.
+
+use super::executable::{GeneratorExecutable, LoadedHlo};
+use crate::artifacts::ArtifactDir;
+use crate::tensor::Tensor;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Thin wrapper over the PJRT CPU client.
+///
+/// NOT `Sync`: PJRT handles are raw pointers.  The coordinator owns one
+/// `Runtime` per executor thread and communicates through channels (see
+/// [`crate::coordinator`]).
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("creating PJRT CPU client: {e:?}"))?;
+        Ok(Runtime { client })
+    }
+
+    /// PJRT manages its own intra-op thread pool; the worker budget
+    /// only steers the fallback backend, so it is ignored here (the
+    /// method exists to keep the two backends API-compatible).
+    pub fn cpu_with_workers(_workers: usize) -> Result<Self> {
+        Self::cpu()
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO text file and compile it into an executable.
+    pub fn load_hlo(&self, path: &Path) -> Result<LoadedHlo> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| anyhow::anyhow!("non-utf8 path {path:?}"))?,
+        )
+        .map_err(|e| anyhow::anyhow!("parsing HLO text {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {path:?}: {e:?}"))?;
+        Ok(LoadedHlo::new(exe))
+    }
+
+    /// Load a generator executable for a network at (bucketed) batch size
+    /// `want`, wiring in its manifest metadata.
+    pub fn load_generator(
+        &self,
+        artifacts: &ArtifactDir,
+        network: &str,
+        want_batch: usize,
+    ) -> Result<GeneratorExecutable> {
+        let (batch, path) = artifacts.generator_hlo(network, want_batch)?;
+        let net = artifacts.network(network)?;
+        let hlo = self
+            .load_hlo(&path)
+            .with_context(|| format!("loading generator {path:?}"))?;
+        Ok(GeneratorExecutable {
+            hlo,
+            batch,
+            z_dim: net.z_dim,
+            image_channels: net.image_channels,
+            image_size: net.image_size,
+            network: network.to_string(),
+        })
+    }
+}
+
+/// Convert a [`Tensor`] to an `xla::Literal` (f32, row-major).
+pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let dims: Vec<i64> = t.shape().iter().map(|d| *d as i64).collect();
+    xla::Literal::vec1(t.data())
+        .reshape(&dims)
+        .map_err(|e| anyhow::anyhow!("reshaping literal: {e:?}"))
+}
+
+/// Convert raw f32 data + shape to a literal.
+pub fn data_to_literal(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let dims: Vec<i64> = shape.iter().map(|d| *d as i64).collect();
+    xla::Literal::vec1(data)
+        .reshape(&dims)
+        .map_err(|e| anyhow::anyhow!("reshaping literal: {e:?}"))
+}

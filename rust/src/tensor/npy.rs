@@ -96,8 +96,9 @@ pub fn write_npy_f32(path: &Path, shape: &[usize], data: &[f32]) -> Result<()> {
     header.push_str(&" ".repeat(pad));
     header.push('\n');
 
-    let mut f = std::fs::File::create(path)
+    let f = std::fs::File::create(path)
         .with_context(|| format!("creating {}", path.display()))?;
+    let mut f = std::io::BufWriter::new(f);
     f.write_all(MAGIC)?;
     f.write_all(&[1u8, 0u8])?;
     f.write_all(&(header.len() as u16).to_le_bytes())?;
@@ -105,6 +106,7 @@ pub fn write_npy_f32(path: &Path, shape: &[usize], data: &[f32]) -> Result<()> {
     for v in data {
         f.write_all(&v.to_le_bytes())?;
     }
+    f.flush()?;
     Ok(())
 }
 

@@ -104,6 +104,16 @@ pub fn bench_header(title: &str) {
     println!("\n=== bench: {title} ===");
 }
 
+/// Shared quick-mode switch for the bench binaries: `--smoke` on the
+/// command line, or `EDGEDCNN_BENCH_SMOKE` set to anything but `0`/empty
+/// (so `EDGEDCNN_BENCH_SMOKE=0` disables it, as one would expect).
+pub fn smoke_mode() -> bool {
+    std::env::args().any(|a| a == "--smoke")
+        || std::env::var("EDGEDCNN_BENCH_SMOKE")
+            .map(|v| v != "0" && !v.is_empty())
+            .unwrap_or(false)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

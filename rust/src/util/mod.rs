@@ -5,10 +5,12 @@
 
 mod bench;
 mod json;
+mod pool;
 mod rng;
 mod tempdir;
 
-pub use bench::{bench_header, BenchReport, Bencher};
+pub use bench::{bench_header, smoke_mode, BenchReport, Bencher};
 pub use json::{parse_json, Json};
+pub use pool::WorkerPool;
 pub use rng::Rng;
 pub use tempdir::TempDir;

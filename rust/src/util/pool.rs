@@ -1,0 +1,203 @@
+//! Scoped worker pool — the spatio-temporal parallel execution engine's
+//! substrate.  Dependency-free (std threads only), deterministic result
+//! ordering, panic propagation.
+//!
+//! The pool mirrors the paper's hardware shape in software: a fixed set
+//! of workers (the CU array) pulls independent jobs (output tiles / CU
+//! workloads / layer simulations) from a shared counter and writes each
+//! result into its own pre-assigned slot, so the caller always observes
+//! results in job-index order regardless of scheduling.  Workers are
+//! scoped (`std::thread::scope`), so jobs may borrow from the caller's
+//! stack — no `'static` bound, no channels, no queues.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// A fixed-width pool of scoped worker threads.
+///
+/// `WorkerPool::new(1)` degenerates to inline serial execution (no
+/// threads are spawned), which keeps the serial/parallel code paths
+/// literally identical for the equivalence tests.
+#[derive(Debug, Clone, Copy)]
+pub struct WorkerPool {
+    workers: usize,
+}
+
+impl WorkerPool {
+    /// A pool with exactly `workers` workers (clamped to ≥ 1).
+    pub fn new(workers: usize) -> Self {
+        WorkerPool {
+            workers: workers.max(1),
+        }
+    }
+
+    /// A pool sized to the host (`available_parallelism`), honouring the
+    /// `EDGEDCNN_WORKERS` override.
+    pub fn with_default_parallelism() -> Self {
+        let workers = std::env::var("EDGEDCNN_WORKERS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism()
+                    .map(|n| n.get())
+                    .unwrap_or(1)
+            });
+        WorkerPool::new(workers)
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Evaluate `f(0), f(1), …, f(n-1)` across the pool and return the
+    /// results in index order.
+    ///
+    /// Jobs are claimed from an atomic counter (work stealing by
+    /// exhaustion); each result lands in its own slot, so the output
+    /// order is deterministic no matter how the OS schedules workers.
+    /// A panic in any job propagates to the caller (the scope re-raises
+    /// it when the panicked worker is joined).
+    ///
+    /// Each call spawns one scoped thread set and joins it before
+    /// returning — there are no persistent workers.  Callers in hot
+    /// loops should batch their jobs into one `map_indexed` call per
+    /// loop body (the way [`crate::fpga::simulate_layer_par`] folds all
+    /// tile batches of a layer into one dispatch) rather than calling
+    /// per tiny job set.
+    pub fn map_indexed<R, F>(&self, n: usize, f: F) -> Vec<R>
+    where
+        R: Send,
+        F: Fn(usize) -> R + Sync,
+    {
+        if n == 0 {
+            return Vec::new();
+        }
+        if self.workers == 1 || n == 1 {
+            return (0..n).map(f).collect();
+        }
+        let next = AtomicUsize::new(0);
+        let slots: Vec<Mutex<Option<R>>> =
+            (0..n).map(|_| Mutex::new(None)).collect();
+        std::thread::scope(|s| {
+            for _ in 0..self.workers.min(n) {
+                s.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let r = f(i);
+                    *slots[i].lock().unwrap() = Some(r);
+                });
+            }
+        });
+        slots
+            .into_iter()
+            .map(|m| {
+                m.into_inner()
+                    .expect("worker poisoned a result slot")
+                    .expect("worker pool left a slot unfilled")
+            })
+            .collect()
+    }
+
+    /// Map `f` over a slice, preserving element order.
+    pub fn map<T, R, F>(&self, items: &[T], f: F) -> Vec<R>
+    where
+        T: Sync,
+        R: Send,
+        F: Fn(&T) -> R + Sync,
+    {
+        self.map_indexed(items.len(), |i| f(&items[i]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn results_are_in_index_order() {
+        let pool = WorkerPool::new(4);
+        let got = pool.map_indexed(100, |i| i * i);
+        let want: Vec<usize> = (0..100).map(|i| i * i).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn deterministic_under_contention() {
+        // jitter the per-job runtime so workers constantly interleave;
+        // the output order must still be exactly the input order
+        let pool = WorkerPool::new(8);
+        for round in 0..5u64 {
+            let got = pool.map_indexed(200, |i| {
+                if (i as u64 + round) % 7 == 0 {
+                    std::thread::sleep(std::time::Duration::from_micros(50));
+                }
+                (i, i as u64 * 31 + round)
+            });
+            for (slot, (i, v)) in got.iter().enumerate() {
+                assert_eq!(slot, *i);
+                assert_eq!(*v, *i as u64 * 31 + round);
+            }
+        }
+    }
+
+    #[test]
+    fn single_worker_runs_inline() {
+        let pool = WorkerPool::new(1);
+        let tid = std::thread::current().id();
+        let ids = pool.map_indexed(4, |_| std::thread::current().id());
+        assert!(ids.iter().all(|id| *id == tid), "no threads for w=1");
+    }
+
+    #[test]
+    fn empty_and_singleton_inputs() {
+        let pool = WorkerPool::new(4);
+        assert_eq!(pool.map_indexed(0, |i| i), Vec::<usize>::new());
+        assert_eq!(pool.map_indexed(1, |i| i + 7), vec![7]);
+    }
+
+    #[test]
+    fn map_over_slice_borrows() {
+        let pool = WorkerPool::new(3);
+        let items = vec![1.0f64, 2.0, 3.0, 4.0];
+        let got = pool.map(&items, |x| x * 2.0);
+        assert_eq!(got, vec![2.0, 4.0, 6.0, 8.0]);
+    }
+
+    #[test]
+    fn panics_propagate_to_caller() {
+        let pool = WorkerPool::new(4);
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            pool.map_indexed(16, |i| {
+                if i == 9 {
+                    panic!("job 9 exploded");
+                }
+                i
+            })
+        }));
+        assert!(result.is_err(), "a job panic must reach the caller");
+    }
+
+    #[test]
+    fn every_job_runs_exactly_once() {
+        let pool = WorkerPool::new(6);
+        let counter = AtomicU64::new(0);
+        let n = 500;
+        let got = pool.map_indexed(n, |i| {
+            counter.fetch_add(1, Ordering::Relaxed);
+            i
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), n as u64);
+        assert_eq!(got.len(), n);
+    }
+
+    #[test]
+    fn zero_workers_clamps_to_one() {
+        let pool = WorkerPool::new(0);
+        assert_eq!(pool.workers(), 1);
+        assert_eq!(pool.map_indexed(3, |i| i), vec![0, 1, 2]);
+    }
+}

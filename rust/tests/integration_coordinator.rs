@@ -18,6 +18,7 @@ fn start_coordinator(networks: &[&str]) -> Option<Coordinator> {
                 max_batch: 8,
                 max_wait: Duration::from_millis(2),
             },
+            executors: 0, // auto: one per network
         })
         .expect("coordinator startup"),
     )

@@ -1,0 +1,232 @@
+//! Parallel execution engine integration: the spatio-temporal worker
+//! pool must be a *pure* accelerator — bit-identical tensors and exact
+//! `OpStats` against the serial paths at every layer of the stack
+//! (reverse-loop substrate, generator forward, FPGA simulator), and the
+//! coordinator's executor pool must serve correctly end to end on a
+//! synthetic artifact set (no Python build layer required).
+
+use edgedcnn::artifacts::write_synthetic;
+use edgedcnn::config::{celeba, mnist, network_by_name, PYNQ_Z2};
+use edgedcnn::coordinator::{
+    BatcherConfig, Coordinator, CoordinatorConfig, WorkloadSpec,
+};
+use edgedcnn::deconv::{
+    deconv_reverse_loop, deconv_reverse_loop_par, generator_forward,
+    generator_forward_par, ReverseLoopOpts,
+};
+use edgedcnn::fpga::{simulate_network, simulate_network_par, SimOpts};
+use edgedcnn::tensor::Tensor;
+use edgedcnn::util::{Rng, TempDir, WorkerPool};
+use std::time::Duration;
+
+#[test]
+fn reverse_loop_parallel_equals_serial_on_paper_layers() {
+    let mut rng = Rng::seed_from_u64(0x5EED);
+    for net in [mnist(), celeba()] {
+        for layer in &net.layers {
+            // shrink channels to keep the scalar loops fast while
+            // preserving the spatial geometry (K, S, P, I_H)
+            let c_in = layer.c_in.min(4);
+            let c_out = layer.c_out.min(3);
+            let x = Tensor::from_fn(vec![2, c_in, layer.i_h, layer.i_h], |_| {
+                rng.range_f32(-1.0, 1.0)
+            });
+            let mut w =
+                Tensor::from_fn(vec![c_in, c_out, layer.k, layer.k], |_| {
+                    rng.range_f32(-1.0, 1.0)
+                });
+            for (i, v) in w.data_mut().iter_mut().enumerate() {
+                if i % 3 == 0 {
+                    *v = 0.0; // exercise zero-skipping too
+                }
+            }
+            let b: Vec<f32> = (0..c_out).map(|i| i as f32 * 0.1).collect();
+            for zero_skip in [false, true] {
+                let opts = ReverseLoopOpts {
+                    tile: net.tile,
+                    zero_skip,
+                };
+                let (ys, ss) = deconv_reverse_loop(
+                    &x,
+                    &w,
+                    &b,
+                    layer.stride,
+                    layer.padding,
+                    opts,
+                );
+                for workers in [2, 4, 7] {
+                    let pool = WorkerPool::new(workers);
+                    let (yp, sp) = deconv_reverse_loop_par(
+                        &x,
+                        &w,
+                        &b,
+                        layer.stride,
+                        layer.padding,
+                        opts,
+                        &pool,
+                    );
+                    assert_eq!(
+                        ys.data(),
+                        yp.data(),
+                        "{}: K={} S={} workers={workers} zs={zero_skip}",
+                        net.name,
+                        layer.k,
+                        layer.stride
+                    );
+                    assert_eq!(ss, sp, "OpStats must merge exactly");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn generator_forward_parallel_is_bit_identical() {
+    let net = network_by_name("mnist").unwrap();
+    let mut rng = Rng::seed_from_u64(17);
+    let weights: Vec<(Tensor, Vec<f32>)> = net
+        .layers
+        .iter()
+        .map(|l| {
+            (
+                Tensor::from_fn(vec![l.c_in, l.c_out, l.k, l.k], |_| {
+                    0.03 * rng.normal_f32()
+                }),
+                vec![0.0; l.c_out],
+            )
+        })
+        .collect();
+    let z = Tensor::from_fn(vec![2, net.z_dim], |_| rng.normal_f32());
+    let serial = generator_forward(&net, &weights, &z);
+    for workers in [2, 4] {
+        let pool = WorkerPool::new(workers);
+        let par = generator_forward_par(&net, &weights, &z, &pool);
+        assert_eq!(serial.data(), par.data(), "workers={workers}");
+    }
+}
+
+#[test]
+fn fpga_simulator_parallel_sweep_is_exact() {
+    for net in [mnist(), celeba()] {
+        let opts: Vec<SimOpts> = net
+            .layers
+            .iter()
+            .map(|_| SimOpts {
+                tile: net.tile,
+                zero_skip: true,
+                weight_sparsity: 0.6,
+                decouple: true,
+            })
+            .collect();
+        let a = simulate_network(&net, &PYNQ_Z2, &opts);
+        let pool = WorkerPool::new(4);
+        let b = simulate_network_par(&net, &PYNQ_Z2, &opts, &pool);
+        assert_eq!(a.total_time_s, b.total_time_s);
+        assert_eq!(a.gops_per_w, b.gops_per_w);
+        for (la, lb) in a.layers.iter().zip(&b.layers) {
+            assert_eq!(la.cycles, lb.cycles);
+            assert_eq!(la.compute_cycles, lb.compute_cycles);
+        }
+    }
+}
+
+fn synthetic_coordinator(
+    dir: &TempDir,
+    networks: &[&str],
+    executors: usize,
+) -> Coordinator {
+    write_synthetic(dir.path(), networks, 4, 99).expect("synthetic set");
+    Coordinator::start(CoordinatorConfig {
+        artifacts_dir: dir.path().to_path_buf(),
+        networks: networks.iter().map(|s| s.to_string()).collect(),
+        batcher: BatcherConfig {
+            max_batch: 4,
+            max_wait: Duration::from_millis(2),
+        },
+        executors,
+    })
+    .expect("coordinator startup")
+}
+
+#[test]
+fn executor_pool_serves_synthetic_artifacts() {
+    let dir = TempDir::new().unwrap();
+    let coord = synthetic_coordinator(&dir, &["mnist"], 2);
+    assert_eq!(coord.executors(), 2);
+    let a = coord.submit_blocking("mnist", 1, 4242).unwrap();
+    let b = coord.submit_blocking("mnist", 1, 4242).unwrap();
+    assert_eq!(a.images.shape(), &[1, 1, 28, 28]);
+    assert_eq!(a.images.data(), b.images.data(), "seeded determinism");
+    assert!(a.images.data().iter().all(|v| v.abs() <= 1.0));
+    assert!(a.fpga_time_s > 0.0);
+    assert!(a.gpu_time_s > 0.0);
+}
+
+#[test]
+fn executor_pool_workload_report_is_consistent() {
+    let dir = TempDir::new().unwrap();
+    let coord = synthetic_coordinator(&dir, &["mnist"], 2);
+    let report = coord
+        .serve_workload(&WorkloadSpec {
+            network: "mnist".into(),
+            requests: 6,
+            images_per_request: 1,
+            interarrival: Duration::ZERO,
+            seed: 5,
+        })
+        .unwrap();
+    assert_eq!(report.requests, 6);
+    assert_eq!(report.images, 6);
+    assert!(report.batches >= 1 && report.batches <= 6);
+    assert!(report.images_per_s > 0.0);
+    assert!(report.gops > 0.0);
+    assert!(report.latency.p99_s >= report.latency.p50_s);
+    assert!(report.mean_power_w > 0.0);
+    assert!(report.gops_per_w > 0.0);
+}
+
+#[test]
+fn executor_pool_serves_networks_concurrently() {
+    let dir = TempDir::new().unwrap();
+    let coord = synthetic_coordinator(&dir, &["mnist", "celeba"], 0);
+    assert_eq!(coord.executors(), 2, "auto: one executor per network");
+    // submit to both networks at once; each resolves on its own executor
+    let hm = coord.submit("mnist", 1, 7).unwrap();
+    let hc = coord.submit("celeba", 1, 7).unwrap();
+    let m = hm.wait().unwrap();
+    let c = hc.wait().unwrap();
+    assert_eq!(m.images.shape(), &[1, 1, 28, 28]);
+    assert_eq!(c.images.shape(), &[1, 3, 64, 64]);
+    // celeba is ~20x the ops: its edge annotation must be slower
+    assert!(c.fpga_time_s > m.fpga_time_s);
+}
+
+#[test]
+fn executor_pool_survives_unknown_network() {
+    let dir = TempDir::new().unwrap();
+    let coord = synthetic_coordinator(&dir, &["mnist"], 2);
+    let bad = coord.submit_blocking("imagenet", 1, 0);
+    assert!(bad.is_err(), "unloaded network must error, not hang");
+    let good = coord.submit_blocking("mnist", 1, 0);
+    assert!(good.is_ok(), "pool must survive a bad request");
+}
+
+#[test]
+fn executor_pool_coalesces_bursts() {
+    let dir = TempDir::new().unwrap();
+    let coord = synthetic_coordinator(&dir, &["mnist"], 1);
+    let handles: Vec<_> = (0..8)
+        .map(|i| coord.submit("mnist", 1, 1000 + i).unwrap())
+        .collect();
+    let responses: Vec<_> =
+        handles.into_iter().map(|h| h.wait().unwrap()).collect();
+    assert_eq!(responses.len(), 8);
+    let max_batch = responses.iter().map(|r| r.batch_size).max().unwrap();
+    assert!(
+        max_batch >= 2,
+        "burst should have been coalesced (max batch {max_batch})"
+    );
+    for r in &responses {
+        assert_eq!(r.images.shape(), &[1, 1, 28, 28]);
+    }
+}

@@ -79,6 +79,10 @@ fn batch_buckets_agree_with_each_other() {
 #[test]
 fn per_layer_artifacts_load_and_execute() {
     let Some(artifacts) = artifacts_or_skip() else { return };
+    if !edgedcnn::runtime::has_pjrt() {
+        eprintln!("(skipping: single-layer HLO execution needs `pjrt`)");
+        return;
+    }
     let runtime = Runtime::cpu().unwrap();
     for name in ["mnist", "celeba"] {
         let net = artifacts.network_cfg(name).unwrap();

@@ -8,12 +8,12 @@
 use edgedcnn::config::DeconvLayerCfg;
 use edgedcnn::coordinator::{BatcherConfig, DynamicBatcher, InferenceRequest};
 use edgedcnn::deconv::{
-    deconv_reverse_loop, deconv_standard, input_tile_extent,
-    stride_hole_offsets, ReverseLoopOpts,
+    deconv_reverse_loop, deconv_reverse_loop_par, deconv_standard,
+    input_tile_extent, stride_hole_offsets, ReverseLoopOpts,
 };
 use edgedcnn::sparsity::{magnitude_prune, mmd_biased, Mmd};
 use edgedcnn::tensor::{read_npy_f32, write_npy_f32, Tensor};
-use edgedcnn::util::{parse_json, Rng, TempDir};
+use edgedcnn::util::{parse_json, Rng, TempDir, WorkerPool};
 use std::time::{Duration, Instant};
 
 const CASES: usize = 200;
@@ -65,6 +65,49 @@ fn prop_reverse_loop_equals_standard() {
         );
         // one-shot write invariant: every output element written once
         assert_eq!(stats.ext_write_bytes, 4 * want.numel() as u64);
+    }
+}
+
+#[test]
+fn prop_parallel_reverse_loop_bit_identical_to_serial() {
+    // the spatio-temporal engine must be a pure accelerator: identical
+    // tensors AND identical OpStats for random shapes, tiles, sparsity
+    // patterns and pool widths
+    let mut rng = Rng::seed_from_u64(0xBA11E1);
+    for case in 0..CASES / 2 {
+        let (c_in, c_out, k, s, p, i_h) = random_geometry(&mut rng);
+        let tile = rng.range_usize(1, 12);
+        let n = rng.range_usize(1, 3);
+        let x = Tensor::from_fn(vec![n, c_in, i_h, i_h], |_| {
+            rng.range_f32(-1.0, 1.0)
+        });
+        let mut w = Tensor::from_fn(vec![c_in, c_out, k, k], |_| {
+            rng.range_f32(-1.0, 1.0)
+        });
+        // random exact zeros so zero-skipping has work to skip
+        for v in w.data_mut().iter_mut() {
+            if rng.gen_bool(0.3) {
+                *v = 0.0;
+            }
+        }
+        let b: Vec<f32> =
+            (0..c_out).map(|_| rng.range_f32(-0.5, 0.5)).collect();
+        let opts = ReverseLoopOpts {
+            tile,
+            zero_skip: rng.gen_bool(0.5),
+        };
+        let workers = rng.range_usize(2, 9);
+        let (ys, ss) = deconv_reverse_loop(&x, &w, &b, s, p, opts);
+        let pool = WorkerPool::new(workers);
+        let (yp, sp) =
+            deconv_reverse_loop_par(&x, &w, &b, s, p, opts, &pool);
+        assert_eq!(
+            ys.data(),
+            yp.data(),
+            "case {case}: ({c_in},{c_out},{k},{s},{p},{i_h}) tile {tile} \
+             workers {workers}"
+        );
+        assert_eq!(ss, sp, "case {case}: OpStats must merge exactly");
     }
 }
 

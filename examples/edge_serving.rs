@@ -25,6 +25,7 @@ fn main() -> anyhow::Result<()> {
             max_wait: Duration::from_millis(4),
         },
         executors: 0, // auto: one executor thread per network
+        ..Default::default()
     })?;
 
     // single-request sanity: deterministic per seed, annotated

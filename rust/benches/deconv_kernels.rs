@@ -13,6 +13,7 @@ use edgedcnn::deconv::{
     deconv_reverse_loop, deconv_reverse_loop_par, deconv_standard,
     deconv_tdc, ReverseLoopOpts,
 };
+use edgedcnn::quant::{quantize_tensor, Element, Q8_8, Rounding};
 use edgedcnn::runtime::{
     data_to_literal, has_pjrt, tensor_to_literal, Runtime,
 };
@@ -92,6 +93,47 @@ fn main() -> anyhow::Result<()> {
     let r = Bencher::new("rust/tdc(stride^2 transform)")
         .iters(iters)
         .run_with_ops(ops, || deconv_tdc(&x, &w, &b, s, p));
+    println!("{}", r.render());
+
+    // Quantized column: the same reverse-loop kernel monomorphized at
+    // Q8.8 fixed point — the datapath the FPGA actually runs.  A perf
+    // regression here fails the CI bench-smoke job fast.
+    let xq = quantize_tensor::<i16, 8>(&x, Rounding::Nearest);
+    let wq = quantize_tensor::<i16, 8>(&w, Rounding::Nearest);
+    let bq: Vec<Q8_8> = b.iter().map(|v| Q8_8::from_f32(*v)).collect();
+    let r = Bencher::new("rust/reverse-loop-q8.8(fixed-point)")
+        .iters(iters)
+        .run_with_ops(ops, || {
+            deconv_reverse_loop(
+                &xq,
+                &wq,
+                &bq,
+                s,
+                p,
+                ReverseLoopOpts {
+                    tile: 12,
+                    zero_skip: false,
+                },
+            )
+        });
+    println!("{}", r.render());
+    let pool_q = WorkerPool::new(4);
+    let r = Bencher::new("rust/reverse-loop-q8.8/4 workers")
+        .iters(iters)
+        .run_with_ops(ops, || {
+            deconv_reverse_loop_par(
+                &xq,
+                &wq,
+                &bq,
+                s,
+                p,
+                ReverseLoopOpts {
+                    tile: 12,
+                    zero_skip: false,
+                },
+                &pool_q,
+            )
+        });
     println!("{}", r.render());
 
     // Parallel engine: serial vs parallel columns on a batch-4 slice

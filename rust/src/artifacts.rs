@@ -15,8 +15,11 @@
 //! rejects such incomplete sets: the tests it guards assert properties of
 //! *trained* artifacts.
 
-use crate::config::{network_by_name, DeconvLayerCfg, NetworkCfg};
-use crate::tensor::Tensor;
+use crate::config::{network_by_name, DeconvLayerCfg, NetworkCfg, Precision};
+use crate::quant::{QFormat, QuantLayerRaw, QuantizedGenerator};
+use crate::tensor::{
+    read_npy_i32, write_npy_i16, write_npy_i32, Tensor,
+};
 use crate::util::{parse_json, Json, Rng};
 use anyhow::{ensure, Context, Result};
 use std::collections::BTreeMap;
@@ -160,6 +163,12 @@ impl ArtifactDir {
             })
             .collect::<Result<_>>()?;
         ensure!(!layers.is_empty(), "manifest/{name} has no layers");
+        // optional datapath precision ("f32" when absent; "q8.8"-style
+        // strings select the fixed-point serving path)
+        let precision = match j.get("precision") {
+            Some(p) => p.as_str()?.parse::<Precision>()?,
+            None => Precision::F32,
+        };
         Ok(NetworkCfg {
             name: m.name,
             z_dim: m.z_dim,
@@ -167,6 +176,7 @@ impl ArtifactDir {
             image_channels: m.image_channels,
             image_size: m.image_size,
             tile: m.tile,
+            precision,
         })
     }
 
@@ -252,6 +262,52 @@ impl ArtifactDir {
             .keys()
             .cloned()
             .collect())
+    }
+
+    /// Load a quantized-weight sidecar previously written by
+    /// [`export_quantized`]: the format plus the raw per-layer storage
+    /// words and calibrated scales.  Feed into
+    /// [`QuantizedGenerator::from_raw`] — bit-exact against the
+    /// exported generator.
+    pub fn load_quantized(
+        &self,
+        name: &str,
+    ) -> Result<(QFormat, Vec<QuantLayerRaw>)> {
+        let path = self.root.join(format!("{name}_quant.json"));
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = parse_json(&text)
+            .with_context(|| format!("parsing {}", path.display()))?;
+        let version = j.req("version")?.as_usize()?;
+        ensure!(version == 1, "unsupported quant sidecar version {version}");
+        let bits = j.req("bits")?.as_usize()? as u32;
+        let frac = j.req("frac")?.as_usize()? as u32;
+        let mut layers = Vec::new();
+        for l in j.req("layers")?.as_arr()? {
+            let wf = l.req("w")?.as_str()?;
+            let bf = l.req("b")?.as_str()?;
+            let scale_exp = l.req("scale_exp")?.as_f64()? as i32;
+            let (w_shape, w_raw) = read_npy_i32(&self.root.join(wf))
+                .with_context(|| format!("loading quantized weights {wf}"))?;
+            let (b_shape, b_raw) = read_npy_i32(&self.root.join(bf))
+                .with_context(|| format!("loading quantized bias {bf}"))?;
+            ensure!(
+                w_shape.len() == 4,
+                "quantized weight file {wf} is not rank-4"
+            );
+            ensure!(
+                b_shape.len() == 1 && b_shape[0] == b_raw.len(),
+                "quantized bias file {bf} is not a vector"
+            );
+            layers.push(QuantLayerRaw {
+                w_shape,
+                w_raw,
+                b_raw,
+                scale_exp,
+            });
+        }
+        ensure!(!layers.is_empty(), "{name}: empty quant sidecar");
+        Ok((QFormat::new(bits, frac), layers))
     }
 
     /// Is every file the manifest references present on disk?  `false`
@@ -446,10 +502,90 @@ pub fn write_synthetic(
     ArtifactDir::open(dir)
 }
 
+/// Export a quantized weight set next to an artifact directory: per
+/// layer an `<i2>`/`<i4>` npy pair (`weights/<net>_l<i>_{wq,bq}.npy`)
+/// plus a `<net>_quant.json` sidecar carrying the format and the
+/// calibrated per-layer scales.  Returns the sidecar path.
+pub fn export_quantized(
+    dir: &Path,
+    name: &str,
+    gen: &QuantizedGenerator,
+) -> Result<PathBuf> {
+    let fmt = gen.format();
+    let raw = gen.export_raw();
+    ensure!(!raw.is_empty(), "nothing to export");
+    std::fs::create_dir_all(dir.join("weights"))
+        .with_context(|| format!("creating {}", dir.display()))?;
+    let mut layers_json = String::new();
+    for (i, l) in raw.iter().enumerate() {
+        let wf = format!("weights/{name}_l{i}_wq.npy");
+        let bf = format!("weights/{name}_l{i}_bq.npy");
+        if fmt.bits <= 16 {
+            let w16: Vec<i16> = l.w_raw.iter().map(|v| *v as i16).collect();
+            write_npy_i16(&dir.join(&wf), &l.w_shape, &w16)?;
+            let b16: Vec<i16> = l.b_raw.iter().map(|v| *v as i16).collect();
+            write_npy_i16(&dir.join(&bf), &[b16.len()], &b16)?;
+        } else {
+            write_npy_i32(&dir.join(&wf), &l.w_shape, &l.w_raw)?;
+            write_npy_i32(&dir.join(&bf), &[l.b_raw.len()], &l.b_raw)?;
+        }
+        if i > 0 {
+            layers_json.push_str(",\n");
+        }
+        layers_json.push_str(&format!(
+            r#"  {{"w": "{wf}", "b": "{bf}", "scale_exp": {}}}"#,
+            l.scale_exp
+        ));
+    }
+    let sidecar = format!(
+        "{{\n \"version\": 1,\n \"network\": \"{name}\",\n \"bits\": {},\n \
+         \"frac\": {},\n \"layers\": [\n{layers_json}\n ]\n}}\n",
+        fmt.bits, fmt.frac
+    );
+    let path = dir.join(format!("{name}_quant.json"));
+    let mut f = std::fs::File::create(&path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    f.write_all(sidecar.as_bytes())?;
+    Ok(path)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::quant::Rounding;
     use crate::util::TempDir;
+
+    #[test]
+    fn quantized_export_import_roundtrip() {
+        let dir = TempDir::new().unwrap();
+        let a = write_synthetic(dir.path(), &["mnist"], 2, 5).unwrap();
+        let weights = a.load_weights("mnist").unwrap();
+        for fmt in [QFormat::new(16, 8), QFormat::new(32, 16)] {
+            let gen =
+                QuantizedGenerator::quantize(fmt, &weights, Rounding::Nearest)
+                    .unwrap();
+            let path = export_quantized(dir.path(), "mnist", &gen).unwrap();
+            assert!(path.exists());
+            let (got_fmt, raw) = a.load_quantized("mnist").unwrap();
+            assert_eq!(got_fmt, fmt);
+            assert_eq!(raw, gen.export_raw(), "raw bits must roundtrip");
+            let back = QuantizedGenerator::from_raw(got_fmt, &raw).unwrap();
+            assert_eq!(back.export_raw(), gen.export_raw());
+        }
+        // missing sidecar errors cleanly
+        assert!(a.load_quantized("celeba").is_err());
+    }
+
+    #[test]
+    fn manifest_precision_field_parses() {
+        let dir = TempDir::new().unwrap();
+        let a = write_synthetic(dir.path(), &["mnist"], 2, 5).unwrap();
+        assert_eq!(
+            a.network_cfg("mnist").unwrap().precision,
+            Precision::F32,
+            "absent field defaults to f32"
+        );
+    }
 
     #[test]
     fn synthetic_roundtrip_mnist() {

@@ -1,8 +1,11 @@
 //! Static configuration: the paper's two DCNN generator architectures
-//! (Fig. 4) and the two hardware platforms (PYNQ-Z2 FPGA, Jetson TX1 GPU).
+//! (Fig. 4), the two hardware platforms (PYNQ-Z2 FPGA, Jetson TX1 GPU),
+//! and the datapath precision axis ([`Precision`], defined in
+//! [`crate::quant`] and re-exported here as part of the config surface).
 
 mod hw;
 mod network;
 
+pub use crate::quant::{Precision, QFormat};
 pub use hw::{FpgaBoard, GpuBoard, PYNQ_Z2, JETSON_TX1};
 pub use network::{celeba, mnist, network_by_name, DeconvLayerCfg, NetworkCfg};

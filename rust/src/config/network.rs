@@ -69,7 +69,9 @@ impl DeconvLayerCfg {
 }
 
 /// A DCNN generator: latent dim + deconvolution stack + the unified output
-/// tiling factor `T_OH` the paper selects per network (Table I).
+/// tiling factor `T_OH` the paper selects per network (Table I) + the
+/// datapath precision the network is served at (`f32` for the historical
+/// path; a Qm.n format for the quantized edge path).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct NetworkCfg {
     pub name: String,
@@ -78,6 +80,7 @@ pub struct NetworkCfg {
     pub image_channels: usize,
     pub image_size: usize,
     pub tile: usize,
+    pub precision: crate::quant::Precision,
 }
 
 impl NetworkCfg {
@@ -111,6 +114,7 @@ pub fn mnist() -> NetworkCfg {
         image_channels: 1,
         image_size: 28,
         tile: 12,
+        precision: crate::quant::Precision::F32,
     }
 }
 
@@ -130,6 +134,7 @@ pub fn celeba() -> NetworkCfg {
         image_channels: 3,
         image_size: 64,
         tile: 24,
+        precision: crate::quant::Precision::F32,
     }
 }
 

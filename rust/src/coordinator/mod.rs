@@ -2,7 +2,11 @@
 //! accelerator: request intake, dynamic batching into the AOT-exported
 //! batch buckets, a device-executor thread owning the PJRT runtime (and
 //! the FPGA/GPU timing simulators for edge-device annotations), metrics,
-//! and a sampled power meter.
+//! and a sampled power meter.  With `CoordinatorConfig::quant` set,
+//! every network also serves a fixed-point twin under `<name>.q`
+//! (calibrated at startup, executed through the quantized reverse-loop
+//! substrate) side by side with the f32 path; `shard_batches` splits
+//! multi-request batches across the executor pool.
 //!
 //! Threading model: PJRT handles are not `Sync`, so one **device thread**
 //! owns the [`crate::runtime::Runtime`] and all compiled executables; a

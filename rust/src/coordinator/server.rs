@@ -23,9 +23,12 @@ use super::batcher::{Batch, BatcherConfig, DynamicBatcher};
 use super::metrics::{MetricsRegistry, ServingReport};
 use super::request::{InferenceRequest, InferenceResponse};
 use crate::artifacts::ArtifactDir;
-use crate::config::{network_by_name, NetworkCfg, JETSON_TX1, PYNQ_Z2};
+use crate::config::{
+    network_by_name, NetworkCfg, Precision, QFormat, JETSON_TX1, PYNQ_Z2,
+};
 use crate::fpga::{simulate_network, SimOpts};
 use crate::gpu::{expected_gpu_network_time, ThermalThrottle};
+use crate::quant::{QuantizedGenerator, Rounding};
 use crate::runtime::{GeneratorExecutable, Runtime};
 use crate::tensor::Tensor;
 use crate::util::{Rng, WorkerPool};
@@ -46,6 +49,15 @@ pub struct CoordinatorConfig {
     /// Device-executor threads.  `0` = auto: one per preloaded network
     /// (per-network affinity makes more executors than networks idle).
     pub executors: usize,
+    /// When set, every preloaded network also serves a fixed-point twin
+    /// under the logical name `<name>.q` (quantized at startup with
+    /// per-layer scale calibration) — side by side with the f32 path.
+    pub quant: Option<QFormat>,
+    /// Intra-batch parallelism: split multi-request batches across the
+    /// executor pool (round-robin at request granularity) instead of
+    /// batch-at-a-time dispatch.  Requires every executor to load every
+    /// network, so it trades startup memory for tail latency.
+    pub shard_batches: bool,
 }
 
 impl Default for CoordinatorConfig {
@@ -55,8 +67,20 @@ impl Default for CoordinatorConfig {
             networks: vec!["mnist".to_string()],
             batcher: BatcherConfig::default(),
             executors: 0,
+            quant: None,
+            shard_batches: false,
         }
     }
+}
+
+/// All logical network names this config serves: the base (f32)
+/// networks plus their `.q` quantized twins when enabled.
+fn logical_networks(config: &CoordinatorConfig) -> Vec<String> {
+    let mut names = config.networks.clone();
+    if config.quant.is_some() {
+        names.extend(config.networks.iter().map(|n| format!("{n}.q")));
+    }
+    names
 }
 
 /// A synthetic open-loop workload for [`Coordinator::serve_workload`].
@@ -95,11 +119,16 @@ struct ExecutedBatch {
 /// Per-network state owned by one executor thread.
 struct NetState {
     cfg: NetworkCfg,
-    /// Executables keyed by batch bucket.
+    /// Executables keyed by batch bucket (f32 path; empty for `.q`).
     executables: HashMap<usize, GeneratorExecutable>,
     buckets: Vec<usize>,
     weights: Vec<(Tensor, Vec<f32>)>,
-    /// Precomputed dense FPGA edge timing/energy for one image.
+    /// Quantized twin (`.q` logical networks): the calibrated
+    /// fixed-point generator, executed through the reverse-loop
+    /// substrate directly.
+    quant: Option<QuantizedGenerator>,
+    /// Precomputed dense FPGA edge timing/energy for one image (at the
+    /// network's served precision).
     fpga_time_s: f64,
     fpga_energy_j: f64,
 }
@@ -137,8 +166,11 @@ impl Coordinator {
     /// Start the executor pool (each thread compiling all executables)
     /// and the leader/batching thread.
     pub fn start(config: CoordinatorConfig) -> Result<Self> {
+        // auto sizing counts *logical* networks (the `.q` twins are
+        // full serving paths of their own), so mixed f32/quant traffic
+        // actually runs concurrently
         let n_exec = if config.executors == 0 {
-            config.networks.len().max(1)
+            logical_networks(&config).len().max(1)
         } else {
             config.executors
         };
@@ -165,21 +197,24 @@ impl Coordinator {
                 .context("device thread died during startup")??;
         }
 
-        // Per-network affinity: network i → executor i mod pool.
-        let affinity: HashMap<String, usize> = config
-            .networks
-            .iter()
+        // Per-network affinity: logical network i → executor i mod pool
+        // (the `.q` twins land after the f32 names, so mixed f32/quant
+        // workloads spread across the pool).
+        let affinity: HashMap<String, usize> = logical_networks(&config)
+            .into_iter()
             .enumerate()
-            .map(|(i, n)| (n.clone(), i % n_exec))
+            .map(|(i, n)| (n, i % n_exec))
             .collect();
 
         let (tx_leader, rx_leader) = mpsc::channel::<LeaderCmd>();
         let batcher_cfg = config.batcher;
+        let shard_batches = config.shard_batches;
         let leader = std::thread::Builder::new()
             .name("edgedcnn-leader".into())
             .spawn(move || {
                 leader_thread(
                     batcher_cfg,
+                    shard_batches,
                     rx_leader,
                     exec_txs,
                     affinity,
@@ -282,9 +317,11 @@ impl Drop for Coordinator {
 }
 
 /// Leader loop: intake → dynamic batching (deadline-driven) → dispatch
-/// to the affine executor (never blocking on execution).
+/// to the affine executor (never blocking on execution), optionally
+/// sharding multi-request batches across the pool.
 fn leader_thread(
     config: BatcherConfig,
+    shard_batches: bool,
     rx: mpsc::Receiver<LeaderCmd>,
     executors: Vec<mpsc::Sender<DeviceCmd>>,
     affinity: HashMap<String, usize>,
@@ -353,11 +390,11 @@ fn leader_thread(
             }
         }
         for batch in cuts {
-            dispatch(&executors, &affinity, batch, &mut waiters);
+            dispatch(&executors, &affinity, batch, &mut waiters, shard_batches);
         }
         // drain any additional ready batches (e.g. other networks)
         while let Some(batch) = batcher.poll(Instant::now()) {
-            dispatch(&executors, &affinity, batch, &mut waiters);
+            dispatch(&executors, &affinity, batch, &mut waiters, shard_batches);
         }
         if shutdown {
             break 'outer;
@@ -368,7 +405,7 @@ fn leader_thread(
     while batcher.queued() > 0 {
         match batcher.poll(flush_at) {
             Some(batch) => {
-                dispatch(&executors, &affinity, batch, &mut waiters)
+                dispatch(&executors, &affinity, batch, &mut waiters, shard_batches)
             }
             None => break,
         }
@@ -384,17 +421,58 @@ fn leader_thread(
 /// Route a batch to its network's executor.  Non-blocking: the reply
 /// channels travel with the batch, so the leader returns to intake
 /// immediately and distinct networks execute concurrently.
+///
+/// With `shard` enabled and ≥ 2 requests in the batch, the batch is
+/// split round-robin at *request* granularity across the executor pool
+/// (intra-batch parallelism).  Request boundaries keep every response
+/// self-contained, so no reassembly step is needed — and since latents
+/// derive from per-request seeds, per-request images are identical with
+/// sharding on or off (asserted by the integration tests).
 fn dispatch(
     executors: &[mpsc::Sender<DeviceCmd>],
     affinity: &HashMap<String, usize>,
     batch: Batch,
     waiters: &mut HashMap<u64, mpsc::Sender<InferenceResponse>>,
+    shard: bool,
 ) {
-    let idx = affinity
+    let base = affinity
         .get(&batch.network)
         .copied()
         .unwrap_or(0)
         .min(executors.len().saturating_sub(1));
+    if shard && batch.requests.len() >= 2 && executors.len() >= 2 {
+        let n_shards = executors.len().min(batch.requests.len());
+        let network = batch.network;
+        let mut groups: Vec<Vec<InferenceRequest>> =
+            (0..n_shards).map(|_| Vec::new()).collect();
+        for (i, r) in batch.requests.into_iter().enumerate() {
+            groups[i % n_shards].push(r);
+        }
+        for (gi, requests) in groups.into_iter().enumerate() {
+            let n_images = requests.iter().map(|r| r.n_images).sum();
+            let shard_batch = Batch {
+                network: network.clone(),
+                requests,
+                n_images,
+            };
+            send_to_executor(
+                executors,
+                (base + gi) % executors.len(),
+                shard_batch,
+                waiters,
+            );
+        }
+    } else {
+        send_to_executor(executors, base, batch, waiters);
+    }
+}
+
+fn send_to_executor(
+    executors: &[mpsc::Sender<DeviceCmd>],
+    idx: usize,
+    batch: Batch,
+    waiters: &mut HashMap<u64, mpsc::Sender<InferenceResponse>>,
+) {
     let mut replies = Vec::with_capacity(batch.requests.len());
     for r in &batch.requests {
         if let Some(tx) = waiters.remove(&r.id) {
@@ -413,10 +491,11 @@ fn dispatch(
 
 /// One device-executor thread: owns a runtime and the compiled
 /// executables of *its affine networks only* (affinity is static, so
-/// loading the rest would waste startup time and memory pool-wide);
-/// also carries the FPGA/GPU edge models for annotations.  Records
-/// metrics and resolves waiters itself so the leader never blocks on
-/// execution.
+/// loading the rest would waste startup time and memory pool-wide —
+/// unless intra-batch sharding is on, which routes any network to any
+/// executor and therefore loads everything everywhere); also carries
+/// the FPGA/GPU edge models for annotations.  Records metrics and
+/// resolves waiters itself so the leader never blocks on execution.
 fn device_thread(
     config: CoordinatorConfig,
     exec_index: usize,
@@ -425,38 +504,79 @@ fn device_thread(
     ready: mpsc::Sender<Result<()>>,
     metrics: Arc<Mutex<MetricsRegistry>>,
 ) {
-    let setup = (|| -> Result<(Runtime, HashMap<String, NetState>)> {
+    let setup = (|| -> Result<(Runtime, WorkerPool, HashMap<String, NetState>)> {
         let artifacts = ArtifactDir::open(&config.artifacts_dir)?;
         // split the host's compute budget across the pool so executors
         // running concurrently don't oversubscribe the CPU (the width
         // honours the EDGEDCNN_WORKERS override)
         let host_workers = WorkerPool::with_default_parallelism().workers();
-        let runtime = Runtime::cpu_with_workers(
-            (host_workers / n_exec).max(1),
-        )?;
+        let exec_pool = WorkerPool::new((host_workers / n_exec).max(1));
+        let runtime = Runtime::cpu_with_workers(exec_pool.workers())?;
         let mut nets = HashMap::new();
-        for (ni, name) in config.networks.iter().enumerate() {
-            // mirror of the leader's affinity map: network i → executor
-            // i mod n_exec
-            if ni % n_exec != exec_index {
+        let names = logical_networks(&config);
+        for (ni, name) in names.iter().enumerate() {
+            // mirror of the leader's affinity map: logical network i →
+            // executor i mod n_exec (sharding loads all networks on all
+            // executors)
+            if !config.shard_batches && ni % n_exec != exec_index {
                 continue;
             }
-            let manifest_net = artifacts.network(name)?;
-            let cfg = artifacts.network_cfg(name)?;
+            let base = name.strip_suffix(".q").unwrap_or(name);
+            let manifest_net = artifacts.network(base)?;
+            let cfg = artifacts.network_cfg(base)?;
             // sanity: manifest must agree with the built-in architecture
-            let builtin = network_by_name(name)?;
+            let builtin = network_by_name(base)?;
             anyhow::ensure!(
                 cfg.layers == builtin.layers,
-                "manifest/{name} diverges from built-in config"
+                "manifest/{base} diverges from built-in config"
             );
+            let weights = artifacts.load_weights(base)?;
+            if name.ends_with(".q") {
+                // quantized twin: calibrate+quantize at startup, and
+                // annotate with the FPGA model at the fixed-point
+                // datapath (narrower AXI words, packed MAC lanes)
+                let fmt = config
+                    .quant
+                    .expect("`.q` network names require `quant: Some(..)`");
+                let qgen = QuantizedGenerator::quantize(
+                    fmt,
+                    &weights,
+                    Rounding::Nearest,
+                )?;
+                let opts: Vec<SimOpts> = cfg
+                    .layers
+                    .iter()
+                    .map(|_| {
+                        SimOpts::dense_at(cfg.tile, Precision::Fixed(fmt))
+                    })
+                    .collect();
+                let sim = simulate_network(&cfg, &PYNQ_Z2, &opts);
+                nets.insert(
+                    name.clone(),
+                    NetState {
+                        buckets: Vec::new(),
+                        executables: HashMap::new(),
+                        weights: Vec::new(),
+                        quant: Some(qgen),
+                        fpga_time_s: sim.total_time_s,
+                        fpga_energy_j: sim.total_time_s * sim.mean_power_w,
+                        cfg,
+                    },
+                );
+                continue;
+            }
             let mut executables = HashMap::new();
             for &bs in &manifest_net.batch_sizes {
                 executables
-                    .insert(bs, runtime.load_generator(&artifacts, name, bs)?);
+                    .insert(bs, runtime.load_generator(&artifacts, base, bs)?);
             }
-            let weights = artifacts.load_weights(name)?;
-            let opts: Vec<SimOpts> =
-                cfg.layers.iter().map(|_| SimOpts::dense(cfg.tile)).collect();
+            // edge annotations honour the manifest's declared datapath
+            // precision (f32 when absent)
+            let opts: Vec<SimOpts> = cfg
+                .layers
+                .iter()
+                .map(|_| SimOpts::dense_at(cfg.tile, cfg.precision))
+                .collect();
             let sim = simulate_network(&cfg, &PYNQ_Z2, &opts);
             nets.insert(
                 name.clone(),
@@ -464,16 +584,17 @@ fn device_thread(
                     buckets: manifest_net.batch_sizes.clone(),
                     executables,
                     weights,
+                    quant: None,
                     fpga_time_s: sim.total_time_s,
                     fpga_energy_j: sim.total_time_s * sim.mean_power_w,
                     cfg,
                 },
             );
         }
-        Ok((runtime, nets))
+        Ok((runtime, exec_pool, nets))
     })();
 
-    let (_runtime, mut nets) = match setup {
+    let (_runtime, exec_pool, mut nets) = match setup {
         Ok(v) => {
             let _ = ready.send(Ok(()));
             v
@@ -489,7 +610,7 @@ fn device_thread(
         match cmd {
             DeviceCmd::Shutdown => break,
             DeviceCmd::Execute { batch, replies } => {
-                match execute_batch(&mut nets, &mut gpu_throttle, batch) {
+                match execute_batch(&mut nets, &mut gpu_throttle, &exec_pool, batch) {
                     Ok(done) => {
                         let mut reply_by_id: HashMap<
                             u64,
@@ -528,6 +649,7 @@ fn device_thread(
 fn execute_batch(
     nets: &mut HashMap<String, NetState>,
     gpu_throttle: &mut ThermalThrottle,
+    exec_pool: &WorkerPool,
     batch: Batch,
 ) -> Result<ExecutedBatch> {
     let state = nets.get_mut(&batch.network).ok_or_else(|| {
@@ -544,43 +666,55 @@ fn execute_batch(
         }
     }
 
-    // bucket execution: smallest exported bucket ≥ remaining, else the
-    // largest repeatedly (vLLM-style bucketed continuous batching)
-    let largest = *state.buckets.iter().max().unwrap();
-    let mut remaining = batch.n_images;
-    let mut offset = 0usize;
-    let mut all_rows: Vec<f32> = Vec::with_capacity(
-        batch.n_images
-            * state.cfg.image_channels
-            * state.cfg.image_size
-            * state.cfg.image_size,
-    );
     let mut execute_s = 0.0;
-    while remaining > 0 {
-        let bucket = state
-            .buckets
-            .iter()
-            .copied()
-            .filter(|b| *b >= remaining)
-            .min()
-            .unwrap_or(largest);
-        let take = bucket.min(remaining);
-        let exe = state.executables.get(&bucket).unwrap();
-        // pad the bucket with zero latents when partially filled
-        let mut z = vec![0.0f32; bucket * state.cfg.z_dim];
-        z[..take * state.cfg.z_dim].copy_from_slice(
-            &latents
-                [offset * state.cfg.z_dim..(offset + take) * state.cfg.z_dim],
-        );
-        let zt = Tensor::new(vec![bucket, state.cfg.z_dim], z)?;
+    let all_rows: Vec<f32> = if let Some(qgen) = &state.quant {
+        // quantized twin: one fixed-point forward for the whole batch
+        // (no bucketing — the reverse-loop substrate takes any N)
+        let zt = Tensor::new(vec![batch.n_images, state.cfg.z_dim], latents)?;
         let t0 = Instant::now();
-        let out = exe.generate(&zt, &state.weights)?;
+        let (images, _stats) = qgen.generate(&state.cfg, &zt, exec_pool);
         execute_s += t0.elapsed().as_secs_f64();
-        let numel = exe.image_numel();
-        all_rows.extend_from_slice(&out.data()[..take * numel]);
-        remaining -= take;
-        offset += take;
-    }
+        images.into_data()
+    } else {
+        // bucket execution: smallest exported bucket ≥ remaining, else
+        // the largest repeatedly (vLLM-style bucketed continuous
+        // batching)
+        let largest = *state.buckets.iter().max().unwrap();
+        let mut remaining = batch.n_images;
+        let mut offset = 0usize;
+        let mut rows: Vec<f32> = Vec::with_capacity(
+            batch.n_images
+                * state.cfg.image_channels
+                * state.cfg.image_size
+                * state.cfg.image_size,
+        );
+        while remaining > 0 {
+            let bucket = state
+                .buckets
+                .iter()
+                .copied()
+                .filter(|b| *b >= remaining)
+                .min()
+                .unwrap_or(largest);
+            let take = bucket.min(remaining);
+            let exe = state.executables.get(&bucket).unwrap();
+            // pad the bucket with zero latents when partially filled
+            let mut z = vec![0.0f32; bucket * state.cfg.z_dim];
+            z[..take * state.cfg.z_dim].copy_from_slice(
+                &latents[offset * state.cfg.z_dim
+                    ..(offset + take) * state.cfg.z_dim],
+            );
+            let zt = Tensor::new(vec![bucket, state.cfg.z_dim], z)?;
+            let t0 = Instant::now();
+            let out = exe.generate(&zt, &state.weights)?;
+            execute_s += t0.elapsed().as_secs_f64();
+            let numel = exe.image_numel();
+            rows.extend_from_slice(&out.data()[..take * numel]);
+            remaining -= take;
+            offset += take;
+        }
+        rows
+    };
 
     // edge-device annotations for the whole batch
     let fpga_time = state.fpga_time_s * batch.n_images as f64;

@@ -31,7 +31,8 @@ pub use tdc::{
 pub use tiling::{input_tile_extent, legal_tiles, TileSchedule};
 
 use crate::config::{DeconvLayerCfg, NetworkCfg};
-use crate::tensor::Tensor;
+use crate::quant::Element;
+use crate::tensor::{Tensor, TensorT};
 use crate::util::WorkerPool;
 
 /// Output spatial extent of a layer: `(I-1)·S + K - 2P`.
@@ -51,14 +52,17 @@ pub fn layer_forward_standard(
 
 /// Full generator forward pass in pure Rust (reverse-loop kernels + ReLU
 /// between layers, tanh at the output) — the numeric cross-check for the
-/// PJRT path and the fallback for artifact-less environments.
+/// PJRT path and the fallback for artifact-less environments.  Generic
+/// over the element type; `f32` call sites are unchanged, and the
+/// scale-calibrated fixed-point epilogue lives in
+/// [`crate::quant::generator_forward_quant`].
 ///
 /// `z` is `[N, z_dim]`; returns `[N, C, H, W]`.
-pub fn generator_forward(
+pub fn generator_forward<T: Element>(
     net: &NetworkCfg,
-    weights: &[(Tensor, Vec<f32>)],
-    z: &Tensor,
-) -> Tensor {
+    weights: &[(TensorT<T>, Vec<T>)],
+    z: &TensorT<T>,
+) -> TensorT<T> {
     generator_forward_par(net, weights, z, &WorkerPool::new(1))
 }
 
@@ -66,12 +70,12 @@ pub fn generator_forward(
 /// a [`WorkerPool`].  Bit-identical to the serial forward (the parallel
 /// reverse loop is bit-identical per layer), so seeded generation stays
 /// deterministic at any pool width.
-pub fn generator_forward_par(
+pub fn generator_forward_par<T: Element>(
     net: &NetworkCfg,
-    weights: &[(Tensor, Vec<f32>)],
-    z: &Tensor,
+    weights: &[(TensorT<T>, Vec<T>)],
+    z: &TensorT<T>,
     pool: &WorkerPool,
-) -> Tensor {
+) -> TensorT<T> {
     assert_eq!(weights.len(), net.layers.len());
     assert_eq!(z.shape()[1], net.z_dim);
     let n = z.shape()[0];
@@ -94,7 +98,11 @@ pub fn generator_forward_par(
             pool,
         );
         for v in y.data_mut().iter_mut() {
-            *v = if i == last { v.tanh() } else { v.max(0.0) };
+            *v = if i == last {
+                Element::tanh(*v)
+            } else {
+                Element::relu(*v)
+            };
         }
         x = y;
     }

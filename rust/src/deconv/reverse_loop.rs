@@ -11,15 +11,22 @@
 //! software mirror of the paper's spatial CU parallelism.  Both paths run
 //! the same per-tile kernel in the same order per tile, so they are
 //! **bit-identical** (tensors *and* op counts), which the integration and
-//! property tests assert.
+//! property tests assert.  Small tile jobs are claimed in chunks
+//! ([`WorkerPool::map_indexed_chunked`]) to amortize dispatch overhead;
+//! chunking never changes results (each job still owns its slot).
 //!
-//! Emits [`OpStats`] — the exact MAC/skip/memory-op counts the FPGA cycle
-//! model turns into time and energy.
+//! Generic over the element type ([`Element`]): each tile accumulates in
+//! the wide [`Element::Acc`] domain and narrows once at the one-shot
+//! write — the DSP48 shape — so `f32` numerics are unchanged and fixed
+//! point is bit-identical to the standard kernel.  [`OpStats`] byte
+//! counts use [`Element::BYTES`], so the FPGA cycle model sees the real
+//! external-memory traffic of the chosen precision.
 
 use super::offsets::stride_hole_offsets;
 use super::standard::shape4;
 use super::tiling::input_tile_extent;
-use crate::tensor::Tensor;
+use crate::quant::Element;
+use crate::tensor::TensorT;
 use crate::util::WorkerPool;
 
 /// Execution options for the reverse-loop kernel.
@@ -77,10 +84,10 @@ impl OpStats {
 
 /// Everything a tile job needs, borrowed from the caller (shared
 /// read-only across workers).
-struct TileCtx<'a> {
-    x: &'a Tensor,
-    w: &'a Tensor,
-    b: &'a [f32],
+struct TileCtx<'a, T: Element> {
+    x: &'a TensorT<T>,
+    w: &'a TensorT<T>,
+    b: &'a [T],
     s: usize,
     p: usize,
     zero_skip: bool,
@@ -140,7 +147,10 @@ fn tile_jobs(n: usize, o_h: usize, o_w: usize, t: usize) -> Vec<TileJob> {
 /// block (`[c_out, tile_h, tile_w]`, row-major) and the tile's op
 /// counts.  This is the kernel both the serial and the parallel path
 /// run, so their numerics are identical by construction.
-fn execute_tile(ctx: &TileCtx, job: TileJob) -> (Vec<f32>, OpStats) {
+fn execute_tile<T: Element>(
+    ctx: &TileCtx<'_, T>,
+    job: TileJob,
+) -> (Vec<T>, OpStats) {
     let TileJob {
         bi,
         th,
@@ -150,6 +160,7 @@ fn execute_tile(ctx: &TileCtx, job: TileJob) -> (Vec<f32>, OpStats) {
     } = job;
     let s = ctx.s;
     let p = ctx.p;
+    let eb = T::BYTES as u64;
     let mut stats = OpStats {
         tiles: 1,
         ..Default::default()
@@ -157,17 +168,19 @@ fn execute_tile(ctx: &TileCtx, job: TileJob) -> (Vec<f32>, OpStats) {
     // Decoupled prefetch accounting (enhancement 3): the input block
     // covering this output tile is read once per c_in pass, sequentially;
     // weights once per (c_in, tile).
-    stats.ext_read_bytes += 4 * (ctx.c_in * ctx.t_i * ctx.t_i) as u64;
-    stats.ext_read_bytes += 4
-        * (ctx.c_in * ctx.c_out * ctx.k * ctx.k) as u64
+    stats.ext_read_bytes += eb * (ctx.c_in * ctx.t_i * ctx.t_i) as u64;
+    stats.ext_read_bytes += eb * (ctx.c_in * ctx.c_out * ctx.k * ctx.k) as u64
         / ((ctx.o_h.div_ceil(ctx.t) * ctx.o_w.div_ceil(ctx.t)) as u64).max(1);
 
-    let mut block = vec![0.0f32; ctx.c_out * tile_h * tile_w];
+    // Per-tile accumulator block in the wide domain; narrowed once at
+    // the one-shot write below.
+    let mut block: Vec<T::Acc> = vec![T::ACC_ZERO; ctx.c_out * tile_h * tile_w];
     for co in 0..ctx.c_out {
         let base = co * tile_h * tile_w;
         // y <- initializeToBias()
+        let bw = ctx.b[co].widen();
         for v in &mut block[base..base + tile_h * tile_w] {
-            *v = ctx.b[co];
+            *v = bw;
         }
         for ci in 0..ctx.c_in {
             // weight-stationary loops (enhancement 2)
@@ -178,7 +191,7 @@ fn execute_tile(ctx: &TileCtx, job: TileJob) -> (Vec<f32>, OpStats) {
                     let wv = ctx.w.get4(ci, co, kh, kw);
                     if ctx.zero_skip {
                         stats.weight_tests += 1;
-                        if wv == 0.0 {
+                        if wv.is_zero() {
                             // skip the whole tap for this tile
                             stats.macs_skipped +=
                                 tap_count(th, tile_h, tw, tile_w, fh, fw, s);
@@ -204,7 +217,8 @@ fn execute_tile(ctx: &TileCtx, job: TileJob) -> (Vec<f32>, OpStats) {
                                         ih as usize,
                                         iw as usize,
                                     );
-                                    block[row + (ow - tw)] += wv * xv;
+                                    let idx = row + (ow - tw);
+                                    block[idx] = T::mac(block[idx], wv, xv);
                                     stats.macs_issued += 1;
                                 }
                                 ow += s;
@@ -216,22 +230,23 @@ fn execute_tile(ctx: &TileCtx, job: TileJob) -> (Vec<f32>, OpStats) {
             }
         }
         // one-shot write of the finished output block
-        stats.ext_write_bytes += 4 * (tile_h * tile_w) as u64;
+        stats.ext_write_bytes += eb * (tile_h * tile_w) as u64;
     }
-    (block, stats)
+    let out: Vec<T> = block.into_iter().map(T::narrow).collect();
+    (out, stats)
 }
 
-/// Shared driver: enumerate jobs, run them on the given pool, merge the
-/// blocks and stats in job order.
-fn run_reverse_loop(
-    x: &Tensor,
-    w: &Tensor,
-    b: &[f32],
+/// Shared driver: enumerate jobs, run them on the given pool (chunked
+/// claims for small tiles), merge the blocks and stats in job order.
+fn run_reverse_loop<T: Element>(
+    x: &TensorT<T>,
+    w: &TensorT<T>,
+    b: &[T],
     stride: usize,
     padding: usize,
     opts: ReverseLoopOpts,
     pool: &WorkerPool,
-) -> (Tensor, OpStats) {
+) -> (TensorT<T>, OpStats) {
     let [n, c_in, i_h, i_w] = shape4(x);
     let [wc_in, c_out, k, _] = shape4(w);
     assert_eq!(c_in, wc_in);
@@ -268,12 +283,21 @@ fn run_reverse_loop(
         t_i: input_tile_extent(t, k, s),
     };
     let jobs = tile_jobs(n, o_h, o_w, t);
-    let results =
-        pool.map_indexed(jobs.len(), |i| execute_tile(&ctx, jobs[i]));
+    // Chunked dispatch: when the per-tile workload is tiny, claiming one
+    // job per atomic fetch wastes the dispatch on overhead — batch the
+    // claims instead (results are identical; slots are per-job).
+    let per_tile_macs = c_in * c_out * k * k * t.div_ceil(s.max(1)).pow(2);
+    let chunk = if per_tile_macs < (1 << 14) {
+        (jobs.len() / (pool.workers() * 4)).max(1)
+    } else {
+        1
+    };
+    let results = pool
+        .map_indexed_chunked(jobs.len(), chunk, |i| execute_tile(&ctx, jobs[i]));
 
     // Deterministic merge in job order: one-shot block writes into the
     // (disjoint) output regions, exact OpStats accumulation.
-    let mut y = Tensor::zeros(vec![n, c_out, o_h, o_w]);
+    let mut y = TensorT::zeros(vec![n, c_out, o_h, o_w]);
     for (job, (block, tile_stats)) in jobs.iter().zip(&results) {
         stats.merge(tile_stats);
         for co in 0..c_out {
@@ -295,19 +319,20 @@ fn run_reverse_loop(
 }
 
 /// Reverse-loop transposed convolution (Algorithm 1), tiled over the
-/// output space.  Numerically identical to [`super::deconv_standard`];
-/// additionally returns the [`OpStats`] of the execution.
+/// output space.  Numerically identical to [`super::deconv_standard`]
+/// (bit-identical in fixed point); additionally returns the [`OpStats`]
+/// of the execution.
 ///
 /// * `x` — `[N, C_in, I_H, I_W]`, `w` — `[C_in, C_out, K, K]`,
 ///   `b` — `[C_out]` → `[N, C_out, O_H, O_W]`.
-pub fn deconv_reverse_loop(
-    x: &Tensor,
-    w: &Tensor,
-    b: &[f32],
+pub fn deconv_reverse_loop<T: Element>(
+    x: &TensorT<T>,
+    w: &TensorT<T>,
+    b: &[T],
     stride: usize,
     padding: usize,
     opts: ReverseLoopOpts,
-) -> (Tensor, OpStats) {
+) -> (TensorT<T>, OpStats) {
     run_reverse_loop(x, w, b, stride, padding, opts, &WorkerPool::new(1))
 }
 
@@ -315,15 +340,15 @@ pub fn deconv_reverse_loop(
 /// [`WorkerPool`] — the spatial CU parallelism of the paper, in
 /// software.  Bit-identical to the serial path: same tensors, same
 /// [`OpStats`], for any pool width.
-pub fn deconv_reverse_loop_par(
-    x: &Tensor,
-    w: &Tensor,
-    b: &[f32],
+pub fn deconv_reverse_loop_par<T: Element>(
+    x: &TensorT<T>,
+    w: &TensorT<T>,
+    b: &[T],
     stride: usize,
     padding: usize,
     opts: ReverseLoopOpts,
     pool: &WorkerPool,
-) -> (Tensor, OpStats) {
+) -> (TensorT<T>, OpStats) {
     run_reverse_loop(x, w, b, stride, padding, opts, pool)
 }
 
@@ -373,6 +398,8 @@ fn tap_count(
 mod tests {
     use super::*;
     use crate::deconv::deconv_standard;
+    use crate::quant::{quantize_tensor, Q8_8, Rounding};
+    use crate::tensor::Tensor;
     use crate::util::Rng;
 
     fn rand_tensor(shape: Vec<usize>, rng: &mut Rng) -> Tensor {
@@ -461,12 +488,26 @@ mod tests {
         }
         let b = vec![0.0; 3];
         let (dense, d_stats) = deconv_reverse_loop(
-            &x, &w, &b, 2, 1,
-            ReverseLoopOpts { tile: 6, zero_skip: false },
+            &x,
+            &w,
+            &b,
+            2,
+            1,
+            ReverseLoopOpts {
+                tile: 6,
+                zero_skip: false,
+            },
         );
         let (skip, s_stats) = deconv_reverse_loop(
-            &x, &w, &b, 2, 1,
-            ReverseLoopOpts { tile: 6, zero_skip: true },
+            &x,
+            &w,
+            &b,
+            2,
+            1,
+            ReverseLoopOpts {
+                tile: 6,
+                zero_skip: true,
+            },
         );
         assert!(skip.max_abs_diff(&dense) < 1e-6);
         assert!(s_stats.macs_skipped > 0);
@@ -484,7 +525,12 @@ mod tests {
         let x = Tensor::zeros(vec![1, 1, 4, 4]);
         let w = Tensor::zeros(vec![1, 1, 4, 4]);
         let (_, stats) = deconv_reverse_loop(
-            &x, &w, &[0.0], 2, 1, ReverseLoopOpts::default(),
+            &x,
+            &w,
+            &[0.0],
+            2,
+            1,
+            ReverseLoopOpts::default(),
         );
         assert_eq!(stats.modulo_ops, 8); // 2K with K=4
     }
@@ -505,10 +551,58 @@ mod tests {
         let w = rand_tensor(vec![2, 3, 4, 4], &mut rng);
         let b = vec![0.0; 3];
         let (y, stats) = deconv_reverse_loop(
-            &x, &w, &b, 2, 1, ReverseLoopOpts { tile: 4, zero_skip: false },
+            &x,
+            &w,
+            &b,
+            2,
+            1,
+            ReverseLoopOpts {
+                tile: 4,
+                zero_skip: false,
+            },
         );
         // every output element written exactly once per channel pass
         assert_eq!(stats.ext_write_bytes, 4 * y.numel() as u64);
+    }
+
+    #[test]
+    fn fixed_point_matches_standard_bit_for_bit() {
+        let mut rng = Rng::seed_from_u64(31);
+        for (n, c_in, c_out, k, s, p, i_h, tile) in [
+            (1, 2, 3, 4, 2, 1, 5, 4),
+            (2, 3, 2, 7, 1, 0, 3, 5),
+            (1, 2, 2, 3, 3, 1, 4, 6),
+        ] {
+            let x = quantize_tensor::<i16, 8>(
+                &rand_tensor(vec![n, c_in, i_h, i_h], &mut rng),
+                Rounding::Nearest,
+            );
+            let w = quantize_tensor::<i16, 8>(
+                &rand_tensor(vec![c_in, c_out, k, k], &mut rng),
+                Rounding::Nearest,
+            );
+            let b: Vec<Q8_8> = (0..c_out)
+                .map(|_| Q8_8::from_f32(rng.range_f32(-0.5, 0.5)))
+                .collect();
+            let want = deconv_standard(&x, &w, &b, s, p);
+            for zero_skip in [false, true] {
+                let (got, stats) = deconv_reverse_loop(
+                    &x,
+                    &w,
+                    &b,
+                    s,
+                    p,
+                    ReverseLoopOpts { tile, zero_skip },
+                );
+                assert_eq!(
+                    got.data(),
+                    want.data(),
+                    "fixed point must be bit-exact (zs={zero_skip})"
+                );
+                // 2-byte elements drive the byte accounting
+                assert_eq!(stats.ext_write_bytes, 2 * want.numel() as u64);
+            }
+        }
     }
 
     #[test]

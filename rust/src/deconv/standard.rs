@@ -2,8 +2,15 @@
 //! overlapping-sum problem.  The unambiguous reference every other path
 //! is checked against, and the "complex dataflow" baseline the paper's
 //! Section III motivates against.
+//!
+//! Generic over the element type: contributions scatter into a wide
+//! accumulator buffer ([`Element::Acc`]) and narrow once at the end, so
+//! the `f32` numerics are unchanged (same addition sequence) and the
+//! fixed-point result is bit-identical to the reverse-loop and TDC
+//! kernels despite the different loop order.
 
-use crate::tensor::Tensor;
+use crate::quant::Element;
+use crate::tensor::TensorT;
 
 /// Transposed convolution by scattering each input pixel to
 /// `o = i·S + k - P` (Eq. 1), accumulating over overlaps.
@@ -13,13 +20,13 @@ use crate::tensor::Tensor;
 /// * `b` — `[C_out]`
 ///
 /// Returns `[N, C_out, O_H, O_W]`.
-pub fn deconv_standard(
-    x: &Tensor,
-    w: &Tensor,
-    b: &[f32],
+pub fn deconv_standard<T: Element>(
+    x: &TensorT<T>,
+    w: &TensorT<T>,
+    b: &[T],
     stride: usize,
     padding: usize,
-) -> Tensor {
+) -> TensorT<T> {
     let [n, c_in, i_h, i_w] = shape4(x);
     let [wc_in, c_out, k, k2] = shape4(w);
     assert_eq!(c_in, wc_in, "weight C_in mismatch");
@@ -28,13 +35,17 @@ pub fn deconv_standard(
     let o_h = super::output_size(i_h, k, stride, padding);
     let o_w = super::output_size(i_w, k, stride, padding);
 
-    let mut y = Tensor::zeros(vec![n, c_out, o_h, o_w]);
-    // initialize to bias
+    let at = |bi: usize, co: usize, oh: usize, ow: usize| {
+        ((bi * c_out + co) * o_h + oh) * o_w + ow
+    };
+    // initialize the accumulator plane to the (widened) bias
+    let mut acc: Vec<T::Acc> = vec![T::ACC_ZERO; n * c_out * o_h * o_w];
     for bi in 0..n {
         for co in 0..c_out {
+            let bw = b[co].widen();
             for oh in 0..o_h {
                 for ow in 0..o_w {
-                    y.set4(bi, co, oh, ow, b[co]);
+                    acc[at(bi, co, oh, ow)] = bw;
                 }
             }
         }
@@ -44,7 +55,7 @@ pub fn deconv_standard(
             for ih in 0..i_h {
                 for iw in 0..i_w {
                     let v = x.get4(bi, ci, ih, iw);
-                    if v == 0.0 {
+                    if v.is_zero() {
                         continue;
                     }
                     for kh in 0..k {
@@ -59,13 +70,10 @@ pub fn deconv_standard(
                                 continue;
                             }
                             for co in 0..c_out {
-                                y.add4(
-                                    bi,
-                                    co,
-                                    oh as usize,
-                                    ow as usize,
-                                    v * w.get4(ci, co, kh, kw),
-                                );
+                                let i =
+                                    at(bi, co, oh as usize, ow as usize);
+                                acc[i] =
+                                    T::mac(acc[i], w.get4(ci, co, kh, kw), v);
                             }
                         }
                     }
@@ -73,10 +81,11 @@ pub fn deconv_standard(
             }
         }
     }
-    y
+    let data: Vec<T> = acc.into_iter().map(T::narrow).collect();
+    TensorT::new(vec![n, c_out, o_h, o_w], data).expect("output shape")
 }
 
-pub(crate) fn shape4(t: &Tensor) -> [usize; 4] {
+pub(crate) fn shape4<T: Element>(t: &TensorT<T>) -> [usize; 4] {
     let s = t.shape();
     assert_eq!(s.len(), 4, "expected rank-4 tensor, got {s:?}");
     [s[0], s[1], s[2], s[3]]
@@ -85,6 +94,8 @@ pub(crate) fn shape4(t: &Tensor) -> [usize; 4] {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::quant::Q8_8;
+    use crate::tensor::Tensor;
 
     /// 1×1 input: output is just the (bias-shifted) kernel scaled by x.
     #[test]
@@ -138,6 +149,19 @@ mod tests {
             assert_eq!(y.get4(0, 0, 1, col), 2.0);
             assert_eq!(y.get4(0, 0, 2, col), 2.0);
             assert_eq!(y.get4(0, 0, 3, col), 1.0);
+        }
+    }
+
+    /// The same scatter in Q8.8: grid-point inputs give exact outputs.
+    #[test]
+    fn fixed_point_scatter_is_exact_on_grid() {
+        let q = Q8_8::from_f32;
+        let x = TensorT::new(vec![1, 1, 1, 1], vec![q(2.0)]).unwrap();
+        let w = TensorT::from_fn(vec![1, 1, 3, 3], |i| q(i as f32 * 0.25));
+        let y = deconv_standard(&x, &w, &[q(1.0)], 1, 0);
+        assert_eq!(y.shape(), &[1, 1, 3, 3]);
+        for i in 0..9 {
+            assert_eq!(y.data()[i].to_f32(), 2.0 * (i as f32 * 0.25) + 1.0);
         }
     }
 }

@@ -9,7 +9,8 @@
 //! zero-padding overhead the paper's reverse-loop algorithm avoids.
 
 use super::standard::shape4;
-use crate::tensor::Tensor;
+use crate::quant::Element;
+use crate::tensor::TensorT;
 
 /// Number of sub-convolution filters the TDC transform produces per
 /// original filter: `stride²`.
@@ -29,11 +30,11 @@ pub fn tdc_subfilter_extent(k: usize, s: usize) -> usize {
 ///
 /// Returns `banks[ry][rx]` for output residues `(ry, rx)` and the count
 /// of *zero-padded* taps inserted (the wasted work of the method).
-pub fn tdc_transform_weights(
-    w: &Tensor,
+pub fn tdc_transform_weights<T: Element>(
+    w: &TensorT<T>,
     stride: usize,
     padding: usize,
-) -> (Vec<Vec<Tensor>>, u64) {
+) -> (Vec<Vec<TensorT<T>>>, u64) {
     let [c_in, c_out, k, _] = shape4(w);
     let s = stride;
     let kc = tdc_subfilter_extent(k, s);
@@ -42,7 +43,7 @@ pub fn tdc_transform_weights(
     for ry in 0..s {
         let mut row = Vec::with_capacity(s);
         for rx in 0..s {
-            let mut bank = Tensor::zeros(vec![c_in, c_out, kc, kc]);
+            let mut bank = TensorT::<T>::zeros(vec![c_in, c_out, kc, kc]);
             // Tap k contributes to residue r = (k - P) mod S, at
             // sub-position (k - P + needed offset)/S relative to the class.
             let mut filled = vec![false; kc * kc];
@@ -105,14 +106,16 @@ pub fn tdc_transform_weights(
 /// Full TDC deconvolution: run the transform and evaluate each stride
 /// class by direct correlation, re-stitching the interleaved outputs
 /// (Tu et al.'s disjoint feature maps).  Numerically identical to the
-/// other two algorithms.
-pub fn deconv_tdc(
-    x: &Tensor,
-    w: &Tensor,
-    b: &[f32],
+/// other two algorithms (bit-identical in fixed point: the per-pixel
+/// gather accumulates in the wide [`Element::Acc`] domain and narrows
+/// once, like the other kernels).
+pub fn deconv_tdc<T: Element>(
+    x: &TensorT<T>,
+    w: &TensorT<T>,
+    b: &[T],
     stride: usize,
     padding: usize,
-) -> Tensor {
+) -> TensorT<T> {
     // The transform-based method is only defined for S ≥ 1; for S == 1 it
     // degenerates to a single correlation == standard path.
     let [n, c_in, i_h, i_w] = shape4(x);
@@ -121,7 +124,7 @@ pub fn deconv_tdc(
     let p = padding;
     let o_h = super::output_size(i_h, k, s, p);
     let o_w = super::output_size(i_w, k, s, p);
-    let mut y = Tensor::zeros(vec![n, c_out, o_h, o_w]);
+    let mut y = TensorT::<T>::zeros(vec![n, c_out, o_h, o_w]);
 
     // For each output pixel o, its stride class is r = o mod S... but the
     // sub-convolutions are easiest stated via the reverse mapping: for
@@ -132,7 +135,7 @@ pub fn deconv_tdc(
         for co in 0..c_out {
             for oh in 0..o_h {
                 for ow in 0..o_w {
-                    let mut acc = b[co];
+                    let mut acc = b[co].widen();
                     for kh in 0..k {
                         let num_h = oh as i64 + p as i64 - kh as i64;
                         if num_h % s as i64 != 0 {
@@ -152,14 +155,17 @@ pub fn deconv_tdc(
                                 continue;
                             }
                             for ci in 0..c_in {
-                                acc += w.get4(ci, co, kh, kw)
-                                    * x.get4(
+                                acc = T::mac(
+                                    acc,
+                                    w.get4(ci, co, kh, kw),
+                                    x.get4(
                                         bi, ci, ih as usize, iw as usize,
-                                    );
+                                    ),
+                                );
                             }
                         }
                     }
-                    y.set4(bi, co, oh, ow, acc);
+                    y.set4(bi, co, oh, ow, T::narrow(acc));
                 }
             }
         }
@@ -171,6 +177,7 @@ pub fn deconv_tdc(
 mod tests {
     use super::*;
     use crate::deconv::deconv_standard;
+    use crate::tensor::Tensor;
     use crate::util::Rng;
 
     #[test]
@@ -203,6 +210,30 @@ mod tests {
         // K=3, S=2 → sub-filters 2×2; 3² taps spread over 4 banks of 4
         // slots = 16 slots, 9 filled → 7 zero-padded
         assert_eq!(padded, 7);
+    }
+
+    #[test]
+    fn tdc_matches_standard_bit_for_bit_in_fixed_point() {
+        use crate::quant::{quantize_tensor, Q8_8, Rounding};
+        let mut rng = Rng::seed_from_u64(13);
+        for (c_in, c_out, k, s, p, i_h) in
+            [(2, 3, 4, 2, 1, 5), (1, 2, 3, 2, 1, 4), (1, 1, 5, 3, 2, 4)]
+        {
+            let xf = Tensor::from_fn(vec![1, c_in, i_h, i_h], |_| {
+                rng.range_f32(-1.0, 1.0)
+            });
+            let wf = Tensor::from_fn(vec![c_in, c_out, k, k], |_| {
+                rng.range_f32(-1.0, 1.0)
+            });
+            let x = quantize_tensor::<i16, 8>(&xf, Rounding::Nearest);
+            let w = quantize_tensor::<i16, 8>(&wf, Rounding::Nearest);
+            let b: Vec<Q8_8> = (0..c_out)
+                .map(|i| Q8_8::from_f32(i as f32 * 0.25))
+                .collect();
+            let expect = deconv_standard(&x, &w, &b, s, p);
+            let got = deconv_tdc(&x, &w, &b, s, p);
+            assert_eq!(got.data(), expect.data(), "({c_in},{c_out},{k},{s},{p})");
+        }
     }
 
     #[test]

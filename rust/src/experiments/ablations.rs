@@ -68,10 +68,9 @@ pub fn run_ablations(
         .layers
         .iter()
         .map(|_| SimOpts {
-            tile: net.tile,
             zero_skip: true,
             weight_sparsity: sparsity,
-            decouple: true,
+            ..SimOpts::dense(net.tile)
         })
         .collect();
     let t_dense = simulate_network(&net, board, &dense).total_time_s;

@@ -79,10 +79,9 @@ where
             .iter()
             .zip(&per_layer)
             .map(|(_, &s)| SimOpts {
-                tile: net.tile,
                 zero_skip: true,
                 weight_sparsity: s,
-                decouple: true,
+                ..SimOpts::dense(net.tile)
             })
             .collect();
         let sim = simulate_network(&net, board, &opts);

@@ -6,6 +6,7 @@
 mod ablations;
 mod fig5;
 mod fig6;
+mod quant_error;
 mod table1;
 mod table2;
 
@@ -14,6 +15,10 @@ pub use fig5::{render as render_fig5, run_fig5, Fig5Data};
 pub use fig6::{
     default_levels, render as render_fig6, run_fig6, run_fig6_with_runtime,
     Fig6Data,
+};
+pub use quant_error::{
+    default_quant_formats, render as render_quant_error, run_quant_error,
+    QuantErrorData, QuantErrorPoint,
 };
 pub use table1::{render as render_table1, run_table1, Table1Row};
 pub use table2::{render as render_table2, run_table2, DeviceRows, Table2Data};

@@ -1,0 +1,192 @@
+//! Quantization-error sweep — the precision analogue of the Fig. 6
+//! sparsity study: sweep fraction bits (Qm.n formats) and measure, per
+//! format, the end-to-end generator output error against the f32
+//! reference (PSNR, max |err|), the generative quality against the
+//! ground-truth corpus (MMD, like Fig. 6b), and the simulated FPGA
+//! latency/efficiency at the quantized datapath (narrow AXI words +
+//! packed MAC lanes).  The interesting read is the knee: fraction bits
+//! below it collapse quality for no latency win, above it buy nothing.
+
+use crate::artifacts::ArtifactDir;
+use crate::config::{network_by_name, FpgaBoard, Precision};
+use crate::deconv::generator_forward;
+use crate::fpga::{simulate_network, SimOpts};
+use crate::quant::{psnr_db, QFormat, QuantizedGenerator, Rounding};
+use crate::sparsity::{mmd_biased, Mmd};
+use crate::tensor::Tensor;
+use crate::util::{Rng, WorkerPool};
+use anyhow::{ensure, Result};
+
+/// One point of the sweep.
+#[derive(Debug, Clone)]
+pub struct QuantErrorPoint {
+    pub format: QFormat,
+    /// PSNR of the quantized output vs the f32 reference (dB, peak 2.0).
+    pub psnr_db: f64,
+    /// Worst-case per-pixel deviation from the f32 reference.
+    pub max_abs_err: f64,
+    /// MMD of the quantized generator's distribution vs ground truth.
+    pub mmd: f64,
+    /// Simulated FPGA latency per inference at this datapath.
+    pub fpga_time_s: f64,
+    pub fpga_gops_per_w: f64,
+}
+
+/// The sweep dataset for one network.
+#[derive(Debug, Clone)]
+pub struct QuantErrorData {
+    pub network: String,
+    pub f32_mmd: f64,
+    pub f32_time_s: f64,
+    pub f32_gops_per_w: f64,
+    pub points: Vec<QuantErrorPoint>,
+}
+
+/// Default sweep grid: every format the dispatcher supports.
+pub fn default_quant_formats() -> Vec<QFormat> {
+    crate::quant::supported_formats()
+}
+
+/// Run the sweep: quantize the trained (or synthetic) weights at each
+/// format with per-layer scale calibration, run the fixed-point forward
+/// on a shared latent set, and compare against the f32 forward.
+pub fn run_quant_error(
+    network: &str,
+    board: &FpgaBoard,
+    artifacts: &ArtifactDir,
+    formats: &[QFormat],
+    n_samples: usize,
+    seed: u64,
+) -> Result<QuantErrorData> {
+    ensure!(!formats.is_empty(), "need at least one format");
+    ensure!(n_samples >= 2, "need at least two samples");
+    let net = network_by_name(network)?;
+    let weights = artifacts.load_weights(network)?;
+    let truth = artifacts.load_truth(network)?;
+    let d = net.image_channels * net.image_size * net.image_size;
+    let n_truth = truth.shape()[0].min(n_samples);
+    let truth_flat = &truth.data()[..n_truth * d];
+    let mmd_cfg = Mmd::with_median_bandwidth(truth_flat, d);
+
+    // fixed latent set across formats (paired comparison, like Fig. 6)
+    let mut rng = Rng::seed_from_u64(seed);
+    let z = Tensor::from_fn(vec![n_samples, net.z_dim], |_| rng.normal_f32());
+    let reference = generator_forward(&net, &weights, &z);
+    let ref_flat = &reference.data()[..n_samples * d];
+    let f32_mmd = mmd_biased(ref_flat, truth_flat, d, &mmd_cfg);
+    let dense: Vec<SimOpts> =
+        net.layers.iter().map(|_| SimOpts::dense(net.tile)).collect();
+    let f32_sim = simulate_network(&net, board, &dense);
+
+    let pool = WorkerPool::with_default_parallelism();
+    let mut points = Vec::with_capacity(formats.len());
+    for &format in formats {
+        let qgen =
+            QuantizedGenerator::quantize(format, &weights, Rounding::Nearest)?;
+        let (images, _stats) = qgen.generate(&net, &z, &pool);
+        let psnr = psnr_db(&reference, &images, 2.0);
+        let max_abs_err = reference
+            .data()
+            .iter()
+            .zip(images.data())
+            .map(|(a, b)| (a - b).abs() as f64)
+            .fold(0.0, f64::max);
+        let got_flat = &images.data()[..n_samples * d];
+        let mmd = mmd_biased(got_flat, truth_flat, d, &mmd_cfg);
+        let opts: Vec<SimOpts> = net
+            .layers
+            .iter()
+            .map(|_| SimOpts::dense_at(net.tile, Precision::Fixed(format)))
+            .collect();
+        let sim = simulate_network(&net, board, &opts);
+        points.push(QuantErrorPoint {
+            format,
+            psnr_db: psnr,
+            max_abs_err,
+            mmd,
+            fpga_time_s: sim.total_time_s,
+            fpga_gops_per_w: sim.gops_per_w,
+        });
+    }
+    Ok(QuantErrorData {
+        network: network.to_string(),
+        f32_mmd,
+        f32_time_s: f32_sim.total_time_s,
+        f32_gops_per_w: f32_sim.gops_per_w,
+        points,
+    })
+}
+
+/// Render the sweep as a table (f32 reference row first).
+pub fn render(data: &QuantErrorData) -> String {
+    let mut s = format!(
+        "{}: fixed-point sweep ({} formats)\n\
+         {:>8} {:>10} {:>10} {:>10} {:>12} {:>10}\n",
+        data.network,
+        data.points.len(),
+        "format",
+        "PSNR dB",
+        "max|err|",
+        "MMD",
+        "latency ms",
+        "GOps/s/W",
+    );
+    s.push_str(&format!(
+        "{:>8} {:>10} {:>10} {:>10.4} {:>12.3} {:>10.2}\n",
+        "f32",
+        "-",
+        "-",
+        data.f32_mmd,
+        data.f32_time_s * 1e3,
+        data.f32_gops_per_w,
+    ));
+    for p in &data.points {
+        s.push_str(&format!(
+            "{:>8} {:>10.1} {:>10.4} {:>10.4} {:>12.3} {:>10.2}\n",
+            p.format.to_string(),
+            p.psnr_db,
+            p.max_abs_err,
+            p.mmd,
+            p.fpga_time_s * 1e3,
+            p.fpga_gops_per_w,
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::artifacts::write_synthetic;
+    use crate::config::PYNQ_Z2;
+    use crate::util::TempDir;
+
+    #[test]
+    fn sweep_runs_and_orders_by_resolution() {
+        let dir = TempDir::new().unwrap();
+        let artifacts = write_synthetic(dir.path(), &["mnist"], 8, 3).unwrap();
+        let formats =
+            vec![QFormat::new(16, 4), QFormat::new(16, 8), QFormat::new(16, 12)];
+        let data = run_quant_error(
+            "mnist", &PYNQ_Z2, &artifacts, &formats, 8, 11,
+        )
+        .unwrap();
+        assert_eq!(data.points.len(), 3);
+        for p in &data.points {
+            assert!(p.fpga_time_s > 0.0);
+            assert!(p.fpga_time_s < data.f32_time_s, "{}: 16-bit wins", p.format);
+            assert!(p.max_abs_err.is_finite());
+            assert!(p.mmd.is_finite());
+        }
+        // more fraction bits → closer to the f32 reference
+        assert!(
+            data.points[2].psnr_db > data.points[0].psnr_db,
+            "q4.12 ({:.1} dB) must beat q12.4 ({:.1} dB)",
+            data.points[2].psnr_db,
+            data.points[0].psnr_db
+        );
+        let table = render(&data);
+        assert!(table.contains("q8.8"));
+        assert!(table.contains("f32"));
+    }
+}

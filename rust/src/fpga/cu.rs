@@ -5,8 +5,13 @@
 //! stationary, enhancement 2), issuing `(T/S)²` MACs per tap across its
 //! DSP lanes.  Zero-skipping replaces a tap's MACs with a single weight
 //! test cycle (the conditional-execution paradigm of Section V-C).
+//!
+//! The datapath precision scales the MAC lane count
+//! ([`Precision::lane_factor`]): two 16-bit fixed-point MACs pack into
+//! one DSP48, so the same DSP budget issues twice the MACs per cycle —
+//! the width/throughput trade the quantized path buys.
 
-use crate::config::FpgaBoard;
+use crate::config::{FpgaBoard, Precision};
 use crate::util::WorkerPool;
 
 /// One CU workload: a `T_OH × T_OW` output block for one output channel.
@@ -36,8 +41,14 @@ pub struct CuModel {
 
 impl CuModel {
     pub fn from_board(board: &FpgaBoard) -> Self {
+        Self::from_board_at(board, Precision::F32)
+    }
+
+    /// CU model at an explicit datapath precision: narrow fixed point
+    /// packs more MAC lanes onto the same DSP budget.
+    pub fn from_board_at(board: &FpgaBoard, precision: Precision) -> Self {
         CuModel {
-            lanes: board.macs_per_cu_cycle,
+            lanes: board.macs_per_cu_cycle * precision.lane_factor(),
             workload_overhead: 12,
             per_channel_overhead: 4,
         }
@@ -115,8 +126,12 @@ pub struct CuArray {
 
 impl CuArray {
     pub fn from_board(board: &FpgaBoard) -> Self {
+        Self::from_board_at(board, Precision::F32)
+    }
+
+    pub fn from_board_at(board: &FpgaBoard, precision: Precision) -> Self {
         CuArray {
-            model: CuModel::from_board(board),
+            model: CuModel::from_board_at(board, precision),
             n_cu: board.n_cu,
         }
     }
@@ -163,8 +178,12 @@ impl CuArray {
         sparsity: Option<f64>,
         pool: &WorkerPool,
     ) -> Vec<u64> {
-        let per_workload = pool
-            .map_indexed(count, |_| self.model.workload_cycles(wl, sparsity));
+        // Individual CU evaluations are tiny — claim them a SIMD batch
+        // at a time so the dispatch overhead amortizes (identical
+        // results: every workload still owns its slot).
+        let per_workload = pool.map_indexed_chunked(count, self.n_cu.max(1), |_| {
+            self.model.workload_cycles(wl, sparsity)
+        });
         per_workload
             .chunks(self.n_cu.max(1))
             .map(|batch| batch.iter().copied().max().unwrap_or(0))
@@ -184,6 +203,24 @@ mod tests {
             macs_per_tap: 36, // T=12, S=2 → 6×6
             tile_elems: 144,
         }
+    }
+
+    #[test]
+    fn fixed16_packs_twice_the_lanes() {
+        use crate::config::QFormat;
+        let f32_cu = CuModel::from_board_at(&PYNQ_Z2, Precision::F32);
+        let q16 = CuModel::from_board_at(
+            &PYNQ_Z2,
+            Precision::Fixed(QFormat::new(16, 8)),
+        );
+        let q32 = CuModel::from_board_at(
+            &PYNQ_Z2,
+            Precision::Fixed(QFormat::new(32, 16)),
+        );
+        assert_eq!(q16.lanes, 2 * f32_cu.lanes);
+        assert_eq!(q32.lanes, f32_cu.lanes);
+        let w = wl();
+        assert!(q16.dense_cycles(&w) < f32_cu.dense_cycles(&w));
     }
 
     #[test]

@@ -27,4 +27,4 @@ pub use pipeline::{
     simulate_network, simulate_network_par, LayerSim, NetworkSim, SimOpts,
 };
 pub use power::PowerModel;
-pub use resources::{estimate_resources, Utilization};
+pub use resources::{estimate_resources, estimate_resources_at, Utilization};

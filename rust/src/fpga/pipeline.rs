@@ -29,7 +29,7 @@
 use super::axi::AxiModel;
 use super::cu::{CuArray, CuModel, CuWorkload};
 use super::power::PowerModel;
-use crate::config::{DeconvLayerCfg, FpgaBoard, NetworkCfg};
+use crate::config::{DeconvLayerCfg, FpgaBoard, NetworkCfg, Precision};
 use crate::deconv::input_tile_extent;
 use crate::util::{Rng, WorkerPool};
 
@@ -45,15 +45,25 @@ pub struct SimOpts {
     /// Decoupled external memory access (enhancement 3). `false` is the
     /// ablation: serialized stages + random-access input reads.
     pub decouple: bool,
+    /// Datapath precision: scales AXI byte traffic (element width) and
+    /// CU MAC lanes (DSP packing) — the fixed-point path the hardware
+    /// actually runs.
+    pub precision: Precision,
 }
 
 impl SimOpts {
     pub fn dense(tile: usize) -> Self {
+        Self::dense_at(tile, Precision::F32)
+    }
+
+    /// Dense options at an explicit datapath precision.
+    pub fn dense_at(tile: usize, precision: Precision) -> Self {
         SimOpts {
             tile,
             zero_skip: false,
             weight_sparsity: 0.0,
             decouple: true,
+            precision,
         }
     }
 
@@ -154,13 +164,14 @@ fn layer_schedule(
     // CUs sharing a tile) + weight blocks for the batch's channels.
     // Zero-skipping streams pruned weights in a compressed (CSR-style)
     // layout: nnz values + indices (~1.25 B overhead per survivor).
+    let eb = opts.precision.elem_bytes();
     let channels_per_batch = layer.c_out.min(board.n_cu);
     let tiles_per_batch =
         (board.n_cu.div_ceil(channels_per_batch)).clamp(1, n_tiles);
     let input_bytes =
-        4 * (layer.c_in * t_i * t_i) as u64 * tiles_per_batch as u64;
+        eb * (layer.c_in * t_i * t_i) as u64 * tiles_per_batch as u64;
     let dense_weight_bytes =
-        4 * (layer.c_in * layer.k * layer.k) as u64 * channels_per_batch as u64;
+        eb * (layer.c_in * layer.k * layer.k) as u64 * channels_per_batch as u64;
     let weight_bytes = if opts.zero_skip {
         let survivors = 1.0 - opts.weight_sparsity;
         ((dense_weight_bytes as f64 * survivors * 1.25) as u64)
@@ -177,7 +188,7 @@ fn layer_schedule(
 
     // Stage (3): one-shot output block write per active CU.
     let active = (workloads as u64).min(board.n_cu as u64);
-    let write_per_batch = axi.sequential_cycles(4 * (t * t) as u64 * active);
+    let write_per_batch = axi.sequential_cycles(eb * (t * t) as u64 * active);
 
     LayerSchedule {
         workloads,
@@ -245,7 +256,7 @@ pub fn simulate_layer(
     opts: &SimOpts,
 ) -> LayerSim {
     let sched = layer_schedule(layer, board, opts);
-    let cu = CuModel::from_board(board);
+    let cu = CuModel::from_board_at(board, opts.precision);
     let compute_per_batch =
         cu.workload_cycles(&sched.wl, opts.sparsity_mode());
     let compute_batches = vec![compute_per_batch; sched.batches as usize];
@@ -265,7 +276,7 @@ pub fn simulate_layer_par(
     pool: &WorkerPool,
 ) -> LayerSim {
     let sched = layer_schedule(layer, board, opts);
-    let array = CuArray::from_board(board);
+    let array = CuArray::from_board_at(board, opts.precision);
     let compute_batches = array.simulate_uniform_workloads(
         &sched.wl,
         sched.workloads,
@@ -404,10 +415,9 @@ mod tests {
             layer,
             &PYNQ_Z2,
             &SimOpts {
-                tile: net.tile,
                 zero_skip: true,
                 weight_sparsity: 0.8,
-                decouple: true,
+                ..SimOpts::dense(net.tile)
             },
         );
         assert!(sparse.time_s < dense.time_s);
@@ -467,15 +477,18 @@ mod tests {
                 for opts in [
                     SimOpts::dense(net.tile),
                     SimOpts {
-                        tile: net.tile,
                         zero_skip: true,
                         weight_sparsity: 0.7,
-                        decouple: true,
+                        ..SimOpts::dense(net.tile)
                     },
                     SimOpts {
                         decouple: false,
                         ..SimOpts::dense(net.tile)
                     },
+                    SimOpts::dense_at(
+                        net.tile,
+                        Precision::Fixed(crate::config::QFormat::new(16, 8)),
+                    ),
                 ] {
                     let a = simulate_layer(layer, &PYNQ_Z2, &opts);
                     for workers in [1, 4] {
@@ -485,6 +498,43 @@ mod tests {
                         layer_sims_equal(&a, &b);
                     }
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn fixed_point_datapath_is_modeled() {
+        use crate::config::QFormat;
+        let q16 = Precision::Fixed(QFormat::new(16, 8));
+        let q32 = Precision::Fixed(QFormat::new(32, 16));
+        for net in [mnist(), celeba()] {
+            for layer in &net.layers {
+                let f = simulate_layer(layer, &PYNQ_Z2, &SimOpts::dense(net.tile));
+                let s16 = simulate_layer(
+                    layer,
+                    &PYNQ_Z2,
+                    &SimOpts::dense_at(net.tile, q16),
+                );
+                let s32 = simulate_layer(
+                    layer,
+                    &PYNQ_Z2,
+                    &SimOpts::dense_at(net.tile, q32),
+                );
+                // 16-bit: half the AXI traffic, double the MAC lanes
+                assert!(
+                    s16.read_cycles <= f.read_cycles,
+                    "16-bit reads must not exceed f32"
+                );
+                assert!(
+                    s16.compute_cycles < f.compute_cycles,
+                    "lane packing must speed up compute"
+                );
+                assert!(s16.time_s < f.time_s, "q8.8 must beat f32 end to end");
+                // 32-bit fixed matches the f32 widths, so same schedule
+                assert_eq!(s32.read_cycles, f.read_cycles);
+                assert_eq!(s32.compute_cycles, f.compute_cycles);
+                // the ops workload itself is precision-independent
+                assert_eq!(s16.ops, f.ops);
             }
         }
     }

@@ -20,7 +20,7 @@
 //! <0.1% on FF/LUT.  The BRAM gap is Vivado packing slack the linear
 //! model does not capture; see EXPERIMENTS.md §Table I.
 
-use crate::config::{FpgaBoard, NetworkCfg};
+use crate::config::{FpgaBoard, NetworkCfg, Precision};
 use crate::deconv::input_tile_extent;
 
 /// Bytes per BRAM18 block (18 Kbit).
@@ -60,12 +60,27 @@ impl Utilization {
 }
 
 /// Estimate resources for `n_cu` CUs at output tile factor `t_oh` for a
-/// network (the worst-case layer sizes the buffers, since the accelerator
-/// multiplexes all layers through one configuration).
+/// network at the f32 datapath (the historical Table I configuration).
 pub fn estimate_resources(
     net: &NetworkCfg,
     t_oh: usize,
     n_cu: usize,
+) -> Utilization {
+    estimate_resources_at(net, t_oh, n_cu, Precision::F32)
+}
+
+/// [`estimate_resources`] at an explicit datapath precision: the BRAM
+/// input buffers store *element-width* words, the output ping-pong
+/// buffers store *accumulator-width* words (the tile lives in the DSP48
+/// accumulator domain until the round/saturate write-back), and the
+/// per-CU fabric cost scales with the datapath width.  The worst-case
+/// layer sizes the buffers, since the accelerator multiplexes all
+/// layers through one configuration.
+pub fn estimate_resources_at(
+    net: &NetworkCfg,
+    t_oh: usize,
+    n_cu: usize,
+    precision: Precision,
 ) -> Utilization {
     // worst-case input tile across layers (Eq. 5 with each layer's K, S)
     let t_i_max = net
@@ -81,18 +96,32 @@ pub fn estimate_resources(
         .max()
         .unwrap_or(t_oh);
 
-    // input tile single-buffered (sequential stream-in), output tile
-    // ping-pong double-buffered so the one-shot write overlaps the next
-    // tile's compute (stage 3 of the pipeline)
-    let in_buf = (4 * t_i_max * t_i_max).div_ceil(BRAM18_BYTES);
-    let out_buf = (2 * 4 * t_eff * t_eff).div_ceil(BRAM18_BYTES);
+    // input tile single-buffered (sequential stream-in) at the element
+    // width; output tile ping-pong double-buffered at the *accumulator*
+    // width so the one-shot write overlaps the next tile's compute
+    // (stage 3 of the pipeline)
+    let eb = precision.elem_bytes() as usize;
+    let ab = precision.acc_bytes() as usize;
+    let in_buf = (eb * t_i_max * t_i_max).div_ceil(BRAM18_BYTES);
+    let out_buf = (2 * ab * t_eff * t_eff).div_ceil(BRAM18_BYTES);
     let bram = BRAM_INFRA + n_cu * (in_buf + out_buf);
+
+    // Per-CU fabric scales with datapath width: 16-bit multiplier trees
+    // and narrower muxing trim ~1/4 of the CU fabric; a 32-bit integer
+    // datapath with its 64-bit accumulator chain costs slightly more
+    // than f32 (calibrated guesses on the same footing as the base
+    // coefficients — the *scaling law* is what the DSE consumes).
+    let (num, den): (usize, usize) = match precision {
+        Precision::F32 => (1, 1),
+        Precision::Fixed(q) if q.bits <= 16 => (3, 4),
+        Precision::Fixed(_) => (9, 8),
+    };
 
     Utilization {
         dsp: n_cu * DSP_PER_CU + DSP_INFRA,
         bram18: bram,
-        ff: FF_BASE + n_cu * FF_PER_CU + FF_PER_T * t_eff,
-        lut: LUT_BASE + n_cu * LUT_PER_CU + LUT_PER_T * t_eff,
+        ff: FF_BASE + n_cu * FF_PER_CU * num / den + FF_PER_T * t_eff,
+        lut: LUT_BASE + n_cu * LUT_PER_CU * num / den + LUT_PER_T * t_eff,
     }
 }
 
@@ -137,6 +166,23 @@ mod tests {
             let u = estimate_resources(&net, t, 16);
             assert!(u.bram18 >= prev, "bram must grow with T");
             prev = u.bram18;
+        }
+    }
+
+    #[test]
+    fn fixed_point_shrinks_the_fabric_footprint() {
+        use crate::config::QFormat;
+        let q16 = Precision::Fixed(QFormat::new(16, 8));
+        for net in [mnist(), celeba()] {
+            let f = estimate_resources_at(&net, net.tile, 16, Precision::F32);
+            let q = estimate_resources_at(&net, net.tile, 16, q16);
+            assert_eq!(q.dsp, f.dsp, "same DSP budget (lanes pack, not grow)");
+            assert!(q.ff < f.ff);
+            assert!(q.lut < f.lut);
+            // BRAM trades: half-width input/AXI words vs the 48-bit
+            // accumulator ping-pong — net within one block per CU
+            assert!(q.bram18 <= f.bram18 + 16, "bram {} vs {}", q.bram18, f.bram18);
+            assert!(q.fits(&PYNQ_Z2));
         }
     }
 

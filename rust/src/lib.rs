@@ -17,6 +17,15 @@
 //!   edge-serving coordinator ([`coordinator`]) and regenerated per paper
 //!   table/figure by [`experiments`].
 //!
+//! Cross-cutting: the **element-type axis** ([`quant`]) — tensors, the
+//! three deconvolution kernels and the generator forward are generic
+//! over [`quant::Element`], so the same Algorithm 1 code runs in `f32`
+//! or Qm.n fixed point ([`quant::Fixed`]); the FPGA simulator models
+//! the chosen datapath (byte traffic, BRAM word widths, DSP lane
+//! packing), the artifact layer exports/imports scale-calibrated
+//! quantized weights, and the coordinator serves quantized twins
+//! (`<name>.q`) side by side with f32.
+//!
 //! Cross-cutting: the **spatio-temporal parallel execution engine**
 //! ([`util::WorkerPool`]) — a dependency-free scoped worker pool with
 //! deterministic result ordering that mirrors the paper's hardware
@@ -40,6 +49,7 @@ pub mod dse;
 pub mod experiments;
 pub mod fpga;
 pub mod gpu;
+pub mod quant;
 pub mod runtime;
 pub mod sparsity;
 pub mod stats;

@@ -7,11 +7,12 @@
 
 use anyhow::{bail, Result};
 use edgedcnn::artifacts::ArtifactDir;
-use edgedcnn::config::{network_by_name, JETSON_TX1, PYNQ_Z2};
+use edgedcnn::config::{network_by_name, Precision, JETSON_TX1, PYNQ_Z2};
 use edgedcnn::coordinator::{
     BatcherConfig, Coordinator, CoordinatorConfig, WorkloadSpec,
 };
 use edgedcnn::experiments as exp;
+use edgedcnn::quant::{QFormat, QuantizedGenerator, Rounding};
 use edgedcnn::runtime::Runtime;
 use std::collections::HashMap;
 use std::time::Duration;
@@ -33,7 +34,20 @@ COMMANDS:
   networks                   Fig. 4 architectures and op counts
   serve     [--network NET] [--requests N] [--images K]
             [--interarrival-ms MS] [--seed S] [--executors E]
-                             drive the edge-serving coordinator
+            [--quant qI.F] [--shard]
+                             drive the edge-serving coordinator; --quant
+                             additionally serves fixed-point twins as
+                             NET.q (e.g. --quant q8.8 --network mnist.q),
+                             --shard splits batches across the executor
+                             pool (intra-batch parallelism)
+  quant     [--network NET] [--samples N] [--seed S]
+            [--bits B --frac F] [--export]
+                             fixed-point quantized inference: sweep
+                             fraction bits vs output error (PSNR / MMD)
+                             and FPGA latency at the quantized datapath;
+                             --bits/--frac pin one Qm.n format, --export
+                             writes calibrated quantized weights next to
+                             the artifact set
   synth     [--samples N] [--seed S]
                              write a synthetic (untrained) artifact set
                              to the --artifacts dir, enough to serve
@@ -85,6 +99,26 @@ impl Flags {
 
     fn has(&self, key: &str) -> bool {
         self.0.contains_key(key)
+    }
+}
+
+/// Parse the serve command's `--quant` flag: absent → `None`; a bare
+/// `--quant` → the default q8.8; `--quant qI.F` → that format.
+fn parse_quant_flag(flags: &Flags) -> Result<Option<QFormat>> {
+    if !flags.has("quant") {
+        return Ok(None);
+    }
+    let raw = flags.get_str("quant", "q8.8");
+    if raw == "true" {
+        return Ok(Some(QFormat::new(16, 8)));
+    }
+    match raw.parse::<Precision>()? {
+        Precision::Fixed(f) => Ok(Some(f)),
+        // an explicit `--quant f32` is contradictory (the flag *adds*
+        // fixed-point twins); rejecting beats silently re-defaulting
+        Precision::F32 => bail!(
+            "--quant f32 is contradictory — omit --quant for the f32 path"
+        ),
     }
 }
 
@@ -190,11 +224,22 @@ fn main() -> Result<()> {
             let interarrival_ms = flags.get("interarrival-ms", 2.0f64)?;
             let seed = flags.get("seed", 42u64)?;
             let executors = flags.get("executors", 0usize)?;
+            let mut quant = parse_quant_flag(&flags)?;
+            if network.ends_with(".q") && quant.is_none() {
+                quant = Some(QFormat::new(16, 8)); // default q8.8 twin
+            }
+            // base network to preload: "mnist.q" serves from "mnist"
+            let base = network
+                .strip_suffix(".q")
+                .unwrap_or(network.as_str())
+                .to_string();
             let coord = Coordinator::start(CoordinatorConfig {
                 artifacts_dir,
-                networks: vec![network.clone()],
+                networks: vec![base],
                 batcher: BatcherConfig::default(),
                 executors,
+                quant,
+                shard_batches: flags.has("shard"),
             })?;
             let report = coord.serve_workload(&WorkloadSpec {
                 network,
@@ -204,6 +249,45 @@ fn main() -> Result<()> {
                 seed,
             })?;
             println!("{}", report.render());
+        }
+        "quant" => {
+            let network = flags.get_str("network", "mnist");
+            let samples = flags.get("samples", 32usize)?;
+            let seed = flags.get("seed", 7u64)?;
+            let artifacts = ArtifactDir::open(&artifacts_dir)?;
+            let pinned = flags.has("bits") || flags.has("frac");
+            let formats = if pinned {
+                let bits = flags.get("bits", 16u32)?;
+                let frac = flags.get("frac", 8u32)?;
+                vec![QFormat::new(bits, frac)]
+            } else {
+                exp::default_quant_formats()
+            };
+            let data = exp::run_quant_error(
+                &network, &PYNQ_Z2, &artifacts, &formats, samples, seed,
+            )?;
+            print!("{}", exp::render_quant_error(&data));
+            if flags.has("export") {
+                // a pinned format exports itself; a full sweep exports
+                // the workhorse q8.8, not an arbitrary grid corner
+                let fmt = if pinned { formats[0] } else { QFormat::new(16, 8) };
+                let weights = artifacts.load_weights(&network)?;
+                let gen = QuantizedGenerator::quantize(
+                    fmt,
+                    &weights,
+                    Rounding::Nearest,
+                )?;
+                let path = edgedcnn::artifacts::export_quantized(
+                    &artifacts.root,
+                    &network,
+                    &gen,
+                )?;
+                println!(
+                    "quantized weights ({}) exported — sidecar {}",
+                    fmt,
+                    path.display()
+                );
+            }
         }
         "synth" => {
             let samples = flags.get("samples", 64usize)?;

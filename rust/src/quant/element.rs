@@ -1,0 +1,117 @@
+//! The [`Element`] trait — the element-type axis of the numeric
+//! substrate.  Tensors, all three deconvolution kernels and the
+//! generator forward are generic over it, so the same Algorithm 1 code
+//! runs in `f32` (the historical path) or Qm.n fixed point (the
+//! datapath the paper's PYNQ-Z2 accelerator actually executes).
+//!
+//! The central design rule is the split between the *element* domain
+//! (storage width, saturating, rounded) and the *accumulator* domain
+//! ([`Element::Acc`]: wide, exact-or-wrapping, never saturating
+//! mid-chain).  Because accumulation is order-independent in the
+//! accumulator domain, the standard, reverse-loop and TDC kernels —
+//! which visit the same multiset of taps in different loop orders — are
+//! **bit-identical** in fixed point, which the property tests assert.
+
+/// A scalar the tensor/deconvolution substrate can compute in.
+pub trait Element:
+    Copy + PartialEq + Send + Sync + std::fmt::Debug + 'static
+{
+    /// Wide accumulator carried through a MAC chain.  Accumulation must
+    /// be exact or wrapping (never saturating or rounding mid-chain) so
+    /// the sum is independent of accumulation order.  Order-independence
+    /// holds unconditionally; *overflow-freedom* is storage-dependent —
+    /// see [`crate::quant::Fixed`]'s `mac` for the per-width headroom.
+    type Acc: Copy + Send;
+
+    /// Additive identity in the element domain.
+    const ZERO: Self;
+    /// Additive identity in the accumulator domain.
+    const ACC_ZERO: Self::Acc;
+    /// Bytes one element occupies in external memory — this is what the
+    /// kernel's `OpStats` byte accounting and the FPGA AXI model charge.
+    const BYTES: usize;
+
+    /// Quantize from `f32` (round-to-nearest for fixed point).
+    fn from_f32(v: f32) -> Self;
+    /// Dequantize back to `f32`.
+    fn to_f32(self) -> f32;
+    /// Exact-zero test (the zero-skipping predicate).
+    fn is_zero(self) -> bool;
+    /// Widen into the accumulator domain (bias initialization).
+    fn widen(self) -> Self::Acc;
+    /// `acc + w · x` in the accumulator domain.
+    fn mac(acc: Self::Acc, w: Self, x: Self) -> Self::Acc;
+    /// Round/saturate the accumulator back to the element domain — the
+    /// hardware's one-shot write-back stage.
+    fn narrow(acc: Self::Acc) -> Self;
+    /// `max(0, x)` — the inter-layer activation.
+    fn relu(self) -> Self;
+    /// `tanh(x)` — the output-layer squash (fixed-point backends model
+    /// the hardware's LUT by round-tripping through `f32`).
+    fn tanh(self) -> Self;
+}
+
+impl Element for f32 {
+    type Acc = f32;
+
+    const ZERO: f32 = 0.0;
+    const ACC_ZERO: f32 = 0.0;
+    const BYTES: usize = 4;
+
+    #[inline]
+    fn from_f32(v: f32) -> f32 {
+        v
+    }
+
+    #[inline]
+    fn to_f32(self) -> f32 {
+        self
+    }
+
+    #[inline]
+    fn is_zero(self) -> bool {
+        self == 0.0
+    }
+
+    #[inline]
+    fn widen(self) -> f32 {
+        self
+    }
+
+    #[inline]
+    fn mac(acc: f32, w: f32, x: f32) -> f32 {
+        acc + w * x
+    }
+
+    #[inline]
+    fn narrow(acc: f32) -> f32 {
+        acc
+    }
+
+    #[inline]
+    fn relu(self) -> f32 {
+        f32::max(self, 0.0)
+    }
+
+    #[inline]
+    fn tanh(self) -> f32 {
+        f32::tanh(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_is_the_identity_backend() {
+        assert_eq!(<f32 as Element>::from_f32(1.5), 1.5);
+        assert_eq!(1.5f32.to_f32(), 1.5);
+        assert!(<f32 as Element>::is_zero(0.0));
+        assert!(!<f32 as Element>::is_zero(1e-20));
+        assert_eq!(<f32 as Element>::mac(1.0, 2.0, 3.0), 7.0);
+        assert_eq!(Element::relu(-2.0f32), 0.0);
+        assert_eq!(Element::relu(2.0f32), 2.0);
+        assert_eq!(<f32 as Element>::BYTES, 4);
+    }
+}

@@ -1,0 +1,307 @@
+//! `Fixed<S, F>` — Qm.n fixed point over an `i16`/`i32` backing store
+//! with saturating element ops, configurable rounding and an exact
+//! (wrapping) `i64` accumulator, mirroring the DSP48 datapath: narrow
+//! multiplier inputs, wide accumulator, one round/saturate at write-back.
+
+use super::element::Element;
+
+/// Integer backing store for a fixed-point element (`i16` or `i32`).
+pub trait Storage:
+    Copy + PartialEq + Eq + Send + Sync + std::fmt::Debug + 'static
+{
+    const BITS: u32;
+    const BYTES: usize;
+    const MIN_I64: i64;
+    const MAX_I64: i64;
+    const ZERO: Self;
+
+    fn to_i64(self) -> i64;
+    /// Saturate an `i64` into the storage range.
+    fn from_i64_sat(v: i64) -> Self;
+}
+
+impl Storage for i16 {
+    const BITS: u32 = 16;
+    const BYTES: usize = 2;
+    const MIN_I64: i64 = i16::MIN as i64;
+    const MAX_I64: i64 = i16::MAX as i64;
+    const ZERO: i16 = 0;
+
+    #[inline]
+    fn to_i64(self) -> i64 {
+        self as i64
+    }
+
+    #[inline]
+    fn from_i64_sat(v: i64) -> i16 {
+        v.clamp(i16::MIN as i64, i16::MAX as i64) as i16
+    }
+}
+
+impl Storage for i32 {
+    const BITS: u32 = 32;
+    const BYTES: usize = 4;
+    const MIN_I64: i64 = i32::MIN as i64;
+    const MAX_I64: i64 = i32::MAX as i64;
+    const ZERO: i32 = 0;
+
+    #[inline]
+    fn to_i64(self) -> i64 {
+        self as i64
+    }
+
+    #[inline]
+    fn from_i64_sat(v: i64) -> i32 {
+        v.clamp(i32::MIN as i64, i32::MAX as i64) as i32
+    }
+}
+
+/// Rounding mode applied when quantizing from `f32`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Rounding {
+    /// Round to nearest (ties away from zero) — the default; gives the
+    /// `≤ 2^-F` roundtrip error bound the property tests assert.
+    #[default]
+    Nearest,
+    /// Truncate toward zero — the cheap-hardware mode.
+    Truncate,
+}
+
+/// A Qm.n fixed-point number with `F` fraction bits over storage `S`
+/// (`m = S::BITS - F` integer bits including sign).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Fixed<S: Storage, const F: u32>(S);
+
+impl<S: Storage, const F: u32> Fixed<S, F> {
+    /// Fraction bits of this format.
+    pub const FRAC: u32 = F;
+
+    /// Quantization step `2^-F`.
+    pub fn step() -> f32 {
+        1.0 / (1i64 << F) as f32
+    }
+
+    /// Largest representable value.
+    pub fn max_value_f32() -> f32 {
+        S::MAX_I64 as f32 / (1i64 << F) as f32
+    }
+
+    /// Smallest (most negative) representable value.
+    pub fn min_value_f32() -> f32 {
+        S::MIN_I64 as f32 / (1i64 << F) as f32
+    }
+
+    /// Reinterpret a raw storage word (artifact import).
+    pub fn from_raw(raw: S) -> Self {
+        Fixed(raw)
+    }
+
+    /// The raw storage word (artifact export).
+    pub fn raw(self) -> S {
+        self.0
+    }
+
+    /// Quantize with an explicit rounding mode, saturating to range.
+    /// NaN quantizes to zero (Rust float→int casts saturate/zero).
+    pub fn from_f32_round(v: f32, rounding: Rounding) -> Self {
+        let scaled = v as f64 * (1i64 << F) as f64;
+        let q = match rounding {
+            Rounding::Nearest => scaled.round(),
+            Rounding::Truncate => scaled.trunc(),
+        };
+        Fixed(S::from_i64_sat(q as i64))
+    }
+
+    /// Multiply by `2^e` with saturation (the per-layer power-of-two
+    /// rescale of the activation epilogue; `e` may be negative, in
+    /// which case the shift rounds half-up like [`Element::narrow`]).
+    pub fn scale_pow2(self, e: i32) -> Self {
+        let v = self.0.to_i64();
+        if e >= 0 {
+            let sh = (e as u32).min(62);
+            Fixed(S::from_i64_sat(v.saturating_mul(1i64 << sh)))
+        } else {
+            let sh = ((-e) as u32).min(62);
+            let half = 1i64 << (sh - 1);
+            Fixed(S::from_i64_sat(v.wrapping_add(half) >> sh))
+        }
+    }
+}
+
+impl<S: Storage, const F: u32> Element for Fixed<S, F> {
+    type Acc = i64;
+
+    const ZERO: Self = Fixed(S::ZERO);
+    const ACC_ZERO: i64 = 0;
+    const BYTES: usize = S::BYTES;
+
+    #[inline]
+    fn from_f32(v: f32) -> Self {
+        Self::from_f32_round(v, Rounding::Nearest)
+    }
+
+    #[inline]
+    fn to_f32(self) -> f32 {
+        self.0.to_i64() as f32 / (1i64 << F) as f32
+    }
+
+    #[inline]
+    fn is_zero(self) -> bool {
+        self.0.to_i64() == 0
+    }
+
+    /// Widen a Q(F) element into the Q(2F) accumulator domain, so the
+    /// bias sits in the same units as the `w · x` products.
+    #[inline]
+    fn widen(self) -> i64 {
+        self.0.to_i64() << F
+    }
+
+    /// Exact product, wrapping accumulation.  Wrapping (never
+    /// saturating) addition keeps the chain commutative, which is the
+    /// bit-exactness guarantee across kernels.  Overflow-freedom is a
+    /// separate, storage-dependent property: `i16` products are ≤ 2^30,
+    /// leaving 2^33 of headroom — no realistic layer wraps.  `i32`
+    /// products can reach 2^62, so a 32-bit format *can* wrap the
+    /// accumulator when calibrated magnitudes are extreme; the result
+    /// is then deterministic and loop-order-independent but wrong-sign
+    /// after [`Element::narrow`]'s saturation — the same finite-
+    /// accumulator behaviour real wide-accumulator hardware exhibits.
+    /// The edge-serving formats are the 16-bit ones.
+    #[inline]
+    fn mac(acc: i64, w: Self, x: Self) -> i64 {
+        acc.wrapping_add(w.0.to_i64().wrapping_mul(x.0.to_i64()))
+    }
+
+    /// Q(2F) → Q(F): round half-up, then saturate into storage.
+    #[inline]
+    fn narrow(acc: i64) -> Self {
+        if F == 0 {
+            return Fixed(S::from_i64_sat(acc));
+        }
+        let half = 1i64 << (F.saturating_sub(1));
+        Fixed(S::from_i64_sat(acc.wrapping_add(half) >> F))
+    }
+
+    #[inline]
+    fn relu(self) -> Self {
+        if self.0.to_i64() < 0 {
+            Self::ZERO
+        } else {
+            self
+        }
+    }
+
+    /// LUT-style tanh: dequantize, evaluate, requantize.
+    #[inline]
+    fn tanh(self) -> Self {
+        Self::from_f32(f32::tanh(self.to_f32()))
+    }
+}
+
+/// Q12.4 — 16-bit, 4 fraction bits.
+pub type Q12_4 = Fixed<i16, 4>;
+/// Q10.6 — 16-bit, 6 fraction bits.
+pub type Q10_6 = Fixed<i16, 6>;
+/// Q8.8 — 16-bit, 8 fraction bits (the workhorse edge format).
+pub type Q8_8 = Fixed<i16, 8>;
+/// Q6.10 — 16-bit, 10 fraction bits.
+pub type Q6_10 = Fixed<i16, 10>;
+/// Q4.12 — 16-bit, 12 fraction bits.
+pub type Q4_12 = Fixed<i16, 12>;
+/// Q16.16 — 32-bit, 16 fraction bits.
+pub type Q16_16 = Fixed<i32, 16>;
+/// Q8.24 — 32-bit, 24 fraction bits.
+pub type Q8_24 = Fixed<i32, 24>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_hits_grid_points() {
+        for v in [-3.5f32, -0.25, 0.0, 0.5, 1.0, 7.75] {
+            let q = Q8_8::from_f32(v);
+            assert_eq!(q.to_f32(), v, "{v} is on the Q8.8 grid");
+        }
+    }
+
+    #[test]
+    fn roundtrip_error_bounded_by_step() {
+        for i in 0..200 {
+            let v = (i as f32 - 100.0) * 0.3127;
+            let q = Q8_8::from_f32(v);
+            assert!(
+                (q.to_f32() - v).abs() <= Q8_8::step(),
+                "v={v} deq={} step={}",
+                q.to_f32(),
+                Q8_8::step()
+            );
+        }
+    }
+
+    #[test]
+    fn saturation_clamps_to_range() {
+        let hi = Q8_8::from_f32(1e9);
+        assert_eq!(hi.raw(), i16::MAX);
+        let lo = Q8_8::from_f32(-1e9);
+        assert_eq!(lo.raw(), i16::MIN);
+        assert!(Q8_8::max_value_f32() < 128.0);
+        assert!(Q8_8::min_value_f32() >= -128.0);
+    }
+
+    #[test]
+    fn truncate_rounds_toward_zero() {
+        let v = 0.9999 * Q8_8::step();
+        assert_eq!(Q8_8::from_f32_round(v, Rounding::Truncate).raw(), 0);
+        assert_eq!(Q8_8::from_f32_round(v, Rounding::Nearest).raw(), 1);
+        assert_eq!(Q8_8::from_f32_round(-v, Rounding::Truncate).raw(), 0);
+    }
+
+    #[test]
+    fn mac_narrow_matches_float_math() {
+        // 1.5 * 2.0 + 0.25 in Q8.8: all values on the grid, so exact
+        let w = Q8_8::from_f32(1.5);
+        let x = Q8_8::from_f32(2.0);
+        let b = Q8_8::from_f32(0.25);
+        let acc = Q8_8::mac(b.widen(), w, x);
+        assert_eq!(Q8_8::narrow(acc).to_f32(), 3.25);
+    }
+
+    #[test]
+    fn narrow_saturates_overflowing_accumulators() {
+        let big = Q8_8::from_f32(100.0);
+        let mut acc = <Q8_8 as Element>::ACC_ZERO;
+        for _ in 0..10 {
+            acc = Q8_8::mac(acc, big, big);
+        }
+        assert_eq!(Q8_8::narrow(acc).raw(), i16::MAX, "must clamp, not wrap");
+    }
+
+    #[test]
+    fn scale_pow2_shifts_both_ways() {
+        let v = Q8_8::from_f32(1.5);
+        assert_eq!(v.scale_pow2(2).to_f32(), 6.0);
+        assert_eq!(v.scale_pow2(-1).to_f32(), 0.75);
+        assert_eq!(v.scale_pow2(0), v);
+        // saturates instead of overflowing
+        assert_eq!(Q8_8::from_f32(100.0).scale_pow2(10).raw(), i16::MAX);
+    }
+
+    #[test]
+    fn relu_and_tanh_behave() {
+        assert_eq!(Element::relu(Q8_8::from_f32(-2.0)), Q8_8::ZERO);
+        assert_eq!(Element::relu(Q8_8::from_f32(2.0)).to_f32(), 2.0);
+        let t = Element::tanh(Q4_12::from_f32(1000.0)).to_f32();
+        assert!((t - 1.0).abs() < 2.0 * Q4_12::step(), "tanh(large)≈1: {t}");
+    }
+
+    #[test]
+    fn wide_format_is_finer() {
+        assert!(Q16_16::step() < Q8_8::step());
+        let v = 0.123_456_7f32;
+        let e8 = (Q8_8::from_f32(v).to_f32() - v).abs();
+        let e16 = (Q16_16::from_f32(v).to_f32() - v).abs();
+        assert!(e16 < e8);
+    }
+}

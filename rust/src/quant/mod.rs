@@ -1,0 +1,284 @@
+//! Fixed-point quantization — the element-type axis of the substrate.
+//!
+//! The paper's PYNQ-Z2 accelerator earns its throughput-per-watt edge by
+//! running the reverse-loop deconvolution in low-precision fixed point;
+//! this module makes that datapath real on the Rust side:
+//!
+//! * [`Element`] — the scalar trait [`crate::tensor::TensorT`], all
+//!   three deconvolution kernels and the generator forward are generic
+//!   over (`f32` is the identity backend);
+//! * [`Fixed<S, F>`](Fixed) — Qm.n fixed point over `i16`/`i32` with
+//!   saturating element ops, configurable [`Rounding`], and an exact
+//!   `i64` accumulator (the DSP48 shape: narrow inputs, wide
+//!   accumulator, one round/saturate at write-back);
+//! * [`QFormat`] / [`Precision`] — runtime descriptors threaded through
+//!   the config, the FPGA simulator (element/accumulator widths drive
+//!   the AXI byte counts, BRAM sizing and DSP lane packing) and the
+//!   artifact manifest;
+//! * [`QuantizedGenerator`] — per-layer scale-calibrated quantized
+//!   networks behind runtime format dispatch, used by the serving
+//!   coordinator (`<name>.q` logical networks), the `edgedcnn quant`
+//!   CLI and the quantization-error experiment.
+
+mod element;
+mod fixed;
+mod net;
+
+pub use element::Element;
+pub use fixed::{
+    Fixed, Rounding, Storage, Q10_6, Q12_4, Q16_16, Q4_12, Q6_10, Q8_24, Q8_8,
+};
+pub use net::{
+    calibrate_pow2_exp, generator_forward_quant, quantize_network,
+    QuantLayerRaw, QuantizedGenerator, QuantizedLayer,
+};
+
+use crate::tensor::{Tensor, TensorT};
+use std::fmt;
+use std::str::FromStr;
+
+/// Runtime descriptor of a Qm.n fixed-point format (`bits` total,
+/// `frac` fraction bits, `bits - frac` integer bits including sign).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct QFormat {
+    pub bits: u32,
+    pub frac: u32,
+}
+
+impl QFormat {
+    pub const fn new(bits: u32, frac: u32) -> Self {
+        QFormat { bits, frac }
+    }
+
+    /// Integer bits (including sign).
+    pub const fn int_bits(&self) -> u32 {
+        self.bits - self.frac
+    }
+
+    /// Quantization step `2^-frac`.
+    pub fn step(&self) -> f64 {
+        2f64.powi(-(self.frac as i32))
+    }
+}
+
+impl fmt::Display for QFormat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "q{}.{}", self.int_bits(), self.frac)
+    }
+}
+
+/// The formats [`QuantizedGenerator`] can dispatch to (the quant-error
+/// sweep's grid).
+pub fn supported_formats() -> Vec<QFormat> {
+    vec![
+        QFormat::new(16, 4),
+        QFormat::new(16, 6),
+        QFormat::new(16, 8),
+        QFormat::new(16, 10),
+        QFormat::new(16, 12),
+        QFormat::new(32, 16),
+        QFormat::new(32, 24),
+    ]
+}
+
+/// Datapath precision — `f32` (the historical path) or a fixed-point
+/// format.  Carried by the network config and the FPGA simulator
+/// options; drives external-memory byte counts, BRAM word widths,
+/// accumulator sizing and DSP lane packing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Precision {
+    F32,
+    Fixed(QFormat),
+}
+
+impl Precision {
+    /// Bytes per element in external memory / BRAM data words.
+    pub fn elem_bytes(self) -> u64 {
+        match self {
+            Precision::F32 => 4,
+            Precision::Fixed(q) => (q.bits as u64).div_ceil(8),
+        }
+    }
+
+    /// Bytes per accumulator word the datapath carries for each output
+    /// element before write-back: one f32 register, the DSP48's 48-bit
+    /// accumulator for 16-bit operands, a 64-bit chain for 32-bit.
+    pub fn acc_bytes(self) -> u64 {
+        match self {
+            Precision::F32 => 4,
+            Precision::Fixed(q) if q.bits <= 16 => 6,
+            Precision::Fixed(_) => 8,
+        }
+    }
+
+    /// MAC-lane multiplier relative to the f32 datapath: two 16-bit
+    /// MACs pack into one DSP48 (pre-adder/SIMD packing), so the CU
+    /// issues twice the MACs per cycle at the same DSP budget.
+    pub fn lane_factor(self) -> usize {
+        match self {
+            Precision::F32 => 1,
+            Precision::Fixed(q) if q.bits <= 16 => 2,
+            Precision::Fixed(_) => 1,
+        }
+    }
+}
+
+impl fmt::Display for Precision {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Precision::F32 => write!(f, "f32"),
+            Precision::Fixed(q) => write!(f, "{q}"),
+        }
+    }
+}
+
+impl FromStr for Precision {
+    type Err = anyhow::Error;
+
+    /// Parse `"f32"` or `"q<I>.<F>"` (total bits = I + F, e.g. `q8.8`
+    /// is 16-bit with 8 fraction bits).
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        let t = s.trim();
+        if t.eq_ignore_ascii_case("f32") {
+            return Ok(Precision::F32);
+        }
+        let body = t
+            .strip_prefix('q')
+            .or_else(|| t.strip_prefix('Q'))
+            .ok_or_else(|| {
+                anyhow::anyhow!("bad precision {s:?} (expected f32 or qI.F)")
+            })?;
+        let (i, f) = body.split_once('.').ok_or_else(|| {
+            anyhow::anyhow!("bad precision {s:?} (expected f32 or qI.F)")
+        })?;
+        let int: u32 = i
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad integer bits in {s:?}"))?;
+        let frac: u32 = f
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad fraction bits in {s:?}"))?;
+        anyhow::ensure!(
+            int >= 1 && frac >= 1 && int + frac <= 64,
+            "implausible precision {s:?}"
+        );
+        Ok(Precision::Fixed(QFormat::new(int + frac, frac)))
+    }
+}
+
+/// Quantize an `f32` tensor elementwise (unit scale).
+pub fn quantize_tensor<S: Storage, const F: u32>(
+    t: &Tensor,
+    rounding: Rounding,
+) -> TensorT<Fixed<S, F>> {
+    TensorT::from_fn(t.shape().to_vec(), |i| {
+        Fixed::<S, F>::from_f32_round(t.data()[i], rounding)
+    })
+}
+
+/// Dequantize a fixed-point tensor back to `f32`.
+pub fn dequantize_tensor<S: Storage, const F: u32>(
+    t: &TensorT<Fixed<S, F>>,
+) -> Tensor {
+    TensorT::from_fn(t.shape().to_vec(), |i| t.data()[i].to_f32())
+}
+
+/// Peak signal-to-noise ratio in dB between two same-shape tensors
+/// (`peak` is the signal range, e.g. 2.0 for tanh-range images).
+/// Identical tensors report `f64::INFINITY`.
+pub fn psnr_db(reference: &Tensor, got: &Tensor, peak: f32) -> f64 {
+    assert_eq!(reference.shape(), got.shape(), "psnr shape mismatch");
+    assert!(reference.numel() > 0, "psnr of empty tensors");
+    let mse: f64 = reference
+        .data()
+        .iter()
+        .zip(got.data())
+        .map(|(a, b)| {
+            let d = (a - b) as f64;
+            d * d
+        })
+        .sum::<f64>()
+        / reference.numel() as f64;
+    if mse == 0.0 {
+        return f64::INFINITY;
+    }
+    10.0 * ((peak as f64) * (peak as f64) / mse).log10()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn qformat_labels_and_step() {
+        let q = QFormat::new(16, 8);
+        assert_eq!(q.to_string(), "q8.8");
+        assert_eq!(q.int_bits(), 8);
+        assert!((q.step() - 1.0 / 256.0).abs() < 1e-12);
+        assert_eq!(QFormat::new(32, 16).to_string(), "q16.16");
+    }
+
+    #[test]
+    fn precision_parse_roundtrip() {
+        assert_eq!("f32".parse::<Precision>().unwrap(), Precision::F32);
+        assert_eq!(
+            "q8.8".parse::<Precision>().unwrap(),
+            Precision::Fixed(QFormat::new(16, 8))
+        );
+        assert_eq!(
+            "q16.16".parse::<Precision>().unwrap(),
+            Precision::Fixed(QFormat::new(32, 16))
+        );
+        for p in [Precision::F32, Precision::Fixed(QFormat::new(16, 12))] {
+            assert_eq!(p.to_string().parse::<Precision>().unwrap(), p);
+        }
+        assert!("int8".parse::<Precision>().is_err());
+        assert!("q8".parse::<Precision>().is_err());
+    }
+
+    #[test]
+    fn precision_datapath_parameters() {
+        assert_eq!(Precision::F32.elem_bytes(), 4);
+        assert_eq!(Precision::F32.acc_bytes(), 4);
+        assert_eq!(Precision::F32.lane_factor(), 1);
+        let q16 = Precision::Fixed(QFormat::new(16, 8));
+        assert_eq!(q16.elem_bytes(), 2);
+        assert_eq!(q16.acc_bytes(), 6);
+        assert_eq!(q16.lane_factor(), 2);
+        let q32 = Precision::Fixed(QFormat::new(32, 16));
+        assert_eq!(q32.elem_bytes(), 4);
+        assert_eq!(q32.acc_bytes(), 8);
+        assert_eq!(q32.lane_factor(), 1);
+    }
+
+    #[test]
+    fn quantize_dequantize_tensor_roundtrip() {
+        let t = Tensor::from_fn(vec![2, 3], |i| i as f32 * 0.25 - 0.5);
+        let q = quantize_tensor::<i16, 8>(&t, Rounding::Nearest);
+        let back = dequantize_tensor(&q);
+        assert_eq!(back.shape(), t.shape());
+        // all inputs are on the Q8.8 grid → exact
+        assert_eq!(back.data(), t.data());
+    }
+
+    #[test]
+    fn psnr_behaves() {
+        let a = Tensor::from_fn(vec![16], |i| (i as f32 * 0.37).sin());
+        assert_eq!(psnr_db(&a, &a, 2.0), f64::INFINITY);
+        let b = Tensor::from_fn(vec![16], |i| (i as f32 * 0.37).sin() + 0.1);
+        let c = Tensor::from_fn(vec![16], |i| (i as f32 * 0.37).sin() + 0.01);
+        assert!(psnr_db(&a, &c, 2.0) > psnr_db(&a, &b, 2.0));
+        assert!((psnr_db(&a, &b, 2.0) - 26.02).abs() < 0.1, "20·log10(2/0.1)");
+    }
+
+    #[test]
+    fn supported_formats_dispatch() {
+        for f in supported_formats() {
+            let weights = vec![(Tensor::from_fn(vec![1, 1, 2, 2], |_| 0.3), vec![0.0])];
+            assert!(
+                QuantizedGenerator::quantize(f, &weights, Rounding::Nearest)
+                    .is_ok(),
+                "{f} must dispatch"
+            );
+        }
+    }
+}

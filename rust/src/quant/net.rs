@@ -1,0 +1,451 @@
+//! Quantized networks: per-layer power-of-two scale calibration, the
+//! fixed-point generator forward (reverse-loop kernels + shift/LUT
+//! epilogue), and [`QuantizedGenerator`] — the runtime-dispatch wrapper
+//! that lets non-generic code (coordinator, CLI, artifact I/O) own a
+//! quantized network without naming a concrete `Fixed<S, F>` type.
+
+use super::element::Element;
+use super::fixed::{Fixed, Rounding, Storage};
+use super::{dequantize_tensor, QFormat};
+use crate::config::NetworkCfg;
+use crate::deconv::{deconv_reverse_loop_par, OpStats, ReverseLoopOpts};
+use crate::tensor::{Tensor, TensorT};
+use crate::util::WorkerPool;
+use anyhow::{ensure, Result};
+
+/// One quantized deconvolution layer: weights and bias stored as
+/// `stored · 2^scale_exp ≈ real`, so the kernel runs scale-free and the
+/// epilogue undoes the scale with a single shift.
+pub struct QuantizedLayer<S: Storage, const F: u32> {
+    pub w: TensorT<Fixed<S, F>>,
+    pub b: Vec<Fixed<S, F>>,
+    /// Per-layer power-of-two weight scale exponent (calibrated).
+    pub scale_exp: i32,
+}
+
+/// Calibrate the per-layer power-of-two scale: the smallest exponent
+/// `e` such that `max(|w|, |b|) / 2^e` fits the representable range of
+/// `Fixed<S, F>` — small-magnitude layers get a *negative* exponent,
+/// spending the spare integer bits on resolution.  The bias must be
+/// part of the calibration because it is stored at the same scale as
+/// the weights (it seeds the accumulator in weight units); calibrating
+/// on weights alone would saturate ordinary biases in tiny-weight
+/// layers.
+pub fn calibrate_pow2_exp<S: Storage, const F: u32>(
+    w: &Tensor,
+    b: &[f32],
+) -> i32 {
+    let max_abs = w
+        .data()
+        .iter()
+        .chain(b.iter())
+        .fold(0.0f32, |m, v| m.max(v.abs()));
+    if max_abs == 0.0 || !max_abs.is_finite() {
+        return 0;
+    }
+    let limit = Fixed::<S, F>::max_value_f32();
+    let mut e = ((max_abs / limit).log2().ceil() as i32).clamp(-30, 30);
+    // guard against log2/powi rounding right at the boundary
+    while max_abs / 2f32.powi(e) > limit && e < 30 {
+        e += 1;
+    }
+    e
+}
+
+/// Quantize a whole weight set with per-layer calibrated scales.
+pub fn quantize_network<S: Storage, const F: u32>(
+    weights: &[(Tensor, Vec<f32>)],
+    rounding: Rounding,
+) -> Vec<QuantizedLayer<S, F>> {
+    weights
+        .iter()
+        .map(|(w, b)| {
+            let scale_exp = calibrate_pow2_exp::<S, F>(w, b);
+            let inv = 2f32.powi(-scale_exp);
+            let wq = TensorT::from_fn(w.shape().to_vec(), |i| {
+                Fixed::<S, F>::from_f32_round(w.data()[i] * inv, rounding)
+            });
+            let bq = b
+                .iter()
+                .map(|v| Fixed::<S, F>::from_f32_round(*v * inv, rounding))
+                .collect();
+            QuantizedLayer {
+                w: wq,
+                b: bq,
+                scale_exp,
+            }
+        })
+        .collect()
+}
+
+/// Full generator forward pass in Qm.n fixed point: activations are
+/// quantized once at the input, every layer runs the (generic)
+/// reverse-loop kernel on fixed-point tensors, and the epilogue applies
+/// the layer's power-of-two rescale plus ReLU/tanh — exactly the
+/// shift-and-LUT epilogue the hardware pipeline executes.
+///
+/// Returns the dequantized images plus the per-layer [`OpStats`] (whose
+/// byte counts now reflect the narrow element width).
+pub fn generator_forward_quant<S: Storage, const F: u32>(
+    net: &NetworkCfg,
+    layers: &[QuantizedLayer<S, F>],
+    z: &Tensor,
+    pool: &WorkerPool,
+) -> (Tensor, Vec<OpStats>) {
+    assert_eq!(layers.len(), net.layers.len());
+    assert_eq!(z.shape()[1], net.z_dim);
+    let n = z.shape()[0];
+    let mut xq: TensorT<Fixed<S, F>> =
+        super::quantize_tensor::<S, F>(z, Rounding::Nearest)
+            .reshape(vec![n, net.z_dim, 1, 1])
+            .expect("z reshape");
+    let last = net.layers.len() - 1;
+    let mut stats_all = Vec::with_capacity(layers.len());
+    for (i, (cfg, ql)) in net.layers.iter().zip(layers).enumerate() {
+        let (mut y, stats) = deconv_reverse_loop_par(
+            &xq,
+            &ql.w,
+            &ql.b,
+            cfg.stride,
+            cfg.padding,
+            ReverseLoopOpts {
+                tile: net.tile,
+                zero_skip: true,
+            },
+            pool,
+        );
+        for v in y.data_mut().iter_mut() {
+            let r = v.scale_pow2(ql.scale_exp);
+            *v = if i == last {
+                Element::tanh(r)
+            } else {
+                Element::relu(r)
+            };
+        }
+        stats_all.push(stats);
+        xq = y;
+    }
+    (dequantize_tensor(&xq), stats_all)
+}
+
+/// Raw (format-erased) form of one quantized layer — the artifact
+/// interchange unit (`i16` raws are widened to `i32` losslessly).
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantLayerRaw {
+    pub w_shape: Vec<usize>,
+    pub w_raw: Vec<i32>,
+    pub b_raw: Vec<i32>,
+    pub scale_exp: i32,
+}
+
+trait QuantForwardDyn: Send + Sync {
+    fn generate(
+        &self,
+        net: &NetworkCfg,
+        z: &Tensor,
+        pool: &WorkerPool,
+    ) -> (Tensor, Vec<OpStats>);
+    fn format(&self) -> QFormat;
+    fn export_raw(&self) -> Vec<QuantLayerRaw>;
+}
+
+struct QuantNet<S: Storage, const F: u32> {
+    layers: Vec<QuantizedLayer<S, F>>,
+}
+
+impl<S: Storage, const F: u32> QuantForwardDyn for QuantNet<S, F> {
+    fn generate(
+        &self,
+        net: &NetworkCfg,
+        z: &Tensor,
+        pool: &WorkerPool,
+    ) -> (Tensor, Vec<OpStats>) {
+        generator_forward_quant(net, &self.layers, z, pool)
+    }
+
+    fn format(&self) -> QFormat {
+        QFormat::new(S::BITS, F)
+    }
+
+    fn export_raw(&self) -> Vec<QuantLayerRaw> {
+        self.layers
+            .iter()
+            .map(|l| QuantLayerRaw {
+                w_shape: l.w.shape().to_vec(),
+                w_raw: l.w.data().iter().map(|q| q.raw().to_i64() as i32).collect(),
+                b_raw: l.b.iter().map(|q| q.raw().to_i64() as i32).collect(),
+                scale_exp: l.scale_exp,
+            })
+            .collect()
+    }
+}
+
+/// Dispatch a runtime [`QFormat`] onto the supported monomorphizations.
+macro_rules! for_format {
+    ($bits:expr, $frac:expr, $mk:ident) => {
+        match ($bits, $frac) {
+            (16, 4) => $mk!(i16, 4),
+            (16, 6) => $mk!(i16, 6),
+            (16, 8) => $mk!(i16, 8),
+            (16, 10) => $mk!(i16, 10),
+            (16, 12) => $mk!(i16, 12),
+            (32, 16) => $mk!(i32, 16),
+            (32, 24) => $mk!(i32, 24),
+            (b, f) => anyhow::bail!(
+                "unsupported fixed-point format ({b} bits, {f} frac) — \
+                 supported: {}",
+                super::supported_formats()
+                    .iter()
+                    .map(|q| q.to_string())
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            ),
+        }
+    };
+}
+
+/// A quantized generator behind runtime format dispatch: quantize once
+/// (with calibration), then serve `z → images` forwards.  This is what
+/// the coordinator holds per `.q` logical network and what the artifact
+/// layer exports/imports.
+pub struct QuantizedGenerator {
+    inner: Box<dyn QuantForwardDyn>,
+}
+
+impl QuantizedGenerator {
+    /// Quantize an `f32` weight set at the given format.
+    pub fn quantize(
+        format: QFormat,
+        weights: &[(Tensor, Vec<f32>)],
+        rounding: Rounding,
+    ) -> Result<Self> {
+        macro_rules! mk {
+            ($s:ty, $f:literal) => {
+                Box::new(QuantNet::<$s, $f> {
+                    layers: quantize_network::<$s, $f>(weights, rounding),
+                }) as Box<dyn QuantForwardDyn>
+            };
+        }
+        let inner = for_format!(format.bits, format.frac, mk);
+        Ok(QuantizedGenerator { inner })
+    }
+
+    /// Rebuild from raw storage words (artifact import); bit-exact
+    /// against the exported generator.
+    pub fn from_raw(format: QFormat, layers: &[QuantLayerRaw]) -> Result<Self> {
+        macro_rules! mk {
+            ($s:ty, $f:literal) => {{
+                let mut built = Vec::with_capacity(layers.len());
+                for l in layers {
+                    ensure!(
+                        l.w_shape.iter().product::<usize>() == l.w_raw.len(),
+                        "quantized layer shape/data mismatch"
+                    );
+                    let w = TensorT::from_fn(l.w_shape.clone(), |i| {
+                        Fixed::<$s, $f>::from_raw(
+                            <$s as Storage>::from_i64_sat(l.w_raw[i] as i64),
+                        )
+                    });
+                    let b = l
+                        .b_raw
+                        .iter()
+                        .map(|r| {
+                            Fixed::<$s, $f>::from_raw(
+                                <$s as Storage>::from_i64_sat(*r as i64),
+                            )
+                        })
+                        .collect();
+                    built.push(QuantizedLayer {
+                        w,
+                        b,
+                        scale_exp: l.scale_exp,
+                    });
+                }
+                Box::new(QuantNet::<$s, $f> { layers: built })
+                    as Box<dyn QuantForwardDyn>
+            }};
+        }
+        let inner = for_format!(format.bits, format.frac, mk);
+        Ok(QuantizedGenerator { inner })
+    }
+
+    /// Run the quantized forward for a latent batch `[N, z_dim]`.
+    pub fn generate(
+        &self,
+        net: &NetworkCfg,
+        z: &Tensor,
+        pool: &WorkerPool,
+    ) -> (Tensor, Vec<OpStats>) {
+        self.inner.generate(net, z, pool)
+    }
+
+    pub fn format(&self) -> QFormat {
+        self.inner.format()
+    }
+
+    /// Format-erased raw layers (for artifact export).
+    pub fn export_raw(&self) -> Vec<QuantLayerRaw> {
+        self.inner.export_raw()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::fixed::Q8_8;
+    use super::*;
+    use crate::config::network_by_name;
+    use crate::util::Rng;
+
+    fn tiny_weights(seed: u64) -> Vec<(Tensor, Vec<f32>)> {
+        let net = network_by_name("mnist").unwrap();
+        let mut rng = Rng::seed_from_u64(seed);
+        net.layers
+            .iter()
+            .map(|l| {
+                (
+                    Tensor::from_fn(vec![l.c_in, l.c_out, l.k, l.k], |_| {
+                        0.05 * rng.normal_f32()
+                    }),
+                    (0..l.c_out).map(|_| 0.01 * rng.normal_f32()).collect(),
+                )
+            })
+            .collect()
+    }
+
+    #[test]
+    fn calibration_uses_spare_range() {
+        // tiny weights → negative exponent (scale-up for resolution)
+        let w = Tensor::from_fn(vec![1, 1, 2, 2], |_| 0.01);
+        let e = calibrate_pow2_exp::<i16, 8>(&w, &[]);
+        assert!(e < 0, "e={e}");
+        // huge weights → positive exponent (scale-down to fit)
+        let w = Tensor::from_fn(vec![1, 1, 2, 2], |_| 1.0e4);
+        let e = calibrate_pow2_exp::<i16, 8>(&w, &[]);
+        assert!(e > 0, "e={e}");
+        assert!(1.0e4 / 2f32.powi(e) <= Fixed::<i16, 8>::max_value_f32());
+        // all-zero weights are fine
+        let w = Tensor::zeros(vec![1, 1, 2, 2]);
+        assert_eq!(calibrate_pow2_exp::<i16, 8>(&w, &[]), 0);
+    }
+
+    #[test]
+    fn calibration_covers_the_bias_range_too() {
+        // tiny weights with an ordinary bias: the bias must survive
+        // quantization (it is stored at the weight scale), so it has to
+        // participate in the calibration
+        let w = Tensor::from_fn(vec![1, 1, 2, 2], |_| 0.01);
+        let b = [0.5f32];
+        let e = calibrate_pow2_exp::<i16, 8>(&w, &b);
+        let scale = 2f32.powi(e);
+        assert!(
+            0.5 / scale <= Fixed::<i16, 8>::max_value_f32(),
+            "bias must fit at the calibrated scale (e={e})"
+        );
+        let q = quantize_network::<i16, 8>(
+            &[(w, b.to_vec())],
+            Rounding::Nearest,
+        );
+        let back = q[0].b[0].to_f32() * scale;
+        assert!((back - 0.5).abs() < 1e-3, "bias roundtrip: {back}");
+    }
+
+    #[test]
+    fn quantize_network_calibrates_per_layer() {
+        let weights = tiny_weights(3);
+        let q = quantize_network::<i16, 8>(&weights, Rounding::Nearest);
+        assert_eq!(q.len(), weights.len());
+        for (ql, (w, _)) in q.iter().zip(&weights) {
+            assert_eq!(ql.w.shape(), w.shape());
+            // calibrated reconstruction error ≤ step · scale
+            let s = 2f32.powi(ql.scale_exp);
+            for (qv, fv) in ql.w.data().iter().zip(w.data()) {
+                let err = (qv.to_f32() * s - fv).abs();
+                assert!(err <= Q8_8::step() * s, "err={err} scale={s}");
+            }
+        }
+    }
+
+    #[test]
+    fn quantized_forward_tracks_f32_forward() {
+        let net = network_by_name("mnist").unwrap();
+        let weights = tiny_weights(11);
+        let mut rng = Rng::seed_from_u64(5);
+        let z = Tensor::from_fn(vec![2, net.z_dim], |_| rng.normal_f32());
+        let reference = crate::deconv::generator_forward(&net, &weights, &z);
+        let pool = WorkerPool::new(1);
+        let gen = QuantizedGenerator::quantize(
+            QFormat::new(16, 12),
+            &weights,
+            Rounding::Nearest,
+        )
+        .unwrap();
+        let (images, stats) = gen.generate(&net, &z, &pool);
+        assert_eq!(images.shape(), reference.shape());
+        assert_eq!(stats.len(), net.layers.len());
+        // tanh range, finite error
+        assert!(images.data().iter().all(|v| v.abs() <= 1.0 + 1e-3));
+        let err = images.max_abs_diff(&reference);
+        assert!(err < 0.25, "Q4.12 end-to-end error too large: {err}");
+        // byte accounting reflects the 2-byte elements
+        let o = net.layers[0].o_h();
+        assert_eq!(
+            stats[0].ext_write_bytes,
+            2 * (2 * net.layers[0].c_out * o * o) as u64
+        );
+    }
+
+    #[test]
+    fn dyn_dispatch_matches_direct_call() {
+        let net = network_by_name("mnist").unwrap();
+        let weights = tiny_weights(7);
+        let mut rng = Rng::seed_from_u64(9);
+        let z = Tensor::from_fn(vec![1, net.z_dim], |_| rng.normal_f32());
+        let pool = WorkerPool::new(1);
+        let direct = {
+            let layers = quantize_network::<i16, 8>(&weights, Rounding::Nearest);
+            generator_forward_quant(&net, &layers, &z, &pool).0
+        };
+        let gen = QuantizedGenerator::quantize(
+            QFormat::new(16, 8),
+            &weights,
+            Rounding::Nearest,
+        )
+        .unwrap();
+        assert_eq!(gen.format(), QFormat::new(16, 8));
+        let (boxed, _) = gen.generate(&net, &z, &pool);
+        assert_eq!(direct.data(), boxed.data(), "dispatch must be a no-op");
+    }
+
+    #[test]
+    fn unsupported_format_errors() {
+        let weights = tiny_weights(1);
+        let bad = QuantizedGenerator::quantize(
+            QFormat::new(8, 4),
+            &weights,
+            Rounding::Nearest,
+        );
+        assert!(bad.is_err());
+    }
+
+    #[test]
+    fn raw_roundtrip_is_bit_exact() {
+        let net = network_by_name("mnist").unwrap();
+        let weights = tiny_weights(21);
+        let gen = QuantizedGenerator::quantize(
+            QFormat::new(16, 10),
+            &weights,
+            Rounding::Nearest,
+        )
+        .unwrap();
+        let raw = gen.export_raw();
+        let back =
+            QuantizedGenerator::from_raw(QFormat::new(16, 10), &raw).unwrap();
+        assert_eq!(back.export_raw(), raw);
+        let mut rng = Rng::seed_from_u64(2);
+        let z = Tensor::from_fn(vec![1, net.z_dim], |_| rng.normal_f32());
+        let pool = WorkerPool::new(1);
+        let (a, _) = gen.generate(&net, &z, &pool);
+        let (b, _) = back.generate(&net, &z, &pool);
+        assert_eq!(a.data(), b.data());
+    }
+}

@@ -1,25 +1,35 @@
 //! Minimal NCHW tensor type + `.npy` interchange.
 //!
-//! The Rust side only ever needs dense f32 NCHW activations/weights: the
-//! real compute runs inside PJRT executables; this type carries data to
-//! and from them (and feeds the pure-Rust deconvolution substrate used by
-//! the simulators and tests).
+//! [`TensorT<T>`] is generic over the element type ([`Element`]): the
+//! deconvolution substrate and the FPGA-path numerics run it in `f32`
+//! or in Qm.n fixed point ([`crate::quant::Fixed`]).  [`Tensor`] is the
+//! historical concrete `f32` alias — `.npy` interchange and the float
+//! diagnostics live on it, and every pre-quantization call site keeps
+//! its exact meaning.
 
 mod npy;
 
-pub use npy::{read_npy_f32, write_npy_f32};
+pub use npy::{
+    read_npy_f32, read_npy_i32, write_npy_f32, write_npy_i16, write_npy_i32,
+};
+
+pub use crate::quant::Element;
 
 use anyhow::{ensure, Result};
 
-/// Dense row-major (C-order) f32 tensor of rank ≤ 4, NCHW for rank 4.
+/// Dense row-major (C-order) tensor of rank ≤ 4, NCHW for rank 4,
+/// generic over the element type.
 #[derive(Debug, Clone, PartialEq)]
-pub struct Tensor {
+pub struct TensorT<T: Element> {
     shape: Vec<usize>,
-    data: Vec<f32>,
+    data: Vec<T>,
 }
 
-impl Tensor {
-    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Self> {
+/// The default `f32` tensor (the historical concrete type).
+pub type Tensor = TensorT<f32>;
+
+impl<T: Element> TensorT<T> {
+    pub fn new(shape: Vec<usize>, data: Vec<T>) -> Result<Self> {
         let numel: usize = shape.iter().product();
         ensure!(
             numel == data.len(),
@@ -28,22 +38,22 @@ impl Tensor {
             numel,
             data.len()
         );
-        Ok(Tensor { shape, data })
+        Ok(TensorT { shape, data })
     }
 
     pub fn zeros(shape: Vec<usize>) -> Self {
         let numel = shape.iter().product();
-        Tensor {
+        TensorT {
             shape,
-            data: vec![0.0; numel],
+            data: vec![T::ZERO; numel],
         }
     }
 
-    pub fn from_fn(shape: Vec<usize>, mut f: impl FnMut(usize) -> f32) -> Self {
+    pub fn from_fn(shape: Vec<usize>, f: impl FnMut(usize) -> T) -> Self {
         let numel: usize = shape.iter().product();
-        Tensor {
+        TensorT {
             shape,
-            data: (0..numel).map(|i| f(i)).collect(),
+            data: (0..numel).map(f).collect(),
         }
     }
 
@@ -55,15 +65,15 @@ impl Tensor {
         self.data.len()
     }
 
-    pub fn data(&self) -> &[f32] {
+    pub fn data(&self) -> &[T] {
         &self.data
     }
 
-    pub fn data_mut(&mut self) -> &mut [f32] {
+    pub fn data_mut(&mut self) -> &mut [T] {
         &mut self.data
     }
 
-    pub fn into_data(self) -> Vec<f32> {
+    pub fn into_data(self) -> Vec<T> {
         self.data
     }
 
@@ -75,20 +85,14 @@ impl Tensor {
     }
 
     #[inline]
-    pub fn get4(&self, n: usize, c: usize, h: usize, w: usize) -> f32 {
+    pub fn get4(&self, n: usize, c: usize, h: usize, w: usize) -> T {
         self.data[self.idx4(n, c, h, w)]
     }
 
     #[inline]
-    pub fn set4(&mut self, n: usize, c: usize, h: usize, w: usize, v: f32) {
+    pub fn set4(&mut self, n: usize, c: usize, h: usize, w: usize, v: T) {
         let i = self.idx4(n, c, h, w);
         self.data[i] = v;
-    }
-
-    #[inline]
-    pub fn add4(&mut self, n: usize, c: usize, h: usize, w: usize, v: f32) {
-        let i = self.idx4(n, c, h, w);
-        self.data[i] += v;
     }
 
     /// Reshape in place (numel must match).
@@ -97,6 +101,25 @@ impl Tensor {
         ensure!(numel == self.data.len(), "reshape numel mismatch");
         self.shape = shape;
         Ok(self)
+    }
+
+    /// Fraction of exactly-zero elements (sparsity measurement).
+    pub fn zero_fraction(&self) -> f64 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        let zeros = self.data.iter().filter(|v| v.is_zero()).count();
+        zeros as f64 / self.data.len() as f64
+    }
+}
+
+/// `f32`-specific surface: float accumulation helpers, diagnostics and
+/// the `.npy` interchange with the Python build layer.
+impl TensorT<f32> {
+    #[inline]
+    pub fn add4(&mut self, n: usize, c: usize, h: usize, w: usize, v: f32) {
+        let i = self.idx4(n, c, h, w);
+        self.data[i] += v;
     }
 
     /// Maximum absolute elementwise difference (for test assertions).
@@ -109,18 +132,9 @@ impl Tensor {
             .fold(0.0, f32::max)
     }
 
-    /// Fraction of exactly-zero elements (sparsity measurement).
-    pub fn zero_fraction(&self) -> f64 {
-        if self.data.is_empty() {
-            return 0.0;
-        }
-        let zeros = self.data.iter().filter(|v| **v == 0.0).count();
-        zeros as f64 / self.data.len() as f64
-    }
-
     pub fn read_npy(path: &std::path::Path) -> Result<Self> {
         let (shape, data) = read_npy_f32(path)?;
-        Tensor::new(shape, data)
+        TensorT::new(shape, data)
     }
 
     pub fn write_npy(&self, path: &std::path::Path) -> Result<()> {
@@ -131,6 +145,7 @@ impl Tensor {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::quant::Q8_8;
 
     #[test]
     fn new_validates_numel() {
@@ -153,6 +168,17 @@ mod tests {
     fn zero_fraction_counts() {
         let t = Tensor::new(vec![4], vec![0.0, 1.0, 0.0, 2.0]).unwrap();
         assert_eq!(t.zero_fraction(), 0.5);
+    }
+
+    #[test]
+    fn generic_tensor_over_fixed_point() {
+        let t: TensorT<Q8_8> =
+            TensorT::from_fn(vec![2, 2], |i| Q8_8::from_f32(i as f32 * 0.5));
+        assert_eq!(t.numel(), 4);
+        assert_eq!(t.data()[3].to_f32(), 1.5);
+        assert_eq!(t.zero_fraction(), 0.25);
+        let z: TensorT<Q8_8> = TensorT::zeros(vec![3]);
+        assert!(z.data().iter().all(|v| v.is_zero()));
     }
 
     #[test]

@@ -1,8 +1,10 @@
 //! Minimal NumPy `.npy` (format v1.0/2.0) reader/writer for dense C-order
 //! arrays — the weight/ground-truth interchange with `python/compile`.
 //!
-//! Supports `<f4` and `<f8` on read (f8 is converted to f32) and writes
-//! `<f4`.  That is the entire surface the artifact contract needs.
+//! Supports `<f4`/`<f8` on read (f8 converted to f32) and writes `<f4`
+//! for the float contract, plus `<i2`/`<i4` for the quantized-weight
+//! sidecar (`i2` widens losslessly to `i32` on read).  That is the
+//! entire surface the artifact contract needs.
 
 use anyhow::{bail, ensure, Context, Result};
 use std::io::{Read, Write};
@@ -12,41 +14,8 @@ const MAGIC: &[u8; 6] = b"\x93NUMPY";
 
 /// Read an `.npy` file into `(shape, f32 data)`.
 pub fn read_npy_f32(path: &Path) -> Result<(Vec<usize>, Vec<f32>)> {
-    let mut f = std::fs::File::open(path)
-        .with_context(|| format!("opening {}", path.display()))?;
-    let mut magic = [0u8; 8];
-    f.read_exact(&mut magic).context("reading npy magic")?;
-    ensure!(&magic[..6] == MAGIC, "not an npy file: {}", path.display());
-    let major = magic[6];
-    let header_len = match major {
-        1 => {
-            let mut b = [0u8; 2];
-            f.read_exact(&mut b)?;
-            u16::from_le_bytes(b) as usize
-        }
-        2 | 3 => {
-            let mut b = [0u8; 4];
-            f.read_exact(&mut b)?;
-            u32::from_le_bytes(b) as usize
-        }
-        v => bail!("unsupported npy version {v}"),
-    };
-    let mut header = vec![0u8; header_len];
-    f.read_exact(&mut header)?;
-    let header = String::from_utf8(header).context("npy header not utf8")?;
-
-    let descr = dict_str_value(&header, "descr")?;
-    let fortran = dict_raw_value(&header, "fortran_order")?;
-    ensure!(
-        fortran.trim() == "False",
-        "fortran-order npy unsupported ({})",
-        path.display()
-    );
-    let shape = parse_shape(&dict_raw_value(&header, "shape")?)?;
+    let (descr, shape, raw) = read_npy_raw(path)?;
     let numel: usize = shape.iter().product();
-
-    let mut raw = Vec::new();
-    f.read_to_end(&mut raw)?;
     let data = match descr.as_str() {
         "<f4" | "|f4" => {
             ensure!(raw.len() >= numel * 4, "npy payload too short");
@@ -71,10 +40,13 @@ pub fn read_npy_f32(path: &Path) -> Result<(Vec<usize>, Vec<f32>)> {
     Ok((shape, data))
 }
 
-/// Write a dense C-order f32 array as `.npy` v1.0.
-pub fn write_npy_f32(path: &Path, shape: &[usize], data: &[f32]) -> Result<()> {
-    let numel: usize = shape.iter().product();
-    ensure!(numel == data.len(), "shape/data mismatch");
+/// Write the `.npy` v1.0 preamble (magic + version + padded header) for
+/// a dtype/shape and return the opened buffered writer.
+fn open_npy_writer(
+    path: &Path,
+    shape: &[usize],
+    descr: &str,
+) -> Result<std::io::BufWriter<std::fs::File>> {
     let shape_str = match shape.len() {
         0 => "()".to_string(),
         1 => format!("({},)", shape[0]),
@@ -88,7 +60,7 @@ pub fn write_npy_f32(path: &Path, shape: &[usize], data: &[f32]) -> Result<()> {
         ),
     };
     let mut header = format!(
-        "{{'descr': '<f4', 'fortran_order': False, 'shape': {shape_str}, }}"
+        "{{'descr': '{descr}', 'fortran_order': False, 'shape': {shape_str}, }}"
     );
     // pad so that magic(6)+ver(2)+len(2)+header is a multiple of 64
     let unpadded = 10 + header.len() + 1;
@@ -103,11 +75,105 @@ pub fn write_npy_f32(path: &Path, shape: &[usize], data: &[f32]) -> Result<()> {
     f.write_all(&[1u8, 0u8])?;
     f.write_all(&(header.len() as u16).to_le_bytes())?;
     f.write_all(header.as_bytes())?;
+    Ok(f)
+}
+
+/// Write a dense C-order f32 array as `.npy` v1.0.
+pub fn write_npy_f32(path: &Path, shape: &[usize], data: &[f32]) -> Result<()> {
+    let numel: usize = shape.iter().product();
+    ensure!(numel == data.len(), "shape/data mismatch");
+    let mut f = open_npy_writer(path, shape, "<f4")?;
     for v in data {
         f.write_all(&v.to_le_bytes())?;
     }
     f.flush()?;
     Ok(())
+}
+
+/// Write a dense C-order i16 array as `.npy` v1.0 (`<i2`).
+pub fn write_npy_i16(path: &Path, shape: &[usize], data: &[i16]) -> Result<()> {
+    let numel: usize = shape.iter().product();
+    ensure!(numel == data.len(), "shape/data mismatch");
+    let mut f = open_npy_writer(path, shape, "<i2")?;
+    for v in data {
+        f.write_all(&v.to_le_bytes())?;
+    }
+    f.flush()?;
+    Ok(())
+}
+
+/// Write a dense C-order i32 array as `.npy` v1.0 (`<i4`).
+pub fn write_npy_i32(path: &Path, shape: &[usize], data: &[i32]) -> Result<()> {
+    let numel: usize = shape.iter().product();
+    ensure!(numel == data.len(), "shape/data mismatch");
+    let mut f = open_npy_writer(path, shape, "<i4")?;
+    for v in data {
+        f.write_all(&v.to_le_bytes())?;
+    }
+    f.flush()?;
+    Ok(())
+}
+
+/// Read an integer `.npy` file into `(shape, i32 data)` — accepts `<i2`
+/// (widened losslessly) and `<i4`, the quantized-weight dtypes.
+pub fn read_npy_i32(path: &Path) -> Result<(Vec<usize>, Vec<i32>)> {
+    let (descr, shape, raw) = read_npy_raw(path)?;
+    let numel: usize = shape.iter().product();
+    let data = match descr.as_str() {
+        "<i2" | "|i2" => {
+            ensure!(raw.len() >= numel * 2, "npy payload too short");
+            raw.chunks_exact(2)
+                .take(numel)
+                .map(|c| i16::from_le_bytes([c[0], c[1]]) as i32)
+                .collect()
+        }
+        "<i4" | "|i4" => {
+            ensure!(raw.len() >= numel * 4, "npy payload too short");
+            raw.chunks_exact(4)
+                .take(numel)
+                .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect()
+        }
+        other => bail!("unsupported integer npy dtype {other:?}"),
+    };
+    Ok((shape, data))
+}
+
+/// Shared header/payload reader: returns `(descr, shape, raw bytes)`.
+fn read_npy_raw(path: &Path) -> Result<(String, Vec<usize>, Vec<u8>)> {
+    let mut f = std::fs::File::open(path)
+        .with_context(|| format!("opening {}", path.display()))?;
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic).context("reading npy magic")?;
+    ensure!(&magic[..6] == MAGIC, "not an npy file: {}", path.display());
+    let major = magic[6];
+    let header_len = match major {
+        1 => {
+            let mut b = [0u8; 2];
+            f.read_exact(&mut b)?;
+            u16::from_le_bytes(b) as usize
+        }
+        2 | 3 => {
+            let mut b = [0u8; 4];
+            f.read_exact(&mut b)?;
+            u32::from_le_bytes(b) as usize
+        }
+        v => bail!("unsupported npy version {v}"),
+    };
+    let mut header = vec![0u8; header_len];
+    f.read_exact(&mut header)?;
+    let header = String::from_utf8(header).context("npy header not utf8")?;
+    let descr = dict_str_value(&header, "descr")?;
+    let fortran = dict_raw_value(&header, "fortran_order")?;
+    ensure!(
+        fortran.trim() == "False",
+        "fortran-order npy unsupported ({})",
+        path.display()
+    );
+    let shape = parse_shape(&dict_raw_value(&header, "shape")?)?;
+    let mut raw = Vec::new();
+    f.read_to_end(&mut raw)?;
+    Ok((descr, shape, raw))
 }
 
 /// Extract a quoted string value from the python-dict-literal header.
@@ -186,6 +252,29 @@ mod tests {
         let bytes = std::fs::read(&path).unwrap();
         let header_len = u16::from_le_bytes([bytes[8], bytes[9]]) as usize;
         assert_eq!((10 + header_len) % 64, 0);
+    }
+
+    #[test]
+    fn int_roundtrips_and_widening() {
+        let dir = crate::util::TempDir::new().unwrap();
+        let p16 = dir.path().join("a16.npy");
+        let v16: Vec<i16> = vec![-32768, -1, 0, 1, 32767, 123];
+        write_npy_i16(&p16, &[2, 3], &v16).unwrap();
+        let (s, d) = read_npy_i32(&p16).unwrap();
+        assert_eq!(s, vec![2, 3]);
+        assert_eq!(d, v16.iter().map(|v| *v as i32).collect::<Vec<_>>());
+
+        let p32 = dir.path().join("a32.npy");
+        let v32: Vec<i32> = vec![i32::MIN, -7, 0, 9, i32::MAX];
+        write_npy_i32(&p32, &[5], &v32).unwrap();
+        let (s, d) = read_npy_i32(&p32).unwrap();
+        assert_eq!(s, vec![5]);
+        assert_eq!(d, v32);
+
+        // reading a float file as int errors cleanly
+        let pf = dir.path().join("f.npy");
+        write_npy_f32(&pf, &[2], &[1.0, 2.0]).unwrap();
+        assert!(read_npy_i32(&pf).is_err());
     }
 
     #[test]

@@ -69,6 +69,21 @@ impl WorkerPool {
         R: Send,
         F: Fn(usize) -> R + Sync,
     {
+        self.map_indexed_chunked(n, 1, f)
+    }
+
+    /// [`Self::map_indexed`] with chunked claims: workers grab `chunk`
+    /// consecutive indices per atomic fetch, so very small jobs amortize
+    /// the claim/slot overhead instead of paying it per job.  Results
+    /// are identical to `map_indexed` for any chunk size (every job
+    /// still writes its own pre-assigned slot); only the claim
+    /// granularity — and therefore load-balance vs overhead — changes.
+    pub fn map_indexed_chunked<R, F>(&self, n: usize, chunk: usize, f: F) -> Vec<R>
+    where
+        R: Send,
+        F: Fn(usize) -> R + Sync,
+    {
+        let chunk = chunk.max(1);
         if n == 0 {
             return Vec::new();
         }
@@ -79,14 +94,17 @@ impl WorkerPool {
         let slots: Vec<Mutex<Option<R>>> =
             (0..n).map(|_| Mutex::new(None)).collect();
         std::thread::scope(|s| {
-            for _ in 0..self.workers.min(n) {
+            let spawn_workers = self.workers.min(n.div_ceil(chunk));
+            for _ in 0..spawn_workers {
                 s.spawn(|| loop {
-                    let i = next.fetch_add(1, Ordering::Relaxed);
-                    if i >= n {
+                    let start = next.fetch_add(chunk, Ordering::Relaxed);
+                    if start >= n {
                         break;
                     }
-                    let r = f(i);
-                    *slots[i].lock().unwrap() = Some(r);
+                    for i in start..(start + chunk).min(n) {
+                        let r = f(i);
+                        *slots[i].lock().unwrap() = Some(r);
+                    }
                 });
             }
         });
@@ -192,6 +210,45 @@ mod tests {
         });
         assert_eq!(counter.load(Ordering::Relaxed), n as u64);
         assert_eq!(got.len(), n);
+    }
+
+    #[test]
+    fn chunked_matches_unchunked_for_any_chunk() {
+        let pool = WorkerPool::new(5);
+        let want: Vec<usize> = (0..123).map(|i| i * 3 + 1).collect();
+        for chunk in [0, 1, 2, 7, 32, 123, 1000] {
+            let got = pool.map_indexed_chunked(123, chunk, |i| i * 3 + 1);
+            assert_eq!(got, want, "chunk={chunk}");
+        }
+    }
+
+    #[test]
+    fn chunked_runs_every_job_exactly_once() {
+        let pool = WorkerPool::new(4);
+        let counter = AtomicU64::new(0);
+        let got = pool.map_indexed_chunked(97, 8, |i| {
+            counter.fetch_add(1, Ordering::Relaxed);
+            i
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), 97);
+        assert_eq!(got, (0..97).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn chunked_deterministic_under_contention() {
+        let pool = WorkerPool::new(8);
+        for round in 0..3u64 {
+            let got = pool.map_indexed_chunked(200, 6, |i| {
+                if (i as u64 + round) % 11 == 0 {
+                    std::thread::sleep(std::time::Duration::from_micros(40));
+                }
+                (i, i as u64 * 13 + round)
+            });
+            for (slot, (i, v)) in got.iter().enumerate() {
+                assert_eq!(slot, *i);
+                assert_eq!(*v, *i as u64 * 13 + round);
+            }
+        }
     }
 
     #[test]

@@ -19,6 +19,7 @@ fn start_coordinator(networks: &[&str]) -> Option<Coordinator> {
                 max_wait: Duration::from_millis(2),
             },
             executors: 0, // auto: one per network
+            ..Default::default()
         })
         .expect("coordinator startup"),
     )

@@ -47,10 +47,9 @@ fn fpga_run_to_run_variation_is_workload_insensitive() {
     for (i, layer) in net.layers.iter().enumerate() {
         for sparsity in [0.0, 0.7] {
             let opts = SimOpts {
-                tile: net.tile,
                 zero_skip: sparsity > 0.0,
                 weight_sparsity: sparsity,
-                decouple: true,
+                ..SimOpts::dense(net.tile)
             };
             let base = simulate_layer(layer, &PYNQ_Z2, &opts);
             let runs: Vec<f64> = (0..50)
@@ -78,10 +77,9 @@ fn zero_skip_speedup_grows_with_sparsity() {
                 .layers
                 .iter()
                 .map(|_| SimOpts {
-                    tile: net.tile,
                     zero_skip: true,
                     weight_sparsity: sparsity,
-                    decouple: true,
+                    ..SimOpts::dense(net.tile)
                 })
                 .collect();
             let t = simulate_network(&net, &PYNQ_Z2, &opts).total_time_s;

@@ -112,10 +112,9 @@ fn fpga_simulator_parallel_sweep_is_exact() {
             .layers
             .iter()
             .map(|_| SimOpts {
-                tile: net.tile,
                 zero_skip: true,
                 weight_sparsity: 0.6,
-                decouple: true,
+                ..SimOpts::dense(net.tile)
             })
             .collect();
         let a = simulate_network(&net, &PYNQ_Z2, &opts);
@@ -144,6 +143,7 @@ fn synthetic_coordinator(
             max_wait: Duration::from_millis(2),
         },
         executors,
+        ..Default::default()
     })
     .expect("coordinator startup")
 }

@@ -1,0 +1,195 @@
+//! Quantized-path integration: the fixed-point generator end to end
+//! (reverse-loop kernels → scale epilogue → FPGA-simulated datapath),
+//! the artifact export/import roundtrip, and the coordinator serving a
+//! quantized twin side by side with f32 — all on a synthetic artifact
+//! set, no Python build layer required.
+
+use edgedcnn::artifacts::{export_quantized, write_synthetic};
+use edgedcnn::config::{network_by_name, Precision, QFormat, PYNQ_Z2};
+use edgedcnn::coordinator::{
+    BatcherConfig, Coordinator, CoordinatorConfig, WorkloadSpec,
+};
+use edgedcnn::deconv::generator_forward;
+use edgedcnn::experiments::{run_quant_error, QuantErrorData};
+use edgedcnn::fpga::{simulate_network, SimOpts};
+use edgedcnn::quant::{psnr_db, QuantizedGenerator, Rounding};
+use edgedcnn::tensor::Tensor;
+use edgedcnn::util::{Rng, TempDir, WorkerPool};
+use std::time::Duration;
+
+#[test]
+fn quantized_generator_end_to_end_matches_f32_closely() {
+    let dir = TempDir::new().unwrap();
+    let artifacts = write_synthetic(dir.path(), &["mnist"], 4, 17).unwrap();
+    let net = network_by_name("mnist").unwrap();
+    let weights = artifacts.load_weights("mnist").unwrap();
+    let mut rng = Rng::seed_from_u64(23);
+    let z = Tensor::from_fn(vec![4, net.z_dim], |_| rng.normal_f32());
+    let reference = generator_forward(&net, &weights, &z);
+
+    let pool = WorkerPool::new(4);
+    let gen = QuantizedGenerator::quantize(
+        QFormat::new(16, 12),
+        &weights,
+        Rounding::Nearest,
+    )
+    .unwrap();
+    let (images, stats) = gen.generate(&net, &z, &pool);
+    assert_eq!(images.shape(), &[4, 1, 28, 28]);
+    assert_eq!(stats.len(), net.layers.len());
+    // tanh range (up to one quantization step over)
+    assert!(images.data().iter().all(|v| v.abs() <= 1.001));
+    // close to the f32 path on a fine format
+    let psnr = psnr_db(&reference, &images, 2.0);
+    assert!(psnr > 10.0, "q4.12 end-to-end PSNR too low: {psnr:.1} dB");
+    // deterministic at any pool width (bit-identical parallel kernel)
+    let (serial, _) = gen.generate(&net, &z, &WorkerPool::new(1));
+    assert_eq!(serial.data(), images.data(), "pool width must not matter");
+}
+
+#[test]
+fn quantized_weights_roundtrip_through_artifacts() {
+    let dir = TempDir::new().unwrap();
+    let artifacts = write_synthetic(dir.path(), &["mnist"], 2, 9).unwrap();
+    let weights = artifacts.load_weights("mnist").unwrap();
+    let fmt = QFormat::new(16, 8);
+    let gen =
+        QuantizedGenerator::quantize(fmt, &weights, Rounding::Nearest).unwrap();
+    export_quantized(dir.path(), "mnist", &gen).unwrap();
+
+    let (got_fmt, raw) = artifacts.load_quantized("mnist").unwrap();
+    assert_eq!(got_fmt, fmt);
+    let back = QuantizedGenerator::from_raw(got_fmt, &raw).unwrap();
+    // bit-exact generation after the disk roundtrip
+    let net = network_by_name("mnist").unwrap();
+    let mut rng = Rng::seed_from_u64(5);
+    let z = Tensor::from_fn(vec![2, net.z_dim], |_| rng.normal_f32());
+    let pool = WorkerPool::new(2);
+    let (a, _) = gen.generate(&net, &z, &pool);
+    let (b, _) = back.generate(&net, &z, &pool);
+    assert_eq!(a.data(), b.data());
+}
+
+#[test]
+fn quant_error_sweep_psnr_improves_with_fraction_bits() {
+    let dir = TempDir::new().unwrap();
+    let artifacts = write_synthetic(dir.path(), &["mnist"], 8, 41).unwrap();
+    let formats = vec![
+        QFormat::new(16, 4),
+        QFormat::new(16, 8),
+        QFormat::new(16, 12),
+        QFormat::new(32, 16),
+    ];
+    let data: QuantErrorData =
+        run_quant_error("mnist", &PYNQ_Z2, &artifacts, &formats, 8, 3).unwrap();
+    assert_eq!(data.points.len(), 4);
+    let p4 = data.points[0].psnr_db;
+    let p12 = data.points[2].psnr_db;
+    let p16 = data.points[3].psnr_db;
+    assert!(p12 > p4, "more fraction bits must help: {p4:.1} vs {p12:.1}");
+    assert!(p16 >= p12, "q16.16 at least as good: {p12:.1} vs {p16:.1}");
+    // 16-bit datapaths simulate faster than f32; 32-bit ties f32 widths
+    assert!(data.points[1].fpga_time_s < data.f32_time_s);
+    assert!(data.points[1].fpga_gops_per_w > data.f32_gops_per_w);
+}
+
+#[test]
+fn fpga_simulator_models_the_quantized_network_datapath() {
+    let net = network_by_name("mnist").unwrap();
+    let f32_opts: Vec<SimOpts> =
+        net.layers.iter().map(|_| SimOpts::dense(net.tile)).collect();
+    let q_opts: Vec<SimOpts> = net
+        .layers
+        .iter()
+        .map(|_| {
+            SimOpts::dense_at(
+                net.tile,
+                Precision::Fixed(QFormat::new(16, 8)),
+            )
+        })
+        .collect();
+    let f = simulate_network(&net, &PYNQ_Z2, &f32_opts);
+    let q = simulate_network(&net, &PYNQ_Z2, &q_opts);
+    assert_eq!(q.total_ops, f.total_ops, "workload is precision-independent");
+    assert!(q.total_time_s < f.total_time_s, "q8.8 must be faster");
+    assert!(q.gops_per_w > f.gops_per_w, "and more efficient per watt");
+}
+
+fn quant_coordinator(dir: &TempDir, shard: bool, executors: usize) -> Coordinator {
+    Coordinator::start(CoordinatorConfig {
+        artifacts_dir: dir.path().to_path_buf(),
+        networks: vec!["mnist".to_string()],
+        batcher: BatcherConfig {
+            max_batch: 4,
+            max_wait: Duration::from_millis(2),
+        },
+        executors,
+        quant: Some(QFormat::new(16, 10)),
+        shard_batches: shard,
+    })
+    .expect("coordinator startup")
+}
+
+#[test]
+fn coordinator_serves_quantized_twin_side_by_side() {
+    let dir = TempDir::new().unwrap();
+    write_synthetic(dir.path(), &["mnist"], 4, 77).expect("synthetic set");
+    let coord = quant_coordinator(&dir, false, 2);
+    // f32 and quantized twins answer concurrently
+    let hf = coord.submit("mnist", 2, 4242).unwrap();
+    let hq = coord.submit("mnist.q", 2, 4242).unwrap();
+    let f = hf.wait().unwrap();
+    let q = hq.wait().unwrap();
+    assert_eq!(f.images.shape(), &[2, 1, 28, 28]);
+    assert_eq!(q.images.shape(), &[2, 1, 28, 28]);
+    // same seed, same latents: the twins must agree closely (q6.10)
+    let err = f.images.max_abs_diff(&q.images);
+    assert!(err < 0.25, "quantized twin diverged: max|err|={err}");
+    assert!(err > 0.0, "twins must not be literally identical");
+    // quantized twin is annotated with the faster fixed-point datapath
+    assert!(q.fpga_time_s < f.fpga_time_s, "q twin must simulate faster");
+    // deterministic across repeats
+    let q2 = coord.submit_blocking("mnist.q", 2, 4242).unwrap();
+    assert_eq!(q.images.data(), q2.images.data());
+}
+
+#[test]
+fn sharded_dispatch_preserves_per_request_images() {
+    let dir = TempDir::new().unwrap();
+    write_synthetic(dir.path(), &["mnist"], 4, 13).expect("synthetic set");
+    // same synthetic set served by an unsharded and a sharded pool
+    let plain = quant_coordinator(&dir, false, 2);
+    let sharded = quant_coordinator(&dir, true, 3);
+
+    for network in ["mnist", "mnist.q"] {
+        // a burst that batches together, then shards across executors
+        let hp: Vec<_> = (0..6)
+            .map(|i| plain.submit(network, 1, 9000 + i).unwrap())
+            .collect();
+        let hs: Vec<_> = (0..6)
+            .map(|i| sharded.submit(network, 1, 9000 + i).unwrap())
+            .collect();
+        let rp: Vec<_> = hp.into_iter().map(|h| h.wait().unwrap()).collect();
+        let rs: Vec<_> = hs.into_iter().map(|h| h.wait().unwrap()).collect();
+        for (a, b) in rp.iter().zip(&rs) {
+            assert_eq!(
+                a.images.data(),
+                b.images.data(),
+                "{network}: sharding must not change request numerics"
+            );
+        }
+    }
+    // the sharded workload path still reports consistently
+    let report = sharded
+        .serve_workload(&WorkloadSpec {
+            network: "mnist".into(),
+            requests: 8,
+            images_per_request: 1,
+            interarrival: Duration::ZERO,
+            seed: 2,
+        })
+        .unwrap();
+    assert_eq!(report.requests, 8);
+    assert_eq!(report.images, 8);
+    assert!(report.images_per_s > 0.0);
+}

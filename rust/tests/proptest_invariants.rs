@@ -11,8 +11,11 @@ use edgedcnn::deconv::{
     deconv_reverse_loop, deconv_reverse_loop_par, deconv_standard,
     input_tile_extent, stride_hole_offsets, ReverseLoopOpts,
 };
+use edgedcnn::quant::{
+    quantize_tensor, Element, Fixed, Q4_12, Q8_8, Rounding,
+};
 use edgedcnn::sparsity::{magnitude_prune, mmd_biased, Mmd};
-use edgedcnn::tensor::{read_npy_f32, write_npy_f32, Tensor};
+use edgedcnn::tensor::{read_npy_f32, write_npy_f32, Tensor, TensorT};
 use edgedcnn::util::{parse_json, Rng, TempDir, WorkerPool};
 use std::time::{Duration, Instant};
 
@@ -108,6 +111,82 @@ fn prop_parallel_reverse_loop_bit_identical_to_serial() {
              workers {workers}"
         );
         assert_eq!(ss, sp, "case {case}: OpStats must merge exactly");
+    }
+}
+
+#[test]
+fn prop_quantize_dequantize_error_bounded_by_step() {
+    // |x - deq(quant(x))| ≤ 2^-F for every in-range input, at both a
+    // coarse and a fine i16 format (nearest rounding actually achieves
+    // 2^-(F+1); the asserted contract is the looser paper-level bound)
+    let mut rng = Rng::seed_from_u64(0x0F1C);
+    for case in 0..CASES {
+        // stay inside the representable range so saturation (a scale
+        // concern, handled by calibration) doesn't enter the bound
+        let v8 = rng.range_f32(-100.0, 100.0);
+        let q8 = Q8_8::from_f32(v8);
+        assert!(
+            (q8.to_f32() - v8).abs() <= 1.0 / 256.0 + 1e-6,
+            "case {case}: Q8.8 v={v8} deq={}",
+            q8.to_f32()
+        );
+        let v12 = rng.range_f32(-7.0, 7.0);
+        let q12 = Q4_12::from_f32(v12);
+        assert!(
+            (q12.to_f32() - v12).abs() <= 1.0 / 4096.0 + 1e-6,
+            "case {case}: Q4.12 v={v12} deq={}",
+            q12.to_f32()
+        );
+        // truncation stays within one full step too
+        let t = Fixed::<i16, 8>::from_f32_round(v8, Rounding::Truncate);
+        assert!((t.to_f32() - v8).abs() < 1.0 / 256.0 + 1e-6);
+    }
+}
+
+#[test]
+fn prop_quantized_reverse_loop_bit_exact_vs_standard() {
+    // the fixed-point twin of `prop_reverse_loop_equals_standard`, with
+    // the tolerance tightened to *bit-for-bit equality*: the wide-
+    // accumulator design makes the two loop orders produce identical
+    // storage words, for random geometry, tiles, sparsity and pools
+    let mut rng = Rng::seed_from_u64(0x0F2D);
+    for case in 0..CASES / 2 {
+        let (c_in, c_out, k, s, p, i_h) = random_geometry(&mut rng);
+        let tile = rng.range_usize(1, 12);
+        let xf = Tensor::from_fn(vec![1, c_in, i_h, i_h], |_| {
+            rng.range_f32(-1.0, 1.0)
+        });
+        let mut wf = Tensor::from_fn(vec![c_in, c_out, k, k], |_| {
+            rng.range_f32(-1.0, 1.0)
+        });
+        for v in wf.data_mut().iter_mut() {
+            if rng.gen_bool(0.3) {
+                *v = 0.0; // exact zeros → quantize to exact zeros
+            }
+        }
+        let x: TensorT<Q8_8> = quantize_tensor::<i16, 8>(&xf, Rounding::Nearest);
+        let w: TensorT<Q8_8> = quantize_tensor::<i16, 8>(&wf, Rounding::Nearest);
+        let b: Vec<Q8_8> = (0..c_out)
+            .map(|_| Q8_8::from_f32(rng.range_f32(-0.5, 0.5)))
+            .collect();
+        let want = deconv_standard(&x, &w, &b, s, p);
+        let opts = ReverseLoopOpts {
+            tile,
+            zero_skip: rng.gen_bool(0.5),
+        };
+        let (got, stats) = deconv_reverse_loop(&x, &w, &b, s, p, opts);
+        assert_eq!(
+            got.data(),
+            want.data(),
+            "case {case}: ({c_in},{c_out},{k},{s},{p},{i_h}) tile {tile}"
+        );
+        // 2-byte one-shot writes
+        assert_eq!(stats.ext_write_bytes, 2 * want.numel() as u64);
+        // and the parallel path stays exact on the quantized tensors
+        let pool = WorkerPool::new(rng.range_usize(2, 7));
+        let (par, sp) = deconv_reverse_loop_par(&x, &w, &b, s, p, opts, &pool);
+        assert_eq!(par.data(), got.data(), "case {case}: parallel quantized");
+        assert_eq!(sp, stats, "case {case}: OpStats must merge exactly");
     }
 }
 

@@ -1,11 +1,13 @@
 //! End-to-end edge serving (DESIGN.md experiment E9).
 //!
 //! Starts the full coordinator stack — leader thread (intake + dynamic
-//! batching into AOT batch buckets) and device thread (PJRT CPU executor
-//! carrying the trained WGAN-GP weights) — then drives an open-loop
-//! request workload against both benchmark networks and reports
-//! latency/throughput/GOps/s/W plus the per-request edge-device
-//! annotations (simulated PYNQ-Z2 / Jetson TX1 time for the same work).
+//! batching into AOT batch buckets) and a **heterogeneous backend pool**
+//! (one FIFO lane each for the simulated PYNQ-Z2 datapath, the Jetson
+//! TX1 thermal model, and the host CPU numeric path; batches route to
+//! the cheapest idle capable device) — then drives an open-loop request
+//! workload against both benchmark networks and reports
+//! latency/throughput/GOps/s/W with per-backend columns, plus the
+//! per-request edge-device annotations.
 //!
 //! Run: `cargo run --release --example edge_serving`
 
@@ -24,9 +26,10 @@ fn main() -> anyhow::Result<()> {
             max_batch: 8,
             max_wait: Duration::from_millis(4),
         },
-        executors: 0, // auto: one executor thread per network
+        // default backend pool: fpga0 + gpu0 + cpu0
         ..Default::default()
     })?;
+    println!("backend pool: {}", coord.backend_names().join(", "));
 
     // single-request sanity: deterministic per seed, annotated
     let a = coord.submit_blocking("mnist", 2, 1234)?;
@@ -34,11 +37,15 @@ fn main() -> anyhow::Result<()> {
     assert_eq!(
         a.images.data(),
         b.images.data(),
-        "same seed must reproduce the same images"
+        "same seed must reproduce the same images (whichever backend \
+         served each request)"
     );
     println!(
-        "sanity: 2 mnist images in {:.2} ms (PJRT) — same work on edge \
-         devices: FPGA {:.2} ms, TX1 GPU {:.2} ms",
+        "sanity: 2 mnist images served by {} in {:.2} ms device time \
+         (host {:.2} ms) — same work annotated: FPGA {:.2} ms, TX1 GPU \
+         {:.2} ms",
+        a.backend,
+        a.device_time_s * 1e3,
         a.execute_s * 1e3,
         a.fpga_time_s * 1e3,
         a.gpu_time_s * 1e3

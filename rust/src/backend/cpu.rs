@@ -1,0 +1,190 @@
+//! The host as a schedulable backend: the real numeric path.  f32
+//! networks execute through the [`Runtime`]'s AOT batch buckets (PJRT
+//! when the feature is on, the reverse-loop substrate otherwise),
+//! `.q` twins through the calibrated [`QuantizedGenerator`].  Unlike the
+//! simulator backends its latency is *measured*, so the cost model the
+//! scheduler routes on is seeded from a timed probe forward at load.
+
+use super::{
+    Backend, Capabilities, CostModel, DeviceState, ExecutionOutcome, NetSpec,
+};
+use crate::artifacts::ArtifactDir;
+use crate::config::{DeviceKind, NetworkCfg, Precision};
+use crate::quant::{QuantizedGenerator, Rounding};
+use crate::runtime::{GeneratorExecutable, Runtime};
+use crate::tensor::Tensor;
+use crate::util::WorkerPool;
+use anyhow::Result;
+use std::collections::HashMap;
+use std::time::Instant;
+
+/// Nominal host CPU package power while serving, watts — the energy
+/// column needs *some* denominator for the host path; an edge-class
+/// x86/ARM host under vectorized load sits around this figure.  The
+/// paper's energy comparisons are FPGA-vs-GPU; this constant only keeps
+/// the CPU column honest about being the power-hungriest option.
+const HOST_POWER_W: f64 = 12.0;
+
+struct CpuNet {
+    cfg: NetworkCfg,
+    buckets: Vec<usize>,
+    /// f32 executables keyed by batch bucket (empty for `.q`).
+    executables: HashMap<usize, GeneratorExecutable>,
+    weights: Vec<(Tensor, Vec<f32>)>,
+    quant: Option<QuantizedGenerator>,
+    /// Measured at load: one timed probe forward.
+    cost: CostModel,
+}
+
+/// [`crate::runtime`] wrapped as a [`Backend`].
+pub struct CpuBackend {
+    name: String,
+    caps: Capabilities,
+    runtime: Runtime,
+    pool: WorkerPool,
+    nets: HashMap<String, CpuNet>,
+}
+
+impl CpuBackend {
+    pub fn new(name: String, pool: WorkerPool) -> Result<Self> {
+        Ok(CpuBackend {
+            name,
+            caps: Capabilities::of_kind(DeviceKind::Cpu),
+            runtime: Runtime::cpu_with_workers(pool.workers())?,
+            pool,
+            nets: HashMap::new(),
+        })
+    }
+
+    /// Bucketed f32 execution: smallest exported bucket ≥ remaining,
+    /// else the largest repeatedly (vLLM-style bucketed batching),
+    /// padding partial buckets with zero latents.
+    fn execute_f32(&self, net: &CpuNet, z: &Tensor) -> Result<Tensor> {
+        let n = z.shape()[0];
+        let zd = net.cfg.z_dim;
+        let largest = *net.buckets.iter().max().expect("load checked buckets");
+        let numel =
+            net.cfg.image_channels * net.cfg.image_size * net.cfg.image_size;
+        let mut rows: Vec<f32> = Vec::with_capacity(n * numel);
+        let mut remaining = n;
+        let mut offset = 0usize;
+        while remaining > 0 {
+            let bucket = net
+                .buckets
+                .iter()
+                .copied()
+                .filter(|b| *b >= remaining)
+                .min()
+                .unwrap_or(largest);
+            let take = bucket.min(remaining);
+            let exe = net.executables.get(&bucket).unwrap();
+            let mut zb = vec![0.0f32; bucket * zd];
+            zb[..take * zd]
+                .copy_from_slice(&z.data()[offset * zd..(offset + take) * zd]);
+            let zt = Tensor::new(vec![bucket, zd], zb)?;
+            let out = exe.generate(&zt, &net.weights)?;
+            rows.extend_from_slice(&out.data()[..take * numel]);
+            remaining -= take;
+            offset += take;
+        }
+        Tensor::new(
+            vec![
+                n,
+                net.cfg.image_channels,
+                net.cfg.image_size,
+                net.cfg.image_size,
+            ],
+            rows,
+        )
+    }
+
+    fn forward(&self, net: &CpuNet, z: &Tensor) -> Result<Tensor> {
+        match &net.quant {
+            Some(qgen) => Ok(qgen.generate(&net.cfg, z, &self.pool).0),
+            None => self.execute_f32(net, z),
+        }
+    }
+}
+
+impl Backend for CpuBackend {
+    fn kind(&self) -> DeviceKind {
+        DeviceKind::Cpu
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn capabilities(&self) -> &Capabilities {
+        &self.caps
+    }
+
+    fn load(&mut self, spec: &NetSpec, artifacts: &ArtifactDir) -> Result<()> {
+        let mut net = match spec.precision {
+            Precision::Fixed(fmt) => CpuNet {
+                cfg: spec.cfg.clone(),
+                buckets: Vec::new(),
+                executables: HashMap::new(),
+                weights: Vec::new(),
+                quant: Some(QuantizedGenerator::quantize(
+                    fmt,
+                    &spec.weights,
+                    Rounding::Nearest,
+                )?),
+                cost: CostModel::linear(0.0),
+            },
+            Precision::F32 => {
+                anyhow::ensure!(
+                    !spec.buckets.is_empty(),
+                    "{}: network {:?} exports no batch buckets",
+                    self.name,
+                    spec.name
+                );
+                let mut executables = HashMap::new();
+                for &bs in &spec.buckets {
+                    executables.insert(
+                        bs,
+                        self.runtime.load_generator(artifacts, &spec.base, bs)?,
+                    );
+                }
+                CpuNet {
+                    cfg: spec.cfg.clone(),
+                    buckets: spec.buckets.clone(),
+                    executables,
+                    weights: spec.weights.clone(),
+                    quant: None,
+                    cost: CostModel::linear(0.0),
+                }
+            }
+        };
+        // measured cost seed: one timed batch-1 probe (startup only)
+        let z = Tensor::new(vec![1, net.cfg.z_dim], vec![0.0; net.cfg.z_dim])?;
+        let t0 = Instant::now();
+        self.forward(&net, &z)?;
+        net.cost = CostModel::linear(t0.elapsed().as_secs_f64().max(1e-9));
+        self.nets.insert(spec.name.clone(), net);
+        Ok(())
+    }
+
+    fn cost_model(&self, network: &str) -> Option<CostModel> {
+        self.nets.get(network).map(|n| n.cost)
+    }
+
+    fn execute(&mut self, network: &str, z: &Tensor) -> Result<ExecutionOutcome> {
+        let net = self.nets.get(network).ok_or_else(|| {
+            anyhow::anyhow!("{}: network {network:?} not loaded", self.name)
+        })?;
+        let n = z.shape()[0];
+        let t0 = Instant::now();
+        let images = self.forward(net, z)?;
+        let execute_s = t0.elapsed().as_secs_f64();
+        Ok(ExecutionOutcome {
+            images,
+            execute_s,
+            device_time_s: execute_s,
+            energy_j: HOST_POWER_W * execute_s,
+            ops: net.cfg.total_ops() * n as u64,
+            state: DeviceState::default(),
+        })
+    }
+}

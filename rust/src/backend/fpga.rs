@@ -1,0 +1,204 @@
+//! The PYNQ-Z2 accelerator as a schedulable backend: numerics through
+//! the shared reverse-loop substrate (f32 or the calibrated fixed-point
+//! twin), timing/energy from the cycle-level pipeline simulator at the
+//! network's served datapath precision.  The accelerator has no dynamic
+//! device state (no DVFS, no thermal governor — the paper's Section V
+//! point about FPGA run-to-run stability), so its cost model is a pure
+//! per-image linear ramp computed once at load.
+
+use super::{
+    Backend, Capabilities, CostModel, DeviceState, ExecutionOutcome, NetSpec,
+};
+use crate::artifacts::ArtifactDir;
+use crate::config::{DeviceKind, NetworkCfg, Precision, PYNQ_Z2};
+use crate::deconv::generator_forward_par;
+use crate::fpga::{simulate_network, NetworkSim, SimOpts};
+use crate::quant::{QuantizedGenerator, Rounding};
+use crate::tensor::Tensor;
+use crate::util::WorkerPool;
+use anyhow::Result;
+use std::collections::HashMap;
+use std::time::Instant;
+
+/// Dense accelerator simulation of a network at its *effective*
+/// datapath precision: f32-served networks time at the manifest's
+/// declared precision, fixed-point twins at their Qm.n format.  The
+/// fallback rule lives here once — shared by [`FpgaSimBackend::load`]
+/// and the coordinator executor's per-response FPGA annotation.
+pub fn dense_network_sim(cfg: &NetworkCfg, served: Precision) -> NetworkSim {
+    let sim_precision = match served {
+        Precision::F32 => cfg.precision,
+        p => p,
+    };
+    let opts: Vec<SimOpts> = cfg
+        .layers
+        .iter()
+        .map(|_| SimOpts::dense_at(cfg.tile, sim_precision))
+        .collect();
+    simulate_network(cfg, &PYNQ_Z2, &opts)
+}
+
+struct FpgaNet {
+    cfg: NetworkCfg,
+    weights: Vec<(Tensor, Vec<f32>)>,
+    /// Fixed-point twin (serving precision `Fixed(..)`), calibrated at
+    /// load from the f32 weights.
+    quant: Option<QuantizedGenerator>,
+    /// Simulated dense per-image latency/energy at the served precision.
+    per_image_s: f64,
+    per_image_j: f64,
+}
+
+/// [`crate::fpga`] wrapped as a [`Backend`].
+pub struct FpgaSimBackend {
+    name: String,
+    caps: Capabilities,
+    pool: WorkerPool,
+    nets: HashMap<String, FpgaNet>,
+}
+
+impl FpgaSimBackend {
+    pub fn new(name: String, pool: WorkerPool) -> Self {
+        FpgaSimBackend {
+            name,
+            caps: Capabilities::of_kind(DeviceKind::Fpga),
+            pool,
+            nets: HashMap::new(),
+        }
+    }
+}
+
+impl Backend for FpgaSimBackend {
+    fn kind(&self) -> DeviceKind {
+        DeviceKind::Fpga
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn capabilities(&self) -> &Capabilities {
+        &self.caps
+    }
+
+    fn load(&mut self, spec: &NetSpec, _artifacts: &ArtifactDir) -> Result<()> {
+        let quant = match spec.precision {
+            Precision::F32 => None,
+            Precision::Fixed(fmt) => Some(QuantizedGenerator::quantize(
+                fmt,
+                &spec.weights,
+                Rounding::Nearest,
+            )?),
+        };
+        let sim = dense_network_sim(&spec.cfg, spec.precision);
+        self.nets.insert(
+            spec.name.clone(),
+            FpgaNet {
+                cfg: spec.cfg.clone(),
+                weights: spec.weights.clone(),
+                quant,
+                per_image_s: sim.total_time_s,
+                per_image_j: sim.total_time_s * sim.mean_power_w,
+            },
+        );
+        Ok(())
+    }
+
+    fn cost_model(&self, network: &str) -> Option<CostModel> {
+        self.nets
+            .get(network)
+            .map(|n| CostModel::linear(n.per_image_s))
+    }
+
+    fn execute(&mut self, network: &str, z: &Tensor) -> Result<ExecutionOutcome> {
+        let net = self.nets.get(network).ok_or_else(|| {
+            anyhow::anyhow!("{}: network {network:?} not loaded", self.name)
+        })?;
+        let n = z.shape()[0];
+        let t0 = Instant::now();
+        let images = match &net.quant {
+            Some(qgen) => qgen.generate(&net.cfg, z, &self.pool).0,
+            None => generator_forward_par(&net.cfg, &net.weights, z, &self.pool),
+        };
+        let execute_s = t0.elapsed().as_secs_f64();
+        Ok(ExecutionOutcome {
+            images,
+            execute_s,
+            device_time_s: net.per_image_s * n as f64,
+            energy_j: net.per_image_j * n as f64,
+            ops: net.cfg.total_ops() * n as u64,
+            state: DeviceState {
+                temp_c: 0.0,
+                clock_hz: PYNQ_Z2.clock_hz,
+                throttled: false,
+            },
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::artifacts::write_synthetic;
+    use crate::backend::NetSpec;
+    use crate::config::{network_by_name, QFormat};
+    use crate::util::{Rng, TempDir};
+
+    fn spec_at(precision: Precision) -> NetSpec {
+        let cfg = network_by_name("mnist").unwrap();
+        let mut rng = Rng::seed_from_u64(7);
+        let weights = cfg
+            .layers
+            .iter()
+            .map(|l| {
+                (
+                    Tensor::from_fn(vec![l.c_in, l.c_out, l.k, l.k], |_| {
+                        0.05 * rng.normal_f32()
+                    }),
+                    vec![0.0; l.c_out],
+                )
+            })
+            .collect();
+        NetSpec {
+            name: match precision {
+                Precision::F32 => "mnist".into(),
+                _ => "mnist.q".into(),
+            },
+            base: "mnist".into(),
+            precision,
+            weights,
+            buckets: vec![1, 4],
+            cfg,
+        }
+    }
+
+    #[test]
+    fn quant_twin_times_at_the_narrower_datapath() {
+        let dir = TempDir::new().unwrap();
+        let artifacts = write_synthetic(dir.path(), &["mnist"], 2, 9).unwrap();
+        let mut be = FpgaSimBackend::new("fpga0".into(), WorkerPool::new(1));
+        be.load(&spec_at(Precision::F32), &artifacts).unwrap();
+        be.load(
+            &spec_at(Precision::Fixed(QFormat::new(16, 8))),
+            &artifacts,
+        )
+        .unwrap();
+        let f32_cost = be.cost_model("mnist").unwrap();
+        let q_cost = be.cost_model("mnist.q").unwrap();
+        assert!(
+            q_cost.c1_s < f32_cost.c1_s,
+            "q8.8 datapath must simulate faster than f32"
+        );
+        let z = Tensor::from_fn(vec![1, 100], |i| (i as f32 * 0.02).cos());
+        let f = be.execute("mnist", &z).unwrap();
+        let q = be.execute("mnist.q", &z).unwrap();
+        assert_eq!(f.images.shape(), q.images.shape());
+        assert!(q.device_time_s < f.device_time_s);
+        assert!(!f.state.throttled, "no thermal governor on the FPGA");
+        assert_eq!(f.state.clock_hz, PYNQ_Z2.clock_hz);
+        // device accounting scales linearly with the batch
+        let z2 = Tensor::from_fn(vec![2, 100], |i| (i as f32 * 0.02).cos());
+        let f2 = be.execute("mnist", &z2).unwrap();
+        assert!((f2.device_time_s - 2.0 * f.device_time_s).abs() < 1e-12);
+    }
+}

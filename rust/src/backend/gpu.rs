@@ -1,0 +1,187 @@
+//! The Jetson TX1 as a schedulable backend: numerics through the shared
+//! reverse-loop substrate (f32 only — the paper's cuDNN baseline has no
+//! fixed-point datapath), timing/energy from the analytical kernel model
+//! with the [`ThermalThrottle`] as **owned device state**.  This is the
+//! refactor the old executor loop could not express: the throttle used
+//! to be executor-local ad hoc state shared by whatever networks landed
+//! on that thread; now it is the GPU device itself — back-to-back
+//! batches heat the die, and a later batch (any network) sees the
+//! stepped-down clock, exactly the run-to-run variance mechanism the
+//! paper attributes to DVFS.
+
+use super::{
+    Backend, Capabilities, CostModel, DeviceState, ExecutionOutcome, NetSpec,
+};
+use crate::artifacts::ArtifactDir;
+use crate::config::{DeviceKind, NetworkCfg, JETSON_TX1};
+use crate::deconv::generator_forward_par;
+use crate::gpu::{
+    expected_gpu_network_run, expected_gpu_network_time_at, ThermalThrottle,
+};
+use crate::tensor::Tensor;
+use crate::util::WorkerPool;
+use anyhow::Result;
+use std::collections::HashMap;
+use std::time::Instant;
+
+struct GpuNet {
+    cfg: NetworkCfg,
+    weights: Vec<(Tensor, Vec<f32>)>,
+}
+
+/// [`crate::gpu`] wrapped as a [`Backend`], owning the thermal state.
+pub struct GpuModelBackend {
+    name: String,
+    caps: Capabilities,
+    pool: WorkerPool,
+    nets: HashMap<String, GpuNet>,
+    /// The device: DVFS/thermal state advanced per executed batch.
+    throttle: ThermalThrottle,
+}
+
+impl GpuModelBackend {
+    pub fn new(name: String, pool: WorkerPool) -> Self {
+        GpuModelBackend {
+            name,
+            caps: Capabilities::of_kind(DeviceKind::Gpu),
+            pool,
+            nets: HashMap::new(),
+            throttle: ThermalThrottle::new(JETSON_TX1),
+        }
+    }
+}
+
+impl Backend for GpuModelBackend {
+    fn kind(&self) -> DeviceKind {
+        DeviceKind::Gpu
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn capabilities(&self) -> &Capabilities {
+        &self.caps
+    }
+
+    fn load(&mut self, spec: &NetSpec, _artifacts: &ArtifactDir) -> Result<()> {
+        anyhow::ensure!(
+            self.caps.supports(spec.precision),
+            "{}: precision {} not supported (f32-only datapath)",
+            self.name,
+            spec.precision
+        );
+        self.nets.insert(
+            spec.name.clone(),
+            GpuNet {
+                cfg: spec.cfg.clone(),
+                weights: spec.weights.clone(),
+            },
+        );
+        Ok(())
+    }
+
+    fn cost_model(&self, network: &str) -> Option<CostModel> {
+        // boost-clock estimate: the scheduler's probe must not depend on
+        // (or advance) the live thermal state
+        let net = self.nets.get(network)?;
+        let clock = JETSON_TX1.boost_clock_hz;
+        Some(CostModel {
+            c1_s: expected_gpu_network_time_at(&net.cfg, &JETSON_TX1, clock, 1),
+            c8_s: expected_gpu_network_time_at(&net.cfg, &JETSON_TX1, clock, 8),
+        })
+    }
+
+    fn execute(&mut self, network: &str, z: &Tensor) -> Result<ExecutionOutcome> {
+        let net = self.nets.get(network).ok_or_else(|| {
+            anyhow::anyhow!("{}: network {network:?} not loaded", self.name)
+        })?;
+        let n = z.shape()[0];
+        let t0 = Instant::now();
+        let images = generator_forward_par(&net.cfg, &net.weights, z, &self.pool);
+        let execute_s = t0.elapsed().as_secs_f64();
+        // the device accounting: advance the thermal state by this batch
+        let (device_time_s, energy_j) =
+            expected_gpu_network_run(&net.cfg, &JETSON_TX1, &mut self.throttle, n);
+        Ok(ExecutionOutcome {
+            images,
+            execute_s,
+            device_time_s,
+            energy_j,
+            ops: net.cfg.total_ops() * n as u64,
+            state: DeviceState {
+                temp_c: self.throttle.temp_c,
+                clock_hz: self.throttle.clock_hz,
+                throttled: self.throttle.throttled(),
+            },
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::artifacts::write_synthetic;
+    use crate::backend::NetSpec;
+    use crate::config::{network_by_name, Precision, QFormat};
+    use crate::util::{Rng, TempDir};
+
+    fn mnist_spec() -> NetSpec {
+        let cfg = network_by_name("mnist").unwrap();
+        let mut rng = Rng::seed_from_u64(3);
+        let weights = cfg
+            .layers
+            .iter()
+            .map(|l| {
+                (
+                    Tensor::from_fn(vec![l.c_in, l.c_out, l.k, l.k], |_| {
+                        0.05 * rng.normal_f32()
+                    }),
+                    vec![0.0; l.c_out],
+                )
+            })
+            .collect();
+        NetSpec {
+            name: "mnist".into(),
+            base: "mnist".into(),
+            precision: Precision::F32,
+            weights,
+            buckets: vec![1, 4],
+            cfg,
+        }
+    }
+
+    #[test]
+    fn owned_thermal_state_evolves_across_batches() {
+        let dir = TempDir::new().unwrap();
+        let artifacts = write_synthetic(dir.path(), &["mnist"], 2, 5).unwrap();
+        let mut be =
+            GpuModelBackend::new("gpu0".into(), WorkerPool::new(1));
+        be.load(&mnist_spec(), &artifacts).unwrap();
+        // the cost probe must not heat the die
+        let cost = be.cost_model("mnist").unwrap();
+        assert!(cost.c1_s > 0.0 && cost.c8_s > cost.c1_s);
+        assert_eq!(be.throttle.temp_c, 0.0, "probe touched thermal state");
+        let z = Tensor::from_fn(vec![2, 100], |i| (i as f32 * 0.01).sin());
+        let a = be.execute("mnist", &z).unwrap();
+        let b = be.execute("mnist", &z).unwrap();
+        assert_eq!(a.images.data(), b.images.data(), "numerics are stateless");
+        assert!(a.device_time_s > 0.0 && a.energy_j > 0.0);
+        assert!(
+            b.state.temp_c > 0.0,
+            "back-to-back batches must heat the owned die"
+        );
+        assert!(a.state.clock_hz > 0.0);
+    }
+
+    #[test]
+    fn fixed_point_networks_are_rejected() {
+        let mut be =
+            GpuModelBackend::new("gpu0".into(), WorkerPool::new(1));
+        let dir = TempDir::new().unwrap();
+        let artifacts = write_synthetic(dir.path(), &["mnist"], 2, 5).unwrap();
+        let mut spec = mnist_spec();
+        spec.precision = Precision::Fixed(QFormat::new(16, 8));
+        assert!(be.load(&spec, &artifacts).is_err(), "f32-only datapath");
+    }
+}

@@ -1,0 +1,251 @@
+//! Pluggable device backends — the abstraction that turns the paper's
+//! FPGA-vs-GPU comparison into a *live scheduling decision*.
+//!
+//! A [`Backend`] is a schedulable device: it declares what it can serve
+//! ([`Capabilities`] — supported datapath precisions and its native
+//! batch bucket), how much a `(network, batch)` would cost
+//! ([`CostModel`], consumed by the scheduler's capability- and
+//! cost-aware routing), and executes batches
+//! ([`Backend::execute`] → [`ExecutionOutcome`] carrying outputs,
+//! simulated device latency, energy, and the device-state delta).
+//!
+//! Three implementations, refactored out of the old monolithic
+//! coordinator executor loop:
+//!
+//! * [`FpgaSimBackend`] — the PYNQ-Z2 datapath via
+//!   [`crate::fpga::simulate_network`]; stateless timing, f32 or
+//!   fixed-point.
+//! * [`GpuModelBackend`] — the Jetson TX1 analytical model; the
+//!   [`crate::gpu::ThermalThrottle`] is **owned device state** (batches
+//!   heat the die, later batches see the throttled clock), and the
+//!   datapath is f32-only (the paper's cuDNN baseline).
+//! * [`CpuBackend`] — the host numeric path ([`crate::runtime::Runtime`]
+//!   bucketed f32 executables, [`crate::quant::QuantizedGenerator`] for
+//!   `.q` twins); its cost model is *measured* at load time.
+//!
+//! Every backend produces **bit-identical f32 images** for the same
+//! latents: numerics always run through the shared reverse-loop
+//! substrate, only the timing/energy/state model differs.  That is the
+//! invariant that lets the scheduler route a batch to whichever device
+//! is cheapest without changing what the client sees (asserted by
+//! `tests/integration_backends.rs`).
+
+mod cpu;
+mod fpga;
+mod gpu;
+
+pub use cpu::CpuBackend;
+pub use fpga::{dense_network_sim, FpgaSimBackend};
+pub use gpu::GpuModelBackend;
+
+use crate::artifacts::ArtifactDir;
+use crate::config::{DeviceKind, NetworkCfg, Precision};
+use crate::quant::supported_formats;
+use crate::tensor::Tensor;
+use crate::util::WorkerPool;
+use anyhow::Result;
+
+/// What a backend can serve: the datapath precisions it implements and
+/// the largest batch it accepts in one scheduling unit.  The scheduler
+/// consults both ([`Capabilities::supports`] at registry build,
+/// [`Capabilities::admits`] per batch) — a batch larger than a lane's
+/// bucket is never routed there, so keep the dynamic batcher's
+/// `max_batch` within every capable lane's bucket.
+#[derive(Debug, Clone)]
+pub struct Capabilities {
+    pub precisions: Vec<Precision>,
+    pub max_batch: usize,
+}
+
+impl Capabilities {
+    /// Does this backend implement the given datapath precision?
+    pub fn supports(&self, p: Precision) -> bool {
+        self.precisions.contains(&p)
+    }
+
+    /// Can this backend take a batch of `n_images` in one go?  (The
+    /// three built-in backends are unbounded — the FPGA/GPU models are
+    /// analytic and the CPU path loops its buckets — but a backend with
+    /// a hard device bucket gates routing here.)
+    pub fn admits(&self, n_images: usize) -> bool {
+        n_images <= self.max_batch
+    }
+
+    /// Static capability table per device class — what the registry
+    /// consults *before* instantiating backends: the FPGA datapath and
+    /// the host path serve f32 and every supported Qm.n format; the GPU
+    /// baseline is f32-only (the paper's cuDNN path has no fixed-point
+    /// datapath).
+    pub fn of_kind(kind: DeviceKind) -> Capabilities {
+        let mut precisions = vec![Precision::F32];
+        if kind != DeviceKind::Gpu {
+            precisions.extend(supported_formats().into_iter().map(Precision::Fixed));
+        }
+        Capabilities {
+            precisions,
+            max_batch: usize::MAX,
+        }
+    }
+}
+
+/// Affine per-network cost model `cost(n) ≈ intercept + slope·n`,
+/// reported by each backend at load time and consumed leader-side by the
+/// scheduler (which cannot call into lane-owned backends).  Two probe
+/// points capture the batch-amortization shape: the GPU's launch
+/// overhead gives it a large intercept, the FPGA is almost purely
+/// linear, the CPU's is measured.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CostModel {
+    /// Estimated device seconds at batch 1.
+    pub c1_s: f64,
+    /// Estimated device seconds at batch 8.
+    pub c8_s: f64,
+}
+
+impl CostModel {
+    pub fn linear(per_image_s: f64) -> Self {
+        CostModel {
+            c1_s: per_image_s,
+            c8_s: 8.0 * per_image_s,
+        }
+    }
+
+    /// Interpolated/extrapolated cost for `n` images (clamped ≥ 0).
+    pub fn cost_s(&self, n: usize) -> f64 {
+        let slope = (self.c8_s - self.c1_s) / 7.0;
+        let intercept = self.c1_s - slope;
+        (intercept + slope * n as f64).max(0.0)
+    }
+}
+
+/// Everything a backend needs to load one logical network: the base
+/// artifact data plus the serving precision (a `.q` twin carries
+/// `Precision::Fixed(..)` and the *f32* weights it calibrates from).
+#[derive(Debug, Clone)]
+pub struct NetSpec {
+    /// Logical serving name (`mnist`, `mnist.q`, …).
+    pub name: String,
+    /// Base artifact name (`.q` stripped).
+    pub base: String,
+    pub cfg: NetworkCfg,
+    /// Datapath precision this logical network is served at.
+    pub precision: Precision,
+    /// f32 weight set (the `.q` path quantizes at load).
+    pub weights: Vec<(Tensor, Vec<f32>)>,
+    /// AOT-exported batch buckets of the base network.
+    pub buckets: Vec<usize>,
+}
+
+/// Device state after a batch — the delta the executor surfaces in
+/// metrics/telemetry.  Static devices report their nominal point.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DeviceState {
+    /// Die temperature above ambient, °C (0 for unmodeled devices).
+    pub temp_c: f64,
+    /// Clock the device ran the batch at, Hz.
+    pub clock_hz: f64,
+    /// Was the device thermally throttled during the batch?
+    pub throttled: bool,
+}
+
+/// One executed batch: the generated images plus the device's account
+/// of the work.
+#[derive(Debug)]
+pub struct ExecutionOutcome {
+    /// Images for the whole batch, `[n, C, H, W]`.
+    pub images: Tensor,
+    /// Host wall time spent in the numeric substrate, seconds.
+    pub execute_s: f64,
+    /// Device latency for the batch (simulated for fpga/gpu, measured
+    /// for cpu), seconds.
+    pub device_time_s: f64,
+    /// Device energy for the batch, joules.
+    pub energy_j: f64,
+    /// Arithmetic operations the batch represents.
+    pub ops: u64,
+    /// Device state after the batch.
+    pub state: DeviceState,
+}
+
+/// A schedulable device: owns its serving state (loaded networks,
+/// thermal state, …) and lives on exactly one executor lane thread —
+/// it is created, used and dropped there, so no `Send`/`Sync` bound is
+/// required (PJRT handles inside [`CpuBackend`] are neither).
+pub trait Backend {
+    fn kind(&self) -> DeviceKind;
+
+    /// Lane name, e.g. `fpga0` (unique within the pool).
+    fn name(&self) -> &str;
+
+    fn capabilities(&self) -> &Capabilities;
+
+    /// Load one logical network; called once per routable network at
+    /// lane startup, never on the request path.
+    fn load(&mut self, spec: &NetSpec, artifacts: &ArtifactDir) -> Result<()>;
+
+    /// The cost model for a loaded network (None if not loaded).
+    fn cost_model(&self, network: &str) -> Option<CostModel>;
+
+    /// Execute one batch: `z` is the `[n, z_dim]` f32 latent block (the
+    /// executor derives it from request seeds, so every backend sees
+    /// identical inputs).
+    fn execute(&mut self, network: &str, z: &Tensor) -> Result<ExecutionOutcome>;
+}
+
+/// Instantiate a backend of the given kind under the given lane name
+/// (the registry is the naming authority — `fpga0`, `cpu1`, …); `pool`
+/// is the lane's share of the host compute budget.
+pub fn instantiate(
+    kind: DeviceKind,
+    name: String,
+    pool: WorkerPool,
+) -> Result<Box<dyn Backend>> {
+    Ok(match kind {
+        DeviceKind::Fpga => Box::new(FpgaSimBackend::new(name, pool)),
+        DeviceKind::Gpu => Box::new(GpuModelBackend::new(name, pool)),
+        DeviceKind::Cpu => Box::new(CpuBackend::new(name, pool)?),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn capability_table_matches_paper_datapaths() {
+        let fpga = Capabilities::of_kind(DeviceKind::Fpga);
+        let gpu = Capabilities::of_kind(DeviceKind::Gpu);
+        let cpu = Capabilities::of_kind(DeviceKind::Cpu);
+        let q88 = Precision::Fixed(crate::quant::QFormat::new(16, 8));
+        assert!(fpga.supports(Precision::F32) && fpga.supports(q88));
+        assert!(cpu.supports(Precision::F32) && cpu.supports(q88));
+        assert!(gpu.supports(Precision::F32));
+        assert!(!gpu.supports(q88), "the cuDNN baseline is f32-only");
+    }
+
+    #[test]
+    fn max_batch_gates_admission() {
+        let caps = Capabilities {
+            precisions: vec![Precision::F32],
+            max_batch: 8,
+        };
+        assert!(caps.admits(8));
+        assert!(!caps.admits(9));
+        // the built-in backends are unbounded
+        assert!(Capabilities::of_kind(DeviceKind::Cpu).admits(usize::MAX));
+    }
+
+    #[test]
+    fn cost_model_interpolates_affine() {
+        // intercept 10ms, slope 1ms/image
+        let m = CostModel {
+            c1_s: 0.011,
+            c8_s: 0.018,
+        };
+        assert!((m.cost_s(1) - 0.011).abs() < 1e-12);
+        assert!((m.cost_s(8) - 0.018).abs() < 1e-12);
+        assert!((m.cost_s(15) - 0.025).abs() < 1e-12, "extrapolates");
+        let lin = CostModel::linear(0.002);
+        assert!((lin.cost_s(5) - 0.010).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,122 @@
+//! Device-backend pool configuration — which devices the coordinator
+//! schedules across ([`DeviceKind`]) and the scheduler's queue bounds
+//! ([`BackendCfg`]).  The backend implementations themselves live in
+//! [`crate::backend`]; this module is only the config surface the CLI
+//! (`edgedcnn serve --backends fpga,gpu,cpu`) and
+//! [`crate::coordinator::CoordinatorConfig`] speak.
+
+use std::fmt;
+use std::str::FromStr;
+
+/// The device classes the executor pool can schedule onto.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DeviceKind {
+    /// The simulated PYNQ-Z2 accelerator datapath
+    /// ([`crate::backend::FpgaSimBackend`]).
+    Fpga,
+    /// The Jetson TX1 analytical model with owned thermal state
+    /// ([`crate::backend::GpuModelBackend`]).
+    Gpu,
+    /// The host numeric path — PJRT or the pure-Rust reverse-loop
+    /// substrate ([`crate::backend::CpuBackend`]).
+    Cpu,
+}
+
+impl DeviceKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            DeviceKind::Fpga => "fpga",
+            DeviceKind::Gpu => "gpu",
+            DeviceKind::Cpu => "cpu",
+        }
+    }
+}
+
+impl fmt::Display for DeviceKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+impl FromStr for DeviceKind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.trim() {
+            "fpga" => Ok(DeviceKind::Fpga),
+            "gpu" => Ok(DeviceKind::Gpu),
+            "cpu" => Ok(DeviceKind::Cpu),
+            other => anyhow::bail!(
+                "unknown backend {other:?} (fpga|gpu|cpu)"
+            ),
+        }
+    }
+}
+
+/// The heterogeneous executor pool: one FIFO lane (thread) per entry in
+/// `kinds`, plus the scheduler's backpressure bounds.
+#[derive(Debug, Clone)]
+pub struct BackendCfg {
+    /// One executor lane per entry; duplicates are allowed (e.g.
+    /// `[Cpu, Cpu]` = two CPU lanes).  Order is the lane index order.
+    pub kinds: Vec<DeviceKind>,
+    /// Backpressure bound: a lane whose queue holds this many
+    /// not-yet-executed batches stops accepting new ones; when every
+    /// capable lane is at the bound the batch is deferred.
+    pub max_queue_depth: usize,
+    /// Admission-control bound: when this many deferred batches are
+    /// already waiting for a lane, new requests are rejected outright
+    /// (their callers observe an error instead of unbounded queueing).
+    pub admit_max_deferred: usize,
+}
+
+impl Default for BackendCfg {
+    fn default() -> Self {
+        BackendCfg {
+            kinds: vec![DeviceKind::Fpga, DeviceKind::Gpu, DeviceKind::Cpu],
+            max_queue_depth: 4,
+            admit_max_deferred: 256,
+        }
+    }
+}
+
+impl BackendCfg {
+    /// Parse the CLI's `--backends fpga,gpu,cpu` list.
+    pub fn parse_kinds(list: &str) -> anyhow::Result<Vec<DeviceKind>> {
+        let kinds: Vec<DeviceKind> = list
+            .split(',')
+            .filter(|s| !s.trim().is_empty())
+            .map(str::parse)
+            .collect::<anyhow::Result<_>>()?;
+        anyhow::ensure!(!kinds.is_empty(), "--backends list is empty");
+        Ok(kinds)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_kinds_roundtrips() {
+        let kinds = BackendCfg::parse_kinds("fpga,gpu,cpu").unwrap();
+        assert_eq!(
+            kinds,
+            vec![DeviceKind::Fpga, DeviceKind::Gpu, DeviceKind::Cpu]
+        );
+        assert_eq!(
+            BackendCfg::parse_kinds("cpu, cpu").unwrap(),
+            vec![DeviceKind::Cpu, DeviceKind::Cpu],
+            "duplicates and whitespace are fine"
+        );
+        assert!(BackendCfg::parse_kinds("tpu").is_err());
+        assert!(BackendCfg::parse_kinds("").is_err());
+    }
+
+    #[test]
+    fn kind_display_matches_parse() {
+        for k in [DeviceKind::Fpga, DeviceKind::Gpu, DeviceKind::Cpu] {
+            assert_eq!(k.as_str().parse::<DeviceKind>().unwrap(), k);
+        }
+    }
+}

@@ -3,9 +3,11 @@
 //! and the datapath precision axis ([`Precision`], defined in
 //! [`crate::quant`] and re-exported here as part of the config surface).
 
+mod backend;
 mod hw;
 mod network;
 
 pub use crate::quant::{Precision, QFormat};
+pub use backend::{BackendCfg, DeviceKind};
 pub use hw::{FpgaBoard, GpuBoard, PYNQ_Z2, JETSON_TX1};
 pub use network::{celeba, mnist, network_by_name, DeconvLayerCfg, NetworkCfg};

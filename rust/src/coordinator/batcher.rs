@@ -56,9 +56,17 @@ impl DynamicBatcher {
     /// waiting requests are left to coalesce until [`Self::poll`]'s
     /// deadline fires (cutting on push-side expiry would emit tiny
     /// batches whenever the device briefly falls behind).
+    ///
+    /// Hot path: the queue lookup is by borrowed name — the network
+    /// `String` is only cloned the first time a network is seen.
     pub fn push(&mut self, req: InferenceRequest, _now: Instant) -> Option<Batch> {
-        let q = self.queues.entry(req.network.clone()).or_default();
-        q.push_back(req);
+        match self.queues.get_mut(req.network.as_str()) {
+            Some(q) => q.push_back(req),
+            None => {
+                let name = req.network.clone();
+                self.queues.insert(name, VecDeque::from([req]));
+            }
+        }
         self.try_cut(None)
     }
 
@@ -207,5 +215,64 @@ mod tests {
         b.push(req(1, "mnist", 1), now);
         let d = b.next_deadline().unwrap();
         assert!(d > now);
+    }
+
+    #[test]
+    fn poll_with_empty_queues_is_a_noop() {
+        let mut b = DynamicBatcher::new(cfg(4, 10));
+        let now = Instant::now();
+        assert!(b.poll(now).is_none(), "nothing queued, nothing cut");
+        assert!(b.poll(now + Duration::from_secs(1)).is_none());
+        assert!(b.next_deadline().is_none());
+        assert_eq!(b.queued(), 0);
+        // a network whose queue drained completely behaves like empty
+        let batch = b.push(req(1, "mnist", 4), now).expect("full bucket");
+        assert_eq!(batch.n_images, 4);
+        assert!(b.poll(now + Duration::from_secs(1)).is_none());
+    }
+
+    #[test]
+    fn interleaved_networks_each_get_their_batch() {
+        // fairness: interleaved pushes to two networks never merge
+        // across networks, and *both* expire at the deadline — one poll
+        // per network drains them
+        let mut b = DynamicBatcher::new(cfg(8, 10));
+        let now = Instant::now();
+        for i in 0..3u64 {
+            assert!(b.push(req(2 * i, "mnist", 1), now).is_none());
+            assert!(b.push(req(2 * i + 1, "celeba", 1), now).is_none());
+        }
+        let later = now + Duration::from_millis(11);
+        let first = b.poll(later).expect("first network expired");
+        let second = b.poll(later).expect("second network expired");
+        assert_ne!(first.network, second.network);
+        for batch in [&first, &second] {
+            assert_eq!(batch.requests.len(), 3, "{}", batch.network);
+            let ids: Vec<u64> = batch.requests.iter().map(|r| r.id).collect();
+            let mut sorted = ids.clone();
+            sorted.sort_unstable();
+            assert_eq!(ids, sorted, "per-network FIFO order survives");
+        }
+        assert_eq!(b.queued(), 0);
+        assert!(b.poll(later).is_none());
+    }
+
+    #[test]
+    fn partial_batch_cuts_exactly_at_the_boundary() {
+        let mut b = DynamicBatcher::new(cfg(8, 10));
+        let now = Instant::now();
+        let enqueued = {
+            b.push(req(1, "mnist", 2), now);
+            // the deadline is anchored to the request's enqueue time,
+            // not the push() timestamp
+            b.next_deadline().unwrap() - Duration::from_millis(10)
+        };
+        let boundary = enqueued + Duration::from_millis(10);
+        assert!(
+            b.poll(boundary - Duration::from_nanos(1)).is_none(),
+            "one tick before the window: no cut"
+        );
+        let batch = b.poll(boundary).expect("exactly at max_wait: cut");
+        assert_eq!(batch.n_images, 2);
     }
 }

@@ -1,0 +1,289 @@
+//! Executor lanes — one thread per pool backend, each owning one live
+//! [`Backend`](crate::backend::Backend) instance plus the network
+//! metadata it serves.  A lane is a **FIFO queue**: batches execute in
+//! arrival order, which is the ordering half of the scheduler's
+//! per-network guarantee (the routing half — a network never jumps to
+//! another lane while it has work in flight — lives in
+//! [`super::scheduler`]).
+//!
+//! The lane resolves waiters and records metrics itself, then decrements
+//! its depth/outstanding counters **after** the replies are sent — the
+//! scheduler treats `outstanding == 0` as "all prior batches fully
+//! resolved", which is what makes lane re-pinning safe.
+
+use super::batcher::Batch;
+use super::metrics::MetricsRegistry;
+use super::request::InferenceResponse;
+use crate::artifacts::ArtifactDir;
+use crate::backend::{
+    dense_network_sim, instantiate, Backend, CostModel, NetSpec,
+};
+use crate::config::{
+    network_by_name, DeviceKind, NetworkCfg, Precision, JETSON_TX1,
+};
+use crate::gpu::expected_gpu_network_time_at;
+use crate::tensor::Tensor;
+use crate::util::{Rng, WorkerPool};
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+
+/// Commands a lane accepts from the scheduler.
+pub(crate) enum LaneCmd {
+    Execute {
+        batch: Batch,
+        /// Reply channel per request id; dropped on failure so callers
+        /// observe an error instead of hanging.
+        replies: Vec<(u64, mpsc::Sender<InferenceResponse>)>,
+    },
+    Shutdown,
+}
+
+/// What a lane reports back through the readiness channel: the cost
+/// models the scheduler routes on (it cannot call into the lane-owned
+/// backend itself).
+pub(crate) struct LaneStartup {
+    pub costs: Vec<(String, CostModel)>,
+}
+
+/// Static description of the lane to spawn.
+pub(crate) struct LaneSpec {
+    pub name: String,
+    pub kind: DeviceKind,
+    /// Logical networks routable to this lane, with served precisions.
+    pub networks: Vec<(String, Precision)>,
+    /// Pool width (lanes split the host compute budget evenly).
+    pub n_lanes: usize,
+    pub artifacts_dir: std::path::PathBuf,
+}
+
+/// Counters shared with the scheduler.
+pub(crate) struct LaneShared {
+    pub metrics: Arc<Mutex<MetricsRegistry>>,
+    /// Not-yet-executed batches queued on this lane.
+    pub depth: Arc<AtomicUsize>,
+    /// Per logical network: batches dispatched but not yet resolved
+    /// (across all lanes — the map is pool-global).
+    pub outstanding: HashMap<String, Arc<AtomicUsize>>,
+    /// Pool-global execution sequence (stamps responses so ordering is
+    /// observable/testable).
+    pub exec_seq: Arc<AtomicU64>,
+}
+
+/// Per-network metadata the lane keeps outside the backend: the config
+/// (latent dims, output geometry) and the per-image FPGA edge
+/// annotation every response carries regardless of which backend served
+/// it.  (The FPGA annotation is per-image linear — the accelerator
+/// streams one image at a time — while the GPU annotation amortizes
+/// launch overhead with batch size, so it is computed per batch at
+/// execution time, not precomputed per image.)
+struct NetMeta {
+    cfg: NetworkCfg,
+    fpga_s: f64,
+}
+
+/// Build the [`NetSpec`] for one logical network from the artifact set.
+pub(crate) fn load_net_spec(
+    artifacts: &ArtifactDir,
+    name: &str,
+    precision: Precision,
+) -> Result<NetSpec> {
+    let base = name.strip_suffix(".q").unwrap_or(name).to_string();
+    let manifest_net = artifacts.network(&base)?;
+    let cfg = artifacts.network_cfg(&base)?;
+    // sanity: manifest must agree with the built-in architecture
+    let builtin = network_by_name(&base)?;
+    anyhow::ensure!(
+        cfg.layers == builtin.layers,
+        "manifest/{base} diverges from built-in config"
+    );
+    let weights = artifacts.load_weights(&base)?;
+    Ok(NetSpec {
+        name: name.to_string(),
+        base,
+        buckets: manifest_net.batch_sizes.clone(),
+        precision,
+        weights,
+        cfg,
+    })
+}
+
+fn annotate(spec: &NetSpec) -> NetMeta {
+    let sim = dense_network_sim(&spec.cfg, spec.precision);
+    NetMeta {
+        fpga_s: sim.total_time_s,
+        cfg: spec.cfg.clone(),
+    }
+}
+
+/// The lane thread body: load, report readiness + costs, serve FIFO.
+pub(crate) fn lane_thread(
+    spec: LaneSpec,
+    rx: mpsc::Receiver<LaneCmd>,
+    ready: mpsc::Sender<Result<LaneStartup>>,
+    shared: LaneShared,
+) {
+    let setup = (|| -> Result<(Box<dyn Backend>, HashMap<String, NetMeta>)> {
+        let artifacts = ArtifactDir::open(&spec.artifacts_dir)?;
+        // split the host's compute budget across the pool so lanes
+        // running concurrently don't oversubscribe the CPU (the width
+        // honours the EDGEDCNN_WORKERS override)
+        let host_workers = WorkerPool::with_default_parallelism().workers();
+        let pool = WorkerPool::new((host_workers / spec.n_lanes).max(1));
+        let mut backend = instantiate(spec.kind, spec.name.clone(), pool)?;
+        let mut metas = HashMap::new();
+        for (name, precision) in &spec.networks {
+            let net_spec = load_net_spec(&artifacts, name, *precision)
+                .with_context(|| format!("loading {name} on {}", spec.name))?;
+            backend.load(&net_spec, &artifacts)?;
+            metas.insert(name.clone(), annotate(&net_spec));
+        }
+        Ok((backend, metas))
+    })();
+
+    let (mut backend, metas) = match setup {
+        Ok((backend, metas)) => {
+            let costs = metas
+                .keys()
+                .filter_map(|n| Some((n.clone(), backend.cost_model(n)?)))
+                .collect();
+            let _ = ready.send(Ok(LaneStartup { costs }));
+            (backend, metas)
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+
+    while let Ok(cmd) = rx.recv() {
+        match cmd {
+            LaneCmd::Shutdown => break,
+            LaneCmd::Execute { batch, replies } => {
+                let network = batch.network.clone();
+                match execute_batch(backend.as_mut(), &metas, &shared, batch) {
+                    Ok(responses) => resolve(replies, responses),
+                    Err(e) => {
+                        eprintln!(
+                            "backend {} execution failed: {e:#}",
+                            backend.name()
+                        );
+                        // dropping `replies` errors the callers
+                    }
+                }
+                // depth/outstanding drop only after the replies went
+                // out (see module docs: re-pinning safety)
+                shared.depth.fetch_sub(1, Ordering::AcqRel);
+                if let Some(o) = shared.outstanding.get(&network) {
+                    o.fetch_sub(1, Ordering::AcqRel);
+                }
+            }
+        }
+    }
+}
+
+fn resolve(
+    replies: Vec<(u64, mpsc::Sender<InferenceResponse>)>,
+    responses: Vec<InferenceResponse>,
+) {
+    let mut reply_by_id: HashMap<u64, mpsc::Sender<InferenceResponse>> =
+        replies.into_iter().collect();
+    for resp in responses {
+        if let Some(tx) = reply_by_id.remove(&resp.id) {
+            let _ = tx.send(resp);
+        }
+    }
+}
+
+/// Execute one batch on the lane's backend and split the outcome back
+/// into per-request responses (recording metrics on the way).
+fn execute_batch(
+    backend: &mut dyn Backend,
+    metas: &HashMap<String, NetMeta>,
+    shared: &LaneShared,
+    batch: Batch,
+) -> Result<Vec<InferenceResponse>> {
+    let meta = metas.get(&batch.network).ok_or_else(|| {
+        anyhow::anyhow!("network {:?} not loaded", batch.network)
+    })?;
+
+    // deterministic latents: one RNG per request, in order — identical
+    // on every backend, which is what makes routing invisible to
+    // clients (bit-identical f32 outputs)
+    let mut latents: Vec<f32> =
+        Vec::with_capacity(batch.n_images * meta.cfg.z_dim);
+    for req in &batch.requests {
+        let mut rng = Rng::seed_from_u64(req.seed);
+        for _ in 0..req.n_images * meta.cfg.z_dim {
+            latents.push(rng.normal_f32());
+        }
+    }
+    let z = Tensor::new(vec![batch.n_images, meta.cfg.z_dim], latents)?;
+
+    let outcome = backend.execute(&batch.network, &z)?;
+    let seq = shared.exec_seq.fetch_add(1, Ordering::AcqRel);
+    // GPU edge annotation at the *actual* batch size (launch overhead
+    // amortizes with batching), boost clock, pro-rated per request
+    let gpu_batch_s = expected_gpu_network_time_at(
+        &meta.cfg,
+        &JETSON_TX1,
+        JETSON_TX1.boost_clock_hz,
+        batch.n_images,
+    );
+
+    {
+        let mut m = shared.metrics.lock().unwrap();
+        m.record_batch(outcome.execute_s, batch.n_images, outcome.ops);
+        m.record_energy(outcome.energy_j);
+        m.record_backend_batch(
+            backend.name(),
+            batch.n_images,
+            outcome.ops,
+            outcome.device_time_s,
+            outcome.energy_j,
+        );
+        for req in &batch.requests {
+            m.record_request(
+                req.enqueued_at.elapsed().as_secs_f64(),
+                req.n_images,
+            );
+        }
+    }
+
+    // split images back to requests
+    let numel =
+        meta.cfg.image_channels * meta.cfg.image_size * meta.cfg.image_size;
+    let n_batch = batch.n_images as f64;
+    let mut responses = Vec::with_capacity(batch.requests.len());
+    let mut row = 0usize;
+    for req in &batch.requests {
+        let n = req.n_images;
+        let data =
+            outcome.images.data()[row * numel..(row + n) * numel].to_vec();
+        row += n;
+        let share = n as f64 / n_batch;
+        responses.push(InferenceResponse {
+            id: req.id,
+            images: Tensor::new(
+                vec![
+                    n,
+                    meta.cfg.image_channels,
+                    meta.cfg.image_size,
+                    meta.cfg.image_size,
+                ],
+                data,
+            )?,
+            latency_s: req.enqueued_at.elapsed().as_secs_f64(),
+            execute_s: outcome.execute_s,
+            batch_size: batch.n_images,
+            backend: backend.name().to_string(),
+            device_time_s: outcome.device_time_s * share,
+            energy_j: outcome.energy_j * share,
+            exec_seq: seq,
+            fpga_time_s: meta.fpga_s * n as f64,
+            gpu_time_s: gpu_batch_s * share,
+        });
+    }
+    Ok(responses)
+}

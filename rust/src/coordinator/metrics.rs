@@ -1,8 +1,20 @@
 //! Serving metrics — latency distribution, throughput, arithmetic
-//! throughput, and the energy integration that yields the GOps/s/W
-//! headline for the end-to-end example.
+//! throughput, the energy integration that yields the GOps/s/W headline
+//! for the end-to-end example, and the **per-backend columns** (where
+//! the scheduler routed the work, and at what device latency/energy).
 
 use crate::stats::{percentile, Summary};
+use std::collections::BTreeMap;
+
+/// Per-backend accumulator (keyed by lane name, e.g. `fpga0`).
+#[derive(Debug, Default, Clone)]
+struct BackendStats {
+    batches: u64,
+    images: u64,
+    ops: u64,
+    device_time_s: f64,
+    energy_j: f64,
+}
 
 /// Accumulates per-request and per-batch telemetry during a serving run.
 #[derive(Debug, Default)]
@@ -12,9 +24,11 @@ pub struct MetricsRegistry {
     batch_sizes: Vec<usize>,
     images: u64,
     requests: u64,
+    rejected: u64,
     ops: u64,
     energy_j: f64,
     wall_s: f64,
+    backends: BTreeMap<String, BackendStats>,
 }
 
 impl MetricsRegistry {
@@ -36,6 +50,28 @@ impl MetricsRegistry {
 
     pub fn record_energy(&mut self, joules: f64) {
         self.energy_j += joules;
+    }
+
+    /// Account one executed batch to the backend lane that served it.
+    pub fn record_backend_batch(
+        &mut self,
+        backend: &str,
+        images: usize,
+        ops: u64,
+        device_time_s: f64,
+        energy_j: f64,
+    ) {
+        let b = self.backends.entry(backend.to_string()).or_default();
+        b.batches += 1;
+        b.images += images as u64;
+        b.ops += ops;
+        b.device_time_s += device_time_s;
+        b.energy_j += energy_j;
+    }
+
+    /// Count one request turned away by admission control.
+    pub fn record_rejected(&mut self) {
+        self.rejected += 1;
     }
 
     pub fn set_wall(&mut self, wall_s: f64) {
@@ -64,9 +100,31 @@ impl MetricsRegistry {
             0.0
         };
         let gops = self.ops as f64 / wall / 1e9;
+        let per_backend = self
+            .backends
+            .iter()
+            .map(|(name, b)| BackendReport {
+                name: name.clone(),
+                batches: b.batches,
+                images: b.images,
+                images_per_s: b.images as f64 / wall,
+                device_gops: if b.device_time_s > 0.0 {
+                    b.ops as f64 / b.device_time_s / 1e9
+                } else {
+                    0.0
+                },
+                mean_device_latency_s: if b.batches > 0 {
+                    b.device_time_s / b.batches as f64
+                } else {
+                    0.0
+                },
+                energy_j: b.energy_j,
+            })
+            .collect();
         ServingReport {
             requests: self.requests,
             images: self.images,
+            rejected: self.rejected,
             batches: self.execute_s.len() as u64,
             wall_s: self.wall_s,
             latency: lat,
@@ -80,6 +138,7 @@ impl MetricsRegistry {
             },
             mean_power_w: mean_power,
             gops_per_w: if mean_power > 0.0 { gops / mean_power } else { 0.0 },
+            per_backend,
         }
     }
 }
@@ -93,12 +152,30 @@ pub struct LatencyReport {
     pub p99_s: f64,
 }
 
+/// One backend lane's column in the serving report.
+#[derive(Debug, Clone)]
+pub struct BackendReport {
+    /// Lane name (`fpga0`, `gpu0`, `cpu0`, …).
+    pub name: String,
+    pub batches: u64,
+    pub images: u64,
+    /// Images served by this backend per wall second.
+    pub images_per_s: f64,
+    /// Device arithmetic throughput (ops / device time).
+    pub device_gops: f64,
+    /// Mean device latency per batch, seconds.
+    pub mean_device_latency_s: f64,
+    pub energy_j: f64,
+}
+
 /// Final serving report (printed by the `serve` CLI and the edge_serving
 /// example; recorded in EXPERIMENTS.md §E9).
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct ServingReport {
     pub requests: u64,
     pub images: u64,
+    /// Requests turned away by admission control.
+    pub rejected: u64,
     pub batches: u64,
     pub wall_s: f64,
     pub latency: LatencyReport,
@@ -107,11 +184,13 @@ pub struct ServingReport {
     pub mean_batch: f64,
     pub mean_power_w: f64,
     pub gops_per_w: f64,
+    /// Per-backend columns, sorted by lane name.
+    pub per_backend: Vec<BackendReport>,
 }
 
 impl ServingReport {
     pub fn render(&self) -> String {
-        format!(
+        let mut out = format!(
             "requests {:>6}   images {:>6}   batches {:>5}  (mean batch {:.2})\n\
              wall {:>8.3} s   throughput {:>8.2} img/s   {:>7.2} GOps/s\n\
              latency mean {:.2} ms  p50 {:.2} ms  p95 {:.2} ms  p99 {:.2} ms\n\
@@ -129,7 +208,24 @@ impl ServingReport {
             self.latency.p99_s * 1e3,
             self.mean_power_w,
             self.gops_per_w,
-        )
+        );
+        if self.rejected > 0 {
+            out.push_str(&format!("\nrejected {:>6}  (admission control)", self.rejected));
+        }
+        for b in &self.per_backend {
+            out.push_str(&format!(
+                "\nbackend {:<6} batches {:>5}   images {:>6}   device {:>7.2} ms/batch   \
+                 {:>7.2} GOps/s   energy {:>8.3} J   {:>8.2} img/s",
+                b.name,
+                b.batches,
+                b.images,
+                b.mean_device_latency_s * 1e3,
+                b.device_gops,
+                b.energy_j,
+                b.images_per_s,
+            ));
+        }
+        out
     }
 }
 
@@ -173,5 +269,39 @@ mod tests {
         let s = m.report().render();
         assert!(s.contains("GOps/s/W"));
         assert!(s.contains("p99"));
+    }
+
+    #[test]
+    fn per_backend_columns_aggregate_and_render() {
+        let mut m = MetricsRegistry::new();
+        m.record_backend_batch("fpga0", 8, 2_000_000_000, 0.5, 1.25);
+        m.record_backend_batch("fpga0", 8, 2_000_000_000, 0.5, 1.25);
+        m.record_backend_batch("gpu0", 4, 1_000_000_000, 0.1, 1.1);
+        m.set_wall(2.0);
+        let r = m.report();
+        assert_eq!(r.per_backend.len(), 2);
+        let fpga = &r.per_backend[0];
+        assert_eq!(fpga.name, "fpga0", "BTreeMap order is deterministic");
+        assert_eq!(fpga.batches, 2);
+        assert_eq!(fpga.images, 16);
+        assert!((fpga.images_per_s - 8.0).abs() < 1e-9);
+        assert!((fpga.device_gops - 4.0).abs() < 1e-9);
+        assert!((fpga.mean_device_latency_s - 0.5).abs() < 1e-9);
+        assert!((fpga.energy_j - 2.5).abs() < 1e-9);
+        let s = r.render();
+        assert!(s.contains("backend fpga0"), "{s}");
+        assert!(s.contains("backend gpu0"), "{s}");
+        assert!(!s.contains("rejected"), "no admission line when zero");
+    }
+
+    #[test]
+    fn rejected_requests_are_reported() {
+        let mut m = MetricsRegistry::new();
+        m.record_rejected();
+        m.record_rejected();
+        m.set_wall(1.0);
+        let r = m.report();
+        assert_eq!(r.rejected, 2);
+        assert!(r.render().contains("rejected"));
     }
 }

@@ -1,27 +1,43 @@
 //! L3 edge-inference coordinator — the serving system wrapped around the
-//! accelerator: request intake, dynamic batching into the AOT-exported
-//! batch buckets, a device-executor thread owning the PJRT runtime (and
-//! the FPGA/GPU timing simulators for edge-device annotations), metrics,
-//! and a sampled power meter.  With `CoordinatorConfig::quant` set,
-//! every network also serves a fixed-point twin under `<name>.q`
-//! (calibrated at startup, executed through the quantized reverse-loop
-//! substrate) side by side with the f32 path; `shard_batches` splits
-//! multi-request batches across the executor pool.
+//! accelerators: request intake, dynamic batching into the AOT-exported
+//! batch buckets, and a **heterogeneous device-backend pool** — one FIFO
+//! executor lane per configured device ([`crate::backend`]: the PYNQ-Z2
+//! simulator datapath, the Jetson TX1 thermal model, the host CPU
+//! numeric path) with capability- and cost-aware routing between them.
+//! The paper's FPGA-vs-GPU comparison is therefore a *live scheduling
+//! decision*: each batch goes to the cheapest idle capable device, and
+//! the per-backend columns of [`ServingReport`] show where the work
+//! landed and at what latency/energy.
 //!
-//! Threading model: PJRT handles are not `Sync`, so one **device thread**
-//! owns the [`crate::runtime::Runtime`] and all compiled executables; a
-//! **leader thread** does intake/batching/dispatch and talks to it over
-//! channels — the same leader/worker split a vLLM-style router uses.
+//! Module split:
+//! * [`registry`](BackendRegistry) — logical networks (incl. `.q`
+//!   quantized twins) → capable lanes;
+//! * `scheduler` — the leader thread: batching, routing (per-network
+//!   ordering via lane pinning + per-lane FIFO), backpressure and
+//!   admission control;
+//! * `executor` — the lane threads owning the live backends;
+//! * `server` — configuration, startup wiring, and the client API.
+//!
+//! Threading model: PJRT handles are not `Sync`, so each lane owns its
+//! runtime/backend; the leader does intake/batching/routing and talks to
+//! lanes over channels — the same leader/worker split a vLLM-style
+//! router uses, on std threads (the offline build ships no async
+//! runtime).
 
 mod batcher;
+mod executor;
 mod metrics;
 mod power;
+mod registry;
 mod request;
+mod routing;
+mod scheduler;
 mod server;
 
 pub use batcher::{Batch, BatcherConfig, DynamicBatcher};
-pub use metrics::{MetricsRegistry, ServingReport};
+pub use metrics::{BackendReport, MetricsRegistry, ServingReport};
 pub use power::PowerMeter;
+pub use registry::{BackendRegistry, LaneInfo};
 pub use request::{InferenceRequest, InferenceResponse, RequestId};
 pub use server::{
     Coordinator, CoordinatorConfig, ResponseHandle, WorkloadSpec,

@@ -1,0 +1,144 @@
+//! Backend registry — the capability map between logical networks
+//! (including `.q` quantized twins) and the executor lanes that can
+//! serve them.  Built once at coordinator startup and consulted by the
+//! scheduler on every routing decision; an unservable network (e.g. a
+//! fixed-point twin in a GPU-only pool) is a *startup* error, never a
+//! request-time surprise.
+
+use crate::backend::Capabilities;
+use crate::config::{DeviceKind, Precision};
+use anyhow::Result;
+use std::collections::HashMap;
+
+/// One executor lane as the scheduler sees it (the live [`Backend`]
+/// object lives on the lane's thread; this is its static description).
+///
+/// [`Backend`]: crate::backend::Backend
+#[derive(Debug, Clone)]
+pub struct LaneInfo {
+    /// Unique lane name (`fpga0`, `cpu1`, …) — also the backend name.
+    pub name: String,
+    pub kind: DeviceKind,
+    pub caps: Capabilities,
+}
+
+/// The pool's capability map: lanes plus, per logical network, the
+/// lanes capable of serving it.
+#[derive(Debug, Clone)]
+pub struct BackendRegistry {
+    lanes: Vec<LaneInfo>,
+    routes: HashMap<String, Vec<usize>>,
+}
+
+impl BackendRegistry {
+    /// Build the registry for a lane list and the logical networks
+    /// (name, served precision) the coordinator will preload.  Errors
+    /// if any network has no capable lane.
+    pub fn build(
+        kinds: &[DeviceKind],
+        networks: &[(String, Precision)],
+    ) -> Result<Self> {
+        let mut per_kind: HashMap<DeviceKind, usize> = HashMap::new();
+        let lanes: Vec<LaneInfo> = kinds
+            .iter()
+            .map(|&kind| {
+                let i = per_kind.entry(kind).or_insert(0);
+                let name = format!("{kind}{i}");
+                *i += 1;
+                LaneInfo {
+                    name,
+                    kind,
+                    caps: Capabilities::of_kind(kind),
+                }
+            })
+            .collect();
+        let mut routes = HashMap::new();
+        for (name, precision) in networks {
+            let capable: Vec<usize> = lanes
+                .iter()
+                .enumerate()
+                .filter(|(_, l)| l.caps.supports(*precision))
+                .map(|(i, _)| i)
+                .collect();
+            anyhow::ensure!(
+                !capable.is_empty(),
+                "network {name:?} (precision {precision}) has no capable \
+                 backend in pool [{}]",
+                lanes
+                    .iter()
+                    .map(|l| l.name.as_str())
+                    .collect::<Vec<_>>()
+                    .join(",")
+            );
+            routes.insert(name.clone(), capable);
+        }
+        Ok(BackendRegistry { lanes, routes })
+    }
+
+    pub fn lanes(&self) -> &[LaneInfo] {
+        &self.lanes
+    }
+
+    /// Lanes capable of serving `network` (empty slice if unknown).
+    pub fn capable(&self, network: &str) -> &[usize] {
+        self.routes.get(network).map(Vec::as_slice).unwrap_or(&[])
+    }
+
+    /// The logical networks lane `idx` must preload (every network it
+    /// could be routed).
+    pub fn networks_for_lane(&self, idx: usize) -> Vec<String> {
+        let mut names: Vec<String> = self
+            .routes
+            .iter()
+            .filter(|(_, lanes)| lanes.contains(&idx))
+            .map(|(n, _)| n.clone())
+            .collect();
+        names.sort(); // deterministic load order
+        names
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::QFormat;
+
+    fn q88() -> Precision {
+        Precision::Fixed(QFormat::new(16, 8))
+    }
+
+    #[test]
+    fn quant_twins_route_around_the_gpu() {
+        let kinds = [DeviceKind::Fpga, DeviceKind::Gpu, DeviceKind::Cpu];
+        let nets = [
+            ("mnist".to_string(), Precision::F32),
+            ("mnist.q".to_string(), q88()),
+        ];
+        let r = BackendRegistry::build(&kinds, &nets).unwrap();
+        assert_eq!(r.capable("mnist"), &[0, 1, 2]);
+        assert_eq!(r.capable("mnist.q"), &[0, 2], "gpu lane excluded");
+        assert_eq!(r.capable("unknown"), &[] as &[usize]);
+        assert_eq!(r.networks_for_lane(1), vec!["mnist".to_string()]);
+        assert_eq!(
+            r.networks_for_lane(0),
+            vec!["mnist".to_string(), "mnist.q".to_string()]
+        );
+    }
+
+    #[test]
+    fn unservable_network_is_a_startup_error() {
+        let kinds = [DeviceKind::Gpu];
+        let nets = [("mnist.q".to_string(), q88())];
+        let err = BackendRegistry::build(&kinds, &nets).unwrap_err();
+        assert!(err.to_string().contains("no capable backend"), "{err}");
+    }
+
+    #[test]
+    fn duplicate_kinds_get_distinct_names() {
+        let kinds = [DeviceKind::Cpu, DeviceKind::Cpu, DeviceKind::Fpga];
+        let r = BackendRegistry::build(&kinds, &[]).unwrap();
+        let names: Vec<&str> =
+            r.lanes().iter().map(|l| l.name.as_str()).collect();
+        assert_eq!(names, vec!["cpu0", "cpu1", "fpga0"]);
+    }
+}

@@ -36,13 +36,25 @@ pub struct InferenceResponse {
     pub images: Tensor,
     /// End-to-end latency (enqueue → response), seconds.
     pub latency_s: f64,
-    /// Wall time inside the PJRT executable, seconds.
+    /// Wall time inside the numeric substrate, seconds.
     pub execute_s: f64,
     /// Batch bucket this request was served in.
     pub batch_size: usize,
-    /// Simulated edge-FPGA latency for the same work (annotation).
+    /// Lane/backend that served the batch (e.g. `fpga0`).
+    pub backend: String,
+    /// This request's share of the serving device's (simulated or
+    /// measured) batch latency, seconds.
+    pub device_time_s: f64,
+    /// This request's share of the serving device's batch energy, J.
+    pub energy_j: f64,
+    /// Pool-global execution sequence of the serving batch — makes the
+    /// per-network ordering guarantee observable (and testable).
+    pub exec_seq: u64,
+    /// Simulated edge-FPGA latency for the same work (annotation,
+    /// independent of which backend actually served it).
     pub fpga_time_s: f64,
-    /// Simulated edge-GPU latency for the same work (annotation).
+    /// Simulated edge-GPU latency for the same work at boost clock
+    /// (annotation, independent of the serving backend).
     pub gpu_time_s: f64,
 }
 

@@ -1,0 +1,116 @@
+//! The routing policy, pure and unit-tested in isolation: given a
+//! snapshot of the lane pool, pick where one batch goes.  The stateful
+//! half (pins, deferred queue, counters) lives in [`super::scheduler`];
+//! this module is only the decision function, so every invariant can be
+//! pinned by a table-driven test with no threads involved.
+
+/// One routing decision.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum Route {
+    Lane(usize),
+    /// Every capable lane is saturated (or the pinned lane is): hold
+    /// the batch and retry when a lane drains.
+    Defer,
+}
+
+/// A lane as the routing function sees it.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct LaneView {
+    pub capable: bool,
+    pub depth: usize,
+    pub cost_s: f64,
+}
+
+/// Pick a lane for one batch.  `pinned` is the lane currently holding
+/// the network's in-flight batches (the ordering invariant), `max_depth`
+/// the backpressure bound.
+///
+/// Priority: pinned lane (or defer) → cheapest *idle* capable lane →
+/// shallowest-queue capable lane (cost breaks ties) → defer.
+pub(crate) fn choose_lane(
+    lanes: &[LaneView],
+    pinned: Option<usize>,
+    max_depth: usize,
+) -> Route {
+    if let Some(pin) = pinned {
+        // ordering beats latency: the network follows its lane or waits
+        return if lanes[pin].depth < max_depth {
+            Route::Lane(pin)
+        } else {
+            Route::Defer
+        };
+    }
+    let open = || {
+        lanes
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| l.capable && l.depth < max_depth)
+    };
+    let idle_best = open()
+        .filter(|(_, l)| l.depth == 0)
+        .min_by(|(_, a), (_, b)| a.cost_s.total_cmp(&b.cost_s));
+    if let Some((i, _)) = idle_best {
+        return Route::Lane(i);
+    }
+    match open().min_by(|(_, a), (_, b)| {
+        a.depth.cmp(&b.depth).then(a.cost_s.total_cmp(&b.cost_s))
+    }) {
+        Some((i, _)) => Route::Lane(i),
+        None => Route::Defer,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lv(capable: bool, depth: usize, cost_s: f64) -> LaneView {
+        LaneView {
+            capable,
+            depth,
+            cost_s,
+        }
+    }
+
+    #[test]
+    fn cheapest_idle_capable_lane_wins() {
+        let lanes = [lv(true, 0, 3.0), lv(true, 0, 1.0), lv(true, 0, 2.0)];
+        assert_eq!(choose_lane(&lanes, None, 4), Route::Lane(1));
+    }
+
+    #[test]
+    fn idle_beats_cheaper_but_busy() {
+        // lane 0 is cheaper but has queued work; lane 1 is idle
+        let lanes = [lv(true, 2, 1.0), lv(true, 0, 5.0)];
+        assert_eq!(choose_lane(&lanes, None, 4), Route::Lane(1));
+    }
+
+    #[test]
+    fn no_idle_lane_takes_shallowest_queue_then_cost() {
+        let lanes = [lv(true, 2, 1.0), lv(true, 1, 9.0), lv(true, 1, 2.0)];
+        assert_eq!(choose_lane(&lanes, None, 4), Route::Lane(2));
+    }
+
+    #[test]
+    fn incapable_lanes_are_never_chosen() {
+        let lanes = [lv(false, 0, 0.001), lv(true, 3, 9.0)];
+        assert_eq!(choose_lane(&lanes, None, 4), Route::Lane(1));
+    }
+
+    #[test]
+    fn saturated_pool_defers() {
+        let lanes = [lv(true, 4, 1.0), lv(false, 0, 1.0)];
+        assert_eq!(choose_lane(&lanes, None, 4), Route::Defer);
+    }
+
+    #[test]
+    fn pin_overrides_cost_and_defers_when_full() {
+        // ordering invariant: in-flight network follows its lane even
+        // though lane 0 is idle and cheaper…
+        let lanes = [lv(true, 0, 0.001), lv(true, 1, 9.0)];
+        assert_eq!(choose_lane(&lanes, Some(1), 4), Route::Lane(1));
+        // …and waits rather than jump lanes when it is saturated
+        let lanes = [lv(true, 0, 0.001), lv(true, 4, 9.0)];
+        assert_eq!(choose_lane(&lanes, Some(1), 4), Route::Defer);
+    }
+}

@@ -1,0 +1,371 @@
+//! The scheduler (leader thread): request intake → dynamic batching →
+//! **capability- and cost-aware routing** over the heterogeneous lane
+//! pool.
+//!
+//! Routing invariants (see DESIGN.md §Backend layer):
+//!
+//! 1. **Capability** — a batch only ever goes to a lane whose backend
+//!    supports the network's served precision (the [`BackendRegistry`]
+//!    is consulted, never bypassed).
+//! 2. **Cost** — among *idle* capable lanes the cheapest (per the lane's
+//!    reported [`CostModel`] at this batch size) wins; when nobody is
+//!    idle, the shallowest queue wins (cost breaks ties).
+//! 3. **Ordering** — a network with batches in flight is *pinned* to
+//!    their lane: later batches either join that FIFO lane or defer.
+//!    Only when the network is quiescent (`outstanding == 0`, i.e. all
+//!    replies sent) may the scheduler re-route it.  Per-request
+//!    responses therefore resolve in submission order per network
+//!    (intra-batch sharding opts out of this, trading order for tail
+//!    latency).
+//! 4. **Backpressure/admission** — a lane at `max_queue_depth` accepts
+//!    no more batches; when every capable lane is saturated the batch
+//!    defers (retried as lanes drain), and when too many batches are
+//!    deferred new requests are rejected at intake.
+//!
+//! [`CostModel`]: crate::backend::CostModel
+
+use super::batcher::{Batch, BatcherConfig, DynamicBatcher};
+use super::executor::LaneCmd;
+use super::metrics::MetricsRegistry;
+use super::registry::BackendRegistry;
+use super::request::{InferenceRequest, InferenceResponse};
+use super::routing::{choose_lane, LaneView, Route};
+use crate::backend::CostModel;
+use crate::config::BackendCfg;
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+pub(crate) enum LeaderCmd {
+    Submit(InferenceRequest, mpsc::Sender<InferenceResponse>),
+    Shutdown,
+}
+
+/// The scheduler's handle on one executor lane.
+pub(crate) struct LaneHandle {
+    pub tx: mpsc::Sender<LaneCmd>,
+    pub depth: Arc<AtomicUsize>,
+    /// Cost models reported by the lane at startup, per network.
+    pub costs: HashMap<String, CostModel>,
+}
+
+/// Everything the leader thread owns.
+pub(crate) struct Scheduler {
+    batcher: DynamicBatcher,
+    cfg: BackendCfg,
+    shard_batches: bool,
+    lanes: Vec<LaneHandle>,
+    registry: BackendRegistry,
+    /// Per-network in-flight batch counters (decremented lane-side
+    /// after replies resolve).
+    outstanding: HashMap<String, Arc<AtomicUsize>>,
+    /// Current lane pin per network (leader-private; only meaningful
+    /// while the network's outstanding counter is nonzero).
+    pins: HashMap<String, usize>,
+    /// Batches waiting for lane capacity, FIFO.
+    deferred: VecDeque<Batch>,
+    waiters: HashMap<u64, mpsc::Sender<InferenceResponse>>,
+    metrics: Arc<Mutex<MetricsRegistry>>,
+}
+
+impl Scheduler {
+    fn lane_views(&self, network: &str, n_images: usize) -> Vec<LaneView> {
+        let capable = self.registry.capable(network);
+        let infos = self.registry.lanes();
+        self.lanes
+            .iter()
+            .enumerate()
+            .map(|(i, l)| LaneView {
+                capable: capable.contains(&i)
+                    && infos[i].caps.admits(n_images),
+                depth: l.depth.load(Ordering::Acquire),
+                cost_s: l
+                    .costs
+                    .get(network)
+                    .map(|c| c.cost_s(n_images))
+                    .unwrap_or(f64::INFINITY),
+            })
+            .collect()
+    }
+
+    fn pinned(&self, network: &str) -> Option<usize> {
+        let pin = *self.pins.get(network)?;
+        let live = self
+            .outstanding
+            .get(network)
+            .map(|o| o.load(Ordering::Acquire) > 0)
+            .unwrap_or(false);
+        live.then_some(pin)
+    }
+
+    fn send(&mut self, lane: usize, batch: Batch) {
+        let mut replies = Vec::with_capacity(batch.requests.len());
+        for r in &batch.requests {
+            if let Some(tx) = self.waiters.remove(&r.id) {
+                replies.push((r.id, tx));
+            }
+        }
+        let network = batch.network.clone();
+        if let Some(o) = self.outstanding.get(&network) {
+            o.fetch_add(1, Ordering::AcqRel);
+        }
+        self.pins.insert(network.clone(), lane);
+        self.lanes[lane].depth.fetch_add(1, Ordering::AcqRel);
+        if self.lanes[lane]
+            .tx
+            .send(LaneCmd::Execute { batch, replies })
+            .is_err()
+        {
+            // lane gone: the replies just dropped, so every caller of
+            // this batch observes an error instead of hanging; roll the
+            // counters back so the network is not pinned to a dead lane
+            self.lanes[lane].depth.fetch_sub(1, Ordering::AcqRel);
+            if let Some(o) = self.outstanding.get(&network) {
+                o.fetch_sub(1, Ordering::AcqRel);
+            }
+            eprintln!("executor lane {lane} is down; dropping a batch");
+        }
+    }
+
+    /// Route one batch (invariants 1-4); the batch comes back on defer.
+    fn try_dispatch(&mut self, batch: Batch) -> Result<(), Batch> {
+        let batch = if self.shard_batches && batch.requests.len() >= 2 {
+            match self.try_shard(batch) {
+                None => return Ok(()),
+                // capable pool too narrow to shard: route it whole
+                Some(b) => b,
+            }
+        } else {
+            batch
+        };
+        let views = self.lane_views(&batch.network, batch.n_images);
+        match choose_lane(
+            &views,
+            self.pinned(&batch.network),
+            self.cfg.max_queue_depth,
+        ) {
+            Route::Lane(lane) => {
+                self.send(lane, batch);
+                Ok(())
+            }
+            Route::Defer => Err(batch),
+        }
+    }
+
+    /// Intra-batch parallelism: split the batch round-robin at request
+    /// granularity across the *capable* lanes.  Returns the batch back
+    /// when fewer than two lanes can serve it, or when any capable lane
+    /// is at the depth bound — sharding must not bypass backpressure,
+    /// so a congested pool falls back to whole-batch routing (which
+    /// defers, keeping admission control live).
+    fn try_shard(&mut self, batch: Batch) -> Option<Batch> {
+        let capable: Vec<usize> =
+            self.registry.capable(&batch.network).to_vec();
+        if capable.len() < 2 {
+            return Some(batch);
+        }
+        let congested = capable.iter().any(|&i| {
+            self.lanes[i].depth.load(Ordering::Acquire)
+                >= self.cfg.max_queue_depth
+        });
+        if congested {
+            return Some(batch);
+        }
+        let n_shards = capable.len().min(batch.requests.len());
+        let network = batch.network;
+        let mut groups: Vec<Vec<InferenceRequest>> =
+            (0..n_shards).map(|_| Vec::new()).collect();
+        for (i, r) in batch.requests.into_iter().enumerate() {
+            groups[i % n_shards].push(r);
+        }
+        for (gi, requests) in groups.into_iter().enumerate() {
+            let n_images = requests.iter().map(|r| r.n_images).sum();
+            let shard = Batch {
+                network: network.clone(),
+                requests,
+                n_images,
+            };
+            self.send(capable[gi % capable.len()], shard);
+        }
+        None
+    }
+
+    /// Queue a batch behind any deferred work of the same network (or
+    /// dispatch it if the coast is clear).
+    fn dispatch_or_defer(&mut self, batch: Batch) {
+        if self.registry.capable(&batch.network).is_empty() {
+            // unknown/unservable network: error the callers now instead
+            // of deferring forever (dropping the waiters does it)
+            eprintln!(
+                "no capable backend for network {:?}; dropping a batch",
+                batch.network
+            );
+            for r in &batch.requests {
+                self.waiters.remove(&r.id);
+            }
+            return;
+        }
+        let behind = self
+            .deferred
+            .iter()
+            .any(|b| b.network == batch.network);
+        if behind {
+            self.deferred.push_back(batch);
+            return;
+        }
+        if let Err(batch) = self.try_dispatch(batch) {
+            self.deferred.push_back(batch);
+        }
+    }
+
+    /// Retry deferred batches FIFO; a network that still can't route
+    /// blocks its later batches (ordering), not other networks'.
+    fn drain_deferred(&mut self) {
+        if self.deferred.is_empty() {
+            return;
+        }
+        let mut blocked: HashSet<String> = HashSet::new();
+        let mut still = VecDeque::with_capacity(self.deferred.len());
+        while let Some(batch) = self.deferred.pop_front() {
+            if blocked.contains(&batch.network) {
+                still.push_back(batch);
+                continue;
+            }
+            match self.try_dispatch(batch) {
+                Ok(()) => {}
+                Err(batch) => {
+                    blocked.insert(batch.network.clone());
+                    still.push_back(batch);
+                }
+            }
+        }
+        self.deferred = still;
+    }
+}
+
+/// Leader loop: intake → batching (deadline-driven) → routing; never
+/// blocks on execution.
+pub(crate) fn leader_thread(
+    batcher_cfg: BatcherConfig,
+    backend_cfg: BackendCfg,
+    shard_batches: bool,
+    rx: mpsc::Receiver<LeaderCmd>,
+    lanes: Vec<LaneHandle>,
+    registry: BackendRegistry,
+    outstanding: HashMap<String, Arc<AtomicUsize>>,
+    metrics: Arc<Mutex<MetricsRegistry>>,
+    exec_handles: Vec<std::thread::JoinHandle<()>>,
+) {
+    let mut s = Scheduler {
+        batcher: DynamicBatcher::new(batcher_cfg),
+        cfg: backend_cfg,
+        shard_batches,
+        lanes,
+        registry,
+        outstanding,
+        pins: HashMap::new(),
+        deferred: VecDeque::new(),
+        waiters: HashMap::new(),
+        metrics,
+    };
+    // retry tick while batches are deferred (lane drain is observed via
+    // the shared depth counters, not messages)
+    let retry_tick = Duration::from_micros(200);
+    let mut shutdown = false;
+    'outer: loop {
+        // wait for a request, the next batching deadline, or — with
+        // deferred work — the backpressure retry tick
+        let deadline = match (s.batcher.next_deadline(), s.deferred.is_empty())
+        {
+            (Some(d), true) => Some(d),
+            (Some(d), false) => Some(d.min(Instant::now() + retry_tick)),
+            (None, false) => Some(Instant::now() + retry_tick),
+            (None, true) => None,
+        };
+        let cmd = match deadline {
+            Some(deadline) => {
+                let timeout =
+                    deadline.saturating_duration_since(Instant::now());
+                match rx.recv_timeout(timeout) {
+                    Ok(cmd) => Some(cmd),
+                    Err(mpsc::RecvTimeoutError::Timeout) => None,
+                    Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                }
+            }
+            None => match rx.recv() {
+                Ok(cmd) => Some(cmd),
+                Err(_) => break,
+            },
+        };
+        // §Perf L3: requests arriving while the devices execute pile up
+        // in the channel — drain the whole burst into the batcher
+        // *before* cutting, so continuous batching actually coalesces.
+        let mut cuts: Vec<Batch> = Vec::new();
+        if let Some(c) = cmd {
+            ingest(&mut s, c, &mut cuts, &mut shutdown);
+            while let Ok(more) = rx.try_recv() {
+                ingest(&mut s, more, &mut cuts, &mut shutdown);
+            }
+        } else if let Some(b) = s.batcher.poll(Instant::now()) {
+            cuts.push(b);
+        }
+        s.drain_deferred();
+        for batch in cuts {
+            s.dispatch_or_defer(batch);
+        }
+        // drain any additional ready batches (e.g. other networks)
+        while let Some(batch) = s.batcher.poll(Instant::now()) {
+            s.dispatch_or_defer(batch);
+        }
+        if shutdown {
+            break 'outer;
+        }
+    }
+    // flush whatever is still queued or deferred, then stop the lanes
+    let flush_at = Instant::now() + batcher_cfg.max_wait + Duration::from_secs(1);
+    while s.batcher.queued() > 0 {
+        match s.batcher.poll(flush_at) {
+            Some(batch) => s.dispatch_or_defer(batch),
+            None => break,
+        }
+    }
+    let give_up = Instant::now() + Duration::from_secs(10);
+    while !s.deferred.is_empty() && Instant::now() < give_up {
+        s.drain_deferred();
+        if !s.deferred.is_empty() {
+            std::thread::sleep(retry_tick);
+        }
+    }
+    for lane in &s.lanes {
+        let _ = lane.tx.send(LaneCmd::Shutdown);
+    }
+    for h in exec_handles {
+        let _ = h.join();
+    }
+}
+
+fn ingest(
+    s: &mut Scheduler,
+    cmd: LeaderCmd,
+    cuts: &mut Vec<Batch>,
+    shutdown: &mut bool,
+) {
+    match cmd {
+        LeaderCmd::Submit(req, reply) => {
+            // admission control: with this much work already waiting
+            // for lane capacity, reject instead of queueing unboundedly
+            // (dropping the reply errors the caller)
+            if s.deferred.len() >= s.cfg.admit_max_deferred {
+                s.metrics.lock().unwrap().record_rejected();
+                drop(reply);
+                return;
+            }
+            s.waiters.insert(req.id, reply);
+            if let Some(b) = s.batcher.push(req, Instant::now()) {
+                cuts.push(b);
+            }
+        }
+        LeaderCmd::Shutdown => *shutdown = true,
+    }
+}

@@ -1,40 +1,32 @@
-//! The coordinator proper: a **leader thread** (request intake + dynamic
-//! batching + dispatch) and a **pool of device-executor threads** (PJRT
-//! or pure-Rust numerics + FPGA/GPU edge-timing annotations + power
-//! integration), joined by channels — the same split a vLLM-style router
-//! runs, implemented on std threads (the offline build environment ships
-//! no async runtime; see DESIGN.md §Offline-environment).
+//! The coordinator's public face: configuration, startup wiring and the
+//! client API (submit / serve_workload / report).  The work happens in
+//! the submodules it wires together:
 //!
-//! Executor-pool design:
+//! * [`super::registry`] — which lanes *can* serve which logical
+//!   networks (capability map, built at startup);
+//! * [`super::scheduler`] — the leader thread: intake, dynamic
+//!   batching, capability- and cost-aware routing with per-network
+//!   ordering, backpressure and admission control;
+//! * [`super::executor`] — one FIFO lane thread per pool backend, each
+//!   owning a live [`crate::backend::Backend`] (FPGA simulator, GPU
+//!   thermal model, or the host CPU numeric path).
 //!
-//! * each executor owns its own `Runtime` and compiled executables (PJRT
-//!   handles are not `Sync`), plus its own GPU thermal state;
-//! * batches route by **per-network affinity** (network → executor), so
-//!   one network's batches stay ordered on one device and its DVFS/cache
-//!   state remains coherent, while distinct networks execute truly
-//!   concurrently;
-//! * the leader never blocks on execution: the reply channels travel
-//!   with the batch, the executor records metrics and resolves waiters
-//!   itself, and the leader goes straight back to intake/batching — so
-//!   `serve_workload` scales with cores instead of serializing through
-//!   one dispatch round-trip.
+//! Every lane loads every network it is capable of serving (routing is
+//! dynamic — any capable lane may receive any batch), and all lanes
+//! produce bit-identical f32 images for the same seeds, so the pool
+//! composition only changes *timing*, never *content*.
 
-use super::batcher::{Batch, BatcherConfig, DynamicBatcher};
+use super::batcher::BatcherConfig;
+use super::executor::{lane_thread, LaneCmd, LaneShared, LaneSpec};
 use super::metrics::{MetricsRegistry, ServingReport};
+use super::registry::BackendRegistry;
 use super::request::{InferenceRequest, InferenceResponse};
-use crate::artifacts::ArtifactDir;
-use crate::config::{
-    network_by_name, NetworkCfg, Precision, QFormat, JETSON_TX1, PYNQ_Z2,
-};
-use crate::fpga::{simulate_network, SimOpts};
-use crate::gpu::{expected_gpu_network_time, ThermalThrottle};
-use crate::quant::{QuantizedGenerator, Rounding};
-use crate::runtime::{GeneratorExecutable, Runtime};
-use crate::tensor::Tensor;
-use crate::util::{Rng, WorkerPool};
+use super::scheduler::{leader_thread, LaneHandle, LeaderCmd};
+use crate::config::{BackendCfg, DeviceKind, Precision, QFormat};
+use crate::util::Rng;
 use anyhow::{Context, Result};
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -46,17 +38,22 @@ pub struct CoordinatorConfig {
     /// request path).
     pub networks: Vec<String>,
     pub batcher: BatcherConfig,
-    /// Device-executor threads.  `0` = auto: one per preloaded network
-    /// (per-network affinity makes more executors than networks idle).
+    /// Heterogeneous device pool: one executor lane per entry in
+    /// `backends.kinds`, plus the scheduler's queue bounds.
+    pub backends: BackendCfg,
+    /// Total lane override: `0` = one lane per `backends.kinds` entry;
+    /// `n > 0` = cycle the kinds list to `n` lanes (e.g. kinds
+    /// `[fpga, cpu]` with `executors: 4` → `fpga0 cpu0 fpga1 cpu1`).
     pub executors: usize,
     /// When set, every preloaded network also serves a fixed-point twin
     /// under the logical name `<name>.q` (quantized at startup with
     /// per-layer scale calibration) — side by side with the f32 path.
+    /// Twins route only to fixed-point-capable backends (not the GPU).
     pub quant: Option<QFormat>,
     /// Intra-batch parallelism: split multi-request batches across the
-    /// executor pool (round-robin at request granularity) instead of
-    /// batch-at-a-time dispatch.  Requires every executor to load every
-    /// network, so it trades startup memory for tail latency.
+    /// capable lanes (round-robin at request granularity) instead of
+    /// batch-at-a-time dispatch.  Trades the per-network ordering
+    /// guarantee for tail latency.
     pub shard_batches: bool,
 }
 
@@ -66,6 +63,7 @@ impl Default for CoordinatorConfig {
             artifacts_dir: "artifacts".into(),
             networks: vec!["mnist".to_string()],
             batcher: BatcherConfig::default(),
+            backends: BackendCfg::default(),
             executors: 0,
             quant: None,
             shard_batches: false,
@@ -73,14 +71,32 @@ impl Default for CoordinatorConfig {
     }
 }
 
-/// All logical network names this config serves: the base (f32)
-/// networks plus their `.q` quantized twins when enabled.
-fn logical_networks(config: &CoordinatorConfig) -> Vec<String> {
-    let mut names = config.networks.clone();
-    if config.quant.is_some() {
-        names.extend(config.networks.iter().map(|n| format!("{n}.q")));
+/// All logical networks this config serves, with served precisions:
+/// the base (f32) networks plus their `.q` quantized twins when
+/// enabled.
+fn logical_networks(config: &CoordinatorConfig) -> Vec<(String, Precision)> {
+    let mut names: Vec<(String, Precision)> = config
+        .networks
+        .iter()
+        .map(|n| (n.clone(), Precision::F32))
+        .collect();
+    if let Some(fmt) = config.quant {
+        names.extend(
+            config
+                .networks
+                .iter()
+                .map(|n| (format!("{n}.q"), Precision::Fixed(fmt))),
+        );
     }
     names
+}
+
+/// Expand the kinds list to the requested lane count (cycling).
+fn expand_kinds(kinds: &[DeviceKind], executors: usize) -> Vec<DeviceKind> {
+    if executors == 0 || kinds.is_empty() {
+        return kinds.to_vec();
+    }
+    (0..executors).map(|i| kinds[i % kinds.len()]).collect()
 }
 
 /// A synthetic open-loop workload for [`Coordinator::serve_workload`].
@@ -92,45 +108,6 @@ pub struct WorkloadSpec {
     /// Mean inter-arrival gap (uniform ±50% jitter applied).
     pub interarrival: Duration,
     pub seed: u64,
-}
-
-enum LeaderCmd {
-    Submit(InferenceRequest, mpsc::Sender<InferenceResponse>),
-    Shutdown,
-}
-
-enum DeviceCmd {
-    Execute {
-        batch: Batch,
-        /// Reply channel per request id; dropped on failure so callers
-        /// observe an error instead of hanging.
-        replies: Vec<(u64, mpsc::Sender<InferenceResponse>)>,
-    },
-    Shutdown,
-}
-
-struct ExecutedBatch {
-    responses: Vec<InferenceResponse>,
-    execute_s: f64,
-    ops: u64,
-    energy_j: f64,
-}
-
-/// Per-network state owned by one executor thread.
-struct NetState {
-    cfg: NetworkCfg,
-    /// Executables keyed by batch bucket (f32 path; empty for `.q`).
-    executables: HashMap<usize, GeneratorExecutable>,
-    buckets: Vec<usize>,
-    weights: Vec<(Tensor, Vec<f32>)>,
-    /// Quantized twin (`.q` logical networks): the calibrated
-    /// fixed-point generator, executed through the reverse-loop
-    /// substrate directly.
-    quant: Option<QuantizedGenerator>,
-    /// Precomputed dense FPGA edge timing/energy for one image (at the
-    /// network's served precision).
-    fpga_time_s: f64,
-    fpga_energy_j: f64,
 }
 
 /// Pending-response handle (resolves when the request's batch executes).
@@ -152,72 +129,108 @@ impl ResponseHandle {
     }
 }
 
-/// The edge-serving coordinator (leader + executor pool).
+/// The edge-serving coordinator (scheduler + heterogeneous lane pool).
 pub struct Coordinator {
     tx_leader: mpsc::Sender<LeaderCmd>,
     metrics: Arc<Mutex<MetricsRegistry>>,
     next_id: AtomicU64,
     started: Instant,
-    executors: usize,
+    lanes: usize,
+    lane_names: Vec<String>,
     leader: Option<std::thread::JoinHandle<()>>,
 }
 
 impl Coordinator {
-    /// Start the executor pool (each thread compiling all executables)
-    /// and the leader/batching thread.
+    /// Start the lane pool (each thread instantiating its backend and
+    /// loading its routable networks) and the scheduler thread.
     pub fn start(config: CoordinatorConfig) -> Result<Self> {
-        // auto sizing counts *logical* networks (the `.q` twins are
-        // full serving paths of their own), so mixed f32/quant traffic
-        // actually runs concurrently
-        let n_exec = if config.executors == 0 {
-            logical_networks(&config).len().max(1)
-        } else {
-            config.executors
-        };
+        let logical = logical_networks(&config);
+        let kinds = expand_kinds(&config.backends.kinds, config.executors);
+        let registry = BackendRegistry::build(&kinds, &logical)?;
+        let n_lanes = registry.lanes().len();
+        anyhow::ensure!(n_lanes > 0, "backend pool is empty");
         let metrics = Arc::new(Mutex::new(MetricsRegistry::new()));
+        let precisions: HashMap<String, Precision> =
+            logical.iter().cloned().collect();
+        let outstanding: HashMap<String, Arc<AtomicUsize>> = logical
+            .iter()
+            .map(|(n, _)| (n.clone(), Arc::new(AtomicUsize::new(0))))
+            .collect();
+        let exec_seq = Arc::new(AtomicU64::new(0));
 
-        let mut exec_txs = Vec::with_capacity(n_exec);
-        let mut exec_handles = Vec::with_capacity(n_exec);
-        let mut readiness = Vec::with_capacity(n_exec);
-        for i in 0..n_exec {
-            let (tx_dev, rx_dev) = mpsc::channel::<DeviceCmd>();
-            let (tx_ready, rx_ready) = mpsc::channel::<Result<()>>();
-            let cfg = config.clone();
-            let m = metrics.clone();
+        let mut lane_txs = Vec::with_capacity(n_lanes);
+        let mut depths = Vec::with_capacity(n_lanes);
+        let mut exec_handles = Vec::with_capacity(n_lanes);
+        let mut readiness = Vec::with_capacity(n_lanes);
+        for (i, info) in registry.lanes().iter().enumerate() {
+            let spec = LaneSpec {
+                name: info.name.clone(),
+                kind: info.kind,
+                networks: registry
+                    .networks_for_lane(i)
+                    .into_iter()
+                    .map(|n| {
+                        let p = precisions[&n];
+                        (n, p)
+                    })
+                    .collect(),
+                n_lanes,
+                artifacts_dir: config.artifacts_dir.clone(),
+            };
+            let depth = Arc::new(AtomicUsize::new(0));
+            let shared = LaneShared {
+                metrics: metrics.clone(),
+                depth: depth.clone(),
+                outstanding: outstanding.clone(),
+                exec_seq: exec_seq.clone(),
+            };
+            let (tx_lane, rx_lane) = mpsc::channel::<LaneCmd>();
+            let (tx_ready, rx_ready) = mpsc::channel();
             let handle = std::thread::Builder::new()
-                .name(format!("edgedcnn-device-{i}"))
-                .spawn(move || device_thread(cfg, i, n_exec, rx_dev, tx_ready, m))
-                .context("spawning device thread")?;
-            exec_txs.push(tx_dev);
+                .name(format!("edgedcnn-{}", info.name))
+                .spawn(move || lane_thread(spec, rx_lane, tx_ready, shared))
+                .context("spawning executor lane")?;
+            lane_txs.push(tx_lane);
+            depths.push(depth);
             exec_handles.push(handle);
             readiness.push(rx_ready);
         }
-        for rx in readiness {
-            rx.recv()
-                .context("device thread died during startup")??;
+        let mut lanes = Vec::with_capacity(n_lanes);
+        for ((rx, tx), depth) in
+            readiness.into_iter().zip(lane_txs).zip(depths)
+        {
+            let startup = rx
+                .recv()
+                .context("executor lane died during startup")??;
+            lanes.push(LaneHandle {
+                tx,
+                depth,
+                costs: startup.costs.into_iter().collect(),
+            });
         }
-
-        // Per-network affinity: logical network i → executor i mod pool
-        // (the `.q` twins land after the f32 names, so mixed f32/quant
-        // workloads spread across the pool).
-        let affinity: HashMap<String, usize> = logical_networks(&config)
-            .into_iter()
-            .enumerate()
-            .map(|(i, n)| (n, i % n_exec))
-            .collect();
 
         let (tx_leader, rx_leader) = mpsc::channel::<LeaderCmd>();
         let batcher_cfg = config.batcher;
+        let backend_cfg = config.backends.clone();
         let shard_batches = config.shard_batches;
+        let lane_names: Vec<String> = registry
+            .lanes()
+            .iter()
+            .map(|l| l.name.clone())
+            .collect();
+        let m = metrics.clone();
         let leader = std::thread::Builder::new()
             .name("edgedcnn-leader".into())
             .spawn(move || {
                 leader_thread(
                     batcher_cfg,
+                    backend_cfg,
                     shard_batches,
                     rx_leader,
-                    exec_txs,
-                    affinity,
+                    lanes,
+                    registry,
+                    outstanding,
+                    m,
                     exec_handles,
                 )
             })
@@ -227,14 +240,21 @@ impl Coordinator {
             metrics,
             next_id: AtomicU64::new(1),
             started: Instant::now(),
-            executors: n_exec,
+            lanes: n_lanes,
+            lane_names,
             leader: Some(leader),
         })
     }
 
-    /// Width of the executor pool actually running.
+    /// Width of the lane pool actually running.
     pub fn executors(&self) -> usize {
-        self.executors
+        self.lanes
+    }
+
+    /// Lane (backend) names in lane-index order, e.g.
+    /// `["fpga0", "gpu0", "cpu0"]`.
+    pub fn backend_names(&self) -> &[String] {
+        &self.lane_names
     }
 
     /// Submit one request; returns a handle resolving when its batch has
@@ -316,449 +336,43 @@ impl Drop for Coordinator {
     }
 }
 
-/// Leader loop: intake → dynamic batching (deadline-driven) → dispatch
-/// to the affine executor (never blocking on execution), optionally
-/// sharding multi-request batches across the pool.
-fn leader_thread(
-    config: BatcherConfig,
-    shard_batches: bool,
-    rx: mpsc::Receiver<LeaderCmd>,
-    executors: Vec<mpsc::Sender<DeviceCmd>>,
-    affinity: HashMap<String, usize>,
-    exec_handles: Vec<std::thread::JoinHandle<()>>,
-) {
-    let mut batcher = DynamicBatcher::new(config);
-    let mut waiters: HashMap<u64, mpsc::Sender<InferenceResponse>> =
-        HashMap::new();
-    let mut shutdown = false;
-    'outer: loop {
-        // wait for a request or the next batching deadline
-        let cmd = match batcher.next_deadline() {
-            Some(deadline) => {
-                let now = Instant::now();
-                let timeout = deadline.saturating_duration_since(now);
-                match rx.recv_timeout(timeout) {
-                    Ok(cmd) => Some(cmd),
-                    Err(mpsc::RecvTimeoutError::Timeout) => None,
-                    Err(mpsc::RecvTimeoutError::Disconnected) => break,
-                }
-            }
-            None => match rx.recv() {
-                Ok(cmd) => Some(cmd),
-                Err(_) => break,
-            },
-        };
-        // §Perf L3: requests arriving while the devices execute pile up
-        // in the channel — drain the whole burst into the batcher
-        // *before* cutting, so continuous batching actually coalesces.
-        let mut cuts: Vec<Batch> = Vec::new();
-        let ingest = |cmd: LeaderCmd,
-                          batcher: &mut DynamicBatcher,
-                          waiters: &mut HashMap<
-            u64,
-            mpsc::Sender<InferenceResponse>,
-        >,
-                          cuts: &mut Vec<Batch>,
-                          shutdown: &mut bool| {
-            match cmd {
-                LeaderCmd::Submit(req, reply) => {
-                    waiters.insert(req.id, reply);
-                    if let Some(b) = batcher.push(req, Instant::now()) {
-                        cuts.push(b);
-                    }
-                }
-                LeaderCmd::Shutdown => *shutdown = true,
-            }
-        };
-        match cmd {
-            Some(c) => {
-                ingest(c, &mut batcher, &mut waiters, &mut cuts, &mut shutdown);
-                while let Ok(more) = rx.try_recv() {
-                    ingest(
-                        more,
-                        &mut batcher,
-                        &mut waiters,
-                        &mut cuts,
-                        &mut shutdown,
-                    );
-                }
-            }
-            None => {
-                if let Some(b) = batcher.poll(Instant::now()) {
-                    cuts.push(b);
-                }
-            }
-        }
-        for batch in cuts {
-            dispatch(&executors, &affinity, batch, &mut waiters, shard_batches);
-        }
-        // drain any additional ready batches (e.g. other networks)
-        while let Some(batch) = batcher.poll(Instant::now()) {
-            dispatch(&executors, &affinity, batch, &mut waiters, shard_batches);
-        }
-        if shutdown {
-            break 'outer;
-        }
-    }
-    // flush whatever is still queued, then stop the executor pool
-    let flush_at = Instant::now() + config.max_wait + Duration::from_secs(1);
-    while batcher.queued() > 0 {
-        match batcher.poll(flush_at) {
-            Some(batch) => {
-                dispatch(&executors, &affinity, batch, &mut waiters, shard_batches)
-            }
-            None => break,
-        }
-    }
-    for tx in &executors {
-        let _ = tx.send(DeviceCmd::Shutdown);
-    }
-    for h in exec_handles {
-        let _ = h.join();
-    }
-}
+#[cfg(test)]
+mod tests {
+    use super::*;
 
-/// Route a batch to its network's executor.  Non-blocking: the reply
-/// channels travel with the batch, so the leader returns to intake
-/// immediately and distinct networks execute concurrently.
-///
-/// With `shard` enabled and ≥ 2 requests in the batch, the batch is
-/// split round-robin at *request* granularity across the executor pool
-/// (intra-batch parallelism).  Request boundaries keep every response
-/// self-contained, so no reassembly step is needed — and since latents
-/// derive from per-request seeds, per-request images are identical with
-/// sharding on or off (asserted by the integration tests).
-fn dispatch(
-    executors: &[mpsc::Sender<DeviceCmd>],
-    affinity: &HashMap<String, usize>,
-    batch: Batch,
-    waiters: &mut HashMap<u64, mpsc::Sender<InferenceResponse>>,
-    shard: bool,
-) {
-    let base = affinity
-        .get(&batch.network)
-        .copied()
-        .unwrap_or(0)
-        .min(executors.len().saturating_sub(1));
-    if shard && batch.requests.len() >= 2 && executors.len() >= 2 {
-        let n_shards = executors.len().min(batch.requests.len());
-        let network = batch.network;
-        let mut groups: Vec<Vec<InferenceRequest>> =
-            (0..n_shards).map(|_| Vec::new()).collect();
-        for (i, r) in batch.requests.into_iter().enumerate() {
-            groups[i % n_shards].push(r);
-        }
-        for (gi, requests) in groups.into_iter().enumerate() {
-            let n_images = requests.iter().map(|r| r.n_images).sum();
-            let shard_batch = Batch {
-                network: network.clone(),
-                requests,
-                n_images,
-            };
-            send_to_executor(
-                executors,
-                (base + gi) % executors.len(),
-                shard_batch,
-                waiters,
-            );
-        }
-    } else {
-        send_to_executor(executors, base, batch, waiters);
-    }
-}
-
-fn send_to_executor(
-    executors: &[mpsc::Sender<DeviceCmd>],
-    idx: usize,
-    batch: Batch,
-    waiters: &mut HashMap<u64, mpsc::Sender<InferenceResponse>>,
-) {
-    let mut replies = Vec::with_capacity(batch.requests.len());
-    for r in &batch.requests {
-        if let Some(tx) = waiters.remove(&r.id) {
-            replies.push((r.id, tx));
-        }
-    }
-    if executors[idx]
-        .send(DeviceCmd::Execute { batch, replies })
-        .is_err()
-    {
-        // executor gone: the replies just dropped, so every caller of
-        // this batch observes an error instead of hanging
-        eprintln!("executor {idx} is down; dropping a batch");
-    }
-}
-
-/// One device-executor thread: owns a runtime and the compiled
-/// executables of *its affine networks only* (affinity is static, so
-/// loading the rest would waste startup time and memory pool-wide —
-/// unless intra-batch sharding is on, which routes any network to any
-/// executor and therefore loads everything everywhere); also carries
-/// the FPGA/GPU edge models for annotations.  Records metrics and
-/// resolves waiters itself so the leader never blocks on execution.
-fn device_thread(
-    config: CoordinatorConfig,
-    exec_index: usize,
-    n_exec: usize,
-    rx: mpsc::Receiver<DeviceCmd>,
-    ready: mpsc::Sender<Result<()>>,
-    metrics: Arc<Mutex<MetricsRegistry>>,
-) {
-    let setup = (|| -> Result<(Runtime, WorkerPool, HashMap<String, NetState>)> {
-        let artifacts = ArtifactDir::open(&config.artifacts_dir)?;
-        // split the host's compute budget across the pool so executors
-        // running concurrently don't oversubscribe the CPU (the width
-        // honours the EDGEDCNN_WORKERS override)
-        let host_workers = WorkerPool::with_default_parallelism().workers();
-        let exec_pool = WorkerPool::new((host_workers / n_exec).max(1));
-        let runtime = Runtime::cpu_with_workers(exec_pool.workers())?;
-        let mut nets = HashMap::new();
-        let names = logical_networks(&config);
-        for (ni, name) in names.iter().enumerate() {
-            // mirror of the leader's affinity map: logical network i →
-            // executor i mod n_exec (sharding loads all networks on all
-            // executors)
-            if !config.shard_batches && ni % n_exec != exec_index {
-                continue;
-            }
-            let base = name.strip_suffix(".q").unwrap_or(name);
-            let manifest_net = artifacts.network(base)?;
-            let cfg = artifacts.network_cfg(base)?;
-            // sanity: manifest must agree with the built-in architecture
-            let builtin = network_by_name(base)?;
-            anyhow::ensure!(
-                cfg.layers == builtin.layers,
-                "manifest/{base} diverges from built-in config"
-            );
-            let weights = artifacts.load_weights(base)?;
-            if name.ends_with(".q") {
-                // quantized twin: calibrate+quantize at startup, and
-                // annotate with the FPGA model at the fixed-point
-                // datapath (narrower AXI words, packed MAC lanes)
-                let fmt = config
-                    .quant
-                    .expect("`.q` network names require `quant: Some(..)`");
-                let qgen = QuantizedGenerator::quantize(
-                    fmt,
-                    &weights,
-                    Rounding::Nearest,
-                )?;
-                let opts: Vec<SimOpts> = cfg
-                    .layers
-                    .iter()
-                    .map(|_| {
-                        SimOpts::dense_at(cfg.tile, Precision::Fixed(fmt))
-                    })
-                    .collect();
-                let sim = simulate_network(&cfg, &PYNQ_Z2, &opts);
-                nets.insert(
-                    name.clone(),
-                    NetState {
-                        buckets: Vec::new(),
-                        executables: HashMap::new(),
-                        weights: Vec::new(),
-                        quant: Some(qgen),
-                        fpga_time_s: sim.total_time_s,
-                        fpga_energy_j: sim.total_time_s * sim.mean_power_w,
-                        cfg,
-                    },
-                );
-                continue;
-            }
-            let mut executables = HashMap::new();
-            for &bs in &manifest_net.batch_sizes {
-                executables
-                    .insert(bs, runtime.load_generator(&artifacts, base, bs)?);
-            }
-            // edge annotations honour the manifest's declared datapath
-            // precision (f32 when absent)
-            let opts: Vec<SimOpts> = cfg
-                .layers
-                .iter()
-                .map(|_| SimOpts::dense_at(cfg.tile, cfg.precision))
-                .collect();
-            let sim = simulate_network(&cfg, &PYNQ_Z2, &opts);
-            nets.insert(
-                name.clone(),
-                NetState {
-                    buckets: manifest_net.batch_sizes.clone(),
-                    executables,
-                    weights,
-                    quant: None,
-                    fpga_time_s: sim.total_time_s,
-                    fpga_energy_j: sim.total_time_s * sim.mean_power_w,
-                    cfg,
-                },
-            );
-        }
-        Ok((runtime, exec_pool, nets))
-    })();
-
-    let (_runtime, exec_pool, mut nets) = match setup {
-        Ok(v) => {
-            let _ = ready.send(Ok(()));
-            v
-        }
-        Err(e) => {
-            let _ = ready.send(Err(e));
-            return;
-        }
-    };
-
-    let mut gpu_throttle = ThermalThrottle::new(JETSON_TX1);
-    while let Ok(cmd) = rx.recv() {
-        match cmd {
-            DeviceCmd::Shutdown => break,
-            DeviceCmd::Execute { batch, replies } => {
-                match execute_batch(&mut nets, &mut gpu_throttle, &exec_pool, batch) {
-                    Ok(done) => {
-                        let mut reply_by_id: HashMap<
-                            u64,
-                            mpsc::Sender<InferenceResponse>,
-                        > = replies.into_iter().collect();
-                        let mut m = metrics.lock().unwrap();
-                        m.record_batch(
-                            done.execute_s,
-                            done.responses
-                                .iter()
-                                .map(|r| r.images.shape()[0])
-                                .sum(),
-                            done.ops,
-                        );
-                        m.record_energy(done.energy_j);
-                        for resp in done.responses {
-                            m.record_request(
-                                resp.latency_s,
-                                resp.images.shape()[0],
-                            );
-                            if let Some(tx) = reply_by_id.remove(&resp.id) {
-                                let _ = tx.send(resp);
-                            }
-                        }
-                    }
-                    Err(e) => {
-                        eprintln!("device execution failed: {e:#}");
-                        // dropping `replies` errors the callers
-                    }
-                }
-            }
-        }
-    }
-}
-
-fn execute_batch(
-    nets: &mut HashMap<String, NetState>,
-    gpu_throttle: &mut ThermalThrottle,
-    exec_pool: &WorkerPool,
-    batch: Batch,
-) -> Result<ExecutedBatch> {
-    let state = nets.get_mut(&batch.network).ok_or_else(|| {
-        anyhow::anyhow!("network {:?} not loaded", batch.network)
-    })?;
-
-    // deterministic latents: one RNG per request, in order
-    let mut latents: Vec<f32> =
-        Vec::with_capacity(batch.n_images * state.cfg.z_dim);
-    for req in &batch.requests {
-        let mut rng = Rng::seed_from_u64(req.seed);
-        for _ in 0..req.n_images * state.cfg.z_dim {
-            latents.push(rng.normal_f32());
-        }
-    }
-
-    let mut execute_s = 0.0;
-    let all_rows: Vec<f32> = if let Some(qgen) = &state.quant {
-        // quantized twin: one fixed-point forward for the whole batch
-        // (no bucketing — the reverse-loop substrate takes any N)
-        let zt = Tensor::new(vec![batch.n_images, state.cfg.z_dim], latents)?;
-        let t0 = Instant::now();
-        let (images, _stats) = qgen.generate(&state.cfg, &zt, exec_pool);
-        execute_s += t0.elapsed().as_secs_f64();
-        images.into_data()
-    } else {
-        // bucket execution: smallest exported bucket ≥ remaining, else
-        // the largest repeatedly (vLLM-style bucketed continuous
-        // batching)
-        let largest = *state.buckets.iter().max().unwrap();
-        let mut remaining = batch.n_images;
-        let mut offset = 0usize;
-        let mut rows: Vec<f32> = Vec::with_capacity(
-            batch.n_images
-                * state.cfg.image_channels
-                * state.cfg.image_size
-                * state.cfg.image_size,
+    #[test]
+    fn kinds_expand_cyclically() {
+        let kinds = [DeviceKind::Fpga, DeviceKind::Cpu];
+        assert_eq!(expand_kinds(&kinds, 0), kinds.to_vec());
+        assert_eq!(
+            expand_kinds(&kinds, 5),
+            vec![
+                DeviceKind::Fpga,
+                DeviceKind::Cpu,
+                DeviceKind::Fpga,
+                DeviceKind::Cpu,
+                DeviceKind::Fpga
+            ]
         );
-        while remaining > 0 {
-            let bucket = state
-                .buckets
-                .iter()
-                .copied()
-                .filter(|b| *b >= remaining)
-                .min()
-                .unwrap_or(largest);
-            let take = bucket.min(remaining);
-            let exe = state.executables.get(&bucket).unwrap();
-            // pad the bucket with zero latents when partially filled
-            let mut z = vec![0.0f32; bucket * state.cfg.z_dim];
-            z[..take * state.cfg.z_dim].copy_from_slice(
-                &latents[offset * state.cfg.z_dim
-                    ..(offset + take) * state.cfg.z_dim],
-            );
-            let zt = Tensor::new(vec![bucket, state.cfg.z_dim], z)?;
-            let t0 = Instant::now();
-            let out = exe.generate(&zt, &state.weights)?;
-            execute_s += t0.elapsed().as_secs_f64();
-            let numel = exe.image_numel();
-            rows.extend_from_slice(&out.data()[..take * numel]);
-            remaining -= take;
-            offset += take;
-        }
-        rows
-    };
-
-    // edge-device annotations for the whole batch
-    let fpga_time = state.fpga_time_s * batch.n_images as f64;
-    let gpu_time = expected_gpu_network_time(
-        &state.cfg,
-        &JETSON_TX1,
-        gpu_throttle,
-        batch.n_images,
-    );
-    let energy = state.fpga_energy_j * batch.n_images as f64;
-    let ops = state.cfg.total_ops() * batch.n_images as u64;
-
-    // split images back to requests
-    let numel = state.cfg.image_channels
-        * state.cfg.image_size
-        * state.cfg.image_size;
-    let mut responses = Vec::with_capacity(batch.requests.len());
-    let mut row = 0usize;
-    for req in &batch.requests {
-        let n = req.n_images;
-        let data = all_rows[row * numel..(row + n) * numel].to_vec();
-        row += n;
-        responses.push(InferenceResponse {
-            id: req.id,
-            images: Tensor::new(
-                vec![
-                    n,
-                    state.cfg.image_channels,
-                    state.cfg.image_size,
-                    state.cfg.image_size,
-                ],
-                data,
-            )?,
-            latency_s: req.enqueued_at.elapsed().as_secs_f64(),
-            execute_s,
-            batch_size: batch.n_images,
-            fpga_time_s: fpga_time * n as f64 / batch.n_images as f64,
-            gpu_time_s: gpu_time * n as f64 / batch.n_images as f64,
-        });
     }
-    Ok(ExecutedBatch {
-        responses,
-        execute_s,
-        ops,
-        energy_j: energy,
-    })
+
+    #[test]
+    fn logical_networks_carry_precisions() {
+        let mut cfg = CoordinatorConfig {
+            networks: vec!["mnist".into()],
+            ..Default::default()
+        };
+        assert_eq!(
+            logical_networks(&cfg),
+            vec![("mnist".to_string(), Precision::F32)]
+        );
+        cfg.quant = Some(QFormat::new(16, 8));
+        let nets = logical_networks(&cfg);
+        assert_eq!(nets.len(), 2);
+        assert_eq!(nets[1].0, "mnist.q");
+        assert_eq!(
+            nets[1].1,
+            Precision::Fixed(QFormat::new(16, 8))
+        );
+    }
 }

@@ -11,8 +11,9 @@
 //! software mirror of the paper's spatial CU parallelism.  Both paths run
 //! the same per-tile kernel in the same order per tile, so they are
 //! **bit-identical** (tensors *and* op counts), which the integration and
-//! property tests assert.  Small tile jobs are claimed in chunks
-//! ([`WorkerPool::map_indexed_chunked`]) to amortize dispatch overhead;
+//! property tests assert.  Tile jobs are claimed in adaptively sized
+//! chunks ([`WorkerPool::map_indexed_auto`] — the first tile's measured
+//! cost seeds the claim granularity) to amortize dispatch overhead;
 //! chunking never changes results (each job still owns its slot).
 //!
 //! Generic over the element type ([`Element`]): each tile accumulates in
@@ -283,17 +284,12 @@ fn run_reverse_loop<T: Element>(
         t_i: input_tile_extent(t, k, s),
     };
     let jobs = tile_jobs(n, o_h, o_w, t);
-    // Chunked dispatch: when the per-tile workload is tiny, claiming one
-    // job per atomic fetch wastes the dispatch on overhead — batch the
-    // claims instead (results are identical; slots are per-job).
-    let per_tile_macs = c_in * c_out * k * k * t.div_ceil(s.max(1)).pow(2);
-    let chunk = if per_tile_macs < (1 << 14) {
-        (jobs.len() / (pool.workers() * 4)).max(1)
-    } else {
-        1
-    };
-    let results = pool
-        .map_indexed_chunked(jobs.len(), chunk, |i| execute_tile(&ctx, jobs[i]));
+    // Adaptive chunked dispatch: the first tile's measured cost seeds
+    // the claim granularity — tiny tiles get batched claims (amortized
+    // dispatch), heavy tiles get per-job claims (best balance).
+    // Results are identical for any chunk size (slots are per-job).
+    let results =
+        pool.map_indexed_auto(jobs.len(), |i| execute_tile(&ctx, jobs[i]));
 
     // Deterministic merge in job order: one-shot block writes into the
     // (disjoint) output regions, exact OpStats accumulation.

@@ -12,7 +12,8 @@ mod model;
 mod throttle;
 
 pub use model::{
-    expected_gpu_network_time, expected_time_s, simulate_gpu_layer,
+    expected_gpu_network_run, expected_gpu_network_time,
+    expected_gpu_network_time_at, expected_time_s, simulate_gpu_layer,
     simulate_gpu_network, GpuLayerRun, GpuRunOpts,
 };
 pub use throttle::ThermalThrottle;

@@ -167,7 +167,22 @@ pub fn expected_gpu_network_time(
     throttle: &mut ThermalThrottle,
     batch: usize,
 ) -> f64 {
+    expected_gpu_network_run(net, board, throttle, batch).0
+}
+
+/// Noise-free expected `(time_s, energy_j)` for a whole network at the
+/// *current* DVFS state, advancing the thermal model per layer — this is
+/// the [`crate::backend::GpuModelBackend`] execution model: the throttle
+/// is owned device state, so back-to-back batches heat the die and land
+/// at different clocks.
+pub fn expected_gpu_network_run(
+    net: &NetworkCfg,
+    board: &GpuBoard,
+    throttle: &mut ThermalThrottle,
+    batch: usize,
+) -> (f64, f64) {
     let mut total = 0.0;
+    let mut energy = 0.0;
     for l in &net.layers {
         let t = expected_time_s(l, board, throttle.clock_hz, batch);
         let util = utilization(l, batch);
@@ -176,8 +191,24 @@ pub fn expected_gpu_network_time(
                 * (0.25 + 0.75 * util / U_MAX);
         throttle.step(power, t, 0.0);
         total += t;
+        energy += power * t;
     }
-    total
+    (total, energy)
+}
+
+/// Noise-free expected network time at a *fixed* clock, touching no
+/// thermal state — the scheduler's cost estimate (a routing probe must
+/// not heat the die it is only asking about).
+pub fn expected_gpu_network_time_at(
+    net: &NetworkCfg,
+    board: &GpuBoard,
+    clock_hz: f64,
+    batch: usize,
+) -> f64 {
+    net.layers
+        .iter()
+        .map(|l| expected_time_s(l, board, clock_hz, batch))
+        .sum()
 }
 
 /// Execute all layers of a network once (layer-by-layer, as Torch does).

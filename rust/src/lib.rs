@@ -26,6 +26,14 @@
 //! quantized weights, and the coordinator serves quantized twins
 //! (`<name>.q`) side by side with f32.
 //!
+//! Cross-cutting: the **device-backend layer** ([`backend`]) — the
+//! FPGA simulator, the GPU thermal model and the host CPU numeric path
+//! wrapped as first-class schedulable backends behind one trait
+//! (capabilities, cost model, `execute → outcome`), pooled by the
+//! coordinator with capability- and cost-aware routing so the paper's
+//! FPGA-vs-GPU comparison happens per batch, live, with per-backend
+//! serving metrics.
+//!
 //! Cross-cutting: the **spatio-temporal parallel execution engine**
 //! ([`util::WorkerPool`]) — a dependency-free scoped worker pool with
 //! deterministic result ordering that mirrors the paper's hardware
@@ -42,6 +50,7 @@
 //! index, and `EXPERIMENTS.md` for paper-vs-measured results.
 
 pub mod artifacts;
+pub mod backend;
 pub mod config;
 pub mod coordinator;
 pub mod deconv;

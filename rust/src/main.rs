@@ -7,7 +7,9 @@
 
 use anyhow::{bail, Result};
 use edgedcnn::artifacts::ArtifactDir;
-use edgedcnn::config::{network_by_name, Precision, JETSON_TX1, PYNQ_Z2};
+use edgedcnn::config::{
+    network_by_name, BackendCfg, Precision, JETSON_TX1, PYNQ_Z2,
+};
 use edgedcnn::coordinator::{
     BatcherConfig, Coordinator, CoordinatorConfig, WorkloadSpec,
 };
@@ -34,12 +36,21 @@ COMMANDS:
   networks                   Fig. 4 architectures and op counts
   serve     [--network NET] [--requests N] [--images K]
             [--interarrival-ms MS] [--seed S] [--executors E]
+            [--backends fpga,gpu,cpu] [--queue-depth D]
             [--quant qI.F] [--shard]
-                             drive the edge-serving coordinator; --quant
+                             drive the edge-serving coordinator over a
+                             heterogeneous device-backend pool (one FIFO
+                             lane per --backends entry; batches route to
+                             the cheapest idle capable device and the
+                             report shows per-backend columns); --quant
                              additionally serves fixed-point twins as
-                             NET.q (e.g. --quant q8.8 --network mnist.q),
-                             --shard splits batches across the executor
-                             pool (intra-batch parallelism)
+                             NET.q (e.g. --quant q8.8 --network mnist.q)
+                             which route around the f32-only GPU,
+                             --shard splits batches across the capable
+                             lanes (intra-batch parallelism),
+                             --queue-depth bounds each lane's queue
+                             (backpressure), --executors E cycles the
+                             backends list to E lanes
   quant     [--network NET] [--samples N] [--seed S]
             [--bits B --frac F] [--export]
                              fixed-point quantized inference: sweep
@@ -233,10 +244,18 @@ fn main() -> Result<()> {
                 .strip_suffix(".q")
                 .unwrap_or(network.as_str())
                 .to_string();
+            let mut backends = BackendCfg::default();
+            if flags.has("backends") {
+                backends.kinds =
+                    BackendCfg::parse_kinds(&flags.get_str("backends", ""))?;
+            }
+            backends.max_queue_depth =
+                flags.get("queue-depth", backends.max_queue_depth)?;
             let coord = Coordinator::start(CoordinatorConfig {
                 artifacts_dir,
                 networks: vec![base],
                 batcher: BatcherConfig::default(),
+                backends,
                 executors,
                 quant,
                 shard_batches: flags.has("shard"),

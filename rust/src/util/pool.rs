@@ -118,6 +118,61 @@ impl WorkerPool {
             .collect()
     }
 
+    /// Chunk size for [`Self::map_indexed_chunked`] given a measured
+    /// per-job cost: claims get batched until the per-claim overhead
+    /// (one atomic fetch + one slot store, `CLAIM_OVERHEAD_NS`) is at
+    /// most `CLAIM_OVERHEAD_BUDGET` of a chunk's work — but never so
+    /// large that a worker holds fewer than ~4 chunks (load balance
+    /// degrades to static partitioning otherwise).  Results are chunk-
+    /// size independent; only dispatch overhead vs balance changes.
+    pub fn chunk_for_cost(per_job_cost_ns: f64, n: usize, workers: usize) -> usize {
+        /// Measured cost of one claim/slot round trip, nanoseconds
+        /// (atomic fetch_add + mutex slot store on a contended line).
+        const CLAIM_OVERHEAD_NS: f64 = 200.0;
+        /// Fraction of a chunk's work the claim may cost.
+        const CLAIM_OVERHEAD_BUDGET: f64 = 0.02;
+        if n == 0 {
+            return 1;
+        }
+        let per_job = per_job_cost_ns.max(1.0);
+        let ideal = (CLAIM_OVERHEAD_NS / (CLAIM_OVERHEAD_BUDGET * per_job))
+            .ceil() as usize;
+        let balance_cap = (n / (workers.max(1) * 4)).max(1);
+        ideal.clamp(1, balance_cap)
+    }
+
+    /// [`Self::map_indexed_chunked`] with **adaptive** chunk sizing:
+    /// job 0 runs inline and its measured duration seeds
+    /// [`Self::chunk_for_cost`] for the remaining jobs.  Expensive jobs
+    /// degenerate to per-job claims (best balance), tiny jobs get large
+    /// chunks (amortized dispatch) — no caller-side cost heuristics
+    /// needed.  Results are identical to `map_indexed` for any measured
+    /// cost.
+    pub fn map_indexed_auto<R, F>(&self, n: usize, f: F) -> Vec<R>
+    where
+        R: Send,
+        F: Fn(usize) -> R + Sync,
+    {
+        if n == 0 {
+            return Vec::new();
+        }
+        let t0 = std::time::Instant::now();
+        let first = f(0);
+        if self.workers == 1 || n == 1 {
+            let mut out = Vec::with_capacity(n);
+            out.push(first);
+            out.extend((1..n).map(f));
+            return out;
+        }
+        let cost_ns = t0.elapsed().as_nanos() as f64;
+        let chunk = Self::chunk_for_cost(cost_ns, n - 1, self.workers);
+        let rest = self.map_indexed_chunked(n - 1, chunk, |i| f(i + 1));
+        let mut out = Vec::with_capacity(n);
+        out.push(first);
+        out.extend(rest);
+        out
+    }
+
     /// Map `f` over a slice, preserving element order.
     pub fn map<T, R, F>(&self, items: &[T], f: F) -> Vec<R>
     where
@@ -256,5 +311,53 @@ mod tests {
         let pool = WorkerPool::new(0);
         assert_eq!(pool.workers(), 1);
         assert_eq!(pool.map_indexed(3, |i| i), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn chunk_for_cost_pins_known_cost_ratios() {
+        // expensive jobs: the claim overhead (200 ns) is noise → chunk 1
+        assert_eq!(WorkerPool::chunk_for_cost(1e6, 10_000, 4), 1);
+        // 10 µs jobs: 200/(0.02·10000) = 1 → still per-job claims
+        assert_eq!(WorkerPool::chunk_for_cost(10_000.0, 10_000, 4), 1);
+        // 100 ns jobs: 200/(0.02·100) = 100 → chunk 100 (cap 625)
+        assert_eq!(WorkerPool::chunk_for_cost(100.0, 10_000, 4), 100);
+        // 1 ns jobs: ideal 10000 but load balance caps at n/(4·workers)
+        assert_eq!(WorkerPool::chunk_for_cost(1.0, 10_000, 4), 625);
+        // the cap itself scales with worker count
+        assert_eq!(WorkerPool::chunk_for_cost(1.0, 10_000, 8), 312);
+        // degenerate inputs stay sane
+        assert_eq!(WorkerPool::chunk_for_cost(0.0, 7, 4), 1);
+        assert_eq!(WorkerPool::chunk_for_cost(1.0, 0, 4), 1);
+    }
+
+    #[test]
+    fn adaptive_matches_plain_map() {
+        let pool = WorkerPool::new(5);
+        let want: Vec<usize> = (0..300).map(|i| i * 7 + 3).collect();
+        // cheap jobs (large chunks) and artificially slow jobs (chunk 1)
+        assert_eq!(pool.map_indexed_auto(300, |i| i * 7 + 3), want);
+        let got = pool.map_indexed_auto(300, |i| {
+            if i == 0 {
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+            i * 7 + 3
+        });
+        assert_eq!(got, want);
+        // single-worker and tiny inputs run inline
+        assert_eq!(WorkerPool::new(1).map_indexed_auto(4, |i| i), vec![0, 1, 2, 3]);
+        assert_eq!(pool.map_indexed_auto(0, |i| i), Vec::<usize>::new());
+        assert_eq!(pool.map_indexed_auto(1, |i| i + 9), vec![9]);
+    }
+
+    #[test]
+    fn adaptive_runs_every_job_exactly_once() {
+        let pool = WorkerPool::new(4);
+        let counter = AtomicU64::new(0);
+        let got = pool.map_indexed_auto(97, |i| {
+            counter.fetch_add(1, Ordering::Relaxed);
+            i
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), 97);
+        assert_eq!(got, (0..97).collect::<Vec<_>>());
     }
 }

@@ -189,8 +189,8 @@ fn executor_pool_workload_report_is_consistent() {
 fn executor_pool_serves_networks_concurrently() {
     let dir = TempDir::new().unwrap();
     let coord = synthetic_coordinator(&dir, &["mnist", "celeba"], 0);
-    assert_eq!(coord.executors(), 2, "auto: one executor per network");
-    // submit to both networks at once; each resolves on its own executor
+    assert_eq!(coord.executors(), 3, "auto: one lane per default backend");
+    // submit to both networks at once; each can resolve on its own lane
     let hm = coord.submit("mnist", 1, 7).unwrap();
     let hc = coord.submit("celeba", 1, 7).unwrap();
     let m = hm.wait().unwrap();

@@ -126,6 +126,7 @@ fn quant_coordinator(dir: &TempDir, shard: bool, executors: usize) -> Coordinato
         executors,
         quant: Some(QFormat::new(16, 10)),
         shard_batches: shard,
+        ..Default::default()
     })
     .expect("coordinator startup")
 }

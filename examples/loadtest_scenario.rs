@@ -1,0 +1,47 @@
+//! Scenario-driven loadtest (DESIGN.md §Workload).
+//!
+//! Materializes the built-in `burst` scenario (two-state MMPP arrivals
+//! over the f32 network and its `mnist.q` fixed-point twin) into a
+//! deterministic trace, drives it open-loop against an fpga+gpu backend
+//! pool over repeated seeded trials, and prints the Table-2-style
+//! verdict: per-lane latency percentiles (coordinated-omission
+//! corrected), SLO attainment, device-latency CV, and throughput with
+//! bootstrap confidence intervals — the paper's run-to-run-stability
+//! claim as a live experiment.
+//!
+//! Run: `cargo run --release --example loadtest_scenario`
+//! (set `EDGEDCNN_ARTIFACTS`, or run `edgedcnn synth` first).
+
+use edgedcnn::config::{BackendCfg, DeviceKind};
+use edgedcnn::workload::{run_loadtest, LoadtestOpts, Scenario, Trace};
+
+fn main() -> anyhow::Result<()> {
+    let mut scenario = Scenario::builtin("burst")?;
+    scenario.requests = 64;
+    let trace = Trace::generate(&scenario)?;
+    println!(
+        "trace: {} requests over {:.3} s scheduled ({} f32 / {} quantized)",
+        trace.events.len(),
+        trace.duration_s(),
+        trace.events.iter().filter(|e| !e.network.ends_with(".q")).count(),
+        trace.events.iter().filter(|e| e.network.ends_with(".q")).count(),
+    );
+
+    let report = run_loadtest(
+        &trace,
+        &LoadtestOpts {
+            artifacts_dir: std::env::var("EDGEDCNN_ARTIFACTS")
+                .unwrap_or_else(|_| "artifacts".into())
+                .into(),
+            backends: BackendCfg {
+                kinds: vec![DeviceKind::Fpga, DeviceKind::Gpu],
+                ..Default::default()
+            },
+            executors: 0,
+            trials: 3,
+            shard_batches: true,
+        },
+    )?;
+    print!("{}", report.render());
+    Ok(())
+}

@@ -16,10 +16,10 @@ use crate::artifacts::ArtifactDir;
 use crate::config::{DeviceKind, NetworkCfg, JETSON_TX1};
 use crate::deconv::generator_forward_par;
 use crate::gpu::{
-    expected_gpu_network_run, expected_gpu_network_time_at, ThermalThrottle,
+    expected_gpu_network_time_at, measured_gpu_network_run, ThermalThrottle,
 };
 use crate::tensor::Tensor;
-use crate::util::WorkerPool;
+use crate::util::{Rng, WorkerPool};
 use anyhow::Result;
 use std::collections::HashMap;
 use std::time::Instant;
@@ -37,16 +37,21 @@ pub struct GpuModelBackend {
     nets: HashMap<String, GpuNet>,
     /// The device: DVFS/thermal state advanced per executed batch.
     throttle: ThermalThrottle,
+    /// Measurement-noise stream: each executed batch is one nvprof-style
+    /// *measured* run (time σ, interference stalls, power σ) — the
+    /// run-to-run variation half of the paper's Table II, live.
+    noise: Rng,
 }
 
 impl GpuModelBackend {
-    pub fn new(name: String, pool: WorkerPool) -> Self {
+    pub fn new(name: String, pool: WorkerPool, noise_seed: u64) -> Self {
         GpuModelBackend {
             name,
             caps: Capabilities::of_kind(DeviceKind::Gpu),
             pool,
             nets: HashMap::new(),
             throttle: ThermalThrottle::new(JETSON_TX1),
+            noise: Rng::seed_from_u64(noise_seed),
         }
     }
 }
@@ -82,10 +87,13 @@ impl Backend for GpuModelBackend {
     }
 
     fn cost_model(&self, network: &str) -> Option<CostModel> {
-        // boost-clock estimate: the scheduler's probe must not depend on
-        // (or advance) the live thermal state
+        // estimate at the clock the governor currently holds: reading
+        // the clock must not *advance* the thermal state (a routing
+        // probe never heats the die), but it must *see* it — the
+        // executor re-probes on throttle transitions so sustained load
+        // routes on throttled-clock costs, not boost-clock ones
         let net = self.nets.get(network)?;
-        let clock = JETSON_TX1.boost_clock_hz;
+        let clock = self.throttle.clock_hz;
         Some(CostModel {
             c1_s: expected_gpu_network_time_at(&net.cfg, &JETSON_TX1, clock, 1),
             c8_s: expected_gpu_network_time_at(&net.cfg, &JETSON_TX1, clock, 8),
@@ -100,9 +108,15 @@ impl Backend for GpuModelBackend {
         let t0 = Instant::now();
         let images = generator_forward_par(&net.cfg, &net.weights, z, &self.pool);
         let execute_s = t0.elapsed().as_secs_f64();
-        // the device accounting: advance the thermal state by this batch
-        let (device_time_s, energy_j) =
-            expected_gpu_network_run(&net.cfg, &JETSON_TX1, &mut self.throttle, n);
+        // the device accounting: one *measured* run (expected account ×
+        // nvprof-style noise), advancing the thermal state per layer
+        let (device_time_s, energy_j) = measured_gpu_network_run(
+            &net.cfg,
+            &JETSON_TX1,
+            &mut self.throttle,
+            n,
+            &mut self.noise,
+        );
         Ok(ExecutionOutcome {
             images,
             execute_s,
@@ -156,7 +170,7 @@ mod tests {
         let dir = TempDir::new().unwrap();
         let artifacts = write_synthetic(dir.path(), &["mnist"], 2, 5).unwrap();
         let mut be =
-            GpuModelBackend::new("gpu0".into(), WorkerPool::new(1));
+            GpuModelBackend::new("gpu0".into(), WorkerPool::new(1), 3);
         be.load(&mnist_spec(), &artifacts).unwrap();
         // the cost probe must not heat the die
         let cost = be.cost_model("mnist").unwrap();
@@ -177,11 +191,61 @@ mod tests {
     #[test]
     fn fixed_point_networks_are_rejected() {
         let mut be =
-            GpuModelBackend::new("gpu0".into(), WorkerPool::new(1));
+            GpuModelBackend::new("gpu0".into(), WorkerPool::new(1), 3);
         let dir = TempDir::new().unwrap();
         let artifacts = write_synthetic(dir.path(), &["mnist"], 2, 5).unwrap();
         let mut spec = mnist_spec();
         spec.precision = Precision::Fixed(QFormat::new(16, 8));
         assert!(be.load(&spec, &artifacts).is_err(), "f32-only datapath");
+    }
+
+    #[test]
+    fn measured_runs_vary_and_are_seeded() {
+        let dir = TempDir::new().unwrap();
+        let artifacts = write_synthetic(dir.path(), &["mnist"], 2, 5).unwrap();
+        let series = |seed: u64| {
+            let mut be =
+                GpuModelBackend::new("gpu0".into(), WorkerPool::new(1), seed);
+            be.load(&mnist_spec(), &artifacts).unwrap();
+            let z = Tensor::from_fn(vec![1, 100], |i| (i as f32 * 0.01).sin());
+            (0..25)
+                .map(|_| be.execute("mnist", &z).unwrap().device_time_s)
+                .collect::<Vec<f64>>()
+        };
+        let a = series(9);
+        assert_eq!(a, series(9), "noise stream is seed-deterministic");
+        assert_ne!(a, series(10), "seeds matter");
+        let s = crate::stats::Summary::of(&a);
+        assert!(
+            s.std / s.mean > 0.03,
+            "GPU serving lane must show the paper's run-to-run variation, \
+             cv={}",
+            s.std / s.mean
+        );
+    }
+
+    #[test]
+    fn cost_probe_tracks_the_governor_clock() {
+        let dir = TempDir::new().unwrap();
+        let artifacts = write_synthetic(dir.path(), &["mnist"], 2, 5).unwrap();
+        let mut be =
+            GpuModelBackend::new("gpu0".into(), WorkerPool::new(1), 1);
+        be.load(&mnist_spec(), &artifacts).unwrap();
+        let boost = be.cost_model("mnist").unwrap();
+        // hold the die hot: the governor steps the clock down and the
+        // re-probed cost model must get slower (this is what the
+        // executor's throttle-transition refresh feeds the scheduler)
+        be.throttle.temp_c = 40.0;
+        be.throttle.step(0.0, 0.0, 1e-9);
+        assert!(be.throttle.throttled());
+        let throttled = be.cost_model("mnist").unwrap();
+        assert!(
+            throttled.c1_s > boost.c1_s && throttled.c8_s > boost.c8_s,
+            "throttled probe must cost more: {throttled:?} vs {boost:?}"
+        );
+        // probing still never advances the thermal state
+        let t = be.throttle.temp_c;
+        let _ = be.cost_model("mnist");
+        assert_eq!(be.throttle.temp_c, t);
     }
 }

@@ -194,15 +194,20 @@ pub trait Backend {
 
 /// Instantiate a backend of the given kind under the given lane name
 /// (the registry is the naming authority — `fpga0`, `cpu1`, …); `pool`
-/// is the lane's share of the host compute budget.
+/// is the lane's share of the host compute budget and `noise_seed`
+/// seeds the device's measurement-noise stream (every executed batch
+/// is one *measured* run, Table-2 style — FPGA clock/DDR jitter, GPU
+/// nvprof-style noise; the CPU path measures real wall time and needs
+/// no synthetic noise).
 pub fn instantiate(
     kind: DeviceKind,
     name: String,
     pool: WorkerPool,
+    noise_seed: u64,
 ) -> Result<Box<dyn Backend>> {
     Ok(match kind {
-        DeviceKind::Fpga => Box::new(FpgaSimBackend::new(name, pool)),
-        DeviceKind::Gpu => Box::new(GpuModelBackend::new(name, pool)),
+        DeviceKind::Fpga => Box::new(FpgaSimBackend::new(name, pool, noise_seed)),
+        DeviceKind::Gpu => Box::new(GpuModelBackend::new(name, pool, noise_seed)),
         DeviceKind::Cpu => Box::new(CpuBackend::new(name, pool)?),
     })
 }

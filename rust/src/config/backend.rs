@@ -68,6 +68,11 @@ pub struct BackendCfg {
     /// already waiting for a lane, new requests are rejected outright
     /// (their callers observe an error instead of unbounded queueing).
     pub admit_max_deferred: usize,
+    /// Seed for the backends' measurement-noise streams (FPGA clock/DDR
+    /// jitter, GPU nvprof-style noise).  Deterministic per run; the
+    /// loadtest varies it per trial so repeated trials are independent
+    /// measurements rather than replays.
+    pub noise_seed: u64,
 }
 
 impl Default for BackendCfg {
@@ -76,6 +81,7 @@ impl Default for BackendCfg {
             kinds: vec![DeviceKind::Fpga, DeviceKind::Gpu, DeviceKind::Cpu],
             max_queue_depth: 4,
             admit_max_deferred: 256,
+            noise_seed: 0,
         }
     }
 }

@@ -40,13 +40,6 @@ pub(crate) enum LaneCmd {
     Shutdown,
 }
 
-/// What a lane reports back through the readiness channel: the cost
-/// models the scheduler routes on (it cannot call into the lane-owned
-/// backend itself).
-pub(crate) struct LaneStartup {
-    pub costs: Vec<(String, CostModel)>,
-}
-
 /// Static description of the lane to spawn.
 pub(crate) struct LaneSpec {
     pub name: String,
@@ -56,6 +49,10 @@ pub(crate) struct LaneSpec {
     /// Pool width (lanes split the host compute budget evenly).
     pub n_lanes: usize,
     pub artifacts_dir: std::path::PathBuf,
+    /// Seed for the backend's measurement-noise stream (per lane; the
+    /// loadtest varies it per trial so repeated trials are independent
+    /// measurements, not replays).
+    pub noise_seed: u64,
 }
 
 /// Counters shared with the scheduler.
@@ -69,6 +66,29 @@ pub(crate) struct LaneShared {
     /// Pool-global execution sequence (stamps responses so ordering is
     /// observable/testable).
     pub exec_seq: Arc<AtomicU64>,
+    /// Per-network cost models the scheduler routes on — written by
+    /// this lane at startup and re-probed on DVFS throttle transitions
+    /// (see [`refresh_costs`]).
+    pub costs: Arc<Mutex<HashMap<String, CostModel>>>,
+}
+
+/// Re-probe every loaded network's cost model into the shared map —
+/// called at lane startup and again whenever the device's throttle
+/// state flips, so the scheduler's routing tracks the clock the device
+/// actually runs at instead of the boost-clock startup probe.
+pub(crate) fn refresh_costs(
+    backend: &dyn Backend,
+    networks: impl Iterator<Item = impl AsRef<str>>,
+    costs: &Mutex<HashMap<String, CostModel>>,
+) {
+    let probed: Vec<(String, CostModel)> = networks
+        .filter_map(|n| {
+            backend
+                .cost_model(n.as_ref())
+                .map(|c| (n.as_ref().to_string(), c))
+        })
+        .collect();
+    costs.lock().unwrap().extend(probed);
 }
 
 /// Per-network metadata the lane keeps outside the backend: the config
@@ -121,7 +141,7 @@ fn annotate(spec: &NetSpec) -> NetMeta {
 pub(crate) fn lane_thread(
     spec: LaneSpec,
     rx: mpsc::Receiver<LaneCmd>,
-    ready: mpsc::Sender<Result<LaneStartup>>,
+    ready: mpsc::Sender<Result<()>>,
     shared: LaneShared,
 ) {
     let setup = (|| -> Result<(Box<dyn Backend>, HashMap<String, NetMeta>)> {
@@ -131,7 +151,8 @@ pub(crate) fn lane_thread(
         // honours the EDGEDCNN_WORKERS override)
         let host_workers = WorkerPool::with_default_parallelism().workers();
         let pool = WorkerPool::new((host_workers / spec.n_lanes).max(1));
-        let mut backend = instantiate(spec.kind, spec.name.clone(), pool)?;
+        let mut backend =
+            instantiate(spec.kind, spec.name.clone(), pool, spec.noise_seed)?;
         let mut metas = HashMap::new();
         for (name, precision) in &spec.networks {
             let net_spec = load_net_spec(&artifacts, name, *precision)
@@ -144,11 +165,8 @@ pub(crate) fn lane_thread(
 
     let (mut backend, metas) = match setup {
         Ok((backend, metas)) => {
-            let costs = metas
-                .keys()
-                .filter_map(|n| Some((n.clone(), backend.cost_model(n)?)))
-                .collect();
-            let _ = ready.send(Ok(LaneStartup { costs }));
+            refresh_costs(backend.as_ref(), metas.keys(), &shared.costs);
+            let _ = ready.send(Ok(()));
             (backend, metas)
         }
         Err(e) => {
@@ -157,13 +175,33 @@ pub(crate) fn lane_thread(
         }
     };
 
+    // DVFS-aware routing: remember the device's throttle state and
+    // re-probe the cost models whenever it flips, in either direction
+    // (the startup probe ran at boost clock; sustained load must not
+    // keep routing on boost-clock costs)
+    let mut was_throttled = false;
     while let Ok(cmd) = rx.recv() {
         match cmd {
             LaneCmd::Shutdown => break,
             LaneCmd::Execute { batch, replies } => {
                 let network = batch.network.clone();
                 match execute_batch(backend.as_mut(), &metas, &shared, batch) {
-                    Ok(responses) => resolve(replies, responses),
+                    Ok((responses, throttled)) => {
+                        resolve(replies, responses);
+                        if throttled != was_throttled {
+                            was_throttled = throttled;
+                            refresh_costs(
+                                backend.as_ref(),
+                                metas.keys(),
+                                &shared.costs,
+                            );
+                            shared
+                                .metrics
+                                .lock()
+                                .unwrap()
+                                .record_cost_refresh(backend.name());
+                        }
+                    }
                     Err(e) => {
                         eprintln!(
                             "backend {} execution failed: {e:#}",
@@ -197,13 +235,15 @@ fn resolve(
 }
 
 /// Execute one batch on the lane's backend and split the outcome back
-/// into per-request responses (recording metrics on the way).
+/// into per-request responses (recording metrics on the way).  Also
+/// returns whether the device reported a throttled clock, so the lane
+/// loop can re-probe cost models on transitions.
 fn execute_batch(
     backend: &mut dyn Backend,
     metas: &HashMap<String, NetMeta>,
     shared: &LaneShared,
     batch: Batch,
-) -> Result<Vec<InferenceResponse>> {
+) -> Result<(Vec<InferenceResponse>, bool)> {
     let meta = metas.get(&batch.network).ok_or_else(|| {
         anyhow::anyhow!("network {:?} not loaded", batch.network)
     })?;
@@ -238,16 +278,16 @@ fn execute_batch(
         m.record_energy(outcome.energy_j);
         m.record_backend_batch(
             backend.name(),
+            &batch.network,
             batch.n_images,
             outcome.ops,
             outcome.device_time_s,
             outcome.energy_j,
         );
         for req in &batch.requests {
-            m.record_request(
-                req.enqueued_at.elapsed().as_secs_f64(),
-                req.n_images,
-            );
+            let latency_s = req.enqueued_at.elapsed().as_secs_f64();
+            m.record_request(latency_s, req.n_images);
+            m.record_backend_request(backend.name(), latency_s);
         }
     }
 
@@ -285,5 +325,5 @@ fn execute_batch(
             gpu_time_s: gpu_batch_s * share,
         });
     }
-    Ok(responses)
+    Ok((responses, outcome.state.throttled))
 }

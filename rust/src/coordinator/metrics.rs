@@ -1,34 +1,98 @@
 //! Serving metrics — latency distribution, throughput, arithmetic
 //! throughput, the energy integration that yields the GOps/s/W headline
-//! for the end-to-end example, and the **per-backend columns** (where
-//! the scheduler routed the work, and at what device latency/energy).
+//! for the end-to-end example, the **per-backend columns** (where the
+//! scheduler routed the work, at what device latency/energy, and with
+//! how much run-to-run variation), and the scheduler's per-lane
+//! queue-depth/deferral telemetry.
+//!
+//! Latency is accumulated in streaming log-bucketed histograms
+//! ([`crate::telemetry::LogHistogram`]) — O(1) memory under sustained
+//! load, where the old `Vec<f64>` grew 8 bytes per request forever.
+//! Means, counts and energy stay exact; p50/p95/p99/p99.9 are bucketed
+//! (within 2% relative error; see DESIGN.md §Telemetry).
 
-use crate::stats::{percentile, Summary};
+use crate::stats::Welford;
+use crate::telemetry::{weighted_cv, LogHistogram};
 use std::collections::BTreeMap;
 
 /// Per-backend accumulator (keyed by lane name, e.g. `fpga0`).
-#[derive(Debug, Default, Clone)]
+#[derive(Debug, Clone)]
 struct BackendStats {
     batches: u64,
     images: u64,
     ops: u64,
     device_time_s: f64,
     energy_j: f64,
+    /// Request latencies resolved by this lane (histogram shard).
+    latency: LogHistogram,
+    /// Per-image device seconds per batch, keyed by **(logical
+    /// network, batch size)** — the run-to-run variation series behind
+    /// the CV column.  Both key halves matter: a lane serving `mnist`
+    /// and its `mnist.q` twin has two legitimately different service
+    /// times, and the GPU's per-image time legitimately shrinks as
+    /// launch overhead amortizes over bigger batches — pooling either
+    /// axis would report workload mix as device jitter instead of the
+    /// paper's fixed-operating-point run-to-run variation.
+    per_image_dev: BTreeMap<(String, usize), Welford>,
+}
+
+impl Default for BackendStats {
+    fn default() -> Self {
+        BackendStats {
+            batches: 0,
+            images: 0,
+            ops: 0,
+            device_time_s: 0.0,
+            energy_j: 0.0,
+            latency: LogHistogram::latency_default(),
+            per_image_dev: BTreeMap::new(),
+        }
+    }
+}
+
+/// Per-lane scheduler telemetry (dispatch-time queue depths).
+#[derive(Debug, Default, Clone)]
+struct LaneQueueStats {
+    dispatches: u64,
+    depth: Welford,
+    max_depth: usize,
+    cost_refreshes: u64,
 }
 
 /// Accumulates per-request and per-batch telemetry during a serving run.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct MetricsRegistry {
-    latencies_s: Vec<f64>,
-    execute_s: Vec<f64>,
-    batch_sizes: Vec<usize>,
+    latency: LogHistogram,
+    batches: u64,
+    batch_images: u64,
     images: u64,
     requests: u64,
     rejected: u64,
+    deferred: u64,
     ops: u64,
     energy_j: f64,
     wall_s: f64,
     backends: BTreeMap<String, BackendStats>,
+    lanes: BTreeMap<String, LaneQueueStats>,
+}
+
+impl Default for MetricsRegistry {
+    fn default() -> Self {
+        MetricsRegistry {
+            latency: LogHistogram::latency_default(),
+            batches: 0,
+            batch_images: 0,
+            images: 0,
+            requests: 0,
+            rejected: 0,
+            deferred: 0,
+            ops: 0,
+            energy_j: 0.0,
+            wall_s: 0.0,
+            backends: BTreeMap::new(),
+            lanes: BTreeMap::new(),
+        }
+    }
 }
 
 impl MetricsRegistry {
@@ -37,14 +101,17 @@ impl MetricsRegistry {
     }
 
     pub fn record_request(&mut self, latency_s: f64, n_images: usize) {
-        self.latencies_s.push(latency_s);
+        self.latency.record(latency_s);
         self.requests += 1;
         self.images += n_images as u64;
     }
 
-    pub fn record_batch(&mut self, execute_s: f64, batch: usize, ops: u64) {
-        self.execute_s.push(execute_s);
-        self.batch_sizes.push(batch);
+    /// Count one executed batch.  (`_execute_s` is part of the stable
+    /// recording interface; the host wall time is reported per response,
+    /// not aggregated here.)
+    pub fn record_batch(&mut self, _execute_s: f64, batch: usize, ops: u64) {
+        self.batches += 1;
+        self.batch_images += batch as u64;
         self.ops += ops;
     }
 
@@ -52,10 +119,12 @@ impl MetricsRegistry {
         self.energy_j += joules;
     }
 
-    /// Account one executed batch to the backend lane that served it.
+    /// Account one executed batch (of `network`) to the backend lane
+    /// that served it.
     pub fn record_backend_batch(
         &mut self,
         backend: &str,
+        network: &str,
         images: usize,
         ops: u64,
         device_time_s: f64,
@@ -67,11 +136,46 @@ impl MetricsRegistry {
         b.ops += ops;
         b.device_time_s += device_time_s;
         b.energy_j += energy_j;
+        b.per_image_dev
+            .entry((network.to_string(), images))
+            .or_default()
+            .push(device_time_s / images.max(1) as f64);
+    }
+
+    /// Account one resolved request's latency to the lane that served
+    /// its batch (per-backend histogram shard).
+    pub fn record_backend_request(&mut self, backend: &str, latency_s: f64) {
+        self.backends
+            .entry(backend.to_string())
+            .or_default()
+            .latency
+            .record(latency_s);
     }
 
     /// Count one request turned away by admission control.
     pub fn record_rejected(&mut self) {
         self.rejected += 1;
+    }
+
+    /// Count one batch entering the deferred (waiting-for-capacity)
+    /// queue.
+    pub fn record_deferred(&mut self) {
+        self.deferred += 1;
+    }
+
+    /// Scheduler telemetry: one batch dispatched to `lane`, which then
+    /// held `depth` not-yet-executed batches.
+    pub fn record_lane_dispatch(&mut self, lane: &str, depth: usize) {
+        let l = self.lanes.entry(lane.to_string()).or_default();
+        l.dispatches += 1;
+        l.depth.push(depth as f64);
+        l.max_depth = l.max_depth.max(depth);
+    }
+
+    /// Count one cost-model re-probe on `lane` (DVFS throttle
+    /// transition observed by the executor).
+    pub fn record_cost_refresh(&mut self, lane: &str) {
+        self.lanes.entry(lane.to_string()).or_default().cost_refreshes += 1;
     }
 
     pub fn set_wall(&mut self, wall_s: f64) {
@@ -83,15 +187,12 @@ impl MetricsRegistry {
     }
 
     pub fn report(&self) -> ServingReport {
-        let lat = if self.latencies_s.is_empty() {
-            LatencyReport::default()
-        } else {
-            LatencyReport {
-                mean_s: Summary::of(&self.latencies_s).mean,
-                p50_s: percentile(&self.latencies_s, 50.0),
-                p95_s: percentile(&self.latencies_s, 95.0),
-                p99_s: percentile(&self.latencies_s, 99.0),
-            }
+        let lat = LatencyReport {
+            mean_s: self.latency.mean(),
+            p50_s: self.latency.quantile(50.0),
+            p95_s: self.latency.quantile(95.0),
+            p99_s: self.latency.quantile(99.0),
+            p999_s: self.latency.quantile(99.9),
         };
         let wall = self.wall_s.max(1e-12);
         let mean_power = if self.wall_s > 0.0 {
@@ -119,37 +220,56 @@ impl MetricsRegistry {
                     0.0
                 },
                 energy_j: b.energy_j,
+                p50_s: b.latency.quantile(50.0),
+                p95_s: b.latency.quantile(95.0),
+                p99_s: b.latency.quantile(99.0),
+                p999_s: b.latency.quantile(99.9),
+                latency_cv: weighted_cv(b.per_image_dev.values()),
+            })
+            .collect();
+        let lanes = self
+            .lanes
+            .iter()
+            .map(|(name, l)| LaneQueueReport {
+                name: name.clone(),
+                dispatches: l.dispatches,
+                mean_depth: l.depth.mean(),
+                max_depth: l.max_depth,
+                cost_refreshes: l.cost_refreshes,
             })
             .collect();
         ServingReport {
             requests: self.requests,
             images: self.images,
             rejected: self.rejected,
-            batches: self.execute_s.len() as u64,
+            deferred: self.deferred,
+            batches: self.batches,
             wall_s: self.wall_s,
             latency: lat,
             images_per_s: self.images as f64 / wall,
             gops,
-            mean_batch: if self.batch_sizes.is_empty() {
+            mean_batch: if self.batches == 0 {
                 0.0
             } else {
-                self.batch_sizes.iter().sum::<usize>() as f64
-                    / self.batch_sizes.len() as f64
+                self.batch_images as f64 / self.batches as f64
             },
             mean_power_w: mean_power,
             gops_per_w: if mean_power > 0.0 { gops / mean_power } else { 0.0 },
             per_backend,
+            lanes,
         }
     }
 }
 
-/// Latency distribution summary.
+/// Latency distribution summary.  The mean is exact (tracked sum); the
+/// quantiles are histogram-bucketed (2% relative error).
 #[derive(Debug, Default, Clone, Copy)]
 pub struct LatencyReport {
     pub mean_s: f64,
     pub p50_s: f64,
     pub p95_s: f64,
     pub p99_s: f64,
+    pub p999_s: f64,
 }
 
 /// One backend lane's column in the serving report.
@@ -166,16 +286,41 @@ pub struct BackendReport {
     /// Mean device latency per batch, seconds.
     pub mean_device_latency_s: f64,
     pub energy_j: f64,
+    /// Request latency quantiles for requests resolved by this lane.
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub p99_s: f64,
+    pub p999_s: f64,
+    /// Coefficient of variation of the per-image device latency across
+    /// this lane's batches — the paper's run-to-run-stability metric,
+    /// live (FPGA ≈ clock jitter only, GPU ≈ DVFS + measurement noise).
+    pub latency_cv: f64,
 }
 
-/// Final serving report (printed by the `serve` CLI and the edge_serving
-/// example; recorded in EXPERIMENTS.md §E9).
+/// Scheduler-side telemetry for one lane.
+#[derive(Debug, Clone)]
+pub struct LaneQueueReport {
+    pub name: String,
+    /// Batches the scheduler dispatched to this lane.
+    pub dispatches: u64,
+    /// Mean queue depth observed at dispatch time.
+    pub mean_depth: f64,
+    /// Deepest the lane's queue got.
+    pub max_depth: usize,
+    /// Cost-model re-probes triggered by DVFS throttle transitions.
+    pub cost_refreshes: u64,
+}
+
+/// Final serving report (printed by the `serve`/`loadtest` CLIs and the
+/// edge_serving example; recorded in EXPERIMENTS.md §E9).
 #[derive(Debug, Clone)]
 pub struct ServingReport {
     pub requests: u64,
     pub images: u64,
     /// Requests turned away by admission control.
     pub rejected: u64,
+    /// Batches that had to wait for lane capacity (backpressure).
+    pub deferred: u64,
     pub batches: u64,
     pub wall_s: f64,
     pub latency: LatencyReport,
@@ -186,6 +331,8 @@ pub struct ServingReport {
     pub gops_per_w: f64,
     /// Per-backend columns, sorted by lane name.
     pub per_backend: Vec<BackendReport>,
+    /// Per-lane scheduler telemetry, sorted by lane name.
+    pub lanes: Vec<LaneQueueReport>,
 }
 
 impl ServingReport {
@@ -193,7 +340,8 @@ impl ServingReport {
         let mut out = format!(
             "requests {:>6}   images {:>6}   batches {:>5}  (mean batch {:.2})\n\
              wall {:>8.3} s   throughput {:>8.2} img/s   {:>7.2} GOps/s\n\
-             latency mean {:.2} ms  p50 {:.2} ms  p95 {:.2} ms  p99 {:.2} ms\n\
+             latency mean {:.2} ms  p50 {:.2} ms  p95 {:.2} ms  p99 {:.2} ms  \
+             p99.9 {:.2} ms\n\
              power {:>6.2} W   {:>6.2} GOps/s/W",
             self.requests,
             self.images,
@@ -206,23 +354,47 @@ impl ServingReport {
             self.latency.p50_s * 1e3,
             self.latency.p95_s * 1e3,
             self.latency.p99_s * 1e3,
+            self.latency.p999_s * 1e3,
             self.mean_power_w,
             self.gops_per_w,
         );
         if self.rejected > 0 {
             out.push_str(&format!("\nrejected {:>6}  (admission control)", self.rejected));
         }
+        if self.deferred > 0 {
+            out.push_str(&format!("\ndeferred {:>6}  (backpressure)", self.deferred));
+        }
+        // per-backend columns keep img/s as the trailing field (the CI
+        // smoke awk keys off it)
         for b in &self.per_backend {
             out.push_str(&format!(
                 "\nbackend {:<6} batches {:>5}   images {:>6}   device {:>7.2} ms/batch   \
-                 {:>7.2} GOps/s   energy {:>8.3} J   {:>8.2} img/s",
+                 {:>7.2} GOps/s   energy {:>8.3} J   p50 {:.2} p99 {:.2} ms   \
+                 cv {:.2}%   {:>8.2} img/s",
                 b.name,
                 b.batches,
                 b.images,
                 b.mean_device_latency_s * 1e3,
                 b.device_gops,
                 b.energy_j,
+                b.p50_s * 1e3,
+                b.p99_s * 1e3,
+                b.latency_cv * 100.0,
                 b.images_per_s,
+            ));
+        }
+        for l in &self.lanes {
+            out.push_str(&format!(
+                "\nlane    {:<6} dispatches {:>4}   queue depth mean {:.2} max {}{}",
+                l.name,
+                l.dispatches,
+                l.mean_depth,
+                l.max_depth,
+                if l.cost_refreshes > 0 {
+                    format!("   cost refreshes {}", l.cost_refreshes)
+                } else {
+                    String::new()
+                },
             ));
         }
         out
@@ -247,11 +419,16 @@ mod tests {
         assert_eq!(r.requests, 10);
         assert_eq!(r.images, 20);
         assert_eq!(r.batches, 2);
+        assert!((r.mean_batch - 4.0).abs() < 1e-12);
         assert!((r.images_per_s - 20.0).abs() < 1e-9);
         assert!((r.gops - 2.0).abs() < 1e-9);
         assert!((r.mean_power_w - 5.0).abs() < 1e-9);
         assert!((r.gops_per_w - 0.4).abs() < 1e-9);
         assert!(r.latency.p99_s >= r.latency.p50_s);
+        assert!(r.latency.p999_s >= r.latency.p99_s);
+        // the mean is exact; the quantiles are bucketed to 2%
+        assert!((r.latency.mean_s - 0.0055).abs() < 1e-12);
+        assert!((r.latency.p50_s / 0.005 - 1.0).abs() <= 0.02 + 1e-9);
     }
 
     #[test]
@@ -259,6 +436,7 @@ mod tests {
         let r = MetricsRegistry::new().report();
         assert_eq!(r.requests, 0);
         assert_eq!(r.gops_per_w, 0.0);
+        assert_eq!(r.latency.p99_s, 0.0);
     }
 
     #[test]
@@ -269,14 +447,18 @@ mod tests {
         let s = m.report().render();
         assert!(s.contains("GOps/s/W"));
         assert!(s.contains("p99"));
+        assert!(s.contains("p99.9"));
     }
 
     #[test]
     fn per_backend_columns_aggregate_and_render() {
         let mut m = MetricsRegistry::new();
-        m.record_backend_batch("fpga0", 8, 2_000_000_000, 0.5, 1.25);
-        m.record_backend_batch("fpga0", 8, 2_000_000_000, 0.5, 1.25);
-        m.record_backend_batch("gpu0", 4, 1_000_000_000, 0.1, 1.1);
+        m.record_backend_batch("fpga0", "mnist", 8, 2_000_000_000, 0.5, 1.25);
+        m.record_backend_batch("fpga0", "mnist", 8, 2_000_000_000, 0.5, 1.25);
+        m.record_backend_batch("gpu0", "mnist", 4, 1_000_000_000, 0.1, 1.1);
+        m.record_backend_request("fpga0", 0.6);
+        m.record_backend_request("fpga0", 0.7);
+        m.record_backend_request("gpu0", 0.2);
         m.set_wall(2.0);
         let r = m.report();
         assert_eq!(r.per_backend.len(), 2);
@@ -288,20 +470,78 @@ mod tests {
         assert!((fpga.device_gops - 4.0).abs() < 1e-9);
         assert!((fpga.mean_device_latency_s - 0.5).abs() < 1e-9);
         assert!((fpga.energy_j - 2.5).abs() < 1e-9);
+        // identical per-image device times ⇒ zero variation
+        assert_eq!(fpga.latency_cv, 0.0);
+        assert!(fpga.p99_s >= fpga.p50_s && fpga.p50_s > 0.0);
         let s = r.render();
         assert!(s.contains("backend fpga0"), "{s}");
         assert!(s.contains("backend gpu0"), "{s}");
+        assert!(s.contains("cv "), "{s}");
         assert!(!s.contains("rejected"), "no admission line when zero");
+        // img/s stays the trailing field of a backend line (CI contract)
+        let line = s.lines().find(|l| l.starts_with("backend fpga0")).unwrap();
+        assert!(line.trim_end().ends_with("img/s"), "{line}");
     }
 
     #[test]
-    fn rejected_requests_are_reported() {
+    fn device_variation_feeds_the_cv_column() {
+        let mut m = MetricsRegistry::new();
+        // steady lane serving two networks at *different* speeds: the
+        // per-network split must keep the mix out of the CV
+        for _ in 0..10 {
+            m.record_backend_batch("fpga0", "mnist", 4, 1, 0.004, 0.1);
+            m.record_backend_batch("fpga0", "mnist.q", 4, 1, 0.002, 0.1);
+        }
+        // drifting lane: per-image device time rises (thermal throttle)
+        for i in 0..10 {
+            let t = 0.004 * (1.0 + 0.1 * i as f64);
+            m.record_backend_batch("gpu0", "mnist", 4, 1, t, 0.1);
+        }
+        m.set_wall(1.0);
+        let r = m.report();
+        let fpga = r.per_backend.iter().find(|b| b.name == "fpga0").unwrap();
+        let gpu = r.per_backend.iter().find(|b| b.name == "gpu0").unwrap();
+        assert_eq!(
+            fpga.latency_cv, 0.0,
+            "two constant-speed networks on one lane must not read as jitter"
+        );
+        assert!(gpu.latency_cv > 0.1, "cv={}", gpu.latency_cv);
+    }
+
+    #[test]
+    fn rejected_and_deferred_are_reported() {
         let mut m = MetricsRegistry::new();
         m.record_rejected();
         m.record_rejected();
+        m.record_deferred();
         m.set_wall(1.0);
         let r = m.report();
         assert_eq!(r.rejected, 2);
-        assert!(r.render().contains("rejected"));
+        assert_eq!(r.deferred, 1);
+        let s = r.render();
+        assert!(s.contains("rejected"));
+        assert!(s.contains("deferred"));
+    }
+
+    #[test]
+    fn lane_queue_telemetry_aggregates() {
+        let mut m = MetricsRegistry::new();
+        m.record_lane_dispatch("fpga0", 1);
+        m.record_lane_dispatch("fpga0", 3);
+        m.record_lane_dispatch("gpu0", 1);
+        m.record_cost_refresh("gpu0");
+        m.set_wall(1.0);
+        let r = m.report();
+        assert_eq!(r.lanes.len(), 2);
+        let fpga = &r.lanes[0];
+        assert_eq!(fpga.name, "fpga0");
+        assert_eq!(fpga.dispatches, 2);
+        assert_eq!(fpga.max_depth, 3);
+        assert!((fpga.mean_depth - 2.0).abs() < 1e-12);
+        let gpu = &r.lanes[1];
+        assert_eq!(gpu.cost_refreshes, 1);
+        let s = r.render();
+        assert!(s.contains("lane    fpga0"), "{s}");
+        assert!(s.contains("cost refreshes 1"), "{s}");
     }
 }

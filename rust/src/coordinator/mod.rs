@@ -35,7 +35,10 @@ mod scheduler;
 mod server;
 
 pub use batcher::{Batch, BatcherConfig, DynamicBatcher};
-pub use metrics::{BackendReport, MetricsRegistry, ServingReport};
+pub use metrics::{
+    BackendReport, LaneQueueReport, LatencyReport, MetricsRegistry,
+    ServingReport,
+};
 pub use power::PowerMeter;
 pub use registry::{BackendRegistry, LaneInfo};
 pub use request::{InferenceRequest, InferenceResponse, RequestId};

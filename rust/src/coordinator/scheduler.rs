@@ -44,10 +44,15 @@ pub(crate) enum LeaderCmd {
 
 /// The scheduler's handle on one executor lane.
 pub(crate) struct LaneHandle {
+    /// Lane name (`fpga0`, …) — keys the per-lane telemetry.
+    pub name: String,
     pub tx: mpsc::Sender<LaneCmd>,
     pub depth: Arc<AtomicUsize>,
-    /// Cost models reported by the lane at startup, per network.
-    pub costs: HashMap<String, CostModel>,
+    /// Per-network cost models, shared with the lane thread: filled at
+    /// startup and *re-probed* by the lane when its device crosses a
+    /// DVFS throttle threshold, so routing tracks the clock the device
+    /// actually runs at (not the boost-clock probe forever).
+    pub costs: Arc<Mutex<HashMap<String, CostModel>>>,
 }
 
 /// Everything the leader thread owns.
@@ -82,6 +87,8 @@ impl Scheduler {
                 depth: l.depth.load(Ordering::Acquire),
                 cost_s: l
                     .costs
+                    .lock()
+                    .unwrap()
                     .get(network)
                     .map(|c| c.cost_s(n_images))
                     .unwrap_or(f64::INFINITY),
@@ -111,7 +118,11 @@ impl Scheduler {
             o.fetch_add(1, Ordering::AcqRel);
         }
         self.pins.insert(network.clone(), lane);
-        self.lanes[lane].depth.fetch_add(1, Ordering::AcqRel);
+        let depth = self.lanes[lane].depth.fetch_add(1, Ordering::AcqRel) + 1;
+        self.metrics
+            .lock()
+            .unwrap()
+            .record_lane_dispatch(&self.lanes[lane].name, depth);
         if self.lanes[lane]
             .tx
             .send(LaneCmd::Execute { batch, replies })
@@ -211,10 +222,12 @@ impl Scheduler {
             .iter()
             .any(|b| b.network == batch.network);
         if behind {
+            self.metrics.lock().unwrap().record_deferred();
             self.deferred.push_back(batch);
             return;
         }
         if let Err(batch) = self.try_dispatch(batch) {
+            self.metrics.lock().unwrap().record_deferred();
             self.deferred.push_back(batch);
         }
     }

@@ -160,9 +160,16 @@ impl Coordinator {
 
         let mut lane_txs = Vec::with_capacity(n_lanes);
         let mut depths = Vec::with_capacity(n_lanes);
+        let mut costs = Vec::with_capacity(n_lanes);
         let mut exec_handles = Vec::with_capacity(n_lanes);
         let mut readiness = Vec::with_capacity(n_lanes);
         for (i, info) in registry.lanes().iter().enumerate() {
+            // decorrelate the lanes' measurement-noise streams (and let
+            // the loadtest re-seed the whole pool per trial)
+            let noise_seed = Rng::seed_from_u64(
+                config.backends.noise_seed.wrapping_add(i as u64),
+            )
+            .next_u64();
             let spec = LaneSpec {
                 name: info.name.clone(),
                 kind: info.kind,
@@ -176,13 +183,16 @@ impl Coordinator {
                     .collect(),
                 n_lanes,
                 artifacts_dir: config.artifacts_dir.clone(),
+                noise_seed,
             };
             let depth = Arc::new(AtomicUsize::new(0));
+            let lane_costs = Arc::new(Mutex::new(HashMap::new()));
             let shared = LaneShared {
                 metrics: metrics.clone(),
                 depth: depth.clone(),
                 outstanding: outstanding.clone(),
                 exec_seq: exec_seq.clone(),
+                costs: lane_costs.clone(),
             };
             let (tx_lane, rx_lane) = mpsc::channel::<LaneCmd>();
             let (tx_ready, rx_ready) = mpsc::channel();
@@ -192,20 +202,24 @@ impl Coordinator {
                 .context("spawning executor lane")?;
             lane_txs.push(tx_lane);
             depths.push(depth);
+            costs.push(lane_costs);
             exec_handles.push(handle);
             readiness.push(rx_ready);
         }
         let mut lanes = Vec::with_capacity(n_lanes);
-        for ((rx, tx), depth) in
-            readiness.into_iter().zip(lane_txs).zip(depths)
+        for (i, ((rx, tx), (depth, lane_costs))) in readiness
+            .into_iter()
+            .zip(lane_txs)
+            .zip(depths.into_iter().zip(costs))
+            .enumerate()
         {
-            let startup = rx
-                .recv()
+            rx.recv()
                 .context("executor lane died during startup")??;
             lanes.push(LaneHandle {
+                name: registry.lanes()[i].name.clone(),
                 tx,
                 depth,
-                costs: startup.costs.into_iter().collect(),
+                costs: lane_costs,
             });
         }
 
@@ -317,6 +331,15 @@ impl Coordinator {
     /// own measurement window).
     pub fn reset_metrics(&self) {
         *self.metrics.lock().unwrap() = MetricsRegistry::new();
+    }
+
+    /// Snapshot of the serving metrics with an explicit measurement
+    /// window (callers driving their own open-loop clock — the
+    /// loadtest — pass the wall time they actually measured).
+    pub fn report_for_wall(&self, wall_s: f64) -> ServingReport {
+        let mut m = self.metrics.lock().unwrap();
+        m.set_wall(wall_s);
+        m.report()
     }
 
     /// Snapshot of the current serving metrics.

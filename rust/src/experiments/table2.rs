@@ -10,14 +10,18 @@ use crate::config::{network_by_name, FpgaBoard, GpuBoard, NetworkCfg};
 use crate::fpga::{self, SimOpts};
 use crate::gpu::{self, GpuRunOpts, ThermalThrottle};
 use crate::stats::Summary;
+use crate::telemetry::{variation_of, Variation};
 use anyhow::Result;
 use crate::util::Rng;
 
-/// Per-device measurement rows: one Summary per layer plus the total.
+/// Per-device measurement rows: one Summary per layer plus the total,
+/// with the total's run-to-run variation statistics (CV + bootstrap CI
+/// of the mean — the quantitative form of the paper's stability claim).
 #[derive(Debug, Clone)]
 pub struct DeviceRows {
     pub per_layer: Vec<Summary>,
     pub total: Summary,
+    pub total_var: Variation,
 }
 
 /// The full Table II for one network.
@@ -79,6 +83,7 @@ fn fpga_rows(
     DeviceRows {
         per_layer: per_layer_samples.iter().map(|s| Summary::of(s)).collect(),
         total: Summary::of(&total_samples),
+        total_var: variation_of(&total_samples, seed),
     }
 }
 
@@ -112,10 +117,13 @@ fn gpu_rows(
     DeviceRows {
         per_layer: per_layer_samples.iter().map(|s| Summary::of(s)).collect(),
         total: Summary::of(&total_samples),
+        total_var: variation_of(&total_samples, seed),
     }
 }
 
-/// Render in the paper's format ("mean (std)" per cell).
+/// Render in the paper's format ("mean (std)" per cell), plus the
+/// run-to-run-variation summary rows (CV and the bootstrap 95% CI of
+/// the total's mean) that make the stability claim explicit.
 pub fn render(data: &Table2Data) -> String {
     let n = data.fpga.per_layer.len();
     let mut s = format!("{} (GOps/second/Watt)\n        ", data.network);
@@ -129,6 +137,15 @@ pub fn render(data: &Table2Data) -> String {
             s.push_str(&format!("{:>13}", l.cell()));
         }
         s.push_str(&format!("{:>13}\n", rows.total.cell()));
+    }
+    for (name, rows) in [("FPGA", &data.fpga), ("GPU", &data.gpu)] {
+        let v = &rows.total_var;
+        s.push_str(&format!(
+            "{name:<8}total cv {:>6.2}%   95% CI of mean [{:.2}, {:.2}]\n",
+            v.cv * 100.0,
+            v.ci_lo,
+            v.ci_hi
+        ));
     }
     s
 }
@@ -153,6 +170,18 @@ mod tests {
             d.gpu.total.mean
         );
         assert!(d.fpga.total.std * 5.0 < d.gpu.total.std.max(1e-9));
+        // the variation rows say the same thing as CVs and CIs
+        assert!(
+            d.fpga.total_var.cv * 5.0 < d.gpu.total_var.cv,
+            "FPGA cv {} vs GPU cv {}",
+            d.fpga.total_var.cv,
+            d.gpu.total_var.cv
+        );
+        assert!(d.fpga.total_var.ci_lo <= d.fpga.total_var.mean);
+        assert!(d.fpga.total_var.mean <= d.fpga.total_var.ci_hi);
+        let s = render(&d);
+        assert!(s.contains("total cv"), "{s}");
+        assert!(s.contains("95% CI"), "{s}");
     }
 
     #[test]

@@ -178,10 +178,12 @@ impl CuArray {
         sparsity: Option<f64>,
         pool: &WorkerPool,
     ) -> Vec<u64> {
-        // Individual CU evaluations are tiny — claim them a SIMD batch
-        // at a time so the dispatch overhead amortizes (identical
-        // results: every workload still owns its slot).
-        let per_workload = pool.map_indexed_chunked(count, self.n_cu.max(1), |_| {
+        // Individual CU evaluations are tiny — adaptive chunking
+        // (job 0's measured cost seeds the claim size) amortizes the
+        // dispatch overhead without a hand-tuned chunk, matching the
+        // reverse-loop tile dispatch.  Identical results for any chunk:
+        // every workload still owns its slot.
+        let per_workload = pool.map_indexed_auto(count, |_| {
             self.model.workload_cycles(wl, sparsity)
         });
         per_workload

@@ -23,8 +23,9 @@ pub use axi::AxiModel;
 pub use cu::{BatchSim, CuArray, CuModel, CuWorkload};
 pub use fifo::Fifo;
 pub use pipeline::{
-    measured_run, measurement_rng, simulate_layer, simulate_layer_par,
-    simulate_network, simulate_network_par, LayerSim, NetworkSim, SimOpts,
+    measured_account, measured_run, measurement_rng, simulate_layer,
+    simulate_layer_par, simulate_network, simulate_network_par, LayerSim,
+    NetworkSim, SimOpts,
 };
 pub use power::PowerModel;
 pub use resources::{estimate_resources, estimate_resources_at, Utilization};

@@ -360,6 +360,16 @@ pub fn measurement_rng(seed: u64) -> Rng {
     Rng::seed_from_u64(seed)
 }
 
+/// Apply the board's run-to-run measurement jitter to a whole-batch
+/// `(time_s, energy_j)` account — the same clock/DDR-refresh σ as
+/// [`measured_run`], for callers (the serving backend) that account at
+/// batch granularity rather than per layer.
+pub fn measured_account(time_s: f64, energy_j: f64, rng: &mut Rng) -> (f64, f64) {
+    let t = time_s * (1.0 + rng.range_f64(-0.006, 0.006));
+    let power = energy_j / time_s * (1.0 + rng.range_f64(-0.004, 0.004));
+    (t, power * t)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -13,7 +13,7 @@ mod throttle;
 
 pub use model::{
     expected_gpu_network_run, expected_gpu_network_time,
-    expected_gpu_network_time_at, expected_time_s, simulate_gpu_layer,
-    simulate_gpu_network, GpuLayerRun, GpuRunOpts,
+    expected_gpu_network_time_at, expected_time_s, measured_gpu_network_run,
+    simulate_gpu_layer, simulate_gpu_network, GpuLayerRun, GpuRunOpts,
 };
 pub use throttle::ThermalThrottle;

@@ -196,6 +196,34 @@ pub fn expected_gpu_network_run(
     (total, energy)
 }
 
+/// One *measured* whole-network run at the current DVFS state — a
+/// [`simulate_gpu_layer`] sample per layer (expected account × the
+/// nvprof-style time/stall/power noise), summed.  This is the per-batch
+/// execution model of [`crate::backend::GpuModelBackend`], whose
+/// serving lane is a stream of measured runs, not of noise-free
+/// expectations — the same one model Table II draws from.  Advances
+/// the thermal state per layer; returns `(time_s, energy_j)`.
+pub fn measured_gpu_network_run(
+    net: &NetworkCfg,
+    board: &GpuBoard,
+    throttle: &mut ThermalThrottle,
+    batch: usize,
+    rng: &mut Rng,
+) -> (f64, f64) {
+    let opts = GpuRunOpts {
+        batch,
+        weight_sparsity: 0.0,
+    };
+    let mut total = 0.0;
+    let mut energy = 0.0;
+    for l in &net.layers {
+        let run = simulate_gpu_layer(l, board, &opts, throttle, rng);
+        total += run.time_s;
+        energy += run.time_s * run.power_w;
+    }
+    (total, energy)
+}
+
 /// Noise-free expected network time at a *fixed* clock, touching no
 /// thermal state — the scheduler's cost estimate (a routing probe must
 /// not heat the die it is only asking about).

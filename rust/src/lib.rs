@@ -46,6 +46,14 @@
 //! (tensors *and* op counts), asserted by the integration and property
 //! tests.
 //!
+//! Cross-cutting: the **workload & telemetry subsystem** ([`workload`],
+//! [`telemetry`]) — scenario-driven open-loop load generation (seeded
+//! Poisson / MMPP / diurnal / flash-crowd arrivals, JSON trace
+//! record/replay) feeding streaming log-bucketed latency histograms,
+//! SLO counters and repeated-trial variation statistics, so the
+//! paper's run-to-run-stability verdict is a live, CI-checkable
+//! experiment (`edgedcnn loadtest`).
+//!
 //! See `DESIGN.md` for the full system inventory and the per-experiment
 //! index, and `EXPERIMENTS.md` for paper-vs-measured results.
 
@@ -62,7 +70,9 @@ pub mod quant;
 pub mod runtime;
 pub mod sparsity;
 pub mod stats;
+pub mod telemetry;
 pub mod tensor;
 pub mod util;
+pub mod workload;
 
 pub use anyhow::{Context, Result};

@@ -16,7 +16,9 @@ use edgedcnn::coordinator::{
 use edgedcnn::experiments as exp;
 use edgedcnn::quant::{QFormat, QuantizedGenerator, Rounding};
 use edgedcnn::runtime::Runtime;
+use edgedcnn::workload::{run_loadtest, LoadtestOpts, Scenario, Trace};
 use std::collections::HashMap;
+use std::path::Path;
 use std::time::Duration;
 
 const USAGE: &str = "\
@@ -51,6 +53,23 @@ COMMANDS:
                              --queue-depth bounds each lane's queue
                              (backpressure), --executors E cycles the
                              backends list to E lanes
+  loadtest  [--scenario NAME|FILE] [--trials N] [--requests N] [--seed S]
+            [--backends fpga,gpu,cpu] [--queue-depth D] [--executors E]
+            [--record FILE] [--replay FILE] [--no-shard] [--smoke]
+                             scenario-driven open-loop load generation
+                             against the backend pool, repeated over N
+                             seeded trials, with the paper's Table-2-
+                             style run-to-run-variation verdict: per-
+                             backend p50/p95/p99/p99.9 (coordinated-
+                             omission corrected), SLO attainment, and
+                             device-latency CV columns.  --scenario is a
+                             built-in (steady|burst|diurnal|flash) or a
+                             JSON scenario file; --record writes the
+                             materialized trace (a shareable artifact),
+                             --replay drives a recorded trace instead of
+                             generating one; --no-shard keeps per-network
+                             ordering (batches stop spreading over the
+                             pool); --smoke is the short CI mode
   quant     [--network NET] [--samples N] [--seed S]
             [--bits B --frac F] [--export]
                              fixed-point quantized inference: sweep
@@ -268,6 +287,49 @@ fn main() -> Result<()> {
                 seed,
             })?;
             println!("{}", report.render());
+        }
+        "loadtest" => {
+            let smoke = flags.has("smoke");
+            let mut scenario =
+                Scenario::resolve(&flags.get_str("scenario", "steady"))?;
+            scenario.seed = flags.get("seed", scenario.seed)?;
+            let default_requests =
+                if smoke { 24 } else { scenario.requests };
+            scenario.requests = flags.get("requests", default_requests)?;
+            let trials =
+                flags.get("trials", if smoke { 1 } else { 5usize })?;
+            let trace = if flags.has("replay") {
+                Trace::load(Path::new(&flags.get_str("replay", "")))?
+            } else {
+                Trace::generate(&scenario)?
+            };
+            if flags.has("record") {
+                let path = flags.get_str("record", "trace.json");
+                trace.save(Path::new(&path))?;
+                println!(
+                    "trace recorded to {path} ({} events over {:.3} s)",
+                    trace.events.len(),
+                    trace.duration_s()
+                );
+            }
+            let mut backends = BackendCfg::default();
+            if flags.has("backends") {
+                backends.kinds =
+                    BackendCfg::parse_kinds(&flags.get_str("backends", ""))?;
+            }
+            backends.max_queue_depth =
+                flags.get("queue-depth", backends.max_queue_depth)?;
+            let report = run_loadtest(
+                &trace,
+                &LoadtestOpts {
+                    artifacts_dir,
+                    backends,
+                    executors: flags.get("executors", 0usize)?,
+                    trials,
+                    shard_batches: !flags.has("no-shard"),
+                },
+            )?;
+            print!("{}", report.render());
         }
         "quant" => {
             let network = flags.get_str("network", "mnist");

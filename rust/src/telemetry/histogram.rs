@@ -1,0 +1,335 @@
+//! Streaming log-bucketed latency histogram — the bounded-memory
+//! replacement for the serving path's old `Vec<f64>` of raw latencies.
+//!
+//! Buckets are geometric: bucket `i` covers `[min·g^i, min·g^(i+1))`
+//! with `g = (1 + ε)²`, so the geometric midpoint of any bucket is
+//! within a factor `1 + ε` of every value the bucket holds — quantile
+//! queries are therefore exact to one bucket's relative error, by
+//! construction, at **O(1) memory per histogram** regardless of how
+//! many samples stream through.  Histograms with the same geometry
+//! merge by adding counts (shard-per-backend, merge at report time),
+//! and merging shards is *identical* to histogramming the concatenated
+//! stream (asserted by a property test).
+//!
+//! Coordinated omission: [`LogHistogram::record_corrected`] back-fills
+//! the samples a stalled open-loop generator failed to issue
+//! (HdrHistogram's `recordValueWithExpectedInterval` scheme) — without
+//! it, one long stall hides every request that *would* have been issued
+//! and measured during the stall, and the tail quantiles lie.
+
+/// A fixed-geometry streaming histogram over positive values.
+#[derive(Debug, Clone)]
+pub struct LogHistogram {
+    /// Lower bound of bucket 0; smaller samples land in the underflow
+    /// counter.
+    min: f64,
+    /// Bucket boundary ratio, `(1 + rel_err)²`.
+    growth: f64,
+    rel_err: f64,
+    inv_ln_growth: f64,
+    counts: Vec<u64>,
+    underflow: u64,
+    total: u64,
+    sum: f64,
+    min_seen: f64,
+    max_seen: f64,
+}
+
+impl LogHistogram {
+    /// Histogram over `[min, max)` with quantiles exact to `rel_err`
+    /// relative error (values above `max` clamp into the last bucket;
+    /// their quantiles degrade gracefully, `max_seen` stays exact).
+    pub fn new(min: f64, max: f64, rel_err: f64) -> Self {
+        assert!(min > 0.0 && max > min, "bad histogram range");
+        assert!(rel_err > 0.0 && rel_err < 1.0, "bad relative error");
+        let growth = (1.0 + rel_err) * (1.0 + rel_err);
+        let n = ((max / min).ln() / growth.ln()).ceil() as usize;
+        LogHistogram {
+            min,
+            growth,
+            rel_err,
+            inv_ln_growth: 1.0 / growth.ln(),
+            counts: vec![0; n.max(1)],
+            underflow: 0,
+            total: 0,
+            sum: 0.0,
+            min_seen: f64::INFINITY,
+            max_seen: f64::NEG_INFINITY,
+        }
+    }
+
+    /// The serving default: 1 µs … 10 000 s at 2% relative error
+    /// (≈ 580 buckets ≈ 4.6 KiB — the whole point versus an unbounded
+    /// `Vec<f64>` growing by 8 bytes per request forever).
+    pub fn latency_default() -> Self {
+        Self::new(1e-6, 1e4, 0.02)
+    }
+
+    /// Maximum relative error of a quantile that lands in-range.
+    pub fn relative_error(&self) -> f64 {
+        self.rel_err
+    }
+
+    /// Record one sample.
+    pub fn record(&mut self, v: f64) {
+        self.total += 1;
+        self.sum += v;
+        self.min_seen = self.min_seen.min(v);
+        self.max_seen = self.max_seen.max(v);
+        if v < self.min {
+            self.underflow += 1;
+        } else {
+            let i = ((v / self.min).ln() * self.inv_ln_growth) as usize;
+            let i = i.min(self.counts.len() - 1);
+            self.counts[i] += 1;
+        }
+    }
+
+    /// Record one sample with coordinated-omission correction: when a
+    /// measured latency exceeds the interval the open-loop generator
+    /// *intended* between samples, the requests that would have been
+    /// issued (and stalled) during it are back-filled at `v - k·interval`
+    /// — HdrHistogram's expected-interval scheme.
+    pub fn record_corrected(&mut self, v: f64, expected_interval_s: f64) {
+        self.record(v);
+        if expected_interval_s <= 0.0 {
+            return;
+        }
+        let mut missing = v - expected_interval_s;
+        // cap the back-fill so one absurd outlier cannot wedge the
+        // reporter (10⁴ synthetic samples ≫ any honest stall)
+        let mut budget = 10_000;
+        while missing >= expected_interval_s && budget > 0 {
+            self.record(missing);
+            missing -= expected_interval_s;
+            budget -= 1;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// Exact mean of everything recorded (the sum is tracked exactly;
+    /// only *quantiles* are bucketed).
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum / self.total as f64
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.min_seen
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.max_seen
+        }
+    }
+
+    /// Nearest-rank quantile, `p` in `[0, 100]`.  The returned value is
+    /// the geometric midpoint of the bucket holding the rank-`⌈p·n/100⌉`
+    /// order statistic (clamped to the exactly-tracked min/max), so it
+    /// is within one bucket's relative error of the true order
+    /// statistic.  Returns 0 on an empty histogram.
+    pub fn quantile(&self, p: f64) -> f64 {
+        assert!((0.0..=100.0).contains(&p), "quantile out of range");
+        if self.total == 0 {
+            return 0.0;
+        }
+        let rank = ((p / 100.0 * self.total as f64).ceil() as u64).max(1);
+        let mut seen = self.underflow;
+        if rank <= seen {
+            // underflow samples are below bucket 0: the tracked min is
+            // the best (and for a single sample, exact) answer
+            return self.min_seen;
+        }
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if rank <= seen {
+                let mid = self.min
+                    * self.growth.powi(i as i32)
+                    * self.growth.sqrt();
+                return mid.clamp(self.min_seen, self.max_seen);
+            }
+        }
+        self.max_seen
+    }
+
+    /// Merge another histogram of identical geometry (shards → report).
+    pub fn merge(&mut self, other: &LogHistogram) {
+        assert_eq!(self.counts.len(), other.counts.len(), "geometry mismatch");
+        assert!(
+            self.min == other.min && self.growth == other.growth,
+            "geometry mismatch"
+        );
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.underflow += other.underflow;
+        self.total += other.total;
+        self.sum += other.sum;
+        self.min_seen = self.min_seen.min(other.min_seen);
+        self.max_seen = self.max_seen.max(other.max_seen);
+    }
+
+    /// Bucket occupancy (underflow, per-bucket counts) — exposed so the
+    /// merge-equals-concatenation property is assertable exactly.
+    pub fn buckets(&self) -> (u64, &[u64]) {
+        (self.underflow, &self.counts)
+    }
+}
+
+/// Nearest-rank percentile over a raw slice — the exact reference the
+/// histogram approximates (used by tests and the bootstrap).
+pub fn nearest_rank(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty(), "nearest_rank of empty slice");
+    let rank = ((p / 100.0 * sorted.len() as f64).ceil() as usize).max(1);
+    sorted[rank.min(sorted.len()) - 1]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn log_uniform(rng: &mut Rng, lo: f64, hi: f64) -> f64 {
+        (rng.range_f64(lo.ln(), hi.ln())).exp()
+    }
+
+    #[test]
+    fn empty_histogram_reports_zeroes() {
+        let h = LogHistogram::latency_default();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.quantile(50.0), 0.0);
+        assert_eq!(h.min(), 0.0);
+        assert_eq!(h.max(), 0.0);
+    }
+
+    #[test]
+    fn mean_and_extremes_are_exact() {
+        let mut h = LogHistogram::latency_default();
+        for v in [0.001, 0.002, 0.003, 0.010] {
+            h.record(v);
+        }
+        assert!((h.mean() - 0.004).abs() < 1e-15);
+        assert_eq!(h.min(), 0.001);
+        assert_eq!(h.max(), 0.010);
+        assert_eq!(h.count(), 4);
+    }
+
+    #[test]
+    fn prop_quantiles_within_one_bucket_relative_error() {
+        // the acceptance property: histogram quantiles vs the exact
+        // sorted-vector nearest-rank percentile, over random streams
+        let mut rng = Rng::seed_from_u64(0x4157);
+        for case in 0..200 {
+            let n = rng.range_usize(1, 400);
+            let mut h = LogHistogram::latency_default();
+            let mut vals = Vec::with_capacity(n);
+            for _ in 0..n {
+                let v = log_uniform(&mut rng, 2e-6, 5e3);
+                h.record(v);
+                vals.push(v);
+            }
+            vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            for p in [0.0, 10.0, 50.0, 90.0, 95.0, 99.0, 99.9, 100.0] {
+                let exact = nearest_rank(&vals, p);
+                let got = h.quantile(p);
+                let rel = (got / exact - 1.0).abs();
+                assert!(
+                    rel <= h.relative_error() + 1e-12,
+                    "case {case} p{p}: got {got} exact {exact} rel {rel}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn prop_merging_shards_equals_concatenated_stream() {
+        let mut rng = Rng::seed_from_u64(77);
+        for case in 0..100 {
+            let n = rng.range_usize(2, 300);
+            let shards = rng.range_usize(2, 5);
+            let mut whole = LogHistogram::latency_default();
+            let mut parts: Vec<LogHistogram> =
+                (0..shards).map(|_| LogHistogram::latency_default()).collect();
+            for i in 0..n {
+                let v = log_uniform(&mut rng, 1e-7, 1e5); // incl. out-of-range
+                whole.record(v);
+                parts[i % shards].record(v);
+            }
+            let mut merged = parts.remove(0);
+            for p in &parts {
+                merged.merge(p);
+            }
+            assert_eq!(merged.count(), whole.count(), "case {case}");
+            assert_eq!(merged.buckets(), whole.buckets(), "case {case}");
+            assert_eq!(merged.min(), whole.min());
+            assert_eq!(merged.max(), whole.max());
+            for p in [1.0, 50.0, 99.0, 99.9] {
+                assert_eq!(merged.quantile(p), whole.quantile(p));
+            }
+            assert!((merged.sum() - whole.sum()).abs() <= 1e-9 * whole.sum().abs());
+        }
+    }
+
+    #[test]
+    fn out_of_range_samples_stay_accounted() {
+        let mut h = LogHistogram::new(1e-3, 1.0, 0.02);
+        h.record(1e-6); // underflow
+        h.record(50.0); // clamps into the top bucket
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.min(), 1e-6, "extremes tracked exactly");
+        assert_eq!(h.max(), 50.0);
+        assert_eq!(h.quantile(100.0), 50.0);
+        let (under, _) = h.buckets();
+        assert_eq!(under, 1);
+    }
+
+    #[test]
+    fn coordinated_omission_backfills_the_stall() {
+        // a 1 s stall at a 100 ms intended interval hides 9 requests;
+        // correction recovers them at 0.9, 0.8, … 0.1 s
+        let mut h = LogHistogram::latency_default();
+        h.record_corrected(1.0, 0.1);
+        assert_eq!(h.count(), 10);
+        let mut plain = LogHistogram::latency_default();
+        plain.record(1.0);
+        assert!(
+            h.quantile(50.0) < plain.quantile(50.0),
+            "backfilled samples must pull the median below the stall"
+        );
+        assert_eq!(h.max(), 1.0);
+        // non-stalled samples add nothing
+        let mut ok = LogHistogram::latency_default();
+        ok.record_corrected(0.05, 0.1);
+        assert_eq!(ok.count(), 1);
+        // zero interval means no correction
+        let mut z = LogHistogram::latency_default();
+        z.record_corrected(1.0, 0.0);
+        assert_eq!(z.count(), 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn merge_rejects_geometry_mismatch() {
+        let mut a = LogHistogram::new(1e-6, 1.0, 0.02);
+        let b = LogHistogram::new(1e-3, 1.0, 0.02);
+        a.merge(&b);
+    }
+}

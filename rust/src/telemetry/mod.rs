@@ -1,0 +1,23 @@
+//! Serving telemetry — bounded-memory streaming statistics for the
+//! coordinator's metrics path and the loadtest verdict:
+//!
+//! * [`LogHistogram`] — log-bucketed latency histogram: O(1) memory,
+//!   mergeable shards, quantiles exact to one bucket's relative error,
+//!   coordinated-omission correction
+//!   ([`LogHistogram::record_corrected`]).  This replaced the
+//!   unbounded `Vec<f64>` the serving report used to sort per query
+//!   (see DESIGN.md §Telemetry).
+//! * [`SloCounter`] — deadline attainment as two integers.
+//! * [`variation`](variation_of) — repeated-trial coefficient of
+//!   variation and seeded-bootstrap confidence intervals over
+//!   throughput/latency/energy, the statistic behind the paper's
+//!   FPGA-vs-GPU run-to-run stability verdict (Table II and the
+//!   `edgedcnn loadtest` live experiment).
+
+mod histogram;
+mod slo;
+mod variation;
+
+pub use histogram::{nearest_rank, LogHistogram};
+pub use slo::SloCounter;
+pub use variation::{cv_of, variation_of, weighted_cv, Variation};

@@ -1,0 +1,93 @@
+//! SLO attainment counters — "what fraction of requests came back under
+//! the deadline" as two integers, not a sample vector.
+
+/// Counts samples under a fixed latency objective.
+#[derive(Debug, Clone, Copy)]
+pub struct SloCounter {
+    threshold_s: f64,
+    total: u64,
+    met: u64,
+}
+
+impl SloCounter {
+    pub fn new(threshold_s: f64) -> Self {
+        assert!(threshold_s > 0.0, "SLO threshold must be positive");
+        SloCounter {
+            threshold_s,
+            total: 0,
+            met: 0,
+        }
+    }
+
+    pub fn record(&mut self, latency_s: f64) {
+        self.total += 1;
+        if latency_s <= self.threshold_s {
+            self.met += 1;
+        }
+    }
+
+    pub fn threshold_s(&self) -> f64 {
+        self.threshold_s
+    }
+
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    pub fn met(&self) -> u64 {
+        self.met
+    }
+
+    /// Attainment in `[0, 1]`; an empty window attains vacuously.
+    pub fn attainment(&self) -> f64 {
+        if self.total == 0 {
+            1.0
+        } else {
+            self.met as f64 / self.total as f64
+        }
+    }
+
+    /// Merge a shard (same threshold).
+    pub fn merge(&mut self, other: &SloCounter) {
+        assert_eq!(self.threshold_s, other.threshold_s, "threshold mismatch");
+        self.total += other.total;
+        self.met += other.met;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn attainment_counts_boundary_inclusive() {
+        let mut s = SloCounter::new(0.050);
+        assert_eq!(s.attainment(), 1.0, "vacuous on empty");
+        s.record(0.010);
+        s.record(0.050); // exactly at the objective counts as met
+        s.record(0.051);
+        s.record(0.500);
+        assert_eq!(s.total(), 4);
+        assert_eq!(s.met(), 2);
+        assert!((s.attainment() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn shards_merge() {
+        let mut a = SloCounter::new(0.1);
+        a.record(0.05);
+        let mut b = SloCounter::new(0.1);
+        b.record(0.2);
+        b.record(0.01);
+        a.merge(&b);
+        assert_eq!(a.total(), 3);
+        assert_eq!(a.met(), 2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn merge_rejects_threshold_mismatch() {
+        let mut a = SloCounter::new(0.1);
+        a.merge(&SloCounter::new(0.2));
+    }
+}

@@ -1,0 +1,158 @@
+//! Run-to-run variation statistics — the quantitative form of the
+//! paper's headline claim (the FPGA's σ/μ is tiny, the TX1 GPU's is
+//! not).  Coefficient of variation over repeated trials plus a
+//! seeded-bootstrap confidence interval for the mean, built on
+//! [`crate::stats::Welford`].
+
+use crate::stats::{percentile, Welford};
+use crate::util::Rng;
+
+/// Bootstrap resamples drawn for the CI of the mean (percentile
+/// bootstrap; Efron 1979).  256 keeps the report path cheap while the
+/// CI endpoints stabilize to well under the effect sizes compared here.
+const BOOTSTRAP_RESAMPLES: usize = 256;
+
+/// Summary of a repeated-measurement series.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Variation {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    /// Coefficient of variation σ/μ (0 when the mean is 0 or n < 2).
+    pub cv: f64,
+    /// 95% percentile-bootstrap CI of the mean.
+    pub ci_lo: f64,
+    pub ci_hi: f64,
+}
+
+/// Coefficient of variation of an accumulated [`Welford`] series.
+pub fn cv_of(w: &Welford) -> f64 {
+    let mean = w.mean();
+    if w.count() < 2 || mean == 0.0 {
+        0.0
+    } else {
+        w.sample_std() / mean.abs()
+    }
+}
+
+/// Sample-weighted mean CV over several [`Welford`] series — one
+/// stability number for a source with several legitimately different
+/// operating points (a lane serving `mnist` *and* its `mnist.q` twin
+/// runs two service times; pooling them into one series would report
+/// the workload mix as device jitter).
+pub fn weighted_cv<'a>(series: impl Iterator<Item = &'a Welford>) -> f64 {
+    let mut total = 0usize;
+    let mut acc = 0.0;
+    for w in series {
+        total += w.count();
+        acc += cv_of(w) * w.count() as f64;
+    }
+    if total == 0 {
+        0.0
+    } else {
+        acc / total as f64
+    }
+}
+
+/// Summarize repeated trial measurements: mean/σ/CV plus a seeded
+/// percentile-bootstrap 95% CI of the mean (deterministic given `seed`).
+pub fn variation_of(values: &[f64], seed: u64) -> Variation {
+    if values.is_empty() {
+        return Variation::default();
+    }
+    let mut w = Welford::new();
+    for &v in values {
+        w.push(v);
+    }
+    let (ci_lo, ci_hi) = if values.len() < 2 {
+        (w.mean(), w.mean())
+    } else {
+        let mut rng = Rng::seed_from_u64(seed);
+        let mut means = Vec::with_capacity(BOOTSTRAP_RESAMPLES);
+        for _ in 0..BOOTSTRAP_RESAMPLES {
+            let mut r = Welford::new();
+            for _ in 0..values.len() {
+                r.push(values[rng.range_usize(0, values.len())]);
+            }
+            means.push(r.mean());
+        }
+        (percentile(&means, 2.5), percentile(&means, 97.5))
+    };
+    Variation {
+        n: w.count(),
+        mean: w.mean(),
+        std: w.sample_std(),
+        cv: cv_of(&w),
+        ci_lo,
+        ci_hi,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cv_matches_hand_computation() {
+        let mut w = Welford::new();
+        for v in [9.0, 10.0, 11.0] {
+            w.push(v);
+        }
+        assert!((cv_of(&w) - 1.0 / 10.0).abs() < 1e-12);
+        let mut one = Welford::new();
+        one.push(5.0);
+        assert_eq!(cv_of(&one), 0.0, "undefined below two samples");
+    }
+
+    #[test]
+    fn bootstrap_ci_brackets_the_mean_and_is_seeded() {
+        let vals: Vec<f64> = (0..40).map(|i| 10.0 + (i as f64).sin()).collect();
+        let a = variation_of(&vals, 9);
+        let b = variation_of(&vals, 9);
+        assert_eq!(a.ci_lo, b.ci_lo, "deterministic given seed");
+        assert_eq!(a.ci_hi, b.ci_hi);
+        assert!(a.ci_lo <= a.mean && a.mean <= a.ci_hi);
+        assert!(a.ci_hi - a.ci_lo < 2.0 * a.std, "CI tighter than ±2σ at n=40");
+        // a wider-spread series yields a wider CI
+        let noisy: Vec<f64> =
+            (0..40).map(|i| 10.0 + 5.0 * (i as f64 * 1.7).sin()).collect();
+        let c = variation_of(&noisy, 9);
+        assert!(c.ci_hi - c.ci_lo > a.ci_hi - a.ci_lo);
+        assert!(c.cv > a.cv);
+    }
+
+    #[test]
+    fn weighted_cv_ignores_cross_series_spread() {
+        // two constant series at very different levels: each has cv 0,
+        // so the weighted CV must be 0 (pooling them would not be)
+        let mut slow = Welford::new();
+        let mut fast = Welford::new();
+        for _ in 0..10 {
+            slow.push(4.0);
+            fast.push(1.0);
+        }
+        assert_eq!(weighted_cv([&slow, &fast].into_iter()), 0.0);
+        // weighting: a 3x-larger series pulls the average toward it
+        let mut noisy = Welford::new();
+        for i in 0..30 {
+            noisy.push(10.0 + (i % 2) as f64);
+        }
+        let w = weighted_cv([&slow, &noisy].into_iter());
+        assert!(w > 0.5 * cv_of(&noisy), "cv {w} vs {}", cv_of(&noisy));
+        assert!(w < cv_of(&noisy));
+        assert_eq!(weighted_cv(std::iter::empty::<&Welford>()), 0.0);
+    }
+
+    #[test]
+    fn degenerate_series() {
+        let empty = variation_of(&[], 1);
+        assert_eq!(empty.n, 0);
+        assert_eq!(empty.cv, 0.0);
+        let one = variation_of(&[3.5], 1);
+        assert_eq!(one.n, 1);
+        assert_eq!(one.mean, 3.5);
+        assert_eq!((one.ci_lo, one.ci_hi), (3.5, 3.5));
+        let constant = variation_of(&[2.0; 10], 1);
+        assert_eq!(constant.cv, 0.0);
+    }
+}

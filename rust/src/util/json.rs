@@ -72,6 +72,27 @@ impl Json {
     }
 }
 
+/// Escape a string for embedding in a JSON document (the inverse of
+/// this parser's `string()` — quotes, backslashes and control
+/// characters), so the hand-rolled writers round-trip any legal name.
+pub fn escape_json(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
 /// Parse a complete JSON document.
 pub fn parse_json(input: &str) -> Result<Json> {
     let mut p = Parser {
@@ -295,6 +316,14 @@ mod tests {
     fn string_escapes() {
         let v = parse_json(r#""a\n\"b\"A""#).unwrap();
         assert_eq!(v, Json::Str("a\n\"b\"A".into()));
+    }
+
+    #[test]
+    fn escape_roundtrips_through_the_parser() {
+        for s in ["plain", "with \"quotes\"", "back\\slash", "nl\nand\ttab", "\u{1}ctl"] {
+            let doc = format!("\"{}\"", escape_json(s));
+            assert_eq!(parse_json(&doc).unwrap(), Json::Str(s.into()), "{s:?}");
+        }
     }
 
     #[test]

@@ -10,7 +10,7 @@ mod rng;
 mod tempdir;
 
 pub use bench::{bench_header, smoke_mode, BenchReport, Bencher};
-pub use json::{parse_json, Json};
+pub use json::{escape_json, parse_json, Json};
 pub use pool::WorkerPool;
 pub use rng::Rng;
 pub use tempdir::TempDir;

@@ -1,0 +1,353 @@
+//! Open-loop arrival processes — the request clock of a scenario.
+//!
+//! All four processes are driven by one seeded [`Rng`], so a scenario
+//! is reproducible bit-for-bit: same seed, same arrival timestamps.
+//! The non-homogeneous processes (diurnal, flash crowd) are generated
+//! by Lewis–Shedler thinning against their peak rate, which keeps the
+//! draw count (and therefore determinism) independent of how the rate
+//! function is shaped.
+
+use crate::util::Rng;
+
+/// The arrival process of a scenario (rates in requests/second).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalProcess {
+    /// Homogeneous Poisson: exponential inter-arrivals at `rate_hz`.
+    Poisson { rate_hz: f64 },
+    /// Two-state Markov-modulated Poisson process — the bursty edge
+    /// workload: exponential dwell in a calm and a burst state, each
+    /// with its own Poisson rate.
+    Mmpp {
+        calm_hz: f64,
+        burst_hz: f64,
+        /// Mean dwell in the calm state, seconds.
+        calm_dwell_s: f64,
+        /// Mean dwell in the burst state, seconds.
+        burst_dwell_s: f64,
+    },
+    /// Diurnal ramp: sinusoidal rate between `base_hz` and `peak_hz`
+    /// with the given period (a day compressed to seconds).
+    Diurnal {
+        base_hz: f64,
+        peak_hz: f64,
+        period_s: f64,
+    },
+    /// Flash crowd: Poisson at `base_hz` with a `spike_hz` window of
+    /// `spike_len_s` starting at `spike_at_s`.
+    FlashCrowd {
+        base_hz: f64,
+        spike_hz: f64,
+        spike_at_s: f64,
+        spike_len_s: f64,
+    },
+}
+
+impl ArrivalProcess {
+    /// The process's peak instantaneous rate (thinning envelope).
+    fn peak_hz(&self) -> f64 {
+        match *self {
+            ArrivalProcess::Poisson { rate_hz } => rate_hz,
+            ArrivalProcess::Mmpp {
+                calm_hz, burst_hz, ..
+            } => calm_hz.max(burst_hz),
+            ArrivalProcess::Diurnal {
+                base_hz, peak_hz, ..
+            } => base_hz.max(peak_hz),
+            ArrivalProcess::FlashCrowd {
+                base_hz, spike_hz, ..
+            } => base_hz.max(spike_hz),
+        }
+    }
+
+    /// Instantaneous rate at time `t` (used by the thinning sampler;
+    /// the Markov-modulated state is tracked by the sampler, not here).
+    fn rate_at(&self, t_s: f64) -> f64 {
+        match *self {
+            ArrivalProcess::Poisson { rate_hz } => rate_hz,
+            ArrivalProcess::Mmpp { .. } => unreachable!("MMPP is stateful"),
+            ArrivalProcess::Diurnal {
+                base_hz,
+                peak_hz,
+                period_s,
+            } => {
+                let phase = 2.0 * std::f64::consts::PI * t_s / period_s;
+                base_hz + (peak_hz - base_hz) * 0.5 * (1.0 - phase.cos())
+            }
+            ArrivalProcess::FlashCrowd {
+                base_hz,
+                spike_hz,
+                spike_at_s,
+                spike_len_s,
+            } => {
+                if (spike_at_s..spike_at_s + spike_len_s).contains(&t_s) {
+                    spike_hz
+                } else {
+                    base_hz
+                }
+            }
+        }
+    }
+
+    fn validate(&self) -> anyhow::Result<()> {
+        let positive = |v: f64, what: &str| {
+            anyhow::ensure!(
+                v > 0.0 && v.is_finite(),
+                "{what} must be positive and finite, got {v}"
+            );
+            Ok(())
+        };
+        match *self {
+            ArrivalProcess::Poisson { rate_hz } => positive(rate_hz, "rate_hz"),
+            ArrivalProcess::Mmpp {
+                calm_hz,
+                burst_hz,
+                calm_dwell_s,
+                burst_dwell_s,
+            } => {
+                positive(calm_hz, "calm_hz")?;
+                positive(burst_hz, "burst_hz")?;
+                positive(calm_dwell_s, "calm_dwell_s")?;
+                positive(burst_dwell_s, "burst_dwell_s")
+            }
+            ArrivalProcess::Diurnal {
+                base_hz,
+                peak_hz,
+                period_s,
+            } => {
+                positive(base_hz, "base_hz")?;
+                positive(peak_hz, "peak_hz")?;
+                positive(period_s, "period_s")
+            }
+            ArrivalProcess::FlashCrowd {
+                base_hz,
+                spike_hz,
+                spike_at_s,
+                spike_len_s,
+            } => {
+                positive(base_hz, "base_hz")?;
+                positive(spike_hz, "spike_hz")?;
+                anyhow::ensure!(spike_at_s >= 0.0, "spike_at_s must be >= 0");
+                positive(spike_len_s, "spike_len_s")
+            }
+        }
+    }
+
+    /// A stateful sampler starting at `t = 0` (checks parameters once).
+    pub fn sampler(self) -> anyhow::Result<ArrivalSampler> {
+        self.validate()?;
+        Ok(ArrivalSampler {
+            process: self,
+            t_s: 0.0,
+            mmpp_burst: false,
+            mmpp_switch_at: f64::NAN,
+        })
+    }
+}
+
+/// Draw from Exp(rate) — inter-arrival of a Poisson stream.
+fn exp_gap(rng: &mut Rng, rate_hz: f64) -> f64 {
+    // 1 - u in (0, 1]: ln never sees zero
+    -(1.0 - rng.next_f64()).ln() / rate_hz
+}
+
+/// Stateful arrival-timestamp generator for one [`ArrivalProcess`].
+#[derive(Debug, Clone)]
+pub struct ArrivalSampler {
+    process: ArrivalProcess,
+    t_s: f64,
+    mmpp_burst: bool,
+    /// Absolute time of the next MMPP state flip (NaN until first use).
+    mmpp_switch_at: f64,
+}
+
+impl ArrivalSampler {
+    /// Absolute timestamp (seconds from scenario start) of the next
+    /// arrival.  Successive calls are strictly non-decreasing.
+    pub fn next_arrival(&mut self, rng: &mut Rng) -> f64 {
+        match self.process {
+            ArrivalProcess::Poisson { rate_hz } => {
+                self.t_s += exp_gap(rng, rate_hz);
+                self.t_s
+            }
+            ArrivalProcess::Mmpp {
+                calm_hz,
+                burst_hz,
+                calm_dwell_s,
+                burst_dwell_s,
+            } => {
+                if self.mmpp_switch_at.is_nan() {
+                    self.mmpp_switch_at = exp_gap(rng, 1.0 / calm_dwell_s);
+                }
+                loop {
+                    let rate = if self.mmpp_burst { burst_hz } else { calm_hz };
+                    let candidate = self.t_s + exp_gap(rng, rate);
+                    if candidate < self.mmpp_switch_at {
+                        self.t_s = candidate;
+                        return self.t_s;
+                    }
+                    // memoryless: discard the draw past the flip, switch
+                    // state and re-draw from the flip time
+                    self.t_s = self.mmpp_switch_at;
+                    self.mmpp_burst = !self.mmpp_burst;
+                    let dwell = if self.mmpp_burst {
+                        burst_dwell_s
+                    } else {
+                        calm_dwell_s
+                    };
+                    self.mmpp_switch_at = self.t_s + exp_gap(rng, 1.0 / dwell);
+                }
+            }
+            // non-homogeneous: thin a peak-rate Poisson stream
+            ArrivalProcess::Diurnal { .. }
+            | ArrivalProcess::FlashCrowd { .. } => {
+                let peak = self.process.peak_hz();
+                loop {
+                    self.t_s += exp_gap(rng, peak);
+                    if rng.next_f64() * peak <= self.process.rate_at(self.t_s) {
+                        return self.t_s;
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn arrivals(p: ArrivalProcess, n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::seed_from_u64(seed);
+        let mut s = p.sampler().unwrap();
+        (0..n).map(|_| s.next_arrival(&mut rng)).collect()
+    }
+
+    #[test]
+    fn deterministic_and_monotone_given_seed() {
+        for p in [
+            ArrivalProcess::Poisson { rate_hz: 200.0 },
+            ArrivalProcess::Mmpp {
+                calm_hz: 100.0,
+                burst_hz: 1500.0,
+                calm_dwell_s: 0.05,
+                burst_dwell_s: 0.02,
+            },
+            ArrivalProcess::Diurnal {
+                base_hz: 50.0,
+                peak_hz: 400.0,
+                period_s: 1.0,
+            },
+            ArrivalProcess::FlashCrowd {
+                base_hz: 100.0,
+                spike_hz: 2000.0,
+                spike_at_s: 0.1,
+                spike_len_s: 0.1,
+            },
+        ] {
+            let a = arrivals(p, 300, 42);
+            let b = arrivals(p, 300, 42);
+            assert_eq!(a, b, "{p:?} must be seed-deterministic");
+            assert!(
+                a.windows(2).all(|w| w[1] >= w[0]),
+                "{p:?} timestamps must be non-decreasing"
+            );
+            assert_ne!(a, arrivals(p, 300, 43), "{p:?} seeds must matter");
+        }
+    }
+
+    #[test]
+    fn poisson_hits_its_mean_rate() {
+        let n = 4000;
+        let a = arrivals(ArrivalProcess::Poisson { rate_hz: 500.0 }, n, 7);
+        let measured = n as f64 / a.last().unwrap();
+        assert!(
+            (measured / 500.0 - 1.0).abs() < 0.08,
+            "measured {measured} Hz"
+        );
+    }
+
+    #[test]
+    fn mmpp_is_burstier_than_poisson() {
+        // squared CV of inter-arrivals: 1 for Poisson, > 1 for MMPP
+        let cv2 = |ts: &[f64]| {
+            let gaps: Vec<f64> =
+                ts.windows(2).map(|w| w[1] - w[0]).collect();
+            let s = crate::stats::Summary::of(&gaps);
+            (s.std / s.mean).powi(2)
+        };
+        let p = arrivals(ArrivalProcess::Poisson { rate_hz: 300.0 }, 3000, 11);
+        let m = arrivals(
+            ArrivalProcess::Mmpp {
+                calm_hz: 60.0,
+                burst_hz: 3000.0,
+                calm_dwell_s: 0.05,
+                burst_dwell_s: 0.02,
+            },
+            3000,
+            11,
+        );
+        assert!(cv2(&m) > 1.5 * cv2(&p), "mmpp {} poisson {}", cv2(&m), cv2(&p));
+    }
+
+    #[test]
+    fn flash_crowd_concentrates_in_the_spike() {
+        let p = ArrivalProcess::FlashCrowd {
+            base_hz: 50.0,
+            spike_hz: 5000.0,
+            spike_at_s: 0.2,
+            spike_len_s: 0.1,
+        };
+        let a = arrivals(p, 800, 3);
+        let in_spike =
+            a.iter().filter(|t| (0.2..0.3).contains(*t)).count();
+        assert!(
+            in_spike > a.len() / 2,
+            "spike window must dominate: {in_spike}/{}",
+            a.len()
+        );
+    }
+
+    #[test]
+    fn diurnal_peak_beats_trough() {
+        let p = ArrivalProcess::Diurnal {
+            base_hz: 20.0,
+            peak_hz: 2000.0,
+            period_s: 1.0,
+        };
+        let a = arrivals(p, 2000, 5);
+        // trough at t≈0/1, peak at t≈0.5
+        let near_peak = a
+            .iter()
+            .filter(|t| (0.35..0.65).contains(&(*t % 1.0)))
+            .count();
+        let near_trough = a
+            .iter()
+            .filter(|t| {
+                let ph = *t % 1.0;
+                !(0.15..0.85).contains(&ph)
+            })
+            .count();
+        assert!(near_peak > 3 * near_trough.max(1), "{near_peak} vs {near_trough}");
+    }
+
+    #[test]
+    fn bad_parameters_are_rejected() {
+        assert!(ArrivalProcess::Poisson { rate_hz: 0.0 }.sampler().is_err());
+        assert!(ArrivalProcess::Mmpp {
+            calm_hz: 10.0,
+            burst_hz: -1.0,
+            calm_dwell_s: 0.1,
+            burst_dwell_s: 0.1
+        }
+        .sampler()
+        .is_err());
+        assert!(ArrivalProcess::FlashCrowd {
+            base_hz: 10.0,
+            spike_hz: 100.0,
+            spike_at_s: -0.5,
+            spike_len_s: 0.1
+        }
+        .sampler()
+        .is_err());
+    }
+}

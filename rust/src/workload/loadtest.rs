@@ -1,0 +1,403 @@
+//! Open-loop loadtest — the paper's run-to-run-variation verdict as a
+//! live experiment.
+//!
+//! A [`Trace`] is driven against a fresh coordinator once per trial:
+//! requests are submitted at their *scheduled* timestamps (never gated
+//! on responses — open loop), and each request's latency is measured
+//! from its scheduled arrival, so generator lag is charged to the
+//! system rather than hidden (the open-loop form of coordinated-
+//! omission correction; see DESIGN.md §Telemetry).  Each trial re-seeds
+//! the device measurement-noise streams, so trials are independent
+//! measurements of the same workload — exactly the repeated-run
+//! campaign behind Table II, but through the serving stack.
+//!
+//! The verdict aggregates per lane: request-latency quantiles (merged
+//! histogram shards), SLO attainment, pooled per-image device-latency
+//! CV (the stability metric — FPGA ≈ clock jitter, GPU ≈ DVFS +
+//! measurement noise), and across-trial throughput with bootstrap CIs.
+//!
+//! Batches are sharded across the capable lanes by default: the
+//! loadtest is a per-device measurement campaign, so it wants every
+//! lane exercised rather than the per-network ordering guarantee
+//! (`LoadtestOpts::shard_batches` restores it if needed).
+
+use super::trace::Trace;
+use crate::config::{BackendCfg, QFormat};
+use crate::coordinator::{
+    BatcherConfig, Coordinator, CoordinatorConfig, LatencyReport,
+};
+use crate::stats::Welford;
+use crate::telemetry::{
+    variation_of, weighted_cv, LogHistogram, SloCounter, Variation,
+};
+use crate::util::Rng;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+/// Loadtest configuration (the trace supplies the traffic).
+#[derive(Debug, Clone)]
+pub struct LoadtestOpts {
+    pub artifacts_dir: PathBuf,
+    pub backends: BackendCfg,
+    /// Lane-count override, as in [`CoordinatorConfig::executors`].
+    pub executors: usize,
+    /// Independent repetitions of the trace (device noise re-seeded per
+    /// trial).
+    pub trials: usize,
+    /// Split multi-request batches across the capable lanes (default:
+    /// the verdict wants every device measured under the same traffic).
+    pub shard_batches: bool,
+}
+
+impl Default for LoadtestOpts {
+    fn default() -> Self {
+        LoadtestOpts {
+            artifacts_dir: "artifacts".into(),
+            backends: BackendCfg::default(),
+            executors: 0,
+            trials: 5,
+            shard_batches: true,
+        }
+    }
+}
+
+/// One lane's row of the verdict table.
+#[derive(Debug, Clone)]
+pub struct LaneVerdict {
+    pub name: String,
+    /// Batches/images across all trials.
+    pub batches: u64,
+    pub images: u64,
+    pub energy_j: f64,
+    /// Request-latency quantiles (coordinated-omission corrected,
+    /// merged across trials).
+    pub latency: LatencyReport,
+    /// SLO attainment in [0, 1].
+    pub slo_attainment: f64,
+    /// Mean device latency per image, seconds.
+    pub mean_device_per_image_s: f64,
+    /// Pooled CV of the per-image device latency — the run-to-run
+    /// stability column of the verdict.
+    pub latency_cv: f64,
+    /// Across-trial throughput (img/s): mean/CV/bootstrap CI.
+    pub throughput: Variation,
+}
+
+/// The FPGA-vs-GPU stability comparison, when both lanes served work.
+#[derive(Debug, Clone)]
+pub struct VariationVerdict {
+    pub fpga_lane: String,
+    pub fpga_cv: f64,
+    pub gpu_lane: String,
+    pub gpu_cv: f64,
+    /// The paper's claim: the FPGA lane varies strictly less.
+    pub fpga_wins: bool,
+}
+
+/// Aggregated loadtest outcome.
+#[derive(Debug, Clone)]
+pub struct LoadtestReport {
+    pub scenario: String,
+    pub trials: usize,
+    pub requests_per_trial: usize,
+    pub total_requests: u64,
+    /// Requests turned away by admission control (the coordinator's
+    /// own counter — the intended load-shedding path).
+    pub rejected: u64,
+    /// Requests whose replies were dropped for any *other* reason
+    /// (backend execution failure) — nonzero means infrastructure
+    /// trouble, not load shedding, and the verdict flags it.
+    pub lost: u64,
+    pub deferred: u64,
+    pub slo_s: f64,
+    /// Pool-wide latency quantiles (all lanes, all trials).
+    pub latency: LatencyReport,
+    pub slo_attainment: f64,
+    /// Mean trial wall time, seconds.
+    pub mean_wall_s: f64,
+    pub lanes: Vec<LaneVerdict>,
+    pub verdict: Option<VariationVerdict>,
+    /// One summary line per trial (requests, wall, img/s, p99).
+    pub trial_lines: Vec<String>,
+}
+
+#[derive(Debug)]
+struct LaneAgg {
+    batches: u64,
+    images: u64,
+    energy_j: f64,
+    hist: LogHistogram,
+    slo: SloCounter,
+    /// Per-image device latency, split per (network, batch size) so
+    /// neither precision twins' different service times nor batch-size
+    /// amortization (the GPU's launch overhead shrinking per image as
+    /// batches grow) read as device jitter.
+    dev_per_image: BTreeMap<(String, usize), Welford>,
+    /// All per-image device samples (for the mean column only).
+    dev_all: Welford,
+    throughput_by_trial: Vec<f64>,
+}
+
+impl LaneAgg {
+    fn new(slo_s: f64) -> Self {
+        LaneAgg {
+            batches: 0,
+            images: 0,
+            energy_j: 0.0,
+            hist: LogHistogram::latency_default(),
+            slo: SloCounter::new(slo_s),
+            dev_per_image: BTreeMap::new(),
+            dev_all: Welford::new(),
+            throughput_by_trial: Vec::new(),
+        }
+    }
+}
+
+fn quantiles(h: &LogHistogram) -> LatencyReport {
+    LatencyReport {
+        mean_s: h.mean(),
+        p50_s: h.quantile(50.0),
+        p95_s: h.quantile(95.0),
+        p99_s: h.quantile(99.0),
+        p999_s: h.quantile(99.9),
+    }
+}
+
+/// Run the trace `opts.trials` times and aggregate the verdict.
+pub fn run_loadtest(trace: &Trace, opts: &LoadtestOpts) -> Result<LoadtestReport> {
+    anyhow::ensure!(opts.trials >= 1, "loadtest needs at least one trial");
+    anyhow::ensure!(!trace.events.is_empty(), "trace has no events");
+
+    // networks to preload (base names) and whether any .q twin is mixed
+    let (networks, any_quant) = trace.networks();
+
+    let mut overall = LogHistogram::latency_default();
+    let mut overall_slo = SloCounter::new(trace.slo_s);
+    let mut lanes: BTreeMap<String, LaneAgg> = BTreeMap::new();
+    let mut rejected = 0u64;
+    let mut lost = 0u64;
+    let mut deferred = 0u64;
+    let mut walls = Vec::with_capacity(opts.trials);
+    let mut trial_lines = Vec::with_capacity(opts.trials);
+
+    for trial in 0..opts.trials {
+        // independent measurement noise per trial, deterministic overall
+        let mut backends = opts.backends.clone();
+        backends.noise_seed = Rng::seed_from_u64(
+            trace.seed.wrapping_add(0xC0FFEE + trial as u64),
+        )
+        .next_u64();
+        let coord = Coordinator::start(CoordinatorConfig {
+            artifacts_dir: opts.artifacts_dir.clone(),
+            networks: networks.clone(),
+            batcher: BatcherConfig::default(),
+            backends,
+            executors: opts.executors,
+            quant: any_quant.then_some(QFormat::new(16, 8)),
+            shard_batches: opts.shard_batches,
+        })
+        .with_context(|| format!("starting the pool for trial {trial}"))?;
+
+        // open-loop submission at the scheduled timestamps
+        let t0 = Instant::now();
+        let mut pending = Vec::with_capacity(trace.events.len());
+        for e in &trace.events {
+            let target = t0 + Duration::from_secs_f64(e.t_s);
+            let now = Instant::now();
+            if target > now {
+                std::thread::sleep(target - now);
+            }
+            // generator lag is charged to the measurement (coordinated
+            // omission: latency counts from the *scheduled* arrival)
+            let lag = Instant::now()
+                .saturating_duration_since(target)
+                .as_secs_f64();
+            pending.push((e, lag, coord.submit(&e.network, e.n_images, e.seed)?));
+        }
+        let mut trial_hist = LogHistogram::latency_default();
+        let mut trial_errors = 0u64;
+        for (e, lag, handle) in pending {
+            match handle.wait() {
+                Ok(resp) => {
+                    let latency = lag + resp.latency_s;
+                    overall.record(latency);
+                    overall_slo.record(latency);
+                    trial_hist.record(latency);
+                    let lane = lanes
+                        .entry(resp.backend.clone())
+                        .or_insert_with(|| LaneAgg::new(trace.slo_s));
+                    lane.hist.record(latency);
+                    lane.slo.record(latency);
+                    let per_image =
+                        resp.device_time_s / e.n_images.max(1) as f64;
+                    lane.dev_per_image
+                        .entry((e.network.clone(), resp.batch_size))
+                        .or_default()
+                        .push(per_image);
+                    lane.dev_all.push(per_image);
+                }
+                // dropped reply: admission rejection or backend failure
+                // (told apart below via the coordinator's own counter)
+                Err(_) => trial_errors += 1,
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        walls.push(wall);
+
+        let report = coord.report_for_wall(wall);
+        // the coordinator knows how many it *chose* to reject; any
+        // further dropped replies were execution failures
+        let trial_rejected = report.rejected.min(trial_errors);
+        rejected += trial_rejected;
+        lost += trial_errors - trial_rejected;
+        deferred += report.deferred;
+        for b in &report.per_backend {
+            let lane = lanes
+                .entry(b.name.clone())
+                .or_insert_with(|| LaneAgg::new(trace.slo_s));
+            lane.batches += b.batches;
+            lane.images += b.images;
+            lane.energy_j += b.energy_j;
+            lane.throughput_by_trial.push(b.images_per_s);
+        }
+        trial_lines.push(format!(
+            "trial {trial}: {} requests  wall {:.3} s  {:.1} img/s  \
+             p99 {:.2} ms  rejected {trial_rejected}",
+            trace.events.len(),
+            wall,
+            report.images_per_s,
+            trial_hist.quantile(99.0) * 1e3,
+        ));
+    }
+
+    let lane_verdicts: Vec<LaneVerdict> = lanes
+        .iter()
+        .map(|(name, l)| LaneVerdict {
+            name: name.clone(),
+            batches: l.batches,
+            images: l.images,
+            energy_j: l.energy_j,
+            latency: quantiles(&l.hist),
+            slo_attainment: l.slo.attainment(),
+            mean_device_per_image_s: l.dev_all.mean(),
+            latency_cv: weighted_cv(l.dev_per_image.values()),
+            throughput: variation_of(&l.throughput_by_trial, trace.seed),
+        })
+        .collect();
+
+    // the paper's comparison: first FPGA-sim lane vs first GPU-model
+    // lane, both with enough batches for a CV to mean anything
+    let find = |prefix: &str| {
+        lane_verdicts
+            .iter()
+            .find(|l| l.name.starts_with(prefix) && l.batches >= 2)
+    };
+    let verdict = match (find("fpga"), find("gpu")) {
+        (Some(f), Some(g)) => Some(VariationVerdict {
+            fpga_lane: f.name.clone(),
+            fpga_cv: f.latency_cv,
+            gpu_lane: g.name.clone(),
+            gpu_cv: g.latency_cv,
+            fpga_wins: f.latency_cv < g.latency_cv,
+        }),
+        _ => None,
+    };
+
+    Ok(LoadtestReport {
+        scenario: trace.scenario.clone(),
+        trials: opts.trials,
+        requests_per_trial: trace.events.len(),
+        total_requests: (trace.events.len() * opts.trials) as u64,
+        rejected,
+        lost,
+        deferred,
+        slo_s: trace.slo_s,
+        latency: quantiles(&overall),
+        slo_attainment: overall_slo.attainment(),
+        mean_wall_s: walls.iter().sum::<f64>() / walls.len() as f64,
+        lanes: lane_verdicts,
+        verdict,
+        trial_lines,
+    })
+}
+
+impl LoadtestReport {
+    /// Render the verdict table.  Lane rows are stable `key value`
+    /// pairs (the CI smoke job parses them).
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "== loadtest: scenario {}  ({} trials × {} requests, SLO {:.0} ms) ==\n",
+            self.scenario,
+            self.trials,
+            self.requests_per_trial,
+            self.slo_s * 1e3,
+        );
+        for line in &self.trial_lines {
+            out.push_str(line);
+            out.push('\n');
+        }
+        out.push_str(&format!(
+            "overall: p50 {:.2}  p95 {:.2}  p99 {:.2}  p99.9 {:.2} ms  \
+             (coordinated-omission corrected)  slo {:.1}%  rejected {}  \
+             deferred {}\n",
+            self.latency.p50_s * 1e3,
+            self.latency.p95_s * 1e3,
+            self.latency.p99_s * 1e3,
+            self.latency.p999_s * 1e3,
+            self.slo_attainment * 100.0,
+            self.rejected,
+            self.deferred,
+        ));
+        if self.lost > 0 {
+            out.push_str(&format!(
+                "WARNING: {} request(s) lost to backend execution failures \
+                 (not admission control) — results are incomplete\n",
+                self.lost,
+            ));
+        }
+        for l in &self.lanes {
+            out.push_str(&format!(
+                "lane {} batches {} images {} p50_ms {:.3} p95_ms {:.3} \
+                 p99_ms {:.3} p999_ms {:.3} cv_pct {:.3} slo_pct {:.1} \
+                 dev_ms_img {:.3} img_s {:.1} ci95 {:.1}-{:.1} energy_j {:.3}\n",
+                l.name,
+                l.batches,
+                l.images,
+                l.latency.p50_s * 1e3,
+                l.latency.p95_s * 1e3,
+                l.latency.p99_s * 1e3,
+                l.latency.p999_s * 1e3,
+                l.latency_cv * 100.0,
+                l.slo_attainment * 100.0,
+                l.mean_device_per_image_s * 1e3,
+                l.throughput.mean,
+                l.throughput.ci_lo,
+                l.throughput.ci_hi,
+                l.energy_j,
+            ));
+        }
+        match &self.verdict {
+            Some(v) if v.fpga_wins => out.push_str(&format!(
+                "verdict: device-latency variation {} cv {:.2}% < {} cv \
+                 {:.2}% — the FPGA lane is the stable one (paper Table II)\n",
+                v.fpga_lane,
+                v.fpga_cv * 100.0,
+                v.gpu_lane,
+                v.gpu_cv * 100.0,
+            )),
+            Some(v) => out.push_str(&format!(
+                "verdict: NOT reproduced — {} cv {:.2}% vs {} cv {:.2}%\n",
+                v.fpga_lane,
+                v.fpga_cv * 100.0,
+                v.gpu_lane,
+                v.gpu_cv * 100.0,
+            )),
+            None => out.push_str(
+                "verdict: n/a (needs both an fpga and a gpu lane with work)\n",
+            ),
+        }
+        out
+    }
+}

@@ -1,0 +1,28 @@
+//! Workload subsystem — scenario-driven open-loop load generation for
+//! the serving coordinator (see DESIGN.md §Workload):
+//!
+//! * [`ArrivalProcess`] — seeded arrival clocks: deterministic Poisson,
+//!   two-state MMPP (bursty), diurnal ramp and flash crowd.
+//! * [`Scenario`] — a named, seeded traffic description: arrival
+//!   process + request mix over logical networks (including precision
+//!   twins like `mnist` vs `mnist.q`) + request budget + SLO; four
+//!   built-ins (`steady`, `burst`, `diurnal`, `flash`) or a JSON file.
+//! * [`Trace`] — a scenario materialized to exact timestamps/mix/seeds,
+//!   recordable and replayable bit-for-bit (a workload is a shareable
+//!   artifact).
+//! * [`loadtest`] — drives a trace open-loop against the backend pool,
+//!   repeats it over seeded trials, and renders the paper's
+//!   Table-2-style FPGA-vs-GPU run-to-run-variation verdict from live
+//!   serving telemetry.
+
+mod arrival;
+pub mod loadtest;
+mod scenario;
+mod trace;
+
+pub use arrival::{ArrivalProcess, ArrivalSampler};
+pub use loadtest::{
+    run_loadtest, LaneVerdict, LoadtestOpts, LoadtestReport, VariationVerdict,
+};
+pub use scenario::{MixEntry, Scenario};
+pub use trace::{Trace, TraceEvent};

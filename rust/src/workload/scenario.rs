@@ -1,0 +1,320 @@
+//! Scenarios — a named, seeded description of open-loop traffic: an
+//! arrival process, a request mix over logical networks (including
+//! precision twins like `mnist` vs `mnist.q`), a request budget and an
+//! SLO.  Four built-ins cover the shapes the paper's edge setting
+//! cares about (`steady`, `burst`, `diurnal`, `flash`); arbitrary
+//! scenarios load from a JSON file, so a workload is a shareable,
+//! versionable artifact rather than a flag soup.
+
+use super::arrival::ArrivalProcess;
+use crate::util::{escape_json, parse_json, Json};
+use anyhow::{bail, Context, Result};
+
+/// One entry of a scenario's request mix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MixEntry {
+    /// Logical network name (`mnist`, `mnist.q`, `celeba`, …).
+    pub network: String,
+    /// Images per request drawn from this entry.
+    pub images: usize,
+    /// Relative draw weight (need not sum to 1).
+    pub weight: f64,
+}
+
+/// A complete traffic scenario.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Scenario {
+    pub name: String,
+    pub arrival: ArrivalProcess,
+    pub mix: Vec<MixEntry>,
+    /// Total requests the scenario issues.
+    pub requests: usize,
+    /// Seed for arrivals, mix draws and per-request latents.
+    pub seed: u64,
+    /// Latency objective for the attainment column.
+    pub slo_s: f64,
+}
+
+/// The default mix: the f32 network alongside its fixed-point twin —
+/// the paper's precision axis as live traffic.
+fn twin_mix() -> Vec<MixEntry> {
+    vec![
+        MixEntry {
+            network: "mnist".into(),
+            images: 2,
+            weight: 0.65,
+        },
+        MixEntry {
+            network: "mnist.q".into(),
+            images: 2,
+            weight: 0.35,
+        },
+    ]
+}
+
+impl Scenario {
+    /// The built-in scenario catalogue.
+    pub fn builtin(name: &str) -> Result<Scenario> {
+        let (arrival, slo_s) = match name {
+            "steady" => (ArrivalProcess::Poisson { rate_hz: 250.0 }, 0.050),
+            "burst" => (
+                ArrivalProcess::Mmpp {
+                    calm_hz: 150.0,
+                    burst_hz: 1500.0,
+                    calm_dwell_s: 0.08,
+                    burst_dwell_s: 0.04,
+                },
+                0.050,
+            ),
+            "diurnal" => (
+                ArrivalProcess::Diurnal {
+                    base_hz: 100.0,
+                    peak_hz: 600.0,
+                    period_s: 1.0,
+                },
+                0.050,
+            ),
+            "flash" => (
+                ArrivalProcess::FlashCrowd {
+                    base_hz: 120.0,
+                    spike_hz: 2000.0,
+                    spike_at_s: 0.15,
+                    spike_len_s: 0.2,
+                },
+                0.100,
+            ),
+            other => bail!(
+                "unknown scenario {other:?} (steady|burst|diurnal|flash, \
+                 or a path to a scenario JSON file)"
+            ),
+        };
+        Ok(Scenario {
+            name: name.to_string(),
+            arrival,
+            mix: twin_mix(),
+            requests: 96,
+            seed: 42,
+            slo_s,
+        })
+    }
+
+    /// Resolve a CLI argument: a built-in name, or a path to a JSON
+    /// scenario file.
+    pub fn resolve(arg: &str) -> Result<Scenario> {
+        if let Ok(s) = Scenario::builtin(arg) {
+            return Ok(s);
+        }
+        let text = std::fs::read_to_string(arg)
+            .with_context(|| format!("reading scenario file {arg:?}"))?;
+        Scenario::from_json(&text)
+            .with_context(|| format!("parsing scenario file {arg:?}"))
+    }
+
+    /// Base (f32) networks the scenario touches, deduplicated, plus
+    /// whether any mix entry serves a `.q` precision twin (the
+    /// coordinator then enables quantized twins at startup).
+    pub fn networks(&self) -> (Vec<String>, bool) {
+        base_networks(self.mix.iter().map(|e| e.network.as_str()))
+    }
+
+    /// Parse the JSON scenario schema (see `Scenario::to_json`).
+    pub fn from_json(text: &str) -> Result<Scenario> {
+        let v = parse_json(text)?;
+        let arrival = parse_arrival(v.req("arrival")?)?;
+        let mix = v
+            .req("mix")?
+            .as_arr()?
+            .iter()
+            .map(|e| {
+                Ok(MixEntry {
+                    network: e.req("network")?.as_str()?.to_string(),
+                    images: e.req("images")?.as_usize()?,
+                    weight: e.req("weight")?.as_f64()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        anyhow::ensure!(!mix.is_empty(), "scenario mix is empty");
+        anyhow::ensure!(
+            mix.iter().all(|e| e.weight > 0.0 && e.images > 0),
+            "mix weights and image counts must be positive"
+        );
+        let s = Scenario {
+            name: v.req("name")?.as_str()?.to_string(),
+            arrival,
+            mix,
+            requests: v.req("requests")?.as_usize()?,
+            seed: v.req("seed")?.as_u64()?,
+            slo_s: v.req("slo_s")?.as_f64()?,
+        };
+        anyhow::ensure!(s.requests > 0, "scenario needs at least one request");
+        s.arrival.sampler()?; // parameter validation
+        Ok(s)
+    }
+
+    /// Serialize (f64s print shortest-roundtrip, so a written scenario
+    /// re-parses to the identical value).
+    pub fn to_json(&self) -> String {
+        let mix = self
+            .mix
+            .iter()
+            .map(|e| {
+                format!(
+                    "{{\"network\": \"{}\", \"images\": {}, \"weight\": {}}}",
+                    escape_json(&e.network),
+                    e.images,
+                    e.weight
+                )
+            })
+            .collect::<Vec<_>>()
+            .join(", ");
+        format!(
+            "{{\n  \"name\": \"{}\",\n  \"seed\": {},\n  \"requests\": {},\n  \
+             \"slo_s\": {},\n  \"arrival\": {},\n  \"mix\": [{}]\n}}\n",
+            escape_json(&self.name),
+            self.seed,
+            self.requests,
+            self.slo_s,
+            arrival_json(&self.arrival),
+            mix
+        )
+    }
+}
+
+/// Base (f32) network names behind an iterator of logical names,
+/// deduplicated in first-seen order, plus whether any name is a `.q`
+/// precision twin — the one place the twin-naming convention is
+/// decoded for workload purposes (scenarios *and* traces).
+pub(crate) fn base_networks<'a>(
+    names: impl Iterator<Item = &'a str>,
+) -> (Vec<String>, bool) {
+    let mut bases: Vec<String> = Vec::new();
+    let mut any_quant = false;
+    for name in names {
+        let base = name.strip_suffix(".q").unwrap_or(name);
+        any_quant |= name.ends_with(".q");
+        if !bases.iter().any(|b| b == base) {
+            bases.push(base.to_string());
+        }
+    }
+    (bases, any_quant)
+}
+
+fn arrival_json(a: &ArrivalProcess) -> String {
+    match *a {
+        ArrivalProcess::Poisson { rate_hz } => {
+            format!("{{\"kind\": \"poisson\", \"rate_hz\": {rate_hz}}}")
+        }
+        ArrivalProcess::Mmpp {
+            calm_hz,
+            burst_hz,
+            calm_dwell_s,
+            burst_dwell_s,
+        } => format!(
+            "{{\"kind\": \"mmpp\", \"calm_hz\": {calm_hz}, \"burst_hz\": \
+             {burst_hz}, \"calm_dwell_s\": {calm_dwell_s}, \
+             \"burst_dwell_s\": {burst_dwell_s}}}"
+        ),
+        ArrivalProcess::Diurnal {
+            base_hz,
+            peak_hz,
+            period_s,
+        } => format!(
+            "{{\"kind\": \"diurnal\", \"base_hz\": {base_hz}, \"peak_hz\": \
+             {peak_hz}, \"period_s\": {period_s}}}"
+        ),
+        ArrivalProcess::FlashCrowd {
+            base_hz,
+            spike_hz,
+            spike_at_s,
+            spike_len_s,
+        } => format!(
+            "{{\"kind\": \"flash\", \"base_hz\": {base_hz}, \"spike_hz\": \
+             {spike_hz}, \"spike_at_s\": {spike_at_s}, \"spike_len_s\": \
+             {spike_len_s}}}"
+        ),
+    }
+}
+
+fn parse_arrival(v: &Json) -> Result<ArrivalProcess> {
+    Ok(match v.req("kind")?.as_str()? {
+        "poisson" => ArrivalProcess::Poisson {
+            rate_hz: v.req("rate_hz")?.as_f64()?,
+        },
+        "mmpp" => ArrivalProcess::Mmpp {
+            calm_hz: v.req("calm_hz")?.as_f64()?,
+            burst_hz: v.req("burst_hz")?.as_f64()?,
+            calm_dwell_s: v.req("calm_dwell_s")?.as_f64()?,
+            burst_dwell_s: v.req("burst_dwell_s")?.as_f64()?,
+        },
+        "diurnal" => ArrivalProcess::Diurnal {
+            base_hz: v.req("base_hz")?.as_f64()?,
+            peak_hz: v.req("peak_hz")?.as_f64()?,
+            period_s: v.req("period_s")?.as_f64()?,
+        },
+        "flash" => ArrivalProcess::FlashCrowd {
+            base_hz: v.req("base_hz")?.as_f64()?,
+            spike_hz: v.req("spike_hz")?.as_f64()?,
+            spike_at_s: v.req("spike_at_s")?.as_f64()?,
+            spike_len_s: v.req("spike_len_s")?.as_f64()?,
+        },
+        other => bail!("unknown arrival kind {other:?}"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtins_resolve_and_validate() {
+        for name in ["steady", "burst", "diurnal", "flash"] {
+            let s = Scenario::builtin(name).unwrap();
+            assert_eq!(s.name, name);
+            assert!(s.requests > 0 && s.slo_s > 0.0);
+            s.arrival.sampler().unwrap();
+        }
+        assert!(Scenario::builtin("nope").is_err());
+    }
+
+    #[test]
+    fn mix_names_the_precision_twins() {
+        let (bases, quant) = Scenario::builtin("burst").unwrap().networks();
+        assert_eq!(bases, vec!["mnist".to_string()], "twins share one base");
+        assert!(quant, "the default mix serves a .q twin");
+    }
+
+    #[test]
+    fn json_roundtrips_every_builtin() {
+        for name in ["steady", "burst", "diurnal", "flash"] {
+            let s = Scenario::builtin(name).unwrap();
+            let parsed = Scenario::from_json(&s.to_json()).unwrap();
+            assert_eq!(parsed, s, "{name} must roundtrip exactly");
+        }
+    }
+
+    #[test]
+    fn resolve_prefers_builtin_then_file() {
+        assert_eq!(Scenario::resolve("steady").unwrap().name, "steady");
+        let dir = crate::util::TempDir::new().unwrap();
+        let path = dir.path().join("custom.json");
+        let mut custom = Scenario::builtin("flash").unwrap();
+        custom.name = "my-flash".into();
+        custom.requests = 7;
+        std::fs::write(&path, custom.to_json()).unwrap();
+        let loaded = Scenario::resolve(path.to_str().unwrap()).unwrap();
+        assert_eq!(loaded, custom);
+        assert!(Scenario::resolve("/does/not/exist.json").is_err());
+    }
+
+    #[test]
+    fn malformed_scenarios_are_rejected() {
+        assert!(Scenario::from_json("{}").is_err());
+        let no_mix = r#"{"name": "x", "seed": 1, "requests": 4, "slo_s": 0.1,
+            "arrival": {"kind": "poisson", "rate_hz": 10}, "mix": []}"#;
+        assert!(Scenario::from_json(no_mix).is_err());
+        let bad_rate = r#"{"name": "x", "seed": 1, "requests": 4, "slo_s": 0.1,
+            "arrival": {"kind": "poisson", "rate_hz": 0},
+            "mix": [{"network": "mnist", "images": 1, "weight": 1}]}"#;
+        assert!(Scenario::from_json(bad_rate).is_err());
+    }
+}

@@ -1,0 +1,215 @@
+//! Traces — a scenario *materialized*: the exact arrival timestamps,
+//! network/image mix and per-request latent seeds, recordable to JSON
+//! and replayable bit-for-bit.  Generation is a pure function of the
+//! scenario (one SplitMix64 stream drives arrivals, mix draws and
+//! latent seeds in a fixed order), so the same seed + scenario always
+//! yields the identical trace — and a recorded file replays the same
+//! run on another machine.
+
+use super::scenario::Scenario;
+use crate::util::{escape_json, parse_json, Rng};
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// One scheduled request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    /// Scheduled arrival, seconds from trace start.
+    pub t_s: f64,
+    pub network: String,
+    pub n_images: usize,
+    /// Latent seed the request carries (deterministic generation).
+    pub seed: u64,
+}
+
+/// A materialized scenario.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Trace {
+    pub scenario: String,
+    pub seed: u64,
+    pub slo_s: f64,
+    pub events: Vec<TraceEvent>,
+}
+
+impl Trace {
+    /// Materialize a scenario (deterministic: arrivals, mix draws and
+    /// latent seeds all come from one seeded stream, in event order).
+    pub fn generate(s: &Scenario) -> Result<Trace> {
+        anyhow::ensure!(!s.mix.is_empty(), "scenario mix is empty");
+        let mut rng = Rng::seed_from_u64(s.seed);
+        let mut sampler = s.arrival.sampler()?;
+        let total_weight: f64 = s.mix.iter().map(|e| e.weight).sum();
+        let mut events = Vec::with_capacity(s.requests);
+        for _ in 0..s.requests {
+            let t_s = sampler.next_arrival(&mut rng);
+            let mut pick = rng.next_f64() * total_weight;
+            let mut chosen = s.mix.last().expect("mix checked non-empty");
+            for e in &s.mix {
+                if pick < e.weight {
+                    chosen = e;
+                    break;
+                }
+                pick -= e.weight;
+            }
+            events.push(TraceEvent {
+                t_s,
+                network: chosen.network.clone(),
+                n_images: chosen.images,
+                // 53 bits: JSON numbers are f64, and a latent seed must
+                // survive record → replay *exactly*
+                seed: rng.next_u64() >> 11,
+            });
+        }
+        Ok(Trace {
+            scenario: s.name.clone(),
+            seed: s.seed,
+            slo_s: s.slo_s,
+            events,
+        })
+    }
+
+    /// Scheduled duration (timestamp of the last event).
+    pub fn duration_s(&self) -> f64 {
+        self.events.last().map(|e| e.t_s).unwrap_or(0.0)
+    }
+
+    /// Base (f32) networks the trace touches, deduplicated, plus
+    /// whether any event targets a `.q` precision twin — what a
+    /// coordinator must preload (and whether with quantized twins) to
+    /// serve this trace.
+    pub fn networks(&self) -> (Vec<String>, bool) {
+        super::scenario::base_networks(
+            self.events.iter().map(|e| e.network.as_str()),
+        )
+    }
+
+    /// Serialize.  f64 timestamps print shortest-roundtrip, so
+    /// record → replay reproduces the arrival schedule *exactly*.
+    pub fn to_json(&self) -> String {
+        let mut out = format!(
+            "{{\n  \"scenario\": \"{}\",\n  \"seed\": {},\n  \"slo_s\": {},\n  \
+             \"events\": [\n",
+            escape_json(&self.scenario),
+            self.seed,
+            self.slo_s
+        );
+        for (i, e) in self.events.iter().enumerate() {
+            out.push_str(&format!(
+                "    {{\"t_s\": {}, \"network\": \"{}\", \"n_images\": {}, \
+                 \"seed\": {}}}{}\n",
+                e.t_s,
+                escape_json(&e.network),
+                e.n_images,
+                e.seed,
+                if i + 1 < self.events.len() { "," } else { "" }
+            ));
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+
+    pub fn from_json(text: &str) -> Result<Trace> {
+        let v = parse_json(text)?;
+        let events = v
+            .req("events")?
+            .as_arr()?
+            .iter()
+            .map(|e| {
+                Ok(TraceEvent {
+                    t_s: e.req("t_s")?.as_f64()?,
+                    network: e.req("network")?.as_str()?.to_string(),
+                    n_images: e.req("n_images")?.as_usize()?,
+                    seed: e.req("seed")?.as_u64()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        anyhow::ensure!(!events.is_empty(), "trace has no events");
+        anyhow::ensure!(
+            events.windows(2).all(|w| w[1].t_s >= w[0].t_s),
+            "trace timestamps must be non-decreasing"
+        );
+        Ok(Trace {
+            scenario: v.req("scenario")?.as_str()?.to_string(),
+            seed: v.req("seed")?.as_u64()?,
+            slo_s: v.req("slo_s")?.as_f64()?,
+            events,
+        })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json())
+            .with_context(|| format!("writing trace {path:?}"))
+    }
+
+    pub fn load(path: &Path) -> Result<Trace> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading trace {path:?}"))?;
+        Trace::from_json(&text)
+            .with_context(|| format!("parsing trace {path:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::TempDir;
+
+    #[test]
+    fn generation_is_deterministic_per_seed() {
+        let s = Scenario::builtin("burst").unwrap();
+        let a = Trace::generate(&s).unwrap();
+        let b = Trace::generate(&s).unwrap();
+        assert_eq!(a, b, "same seed + scenario ⇒ identical trace");
+        let mut reseeded = s.clone();
+        reseeded.seed ^= 1;
+        let c = Trace::generate(&reseeded).unwrap();
+        assert_ne!(a.events, c.events);
+        assert_eq!(a.events.len(), s.requests);
+    }
+
+    #[test]
+    fn mix_weights_shape_the_draw() {
+        let mut s = Scenario::builtin("steady").unwrap();
+        s.requests = 600;
+        let t = Trace::generate(&s).unwrap();
+        let quant = t
+            .events
+            .iter()
+            .filter(|e| e.network.ends_with(".q"))
+            .count();
+        // builtin mix is 65/35: the .q share must land near 35%
+        let share = quant as f64 / t.events.len() as f64;
+        assert!((share - 0.35).abs() < 0.08, "share {share}");
+        // latent seeds are unique (one stream, no reuse)
+        let mut seeds: Vec<u64> = t.events.iter().map(|e| e.seed).collect();
+        seeds.sort_unstable();
+        seeds.dedup();
+        assert_eq!(seeds.len(), t.events.len());
+    }
+
+    #[test]
+    fn record_replay_roundtrips_exactly() {
+        let s = Scenario::builtin("flash").unwrap();
+        let t = Trace::generate(&s).unwrap();
+        let replayed = Trace::from_json(&t.to_json()).unwrap();
+        assert_eq!(
+            replayed, t,
+            "timestamps and mix must survive the JSON roundtrip bit-for-bit"
+        );
+        let dir = TempDir::new().unwrap();
+        let path = dir.path().join("trace.json");
+        t.save(&path).unwrap();
+        assert_eq!(Trace::load(&path).unwrap(), t);
+    }
+
+    #[test]
+    fn malformed_traces_are_rejected() {
+        assert!(Trace::from_json("{}").is_err());
+        let empty = r#"{"scenario": "x", "seed": 1, "slo_s": 0.1, "events": []}"#;
+        assert!(Trace::from_json(empty).is_err());
+        let unsorted = r#"{"scenario": "x", "seed": 1, "slo_s": 0.1, "events": [
+            {"t_s": 0.5, "network": "mnist", "n_images": 1, "seed": 1},
+            {"t_s": 0.1, "network": "mnist", "n_images": 1, "seed": 2}]}"#;
+        assert!(Trace::from_json(unsorted).is_err());
+    }
+}

@@ -1,0 +1,266 @@
+//! Workload & telemetry integration: the loadtest end to end against a
+//! synthetic artifact set — the paper's run-to-run-variation verdict as
+//! a live, asserted experiment — plus scheduler overload behaviour
+//! (admission-control rejection accounting, deferred-queue drain order,
+//! no-starvation across two networks under a bursty scenario) and
+//! trace record/replay determinism.
+
+use edgedcnn::artifacts::write_synthetic;
+use edgedcnn::config::{BackendCfg, DeviceKind};
+use edgedcnn::coordinator::{
+    BatcherConfig, Coordinator, CoordinatorConfig,
+};
+use edgedcnn::quant::QFormat;
+use edgedcnn::util::TempDir;
+use edgedcnn::workload::{run_loadtest, LoadtestOpts, Scenario, Trace};
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+fn synthetic_dir() -> TempDir {
+    let dir = TempDir::new().unwrap();
+    write_synthetic(dir.path(), &["mnist"], 2, 17).unwrap();
+    dir
+}
+
+/// The acceptance experiment: a bursty scenario over an fpga+gpu pool,
+/// repeated trials, and the paper's claim — the FPGA-sim lane shows
+/// strictly lower device-latency variation than the GPU-model lane.
+#[test]
+fn burst_loadtest_reproduces_the_variation_verdict() {
+    let dir = synthetic_dir();
+    let mut scenario = Scenario::builtin("burst").unwrap();
+    scenario.requests = 64;
+    let trace = Trace::generate(&scenario).unwrap();
+    let report = run_loadtest(
+        &trace,
+        &LoadtestOpts {
+            artifacts_dir: dir.path().to_path_buf(),
+            backends: BackendCfg {
+                kinds: vec![DeviceKind::Fpga, DeviceKind::Gpu],
+                ..Default::default()
+            },
+            executors: 0,
+            trials: 5,
+            shard_batches: true,
+        },
+    )
+    .unwrap();
+
+    assert_eq!(report.trials, 5);
+    assert_eq!(report.requests_per_trial, 64);
+    // every lane row carries populated percentile and CV columns
+    for lane in &report.lanes {
+        assert!(lane.batches > 0, "{}: served nothing", lane.name);
+        assert!(lane.latency.p50_s > 0.0, "{}", lane.name);
+        assert!(lane.latency.p95_s >= lane.latency.p50_s);
+        assert!(lane.latency.p99_s >= lane.latency.p95_s);
+        assert!(lane.latency.p999_s >= lane.latency.p99_s);
+        assert!((0.0..=1.0).contains(&lane.slo_attainment));
+        assert!(lane.mean_device_per_image_s > 0.0);
+        assert!(lane.throughput.mean > 0.0);
+    }
+    assert!(report.latency.p99_s > 0.0, "overall p99 populated");
+
+    // the paper's Table-2 claim, live: FPGA strictly more stable
+    let v = report
+        .verdict
+        .as_ref()
+        .expect("both fpga and gpu lanes must have served batches");
+    assert!(
+        v.fpga_cv < v.gpu_cv,
+        "FPGA lane must vary strictly less: {} cv {:.4} vs {} cv {:.4}",
+        v.fpga_lane,
+        v.fpga_cv,
+        v.gpu_lane,
+        v.gpu_cv
+    );
+    assert!(v.fpga_wins);
+
+    // image accounting closes: every non-rejected request's images
+    // landed on exactly one lane, and nothing was lost to failures
+    assert_eq!(report.lost, 0, "no backend execution failures expected");
+    let served: u64 = report.lanes.iter().map(|l| l.images).sum();
+    assert_eq!(
+        served,
+        (report.total_requests - report.rejected) * 2,
+        "trace requests carry 2 images each"
+    );
+
+    let rendered = report.render();
+    assert!(rendered.contains("verdict:"), "{rendered}");
+    assert!(rendered.contains("cv_pct"), "{rendered}");
+    assert!(rendered.contains("p99_ms"), "{rendered}");
+}
+
+/// Same seed + scenario file ⇒ identical arrival timestamps and request
+/// mix across two independent resolve→generate runs; record → replay
+/// roundtrips the trace bit-for-bit.
+#[test]
+fn trace_replay_is_deterministic() {
+    let dir = TempDir::new().unwrap();
+    let scenario_path = dir.path().join("scenario.json");
+    let mut s = Scenario::builtin("burst").unwrap();
+    s.requests = 50;
+    std::fs::write(&scenario_path, s.to_json()).unwrap();
+
+    let arg = scenario_path.to_str().unwrap();
+    let a = Trace::generate(&Scenario::resolve(arg).unwrap()).unwrap();
+    let b = Trace::generate(&Scenario::resolve(arg).unwrap()).unwrap();
+    assert_eq!(a, b, "two runs from the same scenario file must agree");
+    let ts_a: Vec<f64> = a.events.iter().map(|e| e.t_s).collect();
+    let ts_b: Vec<f64> = b.events.iter().map(|e| e.t_s).collect();
+    assert_eq!(ts_a, ts_b, "identical arrival timestamps");
+    let mix_a: Vec<&str> =
+        a.events.iter().map(|e| e.network.as_str()).collect();
+    let mix_b: Vec<&str> =
+        b.events.iter().map(|e| e.network.as_str()).collect();
+    assert_eq!(mix_a, mix_b, "identical request mix");
+
+    let trace_path = dir.path().join("trace.json");
+    a.save(&trace_path).unwrap();
+    let replayed = Trace::load(&trace_path).unwrap();
+    assert_eq!(replayed, a, "record → replay is exact");
+}
+
+/// Overload a single slow lane behind a tiny deferral budget: intake
+/// must reject (not queue unboundedly), the serving report must count
+/// exactly the rejected callers, and the survivors must still resolve.
+#[test]
+fn admission_control_rejects_and_accounts_under_flood() {
+    let dir = synthetic_dir();
+    let coord = Coordinator::start(CoordinatorConfig {
+        artifacts_dir: dir.path().to_path_buf(),
+        networks: vec!["mnist".to_string()],
+        batcher: BatcherConfig {
+            max_batch: 2,
+            max_wait: Duration::from_millis(1),
+        },
+        backends: BackendCfg {
+            kinds: vec![DeviceKind::Fpga],
+            max_queue_depth: 1,
+            admit_max_deferred: 2,
+            ..Default::default()
+        },
+        executors: 0,
+        quant: None,
+        shard_batches: false,
+    })
+    .unwrap();
+
+    // wave 1 saturates the lane and fills the deferred queue (40
+    // oversize single-request batches against a depth-1 lane: even a
+    // fast host cannot drain them before wave 2) …
+    let mut handles = Vec::new();
+    for i in 0..40u64 {
+        handles.push(coord.submit("mnist", 4, 100 + i).unwrap());
+    }
+    std::thread::sleep(Duration::from_millis(20));
+    // … wave 2 arrives against a full deferral budget
+    for i in 0..16u64 {
+        handles.push(coord.submit("mnist", 4, 200 + i).unwrap());
+    }
+
+    let mut ok = 0u64;
+    let mut rejected = 0u64;
+    for h in handles {
+        match h.wait() {
+            Ok(resp) => {
+                assert!(resp.images.numel() > 0);
+                ok += 1;
+            }
+            Err(_) => rejected += 1,
+        }
+    }
+    assert!(rejected > 0, "flood against admit_max_deferred=2 must reject");
+    assert!(ok > 0, "survivors must still be served");
+
+    let report = coord.report();
+    assert_eq!(report.rejected, rejected, "report counts the rejections");
+    assert!(report.deferred > 0, "backpressure deferrals observed");
+    // lane telemetry: dispatch-time depth never exceeded the bound
+    assert!(!report.lanes.is_empty());
+    for lane in &report.lanes {
+        assert!(
+            lane.max_depth <= 1,
+            "{}: queue depth bound violated ({})",
+            lane.name,
+            lane.max_depth
+        );
+        assert!(lane.dispatches > 0);
+    }
+}
+
+/// Bursty two-network traffic through one depth-bounded lane: the
+/// deferred queue must drain FIFO per network (exec_seq non-decreasing
+/// in submission order) and neither network may starve.
+#[test]
+fn deferred_drain_order_and_no_starvation_across_networks() {
+    let dir = synthetic_dir();
+    let coord = Coordinator::start(CoordinatorConfig {
+        artifacts_dir: dir.path().to_path_buf(),
+        networks: vec!["mnist".to_string()],
+        batcher: BatcherConfig {
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+        },
+        backends: BackendCfg {
+            kinds: vec![DeviceKind::Fpga],
+            max_queue_depth: 1,
+            // starvation test: everything must eventually be served
+            admit_max_deferred: 10_000,
+            ..Default::default()
+        },
+        executors: 0,
+        quant: Some(QFormat::new(16, 8)),
+        shard_batches: false,
+    })
+    .unwrap();
+
+    // a bursty scenario over the f32 network and its .q twin, driven
+    // as fast as the trace allows (timestamps compressed to zero gap)
+    let mut scenario = Scenario::builtin("burst").unwrap();
+    scenario.requests = 48;
+    let trace = Trace::generate(&scenario).unwrap();
+    let mut handles = Vec::new();
+    for e in &trace.events {
+        handles.push((
+            e.network.clone(),
+            coord.submit(&e.network, e.n_images, e.seed).unwrap(),
+        ));
+    }
+
+    let mut per_network: BTreeMap<String, Vec<(u64, u64)>> = BTreeMap::new();
+    for (network, h) in handles {
+        let resp = h.wait().expect("no rejections at this deferral budget");
+        per_network
+            .entry(network)
+            .or_default()
+            .push((resp.id, resp.exec_seq));
+    }
+    assert_eq!(per_network.len(), 2, "both networks present in the mix");
+    for (network, mut seen) in per_network {
+        assert!(
+            !seen.is_empty(),
+            "{network}: starved under burst + backpressure"
+        );
+        // submission order = id order; deferred batches must drain FIFO
+        seen.sort_by_key(|(id, _)| *id);
+        for pair in seen.windows(2) {
+            assert!(
+                pair[0].1 <= pair[1].1,
+                "{network}: request {} (seq {}) overtook request {} (seq {})",
+                pair[1].0,
+                pair[1].1,
+                pair[0].0,
+                pair[0].1,
+            );
+        }
+    }
+
+    let report = coord.report();
+    assert_eq!(report.rejected, 0);
+    assert!(
+        report.deferred > 0,
+        "a depth-1 lane under burst traffic must defer"
+    );
+}

@@ -37,9 +37,11 @@ fn main() -> anyhow::Result<()> {
                 kinds: vec![DeviceKind::Fpga, DeviceKind::Gpu],
                 ..Default::default()
             },
-            executors: 0,
             trials: 3,
-            shard_batches: true,
+            // open loop; every request carries the scenario's deadline
+            // and priority class, so the verdict table's deadline-
+            // attainment and shed/served-late columns are live
+            ..Default::default()
         },
     )?;
     print!("{}", report.render());

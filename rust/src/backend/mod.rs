@@ -116,6 +116,24 @@ impl CostModel {
         let intercept = self.c1_s - slope;
         (intercept + slope * n as f64).max(0.0)
     }
+
+    /// Estimated completion time for a request of `n` images joining a
+    /// lane that already queues `depth` batches: each queued batch is
+    /// charged at the full bucket cost (`c8_s` — the pessimistic bound a
+    /// shed-early admission check wants), then the request's own batch.
+    /// This is the "queue depth × predicted cost" feasibility query of
+    /// the deadline-aware intake.
+    pub fn eta_s(&self, depth: usize, n: usize) -> f64 {
+        depth as f64 * self.c8_s + self.cost_s(n)
+    }
+
+    /// Slack a request with `budget_s` seconds to its deadline would
+    /// have left after this device served `n` images behind `depth`
+    /// queued batches.  Negative slack = infeasible: serving it would
+    /// only produce a served-late response, so intake sheds it instead.
+    pub fn slack_s(&self, budget_s: f64, depth: usize, n: usize) -> f64 {
+        budget_s - self.eta_s(depth, n)
+    }
 }
 
 /// Everything a backend needs to load one logical network: the base
@@ -252,5 +270,18 @@ mod tests {
         assert!((m.cost_s(15) - 0.025).abs() < 1e-12, "extrapolates");
         let lin = CostModel::linear(0.002);
         assert!((lin.cost_s(5) - 0.010).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eta_charges_queued_batches_at_the_bucket_cost() {
+        let m = CostModel {
+            c1_s: 0.011,
+            c8_s: 0.018,
+        };
+        assert!((m.eta_s(0, 1) - 0.011).abs() < 1e-12, "idle lane = own cost");
+        assert!((m.eta_s(2, 1) - (2.0 * 0.018 + 0.011)).abs() < 1e-12);
+        // slack is the budget minus that ETA, signed
+        assert!((m.slack_s(0.050, 0, 1) - 0.039).abs() < 1e-12);
+        assert!(m.slack_s(0.040, 2, 1) < 0.0, "deep queue turns infeasible");
     }
 }

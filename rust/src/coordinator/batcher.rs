@@ -1,22 +1,36 @@
 //! Dynamic batcher — vLLM-style continuous batching adapted to the AOT
-//! reality: the generator executables exist at fixed batch buckets
-//! (`make artifacts` exports them), so the batcher coalesces queued
-//! requests per network and cuts a batch when (a) a full bucket's worth
-//! of images is waiting, or (b) the oldest request exceeds the batching
-//! window.  Pure state machine — time is injected, so tests are
-//! deterministic and the tokio loop stays trivial.
+//! reality (the generator executables exist at fixed batch buckets), now
+//! **deadline-aware**: per-network queues are EDF-ordered (earliest
+//! effective deadline first, priority class breaking ties), and a
+//! partial batch is cut when the earliest request's *slack* — deadline
+//! minus the predicted batch cost from the live per-lane cost model —
+//! runs out, not on a fixed max-wait.  `max_wait` survives as the
+//! coalescing horizon: a slack-rich (or best-effort) request still cuts
+//! at `arrival + max_wait`, so deadline pressure can only *advance* a
+//! cut, never delay it.  Pure state machine — time and cost models are
+//! injected, so tests are deterministic and the leader loop stays
+//! trivial.
 
 use super::request::InferenceRequest;
-use std::collections::{HashMap, VecDeque};
+use crate::backend::CostModel;
+use std::collections::HashMap;
 use std::time::{Duration, Instant};
+
+/// Headroom factor on the predicted batch cost when converting a
+/// deadline into a cut time: cutting at `deadline - HEADROOM × cost`
+/// leaves room for dispatch, queueing behind an in-flight batch and the
+/// device's measurement noise — cutting at exactly `deadline - cost`
+/// would land every completion *on* the deadline and turn model noise
+/// into misses.
+const SLACK_HEADROOM: f64 = 1.5;
 
 /// Batching policy.
 #[derive(Debug, Clone, Copy)]
 pub struct BatcherConfig {
     /// Largest exported batch bucket (images per executable call).
     pub max_batch: usize,
-    /// Max time the oldest queued request may wait before a partial
-    /// batch is cut.
+    /// Coalescing horizon: max time a queued request may wait before a
+    /// partial batch is cut, independent of any deadline.
     pub max_wait: Duration,
 }
 
@@ -29,51 +43,103 @@ impl Default for BatcherConfig {
     }
 }
 
-/// A cut batch: requests plus the image count they need.
+/// A cut batch: requests (in serve order) plus the image count they
+/// need and the earliest real deadline aboard (the EDF key the
+/// scheduler re-sorts deferred batches by).
 #[derive(Debug)]
 pub struct Batch {
     pub network: String,
     pub requests: Vec<InferenceRequest>,
     pub n_images: usize,
+    /// Earliest absolute deadline among the requests (`None` = all
+    /// best-effort).
+    pub deadline: Option<Instant>,
 }
 
-/// Per-network request queues with deadline-based cutting.
+/// Per-network EDF request queues with slack-based cutting.
 #[derive(Debug, Default)]
 pub struct DynamicBatcher {
-    queues: HashMap<String, VecDeque<InferenceRequest>>,
+    /// Each queue is kept sorted by (effective deadline, class rank,
+    /// id) — EDF with class tie-break; insertion is before the first
+    /// strictly-greater key, so equal-deadline requests stay in
+    /// arrival order.
+    queues: HashMap<String, Vec<InferenceRequest>>,
+    /// Live per-network cost hints (cheapest capable lane), refreshed
+    /// by the scheduler on intake — the "predicted cost" half of the
+    /// slack computation.
+    costs: HashMap<String, CostModel>,
     config: BatcherConfig,
+}
+
+/// EDF ordering key of one queued request.
+fn edf_key(r: &InferenceRequest, max_wait: Duration) -> (Instant, u8, u64) {
+    (r.ctx.effective_deadline(max_wait), r.ctx.class.rank(), r.id)
 }
 
 impl DynamicBatcher {
     pub fn new(config: BatcherConfig) -> Self {
         DynamicBatcher {
             queues: HashMap::new(),
+            costs: HashMap::new(),
             config,
         }
     }
 
-    /// Enqueue a request; returns a batch only if a bucket *filled* —
-    /// waiting requests are left to coalesce until [`Self::poll`]'s
-    /// deadline fires (cutting on push-side expiry would emit tiny
-    /// batches whenever the device briefly falls behind).
-    ///
-    /// Hot path: the queue lookup is by borrowed name — the network
-    /// `String` is only cloned the first time a network is seen.
-    pub fn push(&mut self, req: InferenceRequest, _now: Instant) -> Option<Batch> {
-        match self.queues.get_mut(req.network.as_str()) {
-            Some(q) => q.push_back(req),
+    /// Install/refresh the live cost model for a network (the cheapest
+    /// capable lane's, per the scheduler).  Without a hint the batcher
+    /// predicts zero cost and slack cutting degrades to the max-wait
+    /// horizon — exactly the old behaviour.
+    pub fn set_cost_hint(&mut self, network: &str, cost: CostModel) {
+        match self.costs.get_mut(network) {
+            Some(c) => *c = cost,
             None => {
-                let name = req.network.clone();
-                self.queues.insert(name, VecDeque::from([req]));
+                self.costs.insert(network.to_string(), cost);
             }
         }
-        self.try_cut(None)
     }
 
-    /// Deadline poll: cut a full bucket, or a partial batch whose oldest
-    /// request waited past the window.
+    /// The current cost hint for a network (scheduler-side slack
+    /// queries on deferred batches reuse it).
+    pub fn cost_hint(&self, network: &str) -> Option<CostModel> {
+        self.costs.get(network).copied()
+    }
+
+    /// Predicted device cost of cutting `n_images` of `network` now.
+    fn predicted_cost_s(&self, network: &str, n_images: usize) -> f64 {
+        self.costs
+            .get(network)
+            .map(|c| c.cost_s(n_images))
+            .unwrap_or(0.0)
+    }
+
+    /// Enqueue a request in EDF position; returns a batch only if a
+    /// bucket *filled* — waiting requests are left to coalesce until
+    /// [`Self::poll`]'s cut time fires (cutting on push-side expiry
+    /// would emit tiny batches whenever the device briefly falls
+    /// behind).
+    pub fn push(&mut self, req: InferenceRequest, now: Instant) -> Option<Batch> {
+        let max_wait = self.config.max_wait;
+        let key = edf_key(&req, max_wait);
+        match self.queues.get_mut(req.network.as_str()) {
+            Some(q) => {
+                let pos = q
+                    .iter()
+                    .position(|r| edf_key(r, max_wait) > key)
+                    .unwrap_or(q.len());
+                q.insert(pos, req);
+            }
+            None => {
+                let name = req.network.clone();
+                self.queues.insert(name, vec![req]);
+            }
+        }
+        self.try_cut(now, false)
+    }
+
+    /// Cut poll: a full bucket, or a partial batch whose cut time (the
+    /// earliest request's slack or max-wait horizon) has passed.
     pub fn poll(&mut self, now: Instant) -> Option<Batch> {
-        self.try_cut(Some(now))
+        self.try_cut(now, true)
     }
 
     /// Total queued requests (all networks).
@@ -81,69 +147,170 @@ impl DynamicBatcher {
         self.queues.values().map(|q| q.len()).sum()
     }
 
-    /// Earliest deadline among queued requests (for the serve loop's
-    /// sleep).
-    pub fn next_deadline(&self) -> Option<Instant> {
-        self.queues
-            .values()
-            .filter_map(|q| q.front())
-            .map(|r| r.enqueued_at + self.config.max_wait)
+    /// When one network's partial batch must be cut: the minimum over
+    /// its queued requests of `min(arrival + max_wait, deadline -
+    /// HEADROOM × predicted batch cost)` — deadline pressure advances
+    /// the cut, the horizon bounds the wait.
+    fn cut_at(&self, network: &str, q: &[InferenceRequest]) -> Option<Instant> {
+        let images: usize = q.iter().map(|r| r.n_images).sum();
+        let batch_images = images.min(self.config.max_batch).max(1);
+        let cost = self.predicted_cost_s(network, batch_images);
+        let lead = Duration::from_secs_f64(SLACK_HEADROOM * cost);
+        q.iter()
+            .map(|r| {
+                let horizon = r.ctx.arrival + self.config.max_wait;
+                match r.ctx.deadline {
+                    Some(d) => {
+                        // clamp: a deadline already inside the lead time
+                        // means the slack is spent — cut immediately
+                        let slack_cut =
+                            d.checked_sub(lead).unwrap_or(r.ctx.arrival);
+                        horizon.min(slack_cut.max(r.ctx.arrival))
+                    }
+                    None => horizon,
+                }
+            })
             .min()
     }
 
-    /// Cut a batch: full buckets always qualify; expired partials only
-    /// when a deadline clock is supplied (poll path).
-    fn try_cut(&mut self, deadline_now: Option<Instant>) -> Option<Batch> {
-        let mut chosen: Option<String> = None;
+    /// Earliest cut time among queued requests (for the leader loop's
+    /// sleep).
+    pub fn next_deadline(&self) -> Option<Instant> {
+        self.queues
+            .iter()
+            .filter_map(|(net, q)| self.cut_at(net, q))
+            .min()
+    }
+
+    /// Cut one batch: full buckets always qualify; slack/horizon-expired
+    /// partials only on the poll path.  Among ready networks the one
+    /// with the earliest cut time wins — EDF *across* networks, where
+    /// the old batcher took hash-map iteration order.
+    fn try_cut(&mut self, now: Instant, allow_expired: bool) -> Option<Batch> {
+        let mut chosen: Option<(Instant, String)> = None;
         for (net, q) in &self.queues {
-            let Some(front) = q.front() else { continue };
+            if q.is_empty() {
+                continue;
+            }
             let images: usize = q.iter().map(|r| r.n_images).sum();
-            let full = images >= self.config.max_batch;
-            let expired = deadline_now
-                .map(|now| {
-                    now.duration_since(front.enqueued_at)
-                        >= self.config.max_wait
-                })
-                .unwrap_or(false);
-            if full || expired {
-                chosen = Some(net.clone());
-                break;
+            let ready_at = if images >= self.config.max_batch {
+                now // a full bucket cuts immediately
+            } else if allow_expired {
+                // partial bucket: only the poll path pays for the
+                // per-request cut-time scan
+                let cut_at = self.cut_at(net, q).expect("non-empty queue");
+                if cut_at <= now {
+                    cut_at
+                } else {
+                    continue;
+                }
+            } else {
+                continue;
+            };
+            let better = match &chosen {
+                None => true,
+                Some((t, name)) => {
+                    (ready_at, net.as_str()) < (*t, name.as_str())
+                }
+            };
+            if better {
+                chosen = Some((ready_at, net.clone()));
             }
         }
-        let net = chosen?;
-        let q = self.queues.get_mut(&net).unwrap();
-        let mut requests = Vec::new();
+        let (_, net) = chosen?;
+        Some(self.cut_network(&net, now))
+    }
+
+    /// Cut the front of one network's queue into a batch.  Serve order
+    /// is EDF with one twist (skip-over EDF): requests whose deadline is
+    /// already infeasible — `now + predicted cost > deadline` — yield to
+    /// every still-feasible request, because an already-late request
+    /// cannot get *less* late while a feasible one can still make it.
+    /// In particular a feasible request is never served after an
+    /// infeasible one of the same priority class (property-tested).
+    fn cut_network(&mut self, net: &str, now: Instant) -> Batch {
+        let images_queued: usize = self.queues[net]
+            .iter()
+            .map(|r| r.n_images)
+            .sum();
+        let batch_images = images_queued.min(self.config.max_batch).max(1);
+        let cost = self.predicted_cost_s(net, batch_images);
+        let max_wait = self.config.max_wait;
+        let q = self.queues.get_mut(net).expect("chosen network exists");
+
+        let infeasible = |r: &InferenceRequest| -> bool {
+            match r.ctx.deadline {
+                Some(d) => now + Duration::from_secs_f64(cost) > d,
+                None => false,
+            }
+        };
+        let mut order: Vec<usize> = (0..q.len()).collect();
+        order.sort_by_key(|&i| {
+            let r = &q[i];
+            (
+                infeasible(r),
+                r.ctx.effective_deadline(max_wait),
+                r.ctx.class.rank(),
+                r.id,
+            )
+        });
+
+        let mut take: Vec<usize> = Vec::new();
         let mut images = 0usize;
-        while let Some(front) = q.front() {
-            if images + front.n_images > self.config.max_batch
-                && !requests.is_empty()
-            {
+        for &i in &order {
+            let n = q[i].n_images;
+            if images + n > self.config.max_batch && !take.is_empty() {
                 break;
             }
-            let r = q.pop_front().unwrap();
-            images += r.n_images;
-            requests.push(r);
+            take.push(i);
+            images += n;
             if images >= self.config.max_batch {
                 break;
             }
         }
-        if requests.is_empty() {
-            return None;
-        }
-        Some(Batch {
-            network: net,
+
+        let mut slots: Vec<Option<InferenceRequest>> =
+            q.drain(..).map(Some).collect();
+        let requests: Vec<InferenceRequest> = take
+            .iter()
+            .map(|&i| slots[i].take().expect("indices are unique"))
+            .collect();
+        // the untaken remainder keeps its EDF order
+        q.extend(slots.into_iter().flatten());
+
+        let deadline = requests.iter().filter_map(|r| r.ctx.deadline).min();
+        Batch {
+            network: net.to_string(),
             requests,
             n_images: images,
-        })
+            deadline,
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::request::{PriorityClass, RequestCtx};
 
     fn req(id: u64, net: &str, n: usize) -> InferenceRequest {
         InferenceRequest::new(id, net, n, id)
+    }
+
+    fn req_deadline(
+        id: u64,
+        net: &str,
+        n: usize,
+        arrival: Instant,
+        deadline_ms: u64,
+    ) -> InferenceRequest {
+        let ctx = RequestCtx {
+            arrival,
+            deadline: Some(arrival + Duration::from_millis(deadline_ms)),
+            class: PriorityClass::Normal,
+            seed: id,
+        };
+        InferenceRequest::with_ctx(id, net, n, ctx)
     }
 
     fn cfg(max_batch: usize, wait_ms: u64) -> BatcherConfig {
@@ -161,6 +328,7 @@ mod tests {
         let batch = b.push(req(2, "mnist", 2), now).expect("bucket full");
         assert_eq!(batch.n_images, 4);
         assert_eq!(batch.requests.len(), 2);
+        assert!(batch.deadline.is_none(), "best-effort batch");
         assert_eq!(b.queued(), 0);
     }
 
@@ -263,7 +431,7 @@ mod tests {
         let now = Instant::now();
         let enqueued = {
             b.push(req(1, "mnist", 2), now);
-            // the deadline is anchored to the request's enqueue time,
+            // the horizon is anchored to the request's arrival time,
             // not the push() timestamp
             b.next_deadline().unwrap() - Duration::from_millis(10)
         };
@@ -274,5 +442,100 @@ mod tests {
         );
         let batch = b.poll(boundary).expect("exactly at max_wait: cut");
         assert_eq!(batch.n_images, 2);
+    }
+
+    #[test]
+    fn edf_orders_the_queue_by_deadline_not_arrival() {
+        let mut b = DynamicBatcher::new(cfg(8, 1000));
+        let now = Instant::now();
+        // arrival order 1, 2, 3 — deadline order 2, 3, 1
+        b.push(req_deadline(1, "mnist", 1, now, 90), now);
+        b.push(req_deadline(2, "mnist", 1, now, 30), now);
+        b.push(req_deadline(3, "mnist", 1, now, 60), now);
+        let batch = b.poll(now + Duration::from_secs(2)).expect("expired");
+        let ids: Vec<u64> = batch.requests.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![2, 3, 1], "EDF serve order");
+        assert_eq!(
+            batch.deadline,
+            Some(now + Duration::from_millis(30)),
+            "batch carries its earliest deadline"
+        );
+    }
+
+    #[test]
+    fn slack_cut_fires_before_the_max_wait_horizon() {
+        let mut b = DynamicBatcher::new(cfg(8, 1000));
+        // live cost model: 20 ms per image
+        b.set_cost_hint("mnist", CostModel::linear(0.020));
+        let now = Instant::now();
+        // deadline 100 ms out, predicted cost 20 ms → with 1.5× headroom
+        // the cut fires at deadline - 30 ms = now + 70 ms, far before
+        // the 1000 ms horizon
+        b.push(req_deadline(1, "mnist", 1, now, 100), now);
+        let cut = b.next_deadline().unwrap();
+        let expect = now + Duration::from_millis(70);
+        let delta = if cut > expect { cut - expect } else { expect - cut };
+        assert!(
+            delta < Duration::from_millis(1),
+            "cut time must be slack-driven (off by {delta:?})"
+        );
+        assert!(b.poll(now + Duration::from_millis(60)).is_none());
+        assert!(b.poll(now + Duration::from_millis(71)).is_some());
+    }
+
+    #[test]
+    fn spent_slack_cuts_immediately() {
+        let mut b = DynamicBatcher::new(cfg(8, 1000));
+        b.set_cost_hint("mnist", CostModel::linear(0.040));
+        let now = Instant::now();
+        // 10 ms of budget against a 40 ms predicted cost: the slack is
+        // already negative — the poll must cut right away, not wait
+        b.push(req_deadline(1, "mnist", 1, now, 10), now);
+        assert!(b.poll(now).is_some(), "negative slack cuts immediately");
+    }
+
+    #[test]
+    fn feasible_requests_cut_ahead_of_infeasible_same_class() {
+        let mut b = DynamicBatcher::new(cfg(4, 1000));
+        b.set_cost_hint("mnist", CostModel::linear(0.010));
+        let now = Instant::now();
+        // request 1's deadline (5 ms) is inside the 10 ms predicted
+        // cost → infeasible; request 2 (500 ms) can still make it.
+        // EDF alone would serve 1 first; skip-over EDF must not.
+        b.push(req_deadline(1, "mnist", 1, now, 5), now);
+        b.push(req_deadline(2, "mnist", 1, now, 500), now);
+        let batch = b.poll(now + Duration::from_millis(6)).expect("cut");
+        let ids: Vec<u64> = batch.requests.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![2, 1], "feasible before infeasible");
+    }
+
+    #[test]
+    fn class_breaks_equal_deadline_ties() {
+        let mut b = DynamicBatcher::new(cfg(8, 1000));
+        let now = Instant::now();
+        let mk = |id: u64, class: PriorityClass| {
+            let ctx = RequestCtx {
+                arrival: now,
+                deadline: Some(now + Duration::from_millis(50)),
+                class,
+                seed: id,
+            };
+            InferenceRequest::with_ctx(id, "mnist", 1, ctx)
+        };
+        b.push(mk(1, PriorityClass::Low), now);
+        b.push(mk(2, PriorityClass::High), now);
+        b.push(mk(3, PriorityClass::Normal), now);
+        let batch = b.poll(now + Duration::from_secs(1)).expect("expired");
+        let classes: Vec<PriorityClass> =
+            batch.requests.iter().map(|r| r.ctx.class).collect();
+        assert_eq!(
+            classes,
+            vec![
+                PriorityClass::High,
+                PriorityClass::Normal,
+                PriorityClass::Low
+            ],
+            "equal deadlines: higher class first"
+        );
     }
 }

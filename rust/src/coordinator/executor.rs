@@ -28,6 +28,7 @@ use anyhow::{Context, Result};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
+use std::time::Instant;
 
 /// Commands a lane accepts from the scheduler.
 pub(crate) enum LaneCmd {
@@ -248,13 +249,20 @@ fn execute_batch(
         anyhow::anyhow!("network {:?} not loaded", batch.network)
     })?;
 
+    // execution start: the edge-charged completion time of every
+    // request in the batch is its wall queueing up to this point plus
+    // the *device* batch latency — the host numeric substrate below is
+    // the simulator stand-in and is deliberately excluded from the
+    // deadline verdict (see DESIGN.md §Deadline scheduling)
+    let started = Instant::now();
+
     // deterministic latents: one RNG per request, in order — identical
     // on every backend, which is what makes routing invisible to
     // clients (bit-identical f32 outputs)
     let mut latents: Vec<f32> =
         Vec::with_capacity(batch.n_images * meta.cfg.z_dim);
     for req in &batch.requests {
-        let mut rng = Rng::seed_from_u64(req.seed);
+        let mut rng = Rng::seed_from_u64(req.ctx.seed);
         for _ in 0..req.n_images * meta.cfg.z_dim {
             latents.push(rng.normal_f32());
         }
@@ -272,6 +280,28 @@ fn execute_batch(
         batch.n_images,
     );
 
+    // one edge-charged verdict per request, shared by the metrics
+    // accounting and the response fields (a single copy of the formula
+    // keeps ServingReport attainment and per-response `deadline_met`
+    // from ever diverging)
+    let verdicts: Vec<(f64, Option<bool>)> = batch
+        .requests
+        .iter()
+        .map(|req| {
+            let wait_s = started
+                .saturating_duration_since(req.ctx.arrival)
+                .as_secs_f64();
+            let charged_s = wait_s + outcome.device_time_s;
+            let met = req.ctx.deadline.map(|d| {
+                let budget_s = d
+                    .saturating_duration_since(req.ctx.arrival)
+                    .as_secs_f64();
+                charged_s <= budget_s
+            });
+            (charged_s, met)
+        })
+        .collect();
+
     {
         let mut m = shared.metrics.lock().unwrap();
         m.record_batch(outcome.execute_s, batch.n_images, outcome.ops);
@@ -284,10 +314,13 @@ fn execute_batch(
             outcome.device_time_s,
             outcome.energy_j,
         );
-        for req in &batch.requests {
-            let latency_s = req.enqueued_at.elapsed().as_secs_f64();
+        for (req, (_, met)) in batch.requests.iter().zip(&verdicts) {
+            let latency_s = req.ctx.arrival.elapsed().as_secs_f64();
             m.record_request(latency_s, req.n_images);
             m.record_backend_request(backend.name(), latency_s);
+            if let Some(met) = met {
+                m.record_backend_deadline(backend.name(), req.ctx.class, *met);
+            }
         }
     }
 
@@ -297,7 +330,9 @@ fn execute_batch(
     let n_batch = batch.n_images as f64;
     let mut responses = Vec::with_capacity(batch.requests.len());
     let mut row = 0usize;
-    for req in &batch.requests {
+    for (req, (charged_s, deadline_met)) in
+        batch.requests.iter().zip(verdicts)
+    {
         let n = req.n_images;
         let data =
             outcome.images.data()[row * numel..(row + n) * numel].to_vec();
@@ -314,13 +349,16 @@ fn execute_batch(
                 ],
                 data,
             )?,
-            latency_s: req.enqueued_at.elapsed().as_secs_f64(),
+            latency_s: req.ctx.arrival.elapsed().as_secs_f64(),
             execute_s: outcome.execute_s,
             batch_size: batch.n_images,
             backend: backend.name().to_string(),
             device_time_s: outcome.device_time_s * share,
             energy_j: outcome.energy_j * share,
             exec_seq: seq,
+            class: req.ctx.class,
+            charged_s,
+            deadline_met,
             fpga_time_s: meta.fpga_s * n as f64,
             gpu_time_s: gpu_batch_s * share,
         });

@@ -11,9 +11,18 @@
 //! Means, counts and energy stay exact; p50/p95/p99/p99.9 are bucketed
 //! (within 2% relative error; see DESIGN.md §Telemetry).
 
+use super::request::PriorityClass;
 use crate::stats::Welford;
-use crate::telemetry::{weighted_cv, LogHistogram};
+use crate::telemetry::{weighted_cv, LogHistogram, WindowedHistogram};
 use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// Deadline outcome counters for one (backend, priority class) cell.
+#[derive(Debug, Default, Clone, Copy)]
+struct DeadlineCount {
+    met: u64,
+    late: u64,
+}
 
 /// Per-backend accumulator (keyed by lane name, e.g. `fpga0`).
 #[derive(Debug, Clone)]
@@ -25,6 +34,10 @@ struct BackendStats {
     energy_j: f64,
     /// Request latencies resolved by this lane (histogram shard).
     latency: LogHistogram,
+    /// Deadline attainment per priority class (edge-charged completion
+    /// vs the request's absolute deadline; best-effort requests are not
+    /// counted).
+    deadline: BTreeMap<PriorityClass, DeadlineCount>,
     /// Per-image device seconds per batch, keyed by **(logical
     /// network, batch size)** — the run-to-run variation series behind
     /// the CV column.  Both key halves matter: a lane serving `mnist`
@@ -45,6 +58,7 @@ impl Default for BackendStats {
             device_time_s: 0.0,
             energy_j: 0.0,
             latency: LogHistogram::latency_default(),
+            deadline: BTreeMap::new(),
             per_image_dev: BTreeMap::new(),
         }
     }
@@ -63,11 +77,21 @@ struct LaneQueueStats {
 #[derive(Debug)]
 pub struct MetricsRegistry {
     latency: LogHistogram,
+    /// Time-sliced latency shards (the drift column: is the tail a
+    /// burst or the steady state?).  Slices are anchored to the
+    /// registry's creation instant — each serving window resets the
+    /// registry, so the clock starts with the window.
+    windowed: WindowedHistogram,
+    t0: Instant,
     batches: u64,
     batch_images: u64,
     images: u64,
     requests: u64,
     rejected: u64,
+    /// Requests shed at intake because their deadline was already
+    /// infeasible (distinct from `rejected` = overload).
+    shed: u64,
+    shed_by_class: BTreeMap<PriorityClass, u64>,
     deferred: u64,
     ops: u64,
     energy_j: f64,
@@ -80,11 +104,16 @@ impl Default for MetricsRegistry {
     fn default() -> Self {
         MetricsRegistry {
             latency: LogHistogram::latency_default(),
+            // 250 ms slices, 64 retained → 16 s of time structure
+            windowed: WindowedHistogram::latency_default(0.25, 64),
+            t0: Instant::now(),
             batches: 0,
             batch_images: 0,
             images: 0,
             requests: 0,
             rejected: 0,
+            shed: 0,
+            shed_by_class: BTreeMap::new(),
             deferred: 0,
             ops: 0,
             energy_j: 0.0,
@@ -101,7 +130,23 @@ impl MetricsRegistry {
     }
 
     pub fn record_request(&mut self, latency_s: f64, n_images: usize) {
+        self.record_request_at(
+            self.t0.elapsed().as_secs_f64(),
+            latency_s,
+            n_images,
+        );
+    }
+
+    /// [`Self::record_request`] with an explicit run-relative timestamp
+    /// (tests drive the window clock deterministically through this).
+    pub fn record_request_at(
+        &mut self,
+        at_s: f64,
+        latency_s: f64,
+        n_images: usize,
+    ) {
         self.latency.record(latency_s);
+        self.windowed.record(at_s, latency_s);
         self.requests += 1;
         self.images += n_images as u64;
     }
@@ -155,6 +200,35 @@ impl MetricsRegistry {
     /// Count one request turned away by admission control.
     pub fn record_rejected(&mut self) {
         self.rejected += 1;
+    }
+
+    /// Count one request shed at intake because its deadline was
+    /// already infeasible (shed-early instead of serve-late).
+    pub fn record_shed(&mut self, class: PriorityClass) {
+        self.shed += 1;
+        *self.shed_by_class.entry(class).or_insert(0) += 1;
+    }
+
+    /// Account one deadline-bearing request's outcome to the lane that
+    /// served it: did the edge-charged completion make the deadline?
+    pub fn record_backend_deadline(
+        &mut self,
+        backend: &str,
+        class: PriorityClass,
+        met: bool,
+    ) {
+        let d = self
+            .backends
+            .entry(backend.to_string())
+            .or_default()
+            .deadline
+            .entry(class)
+            .or_default();
+        if met {
+            d.met += 1;
+        } else {
+            d.late += 1;
+        }
     }
 
     /// Count one batch entering the deferred (waiting-for-capacity)
@@ -225,6 +299,15 @@ impl MetricsRegistry {
                 p99_s: b.latency.quantile(99.0),
                 p999_s: b.latency.quantile(99.9),
                 latency_cv: weighted_cv(b.per_image_dev.values()),
+                deadline: b
+                    .deadline
+                    .iter()
+                    .map(|(class, d)| ClassAttainment {
+                        class: *class,
+                        met: d.met,
+                        late: d.late,
+                    })
+                    .collect(),
             })
             .collect();
         let lanes = self
@@ -242,10 +325,17 @@ impl MetricsRegistry {
             requests: self.requests,
             images: self.images,
             rejected: self.rejected,
+            shed: self.shed,
+            shed_by_class: self
+                .shed_by_class
+                .iter()
+                .map(|(c, n)| (*c, *n))
+                .collect(),
             deferred: self.deferred,
             batches: self.batches,
             wall_s: self.wall_s,
             latency: lat,
+            latency_drift: self.windowed.drift(),
             images_per_s: self.images as f64 / wall,
             gops,
             mean_batch: if self.batches == 0 {
@@ -272,6 +362,28 @@ pub struct LatencyReport {
     pub p999_s: f64,
 }
 
+/// Deadline attainment of one (backend, priority class) cell.
+#[derive(Debug, Clone, Copy)]
+pub struct ClassAttainment {
+    pub class: PriorityClass,
+    /// Requests whose edge-charged completion made their deadline.
+    pub met: u64,
+    /// Served-late requests (completed, but past the deadline).
+    pub late: u64,
+}
+
+impl ClassAttainment {
+    /// Attainment in `[0, 1]`; an empty cell attains vacuously.
+    pub fn attainment(&self) -> f64 {
+        let total = self.met + self.late;
+        if total == 0 {
+            1.0
+        } else {
+            self.met as f64 / total as f64
+        }
+    }
+}
+
 /// One backend lane's column in the serving report.
 #[derive(Debug, Clone)]
 pub struct BackendReport {
@@ -295,6 +407,9 @@ pub struct BackendReport {
     /// this lane's batches — the paper's run-to-run-stability metric,
     /// live (FPGA ≈ clock jitter only, GPU ≈ DVFS + measurement noise).
     pub latency_cv: f64,
+    /// Deadline attainment per priority class (empty when no
+    /// deadline-bearing request resolved on this lane).
+    pub deadline: Vec<ClassAttainment>,
 }
 
 /// Scheduler-side telemetry for one lane.
@@ -317,13 +432,21 @@ pub struct LaneQueueReport {
 pub struct ServingReport {
     pub requests: u64,
     pub images: u64,
-    /// Requests turned away by admission control.
+    /// Requests turned away by admission control (overload).
     pub rejected: u64,
+    /// Requests shed at intake because their deadline was already
+    /// infeasible given queue depth × predicted cost.
+    pub shed: u64,
+    /// The shed counter split by priority class.
+    pub shed_by_class: Vec<(PriorityClass, u64)>,
     /// Batches that had to wait for lane capacity (backpressure).
     pub deferred: u64,
     pub batches: u64,
     pub wall_s: f64,
     pub latency: LatencyReport,
+    /// Tail drift across the retained latency time slices: worst-window
+    /// p99 over best-window p99 (1.0 = steady).
+    pub latency_drift: f64,
     pub images_per_s: f64,
     pub gops: f64,
     pub mean_batch: f64,
@@ -341,7 +464,7 @@ impl ServingReport {
             "requests {:>6}   images {:>6}   batches {:>5}  (mean batch {:.2})\n\
              wall {:>8.3} s   throughput {:>8.2} img/s   {:>7.2} GOps/s\n\
              latency mean {:.2} ms  p50 {:.2} ms  p95 {:.2} ms  p99 {:.2} ms  \
-             p99.9 {:.2} ms\n\
+             p99.9 {:.2} ms  drift {:.2}x\n\
              power {:>6.2} W   {:>6.2} GOps/s/W",
             self.requests,
             self.images,
@@ -355,11 +478,24 @@ impl ServingReport {
             self.latency.p95_s * 1e3,
             self.latency.p99_s * 1e3,
             self.latency.p999_s * 1e3,
+            self.latency_drift,
             self.mean_power_w,
             self.gops_per_w,
         );
         if self.rejected > 0 {
             out.push_str(&format!("\nrejected {:>6}  (admission control)", self.rejected));
+        }
+        if self.shed > 0 {
+            let by_class = self
+                .shed_by_class
+                .iter()
+                .map(|(c, n)| format!("{c} {n}"))
+                .collect::<Vec<_>>()
+                .join("  ");
+            out.push_str(&format!(
+                "\nshed     {:>6}  (deadline infeasible at intake: {by_class})",
+                self.shed
+            ));
         }
         if self.deferred > 0 {
             out.push_str(&format!("\ndeferred {:>6}  (backpressure)", self.deferred));
@@ -382,6 +518,21 @@ impl ServingReport {
                 b.latency_cv * 100.0,
                 b.images_per_s,
             ));
+        }
+        // per-(backend, class) deadline attainment on dedicated lines
+        // (the backend lines above keep img/s as their trailing field —
+        // the CI smoke awk keys off it)
+        for b in &self.per_backend {
+            for d in &b.deadline {
+                out.push_str(&format!(
+                    "\ndeadline {:<6} class {:<6} met {:>5} late {:>5} att {:.1}%",
+                    b.name,
+                    d.class,
+                    d.met,
+                    d.late,
+                    d.attainment() * 100.0,
+                ));
+            }
         }
         for l in &self.lanes {
             out.push_str(&format!(
@@ -506,6 +657,63 @@ mod tests {
             "two constant-speed networks on one lane must not read as jitter"
         );
         assert!(gpu.latency_cv > 0.1, "cv={}", gpu.latency_cv);
+    }
+
+    #[test]
+    fn deadline_and_shed_columns_aggregate() {
+        let mut m = MetricsRegistry::new();
+        m.record_backend_deadline("fpga0", PriorityClass::Normal, true);
+        m.record_backend_deadline("fpga0", PriorityClass::Normal, true);
+        m.record_backend_deadline("fpga0", PriorityClass::Normal, false);
+        m.record_backend_deadline("fpga0", PriorityClass::Low, true);
+        m.record_shed(PriorityClass::Low);
+        m.set_wall(1.0);
+        let r = m.report();
+        assert_eq!(r.shed, 1);
+        assert_eq!(r.shed_by_class, vec![(PriorityClass::Low, 1)]);
+        let fpga = r.per_backend.iter().find(|b| b.name == "fpga0").unwrap();
+        assert_eq!(fpga.deadline.len(), 2, "one row per class");
+        let normal = fpga
+            .deadline
+            .iter()
+            .find(|d| d.class == PriorityClass::Normal)
+            .unwrap();
+        assert_eq!((normal.met, normal.late), (2, 1));
+        assert!((normal.attainment() - 2.0 / 3.0).abs() < 1e-12);
+        let low = fpga
+            .deadline
+            .iter()
+            .find(|d| d.class == PriorityClass::Low)
+            .unwrap();
+        assert_eq!((low.met, low.late), (1, 0));
+        assert_eq!(low.attainment(), 1.0);
+        let s = r.render();
+        assert!(s.contains("shed"), "{s}");
+        assert!(s.contains("deadline fpga0"), "{s}");
+        assert!(s.contains("att 66.7%"), "{s}");
+        // a backend line still ends in img/s (CI contract) even with
+        // deadline rows present
+        m.record_backend_batch("fpga0", "mnist", 4, 1, 0.004, 0.1);
+        let s = m.report().render();
+        let line = s.lines().find(|l| l.starts_with("backend fpga0")).unwrap();
+        assert!(line.trim_end().ends_with("img/s"), "{line}");
+    }
+
+    #[test]
+    fn windowed_drift_flags_a_tail_burst() {
+        let mut m = MetricsRegistry::new();
+        for i in 0..100 {
+            m.record_request_at(i as f64 * 0.01, 0.002, 1);
+        }
+        m.set_wall(1.0);
+        let steady = m.report().latency_drift;
+        assert!((steady - 1.0).abs() < 1e-9, "steady run: drift {steady}");
+        for _ in 0..20 {
+            m.record_request_at(2.0, 0.100, 1);
+        }
+        let burst = m.report().latency_drift;
+        assert!(burst > 5.0, "a confined tail burst must drift: {burst}");
+        assert!(m.report().render().contains("drift"));
     }
 
     #[test]

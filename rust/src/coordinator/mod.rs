@@ -9,12 +9,19 @@
 //! the per-backend columns of [`ServingReport`] show where the work
 //! landed and at what latency/energy.
 //!
+//! Every request carries a [`RequestCtx`] (arrival, absolute deadline,
+//! priority class, latent seed) from intake to verdict: the batcher is
+//! EDF-ordered and cuts on deadline *slack*, intake sheds requests
+//! whose deadline no lane can meet (shed-early instead of serve-late),
+//! and the report accounts deadline attainment per (backend, class) —
+//! see DESIGN.md §Deadline scheduling.
+//!
 //! Module split:
 //! * [`registry`](BackendRegistry) — logical networks (incl. `.q`
 //!   quantized twins) → capable lanes;
-//! * `scheduler` — the leader thread: batching, routing (per-network
-//!   ordering via lane pinning + per-lane FIFO), backpressure and
-//!   admission control;
+//! * `scheduler` — the leader thread: deadline-aware intake (admission
+//!   + infeasibility shedding), EDF batching, routing (per-network
+//!   ordering via lane pinning + per-lane FIFO), backpressure;
 //! * `executor` — the lane threads owning the live backends;
 //! * `server` — configuration, startup wiring, and the client API.
 //!
@@ -36,12 +43,15 @@ mod server;
 
 pub use batcher::{Batch, BatcherConfig, DynamicBatcher};
 pub use metrics::{
-    BackendReport, LaneQueueReport, LatencyReport, MetricsRegistry,
-    ServingReport,
+    BackendReport, ClassAttainment, LaneQueueReport, LatencyReport,
+    MetricsRegistry, ServingReport,
 };
 pub use power::PowerMeter;
 pub use registry::{BackendRegistry, LaneInfo};
-pub use request::{InferenceRequest, InferenceResponse, RequestId};
+pub use request::{
+    InferenceRequest, InferenceResponse, PriorityClass, RequestCtx, RequestId,
+};
 pub use server::{
-    Coordinator, CoordinatorConfig, ResponseHandle, WorkloadSpec,
+    Coordinator, CoordinatorClient, CoordinatorConfig, ResponseHandle,
+    WorkloadSpec,
 };

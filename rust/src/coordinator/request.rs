@@ -1,9 +1,145 @@
-//! Request/response types of the serving API.
+//! Request/response types of the serving API, built around the
+//! [`RequestCtx`] every request carries from arrival to verdict.
+//!
+//! The context is created **once**, by whoever originates the request
+//! (the workload layer stamps the *scheduled* arrival so generator lag
+//! is charged to the system; the ad-hoc `serve` path stamps "now"), and
+//! flows intact through intake → batching → routing → execution →
+//! reply → telemetry.  Before this type existed each layer kept its own
+//! fields (the batcher an enqueue `Instant`, the loadtest a scheduled
+//! timestamp plus a lag correction, the executor a bare latent seed);
+//! deadlines and priority classes could not exist because no single
+//! struct survived the whole lifecycle.
 
 use crate::tensor::Tensor;
-use std::time::Instant;
+use std::fmt;
+use std::str::FromStr;
+use std::time::{Duration, Instant};
 
 pub type RequestId = u64;
+
+/// Priority class of a request — the load-shedding axis.  Ordering
+/// between requests is EDF (earliest deadline first); the class instead
+/// controls *how early a request is shed* under overload: `Low` gives
+/// up its admission budget first, `High` keeps the full budget and wins
+/// EDF ties.  This keeps the low class starvation-free (its deadlines
+/// still age into "earliest"), unlike strict priority queues.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub enum PriorityClass {
+    High,
+    #[default]
+    Normal,
+    Low,
+}
+
+impl PriorityClass {
+    /// EDF tie-break rank (lower = served first at equal deadlines).
+    pub fn rank(self) -> u8 {
+        match self {
+            PriorityClass::High => 0,
+            PriorityClass::Normal => 1,
+            PriorityClass::Low => 2,
+        }
+    }
+
+    /// Fraction of the `admit_max_deferred` overload budget this class
+    /// may use before being shed at intake (shed-early: the low class
+    /// is turned away while the pool still has headroom for the rest).
+    pub fn shed_fraction(self) -> f64 {
+        match self {
+            PriorityClass::High => 1.0,
+            PriorityClass::Normal => 1.0,
+            PriorityClass::Low => 0.5,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            PriorityClass::High => "high",
+            PriorityClass::Normal => "normal",
+            PriorityClass::Low => "low",
+        }
+    }
+}
+
+impl fmt::Display for PriorityClass {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+impl FromStr for PriorityClass {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.trim() {
+            "high" => Ok(PriorityClass::High),
+            "normal" => Ok(PriorityClass::Normal),
+            "low" => Ok(PriorityClass::Low),
+            other => anyhow::bail!(
+                "unknown priority class {other:?} (high|normal|low)"
+            ),
+        }
+    }
+}
+
+/// The per-request lifecycle context: everything a request carries
+/// besides *what* to compute (network + image count live on
+/// [`InferenceRequest`], whose logical network name also names the
+/// precision twin — `mnist` vs `mnist.q`).
+#[derive(Debug, Clone, Copy)]
+pub struct RequestCtx {
+    /// Arrival the request is *charged from* — the workload layer
+    /// stamps the scheduled arrival, so generator lag counts against
+    /// the system (coordinated-omission correction by construction).
+    pub arrival: Instant,
+    /// Absolute deadline; `None` = best-effort (no attainment row).
+    pub deadline: Option<Instant>,
+    pub class: PriorityClass,
+    /// Latent seed (deterministic generation for reproducible tests).
+    pub seed: u64,
+}
+
+impl RequestCtx {
+    /// Best-effort context arriving now — the ad-hoc `serve` path.
+    pub fn new(seed: u64) -> Self {
+        RequestCtx {
+            arrival: Instant::now(),
+            deadline: None,
+            class: PriorityClass::Normal,
+            seed,
+        }
+    }
+
+    pub fn with_deadline(mut self, deadline: Instant) -> Self {
+        self.deadline = Some(deadline);
+        self
+    }
+
+    pub fn with_class(mut self, class: PriorityClass) -> Self {
+        self.class = class;
+        self
+    }
+
+    /// Deadline the scheduler orders by: the real one, or the batching
+    /// horizon for best-effort requests (so EDF degrades to FIFO when
+    /// nobody carries a deadline — arrivals are monotone).
+    pub fn effective_deadline(&self, max_wait: Duration) -> Instant {
+        self.deadline.unwrap_or(self.arrival + max_wait)
+    }
+
+    /// Seconds left until the deadline at `now` (negative = already
+    /// past); `None` for best-effort requests.
+    pub fn budget_s(&self, now: Instant) -> Option<f64> {
+        self.deadline.map(|d| {
+            if d >= now {
+                d.duration_since(now).as_secs_f64()
+            } else {
+                -now.duration_since(d).as_secs_f64()
+            }
+        })
+    }
+}
 
 /// One client request: "generate `n_images` samples from `network`".
 #[derive(Debug, Clone)]
@@ -11,19 +147,28 @@ pub struct InferenceRequest {
     pub id: RequestId,
     pub network: String,
     pub n_images: usize,
-    /// Latent seed (deterministic generation for reproducible tests).
-    pub seed: u64,
-    pub enqueued_at: Instant,
+    /// Lifecycle context (arrival, deadline, class, latent seed).
+    pub ctx: RequestCtx,
 }
 
 impl InferenceRequest {
+    /// Best-effort request arriving now (the pre-deadline call shape,
+    /// kept for the `serve` path and tests).
     pub fn new(id: RequestId, network: &str, n_images: usize, seed: u64) -> Self {
+        Self::with_ctx(id, network, n_images, RequestCtx::new(seed))
+    }
+
+    pub fn with_ctx(
+        id: RequestId,
+        network: &str,
+        n_images: usize,
+        ctx: RequestCtx,
+    ) -> Self {
         InferenceRequest {
             id,
             network: network.to_string(),
             n_images,
-            seed,
-            enqueued_at: Instant::now(),
+            ctx,
         }
     }
 }
@@ -34,7 +179,7 @@ pub struct InferenceResponse {
     pub id: RequestId,
     /// `[n_images, C, H, W]` in [-1, 1].
     pub images: Tensor,
-    /// End-to-end latency (enqueue → response), seconds.
+    /// End-to-end latency (charged arrival → response), seconds.
     pub latency_s: f64,
     /// Wall time inside the numeric substrate, seconds.
     pub execute_s: f64,
@@ -50,6 +195,16 @@ pub struct InferenceResponse {
     /// Pool-global execution sequence of the serving batch — makes the
     /// per-network ordering guarantee observable (and testable).
     pub exec_seq: u64,
+    /// Priority class the request was served under.
+    pub class: PriorityClass,
+    /// Edge-charged completion time: wall queueing (charged arrival →
+    /// execution start) plus the *device* batch latency — what the
+    /// request would have cost on the modeled edge device, with the
+    /// host numeric substrate (the simulator stand-in) excluded.
+    pub charged_s: f64,
+    /// Deadline verdict on the edge-charged completion (`None` =
+    /// best-effort request).
+    pub deadline_met: Option<bool>,
     /// Simulated edge-FPGA latency for the same work (annotation,
     /// independent of which backend actually served it).
     pub fpga_time_s: f64,
@@ -63,9 +218,51 @@ mod tests {
     use super::*;
 
     #[test]
-    fn request_records_enqueue_time() {
+    fn request_records_arrival_time() {
         let r = InferenceRequest::new(1, "mnist", 4, 42);
         assert_eq!(r.network, "mnist");
-        assert!(r.enqueued_at.elapsed().as_secs_f64() < 1.0);
+        assert_eq!(r.ctx.seed, 42);
+        assert_eq!(r.ctx.class, PriorityClass::Normal);
+        assert!(r.ctx.deadline.is_none());
+        assert!(r.ctx.arrival.elapsed().as_secs_f64() < 1.0);
+    }
+
+    #[test]
+    fn effective_deadline_falls_back_to_the_batching_horizon() {
+        let ctx = RequestCtx::new(1);
+        let horizon = Duration::from_millis(5);
+        assert_eq!(ctx.effective_deadline(horizon), ctx.arrival + horizon);
+        let d = ctx.arrival + Duration::from_millis(50);
+        let with = ctx.with_deadline(d);
+        assert_eq!(with.effective_deadline(horizon), d);
+    }
+
+    #[test]
+    fn budget_signs_around_the_deadline() {
+        let ctx = RequestCtx::new(0);
+        assert!(ctx.budget_s(Instant::now()).is_none(), "best-effort");
+        let d = ctx.arrival + Duration::from_millis(10);
+        let ctx = ctx.with_deadline(d);
+        let before = ctx.budget_s(ctx.arrival).unwrap();
+        assert!((before - 0.010).abs() < 1e-9);
+        let after = ctx.budget_s(d + Duration::from_millis(3)).unwrap();
+        assert!((after + 0.003).abs() < 1e-9, "past deadline goes negative");
+    }
+
+    #[test]
+    fn class_parse_display_roundtrip_and_ranks() {
+        for c in [PriorityClass::High, PriorityClass::Normal, PriorityClass::Low]
+        {
+            assert_eq!(c.as_str().parse::<PriorityClass>().unwrap(), c);
+        }
+        assert!("urgent".parse::<PriorityClass>().is_err());
+        assert!(PriorityClass::High.rank() < PriorityClass::Normal.rank());
+        assert!(PriorityClass::Normal.rank() < PriorityClass::Low.rank());
+        assert_eq!(PriorityClass::default(), PriorityClass::Normal);
+        assert!(
+            PriorityClass::Low.shed_fraction()
+                < PriorityClass::Normal.shed_fraction(),
+            "the low class gives up its admission budget first"
+        );
     }
 }

@@ -1,8 +1,11 @@
 //! The routing policy, pure and unit-tested in isolation: given a
-//! snapshot of the lane pool, pick where one batch goes.  The stateful
-//! half (pins, deferred queue, counters) lives in [`super::scheduler`];
-//! this module is only the decision function, so every invariant can be
-//! pinned by a table-driven test with no threads involved.
+//! snapshot of the lane pool, pick where one batch goes — plus the
+//! EDF retry order for deferred batches.  The stateful half (pins,
+//! deferred queue, counters) lives in [`super::scheduler`]; this module
+//! is only the decision functions, so every invariant can be pinned by
+//! a table-driven test with no threads involved.
+
+use std::cmp::Ordering;
 
 /// One routing decision.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -60,6 +63,49 @@ pub(crate) fn choose_lane(
     }
 }
 
+/// A deferred batch as the retry-ordering function sees it.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct DeferredView {
+    /// Dense index of the batch's network (grouping key).
+    pub network: usize,
+    /// Slack in seconds at retry time — the earliest deadline aboard
+    /// minus the batch's predicted cost, signed (negative = already
+    /// infeasible); `None` = best-effort.
+    pub slack_s: Option<f64>,
+    /// Defer-queue admission sequence (monotone per scheduler).
+    pub seq: u64,
+}
+
+/// Retry order for the deferred queue: **networks** by their most
+/// urgent pending batch's slack (EDF; best-effort networks last,
+/// admission sequence breaking ties), **batches within one network**
+/// strictly by admission sequence — per-network submission order is an
+/// ordering invariant EDF must not break (a network's responses resolve
+/// in submission order; see DESIGN.md §Deadline scheduling).
+pub(crate) fn retry_order(views: &[DeferredView]) -> Vec<usize> {
+    let n_nets = views.iter().map(|v| v.network + 1).max().unwrap_or(0);
+    // per network: (min slack, min seq) — urgency of its head batch
+    let mut urgency: Vec<(f64, u64)> = vec![(f64::INFINITY, u64::MAX); n_nets];
+    for v in views {
+        let u = &mut urgency[v.network];
+        u.0 = u.0.min(v.slack_s.unwrap_or(f64::INFINITY));
+        u.1 = u.1.min(v.seq);
+    }
+    let mut order: Vec<usize> = (0..views.len()).collect();
+    order.sort_by(|&a, &b| {
+        let (va, vb) = (&views[a], &views[b]);
+        if va.network == vb.network {
+            return va.seq.cmp(&vb.seq);
+        }
+        let (ua, ub) = (urgency[va.network], urgency[vb.network]);
+        match ua.0.total_cmp(&ub.0) {
+            Ordering::Equal => ua.1.cmp(&ub.1),
+            other => other,
+        }
+    });
+    order
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -112,5 +158,52 @@ mod tests {
         // …and waits rather than jump lanes when it is saturated
         let lanes = [lv(true, 0, 0.001), lv(true, 4, 9.0)];
         assert_eq!(choose_lane(&lanes, Some(1), 4), Route::Defer);
+    }
+
+    fn dv(network: usize, slack_s: Option<f64>, seq: u64) -> DeferredView {
+        DeferredView {
+            network,
+            slack_s,
+            seq,
+        }
+    }
+
+    #[test]
+    fn retry_order_is_edf_across_networks() {
+        // network 1 is the most urgent (slack 2 ms), then 0, best-effort
+        // network 2 last
+        let views = [
+            dv(0, Some(0.050), 0),
+            dv(1, Some(0.002), 1),
+            dv(2, None, 2),
+        ];
+        assert_eq!(retry_order(&views), vec![1, 0, 2]);
+    }
+
+    #[test]
+    fn retry_order_keeps_per_network_submission_order() {
+        // network 0's second batch carries a *tighter* deadline than its
+        // first (a late urgent request) — EDF must not let it overtake
+        // within the network, only raise the whole network's urgency
+        let views = [
+            dv(0, Some(0.040), 0),
+            dv(1, Some(0.010), 1),
+            dv(0, Some(0.001), 2),
+        ];
+        // network 0's urgency (0.001) beats network 1's (0.010), but its
+        // batches still retry in admission order 0 → 2
+        assert_eq!(retry_order(&views), vec![0, 2, 1]);
+    }
+
+    #[test]
+    fn retry_order_negative_slack_sorts_first_and_ties_by_seq() {
+        let views = [
+            dv(0, Some(0.005), 0),
+            dv(1, Some(-0.003), 1),
+            dv(2, Some(0.005), 2),
+        ];
+        assert_eq!(retry_order(&views), vec![1, 0, 2]);
+        let empty: [DeferredView; 0] = [];
+        assert!(retry_order(&empty).is_empty());
     }
 }

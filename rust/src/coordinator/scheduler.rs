@@ -1,8 +1,9 @@
-//! The scheduler (leader thread): request intake → dynamic batching →
-//! **capability- and cost-aware routing** over the heterogeneous lane
-//! pool.
+//! The scheduler (leader thread): deadline-aware request intake →
+//! EDF dynamic batching → **capability- and cost-aware routing** over
+//! the heterogeneous lane pool.
 //!
-//! Routing invariants (see DESIGN.md §Backend layer):
+//! Routing invariants (see DESIGN.md §Backend layer and §Deadline
+//! scheduling):
 //!
 //! 1. **Capability** — a batch only ever goes to a lane whose backend
 //!    supports the network's served precision (the [`BackendRegistry`]
@@ -13,14 +14,21 @@
 //! 3. **Ordering** — a network with batches in flight is *pinned* to
 //!    their lane: later batches either join that FIFO lane or defer.
 //!    Only when the network is quiescent (`outstanding == 0`, i.e. all
-//!    replies sent) may the scheduler re-route it.  Per-request
-//!    responses therefore resolve in submission order per network
-//!    (intra-batch sharding opts out of this, trading order for tail
-//!    latency).
+//!    replies sent) may the scheduler re-route it.  EDF reorders
+//!    *within* the batcher queue (by deadline) and *between* networks
+//!    (urgent networks retry first); it never reorders one network's
+//!    cut batches — deferred batches of a network retry in admission
+//!    order, so per-network responses still resolve in cut order.
 //! 4. **Backpressure/admission** — a lane at `max_queue_depth` accepts
 //!    no more batches; when every capable lane is saturated the batch
-//!    defers (retried as lanes drain), and when too many batches are
-//!    deferred new requests are rejected at intake.
+//!    defers (retried in EDF slack order as lanes drain).  Intake sheds
+//!    early on two conditions: (a) *overload* — the deferred queue has
+//!    outgrown the request's class budget (`admit_max_deferred ×
+//!    class.shed_fraction()`, so the low class yields first), and
+//!    (b) *infeasibility* — the request carries a deadline no capable
+//!    lane can meet given its queue depth × predicted cost
+//!    ([`CostModel::slack_s`]); serving it would only produce a
+//!    served-late response, so it is shed at arrival instead.
 //!
 //! [`CostModel`]: crate::backend::CostModel
 
@@ -29,10 +37,10 @@ use super::executor::LaneCmd;
 use super::metrics::MetricsRegistry;
 use super::registry::BackendRegistry;
 use super::request::{InferenceRequest, InferenceResponse};
-use super::routing::{choose_lane, LaneView, Route};
+use super::routing::{choose_lane, retry_order, DeferredView, LaneView, Route};
 use crate::backend::CostModel;
 use crate::config::BackendCfg;
-use std::collections::{HashMap, HashSet, VecDeque};
+use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -55,6 +63,13 @@ pub(crate) struct LaneHandle {
     pub costs: Arc<Mutex<HashMap<String, CostModel>>>,
 }
 
+/// One deferred batch plus its admission sequence (the per-network
+/// FIFO key the EDF retry order preserves).
+struct Deferred {
+    batch: Batch,
+    seq: u64,
+}
+
 /// Everything the leader thread owns.
 pub(crate) struct Scheduler {
     batcher: DynamicBatcher,
@@ -68,8 +83,10 @@ pub(crate) struct Scheduler {
     /// Current lane pin per network (leader-private; only meaningful
     /// while the network's outstanding counter is nonzero).
     pins: HashMap<String, usize>,
-    /// Batches waiting for lane capacity, FIFO.
-    deferred: VecDeque<Batch>,
+    /// Batches waiting for lane capacity; retried in EDF slack order
+    /// (per-network admission order preserved).
+    deferred: Vec<Deferred>,
+    defer_seq: u64,
     waiters: HashMap<u64, mpsc::Sender<InferenceResponse>>,
     metrics: Arc<Mutex<MetricsRegistry>>,
 }
@@ -104,6 +121,66 @@ impl Scheduler {
             .map(|o| o.load(Ordering::Acquire) > 0)
             .unwrap_or(false);
         live.then_some(pin)
+    }
+
+    /// Cheapest capable lane's cost model for a network — the live
+    /// "predicted cost" the batcher's slack cutting and the deferred
+    /// queue's EDF ordering run on.
+    fn cheapest_cost(&self, network: &str, n_images: usize) -> Option<CostModel> {
+        let mut best: Option<(f64, CostModel)> = None;
+        for &i in self.registry.capable(network) {
+            let Some(cm) = self.lanes[i]
+                .costs
+                .lock()
+                .unwrap()
+                .get(network)
+                .copied()
+            else {
+                continue;
+            };
+            let c = cm.cost_s(n_images);
+            if best.map(|(b, _)| c < b).unwrap_or(true) {
+                best = Some((c, cm));
+            }
+        }
+        best.map(|(_, cm)| cm)
+    }
+
+    /// Shed-early feasibility check (invariant 4b): `true` when the
+    /// request carries a deadline that *no* capable lane can meet given
+    /// its current queue depth and predicted cost.  Requests without a
+    /// deadline — and networks whose lanes have not reported a cost
+    /// model yet — are never shed here.
+    fn intake_infeasible(&self, req: &InferenceRequest, now: Instant) -> bool {
+        let Some(deadline) = req.ctx.deadline else {
+            return false;
+        };
+        if deadline <= now {
+            return true; // already past: serving can only be late
+        }
+        let budget_s = deadline.duration_since(now).as_secs_f64();
+        let infos = self.registry.lanes();
+        let mut any_model = false;
+        for &i in self.registry.capable(&req.network) {
+            if !infos[i].caps.admits(req.n_images) {
+                continue;
+            }
+            let Some(cm) = self.lanes[i]
+                .costs
+                .lock()
+                .unwrap()
+                .get(&req.network)
+                .copied()
+            else {
+                continue;
+            };
+            any_model = true;
+            let depth = self.lanes[i].depth.load(Ordering::Acquire);
+            if cm.slack_s(budget_s, depth, req.n_images) >= 0.0 {
+                return false; // some lane still makes the deadline
+            }
+        }
+        any_model
     }
 
     fn send(&mut self, lane: usize, batch: Batch) {
@@ -192,14 +269,25 @@ impl Scheduler {
         }
         for (gi, requests) in groups.into_iter().enumerate() {
             let n_images = requests.iter().map(|r| r.n_images).sum();
+            let deadline =
+                requests.iter().filter_map(|r| r.ctx.deadline).min();
             let shard = Batch {
                 network: network.clone(),
                 requests,
                 n_images,
+                deadline,
             };
             self.send(capable[gi % capable.len()], shard);
         }
         None
+    }
+
+    /// Park a batch on the deferred queue (metrics + admission seq).
+    fn defer(&mut self, batch: Batch) {
+        self.metrics.lock().unwrap().record_deferred();
+        let seq = self.defer_seq;
+        self.defer_seq += 1;
+        self.deferred.push(Deferred { batch, seq });
     }
 
     /// Queue a batch behind any deferred work of the same network (or
@@ -220,45 +308,79 @@ impl Scheduler {
         let behind = self
             .deferred
             .iter()
-            .any(|b| b.network == batch.network);
+            .any(|d| d.batch.network == batch.network);
         if behind {
-            self.metrics.lock().unwrap().record_deferred();
-            self.deferred.push_back(batch);
+            self.defer(batch);
             return;
         }
         if let Err(batch) = self.try_dispatch(batch) {
-            self.metrics.lock().unwrap().record_deferred();
-            self.deferred.push_back(batch);
+            self.defer(batch);
         }
     }
 
-    /// Retry deferred batches FIFO; a network that still can't route
-    /// blocks its later batches (ordering), not other networks'.
+    /// Retry deferred batches in EDF slack order (most urgent network
+    /// first, per-network admission order preserved); a network that
+    /// still can't route blocks its later batches (ordering), not other
+    /// networks'.
     fn drain_deferred(&mut self) {
         if self.deferred.is_empty() {
             return;
         }
+        let now = Instant::now();
+        // dense network indices for the pure ordering function
+        let mut net_idx: HashMap<&str, usize> = HashMap::new();
+        let mut views = Vec::with_capacity(self.deferred.len());
+        for d in &self.deferred {
+            let next = net_idx.len();
+            let idx = *net_idx.entry(d.batch.network.as_str()).or_insert(next);
+            let slack_s = d.batch.deadline.map(|dl| {
+                let budget = if dl >= now {
+                    dl.duration_since(now).as_secs_f64()
+                } else {
+                    -now.duration_since(dl).as_secs_f64()
+                };
+                let cost = self
+                    .batcher
+                    .cost_hint(&d.batch.network)
+                    .map(|c| c.cost_s(d.batch.n_images))
+                    .unwrap_or(0.0);
+                budget - cost
+            });
+            views.push(DeferredView {
+                network: idx,
+                slack_s,
+                seq: d.seq,
+            });
+        }
+        let order = retry_order(&views);
+
         let mut blocked: HashSet<String> = HashSet::new();
-        let mut still = VecDeque::with_capacity(self.deferred.len());
-        while let Some(batch) = self.deferred.pop_front() {
-            if blocked.contains(&batch.network) {
-                still.push_back(batch);
+        let mut slots: Vec<Option<Deferred>> =
+            self.deferred.drain(..).map(Some).collect();
+        let mut still: Vec<Deferred> = Vec::new();
+        for i in order {
+            let d = slots[i].take().expect("order indices are unique");
+            if blocked.contains(&d.batch.network) {
+                still.push(d);
                 continue;
             }
-            match self.try_dispatch(batch) {
+            let seq = d.seq;
+            match self.try_dispatch(d.batch) {
                 Ok(()) => {}
                 Err(batch) => {
                     blocked.insert(batch.network.clone());
-                    still.push_back(batch);
+                    still.push(Deferred { batch, seq });
                 }
             }
         }
+        // keep admission order within the surviving queue
+        still.sort_by_key(|d| d.seq);
         self.deferred = still;
     }
 }
 
-/// Leader loop: intake → batching (deadline-driven) → routing; never
-/// blocks on execution.
+/// Leader loop: intake (admission + shed-early) → EDF batching →
+/// routing; never blocks on execution.
 pub(crate) fn leader_thread(
     batcher_cfg: BatcherConfig,
     backend_cfg: BackendCfg,
@@ -278,7 +400,8 @@ pub(crate) fn leader_thread(
         registry,
         outstanding,
         pins: HashMap::new(),
-        deferred: VecDeque::new(),
+        deferred: Vec::new(),
+        defer_seq: 0,
         waiters: HashMap::new(),
         metrics,
     };
@@ -287,7 +410,7 @@ pub(crate) fn leader_thread(
     let retry_tick = Duration::from_micros(200);
     let mut shutdown = false;
     'outer: loop {
-        // wait for a request, the next batching deadline, or — with
+        // wait for a request, the next batching cut, or — with
         // deferred work — the backpressure retry tick
         let deadline = match (s.batcher.next_deadline(), s.deferred.is_empty())
         {
@@ -327,7 +450,8 @@ pub(crate) fn leader_thread(
         for batch in cuts {
             s.dispatch_or_defer(batch);
         }
-        // drain any additional ready batches (e.g. other networks)
+        // drain any additional ready batches (the batcher hands them
+        // out in EDF cut order across networks)
         while let Some(batch) = s.batcher.poll(Instant::now()) {
             s.dispatch_or_defer(batch);
         }
@@ -366,16 +490,33 @@ fn ingest(
 ) {
     match cmd {
         LeaderCmd::Submit(req, reply) => {
-            // admission control: with this much work already waiting
-            // for lane capacity, reject instead of queueing unboundedly
+            let now = Instant::now();
+            // admission control (4a): with this much work already
+            // waiting for lane capacity, reject instead of queueing
+            // unboundedly — the low class yields its budget first
             // (dropping the reply errors the caller)
-            if s.deferred.len() >= s.cfg.admit_max_deferred {
+            let budget = (s.cfg.admit_max_deferred as f64
+                * req.ctx.class.shed_fraction())
+            .ceil() as usize;
+            if s.deferred.len() >= budget.max(1) {
                 s.metrics.lock().unwrap().record_rejected();
                 drop(reply);
                 return;
             }
+            // shed-early (4b): a deadline no capable lane can meet is
+            // turned away at arrival, not served late
+            if s.intake_infeasible(&req, now) {
+                s.metrics.lock().unwrap().record_shed(req.ctx.class);
+                drop(reply);
+                return;
+            }
+            // refresh the live cost hint the batcher's slack cutting
+            // (and the deferred queue's EDF order) runs on
+            if let Some(cm) = s.cheapest_cost(&req.network, req.n_images) {
+                s.batcher.set_cost_hint(&req.network, cm);
+            }
             s.waiters.insert(req.id, reply);
-            if let Some(b) = s.batcher.push(req, Instant::now()) {
+            if let Some(b) = s.batcher.push(req, now) {
                 cuts.push(b);
             }
         }

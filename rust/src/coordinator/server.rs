@@ -20,7 +20,7 @@ use super::batcher::BatcherConfig;
 use super::executor::{lane_thread, LaneCmd, LaneShared, LaneSpec};
 use super::metrics::{MetricsRegistry, ServingReport};
 use super::registry::BackendRegistry;
-use super::request::{InferenceRequest, InferenceResponse};
+use super::request::{InferenceRequest, InferenceResponse, RequestCtx};
 use super::scheduler::{leader_thread, LaneHandle, LeaderCmd};
 use crate::config::{BackendCfg, DeviceKind, Precision, QFormat};
 use crate::util::Rng;
@@ -129,11 +129,40 @@ impl ResponseHandle {
     }
 }
 
+/// A cloneable, thread-safe submission handle onto a running
+/// [`Coordinator`] — what a closed-loop client (one blocking wait per
+/// in-flight request) holds, since the coordinator itself is pinned to
+/// the thread that owns its shutdown.  Each clone shares the request-id
+/// counter, so ids stay unique across clients.
+#[derive(Clone)]
+pub struct CoordinatorClient {
+    tx_leader: mpsc::Sender<LeaderCmd>,
+    next_id: Arc<AtomicU64>,
+}
+
+impl CoordinatorClient {
+    /// Submit one request under an explicit lifecycle context.
+    pub fn submit_with(
+        &self,
+        network: &str,
+        n_images: usize,
+        ctx: RequestCtx,
+    ) -> Result<ResponseHandle> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let req = InferenceRequest::with_ctx(id, network, n_images, ctx);
+        let (tx, rx) = mpsc::channel();
+        self.tx_leader
+            .send(LeaderCmd::Submit(req, tx))
+            .map_err(|_| anyhow::anyhow!("coordinator is shut down"))?;
+        Ok(ResponseHandle { rx })
+    }
+}
+
 /// The edge-serving coordinator (scheduler + heterogeneous lane pool).
 pub struct Coordinator {
     tx_leader: mpsc::Sender<LeaderCmd>,
     metrics: Arc<Mutex<MetricsRegistry>>,
-    next_id: AtomicU64,
+    next_id: Arc<AtomicU64>,
     started: Instant,
     lanes: usize,
     lane_names: Vec<String>,
@@ -252,7 +281,7 @@ impl Coordinator {
         Ok(Coordinator {
             tx_leader,
             metrics,
-            next_id: AtomicU64::new(1),
+            next_id: Arc::new(AtomicU64::new(1)),
             started: Instant::now(),
             lanes: n_lanes,
             lane_names,
@@ -271,21 +300,37 @@ impl Coordinator {
         &self.lane_names
     }
 
-    /// Submit one request; returns a handle resolving when its batch has
-    /// executed.
+    /// A cloneable, thread-safe submission handle (closed-loop clients
+    /// hold one per thread).
+    pub fn client(&self) -> CoordinatorClient {
+        CoordinatorClient {
+            tx_leader: self.tx_leader.clone(),
+            next_id: self.next_id.clone(),
+        }
+    }
+
+    /// Submit one best-effort request arriving now; returns a handle
+    /// resolving when its batch has executed.
     pub fn submit(
         &self,
         network: &str,
         n_images: usize,
         seed: u64,
     ) -> Result<ResponseHandle> {
-        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let req = InferenceRequest::new(id, network, n_images, seed);
-        let (tx, rx) = mpsc::channel();
-        self.tx_leader
-            .send(LeaderCmd::Submit(req, tx))
-            .map_err(|_| anyhow::anyhow!("coordinator is shut down"))?;
-        Ok(ResponseHandle { rx })
+        self.submit_with(network, n_images, RequestCtx::new(seed))
+    }
+
+    /// Submit one request under an explicit lifecycle context — the
+    /// deadline-aware path: the caller stamps the (scheduled) arrival,
+    /// absolute deadline and priority class, and the context flows
+    /// intact through batching, routing, execution and telemetry.
+    pub fn submit_with(
+        &self,
+        network: &str,
+        n_images: usize,
+        ctx: RequestCtx,
+    ) -> Result<ResponseHandle> {
+        self.client().submit_with(network, n_images, ctx)
     }
 
     /// Submit and block for the response.

@@ -16,12 +16,42 @@ use crate::util::Rng;
 
 /// Per-device measurement rows: one Summary per layer plus the total,
 /// with the total's run-to-run variation statistics (CV + bootstrap CI
-/// of the mean — the quantitative form of the paper's stability claim).
+/// of the mean — the quantitative form of the paper's stability claim)
+/// and the per-run whole-network latency samples behind the deadline-
+/// attainment restatement of that claim.
 #[derive(Debug, Clone)]
 pub struct DeviceRows {
     pub per_layer: Vec<Summary>,
     pub total: Summary,
     pub total_var: Variation,
+    /// Whole-network latency of each measured run, seconds.
+    pub total_time_s: Vec<f64>,
+}
+
+impl DeviceRows {
+    /// Fraction of measured runs whose whole-network latency met a
+    /// per-inference deadline of `budget_s` — the variation verdict as
+    /// a deadline verdict: at a budget the stable device clears, the
+    /// noisy device's tail misses.
+    pub fn attainment_at(&self, budget_s: f64) -> f64 {
+        if self.total_time_s.is_empty() {
+            return 1.0;
+        }
+        let met = self
+            .total_time_s
+            .iter()
+            .filter(|t| **t <= budget_s)
+            .count();
+        met as f64 / self.total_time_s.len() as f64
+    }
+
+    /// Mean whole-network latency over the measured runs, seconds.
+    pub fn mean_time_s(&self) -> f64 {
+        if self.total_time_s.is_empty() {
+            return 0.0;
+        }
+        self.total_time_s.iter().sum::<f64>() / self.total_time_s.len() as f64
+    }
 }
 
 /// The full Table II for one network.
@@ -66,6 +96,7 @@ fn fpga_rows(
     let mut per_layer_samples: Vec<Vec<f64>> =
         vec![Vec::with_capacity(runs); net.layers.len()];
     let mut total_samples = Vec::with_capacity(runs);
+    let mut time_samples = Vec::with_capacity(runs);
     for _ in 0..runs {
         let mut ops = 0u64;
         let mut time = 0.0;
@@ -79,11 +110,13 @@ fn fpga_rows(
         }
         let gops = ops as f64 / time / 1e9;
         total_samples.push(gops / (energy / time));
+        time_samples.push(time);
     }
     DeviceRows {
         per_layer: per_layer_samples.iter().map(|s| Summary::of(s)).collect(),
         total: Summary::of(&total_samples),
         total_var: variation_of(&total_samples, seed),
+        total_time_s: time_samples,
     }
 }
 
@@ -99,6 +132,7 @@ fn gpu_rows(
     let mut per_layer_samples: Vec<Vec<f64>> =
         vec![Vec::with_capacity(runs); net.layers.len()];
     let mut total_samples = Vec::with_capacity(runs);
+    let mut time_samples = Vec::with_capacity(runs);
     for _ in 0..runs {
         let layer_runs =
             gpu::simulate_gpu_network(net, board, &opts, &mut throttle, &mut rng);
@@ -113,11 +147,13 @@ fn gpu_rows(
         }
         let gops = ops as f64 / time / 1e9;
         total_samples.push(gops / (energy / time));
+        time_samples.push(time);
     }
     DeviceRows {
         per_layer: per_layer_samples.iter().map(|s| Summary::of(s)).collect(),
         total: Summary::of(&total_samples),
         total_var: variation_of(&total_samples, seed),
+        total_time_s: time_samples,
     }
 }
 
@@ -147,6 +183,18 @@ pub fn render(data: &Table2Data) -> String {
             v.ci_hi
         ));
     }
+    // the variation rows restated as a deadline row: a per-inference
+    // budget 10% above the FPGA's mean latency — headroom the stable
+    // FPGA always clears, while the GPU's noisy/thermal tail decides
+    // its own attainment
+    let budget = 1.1 * data.fpga.mean_time_s();
+    s.push_str(&format!(
+        "deadline @ {:.2} ms (fpga mean +10%): FPGA att {:>5.1}%   GPU att \
+         {:>5.1}%\n",
+        budget * 1e3,
+        data.fpga.attainment_at(budget) * 100.0,
+        data.gpu.attainment_at(budget) * 100.0,
+    ));
     s
 }
 
@@ -202,6 +250,28 @@ mod tests {
         );
         // ...but not all of them
         assert!(gpu_wins < d.fpga.per_layer.len());
+    }
+
+    #[test]
+    fn deadline_attainment_restates_the_stability_claim() {
+        let d = data("mnist");
+        assert_eq!(d.fpga.total_time_s.len(), 50, "one sample per run");
+        // at a budget 10% above the FPGA's own mean, the jitter-free
+        // FPGA always makes it; the GPU's noisy tail decides its fate
+        let budget = 1.1 * d.fpga.mean_time_s();
+        let fpga_att = d.fpga.attainment_at(budget);
+        let gpu_att = d.gpu.attainment_at(budget);
+        assert_eq!(fpga_att, 1.0, "±0.6% jitter inside a 10% margin");
+        assert!(
+            fpga_att >= gpu_att,
+            "FPGA attainment {fpga_att} must be >= GPU {gpu_att} at equal \
+             deadlines"
+        );
+        // attainment is monotone in the budget and hits the extremes
+        assert_eq!(d.gpu.attainment_at(f64::INFINITY), 1.0);
+        assert_eq!(d.gpu.attainment_at(0.0), 0.0);
+        let s = render(&d);
+        assert!(s.contains("deadline @"), "{s}");
     }
 
     #[test]

@@ -56,20 +56,31 @@ COMMANDS:
   loadtest  [--scenario NAME|FILE] [--trials N] [--requests N] [--seed S]
             [--backends fpga,gpu,cpu] [--queue-depth D] [--executors E]
             [--record FILE] [--replay FILE] [--no-shard] [--smoke]
-                             scenario-driven open-loop load generation
-                             against the backend pool, repeated over N
-                             seeded trials, with the paper's Table-2-
-                             style run-to-run-variation verdict: per-
-                             backend p50/p95/p99/p99.9 (coordinated-
-                             omission corrected), SLO attainment, and
-                             device-latency CV columns.  --scenario is a
+            [--closed N] [--think-ms T] [--deadline-ms D]
+                             scenario-driven load generation against the
+                             backend pool, repeated over N seeded
+                             trials, with the paper's Table-2-style run-
+                             to-run-variation verdict: per-backend
+                             p50/p95/p99/p99.9 (coordinated-omission
+                             corrected), SLO + deadline attainment with
+                             the shed / served-late split, and device-
+                             latency CV columns.  Every request carries
+                             a deadline + priority class from the
+                             scenario; infeasible ones are shed at
+                             intake (EDF scheduling, see DESIGN.md
+                             §Deadline scheduling).  --scenario is a
                              built-in (steady|burst|diurnal|flash) or a
                              JSON scenario file; --record writes the
                              materialized trace (a shareable artifact),
                              --replay drives a recorded trace instead of
                              generating one; --no-shard keeps per-network
                              ordering (batches stop spreading over the
-                             pool); --smoke is the short CI mode
+                             pool); --closed N drives N closed-loop
+                             clients with --think-ms of think time
+                             instead of the open-loop schedule;
+                             --deadline-ms overrides the scenario's
+                             relative deadline; --smoke is the short CI
+                             mode
   quant     [--network NET] [--samples N] [--seed S]
             [--bits B --frac F] [--export]
                              fixed-point quantized inference: sweep
@@ -296,6 +307,11 @@ fn main() -> Result<()> {
             let default_requests =
                 if smoke { 24 } else { scenario.requests };
             scenario.requests = flags.get("requests", default_requests)?;
+            if flags.has("deadline-ms") {
+                let d_ms: f64 = flags.get("deadline-ms", 0.0)?;
+                anyhow::ensure!(d_ms > 0.0, "--deadline-ms must be positive");
+                scenario.deadline_s = Some(d_ms / 1e3);
+            }
             let trials =
                 flags.get("trials", if smoke { 1 } else { 5usize })?;
             let trace = if flags.has("replay") {
@@ -319,6 +335,8 @@ fn main() -> Result<()> {
             }
             backends.max_queue_depth =
                 flags.get("queue-depth", backends.max_queue_depth)?;
+            let think_ms: f64 = flags.get("think-ms", 0.0)?;
+            anyhow::ensure!(think_ms >= 0.0, "--think-ms must be >= 0");
             let report = run_loadtest(
                 &trace,
                 &LoadtestOpts {
@@ -327,6 +345,8 @@ fn main() -> Result<()> {
                     executors: flags.get("executors", 0usize)?,
                     trials,
                     shard_batches: !flags.has("no-shard"),
+                    closed: flags.get("closed", 0usize)?,
+                    think: Duration::from_secs_f64(think_ms / 1e3),
                 },
             )?;
             print!("{}", report.render());

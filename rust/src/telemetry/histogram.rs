@@ -201,6 +201,111 @@ pub fn nearest_rank(sorted: &[f64], p: f64) -> f64 {
     sorted[rank.min(sorted.len()) - 1]
 }
 
+/// One time slice of a [`WindowedHistogram`].
+#[derive(Debug, Clone)]
+struct WindowShard {
+    /// Which absolute slice (`floor(t / slice_s)`) the shard currently
+    /// holds; `u64::MAX` = never written.
+    epoch: u64,
+    hist: LogHistogram,
+}
+
+/// Time-sliced latency histogram — a ring of [`LogHistogram`] shards,
+/// one per `slice_s` of run time, holding the most recent `len` slices
+/// at O(len) memory.  A single all-run histogram answers "what was the
+/// p99" but not "*when* did the tail happen"; the ring keeps enough
+/// time structure to localize a deadline-miss burst (the drift column:
+/// worst-window p99 over best-window p99) without reintroducing
+/// unbounded per-request storage.
+#[derive(Debug, Clone)]
+pub struct WindowedHistogram {
+    slice_s: f64,
+    ring: Vec<WindowShard>,
+    /// Fresh shard template (cloning beats re-deriving the geometry).
+    template: LogHistogram,
+}
+
+impl WindowedHistogram {
+    /// `len` slices of `slice_s` seconds over the latency-default
+    /// geometry.
+    pub fn latency_default(slice_s: f64, len: usize) -> Self {
+        Self::new(slice_s, len, LogHistogram::latency_default())
+    }
+
+    pub fn new(slice_s: f64, len: usize, template: LogHistogram) -> Self {
+        assert!(slice_s > 0.0, "bad window slice");
+        assert!(len >= 2, "a drift needs at least two windows");
+        WindowedHistogram {
+            slice_s,
+            ring: vec![
+                WindowShard {
+                    epoch: u64::MAX,
+                    hist: template.clone(),
+                };
+                len
+            ],
+            template,
+        }
+    }
+
+    /// Record one sample observed `t_s` seconds into the run.
+    pub fn record(&mut self, t_s: f64, v: f64) {
+        let epoch = (t_s.max(0.0) / self.slice_s) as u64;
+        let slot = (epoch as usize) % self.ring.len();
+        let shard = &mut self.ring[slot];
+        if shard.epoch != epoch {
+            // the ring wrapped: this slot's old slice ages out
+            shard.hist = self.template.clone();
+            shard.epoch = epoch;
+        }
+        shard.hist.record(v);
+    }
+
+    /// Populated windows in time order: `(window start seconds,
+    /// histogram)`.
+    pub fn windows(&self) -> Vec<(f64, &LogHistogram)> {
+        let mut live: Vec<(u64, &LogHistogram)> = self
+            .ring
+            .iter()
+            .filter(|s| s.epoch != u64::MAX && s.hist.count() > 0)
+            .map(|s| (s.epoch, &s.hist))
+            .collect();
+        live.sort_by_key(|(e, _)| *e);
+        live.into_iter()
+            .map(|(e, h)| (e as f64 * self.slice_s, h))
+            .collect()
+    }
+
+    /// Drift of the tail across the retained windows: worst-window p99
+    /// over best-window p99 (`1.0` with fewer than two populated
+    /// windows — nothing to drift between).  A steady run reads ≈ 1;
+    /// a deadline-miss burst confined to one slice reads ≫ 1.
+    pub fn drift(&self) -> f64 {
+        let p99s: Vec<f64> = self
+            .windows()
+            .iter()
+            .map(|(_, h)| h.quantile(99.0))
+            .filter(|q| *q > 0.0)
+            .collect();
+        if p99s.len() < 2 {
+            return 1.0;
+        }
+        let worst = p99s.iter().cloned().fold(f64::MIN, f64::max);
+        let best = p99s.iter().cloned().fold(f64::MAX, f64::min);
+        worst / best
+    }
+
+    /// All retained windows merged (the whole-run view of what the ring
+    /// still holds).
+    pub fn merged(&self) -> LogHistogram {
+        let mut out = self.template.clone();
+        for (_, h) in self.windows() {
+            out.merge(h);
+        }
+        out
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -331,5 +436,46 @@ mod tests {
         let mut a = LogHistogram::new(1e-6, 1.0, 0.02);
         let b = LogHistogram::new(1e-3, 1.0, 0.02);
         a.merge(&b);
+    }
+
+    #[test]
+    fn windowed_slices_by_time_and_localizes_a_burst() {
+        let mut w = WindowedHistogram::latency_default(0.5, 8);
+        assert_eq!(w.drift(), 1.0, "empty ring has nothing to drift");
+        // steady 1 ms traffic for 2 s …
+        for i in 0..200 {
+            w.record(i as f64 * 0.01, 0.001);
+        }
+        assert_eq!(w.windows().len(), 4, "2 s at 0.5 s slices");
+        assert!((w.drift() - 1.0).abs() < 1e-9, "steady traffic: no drift");
+        // … then a tail burst confined to one later slice
+        for _ in 0..50 {
+            w.record(2.2, 0.080);
+        }
+        assert_eq!(w.windows().len(), 5);
+        let drift = w.drift();
+        assert!(drift > 10.0, "an 80 ms burst over 1 ms steady: drift {drift}");
+        // the burst is localizable: exactly one window carries the tail
+        let hot: Vec<f64> = w
+            .windows()
+            .iter()
+            .filter(|(_, h)| h.quantile(99.0) > 0.01)
+            .map(|(t, _)| *t)
+            .collect();
+        assert_eq!(hot, vec![2.0], "burst pinned to the [2.0, 2.5) slice");
+        // merged view equals the sum of the windows
+        assert_eq!(w.merged().count(), 250);
+    }
+
+    #[test]
+    fn windowed_ring_ages_out_old_slices() {
+        let mut w = WindowedHistogram::latency_default(1.0, 4);
+        w.record(0.5, 0.001); // slice 0
+        for t in [1.5, 2.5, 3.5, 4.5] {
+            w.record(t, 0.002); // slices 1-4; slice 4 evicts slice 0
+        }
+        let starts: Vec<f64> = w.windows().iter().map(|(t, _)| *t).collect();
+        assert_eq!(starts, vec![1.0, 2.0, 3.0, 4.0], "slice 0 aged out");
+        assert_eq!(w.merged().count(), 4);
     }
 }

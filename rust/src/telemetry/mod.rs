@@ -7,6 +7,9 @@
 //!   ([`LogHistogram::record_corrected`]).  This replaced the
 //!   unbounded `Vec<f64>` the serving report used to sort per query
 //!   (see DESIGN.md §Telemetry).
+//! * [`WindowedHistogram`] — a ring of time-sliced histogram shards:
+//!   the drift column that localizes a deadline-miss burst in time at
+//!   O(ring) memory.
 //! * [`SloCounter`] — deadline attainment as two integers.
 //! * [`variation`](variation_of) — repeated-trial coefficient of
 //!   variation and seeded-bootstrap confidence intervals over
@@ -18,6 +21,6 @@ mod histogram;
 mod slo;
 mod variation;
 
-pub use histogram::{nearest_rank, LogHistogram};
+pub use histogram::{nearest_rank, LogHistogram, WindowedHistogram};
 pub use slo::SloCounter;
 pub use variation::{cv_of, variation_of, weighted_cv, Variation};

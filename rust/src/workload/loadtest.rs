@@ -1,30 +1,44 @@
-//! Open-loop loadtest — the paper's run-to-run-variation verdict as a
-//! live experiment.
+//! Loadtest driver — the paper's run-to-run-variation verdict as a
+//! live experiment, now deadline-aware end to end.
 //!
-//! A [`Trace`] is driven against a fresh coordinator once per trial:
-//! requests are submitted at their *scheduled* timestamps (never gated
-//! on responses — open loop), and each request's latency is measured
-//! from its scheduled arrival, so generator lag is charged to the
-//! system rather than hidden (the open-loop form of coordinated-
-//! omission correction; see DESIGN.md §Telemetry).  Each trial re-seeds
-//! the device measurement-noise streams, so trials are independent
-//! measurements of the same workload — exactly the repeated-run
-//! campaign behind Table II, but through the serving stack.
+//! **Open loop** (default): a [`Trace`] is driven against a fresh
+//! coordinator once per trial.  Each event becomes a [`RequestCtx`]
+//! stamped with its *scheduled* arrival — the context the whole stack
+//! charges latency from — so generator lag counts against the system
+//! (the open-loop form of coordinated-omission correction; before
+//! `RequestCtx` existed the loadtest kept a side-channel lag term the
+//! coordinator never saw).  Deadlines and priority classes ride the
+//! same context: the scheduler sheds infeasible requests at intake and
+//! EDF-orders the rest.
+//!
+//! **Closed loop** (`--closed N --think-ms T`): N clients each keep one
+//! request in flight, think `T` ms between completions, and draw the
+//! same trace events (mix, seeds, classes, relative deadlines) with
+//! arrivals stamped at submission.  Same context type, same verdict
+//! table — the ROADMAP's think-time loop without a second code path.
+//!
+//! Each trial re-seeds the device measurement-noise streams, so trials
+//! are independent measurements of the same workload — exactly the
+//! repeated-run campaign behind Table II, but through the serving
+//! stack.
 //!
 //! The verdict aggregates per lane: request-latency quantiles (merged
-//! histogram shards), SLO attainment, pooled per-image device-latency
-//! CV (the stability metric — FPGA ≈ clock jitter, GPU ≈ DVFS +
-//! measurement noise), and across-trial throughput with bootstrap CIs.
+//! histogram shards), SLO attainment, **deadline attainment with the
+//! shed / served-late split** (shed-early at intake vs completed past
+//! the deadline — the split that lets the FPGA-vs-GPU comparison be
+//! made at a fixed attainment target), pooled per-image device-latency
+//! CV, and across-trial throughput with bootstrap CIs.
 //!
 //! Batches are sharded across the capable lanes by default: the
 //! loadtest is a per-device measurement campaign, so it wants every
 //! lane exercised rather than the per-network ordering guarantee
 //! (`LoadtestOpts::shard_batches` restores it if needed).
 
-use super::trace::Trace;
+use super::trace::{Trace, TraceEvent};
 use crate::config::{BackendCfg, QFormat};
 use crate::coordinator::{
-    BatcherConfig, Coordinator, CoordinatorConfig, LatencyReport,
+    BatcherConfig, Coordinator, CoordinatorConfig, InferenceResponse,
+    LatencyReport, RequestCtx,
 };
 use crate::stats::Welford;
 use crate::telemetry::{
@@ -32,8 +46,9 @@ use crate::telemetry::{
 };
 use crate::util::Rng;
 use anyhow::{Context, Result};
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, VecDeque};
 use std::path::PathBuf;
+use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 /// Loadtest configuration (the trace supplies the traffic).
@@ -49,6 +64,12 @@ pub struct LoadtestOpts {
     /// Split multi-request batches across the capable lanes (default:
     /// the verdict wants every device measured under the same traffic).
     pub shard_batches: bool,
+    /// Closed-loop client count; `0` = open loop (the default).  In
+    /// closed-loop mode the trace supplies the mix/seeds/deadlines and
+    /// the clients supply the pacing.
+    pub closed: usize,
+    /// Think time between a closed-loop client's completions.
+    pub think: Duration,
 }
 
 impl Default for LoadtestOpts {
@@ -59,6 +80,8 @@ impl Default for LoadtestOpts {
             executors: 0,
             trials: 5,
             shard_batches: true,
+            closed: 0,
+            think: Duration::ZERO,
         }
     }
 }
@@ -74,8 +97,14 @@ pub struct LaneVerdict {
     /// Request-latency quantiles (coordinated-omission corrected,
     /// merged across trials).
     pub latency: LatencyReport,
-    /// SLO attainment in [0, 1].
+    /// SLO attainment in [0, 1] (wall latency vs the scenario SLO).
     pub slo_attainment: f64,
+    /// Deadline-bearing requests this lane completed on time
+    /// (edge-charged completion ≤ deadline).
+    pub deadline_met: u64,
+    /// Deadline-bearing requests this lane completed *past* their
+    /// deadline (the serve-late half of the shed/served-late split).
+    pub served_late: u64,
     /// Mean device latency per image, seconds.
     pub mean_device_per_image_s: f64,
     /// Pooled CV of the per-image device latency — the run-to-run
@@ -83,6 +112,19 @@ pub struct LaneVerdict {
     pub latency_cv: f64,
     /// Across-trial throughput (img/s): mean/CV/bootstrap CI.
     pub throughput: Variation,
+}
+
+impl LaneVerdict {
+    /// Deadline attainment in [0, 1] over the lane's deadline-bearing
+    /// completions (vacuous 1.0 when the traffic carried no deadlines).
+    pub fn deadline_attainment(&self) -> f64 {
+        let total = self.deadline_met + self.served_late;
+        if total == 0 {
+            1.0
+        } else {
+            self.deadline_met as f64 / total as f64
+        }
+    }
 }
 
 /// The FPGA-vs-GPU stability comparison, when both lanes served work.
@@ -96,6 +138,17 @@ pub struct VariationVerdict {
     pub fpga_wins: bool,
 }
 
+/// The stability claim restated as a deadline claim: at equal deadlines
+/// the predictable device attains at least as much.
+#[derive(Debug, Clone)]
+pub struct DeadlineVerdict {
+    pub fpga_lane: String,
+    pub fpga_attainment: f64,
+    pub gpu_lane: String,
+    pub gpu_attainment: f64,
+    pub fpga_wins: bool,
+}
+
 /// Aggregated loadtest outcome.
 #[derive(Debug, Clone)]
 pub struct LoadtestReport {
@@ -103,8 +156,19 @@ pub struct LoadtestReport {
     pub trials: usize,
     pub requests_per_trial: usize,
     pub total_requests: u64,
-    /// Requests turned away by admission control (the coordinator's
-    /// own counter — the intended load-shedding path).
+    /// Closed-loop client count (0 = open loop).
+    pub closed: usize,
+    /// Requests that resolved with a response (on time or late).
+    pub served: u64,
+    /// Requests shed at intake: their deadline was already infeasible
+    /// given queue depth × predicted cost (shed-early, the coordinator's
+    /// own counter).
+    pub shed: u64,
+    /// Served requests that completed past their deadline (summed over
+    /// lanes) — the other half of the shed/served-late split.
+    pub served_late: u64,
+    /// Requests turned away by overload admission control (the deferred
+    /// queue outgrew the class budget).
     pub rejected: u64,
     /// Requests whose replies were dropped for any *other* reason
     /// (backend execution failure) — nonzero means infrastructure
@@ -119,6 +183,7 @@ pub struct LoadtestReport {
     pub mean_wall_s: f64,
     pub lanes: Vec<LaneVerdict>,
     pub verdict: Option<VariationVerdict>,
+    pub deadline_verdict: Option<DeadlineVerdict>,
     /// One summary line per trial (requests, wall, img/s, p99).
     pub trial_lines: Vec<String>,
 }
@@ -130,6 +195,8 @@ struct LaneAgg {
     energy_j: f64,
     hist: LogHistogram,
     slo: SloCounter,
+    deadline_met: u64,
+    served_late: u64,
     /// Per-image device latency, split per (network, batch size) so
     /// neither precision twins' different service times nor batch-size
     /// amortization (the GPU's launch overhead shrinking per image as
@@ -148,6 +215,8 @@ impl LaneAgg {
             energy_j: 0.0,
             hist: LogHistogram::latency_default(),
             slo: SloCounter::new(slo_s),
+            deadline_met: 0,
+            served_late: 0,
             dev_per_image: BTreeMap::new(),
             dev_all: Welford::new(),
             throughput_by_trial: Vec::new(),
@@ -165,6 +234,89 @@ fn quantiles(h: &LogHistogram) -> LatencyReport {
     }
 }
 
+/// The request context one trace event submits under: arrival is the
+/// caller-chosen charge point (scheduled target in open loop, "now" in
+/// closed loop), the absolute deadline and class come off the event.
+fn event_ctx(e: &TraceEvent, arrival: Instant) -> RequestCtx {
+    RequestCtx {
+        arrival,
+        deadline: e
+            .deadline_s
+            .map(|d| arrival + Duration::from_secs_f64(d)),
+        class: e.class,
+        seed: e.seed,
+    }
+}
+
+/// One trial's raw outcomes: per request, the (network, n_images) it
+/// asked for and how it resolved.
+type Outcome = (String, usize, Result<InferenceResponse>);
+
+/// Open-loop submission at the scheduled timestamps; latency is charged
+/// from the scheduled arrival via the request context itself.
+fn drive_open_loop(coord: &Coordinator, trace: &Trace) -> Result<Vec<Outcome>> {
+    let t0 = Instant::now();
+    let mut pending = Vec::with_capacity(trace.events.len());
+    for e in &trace.events {
+        let target = t0 + Duration::from_secs_f64(e.t_s);
+        let now = Instant::now();
+        if target > now {
+            std::thread::sleep(target - now);
+        }
+        // generator lag is charged to the measurement: the context's
+        // arrival stays the *scheduled* instant (coordinated omission)
+        pending.push((
+            e,
+            coord.submit_with(&e.network, e.n_images, event_ctx(e, target))?,
+        ));
+    }
+    Ok(pending
+        .into_iter()
+        .map(|(e, h)| (e.network.clone(), e.n_images, h.wait()))
+        .collect())
+}
+
+/// Closed-loop driver: `clients` threads each keep one request in
+/// flight over the shared event queue, thinking `think` between
+/// completions.
+fn drive_closed_loop(
+    coord: &Coordinator,
+    trace: &Trace,
+    clients: usize,
+    think: Duration,
+) -> Vec<Outcome> {
+    let queue: Mutex<VecDeque<&TraceEvent>> =
+        Mutex::new(trace.events.iter().collect());
+    let results: Mutex<Vec<Outcome>> =
+        Mutex::new(Vec::with_capacity(trace.events.len()));
+    std::thread::scope(|scope| {
+        for _ in 0..clients.max(1) {
+            let client = coord.client();
+            let queue = &queue;
+            let results = &results;
+            scope.spawn(move || loop {
+                let next = queue.lock().unwrap().pop_front();
+                let Some(e) = next else { break };
+                let res = client
+                    .submit_with(
+                        &e.network,
+                        e.n_images,
+                        event_ctx(e, Instant::now()),
+                    )
+                    .and_then(|h| h.wait());
+                results
+                    .lock()
+                    .unwrap()
+                    .push((e.network.clone(), e.n_images, res));
+                if !think.is_zero() {
+                    std::thread::sleep(think);
+                }
+            });
+        }
+    });
+    results.into_inner().unwrap()
+}
+
 /// Run the trace `opts.trials` times and aggregate the verdict.
 pub fn run_loadtest(trace: &Trace, opts: &LoadtestOpts) -> Result<LoadtestReport> {
     anyhow::ensure!(opts.trials >= 1, "loadtest needs at least one trial");
@@ -176,7 +328,9 @@ pub fn run_loadtest(trace: &Trace, opts: &LoadtestOpts) -> Result<LoadtestReport
     let mut overall = LogHistogram::latency_default();
     let mut overall_slo = SloCounter::new(trace.slo_s);
     let mut lanes: BTreeMap<String, LaneAgg> = BTreeMap::new();
+    let mut served = 0u64;
     let mut rejected = 0u64;
+    let mut shed = 0u64;
     let mut lost = 0u64;
     let mut deferred = 0u64;
     let mut walls = Vec::with_capacity(opts.trials);
@@ -200,28 +354,19 @@ pub fn run_loadtest(trace: &Trace, opts: &LoadtestOpts) -> Result<LoadtestReport
         })
         .with_context(|| format!("starting the pool for trial {trial}"))?;
 
-        // open-loop submission at the scheduled timestamps
         let t0 = Instant::now();
-        let mut pending = Vec::with_capacity(trace.events.len());
-        for e in &trace.events {
-            let target = t0 + Duration::from_secs_f64(e.t_s);
-            let now = Instant::now();
-            if target > now {
-                std::thread::sleep(target - now);
-            }
-            // generator lag is charged to the measurement (coordinated
-            // omission: latency counts from the *scheduled* arrival)
-            let lag = Instant::now()
-                .saturating_duration_since(target)
-                .as_secs_f64();
-            pending.push((e, lag, coord.submit(&e.network, e.n_images, e.seed)?));
-        }
+        let outcomes = if opts.closed > 0 {
+            drive_closed_loop(&coord, trace, opts.closed, opts.think)
+        } else {
+            drive_open_loop(&coord, trace)?
+        };
         let mut trial_hist = LogHistogram::latency_default();
         let mut trial_errors = 0u64;
-        for (e, lag, handle) in pending {
-            match handle.wait() {
+        for (network, n_images, outcome) in outcomes {
+            match outcome {
                 Ok(resp) => {
-                    let latency = lag + resp.latency_s;
+                    served += 1;
+                    let latency = resp.latency_s;
                     overall.record(latency);
                     overall_slo.record(latency);
                     trial_hist.record(latency);
@@ -230,16 +375,22 @@ pub fn run_loadtest(trace: &Trace, opts: &LoadtestOpts) -> Result<LoadtestReport
                         .or_insert_with(|| LaneAgg::new(trace.slo_s));
                     lane.hist.record(latency);
                     lane.slo.record(latency);
+                    match resp.deadline_met {
+                        Some(true) => lane.deadline_met += 1,
+                        Some(false) => lane.served_late += 1,
+                        None => {}
+                    }
                     let per_image =
-                        resp.device_time_s / e.n_images.max(1) as f64;
+                        resp.device_time_s / n_images.max(1) as f64;
                     lane.dev_per_image
-                        .entry((e.network.clone(), resp.batch_size))
+                        .entry((network, resp.batch_size))
                         .or_default()
                         .push(per_image);
                     lane.dev_all.push(per_image);
                 }
-                // dropped reply: admission rejection or backend failure
-                // (told apart below via the coordinator's own counter)
+                // dropped reply: shed at intake, overload rejection or
+                // backend failure (told apart below via the
+                // coordinator's own counters)
                 Err(_) => trial_errors += 1,
             }
         }
@@ -247,11 +398,15 @@ pub fn run_loadtest(trace: &Trace, opts: &LoadtestOpts) -> Result<LoadtestReport
         walls.push(wall);
 
         let report = coord.report_for_wall(wall);
-        // the coordinator knows how many it *chose* to reject; any
-        // further dropped replies were execution failures
-        let trial_rejected = report.rejected.min(trial_errors);
+        // the coordinator knows how many it *chose* to turn away (shed
+        // = deadline infeasible, rejected = overload); any further
+        // dropped replies were execution failures
+        let trial_shed = report.shed.min(trial_errors);
+        let trial_rejected =
+            report.rejected.min(trial_errors - trial_shed);
+        shed += trial_shed;
         rejected += trial_rejected;
-        lost += trial_errors - trial_rejected;
+        lost += trial_errors - trial_shed - trial_rejected;
         deferred += report.deferred;
         for b in &report.per_backend {
             let lane = lanes
@@ -264,7 +419,7 @@ pub fn run_loadtest(trace: &Trace, opts: &LoadtestOpts) -> Result<LoadtestReport
         }
         trial_lines.push(format!(
             "trial {trial}: {} requests  wall {:.3} s  {:.1} img/s  \
-             p99 {:.2} ms  rejected {trial_rejected}",
+             p99 {:.2} ms  shed {trial_shed}  rejected {trial_rejected}",
             trace.events.len(),
             wall,
             report.images_per_s,
@@ -281,6 +436,8 @@ pub fn run_loadtest(trace: &Trace, opts: &LoadtestOpts) -> Result<LoadtestReport
             energy_j: l.energy_j,
             latency: quantiles(&l.hist),
             slo_attainment: l.slo.attainment(),
+            deadline_met: l.deadline_met,
+            served_late: l.served_late,
             mean_device_per_image_s: l.dev_all.mean(),
             latency_cv: weighted_cv(l.dev_per_image.values()),
             throughput: variation_of(&l.throughput_by_trial, trace.seed),
@@ -304,12 +461,32 @@ pub fn run_loadtest(trace: &Trace, opts: &LoadtestOpts) -> Result<LoadtestReport
         }),
         _ => None,
     };
+    // the same comparison on the deadline axis, when deadlines flowed
+    let with_deadlines = |l: &&LaneVerdict| l.deadline_met + l.served_late > 0;
+    let deadline_verdict = match (
+        find("fpga").filter(with_deadlines),
+        find("gpu").filter(with_deadlines),
+    ) {
+        (Some(f), Some(g)) => Some(DeadlineVerdict {
+            fpga_lane: f.name.clone(),
+            fpga_attainment: f.deadline_attainment(),
+            gpu_lane: g.name.clone(),
+            gpu_attainment: g.deadline_attainment(),
+            fpga_wins: f.deadline_attainment() >= g.deadline_attainment(),
+        }),
+        _ => None,
+    };
 
+    let served_late: u64 = lane_verdicts.iter().map(|l| l.served_late).sum();
     Ok(LoadtestReport {
         scenario: trace.scenario.clone(),
         trials: opts.trials,
         requests_per_trial: trace.events.len(),
         total_requests: (trace.events.len() * opts.trials) as u64,
+        closed: opts.closed,
+        served,
+        shed,
+        served_late,
         rejected,
         lost,
         deferred,
@@ -319,6 +496,7 @@ pub fn run_loadtest(trace: &Trace, opts: &LoadtestOpts) -> Result<LoadtestReport
         mean_wall_s: walls.iter().sum::<f64>() / walls.len() as f64,
         lanes: lane_verdicts,
         verdict,
+        deadline_verdict,
         trial_lines,
     })
 }
@@ -327,8 +505,14 @@ impl LoadtestReport {
     /// Render the verdict table.  Lane rows are stable `key value`
     /// pairs (the CI smoke job parses them).
     pub fn render(&self) -> String {
+        let mode = if self.closed > 0 {
+            format!("closed loop × {} clients", self.closed)
+        } else {
+            "open loop".to_string()
+        };
         let mut out = format!(
-            "== loadtest: scenario {}  ({} trials × {} requests, SLO {:.0} ms) ==\n",
+            "== loadtest: scenario {}  ({} trials × {} requests, {mode}, \
+             SLO {:.0} ms) ==\n",
             self.scenario,
             self.trials,
             self.requests_per_trial,
@@ -340,20 +524,29 @@ impl LoadtestReport {
         }
         out.push_str(&format!(
             "overall: p50 {:.2}  p95 {:.2}  p99 {:.2}  p99.9 {:.2} ms  \
-             (coordinated-omission corrected)  slo {:.1}%  rejected {}  \
-             deferred {}\n",
+             (coordinated-omission corrected)  slo {:.1}%  shed {}  \
+             served_late {}  rejected {}  deferred {}\n",
             self.latency.p50_s * 1e3,
             self.latency.p95_s * 1e3,
             self.latency.p99_s * 1e3,
             self.latency.p999_s * 1e3,
             self.slo_attainment * 100.0,
+            self.shed,
+            self.served_late,
             self.rejected,
             self.deferred,
+        ));
+        // the lifecycle must close: every submitted request is exactly
+        // one of served / shed / rejected / lost (CI asserts this)
+        out.push_str(&format!(
+            "accounting: submitted {} served {} shed {} rejected {} lost {}\n",
+            self.total_requests, self.served, self.shed, self.rejected,
+            self.lost,
         ));
         if self.lost > 0 {
             out.push_str(&format!(
                 "WARNING: {} request(s) lost to backend execution failures \
-                 (not admission control) — results are incomplete\n",
+                 (not load shedding) — results are incomplete\n",
                 self.lost,
             ));
         }
@@ -361,7 +554,8 @@ impl LoadtestReport {
             out.push_str(&format!(
                 "lane {} batches {} images {} p50_ms {:.3} p95_ms {:.3} \
                  p99_ms {:.3} p999_ms {:.3} cv_pct {:.3} slo_pct {:.1} \
-                 dev_ms_img {:.3} img_s {:.1} ci95 {:.1}-{:.1} energy_j {:.3}\n",
+                 att_pct {:.1} late {} dev_ms_img {:.3} img_s {:.1} \
+                 ci95 {:.1}-{:.1} energy_j {:.3}\n",
                 l.name,
                 l.batches,
                 l.images,
@@ -371,6 +565,8 @@ impl LoadtestReport {
                 l.latency.p999_s * 1e3,
                 l.latency_cv * 100.0,
                 l.slo_attainment * 100.0,
+                l.deadline_attainment() * 100.0,
+                l.served_late,
                 l.mean_device_per_image_s * 1e3,
                 l.throughput.mean,
                 l.throughput.ci_lo,
@@ -396,6 +592,28 @@ impl LoadtestReport {
             )),
             None => out.push_str(
                 "verdict: n/a (needs both an fpga and a gpu lane with work)\n",
+            ),
+        }
+        match &self.deadline_verdict {
+            Some(d) if d.fpga_wins => out.push_str(&format!(
+                "deadline verdict: {} att {:.1}% >= {} att {:.1}% at equal \
+                 deadlines — predictability pays as attainment\n",
+                d.fpga_lane,
+                d.fpga_attainment * 100.0,
+                d.gpu_lane,
+                d.gpu_attainment * 100.0,
+            )),
+            Some(d) => out.push_str(&format!(
+                "deadline verdict: NOT reproduced — {} att {:.1}% < {} att \
+                 {:.1}%\n",
+                d.fpga_lane,
+                d.fpga_attainment * 100.0,
+                d.gpu_lane,
+                d.gpu_attainment * 100.0,
+            )),
+            None => out.push_str(
+                "deadline verdict: n/a (needs deadline-bearing traffic on \
+                 both an fpga and a gpu lane)\n",
             ),
         }
         out

@@ -7,12 +7,17 @@
 //!   process + request mix over logical networks (including precision
 //!   twins like `mnist` vs `mnist.q`) + request budget + SLO; four
 //!   built-ins (`steady`, `burst`, `diurnal`, `flash`) or a JSON file.
-//! * [`Trace`] — a scenario materialized to exact timestamps/mix/seeds,
-//!   recordable and replayable bit-for-bit (a workload is a shareable
-//!   artifact).
-//! * [`loadtest`] — drives a trace open-loop against the backend pool,
-//!   repeats it over seeded trials, and renders the paper's
-//!   Table-2-style FPGA-vs-GPU run-to-run-variation verdict from live
+//! * [`Trace`] — a scenario materialized to exact timestamps/mix/seeds
+//!   plus per-event priority classes and relative deadlines (schema v2;
+//!   v1 traces still load as best-effort traffic), recordable and
+//!   replayable bit-for-bit (a workload is a shareable artifact).
+//! * [`loadtest`] — drives a trace against the backend pool (open loop
+//!   at the scheduled arrivals, or closed loop with think time), every
+//!   request carrying its deadline/class through a
+//!   [`RequestCtx`](crate::coordinator::RequestCtx); repeats it over
+//!   seeded trials and renders the paper's Table-2-style FPGA-vs-GPU
+//!   run-to-run-variation verdict — plus its deadline restatement
+//!   (attainment with the shed / served-late split) — from live
 //!   serving telemetry.
 
 mod arrival;
@@ -22,7 +27,8 @@ mod trace;
 
 pub use arrival::{ArrivalProcess, ArrivalSampler};
 pub use loadtest::{
-    run_loadtest, LaneVerdict, LoadtestOpts, LoadtestReport, VariationVerdict,
+    run_loadtest, DeadlineVerdict, LaneVerdict, LoadtestOpts, LoadtestReport,
+    VariationVerdict,
 };
 pub use scenario::{MixEntry, Scenario};
 pub use trace::{Trace, TraceEvent};

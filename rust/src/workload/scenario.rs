@@ -7,6 +7,7 @@
 //! versionable artifact rather than a flag soup.
 
 use super::arrival::ArrivalProcess;
+use crate::coordinator::PriorityClass;
 use crate::util::{escape_json, parse_json, Json};
 use anyhow::{bail, Context, Result};
 
@@ -19,6 +20,11 @@ pub struct MixEntry {
     pub images: usize,
     /// Relative draw weight (need not sum to 1).
     pub weight: f64,
+    /// Priority class requests drawn from this entry carry.
+    pub class: PriorityClass,
+    /// Relative deadline override for this entry (seconds from the
+    /// scheduled arrival); `None` inherits [`Scenario::deadline_s`].
+    pub deadline_s: Option<f64>,
 }
 
 /// A complete traffic scenario.
@@ -33,21 +39,33 @@ pub struct Scenario {
     pub seed: u64,
     /// Latency objective for the attainment column.
     pub slo_s: f64,
+    /// Default relative deadline every request carries (seconds from
+    /// its scheduled arrival); `None` = best-effort traffic.  The
+    /// built-ins set it to their SLO, so the serving layer can act on
+    /// the target the telemetry previously only measured after the
+    /// fact.
+    pub deadline_s: Option<f64>,
 }
 
 /// The default mix: the f32 network alongside its fixed-point twin —
-/// the paper's precision axis as live traffic.
+/// the paper's precision axis as live traffic.  The twin doubles as the
+/// low-priority bulk class, so every built-in scenario exercises
+/// cross-class shedding.
 fn twin_mix() -> Vec<MixEntry> {
     vec![
         MixEntry {
             network: "mnist".into(),
             images: 2,
             weight: 0.65,
+            class: PriorityClass::Normal,
+            deadline_s: None,
         },
         MixEntry {
             network: "mnist.q".into(),
             images: 2,
             weight: 0.35,
+            class: PriorityClass::Low,
+            deadline_s: None,
         },
     ]
 }
@@ -95,6 +113,9 @@ impl Scenario {
             requests: 96,
             seed: 42,
             slo_s,
+            // the SLO is also the deadline: what telemetry measured
+            // after the fact, the scheduler now acts on
+            deadline_s: Some(slo_s),
         })
     }
 
@@ -118,6 +139,8 @@ impl Scenario {
     }
 
     /// Parse the JSON scenario schema (see `Scenario::to_json`).
+    /// `class` and the `deadline_s` fields are optional, so pre-deadline
+    /// scenario files keep parsing (as all-Normal, best-effort traffic).
     pub fn from_json(text: &str) -> Result<Scenario> {
         let v = parse_json(text)?;
         let arrival = parse_arrival(v.req("arrival")?)?;
@@ -130,6 +153,14 @@ impl Scenario {
                     network: e.req("network")?.as_str()?.to_string(),
                     images: e.req("images")?.as_usize()?,
                     weight: e.req("weight")?.as_f64()?,
+                    class: match e.get("class") {
+                        Some(c) => c.as_str()?.parse()?,
+                        None => PriorityClass::Normal,
+                    },
+                    deadline_s: match e.get("deadline_s") {
+                        Some(d) => Some(d.as_f64()?),
+                        None => None,
+                    },
                 })
             })
             .collect::<Result<Vec<_>>>()?;
@@ -145,8 +176,17 @@ impl Scenario {
             requests: v.req("requests")?.as_usize()?,
             seed: v.req("seed")?.as_u64()?,
             slo_s: v.req("slo_s")?.as_f64()?,
+            deadline_s: match v.get("deadline_s") {
+                Some(d) => Some(d.as_f64()?),
+                None => None,
+            },
         };
         anyhow::ensure!(s.requests > 0, "scenario needs at least one request");
+        anyhow::ensure!(
+            s.deadline_s.unwrap_or(1.0) > 0.0
+                && s.mix.iter().all(|e| e.deadline_s.unwrap_or(1.0) > 0.0),
+            "deadlines must be positive"
+        );
         s.arrival.sampler()?; // parameter validation
         Ok(s)
     }
@@ -158,22 +198,34 @@ impl Scenario {
             .mix
             .iter()
             .map(|e| {
+                let deadline = e
+                    .deadline_s
+                    .map(|d| format!(", \"deadline_s\": {d}"))
+                    .unwrap_or_default();
                 format!(
-                    "{{\"network\": \"{}\", \"images\": {}, \"weight\": {}}}",
+                    "{{\"network\": \"{}\", \"images\": {}, \"weight\": {}, \
+                     \"class\": \"{}\"{}}}",
                     escape_json(&e.network),
                     e.images,
-                    e.weight
+                    e.weight,
+                    e.class,
+                    deadline
                 )
             })
             .collect::<Vec<_>>()
             .join(", ");
+        let deadline = self
+            .deadline_s
+            .map(|d| format!("\n  \"deadline_s\": {d},"))
+            .unwrap_or_default();
         format!(
             "{{\n  \"name\": \"{}\",\n  \"seed\": {},\n  \"requests\": {},\n  \
-             \"slo_s\": {},\n  \"arrival\": {},\n  \"mix\": [{}]\n}}\n",
+             \"slo_s\": {},{}\n  \"arrival\": {},\n  \"mix\": [{}]\n}}\n",
             escape_json(&self.name),
             self.seed,
             self.requests,
             self.slo_s,
+            deadline,
             arrival_json(&self.arrival),
             mix
         )
@@ -304,6 +356,45 @@ mod tests {
         let loaded = Scenario::resolve(path.to_str().unwrap()).unwrap();
         assert_eq!(loaded, custom);
         assert!(Scenario::resolve("/does/not/exist.json").is_err());
+    }
+
+    #[test]
+    fn builtins_carry_deadlines_and_classes() {
+        for name in ["steady", "burst", "diurnal", "flash"] {
+            let s = Scenario::builtin(name).unwrap();
+            assert_eq!(s.deadline_s, Some(s.slo_s), "{name}: deadline = SLO");
+            assert_eq!(s.mix[0].class, PriorityClass::Normal);
+            assert_eq!(
+                s.mix[1].class,
+                PriorityClass::Low,
+                "{name}: the .q twin is the bulk class"
+            );
+        }
+    }
+
+    #[test]
+    fn pre_deadline_scenario_json_still_parses() {
+        // the PR-4 schema: no class, no deadline fields anywhere
+        let v1 = r#"{"name": "legacy", "seed": 1, "requests": 4, "slo_s": 0.1,
+            "arrival": {"kind": "poisson", "rate_hz": 10},
+            "mix": [{"network": "mnist", "images": 1, "weight": 1}]}"#;
+        let s = Scenario::from_json(v1).unwrap();
+        assert_eq!(s.deadline_s, None, "legacy traffic stays best-effort");
+        assert_eq!(s.mix[0].class, PriorityClass::Normal);
+        assert_eq!(s.mix[0].deadline_s, None);
+        // per-entry overrides parse and roundtrip
+        let mut s2 = s.clone();
+        s2.deadline_s = Some(0.05);
+        s2.mix[0].class = PriorityClass::High;
+        s2.mix[0].deadline_s = Some(0.02);
+        let re = Scenario::from_json(&s2.to_json()).unwrap();
+        assert_eq!(re, s2, "deadline/class fields roundtrip exactly");
+        // a non-positive deadline is rejected
+        let bad = r#"{"name": "x", "seed": 1, "requests": 4, "slo_s": 0.1,
+            "deadline_s": 0,
+            "arrival": {"kind": "poisson", "rate_hz": 10},
+            "mix": [{"network": "mnist", "images": 1, "weight": 1}]}"#;
+        assert!(Scenario::from_json(bad).is_err());
     }
 
     #[test]

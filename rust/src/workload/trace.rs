@@ -7,9 +7,15 @@
 //! run on another machine.
 
 use super::scenario::Scenario;
+use crate::coordinator::PriorityClass;
 use crate::util::{escape_json, parse_json, Rng};
 use anyhow::{Context, Result};
 use std::path::Path;
+
+/// Trace schema version written by [`Trace::to_json`].  v1 (PR 4) had
+/// no deadline/priority fields; v1 files still load (as best-effort,
+/// all-Normal traffic).
+const TRACE_VERSION: u64 = 2;
 
 /// One scheduled request.
 #[derive(Debug, Clone, PartialEq)]
@@ -20,6 +26,11 @@ pub struct TraceEvent {
     pub n_images: usize,
     /// Latent seed the request carries (deterministic generation).
     pub seed: u64,
+    /// Priority class (v2; v1 traces read back as Normal).
+    pub class: PriorityClass,
+    /// Relative deadline, seconds from the scheduled arrival (v2;
+    /// `None` = best-effort, and what v1 traces read back as).
+    pub deadline_s: Option<f64>,
 }
 
 /// A materialized scenario.
@@ -58,6 +69,8 @@ impl Trace {
                 // 53 bits: JSON numbers are f64, and a latent seed must
                 // survive record → replay *exactly*
                 seed: rng.next_u64() >> 11,
+                class: chosen.class,
+                deadline_s: chosen.deadline_s.or(s.deadline_s),
             });
         }
         Ok(Trace {
@@ -83,24 +96,32 @@ impl Trace {
         )
     }
 
-    /// Serialize.  f64 timestamps print shortest-roundtrip, so
-    /// record → replay reproduces the arrival schedule *exactly*.
+    /// Serialize (schema v2).  f64 timestamps and deadlines print
+    /// shortest-roundtrip, so record → replay reproduces the schedule
+    /// — including the new deadline/priority fields — *bit-exactly*.
     pub fn to_json(&self) -> String {
         let mut out = format!(
-            "{{\n  \"scenario\": \"{}\",\n  \"seed\": {},\n  \"slo_s\": {},\n  \
-             \"events\": [\n",
+            "{{\n  \"version\": {},\n  \"scenario\": \"{}\",\n  \
+             \"seed\": {},\n  \"slo_s\": {},\n  \"events\": [\n",
+            TRACE_VERSION,
             escape_json(&self.scenario),
             self.seed,
             self.slo_s
         );
         for (i, e) in self.events.iter().enumerate() {
+            let deadline = e
+                .deadline_s
+                .map(|d| format!(", \"deadline_s\": {d}"))
+                .unwrap_or_default();
             out.push_str(&format!(
                 "    {{\"t_s\": {}, \"network\": \"{}\", \"n_images\": {}, \
-                 \"seed\": {}}}{}\n",
+                 \"seed\": {}, \"class\": \"{}\"{}}}{}\n",
                 e.t_s,
                 escape_json(&e.network),
                 e.n_images,
                 e.seed,
+                e.class,
+                deadline,
                 if i + 1 < self.events.len() { "," } else { "" }
             ));
         }
@@ -110,6 +131,17 @@ impl Trace {
 
     pub fn from_json(text: &str) -> Result<Trace> {
         let v = parse_json(text)?;
+        // no "version" field = a v1 (pre-deadline) trace: it loads as
+        // best-effort all-Normal traffic, the exact semantics it was
+        // recorded under
+        let version = match v.get("version") {
+            Some(ver) => ver.as_u64()?,
+            None => 1,
+        };
+        anyhow::ensure!(
+            version <= TRACE_VERSION,
+            "trace schema v{version} is newer than this build (v{TRACE_VERSION})"
+        );
         let events = v
             .req("events")?
             .as_arr()?
@@ -120,6 +152,14 @@ impl Trace {
                     network: e.req("network")?.as_str()?.to_string(),
                     n_images: e.req("n_images")?.as_usize()?,
                     seed: e.req("seed")?.as_u64()?,
+                    class: match e.get("class") {
+                        Some(c) => c.as_str()?.parse()?,
+                        None => PriorityClass::Normal,
+                    },
+                    deadline_s: match e.get("deadline_s") {
+                        Some(d) => Some(d.as_f64()?),
+                        None => None,
+                    },
                 })
             })
             .collect::<Result<Vec<_>>>()?;
@@ -200,6 +240,51 @@ mod tests {
         let path = dir.path().join("trace.json");
         t.save(&path).unwrap();
         assert_eq!(Trace::load(&path).unwrap(), t);
+    }
+
+    #[test]
+    fn v2_deadline_and_class_fields_roundtrip_bit_exactly() {
+        let mut s = Scenario::builtin("burst").unwrap();
+        s.requests = 24;
+        // awkward (non-representable-in-decimal) deadline: the
+        // shortest-roundtrip printer must still reproduce it exactly
+        s.deadline_s = Some(0.1 + 1e-17 + std::f64::consts::PI / 62.0);
+        s.mix[0].deadline_s = Some(0.012345678901234567);
+        let t = Trace::generate(&s).unwrap();
+        assert!(t.events.iter().all(|e| e.deadline_s.is_some()));
+        assert!(t
+            .events
+            .iter()
+            .any(|e| e.class == crate::coordinator::PriorityClass::Low));
+        let replayed = Trace::from_json(&t.to_json()).unwrap();
+        assert_eq!(replayed, t, "v2 fields must survive bit-for-bit");
+        for (a, b) in t.events.iter().zip(&replayed.events) {
+            assert_eq!(a.deadline_s.map(f64::to_bits), b.deadline_s.map(f64::to_bits));
+            assert_eq!(a.class, b.class);
+        }
+    }
+
+    #[test]
+    fn v1_traces_still_load_as_best_effort() {
+        // the exact PR-4 schema: no version, no class, no deadline_s
+        let v1 = r#"{"scenario": "legacy", "seed": 7, "slo_s": 0.05,
+            "events": [
+              {"t_s": 0.001, "network": "mnist", "n_images": 2, "seed": 11},
+              {"t_s": 0.002, "network": "mnist.q", "n_images": 2, "seed": 12}
+            ]}"#;
+        let t = Trace::from_json(v1).unwrap();
+        assert_eq!(t.events.len(), 2);
+        for e in &t.events {
+            assert_eq!(e.class, crate::coordinator::PriorityClass::Normal);
+            assert_eq!(e.deadline_s, None, "v1 traffic stays best-effort");
+        }
+        // re-saving upgrades it to the current schema
+        let upgraded = t.to_json();
+        assert!(upgraded.contains("\"version\": 2"), "{upgraded}");
+        assert_eq!(Trace::from_json(&upgraded).unwrap(), t);
+        // a future schema is refused instead of misread
+        let v9 = v1.replacen("{\"scenario\"", "{\"version\": 9, \"scenario\"", 1);
+        assert!(Trace::from_json(&v9).is_err());
     }
 
     #[test]

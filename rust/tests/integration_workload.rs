@@ -1,20 +1,22 @@
 //! Workload & telemetry integration: the loadtest end to end against a
 //! synthetic artifact set — the paper's run-to-run-variation verdict as
-//! a live, asserted experiment — plus scheduler overload behaviour
-//! (admission-control rejection accounting, deferred-queue drain order,
-//! no-starvation across two networks under a bursty scenario) and
-//! trace record/replay determinism.
+//! a live, asserted experiment, and its deadline restatement (FPGA
+//! attainment >= GPU attainment at equal deadlines) — plus scheduler
+//! overload behaviour (admission-control rejection accounting, the
+//! shed-early / served-late split, deferred-queue drain order,
+//! cross-priority non-starvation, no-starvation across two networks
+//! under a bursty scenario) and trace record/replay determinism.
 
 use edgedcnn::artifacts::write_synthetic;
 use edgedcnn::config::{BackendCfg, DeviceKind};
 use edgedcnn::coordinator::{
-    BatcherConfig, Coordinator, CoordinatorConfig,
+    BatcherConfig, Coordinator, CoordinatorConfig, PriorityClass, RequestCtx,
 };
 use edgedcnn::quant::QFormat;
 use edgedcnn::util::TempDir;
 use edgedcnn::workload::{run_loadtest, LoadtestOpts, Scenario, Trace};
 use std::collections::BTreeMap;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 fn synthetic_dir() -> TempDir {
     let dir = TempDir::new().unwrap();
@@ -39,9 +41,8 @@ fn burst_loadtest_reproduces_the_variation_verdict() {
                 kinds: vec![DeviceKind::Fpga, DeviceKind::Gpu],
                 ..Default::default()
             },
-            executors: 0,
             trials: 5,
-            shard_batches: true,
+            ..Default::default()
         },
     )
     .unwrap();
@@ -76,20 +77,41 @@ fn burst_loadtest_reproduces_the_variation_verdict() {
     );
     assert!(v.fpga_wins);
 
-    // image accounting closes: every non-rejected request's images
-    // landed on exactly one lane, and nothing was lost to failures
+    // the request lifecycle closes: every submitted request is exactly
+    // one of served / shed (deadline infeasible) / rejected (overload)
+    // / lost, and every served one's images landed on exactly one lane
     assert_eq!(report.lost, 0, "no backend execution failures expected");
-    let served: u64 = report.lanes.iter().map(|l| l.images).sum();
     assert_eq!(
-        served,
-        (report.total_requests - report.rejected) * 2,
+        report.served + report.shed + report.rejected + report.lost,
+        report.total_requests,
+        "accounting must close"
+    );
+    let served_images: u64 = report.lanes.iter().map(|l| l.images).sum();
+    assert_eq!(
+        served_images,
+        report.served * 2,
         "trace requests carry 2 images each"
+    );
+    // the burst scenario is deadline-bearing (deadline = SLO): every
+    // served request got a deadline verdict on some lane
+    let verdicts: u64 = report
+        .lanes
+        .iter()
+        .map(|l| l.deadline_met + l.served_late)
+        .sum();
+    assert_eq!(verdicts, report.served, "every completion gets a verdict");
+    assert!(
+        report.deadline_verdict.is_some(),
+        "deadline-bearing traffic on both lanes ⇒ a deadline verdict"
     );
 
     let rendered = report.render();
     assert!(rendered.contains("verdict:"), "{rendered}");
+    assert!(rendered.contains("deadline verdict:"), "{rendered}");
     assert!(rendered.contains("cv_pct"), "{rendered}");
     assert!(rendered.contains("p99_ms"), "{rendered}");
+    assert!(rendered.contains("att_pct"), "{rendered}");
+    assert!(rendered.contains("accounting: submitted"), "{rendered}");
 }
 
 /// Same seed + scenario file ⇒ identical arrival timestamps and request
@@ -263,4 +285,216 @@ fn deferred_drain_order_and_no_starvation_across_networks() {
         report.deferred > 0,
         "a depth-1 lane under burst traffic must defer"
     );
+}
+
+/// The acceptance experiment for the deadline lifecycle: the burst
+/// workload driven through an fpga-only and a gpu-only pool at *equal*
+/// per-request deadlines, one request in flight at a time so both
+/// devices are measured at the same operating point (batch = 1, no
+/// queueing) — the paper's variation verdict restated as a deadline
+/// verdict.  At a 9 ms deadline the FPGA's 1-image service time
+/// (~7.1 ms ± 0.6% bounded jitter) always fits, while the GPU's
+/// (~8.1 ms × nvprof-style noise + interference stalls) sometimes
+/// doesn't: predictability pays as attainment.
+#[test]
+fn deadline_attainment_fpga_at_least_gpu_at_equal_deadlines() {
+    let dir = synthetic_dir();
+    let mut scenario = Scenario::builtin("burst").unwrap();
+    scenario.requests = 64;
+    let trace = Trace::generate(&scenario).unwrap();
+    let deadline = Duration::from_millis(9);
+
+    let mut attainment: BTreeMap<&str, (u64, u64)> = BTreeMap::new();
+    for kind in [DeviceKind::Fpga, DeviceKind::Gpu] {
+        let coord = Coordinator::start(CoordinatorConfig {
+            artifacts_dir: dir.path().to_path_buf(),
+            networks: vec!["mnist".to_string()],
+            backends: BackendCfg {
+                kinds: vec![kind],
+                ..Default::default()
+            },
+            ..Default::default()
+        })
+        .unwrap();
+        // warm the pipeline (thread wakeup paths, allocator) with
+        // best-effort requests so cold-start wall hiccups don't land in
+        // the measured attainment
+        for w in 0..4u64 {
+            coord.submit_blocking("mnist", 1, 900 + w).unwrap();
+        }
+        for e in &trace.events {
+            // the lane decrements its depth counter just *after* the
+            // previous reply resolves; give it a beat so the next
+            // intake feasibility check sees an idle lane
+            std::thread::sleep(Duration::from_millis(1));
+            // identical workload per device: the burst trace's seeds on
+            // the f32 network, one image per request, equal deadlines
+            let ctx = RequestCtx::new(e.seed)
+                .with_class(e.class)
+                .with_deadline(Instant::now() + deadline);
+            let resp = coord
+                .submit_with("mnist", 1, ctx)
+                .unwrap()
+                .wait()
+                .expect("1-image requests are feasible at intake");
+            let met = resp
+                .deadline_met
+                .expect("deadline-bearing request must carry a verdict");
+            let cell = attainment.entry(kind.as_str()).or_insert((0, 0));
+            if met {
+                cell.0 += 1;
+            } else {
+                cell.1 += 1;
+            }
+            assert!(resp.charged_s > 0.0);
+        }
+        // the per-(backend, class) attainment columns are populated
+        let report = coord.report();
+        let with_deadlines: u64 = report
+            .per_backend
+            .iter()
+            .flat_map(|b| b.deadline.iter())
+            .map(|d| d.met + d.late)
+            .sum();
+        assert_eq!(with_deadlines, trace.events.len() as u64);
+    }
+
+    let (fpga_met, fpga_late) = attainment["fpga"];
+    let (gpu_met, gpu_late) = attainment["gpu"];
+    let att = |met: u64, late: u64| met as f64 / (met + late) as f64;
+    let fpga_att = att(fpga_met, fpga_late);
+    let gpu_att = att(gpu_met, gpu_late);
+    assert!(
+        fpga_att >= gpu_att,
+        "the FPGA lane must attain at least the GPU lane at equal \
+         deadlines: fpga {fpga_att:.3} ({fpga_met}/{fpga_late}) vs gpu \
+         {gpu_att:.3} ({gpu_met}/{gpu_late})"
+    );
+}
+
+/// Shed-at-intake and served-late are distinct columns: a deadline the
+/// pool cannot meet is refused on arrival (counted as `shed`), never
+/// silently folded into overload rejections or served-late completions
+/// — and the lifecycle accounting closes exactly.
+#[test]
+fn shed_early_is_counted_separately_from_served_late() {
+    let dir = synthetic_dir();
+    let mut scenario = Scenario::builtin("burst").unwrap();
+    scenario.requests = 48;
+    // tight deadline: comfortably above the 1-2-image service time but
+    // inside the queue-backlog ETA a burst builds up, so intake sheds
+    // under the burst and serves the calm stretches
+    scenario.deadline_s = Some(0.025);
+    let trace = Trace::generate(&scenario).unwrap();
+    let report = run_loadtest(
+        &trace,
+        &LoadtestOpts {
+            artifacts_dir: dir.path().to_path_buf(),
+            backends: BackendCfg {
+                kinds: vec![DeviceKind::Fpga, DeviceKind::Gpu],
+                ..Default::default()
+            },
+            trials: 3,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+
+    assert_eq!(report.lost, 0, "sheds must not read as failures");
+    assert!(
+        report.shed > 0,
+        "a 25 ms deadline under MMPP bursts must shed at intake"
+    );
+    assert_eq!(
+        report.served + report.shed + report.rejected,
+        report.total_requests,
+        "served + shed + rejected must cover every submission"
+    );
+    // served-late lives on the lanes, not in the shed counter
+    let late: u64 = report.lanes.iter().map(|l| l.served_late).sum();
+    assert_eq!(report.served_late, late);
+    let verdicts: u64 = report
+        .lanes
+        .iter()
+        .map(|l| l.deadline_met + l.served_late)
+        .sum();
+    assert_eq!(verdicts, report.served, "shed requests get no lane verdict");
+    let rendered = report.render();
+    assert!(rendered.contains("shed"), "{rendered}");
+    assert!(rendered.contains("late"), "{rendered}");
+}
+
+/// Cross-priority non-starvation: EDF orders by deadline, class only
+/// shapes shedding — so a Low-class request with a loose deadline is
+/// eventually served even while Normal-class traffic with tighter
+/// deadlines keeps arriving (a strict priority queue would starve it).
+#[test]
+fn low_class_is_not_starved_by_tighter_normal_traffic() {
+    let dir = synthetic_dir();
+    let coord = Coordinator::start(CoordinatorConfig {
+        artifacts_dir: dir.path().to_path_buf(),
+        networks: vec!["mnist".to_string()],
+        batcher: BatcherConfig {
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+        },
+        backends: BackendCfg {
+            kinds: vec![DeviceKind::Fpga],
+            ..Default::default()
+        },
+        ..Default::default()
+    })
+    .unwrap();
+
+    let mut low_handles = Vec::new();
+    let mut normal_handles = Vec::new();
+    for i in 0..30u64 {
+        let now = Instant::now();
+        // a steady stream of tighter-deadline Normal traffic …
+        let normal = RequestCtx::new(1000 + i)
+            .with_deadline(now + Duration::from_millis(400));
+        normal_handles.push(coord.submit_with("mnist", 2, normal).unwrap());
+        // … with a loose-deadline Low request interleaved every fifth
+        if i % 5 == 0 {
+            let low = RequestCtx::new(2000 + i)
+                .with_class(PriorityClass::Low)
+                .with_deadline(now + Duration::from_secs(30));
+            low_handles.push(coord.submit_with("mnist", 2, low).unwrap());
+        }
+    }
+
+    let mut low_served = 0u64;
+    for h in low_handles {
+        let resp = h.wait().expect("low class must not starve under EDF");
+        assert_eq!(resp.class, PriorityClass::Low);
+        assert_eq!(
+            resp.deadline_met,
+            Some(true),
+            "a 30 s deadline gives the low class all the slack it needs"
+        );
+        low_served += 1;
+    }
+    assert_eq!(low_served, 6);
+    // normals may be served or shed (their deadlines are honest), but
+    // never silently dropped
+    let mut normal_outcomes = 0u64;
+    for h in normal_handles {
+        if h.wait().is_ok() {
+            normal_outcomes += 1;
+        }
+    }
+    let report = coord.report();
+    assert_eq!(
+        normal_outcomes + report.shed + report.rejected,
+        30,
+        "every normal request resolved or was counted shed/rejected"
+    );
+    // the per-class split reaches the report
+    let classes: Vec<PriorityClass> = report
+        .per_backend
+        .iter()
+        .flat_map(|b| b.deadline.iter())
+        .map(|d| d.class)
+        .collect();
+    assert!(classes.contains(&PriorityClass::Low), "{classes:?}");
 }

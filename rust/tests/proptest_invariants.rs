@@ -5,8 +5,12 @@
 //! Each property runs a few hundred random cases over the coordinator
 //! and algorithm state spaces.
 
+use edgedcnn::backend::CostModel;
 use edgedcnn::config::DeconvLayerCfg;
-use edgedcnn::coordinator::{BatcherConfig, DynamicBatcher, InferenceRequest};
+use edgedcnn::coordinator::{
+    BatcherConfig, DynamicBatcher, InferenceRequest, PriorityClass,
+    RequestCtx,
+};
 use edgedcnn::deconv::{
     deconv_reverse_loop, deconv_reverse_loop_par, deconv_standard,
     input_tile_extent, stride_hole_offsets, ReverseLoopOpts,
@@ -349,6 +353,109 @@ fn prop_batcher_respects_bucket_unless_oversize() {
                         batch.n_images <= max_batch,
                         "multi-request batch exceeded the bucket"
                     );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_edf_cut_never_serves_feasible_after_infeasible_same_class() {
+    // skip-over EDF: in every cut batch, a request that can still make
+    // its deadline is never served after one (of the same priority
+    // class) that already cannot — and feasible same-class requests
+    // come out in deadline order.
+    let mut rng = Rng::seed_from_u64(0xEDF0);
+    let classes =
+        [PriorityClass::High, PriorityClass::Normal, PriorityClass::Low];
+    for case in 0..CASES {
+        let max_batch = rng.range_usize(2, 9);
+        let mut b = DynamicBatcher::new(BatcherConfig {
+            max_batch,
+            max_wait: Duration::from_millis(rng.range_usize(1, 50) as u64),
+        });
+        // constant-cost model (c1 == c8): the predicted batch cost is
+        // the same at every batch size, so the test can recompute the
+        // batcher's feasibility split exactly
+        let cost_s = rng.range_f64(0.001, 0.030);
+        b.set_cost_hint(
+            "mnist",
+            CostModel {
+                c1_s: cost_s,
+                c8_s: cost_s,
+            },
+        );
+        let t0 = Instant::now();
+        let n_requests = rng.range_usize(1, 25);
+        let mut emitted: Vec<u64> = Vec::new();
+        for id in 0..n_requests as u64 {
+            let deadline = rng.gen_bool(0.8).then(|| {
+                t0 + Duration::from_micros(rng.range_usize(1, 80_000) as u64)
+            });
+            let ctx = RequestCtx {
+                arrival: t0,
+                deadline,
+                class: classes[rng.range_usize(0, classes.len())],
+                seed: id,
+            };
+            if let Some(batch) =
+                b.push(InferenceRequest::with_ctx(id, "mnist", 1, ctx), t0)
+            {
+                check_edf_batch(&batch, t0, cost_s, case);
+                emitted.extend(batch.requests.iter().map(|r| r.id));
+            }
+        }
+        // drain at a random later clock; every cut must satisfy the
+        // property at *its* cut time
+        let mut now = t0;
+        while b.queued() > 0 {
+            now += Duration::from_millis(rng.range_usize(1, 40) as u64);
+            while let Some(batch) = b.poll(now) {
+                check_edf_batch(&batch, now, cost_s, case);
+                emitted.extend(batch.requests.iter().map(|r| r.id));
+            }
+        }
+        // conservation still holds under EDF reordering
+        emitted.sort_unstable();
+        let full: Vec<u64> = (0..n_requests as u64).collect();
+        assert_eq!(emitted, full, "case {case}: lost/duplicated requests");
+    }
+}
+
+/// The per-batch EDF/skip-over assertions shared by push- and poll-side
+/// cuts.
+fn check_edf_batch(
+    batch: &edgedcnn::coordinator::Batch,
+    now: Instant,
+    cost_s: f64,
+    case: usize,
+) {
+    let feasible = |r: &InferenceRequest| match r.ctx.deadline {
+        Some(d) => now + Duration::from_secs_f64(cost_s) <= d,
+        None => true,
+    };
+    for (i, a) in batch.requests.iter().enumerate() {
+        for b in &batch.requests[i + 1..] {
+            if a.ctx.class == b.ctx.class {
+                assert!(
+                    feasible(a) || !feasible(b),
+                    "case {case}: feasible request {} served after \
+                     infeasible request {} of class {}",
+                    b.id,
+                    a.id,
+                    a.ctx.class,
+                );
+                if let (Some(da), Some(db)) = (a.ctx.deadline, b.ctx.deadline)
+                {
+                    if feasible(a) && feasible(b) {
+                        assert!(
+                            da <= db,
+                            "case {case}: same-class feasible requests out \
+                             of deadline order ({} before {})",
+                            a.id,
+                            b.id,
+                        );
+                    }
                 }
             }
         }

@@ -32,8 +32,8 @@ fn main() -> anyhow::Result<()> {
     println!("backend pool: {}", coord.backend_names().join(", "));
 
     // single-request sanity: deterministic per seed, annotated
-    let a = coord.submit_blocking("mnist", 2, 1234)?;
-    let b = coord.submit_blocking("mnist", 2, 1234)?;
+    let a = coord.request("mnist").images(2).seed(1234).blocking()?;
+    let b = coord.request("mnist").images(2).seed(1234).blocking()?;
     assert_eq!(
         a.images.data(),
         b.images.data(),

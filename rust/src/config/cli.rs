@@ -1,0 +1,165 @@
+//! Shared CLI configuration — the `serve`, `loadtest` and `fleet`
+//! subcommands parse the *same* flags into the *same* structs with
+//! identical semantics, instead of each subcommand keeping its own
+//! copy of the `--backends` / `--queue-depth` / `--scenario` /
+//! `--deadline-ms` handling in `main.rs` (where the duplicates had
+//! already started to drift: `serve` had no `--max-deferred`, and only
+//! `loadtest` validated `--deadline-ms`).
+//!
+//! The structs are plain data: [`TrafficCfg`] names a scenario but does
+//! not resolve it — materialization lives in
+//! [`crate::workload`](crate::workload) (`resolve_trace`), keeping the
+//! config layer free of workload dependencies.
+
+use super::backend::BackendCfg;
+use crate::util::Flags;
+use anyhow::Result;
+use std::path::PathBuf;
+
+/// Backend-pool flags shared by every serving subcommand:
+/// `--backends fpga,gpu,cpu`, `--queue-depth D`, `--max-deferred N`,
+/// `--executors E`.
+#[derive(Debug, Clone, Default)]
+pub struct PoolCfg {
+    pub backends: BackendCfg,
+    /// Lane-count override, as in
+    /// [`crate::coordinator::CoordinatorConfig::executors`]
+    /// (`0` = one lane per `backends.kinds` entry).
+    pub executors: usize,
+}
+
+impl PoolCfg {
+    pub fn from_flags(flags: &Flags) -> Result<PoolCfg> {
+        let mut backends = BackendCfg::default();
+        if flags.has("backends") {
+            backends.kinds =
+                BackendCfg::parse_kinds(&flags.get_str("backends", ""))?;
+        }
+        backends.max_queue_depth =
+            flags.get("queue-depth", backends.max_queue_depth)?;
+        backends.admit_max_deferred =
+            flags.get("max-deferred", backends.admit_max_deferred)?;
+        anyhow::ensure!(
+            backends.max_queue_depth >= 1,
+            "--queue-depth must be >= 1"
+        );
+        Ok(PoolCfg {
+            backends,
+            executors: flags.get("executors", 0usize)?,
+        })
+    }
+}
+
+/// Traffic flags shared by `loadtest` and `fleet`: `--scenario
+/// NAME|FILE`, `--requests N`, `--seed S`, `--deadline-ms D`,
+/// `--replay FILE`, `--record FILE`.  `None` fields mean "keep the
+/// scenario's own value".
+#[derive(Debug, Clone)]
+pub struct TrafficCfg {
+    /// Built-in scenario name (`steady|burst|diurnal|flash`) or a JSON
+    /// scenario file path.
+    pub scenario: String,
+    pub requests: Option<usize>,
+    pub seed: Option<u64>,
+    /// Relative-deadline override, seconds.
+    pub deadline_s: Option<f64>,
+    /// Replay a recorded trace instead of generating one (wins over
+    /// `scenario`).
+    pub replay: Option<PathBuf>,
+    /// Record the materialized trace to this path.
+    pub record: Option<PathBuf>,
+}
+
+impl Default for TrafficCfg {
+    fn default() -> Self {
+        TrafficCfg {
+            scenario: "steady".to_string(),
+            requests: None,
+            seed: None,
+            deadline_s: None,
+            replay: None,
+            record: None,
+        }
+    }
+}
+
+impl TrafficCfg {
+    pub fn from_flags(flags: &Flags) -> Result<TrafficCfg> {
+        let deadline_s = match flags.get_opt::<f64>("deadline-ms")? {
+            Some(d_ms) => {
+                anyhow::ensure!(d_ms > 0.0, "--deadline-ms must be positive");
+                Some(d_ms / 1e3)
+            }
+            None => None,
+        };
+        Ok(TrafficCfg {
+            scenario: flags.get_str("scenario", "steady"),
+            requests: flags.get_opt("requests")?,
+            seed: flags.get_opt("seed")?,
+            deadline_s,
+            replay: flags.get_opt("replay")?,
+            record: flags.get_opt("record")?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn flags(s: &[&str]) -> Flags {
+        let argv: Vec<String> = s.iter().map(|a| a.to_string()).collect();
+        Flags::parse(&argv).unwrap()
+    }
+
+    #[test]
+    fn pool_cfg_parses_shared_backend_flags() {
+        let p = PoolCfg::from_flags(&flags(&[
+            "--backends",
+            "fpga,cpu",
+            "--queue-depth",
+            "2",
+            "--max-deferred",
+            "8",
+            "--executors",
+            "4",
+        ]))
+        .unwrap();
+        assert_eq!(p.backends.kinds.len(), 2);
+        assert_eq!(p.backends.max_queue_depth, 2);
+        assert_eq!(p.backends.admit_max_deferred, 8);
+        assert_eq!(p.executors, 4);
+        // defaults mirror BackendCfg::default
+        let d = PoolCfg::from_flags(&flags(&[])).unwrap();
+        assert_eq!(d.backends.max_queue_depth, 4);
+        assert_eq!(d.executors, 0);
+        assert!(PoolCfg::from_flags(&flags(&["--queue-depth", "0"])).is_err());
+        assert!(PoolCfg::from_flags(&flags(&["--backends", "tpu"])).is_err());
+    }
+
+    #[test]
+    fn traffic_cfg_parses_shared_traffic_flags() {
+        let t = TrafficCfg::from_flags(&flags(&[
+            "--scenario",
+            "flash",
+            "--requests",
+            "48",
+            "--seed",
+            "7",
+            "--deadline-ms",
+            "25",
+        ]))
+        .unwrap();
+        assert_eq!(t.scenario, "flash");
+        assert_eq!(t.requests, Some(48));
+        assert_eq!(t.seed, Some(7));
+        assert_eq!(t.deadline_s, Some(0.025));
+        assert!(t.replay.is_none());
+        let d = TrafficCfg::from_flags(&flags(&[])).unwrap();
+        assert_eq!(d.scenario, "steady");
+        assert_eq!(d.requests, None, "absent flags keep scenario values");
+        assert!(
+            TrafficCfg::from_flags(&flags(&["--deadline-ms", "0"])).is_err()
+        );
+    }
+}

@@ -1,13 +1,17 @@
 //! Static configuration: the paper's two DCNN generator architectures
 //! (Fig. 4), the two hardware platforms (PYNQ-Z2 FPGA, Jetson TX1 GPU),
-//! and the datapath precision axis ([`Precision`], defined in
-//! [`crate::quant`] and re-exported here as part of the config surface).
+//! the datapath precision axis ([`Precision`], defined in
+//! [`crate::quant`] and re-exported here as part of the config surface),
+//! and the shared CLI config structs ([`PoolCfg`] / [`TrafficCfg`]) the
+//! serve/loadtest/fleet subcommands all parse their flags into.
 
 mod backend;
+mod cli;
 mod hw;
 mod network;
 
 pub use crate::quant::{Precision, QFormat};
 pub use backend::{BackendCfg, DeviceKind};
+pub use cli::{PoolCfg, TrafficCfg};
 pub use hw::{FpgaBoard, GpuBoard, PYNQ_Z2, JETSON_TX1};
 pub use network::{celeba, mnist, network_by_name, DeconvLayerCfg, NetworkCfg};

@@ -13,7 +13,7 @@
 
 use super::batcher::Batch;
 use super::metrics::MetricsRegistry;
-use super::request::InferenceResponse;
+use super::request::{InferenceResponse, RequestOutcome};
 use crate::artifacts::ArtifactDir;
 use crate::backend::{
     dense_network_sim, instantiate, Backend, CostModel, NetSpec,
@@ -35,8 +35,8 @@ pub(crate) enum LaneCmd {
     Execute {
         batch: Batch,
         /// Reply channel per request id; dropped on failure so callers
-        /// observe an error instead of hanging.
-        replies: Vec<(u64, mpsc::Sender<InferenceResponse>)>,
+        /// observe a [`RequestOutcome::Lost`] instead of hanging.
+        replies: Vec<(u64, mpsc::Sender<RequestOutcome>)>,
     },
     Shutdown,
 }
@@ -223,14 +223,14 @@ pub(crate) fn lane_thread(
 }
 
 fn resolve(
-    replies: Vec<(u64, mpsc::Sender<InferenceResponse>)>,
+    replies: Vec<(u64, mpsc::Sender<RequestOutcome>)>,
     responses: Vec<InferenceResponse>,
 ) {
-    let mut reply_by_id: HashMap<u64, mpsc::Sender<InferenceResponse>> =
+    let mut reply_by_id: HashMap<u64, mpsc::Sender<RequestOutcome>> =
         replies.into_iter().collect();
     for resp in responses {
         if let Some(tx) = reply_by_id.remove(&resp.id) {
-            let _ = tx.send(resp);
+            let _ = tx.send(RequestOutcome::Served(Box::new(resp)));
         }
     }
 }

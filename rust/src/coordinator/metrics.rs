@@ -14,8 +14,15 @@
 use super::request::PriorityClass;
 use crate::stats::Welford;
 use crate::telemetry::{weighted_cv, LogHistogram, WindowedHistogram};
+use crate::util::{escape_json, parse_json, Json};
+use anyhow::Result;
 use std::collections::BTreeMap;
 use std::time::Instant;
+
+/// Schema version written by [`ServingReport::to_json`].  Mirrors the
+/// trace-v2 contract: older readers refuse *future* versions instead of
+/// misreading them.
+const REPORT_VERSION: u64 = 1;
 
 /// Deadline outcome counters for one (backend, priority class) cell.
 #[derive(Debug, Default, Clone, Copy)]
@@ -74,7 +81,14 @@ struct LaneQueueStats {
 }
 
 /// Accumulates per-request and per-batch telemetry during a serving run.
-#[derive(Debug)]
+///
+/// Registries are **mergeable** ([`Self::merge_from`]): every field is
+/// either a sum-monoid counter, a mergeable histogram/Welford, or a
+/// keyed map of those — so a fleet of per-site registries folds into
+/// one fleet-level registry whose report equals recording the same
+/// events in a single process (the fleet integration test asserts the
+/// fold against the direct aggregate).
+#[derive(Debug, Clone)]
 pub struct MetricsRegistry {
     latency: LogHistogram,
     /// Time-sliced latency shards (the drift column: is the tail a
@@ -260,6 +274,70 @@ impl MetricsRegistry {
         self.requests
     }
 
+    /// Fold another registry (a per-site telemetry shard) into this
+    /// one.  Counters add, histograms merge (bucket-count addition —
+    /// exact), Welford accumulators combine (Chan et al.), and the wall
+    /// clock takes the max: fleet sites serve *concurrently*, so the
+    /// fleet measurement window is the longest site window, not the
+    /// sum.  Every constituent merge is associative, so fleet folds
+    /// give the same report in any association order.
+    pub fn merge_from(&mut self, other: &MetricsRegistry) {
+        self.latency.merge(&other.latency);
+        self.windowed.merge(&other.windowed);
+        self.batches += other.batches;
+        self.batch_images += other.batch_images;
+        self.images += other.images;
+        self.requests += other.requests;
+        self.rejected += other.rejected;
+        self.shed += other.shed;
+        for (class, n) in &other.shed_by_class {
+            *self.shed_by_class.entry(*class).or_insert(0) += n;
+        }
+        self.deferred += other.deferred;
+        self.ops += other.ops;
+        self.energy_j += other.energy_j;
+        self.wall_s = self.wall_s.max(other.wall_s);
+        for (name, b) in &other.backends {
+            let mine = self.backends.entry(name.clone()).or_default();
+            mine.batches += b.batches;
+            mine.images += b.images;
+            mine.ops += b.ops;
+            mine.device_time_s += b.device_time_s;
+            mine.energy_j += b.energy_j;
+            mine.latency.merge(&b.latency);
+            for (class, d) in &b.deadline {
+                let cell = mine.deadline.entry(*class).or_default();
+                cell.met += d.met;
+                cell.late += d.late;
+            }
+            for (key, w) in &b.per_image_dev {
+                mine.per_image_dev.entry(key.clone()).or_default().merge(w);
+            }
+        }
+        for (name, l) in &other.lanes {
+            let mine = self.lanes.entry(name.clone()).or_default();
+            mine.dispatches += l.dispatches;
+            mine.depth.merge(&l.depth);
+            mine.max_depth = mine.max_depth.max(l.max_depth);
+            mine.cost_refreshes += l.cost_refreshes;
+        }
+    }
+
+    /// Rename every backend/lane key to `{prefix}{name}` — how the
+    /// fleet keeps per-site columns distinguishable after the fold
+    /// (site 0's `fpga0` becomes `s0/fpga0`, so the merged report still
+    /// shows where each site's work landed).
+    pub fn prefix_lanes(&mut self, prefix: &str) {
+        self.backends = std::mem::take(&mut self.backends)
+            .into_iter()
+            .map(|(name, b)| (format!("{prefix}{name}"), b))
+            .collect();
+        self.lanes = std::mem::take(&mut self.lanes)
+            .into_iter()
+            .map(|(name, l)| (format!("{prefix}{name}"), l))
+            .collect();
+    }
+
     pub fn report(&self) -> ServingReport {
         let lat = LatencyReport {
             mean_s: self.latency.mean(),
@@ -353,7 +431,7 @@ impl MetricsRegistry {
 
 /// Latency distribution summary.  The mean is exact (tracked sum); the
 /// quantiles are histogram-bucketed (2% relative error).
-#[derive(Debug, Default, Clone, Copy)]
+#[derive(Debug, Default, Clone, Copy, PartialEq)]
 pub struct LatencyReport {
     pub mean_s: f64,
     pub p50_s: f64,
@@ -363,7 +441,7 @@ pub struct LatencyReport {
 }
 
 /// Deadline attainment of one (backend, priority class) cell.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct ClassAttainment {
     pub class: PriorityClass,
     /// Requests whose edge-charged completion made their deadline.
@@ -385,7 +463,7 @@ impl ClassAttainment {
 }
 
 /// One backend lane's column in the serving report.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct BackendReport {
     /// Lane name (`fpga0`, `gpu0`, `cpu0`, …).
     pub name: String,
@@ -413,7 +491,7 @@ pub struct BackendReport {
 }
 
 /// Scheduler-side telemetry for one lane.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct LaneQueueReport {
     pub name: String,
     /// Batches the scheduler dispatched to this lane.
@@ -427,8 +505,10 @@ pub struct LaneQueueReport {
 }
 
 /// Final serving report (printed by the `serve`/`loadtest` CLIs and the
-/// edge_serving example; recorded in EXPERIMENTS.md §E9).
-#[derive(Debug, Clone)]
+/// edge_serving example; recorded in EXPERIMENTS.md §E9).  Serializes
+/// to a versioned JSON schema ([`Self::to_json`]) so the fleet merge
+/// path and CI assertions parse structs instead of scraping table text.
+#[derive(Debug, Clone, PartialEq)]
 pub struct ServingReport {
     pub requests: u64,
     pub images: u64,
@@ -458,7 +538,211 @@ pub struct ServingReport {
     pub lanes: Vec<LaneQueueReport>,
 }
 
+fn latency_from_json(v: &Json) -> Result<LatencyReport> {
+    Ok(LatencyReport {
+        mean_s: v.req("mean_s")?.as_f64()?,
+        p50_s: v.req("p50_s")?.as_f64()?,
+        p95_s: v.req("p95_s")?.as_f64()?,
+        p99_s: v.req("p99_s")?.as_f64()?,
+        p999_s: v.req("p999_s")?.as_f64()?,
+    })
+}
+
+fn attainment_from_json(v: &Json) -> Result<ClassAttainment> {
+    Ok(ClassAttainment {
+        class: v.req("class")?.as_str()?.parse()?,
+        met: v.req("met")?.as_u64()?,
+        late: v.req("late")?.as_u64()?,
+    })
+}
+
+fn backend_from_json(v: &Json) -> Result<BackendReport> {
+    Ok(BackendReport {
+        name: v.req("name")?.as_str()?.to_string(),
+        batches: v.req("batches")?.as_u64()?,
+        images: v.req("images")?.as_u64()?,
+        images_per_s: v.req("images_per_s")?.as_f64()?,
+        device_gops: v.req("device_gops")?.as_f64()?,
+        mean_device_latency_s: v.req("mean_device_latency_s")?.as_f64()?,
+        energy_j: v.req("energy_j")?.as_f64()?,
+        p50_s: v.req("p50_s")?.as_f64()?,
+        p95_s: v.req("p95_s")?.as_f64()?,
+        p99_s: v.req("p99_s")?.as_f64()?,
+        p999_s: v.req("p999_s")?.as_f64()?,
+        latency_cv: v.req("latency_cv")?.as_f64()?,
+        deadline: v
+            .req("deadline")?
+            .as_arr()?
+            .iter()
+            .map(attainment_from_json)
+            .collect::<Result<Vec<_>>>()?,
+    })
+}
+
+fn lane_from_json(v: &Json) -> Result<LaneQueueReport> {
+    Ok(LaneQueueReport {
+        name: v.req("name")?.as_str()?.to_string(),
+        dispatches: v.req("dispatches")?.as_u64()?,
+        mean_depth: v.req("mean_depth")?.as_f64()?,
+        max_depth: v.req("max_depth")?.as_usize()?,
+        cost_refreshes: v.req("cost_refreshes")?.as_u64()?,
+    })
+}
+
 impl ServingReport {
+    /// Serialize (schema v1).  Every f64 prints shortest-roundtrip, so
+    /// `from_json(to_json(r)) == r` bit-exactly — which is also what
+    /// lets the fleet integration test compare a folded report against
+    /// a direct aggregate by comparing their JSON strings.
+    pub fn to_json(&self) -> String {
+        let shed_by_class = self
+            .shed_by_class
+            .iter()
+            .map(|(c, n)| format!("{{\"class\": \"{c}\", \"count\": {n}}}"))
+            .collect::<Vec<_>>()
+            .join(", ");
+        let lat = &self.latency;
+        let per_backend = self
+            .per_backend
+            .iter()
+            .map(|b| {
+                let deadline = b
+                    .deadline
+                    .iter()
+                    .map(|d| {
+                        format!(
+                            "{{\"class\": \"{}\", \"met\": {}, \"late\": {}}}",
+                            d.class, d.met, d.late
+                        )
+                    })
+                    .collect::<Vec<_>>()
+                    .join(", ");
+                format!(
+                    "    {{\"name\": \"{}\", \"batches\": {}, \"images\": {}, \
+                     \"images_per_s\": {}, \"device_gops\": {}, \
+                     \"mean_device_latency_s\": {}, \"energy_j\": {}, \
+                     \"p50_s\": {}, \"p95_s\": {}, \"p99_s\": {}, \
+                     \"p999_s\": {}, \"latency_cv\": {}, \"deadline\": [{}]}}",
+                    escape_json(&b.name),
+                    b.batches,
+                    b.images,
+                    b.images_per_s,
+                    b.device_gops,
+                    b.mean_device_latency_s,
+                    b.energy_j,
+                    b.p50_s,
+                    b.p95_s,
+                    b.p99_s,
+                    b.p999_s,
+                    b.latency_cv,
+                    deadline,
+                )
+            })
+            .collect::<Vec<_>>()
+            .join(",\n");
+        let lanes = self
+            .lanes
+            .iter()
+            .map(|l| {
+                format!(
+                    "    {{\"name\": \"{}\", \"dispatches\": {}, \
+                     \"mean_depth\": {}, \"max_depth\": {}, \
+                     \"cost_refreshes\": {}}}",
+                    escape_json(&l.name),
+                    l.dispatches,
+                    l.mean_depth,
+                    l.max_depth,
+                    l.cost_refreshes,
+                )
+            })
+            .collect::<Vec<_>>()
+            .join(",\n");
+        format!(
+            "{{\n  \"version\": {REPORT_VERSION},\n  \
+             \"requests\": {},\n  \"images\": {},\n  \"rejected\": {},\n  \
+             \"shed\": {},\n  \"shed_by_class\": [{}],\n  \
+             \"deferred\": {},\n  \"batches\": {},\n  \"wall_s\": {},\n  \
+             \"latency\": {{\"mean_s\": {}, \"p50_s\": {}, \"p95_s\": {}, \
+             \"p99_s\": {}, \"p999_s\": {}}},\n  \
+             \"latency_drift\": {},\n  \"images_per_s\": {},\n  \
+             \"gops\": {},\n  \"mean_batch\": {},\n  \"mean_power_w\": {},\n  \
+             \"gops_per_w\": {},\n  \"per_backend\": [\n{}\n  ],\n  \
+             \"lanes\": [\n{}\n  ]\n}}\n",
+            self.requests,
+            self.images,
+            self.rejected,
+            self.shed,
+            shed_by_class,
+            self.deferred,
+            self.batches,
+            self.wall_s,
+            lat.mean_s,
+            lat.p50_s,
+            lat.p95_s,
+            lat.p99_s,
+            lat.p999_s,
+            self.latency_drift,
+            self.images_per_s,
+            self.gops,
+            self.mean_batch,
+            self.mean_power_w,
+            self.gops_per_w,
+            per_backend,
+            lanes,
+        )
+    }
+
+    /// Parse a schema-v1 report; refuses *future* schema versions
+    /// instead of misreading them (the trace-v2 contract).
+    pub fn from_json(text: &str) -> Result<ServingReport> {
+        let v = parse_json(text)?;
+        let version = v.req("version")?.as_u64()?;
+        anyhow::ensure!(
+            version <= REPORT_VERSION,
+            "report schema v{version} is newer than this build \
+             (v{REPORT_VERSION})"
+        );
+        Ok(ServingReport {
+            requests: v.req("requests")?.as_u64()?,
+            images: v.req("images")?.as_u64()?,
+            rejected: v.req("rejected")?.as_u64()?,
+            shed: v.req("shed")?.as_u64()?,
+            shed_by_class: v
+                .req("shed_by_class")?
+                .as_arr()?
+                .iter()
+                .map(|e| {
+                    Ok((
+                        e.req("class")?.as_str()?.parse()?,
+                        e.req("count")?.as_u64()?,
+                    ))
+                })
+                .collect::<Result<Vec<_>>>()?,
+            deferred: v.req("deferred")?.as_u64()?,
+            batches: v.req("batches")?.as_u64()?,
+            wall_s: v.req("wall_s")?.as_f64()?,
+            latency: latency_from_json(v.req("latency")?)?,
+            latency_drift: v.req("latency_drift")?.as_f64()?,
+            images_per_s: v.req("images_per_s")?.as_f64()?,
+            gops: v.req("gops")?.as_f64()?,
+            mean_batch: v.req("mean_batch")?.as_f64()?,
+            mean_power_w: v.req("mean_power_w")?.as_f64()?,
+            gops_per_w: v.req("gops_per_w")?.as_f64()?,
+            per_backend: v
+                .req("per_backend")?
+                .as_arr()?
+                .iter()
+                .map(backend_from_json)
+                .collect::<Result<Vec<_>>>()?,
+            lanes: v
+                .req("lanes")?
+                .as_arr()?
+                .iter()
+                .map(lane_from_json)
+                .collect::<Result<Vec<_>>>()?,
+        })
+    }
+
     pub fn render(&self) -> String {
         let mut out = format!(
             "requests {:>6}   images {:>6}   batches {:>5}  (mean batch {:.2})\n\
@@ -729,6 +1013,115 @@ mod tests {
         let s = r.render();
         assert!(s.contains("rejected"));
         assert!(s.contains("deferred"));
+    }
+
+    /// A registry shard exercising every mergeable field, derived
+    /// deterministically from `site`.
+    fn shard(site: u64) -> MetricsRegistry {
+        let mut m = MetricsRegistry::new();
+        for i in 0..(8 + site * 3) {
+            let at = i as f64 * 0.05 + site as f64 * 0.2;
+            m.record_request_at(at, 0.001 * (site + 1) as f64 + 1e-4 * i as f64, 2);
+        }
+        m.record_batch(0.004, 4, 1_000_000 * (site + 1));
+        m.record_energy(0.5 * (site + 1) as f64);
+        m.record_backend_batch("fpga0", "mnist", 4, 1_000_000, 0.004, 0.1);
+        m.record_backend_batch("gpu0", "mnist", 2, 500_000, 0.001 * (site + 1) as f64, 0.2);
+        m.record_backend_request("fpga0", 0.002 + 1e-4 * site as f64);
+        m.record_backend_deadline("fpga0", PriorityClass::Normal, site != 1);
+        m.record_backend_deadline("gpu0", PriorityClass::Low, true);
+        if site == 0 {
+            m.record_rejected();
+            m.record_shed(PriorityClass::Low);
+        }
+        m.record_deferred();
+        m.record_lane_dispatch("fpga0", 1 + site as usize);
+        m.record_cost_refresh("gpu0");
+        m.set_wall(1.0 + 0.1 * site as f64);
+        m
+    }
+
+    #[test]
+    fn merge_is_associative_across_three_shards_and_equals_direct() {
+        let [a, b, c] = [shard(0), shard(1), shard(2)];
+        // fold(fold(a, b), c)
+        let mut left = a.clone();
+        left.merge_from(&b);
+        left.merge_from(&c);
+        // fold(a, fold(b, c))
+        let mut bc = b.clone();
+        bc.merge_from(&c);
+        let mut right = a.clone();
+        right.merge_from(&bc);
+        // direct aggregate: the same shards folded into a fresh
+        // registry in the same left-to-right order (fixed f64 summation
+        // order ⇒ bit-identical sums)
+        let mut direct = MetricsRegistry::new();
+        direct.merge_from(&a);
+        direct.merge_from(&b);
+        direct.merge_from(&c);
+        let l = left.report().to_json();
+        let r = right.report().to_json();
+        let d = direct.report().to_json();
+        assert_eq!(l, d, "fold(fold(a,b),c) == direct, bit-identical");
+        assert_eq!(l, r, "fold(a,fold(b,c)) == fold(fold(a,b),c)");
+        // and the integer/extremes side of the report is what the three
+        // shards say it should be
+        let rep = left.report();
+        assert_eq!(rep.requests, 8 + 11 + 14);
+        assert_eq!(rep.images, 2 * (8 + 11 + 14));
+        assert_eq!(rep.rejected, 1);
+        assert_eq!(rep.shed, 1);
+        assert_eq!(rep.deferred, 3);
+        assert!((rep.wall_s - 1.2).abs() < 1e-12, "fleet wall = max site wall");
+        let fpga = rep.per_backend.iter().find(|x| x.name == "fpga0").unwrap();
+        assert_eq!(fpga.batches, 3);
+        let normal = fpga
+            .deadline
+            .iter()
+            .find(|x| x.class == PriorityClass::Normal)
+            .unwrap();
+        assert_eq!((normal.met, normal.late), (2, 1));
+        let lane = rep.lanes.iter().find(|x| x.name == "fpga0").unwrap();
+        assert_eq!(lane.max_depth, 3);
+        assert!((lane.mean_depth - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prefix_lanes_keeps_per_site_columns_distinguishable() {
+        let mut a = shard(0);
+        a.prefix_lanes("s0/");
+        let mut b = shard(1);
+        b.prefix_lanes("s1/");
+        a.merge_from(&b);
+        let rep = a.report();
+        let names: Vec<&str> =
+            rep.per_backend.iter().map(|x| x.name.as_str()).collect();
+        assert_eq!(names, ["s0/fpga0", "s0/gpu0", "s1/fpga0", "s1/gpu0"]);
+        assert!(rep.lanes.iter().all(|l| l.name.starts_with("s0/")
+            || l.name.starts_with("s1/")));
+        // prefixed shards no longer collide: each keeps its own counts
+        let s0 = rep.per_backend.iter().find(|x| x.name == "s0/fpga0").unwrap();
+        assert_eq!(s0.batches, 1);
+    }
+
+    #[test]
+    fn report_json_roundtrips_bit_exactly_and_refuses_future_versions() {
+        let mut m = shard(0);
+        m.merge_from(&shard(1));
+        let rep = m.report();
+        let json = rep.to_json();
+        let back = ServingReport::from_json(&json).unwrap();
+        assert_eq!(back, rep, "schema v1 roundtrip");
+        assert_eq!(back.to_json(), json, "re-serialization is stable");
+        // empty report roundtrips too (empty arrays, zeroed floats)
+        let empty = MetricsRegistry::new().report();
+        assert_eq!(ServingReport::from_json(&empty.to_json()).unwrap(), empty);
+        // a future schema is refused instead of misread
+        let v9 = json.replacen("\"version\": 1", "\"version\": 9", 1);
+        let err = ServingReport::from_json(&v9).unwrap_err().to_string();
+        assert!(err.contains("newer than this build"), "{err}");
+        assert!(ServingReport::from_json("{}").is_err());
     }
 
     #[test]

@@ -50,8 +50,9 @@ pub use power::PowerMeter;
 pub use registry::{BackendRegistry, LaneInfo};
 pub use request::{
     InferenceRequest, InferenceResponse, PriorityClass, RequestCtx, RequestId,
+    RequestOutcome,
 };
 pub use server::{
-    Coordinator, CoordinatorClient, CoordinatorConfig, ResponseHandle,
-    WorkloadSpec,
+    Coordinator, CoordinatorClient, CoordinatorConfig, RequestBuilder,
+    ResponseHandle, WorkloadSpec,
 };

@@ -213,6 +213,52 @@ pub struct InferenceResponse {
     pub gpu_time_s: f64,
 }
 
+/// How a submitted request finally resolved — the typed, in-band form
+/// of the request lifecycle's four exits.  Before this enum existed a
+/// shed, a rejection and a backend failure all manifested to the client
+/// as the same dropped reply channel; the loadtest had to reconcile its
+/// error count against the coordinator's counters after the fact, and a
+/// fleet front tier could not tell "spill me elsewhere" (shed/rejected)
+/// from "infrastructure trouble" (lost).
+#[derive(Debug)]
+pub enum RequestOutcome {
+    /// Completed with a response (possibly past its deadline — see
+    /// [`InferenceResponse::deadline_met`]).  Boxed: the response
+    /// carries an image tensor and is much larger than the other arms.
+    Served(Box<InferenceResponse>),
+    /// Shed at intake: the deadline was already infeasible given queue
+    /// depth × predicted cost (shed-early instead of serve-late).
+    Shed,
+    /// Turned away by overload admission control (the deferred queue
+    /// outgrew the request's class budget).
+    Rejected,
+    /// The reply channel dropped without a verdict — backend execution
+    /// failure, unservable network, or coordinator shutdown.
+    /// Infrastructure loss, not load shedding.
+    Lost,
+}
+
+impl RequestOutcome {
+    /// Convert to the legacy `Result` shape ([`Served`] = `Ok`, every
+    /// denial = a descriptive error).
+    ///
+    /// [`Served`]: RequestOutcome::Served
+    pub fn into_response(self) -> anyhow::Result<InferenceResponse> {
+        match self {
+            RequestOutcome::Served(resp) => Ok(*resp),
+            RequestOutcome::Shed => Err(anyhow::anyhow!(
+                "request shed at intake (deadline infeasible)"
+            )),
+            RequestOutcome::Rejected => Err(anyhow::anyhow!(
+                "request rejected (overload admission control)"
+            )),
+            RequestOutcome::Lost => Err(anyhow::anyhow!(
+                "request dropped by coordinator"
+            )),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -247,6 +293,18 @@ mod tests {
         assert!((before - 0.010).abs() < 1e-9);
         let after = ctx.budget_s(d + Duration::from_millis(3)).unwrap();
         assert!((after + 0.003).abs() < 1e-9, "past deadline goes negative");
+    }
+
+    #[test]
+    fn denial_outcomes_map_to_descriptive_errors() {
+        for (outcome, needle) in [
+            (RequestOutcome::Shed, "shed"),
+            (RequestOutcome::Rejected, "rejected"),
+            (RequestOutcome::Lost, "dropped"),
+        ] {
+            let err = outcome.into_response().unwrap_err().to_string();
+            assert!(err.contains(needle), "{err}");
+        }
     }
 
     #[test]

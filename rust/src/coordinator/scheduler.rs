@@ -36,7 +36,7 @@ use super::batcher::{Batch, BatcherConfig, DynamicBatcher};
 use super::executor::LaneCmd;
 use super::metrics::MetricsRegistry;
 use super::registry::BackendRegistry;
-use super::request::{InferenceRequest, InferenceResponse};
+use super::request::{InferenceRequest, RequestOutcome};
 use super::routing::{choose_lane, retry_order, DeferredView, LaneView, Route};
 use crate::backend::CostModel;
 use crate::config::BackendCfg;
@@ -46,7 +46,7 @@ use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
 pub(crate) enum LeaderCmd {
-    Submit(InferenceRequest, mpsc::Sender<InferenceResponse>),
+    Submit(InferenceRequest, mpsc::Sender<RequestOutcome>),
     Shutdown,
 }
 
@@ -87,7 +87,7 @@ pub(crate) struct Scheduler {
     /// (per-network admission order preserved).
     deferred: Vec<Deferred>,
     defer_seq: u64,
-    waiters: HashMap<u64, mpsc::Sender<InferenceResponse>>,
+    waiters: HashMap<u64, mpsc::Sender<RequestOutcome>>,
     metrics: Arc<Mutex<MetricsRegistry>>,
 }
 
@@ -494,20 +494,20 @@ fn ingest(
             // admission control (4a): with this much work already
             // waiting for lane capacity, reject instead of queueing
             // unboundedly — the low class yields its budget first
-            // (dropping the reply errors the caller)
+            // (the caller observes a typed in-band denial)
             let budget = (s.cfg.admit_max_deferred as f64
                 * req.ctx.class.shed_fraction())
             .ceil() as usize;
             if s.deferred.len() >= budget.max(1) {
                 s.metrics.lock().unwrap().record_rejected();
-                drop(reply);
+                let _ = reply.send(RequestOutcome::Rejected);
                 return;
             }
             // shed-early (4b): a deadline no capable lane can meet is
             // turned away at arrival, not served late
             if s.intake_infeasible(&req, now) {
                 s.metrics.lock().unwrap().record_shed(req.ctx.class);
-                drop(reply);
+                let _ = reply.send(RequestOutcome::Shed);
                 return;
             }
             // refresh the live cost hint the batcher's slack cutting

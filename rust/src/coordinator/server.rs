@@ -20,7 +20,10 @@ use super::batcher::BatcherConfig;
 use super::executor::{lane_thread, LaneCmd, LaneShared, LaneSpec};
 use super::metrics::{MetricsRegistry, ServingReport};
 use super::registry::BackendRegistry;
-use super::request::{InferenceRequest, InferenceResponse, RequestCtx};
+use super::request::{
+    InferenceRequest, InferenceResponse, PriorityClass, RequestCtx,
+    RequestOutcome,
+};
 use super::scheduler::{leader_thread, LaneHandle, LeaderCmd};
 use crate::config::{BackendCfg, DeviceKind, Precision, QFormat};
 use crate::util::Rng;
@@ -110,22 +113,37 @@ pub struct WorkloadSpec {
     pub seed: u64,
 }
 
-/// Pending-response handle (resolves when the request's batch executes).
+/// Pending-outcome handle (resolves when the request's batch executes,
+/// or immediately with a typed denial when intake turns it away).
 pub struct ResponseHandle {
-    rx: mpsc::Receiver<InferenceResponse>,
+    rx: mpsc::Receiver<RequestOutcome>,
 }
 
 impl ResponseHandle {
+    /// Block until the request resolves and return the typed outcome —
+    /// [`RequestOutcome::Served`] / `Shed` / `Rejected`, with a dropped
+    /// reply channel normalized to [`RequestOutcome::Lost`].  This is
+    /// the exact-accounting surface: the loadtest and the fleet front
+    /// tier match on it instead of reconciling error counts after the
+    /// fact.
+    pub fn outcome(self) -> RequestOutcome {
+        self.rx.recv().unwrap_or(RequestOutcome::Lost)
+    }
+
+    /// Block for a response; every denial maps to a descriptive error
+    /// (the legacy `Result` shape most callers want).
     pub fn wait(self) -> Result<InferenceResponse> {
-        self.rx
-            .recv()
-            .map_err(|_| anyhow::anyhow!("request dropped by coordinator"))
+        self.outcome().into_response()
     }
 
     pub fn wait_timeout(self, dur: Duration) -> Result<InferenceResponse> {
-        self.rx
-            .recv_timeout(dur)
-            .map_err(|e| anyhow::anyhow!("response not ready: {e}"))
+        match self.rx.recv_timeout(dur) {
+            Ok(outcome) => outcome.into_response(),
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                RequestOutcome::Lost.into_response()
+            }
+            Err(e) => Err(anyhow::anyhow!("response not ready: {e}")),
+        }
     }
 }
 
@@ -141,8 +159,31 @@ pub struct CoordinatorClient {
 }
 
 impl CoordinatorClient {
+    /// Begin one request for `network` — the single client entry point.
+    /// Everything else (image count, latent seed, class, deadline,
+    /// arrival charge point) is builder state with sane defaults; the
+    /// builder ends in [`RequestBuilder::submit`] (a typed handle) or
+    /// [`RequestBuilder::blocking`].
+    pub fn request(&self, network: &str) -> RequestBuilder {
+        RequestBuilder::new(self.clone(), network)
+    }
+
     /// Submit one request under an explicit lifecycle context.
+    #[deprecated(
+        since = "0.2.0",
+        note = "use `request(network).images(n).ctx(ctx).submit()`"
+    )]
     pub fn submit_with(
+        &self,
+        network: &str,
+        n_images: usize,
+        ctx: RequestCtx,
+    ) -> Result<ResponseHandle> {
+        self.request(network).images(n_images).ctx(ctx).submit()
+    }
+
+    /// The submission primitive every builder terminal lands on.
+    fn send(
         &self,
         network: &str,
         n_images: usize,
@@ -155,6 +196,117 @@ impl CoordinatorClient {
             .send(LeaderCmd::Submit(req, tx))
             .map_err(|_| anyhow::anyhow!("coordinator is shut down"))?;
         Ok(ResponseHandle { rx })
+    }
+}
+
+/// Builder for one inference request — the public submission surface
+/// (`coordinator.request("mnist").images(2).seed(42).submit()`).
+///
+/// Defaults mirror the old `submit` shape: one image, seed 0, Normal
+/// class, best-effort (no deadline), arrival charged "now".  The
+/// deadline setters keep *relative* deadlines relative to whatever
+/// arrival is in force at submit time, so `.deadline_in(..)` and
+/// `.arrive_at(..)` compose in either order.
+#[must_use = "a request builder does nothing until .submit() or .blocking()"]
+pub struct RequestBuilder {
+    client: CoordinatorClient,
+    network: String,
+    n_images: usize,
+    seed: u64,
+    class: PriorityClass,
+    arrival: Instant,
+    deadline_at: Option<Instant>,
+    deadline_in: Option<Duration>,
+}
+
+impl RequestBuilder {
+    fn new(client: CoordinatorClient, network: &str) -> Self {
+        RequestBuilder {
+            client,
+            network: network.to_string(),
+            n_images: 1,
+            seed: 0,
+            class: PriorityClass::Normal,
+            arrival: Instant::now(),
+            deadline_at: None,
+            deadline_in: None,
+        }
+    }
+
+    /// Images to generate (the request payload size).  Default 1.
+    pub fn images(mut self, n: usize) -> Self {
+        self.n_images = n;
+        self
+    }
+
+    /// Latent seed (deterministic generation).  Default 0.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Priority class (the load-shedding axis).  Default Normal.
+    pub fn class(mut self, class: PriorityClass) -> Self {
+        self.class = class;
+        self
+    }
+
+    /// Absolute deadline (wins over [`Self::deadline_in`] if both are
+    /// set).  Default: best-effort.
+    pub fn deadline_at(mut self, deadline: Instant) -> Self {
+        self.deadline_at = Some(deadline);
+        self
+    }
+
+    /// Relative deadline, counted from the arrival charge point in
+    /// force at submit time.
+    pub fn deadline_in(mut self, budget: Duration) -> Self {
+        self.deadline_in = Some(budget);
+        self
+    }
+
+    /// Arrival instant the request is *charged from* (open-loop drivers
+    /// pass the scheduled arrival so generator lag counts against the
+    /// system).  Default: builder creation time.
+    pub fn arrive_at(mut self, arrival: Instant) -> Self {
+        self.arrival = arrival;
+        self
+    }
+
+    /// Replace the whole lifecycle context (arrival, deadline, class,
+    /// seed) with a pre-built one — the trace-replay path, where the
+    /// context is constructed once per event.
+    pub fn ctx(mut self, ctx: RequestCtx) -> Self {
+        self.arrival = ctx.arrival;
+        self.deadline_at = ctx.deadline;
+        self.deadline_in = None;
+        self.class = ctx.class;
+        self.seed = ctx.seed;
+        self
+    }
+
+    /// The context this builder would submit.
+    fn build_ctx(&self) -> RequestCtx {
+        RequestCtx {
+            arrival: self.arrival,
+            deadline: self
+                .deadline_at
+                .or_else(|| self.deadline_in.map(|d| self.arrival + d)),
+            class: self.class,
+            seed: self.seed,
+        }
+    }
+
+    /// Submit; returns a typed handle resolving when the request's
+    /// batch executes (or immediately with a typed denial).
+    pub fn submit(self) -> Result<ResponseHandle> {
+        let ctx = self.build_ctx();
+        self.client.send(&self.network, self.n_images, ctx)
+    }
+
+    /// Submit and block for the response (denials become errors).
+    pub fn blocking(self) -> Result<InferenceResponse> {
+        self.submit()?.wait()
     }
 }
 
@@ -309,38 +461,57 @@ impl Coordinator {
         }
     }
 
+    /// Begin one request for `network` — convenience for
+    /// `self.client().request(network)`; see
+    /// [`CoordinatorClient::request`].
+    pub fn request(&self, network: &str) -> RequestBuilder {
+        self.client().request(network)
+    }
+
     /// Submit one best-effort request arriving now; returns a handle
     /// resolving when its batch has executed.
+    #[deprecated(
+        since = "0.2.0",
+        note = "use `request(network).images(n).seed(s).submit()`"
+    )]
     pub fn submit(
         &self,
         network: &str,
         n_images: usize,
         seed: u64,
     ) -> Result<ResponseHandle> {
-        self.submit_with(network, n_images, RequestCtx::new(seed))
+        self.request(network).images(n_images).seed(seed).submit()
     }
 
     /// Submit one request under an explicit lifecycle context — the
     /// deadline-aware path: the caller stamps the (scheduled) arrival,
     /// absolute deadline and priority class, and the context flows
     /// intact through batching, routing, execution and telemetry.
+    #[deprecated(
+        since = "0.2.0",
+        note = "use `request(network).images(n).ctx(ctx).submit()`"
+    )]
     pub fn submit_with(
         &self,
         network: &str,
         n_images: usize,
         ctx: RequestCtx,
     ) -> Result<ResponseHandle> {
-        self.client().submit_with(network, n_images, ctx)
+        self.request(network).images(n_images).ctx(ctx).submit()
     }
 
     /// Submit and block for the response.
+    #[deprecated(
+        since = "0.2.0",
+        note = "use `request(network).images(n).seed(s).blocking()`"
+    )]
     pub fn submit_blocking(
         &self,
         network: &str,
         n_images: usize,
         seed: u64,
     ) -> Result<InferenceResponse> {
-        self.submit(network, n_images, seed)?.wait()
+        self.request(network).images(n_images).seed(seed).blocking()
     }
 
     /// Drive a synthetic open-loop workload and return the serving
@@ -352,11 +523,12 @@ impl Coordinator {
         let t0 = Instant::now();
         for i in 0..spec.requests {
             let seed = rng.next_u64();
-            handles.push(self.submit(
-                &spec.network,
-                spec.images_per_request,
-                seed,
-            )?);
+            handles.push(
+                self.request(&spec.network)
+                    .images(spec.images_per_request)
+                    .seed(seed)
+                    .submit()?,
+            );
             if i + 1 < spec.requests && !spec.interarrival.is_zero() {
                 let jitter = rng.range_f64(0.5, 1.5);
                 std::thread::sleep(spec.interarrival.mul_f64(jitter));
@@ -392,6 +564,26 @@ impl Coordinator {
         let mut m = self.metrics.lock().unwrap();
         m.set_wall(self.started.elapsed().as_secs_f64());
         m.report()
+    }
+
+    /// Clone of the raw metrics registry — the fleet front tier takes
+    /// one per site and folds them ([`MetricsRegistry::merge_from`])
+    /// into a fleet-level report.  Also how a site's telemetry survives
+    /// the site going dark: snapshot, then drop the coordinator.
+    pub fn metrics_snapshot(&self) -> MetricsRegistry {
+        self.metrics.lock().unwrap().clone()
+    }
+
+    /// Fail-stop the coordinator: drain in-flight work (every pending
+    /// reply channel resolves — served or `Lost` — before the leader
+    /// exits) and return the site's final telemetry.  This is the
+    /// drain-then-dark model the fleet's site-failure scenario uses: a
+    /// site that goes dark still contributes its shard to the merged
+    /// fleet report.
+    pub fn shutdown(self) -> MetricsRegistry {
+        let metrics = self.metrics.clone();
+        drop(self); // Drop sends Shutdown and joins the leader
+        metrics.lock().unwrap().clone()
     }
 }
 

@@ -1,0 +1,630 @@
+//! Distributed edge fleet: a front tier routing one recorded trace over
+//! N per-site coordinators (see DESIGN.md §Fleet).
+//!
+//! * [`placement`] — pluggable placement: requests hash to a home site
+//!   on a seeded consistent-hash ring (vnodes), so killing one site
+//!   re-places only that site's hash range; round-robin is the
+//!   unstable control.
+//! * [`site`] — one [`Site`] per coordinator: its own backend pool,
+//!   capacity and seeded clock skew; fail-stop mid-run with
+//!   drain-then-dark semantics.
+//! * [`run_fleet`] — the multi-machine trace replayer: fans one trace
+//!   across the sites (per-site arrival offsets from the skew model),
+//!   spills admission-control denials to the next site in preference
+//!   order (the spilled request keeps its *original* arrival stamp and
+//!   deadline — attainment stays honest), injects an optional site
+//!   failure, and folds the per-site telemetry shards
+//!   ([`MetricsRegistry::merge_from`]) into one fleet-level
+//!   [`ServingReport`] whose lanes are prefixed `s0/`, `s1/`, … so
+//!   per-site columns stay distinguishable.
+//!
+//! Accounting closes by construction: the front tier counts every
+//! request's single terminal outcome off its typed reply channel, so
+//! `submitted = served + shed + rejected + lost` regardless of how many
+//! times a request spilled.
+
+mod placement;
+mod site;
+
+pub use placement::{
+    placement_by_name, ConsistentHashRing, Placement, RoundRobin,
+};
+pub use site::Site;
+
+use crate::config::{BackendCfg, QFormat};
+use crate::coordinator::{
+    BatcherConfig, CoordinatorClient, CoordinatorConfig, MetricsRegistry,
+    RequestCtx, RequestOutcome, ResponseHandle, ServingReport,
+};
+use crate::util::{escape_json, Rng};
+use crate::workload::loadtest::event_ctx;
+use crate::workload::{Trace, TraceEvent};
+use anyhow::Result;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Version of the fleet JSON envelope (`fleet --json`); the embedded
+/// `report` object carries the [`ServingReport`] schema version.
+const FLEET_SCHEMA_VERSION: u64 = 1;
+
+/// Fleet construction options (the trace supplies the traffic).
+#[derive(Debug, Clone)]
+pub struct FleetCfg {
+    pub artifacts_dir: PathBuf,
+    /// Number of sites (per-site coordinators).
+    pub sites: usize,
+    /// Every site runs the same pool shape; per-site noise seeds are
+    /// drawn from `seed`.
+    pub backends: BackendCfg,
+    /// Lane-count override per site, as in
+    /// [`CoordinatorConfig::executors`].
+    pub executors: usize,
+    pub shard_batches: bool,
+    /// Placement kind: `hash` (consistent-hash ring) or `round-robin`.
+    pub placement: String,
+    /// Virtual nodes per site on the hash ring.
+    pub vnodes: usize,
+    /// Cross-site overflow: when a site's shed-early admission control
+    /// denies a request, re-submit it (original arrival + deadline) at
+    /// the next site in preference order.
+    pub spill: bool,
+    /// Max |clock skew| per site, seconds: each site gets a seeded
+    /// offset in `[-skew_s, +skew_s]` applied to arrivals scheduled
+    /// there (the multi-machine replay model).
+    pub skew_s: f64,
+    /// Fleet-level seed: ring geometry, per-site skews and noise seeds.
+    pub seed: u64,
+    /// Site-failure scenario: this site fail-stops at `fail_at_s`.
+    pub fail_site: Option<usize>,
+    /// Trace-time of the failure injection, seconds.
+    pub fail_at_s: f64,
+}
+
+impl Default for FleetCfg {
+    fn default() -> Self {
+        FleetCfg {
+            artifacts_dir: "artifacts".into(),
+            sites: 3,
+            backends: BackendCfg::default(),
+            executors: 0,
+            shard_batches: true,
+            placement: "hash".to_string(),
+            vnodes: 64,
+            spill: true,
+            skew_s: 0.0,
+            seed: 0,
+            fail_site: None,
+            fail_at_s: 0.0,
+        }
+    }
+}
+
+/// One site's front-tier summary line.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SiteSummary {
+    pub name: String,
+    pub skew_s: f64,
+    /// Requests initially placed at this site.
+    pub placed: u64,
+    /// Cross-site resubmissions that landed here.
+    pub spilled_in: u64,
+    /// Fail-stopped mid-run.
+    pub dark: bool,
+}
+
+/// Result of one fleet run: the merged fleet-level report plus the raw
+/// per-site telemetry shards it was folded from (lane-prefixed `s{i}/`,
+/// walls aligned to the fleet window) — exposed so callers can re-fold
+/// them in any association order and verify the merge invariants.
+#[derive(Debug, Clone)]
+pub struct FleetRun {
+    pub report: ServingReport,
+    pub shards: Vec<MetricsRegistry>,
+    pub sites: Vec<SiteSummary>,
+    pub placement: String,
+    pub spill: bool,
+    pub submitted: u64,
+    pub served: u64,
+    pub shed: u64,
+    pub rejected: u64,
+    pub lost: u64,
+    /// Requests that overflowed their home site at least once.
+    pub spilled: u64,
+    /// Spilled requests another site eventually served.
+    pub spill_served: u64,
+    pub wall_s: f64,
+}
+
+/// Fold per-site telemetry shards into one fleet registry.  Every
+/// constituent merge is associative and commutative, so any association
+/// order yields the same fleet report (the integration suite pins this
+/// bit-exactly via the JSON serialization).
+pub fn fold_shards(shards: &[MetricsRegistry]) -> MetricsRegistry {
+    let mut acc = MetricsRegistry::new();
+    for s in shards {
+        acc.merge_from(s);
+    }
+    acc
+}
+
+/// Front-tier terminal-outcome tally (one atomic bump per request).
+struct Tally {
+    served: AtomicU64,
+    shed: AtomicU64,
+    rejected: AtomicU64,
+    lost: AtomicU64,
+    spilled: AtomicU64,
+    spill_served: AtomicU64,
+    placed: Vec<AtomicU64>,
+    spilled_in: Vec<AtomicU64>,
+}
+
+impl Tally {
+    fn new(n_sites: usize) -> Tally {
+        Tally {
+            served: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            lost: AtomicU64::new(0),
+            spilled: AtomicU64::new(0),
+            spill_served: AtomicU64::new(0),
+            placed: (0..n_sites).map(|_| AtomicU64::new(0)).collect(),
+            spilled_in: (0..n_sites).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+}
+
+/// One in-flight request the waiter pool shepherds to its terminal
+/// outcome (following it across spill hops).
+struct Job {
+    network: String,
+    n_images: usize,
+    ctx: RequestCtx,
+    key: u64,
+    tried: Vec<usize>,
+    handle: ResponseHandle,
+}
+
+/// Submit at the first preferred site not yet tried; a dark site
+/// discovered here (closed submission channel) is marked dead so later
+/// placements skip it.  `None` = every preference exhausted.
+fn submit_next(
+    clients: &[CoordinatorClient],
+    alive: &[AtomicBool],
+    placement: &dyn Placement,
+    key: u64,
+    network: &str,
+    n_images: usize,
+    ctx: RequestCtx,
+    tried: &mut Vec<usize>,
+) -> Option<(usize, ResponseHandle)> {
+    loop {
+        let mask: Vec<bool> =
+            alive.iter().map(|a| a.load(Ordering::Relaxed)).collect();
+        let next = placement
+            .place(key, &mask)
+            .into_iter()
+            .find(|s| !tried.contains(s))?;
+        tried.push(next);
+        match clients[next].request(network).images(n_images).ctx(ctx).submit()
+        {
+            Ok(h) => return Some((next, h)),
+            Err(_) => alive[next].store(false, Ordering::Relaxed),
+        }
+    }
+}
+
+/// Follow one job to its terminal outcome, spilling denials to the next
+/// preferred site when enabled.  The resubmission reuses the job's
+/// original [`RequestCtx`] — arrival stamp and absolute deadline travel
+/// with the request, so deadline attainment charges the full cross-site
+/// journey.
+fn resolve(
+    job: Job,
+    clients: &[CoordinatorClient],
+    alive: &[AtomicBool],
+    placement: &dyn Placement,
+    spill: bool,
+    tally: &Tally,
+) {
+    let Job {
+        network,
+        n_images,
+        ctx,
+        key,
+        mut tried,
+        mut handle,
+    } = job;
+    let mut spills = 0u64;
+    loop {
+        let outcome = handle.outcome();
+        if let RequestOutcome::Served(_) = outcome {
+            tally.served.fetch_add(1, Ordering::Relaxed);
+            if spills > 0 {
+                tally.spill_served.fetch_add(1, Ordering::Relaxed);
+            }
+            return;
+        }
+        if spill {
+            if let Some((site, h)) = submit_next(
+                clients, alive, placement, key, &network, n_images, ctx,
+                &mut tried,
+            ) {
+                spills += 1;
+                if spills == 1 {
+                    tally.spilled.fetch_add(1, Ordering::Relaxed);
+                }
+                tally.spilled_in[site].fetch_add(1, Ordering::Relaxed);
+                handle = h;
+                continue;
+            }
+        }
+        let cell = match outcome {
+            RequestOutcome::Shed => &tally.shed,
+            RequestOutcome::Rejected => &tally.rejected,
+            _ => &tally.lost,
+        };
+        cell.fetch_add(1, Ordering::Relaxed);
+        return;
+    }
+}
+
+fn waiter_loop(
+    rx: &Mutex<mpsc::Receiver<Job>>,
+    clients: &[CoordinatorClient],
+    alive: &[AtomicBool],
+    placement: &dyn Placement,
+    spill: bool,
+    tally: &Tally,
+) {
+    loop {
+        // hold the lock only for the handoff, not while resolving
+        let job = { rx.lock().unwrap().recv() };
+        let Ok(job) = job else {
+            return; // submitter hung up and the queue is drained
+        };
+        resolve(job, clients, alive, placement, spill, tally);
+    }
+}
+
+/// Replay one trace across a fleet of `cfg.sites` coordinators and
+/// merge the per-site telemetry into a fleet-level report.
+pub fn run_fleet(trace: &Trace, cfg: &FleetCfg) -> Result<FleetRun> {
+    anyhow::ensure!(cfg.sites >= 1, "a fleet needs at least one site");
+    anyhow::ensure!(!trace.events.is_empty(), "trace has no events");
+    if let Some(fs) = cfg.fail_site {
+        anyhow::ensure!(
+            fs < cfg.sites,
+            "--fail-site {fs} out of range (fleet has {} sites)",
+            cfg.sites
+        );
+    }
+
+    let (networks, any_quant) = trace.networks();
+    let mut rng = Rng::seed_from_u64(cfg.seed);
+    let mut sites = Vec::with_capacity(cfg.sites);
+    for i in 0..cfg.sites {
+        let skew_s = rng.range_f64(-cfg.skew_s, cfg.skew_s);
+        let mut backends = cfg.backends.clone();
+        backends.noise_seed = rng.next_u64();
+        sites.push(Site::start(
+            format!("s{i}"),
+            skew_s,
+            CoordinatorConfig {
+                artifacts_dir: cfg.artifacts_dir.clone(),
+                networks: networks.clone(),
+                batcher: BatcherConfig::default(),
+                backends,
+                executors: cfg.executors,
+                quant: any_quant.then_some(QFormat::new(16, 8)),
+                shard_batches: cfg.shard_batches,
+            },
+        )?);
+    }
+    let placement =
+        placement_by_name(&cfg.placement, cfg.sites, cfg.vnodes, cfg.seed)?;
+    let placement: &dyn Placement = placement.as_ref();
+    let clients: Vec<CoordinatorClient> =
+        sites.iter().map(|s| s.client().expect("site started")).collect();
+
+    // Multi-machine replay plan: each event hashes to its home site
+    // (placement key derived from the event seed, stable across runs
+    // and replays), then gets that site's arrival offset applied.
+    struct Planned<'t> {
+        t_s: f64,
+        key: u64,
+        event: &'t TraceEvent,
+    }
+    let all_alive = vec![true; cfg.sites];
+    let mut planned: Vec<Planned> = trace
+        .events
+        .iter()
+        .map(|e| {
+            let key = Rng::seed_from_u64(e.seed).next_u64();
+            let home = placement.place(key, &all_alive)[0];
+            Planned {
+                t_s: (e.t_s + sites[home].skew_s).max(0.0),
+                key,
+                event: e,
+            }
+        })
+        .collect();
+    planned.sort_by(|a, b| a.t_s.total_cmp(&b.t_s));
+
+    let alive: Vec<AtomicBool> =
+        (0..cfg.sites).map(|_| AtomicBool::new(true)).collect();
+    let tally = Tally::new(cfg.sites);
+    let mut shards: Vec<Option<MetricsRegistry>> = vec![None; cfg.sites];
+    let mut dark = vec![false; cfg.sites];
+    let mut submitted = 0u64;
+    let waiters = (cfg.sites * 2).clamp(2, 8);
+    let (tx, rx) = mpsc::channel::<Job>();
+    let rx = Mutex::new(rx);
+    let t0 = Instant::now();
+
+    std::thread::scope(|s| {
+        for _ in 0..waiters {
+            s.spawn(|| {
+                waiter_loop(
+                    &rx, &clients, &alive, placement, cfg.spill, &tally,
+                )
+            });
+        }
+        let mut pending_fail = cfg.fail_site;
+        for p in &planned {
+            if let Some(fs) = pending_fail {
+                if p.t_s >= cfg.fail_at_s {
+                    // fail-stop: mark dark first (placements re-route
+                    // from here on), then drain and keep the shard
+                    alive[fs].store(false, Ordering::Relaxed);
+                    shards[fs] = sites[fs].shutdown();
+                    dark[fs] = true;
+                    pending_fail = None;
+                }
+            }
+            let target = t0 + Duration::from_secs_f64(p.t_s);
+            let now = Instant::now();
+            if target > now {
+                std::thread::sleep(target - now);
+            }
+            submitted += 1;
+            let ctx = event_ctx(p.event, target);
+            let mut tried = Vec::new();
+            match submit_next(
+                &clients,
+                &alive,
+                placement,
+                p.key,
+                &p.event.network,
+                p.event.n_images,
+                ctx,
+                &mut tried,
+            ) {
+                Some((home, handle)) => {
+                    tally.placed[home].fetch_add(1, Ordering::Relaxed);
+                    tx.send(Job {
+                        network: p.event.network.clone(),
+                        n_images: p.event.n_images,
+                        ctx,
+                        key: p.key,
+                        tried,
+                        handle,
+                    })
+                    .expect("waiter pool alive");
+                }
+                // the whole fleet is dark
+                None => {
+                    tally.lost.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+        drop(tx); // waiters drain the queue, then exit
+    });
+
+    let wall_s = t0.elapsed().as_secs_f64();
+    for (i, site) in sites.iter_mut().enumerate() {
+        if shards[i].is_none() {
+            shards[i] = site.shutdown();
+        }
+    }
+    let mut shards: Vec<MetricsRegistry> = shards
+        .into_iter()
+        .map(|s| s.expect("every site yields one shard"))
+        .collect();
+    for (i, shard) in shards.iter_mut().enumerate() {
+        // sites serve concurrently: every shard reports against the
+        // fleet measurement window (merge takes the max anyway)
+        shard.set_wall(wall_s);
+        shard.prefix_lanes(&format!("s{i}/"));
+    }
+    let report = fold_shards(&shards).report();
+
+    let site_rows = sites
+        .iter()
+        .enumerate()
+        .map(|(i, s)| SiteSummary {
+            name: s.name.clone(),
+            skew_s: s.skew_s,
+            placed: tally.placed[i].load(Ordering::Relaxed),
+            spilled_in: tally.spilled_in[i].load(Ordering::Relaxed),
+            dark: dark[i],
+        })
+        .collect();
+
+    Ok(FleetRun {
+        report,
+        shards,
+        sites: site_rows,
+        placement: placement.name().to_string(),
+        spill: cfg.spill,
+        submitted,
+        served: tally.served.load(Ordering::Relaxed),
+        shed: tally.shed.load(Ordering::Relaxed),
+        rejected: tally.rejected.load(Ordering::Relaxed),
+        lost: tally.lost.load(Ordering::Relaxed),
+        spilled: tally.spilled.load(Ordering::Relaxed),
+        spill_served: tally.spill_served.load(Ordering::Relaxed),
+        wall_s,
+    })
+}
+
+impl FleetRun {
+    /// Render the fleet summary followed by the merged serving report.
+    /// The `accounting:` line is the same shape the loadtest prints
+    /// (the CI smoke jobs parse both with one awk program).
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "== fleet: {} sites, placement {}, spill {}, wall {:.3} s ==\n",
+            self.sites.len(),
+            self.placement,
+            if self.spill { "on" } else { "off" },
+            self.wall_s,
+        );
+        for s in &self.sites {
+            out.push_str(&format!(
+                "site {}  skew {:+.1} ms  placed {}  spilled-in {}{}\n",
+                s.name,
+                s.skew_s * 1e3,
+                s.placed,
+                s.spilled_in,
+                if s.dark { "  [dark]" } else { "" },
+            ));
+        }
+        out.push_str(&format!(
+            "spill: {} spilled, {} served after spilling\n",
+            self.spilled, self.spill_served,
+        ));
+        out.push_str(&format!(
+            "accounting: submitted {} served {} shed {} rejected {} lost {}\n",
+            self.submitted, self.served, self.shed, self.rejected, self.lost,
+        ));
+        out.push_str(&self.report.render());
+        out
+    }
+
+    /// Serialize the fleet envelope (schema v1); the embedded `report`
+    /// is the versioned [`ServingReport`] schema, parseable on its own
+    /// with [`ServingReport::from_json`].
+    pub fn to_json(&self) -> String {
+        let sites = self
+            .sites
+            .iter()
+            .map(|s| {
+                format!(
+                    "    {{\"name\": \"{}\", \"skew_s\": {}, \
+                     \"placed\": {}, \"spilled_in\": {}, \"dark\": {}}}",
+                    escape_json(&s.name),
+                    s.skew_s,
+                    s.placed,
+                    s.spilled_in,
+                    s.dark,
+                )
+            })
+            .collect::<Vec<_>>()
+            .join(",\n");
+        format!(
+            "{{\n  \"version\": {FLEET_SCHEMA_VERSION},\n  \
+             \"placement\": \"{}\",\n  \"spill\": {},\n  \
+             \"submitted\": {},\n  \"served\": {},\n  \"shed\": {},\n  \
+             \"rejected\": {},\n  \"lost\": {},\n  \"spilled\": {},\n  \
+             \"spill_served\": {},\n  \"wall_s\": {},\n  \
+             \"sites\": [\n{}\n  ],\n  \"report\": {}\n}}\n",
+            escape_json(&self.placement),
+            self.spill,
+            self.submitted,
+            self.served,
+            self.shed,
+            self.rejected,
+            self.lost,
+            self.spilled,
+            self.spill_served,
+            self.wall_s,
+            sites,
+            self.report.to_json().trim_end(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::parse_json;
+
+    fn sample_run() -> FleetRun {
+        let mut shard = MetricsRegistry::new();
+        shard.set_wall(1.5);
+        shard.prefix_lanes("s0/");
+        FleetRun {
+            report: shard.report(),
+            shards: vec![shard],
+            sites: vec![SiteSummary {
+                name: "s0".to_string(),
+                skew_s: -0.0021,
+                placed: 12,
+                spilled_in: 3,
+                dark: true,
+            }],
+            placement: "hash".to_string(),
+            spill: true,
+            submitted: 12,
+            served: 9,
+            shed: 2,
+            rejected: 1,
+            lost: 0,
+            spilled: 3,
+            spill_served: 2,
+            wall_s: 1.5,
+        }
+    }
+
+    #[test]
+    fn render_accounting_line_matches_the_ci_contract() {
+        let text = sample_run().render();
+        let line = text
+            .lines()
+            .find(|l| l.starts_with("accounting:"))
+            .expect("accounting line present");
+        let f: Vec<&str> = line.split_whitespace().collect();
+        assert_eq!(
+            f,
+            vec![
+                "accounting:",
+                "submitted",
+                "12",
+                "served",
+                "9",
+                "shed",
+                "2",
+                "rejected",
+                "1",
+                "lost",
+                "0"
+            ]
+        );
+        assert!(text.contains("site s0"));
+        assert!(text.contains("[dark]"));
+    }
+
+    #[test]
+    fn fleet_json_envelope_parses_and_embeds_a_v1_report() {
+        let run = sample_run();
+        let v = parse_json(&run.to_json()).unwrap();
+        assert_eq!(v.req("version").unwrap().as_u64().unwrap(), 1);
+        assert_eq!(v.req("submitted").unwrap().as_u64().unwrap(), 12);
+        let sites = v.req("sites").unwrap().as_arr().unwrap();
+        assert_eq!(
+            sites[0].req("name").unwrap().as_str().unwrap(),
+            "s0"
+        );
+        // the embedded report is independently parseable + versioned
+        let report = v.req("report").unwrap();
+        assert_eq!(report.req("version").unwrap().as_u64().unwrap(), 1);
+        let round = ServingReport::from_json(
+            &run.report.to_json(),
+        )
+        .unwrap();
+        assert_eq!(round, run.report);
+    }
+}

@@ -1,0 +1,181 @@
+//! Pluggable request placement for the fleet front tier: a placement
+//! maps a request's stable hash key to a *preference-ordered* list of
+//! alive sites.  The head of the list is where the request runs; the
+//! tail is the spill order when the head's admission control turns it
+//! away (see `DESIGN.md` §Fleet).
+//!
+//! The default is a seeded consistent-hash ring with virtual nodes:
+//! when a site goes dark, only the keys that hashed *to that site*
+//! re-place — every other request keeps its home, which is exactly the
+//! property the site-failure scenario relies on (and
+//! `failure_moves_only_the_dead_sites_keys` pins).
+
+use crate::util::Rng;
+use anyhow::{bail, Result};
+
+/// Where a request may run, in preference order.
+pub trait Placement: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Preference-ordered distinct alive sites for `key`; empty when
+    /// the whole fleet is dark.  `alive[i]` gates site `i`.
+    fn place(&self, key: u64, alive: &[bool]) -> Vec<usize>;
+}
+
+/// Seeded consistent-hash ring: each site owns `vnodes` pseudo-random
+/// points on the u64 ring; a key belongs to the first point at or after
+/// it (clockwise), and the preference order is the clockwise sweep of
+/// distinct sites from there.
+pub struct ConsistentHashRing {
+    /// `(ring point, site)` sorted by point.
+    ring: Vec<(u64, usize)>,
+    n_sites: usize,
+}
+
+impl ConsistentHashRing {
+    pub fn new(n_sites: usize, vnodes: usize, seed: u64) -> ConsistentHashRing {
+        assert!(n_sites >= 1, "a fleet has at least one site");
+        let vnodes = vnodes.max(1);
+        let mut ring = Vec::with_capacity(n_sites * vnodes);
+        for site in 0..n_sites {
+            for v in 0..vnodes {
+                // independent, reproducible point per (seed, site, vnode)
+                let point = Rng::seed_from_u64(
+                    seed ^ (site as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                        ^ (v as u64 + 1).wrapping_mul(0xD1B5_4A32_D192_ED03),
+                )
+                .next_u64();
+                ring.push((point, site));
+            }
+        }
+        ring.sort_unstable();
+        ConsistentHashRing { ring, n_sites }
+    }
+}
+
+impl Placement for ConsistentHashRing {
+    fn name(&self) -> &'static str {
+        "hash"
+    }
+
+    fn place(&self, key: u64, alive: &[bool]) -> Vec<usize> {
+        let start =
+            self.ring.partition_point(|&(p, _)| p < key) % self.ring.len();
+        let mut order = Vec::new();
+        for i in 0..self.ring.len() {
+            let (_, site) = self.ring[(start + i) % self.ring.len()];
+            if alive.get(site).copied().unwrap_or(false)
+                && !order.contains(&site)
+            {
+                order.push(site);
+                if order.len() == self.n_sites {
+                    break;
+                }
+            }
+        }
+        order
+    }
+}
+
+/// Key-offset round robin — the control placement: cheap and uniform,
+/// but *every* key re-places when a site dies (no stability).
+pub struct RoundRobin {
+    pub n_sites: usize,
+}
+
+impl Placement for RoundRobin {
+    fn name(&self) -> &'static str {
+        "round-robin"
+    }
+
+    fn place(&self, key: u64, alive: &[bool]) -> Vec<usize> {
+        (0..self.n_sites)
+            .map(|i| ((key as usize).wrapping_add(i)) % self.n_sites)
+            .filter(|&s| alive.get(s).copied().unwrap_or(false))
+            .collect()
+    }
+}
+
+/// Construct a placement by CLI name (`--placement hash|round-robin`).
+pub fn placement_by_name(
+    name: &str,
+    n_sites: usize,
+    vnodes: usize,
+    seed: u64,
+) -> Result<Box<dyn Placement>> {
+    match name {
+        "hash" => Ok(Box::new(ConsistentHashRing::new(n_sites, vnodes, seed))),
+        "round-robin" | "rr" => Ok(Box::new(RoundRobin { n_sites })),
+        other => bail!("unknown placement {other:?} (hash|round-robin)"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn keys(n: usize) -> Vec<u64> {
+        let mut rng = Rng::seed_from_u64(0xFEED);
+        (0..n).map(|_| rng.next_u64()).collect()
+    }
+
+    #[test]
+    fn preference_lists_are_distinct_alive_sites() {
+        let ring = ConsistentHashRing::new(4, 16, 7);
+        let alive = [true, false, true, true];
+        for key in keys(200) {
+            let order = ring.place(key, &alive);
+            assert_eq!(order.len(), 3, "one dark site drops out");
+            let mut sorted = order.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), order.len(), "sites listed once");
+            assert!(!order.contains(&1), "dark site never placed");
+        }
+    }
+
+    #[test]
+    fn hash_ring_spreads_keys_over_every_site() {
+        let ring = ConsistentHashRing::new(3, 64, 42);
+        let alive = [true; 3];
+        let mut per_site = [0usize; 3];
+        for key in keys(600) {
+            per_site[ring.place(key, &alive)[0]] += 1;
+        }
+        for (site, &n) in per_site.iter().enumerate() {
+            assert!(
+                n > 600 / 10,
+                "site {site} starved: {per_site:?} (ring too lumpy)"
+            );
+        }
+    }
+
+    #[test]
+    fn failure_moves_only_the_dead_sites_keys() {
+        // the consistent-hash property: killing site 1 re-places site
+        // 1's keys and *no others*
+        let ring = ConsistentHashRing::new(3, 64, 42);
+        let all = [true; 3];
+        let degraded = [true, false, true];
+        let mut moved = 0usize;
+        for key in keys(400) {
+            let before = ring.place(key, &all)[0];
+            let after = ring.place(key, &degraded)[0];
+            if before == 1 {
+                moved += 1;
+                assert_ne!(after, 1);
+            } else {
+                assert_eq!(before, after, "live site's key moved");
+            }
+        }
+        assert!(moved > 0, "test needs some keys on the dead site");
+    }
+
+    #[test]
+    fn round_robin_re_places_everything_by_construction() {
+        let rr = RoundRobin { n_sites: 3 };
+        assert_eq!(rr.place(5, &[true; 3]), vec![2, 0, 1]);
+        assert_eq!(rr.place(5, &[true, true, false]), vec![0, 1]);
+        assert!(placement_by_name("warp", 3, 8, 0).is_err());
+    }
+}

@@ -1,0 +1,53 @@
+//! One edge site of the fleet: a named [`Coordinator`] instance owning
+//! its backend pool and capacity, plus the site-local clock skew the
+//! trace replayer applies to arrivals scheduled there.  A site can
+//! fail-stop mid-run ([`Site::shutdown`]): the coordinator drains
+//! in-flight work, goes dark, and hands back its final telemetry shard
+//! so the fleet report still accounts for everything it served.
+
+use crate::coordinator::{
+    Coordinator, CoordinatorClient, CoordinatorConfig, MetricsRegistry,
+};
+use anyhow::{Context, Result};
+
+pub struct Site {
+    /// Display name (`s0`, `s1`, …) — also the lane prefix its shard
+    /// carries in the merged fleet report (`s0/fpga0`).
+    pub name: String,
+    /// Clock skew the multi-machine replayer applies to arrivals
+    /// scheduled at this site, seconds (seeded, may be negative).
+    pub skew_s: f64,
+    coord: Option<Coordinator>,
+}
+
+impl Site {
+    pub fn start(
+        name: String,
+        skew_s: f64,
+        cfg: CoordinatorConfig,
+    ) -> Result<Site> {
+        let coord = Coordinator::start(cfg)
+            .with_context(|| format!("starting site {name}"))?;
+        Ok(Site {
+            name,
+            skew_s,
+            coord: Some(coord),
+        })
+    }
+
+    pub fn is_alive(&self) -> bool {
+        self.coord.is_some()
+    }
+
+    /// Submission handle; `None` once the site is dark.
+    pub fn client(&self) -> Option<CoordinatorClient> {
+        self.coord.as_ref().map(|c| c.client())
+    }
+
+    /// Fail-stop (or end-of-run collect): drain in-flight work, go
+    /// dark, return the final telemetry shard.  Idempotent — a second
+    /// call returns `None`.
+    pub fn shutdown(&mut self) -> Option<MetricsRegistry> {
+        self.coord.take().map(Coordinator::shutdown)
+    }
+}

@@ -54,6 +54,12 @@
 //! paper's run-to-run-stability verdict is a live, CI-checkable
 //! experiment (`edgedcnn loadtest`).
 //!
+//! The **fleet layer** ([`fleet`]) scales the coordinator out: a front
+//! tier consistent-hashes one recorded trace across N per-site
+//! coordinators (cross-site overflow spill, seeded clock skew, mid-run
+//! site failure) and folds the per-site telemetry shards into one
+//! fleet-level [`coordinator::ServingReport`] (`edgedcnn fleet`).
+//!
 //! See `DESIGN.md` for the full system inventory and the per-experiment
 //! index, and `EXPERIMENTS.md` for paper-vs-measured results.
 
@@ -64,6 +70,7 @@ pub mod coordinator;
 pub mod deconv;
 pub mod dse;
 pub mod experiments;
+pub mod fleet;
 pub mod fpga;
 pub mod gpu;
 pub mod quant;

@@ -8,17 +8,17 @@
 use anyhow::{bail, Result};
 use edgedcnn::artifacts::ArtifactDir;
 use edgedcnn::config::{
-    network_by_name, BackendCfg, Precision, JETSON_TX1, PYNQ_Z2,
+    network_by_name, PoolCfg, Precision, TrafficCfg, JETSON_TX1, PYNQ_Z2,
 };
 use edgedcnn::coordinator::{
     BatcherConfig, Coordinator, CoordinatorConfig, WorkloadSpec,
 };
 use edgedcnn::experiments as exp;
+use edgedcnn::fleet::{run_fleet, FleetCfg};
 use edgedcnn::quant::{QFormat, QuantizedGenerator, Rounding};
 use edgedcnn::runtime::Runtime;
-use edgedcnn::workload::{run_loadtest, LoadtestOpts, Scenario, Trace};
-use std::collections::HashMap;
-use std::path::Path;
+use edgedcnn::util::Flags;
+use edgedcnn::workload::{resolve_trace, run_loadtest, LoadtestOpts, Trace};
 use std::time::Duration;
 
 const USAGE: &str = "\
@@ -38,8 +38,8 @@ COMMANDS:
   networks                   Fig. 4 architectures and op counts
   serve     [--network NET] [--requests N] [--images K]
             [--interarrival-ms MS] [--seed S] [--executors E]
-            [--backends fpga,gpu,cpu] [--queue-depth D]
-            [--quant qI.F] [--shard]
+            [--backends fpga,gpu,cpu] [--queue-depth D] [--max-deferred N]
+            [--quant qI.F] [--shard] [--json]
                              drive the edge-serving coordinator over a
                              heterogeneous device-backend pool (one FIFO
                              lane per --backends entry; batches route to
@@ -52,7 +52,8 @@ COMMANDS:
                              lanes (intra-batch parallelism),
                              --queue-depth bounds each lane's queue
                              (backpressure), --executors E cycles the
-                             backends list to E lanes
+                             backends list to E lanes, --json prints the
+                             versioned report schema instead of the table
   loadtest  [--scenario NAME|FILE] [--trials N] [--requests N] [--seed S]
             [--backends fpga,gpu,cpu] [--queue-depth D] [--executors E]
             [--record FILE] [--replay FILE] [--no-shard] [--smoke]
@@ -81,6 +82,35 @@ COMMANDS:
                              --deadline-ms overrides the scenario's
                              relative deadline; --smoke is the short CI
                              mode
+  fleet     [--sites N] [--scenario NAME|FILE] [--requests N] [--seed S]
+            [--backends fpga,gpu,cpu] [--queue-depth D] [--max-deferred N]
+            [--executors E] [--placement hash|round-robin] [--vnodes V]
+            [--no-spill] [--skew-ms MS] [--fail-site I] [--fail-at-ms MS]
+            [--fleet-seed S] [--replay FILE] [--record FILE]
+            [--deadline-ms D] [--no-shard] [--smoke] [--json]
+                             distributed edge fleet: replay one trace
+                             across N per-site coordinators (each with
+                             its own backend pool and seeded clock skew
+                             of up to ±--skew-ms) behind a front tier
+                             that places requests by consistent hashing
+                             (--placement round-robin is the unstable
+                             control) and spills admission-control
+                             denials to the next site in preference
+                             order, keeping the original arrival stamp
+                             and deadline; per-site telemetry shards
+                             merge into one fleet-level report with
+                             s0/, s1/, … lane columns.  --fail-site I
+                             fail-stops site I at --fail-at-ms (trace
+                             time): it drains, goes dark, its hash
+                             range re-places, and its shard still
+                             merges.  Traffic flags (--scenario /
+                             --requests / --seed / --deadline-ms /
+                             --replay / --record) and pool flags
+                             (--backends / --queue-depth /
+                             --max-deferred / --executors) mean exactly
+                             what they do for loadtest; --json prints
+                             the fleet envelope with the embedded
+                             versioned report schema
   quant     [--network NET] [--samples N] [--seed S]
             [--bits B --frac F] [--export]
                              fixed-point quantized inference: sweep
@@ -97,50 +127,18 @@ COMMANDS:
   help                       this text
 ";
 
-/// Tiny flag parser: `--key value` pairs after the subcommand.
-struct Flags(HashMap<String, String>);
-
-impl Flags {
-    fn parse(args: &[String]) -> Result<Flags> {
-        let mut map = HashMap::new();
-        let mut i = 0;
-        while i < args.len() {
-            let a = &args[i];
-            if let Some(key) = a.strip_prefix("--") {
-                // boolean flags have no value or are followed by a flag
-                if i + 1 < args.len() && !args[i + 1].starts_with("--") {
-                    map.insert(key.to_string(), args[i + 1].clone());
-                    i += 2;
-                } else {
-                    map.insert(key.to_string(), "true".to_string());
-                    i += 1;
-                }
-            } else {
-                bail!("unexpected argument {a:?} (see `edgedcnn help`)");
-            }
-        }
-        Ok(Flags(map))
+/// Record the materialized trace when `--record` asked for it.
+fn maybe_record(trace: &Trace, traffic: &TrafficCfg) -> Result<()> {
+    if let Some(path) = &traffic.record {
+        trace.save(path)?;
+        println!(
+            "trace recorded to {} ({} events over {:.3} s)",
+            path.display(),
+            trace.events.len(),
+            trace.duration_s()
+        );
     }
-
-    fn get<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
-        match self.0.get(key) {
-            None => Ok(default),
-            Some(raw) => raw
-                .parse::<T>()
-                .map_err(|_| anyhow::anyhow!("bad value for --{key}: {raw}")),
-        }
-    }
-
-    fn get_str(&self, key: &str, default: &str) -> String {
-        self.0
-            .get(key)
-            .cloned()
-            .unwrap_or_else(|| default.to_string())
-    }
-
-    fn has(&self, key: &str) -> bool {
-        self.0.contains_key(key)
-    }
+    Ok(())
 }
 
 /// Parse the serve command's `--quant` flag: absent → `None`; a bare
@@ -264,7 +262,6 @@ fn main() -> Result<()> {
             let images = flags.get("images", 2usize)?;
             let interarrival_ms = flags.get("interarrival-ms", 2.0f64)?;
             let seed = flags.get("seed", 42u64)?;
-            let executors = flags.get("executors", 0usize)?;
             let mut quant = parse_quant_flag(&flags)?;
             if network.ends_with(".q") && quant.is_none() {
                 quant = Some(QFormat::new(16, 8)); // default q8.8 twin
@@ -274,19 +271,13 @@ fn main() -> Result<()> {
                 .strip_suffix(".q")
                 .unwrap_or(network.as_str())
                 .to_string();
-            let mut backends = BackendCfg::default();
-            if flags.has("backends") {
-                backends.kinds =
-                    BackendCfg::parse_kinds(&flags.get_str("backends", ""))?;
-            }
-            backends.max_queue_depth =
-                flags.get("queue-depth", backends.max_queue_depth)?;
+            let pool = PoolCfg::from_flags(&flags)?;
             let coord = Coordinator::start(CoordinatorConfig {
                 artifacts_dir,
                 networks: vec![base],
                 batcher: BatcherConfig::default(),
-                backends,
-                executors,
+                backends: pool.backends,
+                executors: pool.executors,
                 quant,
                 shard_batches: flags.has("shard"),
             })?;
@@ -297,52 +288,28 @@ fn main() -> Result<()> {
                 interarrival: Duration::from_secs_f64(interarrival_ms / 1e3),
                 seed,
             })?;
-            println!("{}", report.render());
+            if flags.has("json") {
+                print!("{}", report.to_json());
+            } else {
+                println!("{}", report.render());
+            }
         }
         "loadtest" => {
             let smoke = flags.has("smoke");
-            let mut scenario =
-                Scenario::resolve(&flags.get_str("scenario", "steady"))?;
-            scenario.seed = flags.get("seed", scenario.seed)?;
-            let default_requests =
-                if smoke { 24 } else { scenario.requests };
-            scenario.requests = flags.get("requests", default_requests)?;
-            if flags.has("deadline-ms") {
-                let d_ms: f64 = flags.get("deadline-ms", 0.0)?;
-                anyhow::ensure!(d_ms > 0.0, "--deadline-ms must be positive");
-                scenario.deadline_s = Some(d_ms / 1e3);
-            }
+            let pool = PoolCfg::from_flags(&flags)?;
+            let traffic = TrafficCfg::from_flags(&flags)?;
+            let trace = resolve_trace(&traffic, smoke)?;
+            maybe_record(&trace, &traffic)?;
             let trials =
                 flags.get("trials", if smoke { 1 } else { 5usize })?;
-            let trace = if flags.has("replay") {
-                Trace::load(Path::new(&flags.get_str("replay", "")))?
-            } else {
-                Trace::generate(&scenario)?
-            };
-            if flags.has("record") {
-                let path = flags.get_str("record", "trace.json");
-                trace.save(Path::new(&path))?;
-                println!(
-                    "trace recorded to {path} ({} events over {:.3} s)",
-                    trace.events.len(),
-                    trace.duration_s()
-                );
-            }
-            let mut backends = BackendCfg::default();
-            if flags.has("backends") {
-                backends.kinds =
-                    BackendCfg::parse_kinds(&flags.get_str("backends", ""))?;
-            }
-            backends.max_queue_depth =
-                flags.get("queue-depth", backends.max_queue_depth)?;
             let think_ms: f64 = flags.get("think-ms", 0.0)?;
             anyhow::ensure!(think_ms >= 0.0, "--think-ms must be >= 0");
             let report = run_loadtest(
                 &trace,
                 &LoadtestOpts {
                     artifacts_dir,
-                    backends,
-                    executors: flags.get("executors", 0usize)?,
+                    backends: pool.backends,
+                    executors: pool.executors,
                     trials,
                     shard_batches: !flags.has("no-shard"),
                     closed: flags.get("closed", 0usize)?,
@@ -350,6 +317,37 @@ fn main() -> Result<()> {
                 },
             )?;
             print!("{}", report.render());
+        }
+        "fleet" => {
+            let smoke = flags.has("smoke");
+            let pool = PoolCfg::from_flags(&flags)?;
+            let traffic = TrafficCfg::from_flags(&flags)?;
+            let trace = resolve_trace(&traffic, smoke)?;
+            maybe_record(&trace, &traffic)?;
+            let skew_ms: f64 = flags.get("skew-ms", 0.0)?;
+            anyhow::ensure!(skew_ms >= 0.0, "--skew-ms must be >= 0");
+            let fail_at_ms: f64 = flags.get("fail-at-ms", 0.0)?;
+            anyhow::ensure!(fail_at_ms >= 0.0, "--fail-at-ms must be >= 0");
+            let cfg = FleetCfg {
+                artifacts_dir,
+                sites: flags.get("sites", 3usize)?,
+                backends: pool.backends,
+                executors: pool.executors,
+                shard_batches: !flags.has("no-shard"),
+                placement: flags.get_str("placement", "hash"),
+                vnodes: flags.get("vnodes", 64usize)?,
+                spill: !flags.has("no-spill"),
+                skew_s: skew_ms / 1e3,
+                seed: flags.get("fleet-seed", trace.seed)?,
+                fail_site: flags.get_opt("fail-site")?,
+                fail_at_s: fail_at_ms / 1e3,
+            };
+            let run = run_fleet(&trace, &cfg)?;
+            if flags.has("json") {
+                print!("{}", run.to_json());
+            } else {
+                print!("{}", run.render());
+            }
         }
         "quant" => {
             let network = flags.get_str("network", "mnist");

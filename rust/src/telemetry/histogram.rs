@@ -304,6 +304,32 @@ impl WindowedHistogram {
         }
         out
     }
+
+    /// Merge another ring of identical geometry (per-site telemetry
+    /// shards → the fleet report).  Each slot resolves by **max epoch**:
+    /// the newer slice wins the slot outright, equal epochs merge their
+    /// histograms, older slices are dropped — the same aging rule
+    /// [`Self::record`] applies when the ring wraps.  Taking the newest
+    /// epoch is a join (max) and equal-epoch histogram merging is
+    /// commutative + associative, so the slot resolution is a
+    /// semilattice: fleet folds give the same ring in any association
+    /// order (asserted by a property test).
+    pub fn merge(&mut self, other: &WindowedHistogram) {
+        assert_eq!(self.ring.len(), other.ring.len(), "ring length mismatch");
+        assert!(self.slice_s == other.slice_s, "window slice mismatch");
+        for (slot, theirs) in other.ring.iter().enumerate() {
+            if theirs.epoch == u64::MAX {
+                continue;
+            }
+            let ours = &mut self.ring[slot];
+            if ours.epoch == theirs.epoch {
+                ours.hist.merge(&theirs.hist);
+            } else if ours.epoch == u64::MAX || ours.epoch < theirs.epoch {
+                *ours = theirs.clone();
+            }
+            // else ours is newer: the other's slice already aged out
+        }
+    }
 }
 
 #[cfg(test)]
@@ -465,6 +491,85 @@ mod tests {
         assert_eq!(hot, vec![2.0], "burst pinned to the [2.0, 2.5) slice");
         // merged view equals the sum of the windows
         assert_eq!(w.merged().count(), 250);
+    }
+
+    /// Exact fingerprint of a ring's retained state (start times plus
+    /// bucket occupancy per window) — what the associativity assertions
+    /// compare.
+    fn ring_fingerprint(w: &WindowedHistogram) -> Vec<(u64, u64, Vec<u64>)> {
+        w.windows()
+            .iter()
+            .map(|(t, h)| {
+                let (under, counts) = h.buckets();
+                ((*t * 1000.0).round() as u64, under, counts.to_vec())
+            })
+            .collect()
+    }
+
+    #[test]
+    fn prop_windowed_merge_is_associative_across_three_shards() {
+        // three sites record into their own rings over overlapping (but
+        // not identical) time ranges, including epochs far enough apart
+        // that ring slots collide and the max-epoch rule must fire
+        let mut rng = Rng::seed_from_u64(0xF1EE7);
+        for case in 0..50 {
+            let len = 4;
+            let mk = || WindowedHistogram::latency_default(0.5, len);
+            let mut shards = [mk(), mk(), mk()];
+            for (i, s) in shards.iter_mut().enumerate() {
+                let n = rng.range_usize(5, 60);
+                for _ in 0..n {
+                    // per-site time offset forces slot collisions at
+                    // different epochs between shards
+                    let t = rng.range_f64(0.0, 3.0) + i as f64 * 0.7;
+                    s.record(t, log_uniform(&mut rng, 1e-4, 1e-1));
+                }
+            }
+            let [a, b, c] = &shards;
+            // fold(fold(a, b), c)
+            let mut left = a.clone();
+            left.merge(b);
+            left.merge(c);
+            // fold(a, fold(b, c))
+            let mut bc = b.clone();
+            bc.merge(c);
+            let mut right = a.clone();
+            right.merge(&bc);
+            assert_eq!(
+                ring_fingerprint(&left),
+                ring_fingerprint(&right),
+                "case {case}: associativity"
+            );
+            // commutativity of the same fold
+            let mut rev = c.clone();
+            rev.merge(b);
+            rev.merge(a);
+            assert_eq!(ring_fingerprint(&left), ring_fingerprint(&rev));
+        }
+    }
+
+    #[test]
+    fn windowed_merge_resolves_slot_collisions_by_max_epoch() {
+        // len-2 ring: epochs 0 and 2 map to slot 0; the merge must keep
+        // the *newer* slice, exactly like record()'s wrap rule
+        let mut old = WindowedHistogram::latency_default(1.0, 2);
+        old.record(0.5, 0.001); // epoch 0 → slot 0
+        let mut new = WindowedHistogram::latency_default(1.0, 2);
+        new.record(2.5, 0.004); // epoch 2 → slot 0
+        let mut a = old.clone();
+        a.merge(&new);
+        let starts: Vec<f64> = a.windows().iter().map(|(t, _)| *t).collect();
+        assert_eq!(starts, vec![2.0], "newer epoch wins the slot");
+        // merging the other direction drops the stale slice instead
+        let mut b = new.clone();
+        b.merge(&old);
+        assert_eq!(ring_fingerprint(&a), ring_fingerprint(&b));
+        // equal epochs merge counts
+        let mut c = WindowedHistogram::latency_default(1.0, 2);
+        c.record(2.2, 0.002);
+        c.merge(&new);
+        assert_eq!(c.merged().count(), 2);
+        assert_eq!(c.windows().len(), 1);
     }
 
     #[test]

@@ -85,6 +85,41 @@ mod tests {
     }
 
     #[test]
+    fn merge_is_associative_across_three_shards() {
+        // the property the fleet fold relies on: fold(a, fold(b, c)) ==
+        // fold(fold(a, b), c) == counting the concatenated stream
+        let streams = [
+            vec![0.01, 0.09, 0.20],
+            vec![0.05, 0.11],
+            vec![0.02, 0.02, 0.30, 0.04],
+        ];
+        let shard = |vals: &[f64]| {
+            let mut s = SloCounter::new(0.1);
+            for v in vals {
+                s.record(*v);
+            }
+            s
+        };
+        let [a, b, c] = [shard(&streams[0]), shard(&streams[1]), shard(&streams[2])];
+        let mut left = a; // Copy
+        left.merge(&b);
+        left.merge(&c);
+        let mut bc = b;
+        bc.merge(&c);
+        let mut right = a;
+        right.merge(&bc);
+        let mut direct = SloCounter::new(0.1);
+        for v in streams.iter().flatten() {
+            direct.record(*v);
+        }
+        for s in [left, right] {
+            assert_eq!(s.total(), direct.total());
+            assert_eq!(s.met(), direct.met());
+            assert_eq!(s.attainment(), direct.attainment());
+        }
+    }
+
+    #[test]
     #[should_panic]
     fn merge_rejects_threshold_mismatch() {
         let mut a = SloCounter::new(0.1);

@@ -1,0 +1,99 @@
+//! Tiny CLI flag parser — `--key value` pairs after a subcommand (the
+//! offline build environment mirrors only the `xla` dependency closure,
+//! so no clap).  Promoted out of `main.rs` so the shared config layer
+//! ([`crate::config::PoolCfg`] / [`crate::config::TrafficCfg`]) can
+//! parse the same flags with identical semantics for every subcommand.
+
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+
+/// Parsed `--key value` flags; a `--key` followed by another flag (or
+/// nothing) is a boolean and reads back as `"true"`.
+pub struct Flags(HashMap<String, String>);
+
+impl Flags {
+    pub fn parse(args: &[String]) -> Result<Flags> {
+        let mut map = HashMap::new();
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if let Some(key) = a.strip_prefix("--") {
+                // boolean flags have no value or are followed by a flag
+                if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                    map.insert(key.to_string(), args[i + 1].clone());
+                    i += 2;
+                } else {
+                    map.insert(key.to_string(), "true".to_string());
+                    i += 1;
+                }
+            } else {
+                bail!("unexpected argument {a:?} (see `edgedcnn help`)");
+            }
+        }
+        Ok(Flags(map))
+    }
+
+    /// Typed lookup with a default for absent flags; a present flag
+    /// that fails to parse is an error, not the default.
+    pub fn get<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.0.get(key) {
+            None => Ok(default),
+            Some(raw) => raw
+                .parse::<T>()
+                .map_err(|_| anyhow::anyhow!("bad value for --{key}: {raw}")),
+        }
+    }
+
+    /// Typed lookup that distinguishes "absent" from any value.
+    pub fn get_opt<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>> {
+        match self.0.get(key) {
+            None => Ok(None),
+            Some(raw) => raw
+                .parse::<T>()
+                .map(Some)
+                .map_err(|_| anyhow::anyhow!("bad value for --{key}: {raw}")),
+        }
+    }
+
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        self.0
+            .get(key)
+            .cloned()
+            .unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.0.contains_key(key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|a| a.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_pairs_booleans_and_typed_values() {
+        let f = Flags::parse(&argv(&[
+            "--requests", "24", "--shard", "--scenario", "flash",
+        ]))
+        .unwrap();
+        assert_eq!(f.get("requests", 0usize).unwrap(), 24);
+        assert!(f.has("shard"));
+        assert_eq!(f.get_str("scenario", "steady"), "flash");
+        assert_eq!(f.get_str("missing", "fallback"), "fallback");
+        assert_eq!(f.get_opt::<u64>("requests").unwrap(), Some(24));
+        assert_eq!(f.get_opt::<u64>("missing").unwrap(), None);
+    }
+
+    #[test]
+    fn rejects_positional_args_and_bad_values() {
+        assert!(Flags::parse(&argv(&["oops"])).is_err());
+        let f = Flags::parse(&argv(&["--requests", "many"])).unwrap();
+        assert!(f.get("requests", 0usize).is_err());
+        assert!(f.get_opt::<usize>("requests").is_err());
+    }
+}

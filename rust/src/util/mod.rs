@@ -4,12 +4,14 @@
 //! at the size this project actually needs.
 
 mod bench;
+mod flags;
 mod json;
 mod pool;
 mod rng;
 mod tempdir;
 
 pub use bench::{bench_header, smoke_mode, BenchReport, Bencher};
+pub use flags::Flags;
 pub use json::{escape_json, parse_json, Json};
 pub use pool::WorkerPool;
 pub use rng::Rng;

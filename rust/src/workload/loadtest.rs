@@ -37,8 +37,8 @@
 use super::trace::{Trace, TraceEvent};
 use crate::config::{BackendCfg, QFormat};
 use crate::coordinator::{
-    BatcherConfig, Coordinator, CoordinatorConfig, InferenceResponse,
-    LatencyReport, RequestCtx,
+    BatcherConfig, Coordinator, CoordinatorConfig, LatencyReport, RequestCtx,
+    RequestOutcome,
 };
 use crate::stats::Welford;
 use crate::telemetry::{
@@ -237,7 +237,9 @@ fn quantiles(h: &LogHistogram) -> LatencyReport {
 /// The request context one trace event submits under: arrival is the
 /// caller-chosen charge point (scheduled target in open loop, "now" in
 /// closed loop), the absolute deadline and class come off the event.
-fn event_ctx(e: &TraceEvent, arrival: Instant) -> RequestCtx {
+/// Shared with the fleet driver so a spilled request re-submits under
+/// the *same* context it first arrived with.
+pub(crate) fn event_ctx(e: &TraceEvent, arrival: Instant) -> RequestCtx {
     RequestCtx {
         arrival,
         deadline: e
@@ -249,8 +251,10 @@ fn event_ctx(e: &TraceEvent, arrival: Instant) -> RequestCtx {
 }
 
 /// One trial's raw outcomes: per request, the (network, n_images) it
-/// asked for and how it resolved.
-type Outcome = (String, usize, Result<InferenceResponse>);
+/// asked for and the typed outcome it resolved to — served / shed /
+/// rejected / lost straight off the reply channel, so the accounting
+/// below is exact instead of reconciled against coordinator counters.
+type Outcome = (String, usize, RequestOutcome);
 
 /// Open-loop submission at the scheduled timestamps; latency is charged
 /// from the scheduled arrival via the request context itself.
@@ -267,12 +271,16 @@ fn drive_open_loop(coord: &Coordinator, trace: &Trace) -> Result<Vec<Outcome>> {
         // arrival stays the *scheduled* instant (coordinated omission)
         pending.push((
             e,
-            coord.submit_with(&e.network, e.n_images, event_ctx(e, target))?,
+            coord
+                .request(&e.network)
+                .images(e.n_images)
+                .ctx(event_ctx(e, target))
+                .submit()?,
         ));
     }
     Ok(pending
         .into_iter()
-        .map(|(e, h)| (e.network.clone(), e.n_images, h.wait()))
+        .map(|(e, h)| (e.network.clone(), e.n_images, h.outcome()))
         .collect())
 }
 
@@ -297,17 +305,21 @@ fn drive_closed_loop(
             scope.spawn(move || loop {
                 let next = queue.lock().unwrap().pop_front();
                 let Some(e) = next else { break };
-                let res = client
-                    .submit_with(
-                        &e.network,
-                        e.n_images,
-                        event_ctx(e, Instant::now()),
-                    )
-                    .and_then(|h| h.wait());
+                let outcome = match client
+                    .request(&e.network)
+                    .images(e.n_images)
+                    .ctx(event_ctx(e, Instant::now()))
+                    .submit()
+                {
+                    Ok(h) => h.outcome(),
+                    // submission failed = coordinator gone: the request
+                    // never entered the system, count it lost
+                    Err(_) => RequestOutcome::Lost,
+                };
                 results
                     .lock()
                     .unwrap()
-                    .push((e.network.clone(), e.n_images, res));
+                    .push((e.network.clone(), e.n_images, outcome));
                 if !think.is_zero() {
                     std::thread::sleep(think);
                 }
@@ -361,10 +373,11 @@ pub fn run_loadtest(trace: &Trace, opts: &LoadtestOpts) -> Result<LoadtestReport
             drive_open_loop(&coord, trace)?
         };
         let mut trial_hist = LogHistogram::latency_default();
-        let mut trial_errors = 0u64;
+        let mut trial_shed = 0u64;
+        let mut trial_rejected = 0u64;
         for (network, n_images, outcome) in outcomes {
             match outcome {
-                Ok(resp) => {
+                RequestOutcome::Served(resp) => {
                     served += 1;
                     let latency = resp.latency_s;
                     overall.record(latency);
@@ -388,25 +401,17 @@ pub fn run_loadtest(trace: &Trace, opts: &LoadtestOpts) -> Result<LoadtestReport
                         .push(per_image);
                     lane.dev_all.push(per_image);
                 }
-                // dropped reply: shed at intake, overload rejection or
-                // backend failure (told apart below via the
-                // coordinator's own counters)
-                Err(_) => trial_errors += 1,
+                RequestOutcome::Shed => trial_shed += 1,
+                RequestOutcome::Rejected => trial_rejected += 1,
+                RequestOutcome::Lost => lost += 1,
             }
         }
         let wall = t0.elapsed().as_secs_f64();
         walls.push(wall);
 
         let report = coord.report_for_wall(wall);
-        // the coordinator knows how many it *chose* to turn away (shed
-        // = deadline infeasible, rejected = overload); any further
-        // dropped replies were execution failures
-        let trial_shed = report.shed.min(trial_errors);
-        let trial_rejected =
-            report.rejected.min(trial_errors - trial_shed);
         shed += trial_shed;
         rejected += trial_rejected;
-        lost += trial_errors - trial_shed - trial_rejected;
         deferred += report.deferred;
         for b in &report.per_backend {
             let lane = lanes

@@ -32,3 +32,31 @@ pub use loadtest::{
 };
 pub use scenario::{MixEntry, Scenario};
 pub use trace::{Trace, TraceEvent};
+
+use crate::config::TrafficCfg;
+use anyhow::Result;
+
+/// Materialize the trace a [`TrafficCfg`] names — the one place the
+/// serve/loadtest/fleet subcommands turn shared traffic flags into
+/// traffic: `replay` wins over `scenario`, then the explicit
+/// seed/requests/deadline overrides apply before generation.  `smoke`
+/// shrinks the default request budget for CI when the caller didn't pin
+/// one.
+pub fn resolve_trace(traffic: &TrafficCfg, smoke: bool) -> Result<Trace> {
+    if let Some(path) = &traffic.replay {
+        return Trace::load(path);
+    }
+    let mut scenario = Scenario::resolve(&traffic.scenario)?;
+    if let Some(seed) = traffic.seed {
+        scenario.seed = seed;
+    }
+    scenario.requests = match traffic.requests {
+        Some(n) => n,
+        None if smoke => 24,
+        None => scenario.requests,
+    };
+    if traffic.deadline_s.is_some() {
+        scenario.deadline_s = traffic.deadline_s;
+    }
+    Trace::generate(&scenario)
+}

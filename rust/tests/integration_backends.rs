@@ -84,7 +84,7 @@ fn f32_outputs_bit_identical_across_backends() {
     let mut images: Vec<(String, Vec<f32>)> = Vec::new();
     for kind in MIXED {
         let coord = start_pool(&dir, vec![kind], None).unwrap();
-        let resp = coord.submit_blocking("mnist", 3, 4242).unwrap();
+        let resp = coord.request("mnist").images(3).seed(4242).blocking().unwrap();
         assert_eq!(resp.images.shape(), &[3, 1, 28, 28]);
         assert!(
             resp.backend.starts_with(kind.as_str()),
@@ -110,7 +110,7 @@ fn ordering_preserved_per_network() {
     // rapid-fire burst: batches spread over the pool, but a network's
     // batches must execute in submission order (lane pinning + FIFO)
     let handles: Vec<_> = (0..24)
-        .map(|i| coord.submit("mnist", 1, 5000 + i).unwrap())
+        .map(|i| coord.request("mnist").images(1).seed(5000 + i).submit().unwrap())
         .collect();
     let responses: Vec<_> =
         handles.into_iter().map(|h| h.wait().unwrap()).collect();
@@ -175,7 +175,7 @@ fn unservable_network_fails_at_startup() {
 fn sharded_mixed_pool_stays_deterministic() {
     let dir = synthetic_dir();
     let plain = start_pool(&dir, MIXED.to_vec(), None).unwrap();
-    let reference = plain.submit_blocking("mnist", 2, 777).unwrap();
+    let reference = plain.request("mnist").images(2).seed(777).blocking().unwrap();
     drop(plain);
     let sharded = Coordinator::start(CoordinatorConfig {
         artifacts_dir: dir.path().to_path_buf(),
@@ -195,7 +195,7 @@ fn sharded_mixed_pool_stays_deterministic() {
     .unwrap();
     // a burst that batches then shards across the capable lanes
     let handles: Vec<_> = (0..8)
-        .map(|_| sharded.submit("mnist", 2, 777).unwrap())
+        .map(|_| sharded.request("mnist").images(2).seed(777).submit().unwrap())
         .collect();
     for h in handles {
         let resp = h.wait().unwrap();

@@ -28,11 +28,11 @@ fn start_coordinator(networks: &[&str]) -> Option<Coordinator> {
 #[test]
 fn serves_single_requests_deterministically() {
     let Some(coord) = start_coordinator(&["mnist"]) else { return };
-    let a = coord.submit_blocking("mnist", 2, 777).unwrap();
-    let b = coord.submit_blocking("mnist", 2, 777).unwrap();
+    let a = coord.request("mnist").images(2).seed(777).blocking().unwrap();
+    let b = coord.request("mnist").images(2).seed(777).blocking().unwrap();
     assert_eq!(a.images.shape(), &[2, 1, 28, 28]);
     assert_eq!(a.images.data(), b.images.data(), "seeded determinism");
-    let c = coord.submit_blocking("mnist", 2, 778).unwrap();
+    let c = coord.request("mnist").images(2).seed(778).blocking().unwrap();
     assert!(
         a.images.max_abs_diff(&c.images) > 0.0,
         "different seeds differ"
@@ -48,7 +48,7 @@ fn concurrent_requests_get_batched() {
     let Some(coord) = start_coordinator(&["mnist"]) else { return };
     // submit a burst without waiting; the batcher should coalesce
     let handles: Vec<_> = (0..8)
-        .map(|i| coord.submit("mnist", 1, 1000 + i).unwrap())
+        .map(|i| coord.request("mnist").images(1).seed(1000 + i).submit().unwrap())
         .collect();
     let responses: Vec<_> =
         handles.into_iter().map(|h| h.wait().unwrap()).collect();
@@ -93,8 +93,8 @@ fn serves_multiple_networks() {
     let Some(coord) = start_coordinator(&["mnist", "celeba"]) else {
         return;
     };
-    let m = coord.submit_blocking("mnist", 1, 1).unwrap();
-    let c = coord.submit_blocking("celeba", 1, 1).unwrap();
+    let m = coord.request("mnist").images(1).seed(1).blocking().unwrap();
+    let c = coord.request("celeba").images(1).seed(1).blocking().unwrap();
     assert_eq!(m.images.shape(), &[1, 1, 28, 28]);
     assert_eq!(c.images.shape(), &[1, 3, 64, 64]);
     // celeba is ~20x the ops: its edge annotation must be slower
@@ -107,8 +107,8 @@ fn unknown_network_fails_cleanly() {
     // request for an unloaded network: the device errors, the handle
     // resolves with an error (request dropped), but the coordinator
     // survives and keeps serving
-    let bad = coord.submit_blocking("imagenet", 1, 0);
+    let bad = coord.request("imagenet").images(1).seed(0).blocking();
     assert!(bad.is_err());
-    let good = coord.submit_blocking("mnist", 1, 0);
+    let good = coord.request("mnist").images(1).seed(0).blocking();
     assert!(good.is_ok(), "coordinator must survive a bad request");
 }

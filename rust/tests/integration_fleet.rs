@@ -1,0 +1,260 @@
+//! Fleet integration: a multi-site coordinator fleet replaying one
+//! recorded trace end to end against a synthetic artifact set.  Pins
+//! the ISSUE-level acceptance claims: (1) a 3-site fleet's merged
+//! [`ServingReport`] is **bit-identical** to folding the same per-site
+//! telemetry shards directly (and any association order agrees on every
+//! counter/quantile, with float-derived columns equal to rounding);
+//! (2) cross-site overflow spill engages under a flash crowd with the
+//! `submitted = served + shed + rejected + lost` accounting intact;
+//! (3) the versioned JSON report schema round-trips; (4) a mid-run site
+//! failure goes drain-then-dark and the fold still closes.
+
+use edgedcnn::artifacts::write_synthetic;
+use edgedcnn::config::{BackendCfg, DeviceKind};
+use edgedcnn::coordinator::ServingReport;
+use edgedcnn::fleet::{fold_shards, run_fleet, FleetCfg};
+use edgedcnn::util::{parse_json, TempDir};
+use edgedcnn::workload::{Scenario, Trace};
+
+fn synthetic_dir() -> TempDir {
+    let dir = TempDir::new().unwrap();
+    write_synthetic(dir.path(), &["mnist"], 2, 17).unwrap();
+    dir
+}
+
+/// Equal to floating-point rounding: merge order may legally reorder
+/// f64 summation, so derived columns (means, CVs) agree to ulps, not
+/// necessarily bits.
+fn close(a: f64, b: f64, what: &str) {
+    let tol = 1e-9 * (a.abs() + b.abs() + 1.0);
+    assert!((a - b).abs() <= tol, "{what}: {a} vs {b}");
+}
+
+/// The headline acceptance run: a recorded steady trace fanned over
+/// three sites; the fleet report must *be* the fold of the per-site
+/// shards, bit-identically, and the schema must round-trip.
+#[test]
+fn three_site_fleet_on_a_recorded_trace_folds_bit_identically() {
+    let dir = synthetic_dir();
+    let mut scenario = Scenario::builtin("steady").unwrap();
+    scenario.requests = 36;
+    let generated = Trace::generate(&scenario).unwrap();
+    let trace_path = dir.path().join("trace.json");
+    generated.save(&trace_path).unwrap();
+    // the fleet replays the *recorded* trace, as a driver box would
+    let trace = Trace::load(&trace_path).unwrap();
+    assert_eq!(trace, generated, "record → replay is exact");
+
+    let run = run_fleet(
+        &trace,
+        &FleetCfg {
+            artifacts_dir: dir.path().to_path_buf(),
+            sites: 3,
+            skew_s: 0.002,
+            seed: 7,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+
+    // every submission reaches exactly one terminal outcome
+    assert_eq!(run.submitted, 36);
+    assert_eq!(
+        run.submitted,
+        run.served + run.shed + run.rejected + run.lost,
+        "accounting must close"
+    );
+    assert!(run.served > 0, "steady load at a 50 ms deadline must serve");
+    assert_eq!(run.shards.len(), 3);
+    let placed: u64 = run.sites.iter().map(|s| s.placed).sum();
+    assert_eq!(placed, run.submitted, "each event has one home site");
+    assert!(
+        run.sites.iter().filter(|s| s.placed > 0).count() >= 2,
+        "hash placement must spread the trace across sites: {:?}",
+        run.sites
+    );
+
+    // (1a) merged fleet report == direct fold of the shards, bit-exact
+    let direct = fold_shards(&run.shards).report();
+    assert_eq!(
+        direct.to_json(),
+        run.report.to_json(),
+        "fleet report is the direct shard fold"
+    );
+    // (1b) pairwise left fold == direct fold: merging into an empty
+    // registry is lossless, so both run the same f64 op sequence
+    let mut ab = run.shards[0].clone();
+    ab.merge_from(&run.shards[1]);
+    ab.merge_from(&run.shards[2]);
+    assert_eq!(
+        ab.report().to_json(),
+        run.report.to_json(),
+        "fold(fold(a,b),c) == direct aggregate, bit-identical"
+    );
+
+    // (1c) the opposite association: counters, quantiles and extremes
+    // are set/sum-monoid exact in any order; float-derived columns
+    // agree to rounding (f64 summation reorders)
+    let mut bc = run.shards[1].clone();
+    bc.merge_from(&run.shards[2]);
+    let mut right = run.shards[0].clone();
+    right.merge_from(&bc);
+    let r = right.report();
+    let d = &run.report;
+    assert_eq!(r.requests, d.requests);
+    assert_eq!(r.images, d.images);
+    assert_eq!(r.batches, d.batches);
+    assert_eq!(r.rejected, d.rejected);
+    assert_eq!(r.shed, d.shed);
+    assert_eq!(r.deferred, d.deferred);
+    assert_eq!(r.wall_s, d.wall_s, "wall is a max: order-exact");
+    assert_eq!(
+        [r.latency.p50_s, r.latency.p95_s, r.latency.p99_s, r.latency.p999_s],
+        [d.latency.p50_s, d.latency.p95_s, d.latency.p99_s, d.latency.p999_s],
+        "histogram quantiles are bucket-count exact in any fold order"
+    );
+    assert_eq!(r.latency_drift, d.latency_drift);
+    close(r.latency.mean_s, d.latency.mean_s, "mean_s");
+    assert_eq!(r.per_backend.len(), d.per_backend.len());
+    for (rb, db) in r.per_backend.iter().zip(&d.per_backend) {
+        assert_eq!(rb.name, db.name);
+        assert_eq!(rb.batches, db.batches);
+        assert_eq!(rb.images, db.images);
+        assert_eq!(rb.deadline, db.deadline);
+        assert_eq!([rb.p50_s, rb.p99_s], [db.p50_s, db.p99_s]);
+        close(
+            rb.mean_device_latency_s,
+            db.mean_device_latency_s,
+            &format!("{} mean_device_latency_s", rb.name),
+        );
+        close(rb.latency_cv, db.latency_cv, &format!("{} cv", rb.name));
+    }
+
+    // (3) the versioned schema round-trips the merged report bit-exact
+    let back = ServingReport::from_json(&run.report.to_json()).unwrap();
+    assert_eq!(back, run.report, "schema v1 roundtrip");
+
+    // per-site columns stay distinguishable after the fold
+    assert!(!run.report.per_backend.is_empty());
+    assert!(run.report.per_backend.iter().all(|b| {
+        ["s0/", "s1/", "s2/"].iter().any(|p| b.name.starts_with(p))
+    }));
+}
+
+/// Flash crowd against deliberately tiny per-site capacity: home sites
+/// deny (reject on a depth-1 lane behind a defer-1 budget), the front
+/// tier spills to the next site in preference order, and the terminal
+/// accounting still closes — a spilled request is counted exactly once.
+#[test]
+fn flash_crowd_spills_cross_site_and_accounting_stays_closed() {
+    let dir = synthetic_dir();
+    let mut scenario = Scenario::builtin("flash").unwrap();
+    scenario.requests = 48;
+    let trace = Trace::generate(&scenario).unwrap();
+
+    let run = run_fleet(
+        &trace,
+        &FleetCfg {
+            artifacts_dir: dir.path().to_path_buf(),
+            sites: 3,
+            backends: BackendCfg {
+                kinds: vec![DeviceKind::Fpga],
+                max_queue_depth: 1,
+                admit_max_deferred: 1,
+                ..Default::default()
+            },
+            seed: 11,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+
+    assert_eq!(run.submitted, 48);
+    assert_eq!(
+        run.submitted,
+        run.served + run.shed + run.rejected + run.lost,
+        "spilling must not double- or under-count: {run:?}"
+    );
+    assert_eq!(run.lost, 0, "no site died: nothing may read as lost");
+    assert!(
+        run.spilled > 0,
+        "a 2000 Hz spike against depth-1/defer-1 sites must overflow \
+         cross-site (spilled {}, shed {}, rejected {})",
+        run.spilled,
+        run.shed,
+        run.rejected
+    );
+    let hops: u64 = run.sites.iter().map(|s| s.spilled_in).sum();
+    assert!(
+        hops >= run.spilled,
+        "every spilled request made >= 1 cross-site hop ({hops} hops, \
+         {} spilled)",
+        run.spilled
+    );
+    assert!(run.spill_served <= run.spilled);
+    assert!(run.spill_served <= run.served);
+
+    // the fleet JSON envelope carries the spill accounting verbatim
+    let v = parse_json(&run.to_json()).unwrap();
+    assert_eq!(v.req("version").unwrap().as_u64().unwrap(), 1);
+    assert_eq!(
+        v.req("submitted").unwrap().as_u64().unwrap(),
+        run.submitted
+    );
+    assert_eq!(v.req("spilled").unwrap().as_u64().unwrap(), run.spilled);
+    assert_eq!(
+        v.req("spill_served").unwrap().as_u64().unwrap(),
+        run.spill_served
+    );
+    assert_eq!(v.req("sites").unwrap().as_arr().unwrap().len(), 3);
+    let report = v.req("report").unwrap();
+    assert_eq!(report.req("version").unwrap().as_u64().unwrap(), 1);
+}
+
+/// The site-failure scenario: one site fail-stops mid-run
+/// (drain-then-dark), its hash range re-places onto the survivors, its
+/// drained telemetry shard still folds, and accounting closes.
+#[test]
+fn mid_run_site_failure_goes_dark_and_the_fold_still_closes() {
+    let dir = synthetic_dir();
+    let mut scenario = Scenario::builtin("steady").unwrap();
+    scenario.requests = 36;
+    let trace = Trace::generate(&scenario).unwrap();
+
+    let run = run_fleet(
+        &trace,
+        &FleetCfg {
+            artifacts_dir: dir.path().to_path_buf(),
+            sites: 3,
+            fail_site: Some(0),
+            fail_at_s: 0.05,
+            seed: 7,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+
+    assert!(run.sites[0].dark, "site 0 must have fail-stopped");
+    assert!(!run.sites[1].dark && !run.sites[2].dark);
+    assert_eq!(
+        run.shards.len(),
+        3,
+        "the dark site's drained shard is still folded"
+    );
+    assert_eq!(run.submitted, 36);
+    assert_eq!(
+        run.submitted,
+        run.served + run.shed + run.rejected + run.lost,
+        "accounting closes across the failure: {run:?}"
+    );
+    assert!(run.served > 0, "survivors keep serving");
+    assert!(
+        run.sites[1].placed + run.sites[2].placed > 0,
+        "the dead site's hash range re-placed onto the survivors"
+    );
+    assert_eq!(
+        fold_shards(&run.shards).report().to_json(),
+        run.report.to_json(),
+        "fold stays bit-identical with a dark shard in the mix"
+    );
+}

@@ -8,7 +8,7 @@
 use edgedcnn::artifacts::write_synthetic;
 use edgedcnn::config::{celeba, mnist, network_by_name, PYNQ_Z2};
 use edgedcnn::coordinator::{
-    BatcherConfig, Coordinator, CoordinatorConfig, WorkloadSpec,
+    BatcherConfig, Coordinator, CoordinatorConfig, RequestCtx, WorkloadSpec,
 };
 use edgedcnn::deconv::{
     deconv_reverse_loop, deconv_reverse_loop_par, generator_forward,
@@ -148,13 +148,32 @@ fn synthetic_coordinator(
     .expect("coordinator startup")
 }
 
+/// Pins the 0.2.0 deprecation shims: `submit` / `submit_with` /
+/// `submit_blocking` must keep working (routed through the builder)
+/// for one release before removal.
+#[test]
+#[allow(deprecated)]
+fn deprecated_submit_shims_still_serve() {
+    let dir = TempDir::new().unwrap();
+    let coord = synthetic_coordinator(&dir, &["mnist"], 2);
+    let via_shim = coord.submit_blocking("mnist", 2, 777).unwrap();
+    let via_builder =
+        coord.request("mnist").images(2).seed(777).blocking().unwrap();
+    assert_eq!(via_shim.images.data(), via_builder.images.data());
+    let h = coord.submit("mnist", 1, 778).unwrap();
+    assert_eq!(h.wait().unwrap().images.shape(), &[1, 1, 28, 28]);
+    let ctx = RequestCtx::new(779);
+    let h = coord.client().submit_with("mnist", 1, ctx).unwrap();
+    assert_eq!(h.wait().unwrap().images.shape(), &[1, 1, 28, 28]);
+}
+
 #[test]
 fn executor_pool_serves_synthetic_artifacts() {
     let dir = TempDir::new().unwrap();
     let coord = synthetic_coordinator(&dir, &["mnist"], 2);
     assert_eq!(coord.executors(), 2);
-    let a = coord.submit_blocking("mnist", 1, 4242).unwrap();
-    let b = coord.submit_blocking("mnist", 1, 4242).unwrap();
+    let a = coord.request("mnist").images(1).seed(4242).blocking().unwrap();
+    let b = coord.request("mnist").images(1).seed(4242).blocking().unwrap();
     assert_eq!(a.images.shape(), &[1, 1, 28, 28]);
     assert_eq!(a.images.data(), b.images.data(), "seeded determinism");
     assert!(a.images.data().iter().all(|v| v.abs() <= 1.0));
@@ -191,8 +210,8 @@ fn executor_pool_serves_networks_concurrently() {
     let coord = synthetic_coordinator(&dir, &["mnist", "celeba"], 0);
     assert_eq!(coord.executors(), 3, "auto: one lane per default backend");
     // submit to both networks at once; each can resolve on its own lane
-    let hm = coord.submit("mnist", 1, 7).unwrap();
-    let hc = coord.submit("celeba", 1, 7).unwrap();
+    let hm = coord.request("mnist").images(1).seed(7).submit().unwrap();
+    let hc = coord.request("celeba").images(1).seed(7).submit().unwrap();
     let m = hm.wait().unwrap();
     let c = hc.wait().unwrap();
     assert_eq!(m.images.shape(), &[1, 1, 28, 28]);
@@ -205,9 +224,9 @@ fn executor_pool_serves_networks_concurrently() {
 fn executor_pool_survives_unknown_network() {
     let dir = TempDir::new().unwrap();
     let coord = synthetic_coordinator(&dir, &["mnist"], 2);
-    let bad = coord.submit_blocking("imagenet", 1, 0);
+    let bad = coord.request("imagenet").images(1).seed(0).blocking();
     assert!(bad.is_err(), "unloaded network must error, not hang");
-    let good = coord.submit_blocking("mnist", 1, 0);
+    let good = coord.request("mnist").images(1).seed(0).blocking();
     assert!(good.is_ok(), "pool must survive a bad request");
 }
 
@@ -216,7 +235,7 @@ fn executor_pool_coalesces_bursts() {
     let dir = TempDir::new().unwrap();
     let coord = synthetic_coordinator(&dir, &["mnist"], 1);
     let handles: Vec<_> = (0..8)
-        .map(|i| coord.submit("mnist", 1, 1000 + i).unwrap())
+        .map(|i| coord.request("mnist").images(1).seed(1000 + i).submit().unwrap())
         .collect();
     let responses: Vec<_> =
         handles.into_iter().map(|h| h.wait().unwrap()).collect();

@@ -137,8 +137,8 @@ fn coordinator_serves_quantized_twin_side_by_side() {
     write_synthetic(dir.path(), &["mnist"], 4, 77).expect("synthetic set");
     let coord = quant_coordinator(&dir, false, 2);
     // f32 and quantized twins answer concurrently
-    let hf = coord.submit("mnist", 2, 4242).unwrap();
-    let hq = coord.submit("mnist.q", 2, 4242).unwrap();
+    let hf = coord.request("mnist").images(2).seed(4242).submit().unwrap();
+    let hq = coord.request("mnist.q").images(2).seed(4242).submit().unwrap();
     let f = hf.wait().unwrap();
     let q = hq.wait().unwrap();
     assert_eq!(f.images.shape(), &[2, 1, 28, 28]);
@@ -150,7 +150,7 @@ fn coordinator_serves_quantized_twin_side_by_side() {
     // quantized twin is annotated with the faster fixed-point datapath
     assert!(q.fpga_time_s < f.fpga_time_s, "q twin must simulate faster");
     // deterministic across repeats
-    let q2 = coord.submit_blocking("mnist.q", 2, 4242).unwrap();
+    let q2 = coord.request("mnist.q").images(2).seed(4242).blocking().unwrap();
     assert_eq!(q.images.data(), q2.images.data());
 }
 
@@ -165,10 +165,10 @@ fn sharded_dispatch_preserves_per_request_images() {
     for network in ["mnist", "mnist.q"] {
         // a burst that batches together, then shards across executors
         let hp: Vec<_> = (0..6)
-            .map(|i| plain.submit(network, 1, 9000 + i).unwrap())
+            .map(|i| plain.request(network).images(1).seed(9000 + i).submit().unwrap())
             .collect();
         let hs: Vec<_> = (0..6)
-            .map(|i| sharded.submit(network, 1, 9000 + i).unwrap())
+            .map(|i| sharded.request(network).images(1).seed(9000 + i).submit().unwrap())
             .collect();
         let rp: Vec<_> = hp.into_iter().map(|h| h.wait().unwrap()).collect();
         let rs: Vec<_> = hs.into_iter().map(|h| h.wait().unwrap()).collect();

@@ -174,12 +174,12 @@ fn admission_control_rejects_and_accounts_under_flood() {
     // fast host cannot drain them before wave 2) …
     let mut handles = Vec::new();
     for i in 0..40u64 {
-        handles.push(coord.submit("mnist", 4, 100 + i).unwrap());
+        handles.push(coord.request("mnist").images(4).seed(100 + i).submit().unwrap());
     }
     std::thread::sleep(Duration::from_millis(20));
     // … wave 2 arrives against a full deferral budget
     for i in 0..16u64 {
-        handles.push(coord.submit("mnist", 4, 200 + i).unwrap());
+        handles.push(coord.request("mnist").images(4).seed(200 + i).submit().unwrap());
     }
 
     let mut ok = 0u64;
@@ -247,7 +247,7 @@ fn deferred_drain_order_and_no_starvation_across_networks() {
     for e in &trace.events {
         handles.push((
             e.network.clone(),
-            coord.submit(&e.network, e.n_images, e.seed).unwrap(),
+            coord.request(&e.network).images(e.n_images).seed(e.seed).submit().unwrap(),
         ));
     }
 
@@ -320,7 +320,7 @@ fn deadline_attainment_fpga_at_least_gpu_at_equal_deadlines() {
         // best-effort requests so cold-start wall hiccups don't land in
         // the measured attainment
         for w in 0..4u64 {
-            coord.submit_blocking("mnist", 1, 900 + w).unwrap();
+            coord.request("mnist").images(1).seed(900 + w).blocking().unwrap();
         }
         for e in &trace.events {
             // the lane decrements its depth counter just *after* the
@@ -333,7 +333,7 @@ fn deadline_attainment_fpga_at_least_gpu_at_equal_deadlines() {
                 .with_class(e.class)
                 .with_deadline(Instant::now() + deadline);
             let resp = coord
-                .submit_with("mnist", 1, ctx)
+                .request("mnist").images(1).ctx(ctx).submit()
                 .unwrap()
                 .wait()
                 .expect("1-image requests are feasible at intake");
@@ -453,13 +453,13 @@ fn low_class_is_not_starved_by_tighter_normal_traffic() {
         // a steady stream of tighter-deadline Normal traffic …
         let normal = RequestCtx::new(1000 + i)
             .with_deadline(now + Duration::from_millis(400));
-        normal_handles.push(coord.submit_with("mnist", 2, normal).unwrap());
+        normal_handles.push(coord.request("mnist").images(2).ctx(normal).submit().unwrap());
         // … with a loose-deadline Low request interleaved every fifth
         if i % 5 == 0 {
             let low = RequestCtx::new(2000 + i)
                 .with_class(PriorityClass::Low)
                 .with_deadline(now + Duration::from_secs(30));
-            low_handles.push(coord.submit_with("mnist", 2, low).unwrap());
+            low_handles.push(coord.request("mnist").images(2).ctx(low).submit().unwrap());
         }
     }
 

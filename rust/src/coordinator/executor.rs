@@ -22,7 +22,7 @@ use crate::config::{
     network_by_name, DeviceKind, NetworkCfg, Precision, JETSON_TX1,
 };
 use crate::gpu::expected_gpu_network_time_at;
-use crate::tensor::Tensor;
+use crate::tensor::{ImageBlock, Tensor};
 use crate::util::{Rng, WorkerPool};
 use anyhow::{Context, Result};
 use std::collections::HashMap;
@@ -324,9 +324,22 @@ fn execute_batch(
         }
     }
 
-    // split images back to requests
-    let numel =
-        meta.cfg.image_channels * meta.cfg.image_size * meta.cfg.image_size;
+    // Split images back to requests — zero-copy: the whole batch
+    // buffer moves into one shared [`ImageBlock`] and every response
+    // gets an O(1) row window of it.  A served image is generated once
+    // by the backend and never memcpy'd again on its way to the client.
+    let throttled = outcome.state.throttled;
+    let batch_images = ImageBlock::from_tensor(outcome.images);
+    debug_assert_eq!(
+        batch_images.shape(),
+        &[
+            batch.n_images,
+            meta.cfg.image_channels,
+            meta.cfg.image_size,
+            meta.cfg.image_size,
+        ],
+        "backend returned an unexpected batch geometry"
+    );
     let n_batch = batch.n_images as f64;
     let mut responses = Vec::with_capacity(batch.requests.len());
     let mut row = 0usize;
@@ -334,21 +347,12 @@ fn execute_batch(
         batch.requests.iter().zip(verdicts)
     {
         let n = req.n_images;
-        let data =
-            outcome.images.data()[row * numel..(row + n) * numel].to_vec();
+        let images = batch_images.slice_images(row, n);
         row += n;
         let share = n as f64 / n_batch;
         responses.push(InferenceResponse {
             id: req.id,
-            images: Tensor::new(
-                vec![
-                    n,
-                    meta.cfg.image_channels,
-                    meta.cfg.image_size,
-                    meta.cfg.image_size,
-                ],
-                data,
-            )?,
+            images,
             latency_s: req.ctx.arrival.elapsed().as_secs_f64(),
             execute_s: outcome.execute_s,
             batch_size: batch.n_images,
@@ -363,5 +367,5 @@ fn execute_batch(
             gpu_time_s: gpu_batch_s * share,
         });
     }
-    Ok((responses, outcome.state.throttled))
+    Ok((responses, throttled))
 }

@@ -414,6 +414,17 @@ impl MetricsRegistry {
             wall_s: self.wall_s,
             latency: lat,
             latency_drift: self.windowed.drift(),
+            drift_windows: self
+                .windowed
+                .windows()
+                .iter()
+                .map(|(start_s, h)| DriftWindow {
+                    start_s: *start_s,
+                    count: h.count(),
+                    p50_s: h.quantile(50.0),
+                    p99_s: h.quantile(99.0),
+                })
+                .collect(),
             images_per_s: self.images as f64 / wall,
             gops,
             mean_batch: if self.batches == 0 {
@@ -427,6 +438,19 @@ impl MetricsRegistry {
             lanes,
         }
     }
+}
+
+/// One time-sliced latency window of the drift telemetry — the shard
+/// behind the scalar `latency_drift` column, exported so operators can
+/// localize *when* the tail moved instead of only knowing it did.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DriftWindow {
+    /// Window start, seconds since the serving window opened.
+    pub start_s: f64,
+    /// Requests recorded in this window.
+    pub count: u64,
+    pub p50_s: f64,
+    pub p99_s: f64,
 }
 
 /// Latency distribution summary.  The mean is exact (tracked sum); the
@@ -527,6 +551,10 @@ pub struct ServingReport {
     /// Tail drift across the retained latency time slices: worst-window
     /// p99 over best-window p99 (1.0 = steady).
     pub latency_drift: f64,
+    /// The time-sliced windows behind `latency_drift`, in time order
+    /// (empty when no request carried latency telemetry).  Additive
+    /// schema field: absent in pre-drift v1 reports, tolerated on read.
+    pub drift_windows: Vec<DriftWindow>,
     pub images_per_s: f64,
     pub gops: f64,
     pub mean_batch: f64,
@@ -657,6 +685,18 @@ impl ServingReport {
             })
             .collect::<Vec<_>>()
             .join(",\n");
+        let drift_windows = self
+            .drift_windows
+            .iter()
+            .map(|w| {
+                format!(
+                    "{{\"start_s\": {}, \"count\": {}, \"p50_s\": {}, \
+                     \"p99_s\": {}}}",
+                    w.start_s, w.count, w.p50_s, w.p99_s,
+                )
+            })
+            .collect::<Vec<_>>()
+            .join(", ");
         format!(
             "{{\n  \"version\": {REPORT_VERSION},\n  \
              \"requests\": {},\n  \"images\": {},\n  \"rejected\": {},\n  \
@@ -664,7 +704,8 @@ impl ServingReport {
              \"deferred\": {},\n  \"batches\": {},\n  \"wall_s\": {},\n  \
              \"latency\": {{\"mean_s\": {}, \"p50_s\": {}, \"p95_s\": {}, \
              \"p99_s\": {}, \"p999_s\": {}}},\n  \
-             \"latency_drift\": {},\n  \"images_per_s\": {},\n  \
+             \"latency_drift\": {},\n  \"drift_windows\": [{}],\n  \
+             \"images_per_s\": {},\n  \
              \"gops\": {},\n  \"mean_batch\": {},\n  \"mean_power_w\": {},\n  \
              \"gops_per_w\": {},\n  \"per_backend\": [\n{}\n  ],\n  \
              \"lanes\": [\n{}\n  ]\n}}\n",
@@ -682,6 +723,7 @@ impl ServingReport {
             lat.p99_s,
             lat.p999_s,
             self.latency_drift,
+            drift_windows,
             self.images_per_s,
             self.gops,
             self.mean_batch,
@@ -690,6 +732,21 @@ impl ServingReport {
             per_backend,
             lanes,
         )
+    }
+
+    /// CSV export of the windowed drift histogram shards — one row per
+    /// retained time slice, `window_start_s,count,p50_s,p99_s`.  Always
+    /// includes the header line, so the file is non-empty (and trivially
+    /// assertable in CI) even for a run with no latency telemetry.
+    pub fn drift_csv(&self) -> String {
+        let mut out = String::from("window_start_s,count,p50_s,p99_s\n");
+        for w in &self.drift_windows {
+            out.push_str(&format!(
+                "{},{},{},{}\n",
+                w.start_s, w.count, w.p50_s, w.p99_s
+            ));
+        }
+        out
     }
 
     /// Parse a schema-v1 report; refuses *future* schema versions
@@ -723,6 +780,22 @@ impl ServingReport {
             wall_s: v.req("wall_s")?.as_f64()?,
             latency: latency_from_json(v.req("latency")?)?,
             latency_drift: v.req("latency_drift")?.as_f64()?,
+            // additive field: pre-drift v1 reports simply lack it
+            drift_windows: match v.get("drift_windows") {
+                Some(arr) => arr
+                    .as_arr()?
+                    .iter()
+                    .map(|w| {
+                        Ok(DriftWindow {
+                            start_s: w.req("start_s")?.as_f64()?,
+                            count: w.req("count")?.as_u64()?,
+                            p50_s: w.req("p50_s")?.as_f64()?,
+                            p99_s: w.req("p99_s")?.as_f64()?,
+                        })
+                    })
+                    .collect::<Result<Vec<_>>>()?,
+                None => Vec::new(),
+            },
             images_per_s: v.req("images_per_s")?.as_f64()?,
             gops: v.req("gops")?.as_f64()?,
             mean_batch: v.req("mean_batch")?.as_f64()?,

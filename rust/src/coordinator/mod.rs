@@ -43,8 +43,8 @@ mod server;
 
 pub use batcher::{Batch, BatcherConfig, DynamicBatcher};
 pub use metrics::{
-    BackendReport, ClassAttainment, LaneQueueReport, LatencyReport,
-    MetricsRegistry, ServingReport,
+    BackendReport, ClassAttainment, DriftWindow, LaneQueueReport,
+    LatencyReport, MetricsRegistry, ServingReport,
 };
 pub use power::PowerMeter;
 pub use registry::{BackendRegistry, LaneInfo};

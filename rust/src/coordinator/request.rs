@@ -11,7 +11,7 @@
 //! deadlines and priority classes could not exist because no single
 //! struct survived the whole lifecycle.
 
-use crate::tensor::Tensor;
+use crate::tensor::ImageBlock;
 use std::fmt;
 use std::str::FromStr;
 use std::time::{Duration, Instant};
@@ -177,8 +177,10 @@ impl InferenceRequest {
 #[derive(Debug)]
 pub struct InferenceResponse {
     pub id: RequestId,
-    /// `[n_images, C, H, W]` in [-1, 1].
-    pub images: Tensor,
+    /// `[n_images, C, H, W]` in [-1, 1] — a zero-copy window into the
+    /// serving batch's image buffer (requests batched together share
+    /// one allocation; see [`ImageBlock`]).
+    pub images: ImageBlock,
     /// End-to-end latency (charged arrival → response), seconds.
     pub latency_s: f64,
     /// Wall time inside the numeric substrate, seconds.

@@ -15,12 +15,16 @@
 //! [`OpStats`] accounting they emit is what the FPGA cycle model consumes.
 
 mod offsets;
+mod reference;
 mod reverse_loop;
 mod standard;
 mod tdc;
 mod tiling;
 
 pub use offsets::{modulo_cost_naive, modulo_cost_precomputed, stride_hole_offsets};
+pub use reference::{
+    deconv_reverse_loop_ref, deconv_standard_ref, deconv_tdc_ref,
+};
 pub use reverse_loop::{
     deconv_reverse_loop, deconv_reverse_loop_par, OpStats, ReverseLoopOpts,
 };

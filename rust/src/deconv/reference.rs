@@ -1,0 +1,360 @@
+//! Pinned scalar reference kernels — frozen copies of the pre-SIMD
+//! (pre-PR-7) loop nests of all three deconvolution algorithms.
+//!
+//! The hot kernels in [`super::standard`], [`super::reverse_loop`] and
+//! [`super::tdc`] are restructured for autovectorization (contiguous
+//! innermost loops, hoisted bounds, no per-element division).  The
+//! restructure is engineered to be **bit-identical**: per output
+//! element, the accumulation chain visits the same taps in the same
+//! order with the same [`Element::mac`] operation, so even `f32`
+//! results match bit for bit (fixed point is order-independent in the
+//! wide accumulator domain regardless).  This module keeps the original
+//! scalar element-at-a-time formulations verbatim so the property tests
+//! can assert that claim against a reference that never changes, rather
+//! than against the very code being optimized.
+//!
+//! Deliberately self-contained (own tile enumeration, own offset
+//! helpers) and serial-only: a frozen oracle, not a fast path.  Do not
+//! "optimize" this module.
+
+use super::offsets::stride_hole_offsets;
+use super::reverse_loop::{OpStats, ReverseLoopOpts};
+use super::standard::shape4;
+use super::tiling::input_tile_extent;
+use crate::quant::Element;
+use crate::tensor::TensorT;
+
+/// Frozen scalar standard (input-space scatter) deconvolution — the
+/// pre-restructure loop nest of [`super::deconv_standard`].
+pub fn deconv_standard_ref<T: Element>(
+    x: &TensorT<T>,
+    w: &TensorT<T>,
+    b: &[T],
+    stride: usize,
+    padding: usize,
+) -> TensorT<T> {
+    let [n, c_in, i_h, i_w] = shape4(x);
+    let [wc_in, c_out, k, k2] = shape4(w);
+    assert_eq!(c_in, wc_in, "weight C_in mismatch");
+    assert_eq!(k, k2, "kernel must be square");
+    assert_eq!(b.len(), c_out, "bias length mismatch");
+    let o_h = super::output_size(i_h, k, stride, padding);
+    let o_w = super::output_size(i_w, k, stride, padding);
+
+    let at = |bi: usize, co: usize, oh: usize, ow: usize| {
+        ((bi * c_out + co) * o_h + oh) * o_w + ow
+    };
+    let mut acc: Vec<T::Acc> = vec![T::ACC_ZERO; n * c_out * o_h * o_w];
+    for bi in 0..n {
+        for co in 0..c_out {
+            let bw = b[co].widen();
+            for oh in 0..o_h {
+                for ow in 0..o_w {
+                    acc[at(bi, co, oh, ow)] = bw;
+                }
+            }
+        }
+    }
+    for bi in 0..n {
+        for ci in 0..c_in {
+            for ih in 0..i_h {
+                for iw in 0..i_w {
+                    let v = x.get4(bi, ci, ih, iw);
+                    if v.is_zero() {
+                        continue;
+                    }
+                    for kh in 0..k {
+                        let oh = (ih * stride + kh) as i64 - padding as i64;
+                        if oh < 0 || oh >= o_h as i64 {
+                            continue;
+                        }
+                        for kw in 0..k {
+                            let ow =
+                                (iw * stride + kw) as i64 - padding as i64;
+                            if ow < 0 || ow >= o_w as i64 {
+                                continue;
+                            }
+                            for co in 0..c_out {
+                                let i =
+                                    at(bi, co, oh as usize, ow as usize);
+                                acc[i] =
+                                    T::mac(acc[i], w.get4(ci, co, kh, kw), v);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    let data: Vec<T> = acc.into_iter().map(T::narrow).collect();
+    TensorT::new(vec![n, c_out, o_h, o_w], data).expect("output shape")
+}
+
+/// Frozen scalar reverse-loop (Algorithm 1) deconvolution — the
+/// pre-restructure per-tile kernel of [`super::deconv_reverse_loop`],
+/// with its per-tile accumulator allocation and per-element `i64`
+/// division intact.  Returns the tensor *and* the [`OpStats`] so the
+/// property tests can pin both.
+pub fn deconv_reverse_loop_ref<T: Element>(
+    x: &TensorT<T>,
+    w: &TensorT<T>,
+    b: &[T],
+    stride: usize,
+    padding: usize,
+    opts: ReverseLoopOpts,
+) -> (TensorT<T>, OpStats) {
+    let [n, c_in, i_h, i_w] = shape4(x);
+    let [wc_in, c_out, k, _] = shape4(w);
+    assert_eq!(c_in, wc_in);
+    assert_eq!(b.len(), c_out);
+    let s = stride;
+    let p = padding;
+    let o_h = super::output_size(i_h, k, s, p);
+    let o_w = super::output_size(i_w, k, s, p);
+    let t = opts.tile.max(s);
+    let t_i = input_tile_extent(t, k, s);
+
+    let f = stride_hole_offsets(k, s, p);
+    let mut stats = OpStats {
+        modulo_ops: super::offsets::modulo_cost_precomputed(k),
+        ..Default::default()
+    };
+
+    let eb = T::BYTES as u64;
+    let mut y = TensorT::zeros(vec![n, c_out, o_h, o_w]);
+    for bi in 0..n {
+        let mut th = 0;
+        while th < o_h {
+            let tile_h = t.min(o_h - th);
+            let mut tw = 0;
+            while tw < o_w {
+                let tile_w = t.min(o_w - tw);
+                stats.tiles += 1;
+                stats.ext_read_bytes += eb * (c_in * t_i * t_i) as u64;
+                stats.ext_read_bytes += eb * (c_in * c_out * k * k) as u64
+                    / ((o_h.div_ceil(t) * o_w.div_ceil(t)) as u64).max(1);
+
+                let mut block: Vec<T::Acc> =
+                    vec![T::ACC_ZERO; c_out * tile_h * tile_w];
+                for co in 0..c_out {
+                    let base = co * tile_h * tile_w;
+                    let bw = b[co].widen();
+                    for v in &mut block[base..base + tile_h * tile_w] {
+                        *v = bw;
+                    }
+                    for ci in 0..c_in {
+                        for kh in 0..k {
+                            let fh = f[kh];
+                            for kw in 0..k {
+                                let fw = f[kw];
+                                let wv = w.get4(ci, co, kh, kw);
+                                if opts.zero_skip {
+                                    stats.weight_tests += 1;
+                                    if wv.is_zero() {
+                                        stats.macs_skipped += tap_count_ref(
+                                            th, tile_h, tw, tile_w, fh, fw,
+                                            s,
+                                        );
+                                        continue;
+                                    }
+                                }
+                                let mut oh = next_aligned_ref(th, fh, s);
+                                while oh < th + tile_h {
+                                    let ih_num =
+                                        oh as i64 + p as i64 - kh as i64;
+                                    let ih = ih_num / s as i64;
+                                    if ih >= 0 && (ih as usize) < i_h {
+                                        let row = base + (oh - th) * tile_w;
+                                        let mut ow =
+                                            next_aligned_ref(tw, fw, s);
+                                        while ow < tw + tile_w {
+                                            let iw_num = ow as i64 + p as i64
+                                                - kw as i64;
+                                            let iw = iw_num / s as i64;
+                                            if iw >= 0
+                                                && (iw as usize) < i_w
+                                            {
+                                                let xv = x.get4(
+                                                    bi,
+                                                    ci,
+                                                    ih as usize,
+                                                    iw as usize,
+                                                );
+                                                let idx = row + (ow - tw);
+                                                block[idx] = T::mac(
+                                                    block[idx],
+                                                    wv,
+                                                    xv,
+                                                );
+                                                stats.macs_issued += 1;
+                                            }
+                                            ow += s;
+                                        }
+                                    }
+                                    oh += s;
+                                }
+                            }
+                        }
+                    }
+                    stats.ext_write_bytes += eb * (tile_h * tile_w) as u64;
+                }
+                // one-shot write of the finished block
+                for co in 0..c_out {
+                    let base = co * tile_h * tile_w;
+                    for r in 0..tile_h {
+                        for c in 0..tile_w {
+                            y.set4(
+                                bi,
+                                co,
+                                th + r,
+                                tw + c,
+                                T::narrow(block[base + r * tile_w + c]),
+                            );
+                        }
+                    }
+                }
+                tw += t;
+            }
+            th += t;
+        }
+    }
+    (y, stats)
+}
+
+/// Frozen scalar TDC (gather) deconvolution — the pre-restructure
+/// per-output-pixel loop nest of [`super::deconv_tdc`] with its inline
+/// modulo tests.
+pub fn deconv_tdc_ref<T: Element>(
+    x: &TensorT<T>,
+    w: &TensorT<T>,
+    b: &[T],
+    stride: usize,
+    padding: usize,
+) -> TensorT<T> {
+    let [n, c_in, i_h, i_w] = shape4(x);
+    let [_, c_out, k, _] = shape4(w);
+    let s = stride;
+    let p = padding;
+    let o_h = super::output_size(i_h, k, s, p);
+    let o_w = super::output_size(i_w, k, s, p);
+    let mut y = TensorT::<T>::zeros(vec![n, c_out, o_h, o_w]);
+
+    for bi in 0..n {
+        for co in 0..c_out {
+            for oh in 0..o_h {
+                for ow in 0..o_w {
+                    let mut acc = b[co].widen();
+                    for kh in 0..k {
+                        let num_h = oh as i64 + p as i64 - kh as i64;
+                        if num_h % s as i64 != 0 {
+                            continue;
+                        }
+                        let ih = num_h / s as i64;
+                        if ih < 0 || ih >= i_h as i64 {
+                            continue;
+                        }
+                        for kw in 0..k {
+                            let num_w = ow as i64 + p as i64 - kw as i64;
+                            if num_w % s as i64 != 0 {
+                                continue;
+                            }
+                            let iw = num_w / s as i64;
+                            if iw < 0 || iw >= i_w as i64 {
+                                continue;
+                            }
+                            for ci in 0..c_in {
+                                acc = T::mac(
+                                    acc,
+                                    w.get4(ci, co, kh, kw),
+                                    x.get4(
+                                        bi, ci, ih as usize, iw as usize,
+                                    ),
+                                );
+                            }
+                        }
+                    }
+                    y.set4(bi, co, oh, ow, T::narrow(acc));
+                }
+            }
+        }
+    }
+    y
+}
+
+/// Frozen copy of `next_aligned` (first `o ≥ start` with `o ≡ f mod s`).
+#[inline]
+fn next_aligned_ref(start: usize, f: usize, s: usize) -> usize {
+    let r = start % s;
+    if r <= f {
+        start + (f - r)
+    } else {
+        start + (s - r) + f
+    }
+}
+
+/// Frozen copy of `tap_count` (skip accounting).
+#[inline]
+fn tap_count_ref(
+    th: usize,
+    tile_h: usize,
+    tw: usize,
+    tile_w: usize,
+    fh: usize,
+    fw: usize,
+    s: usize,
+) -> u64 {
+    let nh = {
+        let first = next_aligned_ref(th, fh, s);
+        if first >= th + tile_h {
+            0
+        } else {
+            (th + tile_h - first).div_ceil(s)
+        }
+    };
+    let nw = {
+        let first = next_aligned_ref(tw, fw, s);
+        if first >= tw + tile_w {
+            0
+        } else {
+            (tw + tile_w - first).div_ceil(s)
+        }
+    };
+    (nh * nw) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+    use crate::util::Rng;
+
+    /// The three frozen references agree with each other (sanity that
+    /// the copies were taken faithfully).
+    #[test]
+    fn references_agree_in_f32() {
+        let mut rng = Rng::seed_from_u64(3);
+        let x = Tensor::from_fn(vec![1, 2, 5, 5], |_| {
+            rng.range_f32(-1.0, 1.0)
+        });
+        let w = Tensor::from_fn(vec![2, 3, 4, 4], |_| {
+            rng.range_f32(-1.0, 1.0)
+        });
+        let b = vec![0.1, -0.2, 0.3];
+        let std = deconv_standard_ref(&x, &w, &b, 2, 1);
+        let (rev, stats) = deconv_reverse_loop_ref(
+            &x,
+            &w,
+            &b,
+            2,
+            1,
+            ReverseLoopOpts {
+                tile: 4,
+                zero_skip: false,
+            },
+        );
+        let tdc = deconv_tdc_ref(&x, &w, &b, 2, 1);
+        assert!(rev.max_abs_diff(&std) < 1e-4);
+        assert!(tdc.max_abs_diff(&std) < 1e-4);
+        assert!(stats.macs_issued > 0);
+    }
+}

@@ -28,7 +28,7 @@ use super::standard::shape4;
 use super::tiling::input_tile_extent;
 use crate::quant::Element;
 use crate::tensor::TensorT;
-use crate::util::WorkerPool;
+use crate::util::{with_scratch, WorkerPool};
 
 /// Execution options for the reverse-loop kernel.
 #[derive(Debug, Clone, Copy)]
@@ -144,10 +144,65 @@ fn tile_jobs(n: usize, o_h: usize, o_w: usize, t: usize) -> Vec<TileJob> {
     jobs
 }
 
+/// One tap's hoisted traversal range along one axis: the `j`-th visit
+/// touches output `o0 + j·s` and input `i0 + j`, for `j ∈ [lo, hi)`.
+/// All Eq. 3/Eq. 4 arithmetic (alignment, the exact `(o + P - k)/S`
+/// division, and both input-bounds checks) is resolved here, once per
+/// tap per axis, so the MAC loops below run with no division and no
+/// branch per element.
+#[derive(Clone, Copy)]
+struct TapSpan {
+    /// First aligned output coordinate in the tile (absolute).
+    o0: usize,
+    /// Input coordinate paired with `o0` (may be out of bounds; only
+    /// `j ∈ [lo, hi)` is valid).
+    i0: i64,
+    lo: usize,
+    hi: usize,
+}
+
+impl TapSpan {
+    #[inline]
+    fn of(
+        t0: usize,
+        tile: usize,
+        f: usize,
+        k: usize,
+        p: usize,
+        s: usize,
+        i_extent: usize,
+    ) -> TapSpan {
+        let o0 = next_aligned(t0, f, s);
+        let end = t0 + tile;
+        let n = if o0 >= end { 0 } else { (end - o0).div_ceil(s) };
+        // exact by the Eq. 3 offset invariant: (o0 + P - k) ≡ 0 (mod S)
+        let i0 = (o0 as i64 + p as i64 - k as i64).div_euclid(s as i64);
+        let lo = (-i0).max(0).min(n as i64) as usize;
+        let hi = (i_extent as i64 - i0).clamp(0, n as i64) as usize;
+        TapSpan { o0, i0, lo, hi }
+    }
+
+    #[inline]
+    fn len(&self) -> usize {
+        self.hi.saturating_sub(self.lo)
+    }
+}
+
 /// Execute Algorithm 1 for one tile job: returns the finished output
 /// block (`[c_out, tile_h, tile_w]`, row-major) and the tile's op
 /// counts.  This is the kernel both the serial and the parallel path
 /// run, so their numerics are identical by construction.
+///
+/// SIMD-shaped formulation: per-tap output/input ranges are hoisted
+/// ([`TapSpan`]), the accumulator block comes from the per-worker
+/// scratch arena ([`with_scratch`]) instead of a per-tile allocation,
+/// and the innermost loop is a contiguous walk of one input row against
+/// a (unit- or `S`-strided) accumulator row — no division, no bounds
+/// check, no branch per element, so it autovectorizes for `f32` and
+/// `Fixed` alike.  Bit-identity with the pinned scalar reference
+/// ([`super::reference`]) holds because each output element still
+/// receives its taps in ascending `(ci, kh, kw)` order with the same
+/// [`Element::mac`]; only loop-invariant arithmetic moved.
 fn execute_tile<T: Element>(
     ctx: &TileCtx<'_, T>,
     job: TileJob,
@@ -161,6 +216,8 @@ fn execute_tile<T: Element>(
     } = job;
     let s = ctx.s;
     let p = ctx.p;
+    let k = ctx.k;
+    let (i_h, i_w) = (ctx.i_h, ctx.i_w);
     let eb = T::BYTES as u64;
     let mut stats = OpStats {
         tiles: 1,
@@ -173,67 +230,118 @@ fn execute_tile<T: Element>(
     stats.ext_read_bytes += eb * (ctx.c_in * ctx.c_out * ctx.k * ctx.k) as u64
         / ((ctx.o_h.div_ceil(ctx.t) * ctx.o_w.div_ceil(ctx.t)) as u64).max(1);
 
-    // Per-tile accumulator block in the wide domain; narrowed once at
-    // the one-shot write below.
-    let mut block: Vec<T::Acc> = vec![T::ACC_ZERO; ctx.c_out * tile_h * tile_w];
-    for co in 0..ctx.c_out {
-        let base = co * tile_h * tile_w;
-        // y <- initializeToBias()
-        let bw = ctx.b[co].widen();
-        for v in &mut block[base..base + tile_h * tile_w] {
-            *v = bw;
+    let xdata = ctx.x.data();
+    let wdata = ctx.w.data();
+
+    // Hoist the per-tap spans: they depend only on (k index, axis), not
+    // on (co, ci), so K spans per axis cover every tap of the tile.
+    let mut spans_h = [TapSpan {
+        o0: 0,
+        i0: 0,
+        lo: 0,
+        hi: 0,
+    }; 16];
+    let mut spans_w = spans_h;
+    let spans_heap_h: Vec<TapSpan>;
+    let spans_heap_w: Vec<TapSpan>;
+    let (spans_h, spans_w): (&[TapSpan], &[TapSpan]) = if k <= 16 {
+        for kk in 0..k {
+            spans_h[kk] = TapSpan::of(th, tile_h, ctx.f[kk], kk, p, s, i_h);
+            spans_w[kk] = TapSpan::of(tw, tile_w, ctx.f[kk], kk, p, s, i_w);
         }
-        for ci in 0..ctx.c_in {
-            // weight-stationary loops (enhancement 2)
-            for kh in 0..ctx.k {
-                let fh = ctx.f[kh];
-                for kw in 0..ctx.k {
-                    let fw = ctx.f[kw];
-                    let wv = ctx.w.get4(ci, co, kh, kw);
-                    if ctx.zero_skip {
-                        stats.weight_tests += 1;
-                        if wv.is_zero() {
-                            // skip the whole tap for this tile
-                            stats.macs_skipped +=
-                                tap_count(th, tile_h, tw, tile_w, fh, fw, s);
-                            continue;
-                        }
-                    }
-                    // o = f + S·t traversal within the tile
-                    let mut oh = next_aligned(th, fh, s);
-                    while oh < th + tile_h {
-                        let ih_num = oh as i64 + p as i64 - kh as i64;
-                        let ih = ih_num / s as i64;
-                        if ih >= 0 && (ih as usize) < ctx.i_h {
-                            let row = base + (oh - th) * tile_w;
-                            let mut ow = next_aligned(tw, fw, s);
-                            while ow < tw + tile_w {
-                                let iw_num =
-                                    ow as i64 + p as i64 - kw as i64;
-                                let iw = iw_num / s as i64;
-                                if iw >= 0 && (iw as usize) < ctx.i_w {
-                                    let xv = ctx.x.get4(
-                                        bi,
-                                        ci,
-                                        ih as usize,
-                                        iw as usize,
+        (&spans_h[..k], &spans_w[..k])
+    } else {
+        spans_heap_h = (0..k)
+            .map(|kk| TapSpan::of(th, tile_h, ctx.f[kk], kk, p, s, i_h))
+            .collect();
+        spans_heap_w = (0..k)
+            .map(|kk| TapSpan::of(tw, tile_w, ctx.f[kk], kk, p, s, i_w))
+            .collect();
+        (&spans_heap_h, &spans_heap_w)
+    };
+
+    // Per-tile accumulator block in the wide domain, leased from the
+    // per-worker scratch arena (re-zeroed on acquisition); narrowed
+    // once at the one-shot write below.
+    let out = with_scratch(
+        ctx.c_out * tile_h * tile_w,
+        T::ACC_ZERO,
+        |block| {
+            for co in 0..ctx.c_out {
+                let base = co * tile_h * tile_w;
+                // y <- initializeToBias()
+                let bw = ctx.b[co].widen();
+                for v in &mut block[base..base + tile_h * tile_w] {
+                    *v = bw;
+                }
+                for ci in 0..ctx.c_in {
+                    let x_img = &xdata
+                        [(bi * ctx.c_in + ci) * i_h * i_w..][..i_h * i_w];
+                    let w_base = (ci * ctx.c_out + co) * k * k;
+                    // weight-stationary loops (enhancement 2)
+                    for kh in 0..k {
+                        let sh = spans_h[kh];
+                        for kw in 0..k {
+                            let wv = wdata[w_base + kh * k + kw];
+                            if ctx.zero_skip {
+                                stats.weight_tests += 1;
+                                if wv.is_zero() {
+                                    // skip the whole tap for this tile
+                                    stats.macs_skipped += tap_count(
+                                        th, tile_h, tw, tile_w, ctx.f[kh],
+                                        ctx.f[kw], s,
                                     );
-                                    let idx = row + (ow - tw);
-                                    block[idx] = T::mac(block[idx], wv, xv);
-                                    stats.macs_issued += 1;
+                                    continue;
                                 }
-                                ow += s;
+                            }
+                            let sw = spans_w[kw];
+                            let cols = sw.len();
+                            if cols == 0 || sh.len() == 0 {
+                                continue;
+                            }
+                            stats.macs_issued +=
+                                (sh.len() * cols) as u64;
+                            let iw_first = (sw.i0
+                                + sw.lo as i64)
+                                as usize;
+                            let bw_first =
+                                sw.o0 + sw.lo * s - tw;
+                            // o = f + S·t traversal, bounds pre-resolved
+                            for j in sh.lo..sh.hi {
+                                let oh = sh.o0 + j * s;
+                                let ih = (sh.i0 + j as i64) as usize;
+                                let xrow = &x_img
+                                    [ih * i_w + iw_first..][..cols];
+                                let row_off =
+                                    base + (oh - th) * tile_w + bw_first;
+                                if s == 1 {
+                                    let brow =
+                                        &mut block[row_off..][..cols];
+                                    for (o, &xv) in
+                                        brow.iter_mut().zip(xrow)
+                                    {
+                                        *o = T::mac(*o, wv, xv);
+                                    }
+                                } else {
+                                    let brow = &mut block[row_off..]
+                                        [..(cols - 1) * s + 1];
+                                    let mut bidx = 0;
+                                    for &xv in xrow {
+                                        brow[bidx] =
+                                            T::mac(brow[bidx], wv, xv);
+                                        bidx += s;
+                                    }
+                                }
                             }
                         }
-                        oh += s;
                     }
                 }
+                // one-shot write of the finished output block
+                stats.ext_write_bytes += eb * (tile_h * tile_w) as u64;
             }
-        }
-        // one-shot write of the finished output block
-        stats.ext_write_bytes += eb * (tile_h * tile_w) as u64;
-    }
-    let out: Vec<T> = block.into_iter().map(T::narrow).collect();
+            block.iter().map(|&a| T::narrow(a)).collect::<Vec<T>>()
+        },
+    );
     (out, stats)
 }
 
@@ -292,22 +400,21 @@ fn run_reverse_loop<T: Element>(
         pool.map_indexed_auto(jobs.len(), |i| execute_tile(&ctx, jobs[i]));
 
     // Deterministic merge in job order: one-shot block writes into the
-    // (disjoint) output regions, exact OpStats accumulation.
+    // (disjoint) output regions, exact OpStats accumulation.  Rows are
+    // contiguous in both the tile block and the output tensor, so each
+    // row is a single memcpy.
     let mut y = TensorT::zeros(vec![n, c_out, o_h, o_w]);
+    let ydata = y.data_mut();
     for (job, (block, tile_stats)) in jobs.iter().zip(&results) {
         stats.merge(tile_stats);
         for co in 0..c_out {
             let base = co * job.tile_h * job.tile_w;
             for r in 0..job.tile_h {
-                for c in 0..job.tile_w {
-                    y.set4(
-                        job.bi,
-                        co,
-                        job.th + r,
-                        job.tw + c,
-                        block[base + r * job.tile_w + c],
-                    );
-                }
+                let src = &block[base + r * job.tile_w..][..job.tile_w];
+                let dst_off = ((job.bi * c_out + co) * o_h + job.th + r)
+                    * o_w
+                    + job.tw;
+                ydata[dst_off..dst_off + job.tile_w].copy_from_slice(src);
             }
         }
     }
@@ -636,6 +743,83 @@ mod tests {
                     );
                     assert_eq!(ss, sp, "w={workers}: OpStats must be exact");
                 }
+            }
+        }
+    }
+
+    /// Satellite (a): two successive tiles on the same thread reuse the
+    /// same arena buffer (no per-tile allocation after the first) and
+    /// the reuse is correctly re-zeroed — results match a fresh run.
+    #[test]
+    fn successive_tiles_reuse_and_rezero_the_arena_buffer() {
+        use crate::util::{reset_scratch_stats, scratch_allocs, scratch_hits};
+        let mut rng = Rng::seed_from_u64(17);
+        let x = rand_tensor(vec![1, 2, 6, 6], &mut rng);
+        let w = rand_tensor(vec![2, 3, 4, 4], &mut rng);
+        let b = vec![0.25, -0.5, 0.75];
+        let opts = ReverseLoopOpts {
+            tile: 4,
+            zero_skip: false,
+        };
+        // Warm the arena (WorkerPool::new(1) runs inline on this
+        // thread), then measure a steady-state pass: many tiles, zero
+        // fresh allocations, all hits.
+        let (y0, _) = deconv_reverse_loop(&x, &w, &b, 2, 1, opts);
+        reset_scratch_stats();
+        let (y1, stats) = deconv_reverse_loop(&x, &w, &b, 2, 1, opts);
+        assert!(stats.tiles > 1, "need multiple tiles to prove reuse");
+        assert_eq!(
+            scratch_allocs(),
+            0,
+            "steady state must not allocate accumulator blocks"
+        );
+        assert_eq!(
+            scratch_hits(),
+            stats.tiles,
+            "every tile must be served from the reused buffer"
+        );
+        // Reuse is observationally invisible: bit-identical output.
+        assert_eq!(y0.data(), y1.data(), "re-zeroing must be exact");
+    }
+
+    /// The SIMD-shaped kernel is bit-identical to the pinned pre-PR
+    /// scalar reference — tensors AND OpStats.
+    #[test]
+    fn bit_identical_to_pinned_scalar_reference() {
+        use crate::deconv::deconv_reverse_loop_ref;
+        let mut rng = Rng::seed_from_u64(23);
+        for (n, c_in, c_out, k, s, p, i_h, tile) in [
+            (1, 2, 3, 4, 2, 1, 5, 4),
+            (2, 3, 2, 7, 1, 0, 3, 5),
+            (1, 2, 2, 3, 3, 1, 4, 6),
+            (1, 1, 1, 5, 2, 2, 6, 5),
+        ] {
+            let x = rand_tensor(vec![n, c_in, i_h, i_h], &mut rng);
+            let mut w = rand_tensor(vec![c_in, c_out, k, k], &mut rng);
+            for (i, v) in w.data_mut().iter_mut().enumerate() {
+                if i % 3 == 0 {
+                    *v = 0.0;
+                }
+            }
+            let b: Vec<f32> =
+                (0..c_out).map(|_| rng.range_f32(-0.5, 0.5)).collect();
+            for zero_skip in [false, true] {
+                let opts = ReverseLoopOpts { tile, zero_skip };
+                let (want, want_stats) =
+                    deconv_reverse_loop_ref(&x, &w, &b, s, p, opts);
+                let (got, got_stats) =
+                    deconv_reverse_loop(&x, &w, &b, s, p, opts);
+                assert_eq!(
+                    got.data(),
+                    want.data(),
+                    "({n},{c_in},{c_out},{k},{s},{p},{i_h},{tile}) \
+                     zs={zero_skip}: f32 must match the scalar \
+                     reference bit for bit"
+                );
+                assert_eq!(
+                    got_stats, want_stats,
+                    "OpStats must match the scalar reference exactly"
+                );
             }
         }
     }

@@ -8,6 +8,16 @@
 //! the `f32` numerics are unchanged (same addition sequence) and the
 //! fixed-point result is bit-identical to the reverse-loop and TDC
 //! kernels despite the different loop order.
+//!
+//! SIMD-shaped loop nest: `c_out` is hoisted to the second-outermost
+//! position so each `(bi, co)` pass owns one contiguous output plane,
+//! and the innermost loop is a contiguous zip of one kernel row against
+//! one output row (the `kw` range pre-clamped to the output frame).
+//! Per output element the contribution order is still ascending
+//! `(ci, ih, iw, kh, kw)` — exactly the order of the original nest,
+//! whose `co` loop was innermost and therefore order-neutral across
+//! output elements — so `f32` results are bit-identical to the pinned
+//! scalar reference ([`super::reference::deconv_standard_ref`]).
 
 use crate::quant::Element;
 use crate::tensor::TensorT;
@@ -35,45 +45,54 @@ pub fn deconv_standard<T: Element>(
     let o_h = super::output_size(i_h, k, stride, padding);
     let o_w = super::output_size(i_w, k, stride, padding);
 
-    let at = |bi: usize, co: usize, oh: usize, ow: usize| {
-        ((bi * c_out + co) * o_h + oh) * o_w + ow
-    };
-    // initialize the accumulator plane to the (widened) bias
+    let xdata = x.data();
+    let wdata = w.data();
     let mut acc: Vec<T::Acc> = vec![T::ACC_ZERO; n * c_out * o_h * o_w];
     for bi in 0..n {
         for co in 0..c_out {
+            // each (bi, co) pass owns one contiguous output plane
+            let plane =
+                &mut acc[(bi * c_out + co) * o_h * o_w..][..o_h * o_w];
+            // initialize the accumulator plane to the (widened) bias
             let bw = b[co].widen();
-            for oh in 0..o_h {
-                for ow in 0..o_w {
-                    acc[at(bi, co, oh, ow)] = bw;
-                }
+            for v in plane.iter_mut() {
+                *v = bw;
             }
-        }
-    }
-    for bi in 0..n {
-        for ci in 0..c_in {
-            for ih in 0..i_h {
-                for iw in 0..i_w {
-                    let v = x.get4(bi, ci, ih, iw);
-                    if v.is_zero() {
-                        continue;
-                    }
-                    for kh in 0..k {
-                        let oh = (ih * stride + kh) as i64 - padding as i64;
-                        if oh < 0 || oh >= o_h as i64 {
+            for ci in 0..c_in {
+                let x_img =
+                    &xdata[(bi * c_in + ci) * i_h * i_w..][..i_h * i_w];
+                let w_chan = &wdata[(ci * c_out + co) * k * k..][..k * k];
+                for ih in 0..i_h {
+                    let xrow = &x_img[ih * i_w..][..i_w];
+                    for (iw, &v) in xrow.iter().enumerate() {
+                        if v.is_zero() {
                             continue;
                         }
-                        for kw in 0..k {
-                            let ow =
-                                (iw * stride + kw) as i64 - padding as i64;
-                            if ow < 0 || ow >= o_w as i64 {
+                        // clamp the kw range so ow = iw·S + kw - P stays
+                        // inside [0, O_W) — resolves the per-element
+                        // bounds branch once per input pixel
+                        let ow_base = (iw * stride) as i64 - padding as i64;
+                        let kw_lo = (-ow_base).clamp(0, k as i64) as usize;
+                        let kw_hi =
+                            (o_w as i64 - ow_base).clamp(0, k as i64) as usize;
+                        if kw_lo >= kw_hi {
+                            continue;
+                        }
+                        let ow_first = (ow_base + kw_lo as i64) as usize;
+                        for kh in 0..k {
+                            let oh =
+                                (ih * stride + kh) as i64 - padding as i64;
+                            if oh < 0 || oh >= o_h as i64 {
                                 continue;
                             }
-                            for co in 0..c_out {
-                                let i =
-                                    at(bi, co, oh as usize, ow as usize);
-                                acc[i] =
-                                    T::mac(acc[i], w.get4(ci, co, kh, kw), v);
+                            let wrow = &w_chan[kh * k + kw_lo..][..kw_hi - kw_lo];
+                            let arow = &mut plane
+                                [oh as usize * o_w + ow_first..]
+                                [..kw_hi - kw_lo];
+                            // contiguous scatter of one kernel row into
+                            // one output row — autovectorizes
+                            for (a, &wv) in arow.iter_mut().zip(wrow) {
+                                *a = T::mac(*a, wv, v);
                             }
                         }
                     }
@@ -149,6 +168,43 @@ mod tests {
             assert_eq!(y.get4(0, 0, 1, col), 2.0);
             assert_eq!(y.get4(0, 0, 2, col), 2.0);
             assert_eq!(y.get4(0, 0, 3, col), 1.0);
+        }
+    }
+
+    /// The restructured nest (hoisted `co`, clamped contiguous `kw`
+    /// zip) is bit-identical to the pinned pre-PR scalar reference.
+    #[test]
+    fn bit_identical_to_pinned_scalar_reference() {
+        use crate::deconv::deconv_standard_ref;
+        use crate::util::Rng;
+        let mut rng = Rng::seed_from_u64(29);
+        for (n, c_in, c_out, k, s, p, i_h) in [
+            (1, 2, 3, 4, 2, 1, 5),
+            (2, 3, 2, 7, 1, 0, 3),
+            (1, 2, 2, 3, 3, 1, 4),
+            (1, 1, 1, 5, 2, 2, 6),
+        ] {
+            let x = Tensor::from_fn(vec![n, c_in, i_h, i_h], |_| {
+                rng.range_f32(-1.0, 1.0)
+            });
+            let mut w = Tensor::from_fn(vec![c_in, c_out, k, k], |_| {
+                rng.range_f32(-1.0, 1.0)
+            });
+            for (i, v) in w.data_mut().iter_mut().enumerate() {
+                if i % 3 == 0 {
+                    *v = 0.0;
+                }
+            }
+            let b: Vec<f32> =
+                (0..c_out).map(|_| rng.range_f32(-0.5, 0.5)).collect();
+            let want = deconv_standard_ref(&x, &w, &b, s, p);
+            let got = deconv_standard(&x, &w, &b, s, p);
+            assert_eq!(
+                got.data(),
+                want.data(),
+                "({n},{c_in},{c_out},{k},{s},{p},{i_h}): f32 must match \
+                 the scalar reference bit for bit"
+            );
         }
     }
 

@@ -131,41 +131,63 @@ pub fn deconv_tdc<T: Element>(
     // class r the taps are {k : (k - P) ≡ -r? }.  Rather than re-derive
     // sub-conv index algebra here (the banks above carry it), evaluate
     // per class by direct gather, which IS the sub-convolution.
+    //
+    // SIMD-shaped gather: the per-pixel modulo/division/bounds tests
+    // depend only on the output coordinate along one axis, so the valid
+    // `(k, i)` tap pairs are precomputed once per `oh` and once per
+    // `ow`.  The per-pixel loop then walks pre-resolved pairs and the
+    // innermost `ci` reduction uses fixed-stride index increments —
+    // no modulo, division or branch per tap.  Per output element the
+    // taps still accumulate in ascending `(kh, kw, ci)` order, so the
+    // result is bit-identical to the pinned scalar reference
+    // ([`super::reference::deconv_tdc_ref`]).
+    let taps_along = |o_extent: usize, i_extent: usize| -> Vec<Vec<(usize, usize)>> {
+        (0..o_extent)
+            .map(|o| {
+                (0..k)
+                    .filter_map(|kk| {
+                        let num = o as i64 + p as i64 - kk as i64;
+                        if num % s as i64 != 0 {
+                            return None;
+                        }
+                        let i = num / s as i64;
+                        if i < 0 || i >= i_extent as i64 {
+                            return None;
+                        }
+                        Some((kk, i as usize))
+                    })
+                    .collect()
+            })
+            .collect()
+    };
+    let taps_h = taps_along(o_h, i_h);
+    let taps_w = taps_along(o_w, i_w);
+
+    let xdata = x.data();
+    let wdata = w.data();
+    let ydata = y.data_mut();
+    let w_ci_stride = c_out * k * k;
+    let x_ci_stride = i_h * i_w;
     for bi in 0..n {
         for co in 0..c_out {
             for oh in 0..o_h {
-                for ow in 0..o_w {
+                let orow = &mut ydata
+                    [((bi * c_out + co) * o_h + oh) * o_w..][..o_w];
+                for (ow, yv) in orow.iter_mut().enumerate() {
                     let mut acc = b[co].widen();
-                    for kh in 0..k {
-                        let num_h = oh as i64 + p as i64 - kh as i64;
-                        if num_h % s as i64 != 0 {
-                            continue;
-                        }
-                        let ih = num_h / s as i64;
-                        if ih < 0 || ih >= i_h as i64 {
-                            continue;
-                        }
-                        for kw in 0..k {
-                            let num_w = ow as i64 + p as i64 - kw as i64;
-                            if num_w % s as i64 != 0 {
-                                continue;
-                            }
-                            let iw = num_w / s as i64;
-                            if iw < 0 || iw >= i_w as i64 {
-                                continue;
-                            }
-                            for ci in 0..c_in {
-                                acc = T::mac(
-                                    acc,
-                                    w.get4(ci, co, kh, kw),
-                                    x.get4(
-                                        bi, ci, ih as usize, iw as usize,
-                                    ),
-                                );
+                    for &(kh, ih) in &taps_h[oh] {
+                        for &(kw, iw) in &taps_w[ow] {
+                            let mut wi = (co * k + kh) * k + kw;
+                            let mut xi =
+                                (bi * c_in * i_h + ih) * i_w + iw;
+                            for _ in 0..c_in {
+                                acc = T::mac(acc, wdata[wi], xdata[xi]);
+                                wi += w_ci_stride;
+                                xi += x_ci_stride;
                             }
                         }
                     }
-                    y.set4(bi, co, oh, ow, T::narrow(acc));
+                    *yv = T::narrow(acc);
                 }
             }
         }
@@ -233,6 +255,37 @@ mod tests {
             let expect = deconv_standard(&x, &w, &b, s, p);
             let got = deconv_tdc(&x, &w, &b, s, p);
             assert_eq!(got.data(), expect.data(), "({c_in},{c_out},{k},{s},{p})");
+        }
+    }
+
+    /// The precomputed-taps gather is bit-identical to the pinned
+    /// pre-PR scalar reference (inline modulo per tap).
+    #[test]
+    fn bit_identical_to_pinned_scalar_reference() {
+        use crate::deconv::deconv_tdc_ref;
+        let mut rng = Rng::seed_from_u64(37);
+        for (c_in, c_out, k, s, p, i_h) in [
+            (2, 3, 4, 2, 1, 5),
+            (1, 2, 3, 2, 1, 4),
+            (2, 1, 7, 1, 0, 3),
+            (1, 1, 5, 3, 2, 4),
+        ] {
+            let x = Tensor::from_fn(vec![2, c_in, i_h, i_h], |_| {
+                rng.range_f32(-1.0, 1.0)
+            });
+            let w = Tensor::from_fn(vec![c_in, c_out, k, k], |_| {
+                rng.range_f32(-1.0, 1.0)
+            });
+            let b: Vec<f32> =
+                (0..c_out).map(|_| rng.range_f32(-0.5, 0.5)).collect();
+            let want = deconv_tdc_ref(&x, &w, &b, s, p);
+            let got = deconv_tdc(&x, &w, &b, s, p);
+            assert_eq!(
+                got.data(),
+                want.data(),
+                "({c_in},{c_out},{k},{s},{p},{i_h}): f32 must match the \
+                 scalar reference bit for bit"
+            );
         }
     }
 

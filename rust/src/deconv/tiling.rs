@@ -10,10 +10,18 @@ pub fn input_tile_extent(t_oh: usize, k: usize, s: usize) -> usize {
 /// Square output tile factors that are legal for a network whose largest
 /// layer output is `o_max`: `2 ≤ T ≤ o_max`, and `T ≡ 0 (mod S_max)` so a
 /// tile always covers whole stride classes.
+///
+/// Never returns an empty set: a degenerate network (`o_max < 2`, e.g. a
+/// single 1×1 output layer) falls back to the smallest stride-covering
+/// tile, `max(S_max, 2)`, so DSE sweeps and tile pickers always have a
+/// candidate instead of panicking on an empty range.
 pub fn legal_tiles(o_max: usize, s_max: usize) -> Vec<usize> {
-    (2..=o_max)
-        .filter(|t| t % s_max == 0)
-        .collect()
+    let tiles: Vec<usize> =
+        (2..=o_max).filter(|t| t % s_max == 0).collect();
+    if tiles.is_empty() {
+        return vec![s_max.max(2)];
+    }
+    tiles
 }
 
 /// Static tiling schedule of one layer at one tile factor — how many CU
@@ -84,6 +92,22 @@ mod tests {
         assert!(tiles.contains(&24));
         assert!(tiles.iter().all(|t| t % 2 == 0));
         assert!(!tiles.contains(&13));
+    }
+
+    #[test]
+    fn legal_tiles_never_empty_on_degenerate_outputs() {
+        // o_max < 2: the old range (2..=o_max) was empty
+        assert_eq!(legal_tiles(1, 1), vec![2]);
+        assert_eq!(legal_tiles(0, 2), vec![2]);
+        assert_eq!(legal_tiles(1, 3), vec![3]);
+        // stride larger than every candidate tile is also non-empty
+        assert_eq!(legal_tiles(3, 4), vec![4]);
+        // and the fallback still covers whole stride classes
+        for (o, s) in [(1usize, 1usize), (0, 2), (1, 3), (3, 4)] {
+            let tiles = legal_tiles(o, s);
+            assert!(!tiles.is_empty());
+            assert!(tiles.iter().all(|t| t % s == 0 && *t >= 2));
+        }
     }
 
     #[test]

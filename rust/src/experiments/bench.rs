@@ -1,0 +1,656 @@
+//! `edgedcnn bench` — the regression-defended microbenchmark suite
+//! over the numeric hot path (schema v2, `BENCH_edgedcnn.json`).
+//!
+//! One fixed deconvolution geometry (a smoke and a full variant) is
+//! timed through every kernel × precision cell: the three production
+//! kernels (`standard`, `reverse-loop`, `tdc`) plus the **frozen
+//! scalar reference** of the reverse loop
+//! ([`crate::deconv::deconv_reverse_loop_ref`]) in `f32`, Q8.8 and
+//! Q16.16.  Each cell records robust [`TrialStats`] (median + MAD +
+//! p99 over individually timed trials) and the derived img/s and
+//! ns/MAC figures; a serving section drives each backend kind through
+//! the coordinator over synthetic artifacts and records its img/s and
+//! request p99.
+//!
+//! The regression policy has two tiers:
+//!
+//! * **Ratio gates** — `reverse-loop` must beat its own frozen scalar
+//!   reference by the baseline's `min_speedup_*` factors (the ISSUE's
+//!   ≥1.5× f32 / ≥1.2× fixed-point trajectory).  Both sides are
+//!   measured *in the same run on the same machine*, so the gate is
+//!   self-normalizing and always enforced.
+//! * **Absolute medians** — fresh vs baseline per row, tolerance
+//!   `max(50%, 8·(rel_MAD_base + rel_MAD_fresh))` so a noisy machine
+//!   widens its own band.  Skipped while the committed baseline is
+//!   marked `provisional` (authored without a measured run); CI
+//!   uploads every fresh suite so a maintainer can promote one to a
+//!   measured baseline by committing it with `provisional: false`.
+//!
+//! Serving rows are informational (queueing latencies are far noisier
+//! than kernel medians); they ride the JSON so the trajectory is
+//! visible, but never gate.
+
+use crate::artifacts::write_synthetic;
+use crate::config::{BackendCfg, DeviceKind};
+use crate::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig};
+use crate::deconv::{
+    deconv_reverse_loop, deconv_reverse_loop_ref, deconv_standard,
+    deconv_tdc, ReverseLoopOpts,
+};
+use crate::quant::{Element, Q16_16, Q8_8};
+use crate::tensor::TensorT;
+use crate::util::{
+    escape_json, parse_json, Bencher, Json, Rng, TempDir, TrialStats,
+};
+use anyhow::{bail, Context, Result};
+use std::time::Duration;
+
+/// Schema version of `BENCH_edgedcnn.json`.  v1 was the ad-hoc CI
+/// artifact the bench-smoke job emitted from the criterion-stand-in
+/// binaries; v2 is this suite (rows × precisions, robust statistics,
+/// the provisional flag and the speedup gates).
+pub const BENCH_SCHEMA_VERSION: u64 = 2;
+
+/// Default ratio gates: how much faster the restructured reverse loop
+/// must be than its frozen scalar reference, same run, same machine.
+pub const MIN_SPEEDUP_F32: f64 = 1.5;
+pub const MIN_SPEEDUP_FIXED: f64 = 1.2;
+
+/// Knobs of one suite run.
+#[derive(Debug, Clone)]
+pub struct BenchOpts {
+    /// Small geometry + few trials (the CI mode).
+    pub smoke: bool,
+    /// Timed trials per cell (each timed individually).
+    pub trials: usize,
+    /// Untimed warm-up iterations per cell.
+    pub warmup: usize,
+    /// Measure the serving section (coordinator over synthetic
+    /// artifacts, one row per backend kind).
+    pub serving: bool,
+}
+
+impl BenchOpts {
+    pub fn new(smoke: bool) -> Self {
+        BenchOpts {
+            smoke,
+            trials: if smoke { 5 } else { 20 },
+            warmup: if smoke { 1 } else { 3 },
+            serving: true,
+        }
+    }
+}
+
+/// One kernel × precision cell.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KernelRow {
+    /// `<kernel>-<precision>`, e.g. `reverse-loop-q8.8`.
+    pub name: String,
+    /// Batch images generated per iteration.
+    pub images: usize,
+    /// Dense MACs per iteration (zero-skip off), from the reverse
+    /// loop's own [`crate::deconv::OpStats`] accounting.
+    pub macs: u64,
+    pub stats: TrialStats,
+}
+
+impl KernelRow {
+    pub fn img_per_s(&self) -> f64 {
+        self.images as f64 / self.stats.median_s
+    }
+
+    pub fn ns_per_mac(&self) -> f64 {
+        self.stats.median_s * 1e9 / self.macs as f64
+    }
+}
+
+/// One serving-path row (informational, never gated).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServingRow {
+    /// `serve-<backend>`, e.g. `serve-fpga`.
+    pub name: String,
+    pub images_per_s: f64,
+    pub p99_s: f64,
+}
+
+/// A complete suite run (or a committed baseline).
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchSuite {
+    /// `true` = authored without a measured run on the target machine;
+    /// absolute-median comparisons are skipped against it (the ratio
+    /// gates still apply, they are within-run).
+    pub provisional: bool,
+    pub smoke: bool,
+    pub min_speedup_f32: f64,
+    pub min_speedup_fixed: f64,
+    pub rows: Vec<KernelRow>,
+    pub serving: Vec<ServingRow>,
+}
+
+/// Fixed benchmark geometry (one deconvolution layer).
+struct Geo {
+    n: usize,
+    c_in: usize,
+    c_out: usize,
+    i: usize,
+    k: usize,
+    s: usize,
+    p: usize,
+    tile: usize,
+}
+
+impl Geo {
+    fn new(smoke: bool) -> Self {
+        if smoke {
+            // mnist-layer-2-like, small enough for CI
+            Geo { n: 2, c_in: 8, c_out: 8, i: 7, k: 4, s: 2, p: 1, tile: 12 }
+        } else {
+            Geo {
+                n: 4,
+                c_in: 32,
+                c_out: 32,
+                i: 14,
+                k: 4,
+                s: 2,
+                p: 1,
+                tile: 12,
+            }
+        }
+    }
+}
+
+/// Time every kernel at one precision and append the four rows.
+fn rows_for<T: Element>(
+    suffix: &str,
+    g: &Geo,
+    opts: &BenchOpts,
+    rows: &mut Vec<KernelRow>,
+) {
+    // same f32 value stream for every precision (comparability)
+    let mut rng = Rng::seed_from_u64(0xBE9C4);
+    let x = TensorT::<T>::from_fn(vec![g.n, g.c_in, g.i, g.i], |_| {
+        T::from_f32(rng.range_f32(-1.0, 1.0))
+    });
+    let w = TensorT::<T>::from_fn(vec![g.c_in, g.c_out, g.k, g.k], |_| {
+        T::from_f32(rng.range_f32(-0.5, 0.5))
+    });
+    let b: Vec<T> = (0..g.c_out)
+        .map(|_| T::from_f32(rng.range_f32(-0.1, 0.1)))
+        .collect();
+    let rl = ReverseLoopOpts { tile: g.tile, zero_skip: false };
+    // dense MAC count for the ns/MAC column (identical across kernels:
+    // all three visit the same multiset of taps)
+    let (_, dense) = deconv_reverse_loop(&x, &w, &b, g.s, g.p, rl);
+    let macs = dense.macs_issued;
+
+    let bench =
+        |name: &str| Bencher::new(name).iters(opts.trials).warmup(opts.warmup);
+    let mut push = |name: String, stats: TrialStats| {
+        rows.push(KernelRow { name, images: g.n, macs, stats });
+    };
+    push(
+        format!("standard-{suffix}"),
+        bench("standard")
+            .run_trials(|| deconv_standard(&x, &w, &b, g.s, g.p)),
+    );
+    push(
+        format!("reverse-loop-{suffix}"),
+        bench("reverse-loop")
+            .run_trials(|| deconv_reverse_loop(&x, &w, &b, g.s, g.p, rl)),
+    );
+    push(
+        format!("tdc-{suffix}"),
+        bench("tdc").run_trials(|| deconv_tdc(&x, &w, &b, g.s, g.p)),
+    );
+    push(
+        format!("reverse-loop-ref-{suffix}"),
+        bench("reverse-loop-ref")
+            .run_trials(|| deconv_reverse_loop_ref(&x, &w, &b, g.s, g.p, rl)),
+    );
+}
+
+/// Drive one backend kind through the coordinator and record its row.
+fn serving_row(
+    dir: &std::path::Path,
+    kind: DeviceKind,
+    smoke: bool,
+) -> Result<ServingRow> {
+    let coord = Coordinator::start(CoordinatorConfig {
+        artifacts_dir: dir.to_path_buf(),
+        networks: vec!["mnist".to_string()],
+        batcher: BatcherConfig::default(),
+        backends: BackendCfg { kinds: vec![kind], ..Default::default() },
+        executors: 0,
+        quant: None,
+        shard_batches: false,
+    })
+    .with_context(|| format!("starting a {} lane", kind.as_str()))?;
+    let report = coord.serve_workload(&crate::coordinator::WorkloadSpec {
+        network: "mnist".to_string(),
+        requests: if smoke { 8 } else { 32 },
+        images_per_request: 2,
+        interarrival: Duration::from_millis(1),
+        seed: 42,
+    })?;
+    Ok(ServingRow {
+        name: format!("serve-{}", kind.as_str()),
+        images_per_s: report.images_per_s,
+        p99_s: report.latency.p99_s,
+    })
+}
+
+/// Run the whole suite.  The result is a *measured* suite
+/// (`provisional: false`).
+pub fn run_bench(opts: &BenchOpts) -> Result<BenchSuite> {
+    let g = Geo::new(opts.smoke);
+    let mut rows = Vec::with_capacity(12);
+    rows_for::<f32>("f32", &g, opts, &mut rows);
+    rows_for::<Q8_8>("q8.8", &g, opts, &mut rows);
+    rows_for::<Q16_16>("q16.16", &g, opts, &mut rows);
+
+    let mut serving = Vec::new();
+    if opts.serving {
+        let dir = TempDir::new()?;
+        write_synthetic(dir.path(), &["mnist"], 2, 17)?;
+        for kind in [DeviceKind::Fpga, DeviceKind::Gpu, DeviceKind::Cpu] {
+            serving.push(serving_row(dir.path(), kind, opts.smoke)?);
+        }
+    }
+    Ok(BenchSuite {
+        provisional: false,
+        smoke: opts.smoke,
+        min_speedup_f32: MIN_SPEEDUP_F32,
+        min_speedup_fixed: MIN_SPEEDUP_FIXED,
+        rows,
+        serving,
+    })
+}
+
+impl BenchSuite {
+    /// Median-over-median speedup of the restructured reverse loop vs
+    /// its frozen scalar reference at one precision suffix.
+    pub fn speedup(&self, suffix: &str) -> Option<f64> {
+        let find = |name: String| {
+            self.rows.iter().find(|r| r.name == name)
+        };
+        let vec = find(format!("reverse-loop-{suffix}"))?;
+        let reference = find(format!("reverse-loop-ref-{suffix}"))?;
+        Some(reference.stats.median_s / vec.stats.median_s)
+    }
+
+    pub fn to_json(&self) -> String {
+        let rows = self
+            .rows
+            .iter()
+            .map(|r| {
+                format!(
+                    "    {{\"name\": \"{}\", \"images\": {}, \"macs\": {}, \
+                     \"trials\": {}, \"median_s\": {}, \"mad_s\": {}, \
+                     \"p99_s\": {}, \"min_s\": {}, \"img_per_s\": {}, \
+                     \"ns_per_mac\": {}}}",
+                    escape_json(&r.name),
+                    r.images,
+                    r.macs,
+                    r.stats.trials,
+                    r.stats.median_s,
+                    r.stats.mad_s,
+                    r.stats.p99_s,
+                    r.stats.min_s,
+                    r.img_per_s(),
+                    r.ns_per_mac(),
+                )
+            })
+            .collect::<Vec<_>>()
+            .join(",\n");
+        let serving = self
+            .serving
+            .iter()
+            .map(|s| {
+                format!(
+                    "    {{\"name\": \"{}\", \"images_per_s\": {}, \
+                     \"p99_s\": {}}}",
+                    escape_json(&s.name),
+                    s.images_per_s,
+                    s.p99_s,
+                )
+            })
+            .collect::<Vec<_>>()
+            .join(",\n");
+        format!(
+            "{{\n  \"version\": {BENCH_SCHEMA_VERSION},\n  \
+             \"provisional\": {},\n  \"smoke\": {},\n  \
+             \"min_speedup_f32\": {},\n  \"min_speedup_fixed\": {},\n  \
+             \"rows\": [\n{}\n  ],\n  \"serving\": [\n{}\n  ]\n}}\n",
+            self.provisional,
+            self.smoke,
+            self.min_speedup_f32,
+            self.min_speedup_fixed,
+            rows,
+            serving,
+        )
+    }
+
+    pub fn from_json(s: &str) -> Result<BenchSuite> {
+        fn as_bool(j: &Json) -> Result<bool> {
+            match j {
+                Json::Bool(b) => Ok(*b),
+                other => bail!("expected bool, got {other:?}"),
+            }
+        }
+        let v = parse_json(s).context("parsing bench suite JSON")?;
+        let version = v.req("version")?.as_u64()?;
+        if version != BENCH_SCHEMA_VERSION {
+            bail!(
+                "bench schema version {version} != {BENCH_SCHEMA_VERSION} \
+                 (refusing to compare across schemas)"
+            );
+        }
+        let rows = v
+            .req("rows")?
+            .as_arr()?
+            .iter()
+            .map(|r| {
+                Ok(KernelRow {
+                    name: r.req("name")?.as_str()?.to_string(),
+                    images: r.req("images")?.as_usize()?,
+                    macs: r.req("macs")?.as_u64()?,
+                    stats: TrialStats {
+                        trials: r.req("trials")?.as_usize()?,
+                        median_s: r.req("median_s")?.as_f64()?,
+                        mad_s: r.req("mad_s")?.as_f64()?,
+                        p99_s: r.req("p99_s")?.as_f64()?,
+                        min_s: r.req("min_s")?.as_f64()?,
+                    },
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let serving = v
+            .req("serving")?
+            .as_arr()?
+            .iter()
+            .map(|r| {
+                Ok(ServingRow {
+                    name: r.req("name")?.as_str()?.to_string(),
+                    images_per_s: r.req("images_per_s")?.as_f64()?,
+                    p99_s: r.req("p99_s")?.as_f64()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(BenchSuite {
+            provisional: as_bool(v.req("provisional")?)?,
+            smoke: as_bool(v.req("smoke")?)?,
+            min_speedup_f32: v.req("min_speedup_f32")?.as_f64()?,
+            min_speedup_fixed: v.req("min_speedup_fixed")?.as_f64()?,
+            rows,
+            serving,
+        })
+    }
+
+    /// Human-readable table (the default `edgedcnn bench` output).
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "== edgedcnn bench ({}{}) ==\n{:<24} {:>11} {:>9} {:>11} \
+             {:>9} {:>9}\n",
+            if self.smoke { "smoke" } else { "full" },
+            if self.provisional { ", provisional" } else { "" },
+            "row",
+            "median ms",
+            "mad ms",
+            "p99 ms",
+            "img/s",
+            "ns/MAC",
+        );
+        for r in &self.rows {
+            out.push_str(&format!(
+                "{:<24} {:>11.4} {:>9.4} {:>11.4} {:>9.1} {:>9.3}\n",
+                r.name,
+                r.stats.median_s * 1e3,
+                r.stats.mad_s * 1e3,
+                r.stats.p99_s * 1e3,
+                r.img_per_s(),
+                r.ns_per_mac(),
+            ));
+        }
+        for suffix in ["f32", "q8.8", "q16.16"] {
+            if let Some(sp) = self.speedup(suffix) {
+                let gate = if suffix == "f32" {
+                    self.min_speedup_f32
+                } else {
+                    self.min_speedup_fixed
+                };
+                out.push_str(&format!(
+                    "speedup reverse-loop-{suffix} vs ref: {sp:.2}x \
+                     (gate {gate:.2}x)\n",
+                ));
+            }
+        }
+        for s in &self.serving {
+            out.push_str(&format!(
+                "{:<24} {:>9.1} img/s  p99 {:>8.3} ms\n",
+                s.name,
+                s.images_per_s,
+                s.p99_s * 1e3,
+            ));
+        }
+        out
+    }
+}
+
+/// Compare a fresh suite against the committed baseline.  Returns the
+/// rendered comparison on success; any tripped gate is an `Err` (the
+/// CLI exits nonzero, failing the CI job).
+pub fn compare_suites(base: &BenchSuite, fresh: &BenchSuite) -> Result<String> {
+    let mut out = String::new();
+    let mut failures: Vec<String> = Vec::new();
+
+    // ratio gates: within-run, always enforced, thresholds come off the
+    // committed baseline (the defended trajectory)
+    for suffix in ["f32", "q8.8", "q16.16"] {
+        let gate = if suffix == "f32" {
+            base.min_speedup_f32
+        } else {
+            base.min_speedup_fixed
+        };
+        match fresh.speedup(suffix) {
+            Some(sp) if sp >= gate => out.push_str(&format!(
+                "PASS speedup reverse-loop-{suffix}: {sp:.2}x >= {gate:.2}x\n"
+            )),
+            Some(sp) => failures.push(format!(
+                "speedup reverse-loop-{suffix}: {sp:.2}x < gate {gate:.2}x"
+            )),
+            None => failures.push(format!(
+                "fresh suite is missing the reverse-loop-{suffix} rows"
+            )),
+        }
+    }
+
+    // absolute medians, vs a *measured* baseline only
+    if base.provisional {
+        out.push_str(
+            "baseline is provisional — absolute-median comparisons skipped \
+             (commit a measured run with \"provisional\": false to arm \
+             them)\n",
+        );
+    } else {
+        for f in &fresh.rows {
+            let Some(b) = base.rows.iter().find(|b| b.name == f.name) else {
+                out.push_str(&format!("NEW  {} (no baseline row)\n", f.name));
+                continue;
+            };
+            let tol =
+                0.50f64.max(8.0 * (b.stats.rel_mad() + f.stats.rel_mad()));
+            let ratio = f.stats.median_s / b.stats.median_s;
+            if ratio > 1.0 + tol {
+                failures.push(format!(
+                    "{}: median {:.4} ms vs baseline {:.4} ms \
+                     ({:.0}% over, tolerance {:.0}%)",
+                    f.name,
+                    f.stats.median_s * 1e3,
+                    b.stats.median_s * 1e3,
+                    (ratio - 1.0) * 100.0,
+                    tol * 100.0,
+                ));
+            } else if ratio < 1.0 - tol {
+                out.push_str(&format!(
+                    "FASTER {}: {:.2}x below baseline — consider \
+                     re-baselining\n",
+                    f.name,
+                    1.0 / ratio,
+                ));
+            } else {
+                out.push_str(&format!(
+                    "PASS {}: median within {:.0}% of baseline\n",
+                    f.name,
+                    tol * 100.0,
+                ));
+            }
+        }
+    }
+
+    // serving rows: informational only (queueing latencies are noisy)
+    for s in &fresh.serving {
+        out.push_str(&format!(
+            "info {}: {:.1} img/s  p99 {:.3} ms\n",
+            s.name,
+            s.images_per_s,
+            s.p99_s * 1e3,
+        ));
+    }
+
+    if failures.is_empty() {
+        Ok(out)
+    } else {
+        bail!("bench regression:\n{}\n\n{out}", failures.join("\n"));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(name: &str, median: f64, mad: f64) -> KernelRow {
+        KernelRow {
+            name: name.to_string(),
+            images: 2,
+            macs: 1000,
+            stats: TrialStats {
+                trials: 5,
+                median_s: median,
+                mad_s: mad,
+                p99_s: median,
+                min_s: median,
+            },
+        }
+    }
+
+    fn suite(rows: Vec<KernelRow>, provisional: bool) -> BenchSuite {
+        BenchSuite {
+            provisional,
+            smoke: true,
+            min_speedup_f32: MIN_SPEEDUP_F32,
+            min_speedup_fixed: MIN_SPEEDUP_FIXED,
+            rows,
+            serving: vec![ServingRow {
+                name: "serve-fpga".to_string(),
+                images_per_s: 120.0,
+                p99_s: 0.004,
+            }],
+        }
+    }
+
+    /// Every speedup gate passing at exactly the stated margins.
+    fn passing_rows() -> Vec<KernelRow> {
+        let mut rows = Vec::new();
+        for suffix in ["f32", "q8.8", "q16.16"] {
+            rows.push(row(&format!("standard-{suffix}"), 2e-3, 1e-5));
+            rows.push(row(&format!("reverse-loop-{suffix}"), 1e-3, 1e-5));
+            rows.push(row(&format!("tdc-{suffix}"), 2e-3, 1e-5));
+            rows.push(row(&format!("reverse-loop-ref-{suffix}"), 3e-3, 1e-5));
+        }
+        rows
+    }
+
+    #[test]
+    fn json_roundtrips_and_refuses_other_schemas() {
+        let s = suite(passing_rows(), true);
+        let json = s.to_json();
+        let back = BenchSuite::from_json(&json).unwrap();
+        assert_eq!(back, s);
+        assert_eq!(back.to_json(), json, "stable re-serialization");
+        let v9 = json.replacen("\"version\": 2", "\"version\": 9", 1);
+        let err = BenchSuite::from_json(&v9).unwrap_err().to_string();
+        assert!(err.contains("schema version 9"), "{err}");
+        assert!(BenchSuite::from_json("{}").is_err());
+    }
+
+    #[test]
+    fn speedup_gates_are_enforced_even_against_provisional_baselines() {
+        let base = suite(passing_rows(), true);
+        let fresh = suite(passing_rows(), false);
+        let report = compare_suites(&base, &fresh).unwrap();
+        assert!(report.contains("PASS speedup reverse-loop-f32: 3.00x"));
+        assert!(report.contains("provisional"));
+
+        // slow the vectorized f32 loop to a 1.2x speedup: under the
+        // 1.5x f32 gate even though the fixed gates still pass
+        let mut slow = passing_rows();
+        slow.iter_mut()
+            .filter(|r| r.name == "reverse-loop-f32")
+            .for_each(|r| r.stats.median_s = 2.5e-3);
+        let err = compare_suites(&base, &suite(slow, false))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("speedup reverse-loop-f32"), "{err}");
+        assert!(err.contains("1.20x < gate 1.50x"), "{err}");
+    }
+
+    #[test]
+    fn absolute_medians_gate_only_against_measured_baselines() {
+        let mut regressed = passing_rows();
+        regressed
+            .iter_mut()
+            .filter(|r| r.name == "tdc-q8.8")
+            .for_each(|r| r.stats.median_s = 4e-3); // 2x the baseline
+        // provisional baseline: the regression is invisible
+        let provisional = suite(passing_rows(), true);
+        assert!(
+            compare_suites(&provisional, &suite(regressed.clone(), false))
+                .is_ok()
+        );
+        // measured baseline: 2x > 1 + max(0.50, ~0) trips
+        let measured = suite(passing_rows(), false);
+        let err = compare_suites(&measured, &suite(regressed, false))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("tdc-q8.8"), "{err}");
+        // and an in-tolerance run passes with per-row PASS lines
+        let report =
+            compare_suites(&measured, &suite(passing_rows(), false)).unwrap();
+        assert!(report.contains("PASS standard-f32"), "{report}");
+    }
+
+    #[test]
+    fn bench_runs_in_smoke_mode() {
+        let opts = BenchOpts {
+            smoke: true,
+            trials: 2,
+            warmup: 0,
+            serving: false,
+        };
+        let suite = run_bench(&opts).unwrap();
+        assert!(!suite.provisional, "a measured run is not provisional");
+        assert_eq!(suite.rows.len(), 12, "4 kernels x 3 precisions");
+        for r in &suite.rows {
+            assert!(r.stats.median_s > 0.0, "{}", r.name);
+            assert!(r.macs > 0, "{}", r.name);
+            assert!(r.img_per_s() > 0.0 && r.ns_per_mac() > 0.0);
+        }
+        assert!(suite.rows.iter().any(|r| r.name == "reverse-loop-q8.8"));
+        for suffix in ["f32", "q8.8", "q16.16"] {
+            assert!(suite.speedup(suffix).is_some(), "{suffix}");
+        }
+        let rendered = suite.render();
+        assert!(rendered.contains("reverse-loop-ref-q16.16"), "{rendered}");
+        assert!(rendered.contains("speedup reverse-loop-f32"), "{rendered}");
+    }
+}

@@ -4,6 +4,7 @@
 //! criterion benches all share one implementation.
 
 mod ablations;
+mod bench;
 mod fig5;
 mod fig6;
 mod quant_error;
@@ -11,6 +12,10 @@ mod table1;
 mod table2;
 
 pub use ablations::{render as render_ablations, run_ablations, AblationRow};
+pub use bench::{
+    compare_suites, run_bench, BenchOpts, BenchSuite, KernelRow, ServingRow,
+    BENCH_SCHEMA_VERSION, MIN_SPEEDUP_F32, MIN_SPEEDUP_FIXED,
+};
 pub use fig5::{render as render_fig5, run_fig5, Fig5Data};
 pub use fig6::{
     default_levels, render as render_fig6, run_fig6, run_fig6_with_runtime,

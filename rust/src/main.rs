@@ -54,10 +54,27 @@ COMMANDS:
                              (backpressure), --executors E cycles the
                              backends list to E lanes, --json prints the
                              versioned report schema instead of the table
+  bench     [--smoke] [--trials N] [--json] [--out FILE]
+            [--compare FILE] [--no-serving]
+                             regression-defended microbenchmark suite
+                             over the numeric hot path: every deconv
+                             kernel (standard / reverse-loop / tdc plus
+                             the frozen scalar reverse-loop reference)
+                             at f32, q8.8 and q16.16, with robust
+                             median+MAD trial statistics, img/s and
+                             ns/MAC columns, and per-backend serving
+                             throughput rows.  --out writes the schema
+                             v2 BENCH_edgedcnn.json; --compare checks
+                             this run against a committed baseline and
+                             exits nonzero on regression (speedup gates
+                             always, absolute medians when the baseline
+                             is not provisional); --no-serving skips
+                             the coordinator rows
   loadtest  [--scenario NAME|FILE] [--trials N] [--requests N] [--seed S]
             [--backends fpga,gpu,cpu] [--queue-depth D] [--executors E]
             [--record FILE] [--replay FILE] [--no-shard] [--smoke]
             [--closed N] [--think-ms T] [--deadline-ms D]
+            [--drift-csv FILE]
                              scenario-driven load generation against the
                              backend pool, repeated over N seeded
                              trials, with the paper's Table-2-style run-
@@ -80,8 +97,10 @@ COMMANDS:
                              clients with --think-ms of think time
                              instead of the open-loop schedule;
                              --deadline-ms overrides the scenario's
-                             relative deadline; --smoke is the short CI
-                             mode
+                             relative deadline; --drift-csv writes the
+                             final trial's windowed latency-drift
+                             histogram shards as CSV; --smoke is the
+                             short CI mode
   fleet     [--sites N] [--scenario NAME|FILE] [--requests N] [--seed S]
             [--backends fpga,gpu,cpu] [--queue-depth D] [--max-deferred N]
             [--executors E] [--placement hash|round-robin] [--vnodes V]
@@ -294,6 +313,38 @@ fn main() -> Result<()> {
                 println!("{}", report.render());
             }
         }
+        "bench" => {
+            let smoke = flags.has("smoke");
+            let mut opts = exp::BenchOpts::new(smoke);
+            opts.trials = flags.get("trials", opts.trials)?;
+            opts.serving = !flags.has("no-serving");
+            let suite = exp::run_bench(&opts)?;
+            if let Some(path) =
+                flags.get_opt::<std::path::PathBuf>("out")?
+            {
+                std::fs::write(&path, suite.to_json())?;
+                println!("bench suite written to {}", path.display());
+            }
+            if flags.has("json") {
+                print!("{}", suite.to_json());
+            } else {
+                print!("{}", suite.render());
+            }
+            if let Some(base_path) =
+                flags.get_opt::<std::path::PathBuf>("compare")?
+            {
+                let base = exp::BenchSuite::from_json(
+                    &std::fs::read_to_string(&base_path).map_err(|e| {
+                        anyhow::anyhow!(
+                            "reading baseline {}: {e}",
+                            base_path.display()
+                        )
+                    })?,
+                )?;
+                // a tripped gate is an Err → nonzero exit (CI fails)
+                print!("{}", exp::compare_suites(&base, &suite)?);
+            }
+        }
         "loadtest" => {
             let smoke = flags.has("smoke");
             let pool = PoolCfg::from_flags(&flags)?;
@@ -314,6 +365,7 @@ fn main() -> Result<()> {
                     shard_batches: !flags.has("no-shard"),
                     closed: flags.get("closed", 0usize)?,
                     think: Duration::from_secs_f64(think_ms / 1e3),
+                    drift_csv: flags.get_opt("drift-csv")?,
                 },
             )?;
             print!("{}", report.render());

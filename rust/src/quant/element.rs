@@ -21,7 +21,9 @@ pub trait Element:
     /// the sum is independent of accumulation order.  Order-independence
     /// holds unconditionally; *overflow-freedom* is storage-dependent —
     /// see [`crate::quant::Fixed`]'s `mac` for the per-width headroom.
-    type Acc: Copy + Send;
+    /// (`'static` so accumulator blocks can live in the type-keyed
+    /// per-worker scratch arena, [`crate::util::with_scratch`].)
+    type Acc: Copy + Send + 'static;
 
     /// Additive identity in the element domain.
     const ZERO: Self;

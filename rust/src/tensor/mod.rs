@@ -113,6 +113,105 @@ impl<T: Element> TensorT<T> {
     }
 }
 
+/// A zero-copy view of `[n, C, H, W]` images inside a shared batch
+/// allocation — the serving path's reply payload.
+///
+/// The executor generates one batch tensor per dispatch; before this
+/// type existed every request's reply `memcpy`'d its row range into a
+/// fresh [`Tensor`].  An `ImageBlock` instead holds an [`Arc`] to the
+/// batch buffer plus an offset/length window, so splitting a batch into
+/// per-request payloads is O(1) per request and a served image is never
+/// copied after generation.  [`ImageBlock::shares_allocation`] makes
+/// that property observable (the allocation-counting integration test
+/// asserts same-batch responses alias one buffer).
+///
+/// The read surface mirrors the [`Tensor`] methods response consumers
+/// used (`shape`/`numel`/`data`/`max_abs_diff`), so call sites are
+/// unchanged; [`ImageBlock::to_tensor`] is the explicit opt-in copy for
+/// callers that genuinely need an owned tensor.
+#[derive(Debug, Clone)]
+pub struct ImageBlock {
+    buf: std::sync::Arc<Vec<f32>>,
+    offset: usize,
+    shape: Vec<usize>,
+}
+
+impl ImageBlock {
+    /// Wrap a whole batch tensor (one `Arc` allocation, no data copy).
+    pub fn from_tensor(t: Tensor) -> Self {
+        let shape = t.shape().to_vec();
+        ImageBlock {
+            buf: std::sync::Arc::new(t.into_data()),
+            offset: 0,
+            shape,
+        }
+    }
+
+    /// Zero-copy sub-view of `n_images` images starting at image
+    /// `first` (axis 0) — shares the backing buffer.
+    pub fn slice_images(&self, first: usize, n_images: usize) -> Self {
+        assert!(!self.shape.is_empty(), "rank-0 image block");
+        assert!(
+            first + n_images <= self.shape[0],
+            "slice [{first}, {}) out of {} images",
+            first + n_images,
+            self.shape[0]
+        );
+        let per_image: usize = self.shape[1..].iter().product();
+        let mut shape = self.shape.clone();
+        shape[0] = n_images;
+        ImageBlock {
+            buf: std::sync::Arc::clone(&self.buf),
+            offset: self.offset + first * per_image,
+            shape,
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.buf[self.offset..self.offset + self.numel()]
+    }
+
+    /// Explicit copy out into an owned [`Tensor`].
+    pub fn to_tensor(&self) -> Tensor {
+        TensorT {
+            shape: self.shape.clone(),
+            data: self.data().to_vec(),
+        }
+    }
+
+    /// Maximum absolute elementwise difference (test assertions).
+    pub fn max_abs_diff(&self, other: &ImageBlock) -> f32 {
+        assert_eq!(self.shape, other.shape, "shape mismatch in diff");
+        self.data()
+            .iter()
+            .zip(other.data())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Whether two blocks are windows of the same backing allocation —
+    /// the zero-copy proof the serving tests assert.
+    pub fn shares_allocation(&self, other: &ImageBlock) -> bool {
+        std::sync::Arc::ptr_eq(&self.buf, &other.buf)
+    }
+}
+
+impl PartialEq for ImageBlock {
+    /// Value equality (shape + contents) — aliasing is deliberately
+    /// not part of equality; use [`ImageBlock::shares_allocation`].
+    fn eq(&self, other: &Self) -> bool {
+        self.shape == other.shape && self.data() == other.data()
+    }
+}
+
 /// `f32`-specific surface: float accumulation helpers, diagnostics and
 /// the `.npy` interchange with the Python build layer.
 impl TensorT<f32> {
@@ -179,6 +278,38 @@ mod tests {
         assert_eq!(t.zero_fraction(), 0.25);
         let z: TensorT<Q8_8> = TensorT::zeros(vec![3]);
         assert!(z.data().iter().all(|v| v.is_zero()));
+    }
+
+    #[test]
+    fn image_block_slices_are_zero_copy_views() {
+        let t = Tensor::from_fn(vec![3, 2, 2, 2], |i| i as f32);
+        let numel_per_image = 8;
+        let block = ImageBlock::from_tensor(t.clone());
+        assert_eq!(block.shape(), &[3, 2, 2, 2]);
+        assert_eq!(block.numel(), 24);
+        assert_eq!(block.data(), t.data());
+
+        let a = block.slice_images(0, 1);
+        let b = block.slice_images(1, 2);
+        assert_eq!(a.shape(), &[1, 2, 2, 2]);
+        assert_eq!(b.shape(), &[2, 2, 2, 2]);
+        assert_eq!(a.data(), &t.data()[..numel_per_image]);
+        assert_eq!(b.data(), &t.data()[numel_per_image..]);
+        // the zero-copy property itself
+        assert!(a.shares_allocation(&block));
+        assert!(a.shares_allocation(&b));
+        let copied = b.to_tensor();
+        assert_eq!(copied.data(), b.data());
+        let independent = ImageBlock::from_tensor(copied);
+        assert!(!independent.shares_allocation(&b), "copy is a new buffer");
+        assert_eq!(independent, b, "but value-equal");
+    }
+
+    #[test]
+    #[should_panic(expected = "out of")]
+    fn image_block_slice_bounds_checked() {
+        let block = ImageBlock::from_tensor(Tensor::zeros(vec![2, 1, 1, 1]));
+        let _ = block.slice_images(1, 2);
     }
 
     #[test]

@@ -1,8 +1,10 @@
 //! Tiny benchmarking harness (criterion stand-in): warm-up, N timed
 //! iterations, mean/σ/min, throughput annotation, and a stable text
 //! report consumed by `cargo bench` (harness = false bench binaries).
+//! [`TrialStats`] adds the robust (median + MAD) trial statistics the
+//! regression-defended `edgedcnn bench` suite records.
 
-use crate::stats::Summary;
+use crate::stats::{median, percentile, Summary};
 use std::time::Instant;
 
 /// One benchmark runner.
@@ -79,6 +81,65 @@ impl Bencher {
     }
 }
 
+/// Robust per-trial timing statistics: median (location), MAD (noise
+/// scale — median absolute deviation from the median), and p99.  The
+/// benchmark regression gate compares *medians* with a tolerance scaled
+/// by the *MAD*, so a noisy machine widens its own acceptance band
+/// instead of tripping false regressions.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TrialStats {
+    pub trials: usize,
+    pub median_s: f64,
+    pub mad_s: f64,
+    pub p99_s: f64,
+    pub min_s: f64,
+}
+
+impl TrialStats {
+    /// Compute the statistics over raw per-trial wall times (seconds).
+    pub fn of(samples: &[f64]) -> TrialStats {
+        assert!(!samples.is_empty(), "TrialStats over no samples");
+        let med = median(samples);
+        let devs: Vec<f64> =
+            samples.iter().map(|s| (s - med).abs()).collect();
+        TrialStats {
+            trials: samples.len(),
+            median_s: med,
+            mad_s: median(&devs),
+            p99_s: percentile(samples, 99.0),
+            min_s: samples.iter().cloned().fold(f64::INFINITY, f64::min),
+        }
+    }
+
+    /// MAD relative to the median (0 when the median is 0) — the
+    /// dimensionless noise figure the regression tolerance is built on.
+    pub fn rel_mad(&self) -> f64 {
+        if self.median_s > 0.0 {
+            self.mad_s / self.median_s
+        } else {
+            0.0
+        }
+    }
+}
+
+impl Bencher {
+    /// Warm up, then time each iteration individually and return the
+    /// robust [`TrialStats`] over the per-trial samples (the form the
+    /// `edgedcnn bench` JSON records).
+    pub fn run_trials<T>(&self, mut f: impl FnMut() -> T) -> TrialStats {
+        for _ in 0..self.warmup_iters {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        TrialStats::of(&samples)
+    }
+}
+
 impl BenchReport {
     pub fn render(&self) -> String {
         let mut s = format!(
@@ -130,6 +191,34 @@ mod tests {
         assert!(r.mean_s > 0.0);
         assert!(r.min_s <= r.mean_s);
         assert_eq!(r.iters, 5);
+    }
+
+    #[test]
+    fn trial_stats_are_robust_to_one_outlier() {
+        // 9 quiet samples + 1 wild outlier: median and MAD ignore it.
+        let mut samples = vec![1.0; 9];
+        samples.push(100.0);
+        let t = TrialStats::of(&samples);
+        assert_eq!(t.trials, 10);
+        assert_eq!(t.median_s, 1.0);
+        assert_eq!(t.mad_s, 0.0);
+        assert_eq!(t.min_s, 1.0);
+        assert!(t.p99_s > 1.0, "p99 does see the outlier");
+        assert_eq!(t.rel_mad(), 0.0);
+    }
+
+    #[test]
+    fn run_trials_measures_something_positive() {
+        let t = Bencher::new("spin").iters(4).run_trials(|| {
+            let mut x = 0u64;
+            for i in 0..10_000 {
+                x = x.wrapping_add(i);
+            }
+            x
+        });
+        assert_eq!(t.trials, 4);
+        assert!(t.median_s > 0.0);
+        assert!(t.min_s <= t.median_s && t.median_s <= t.p99_s);
     }
 
     #[test]

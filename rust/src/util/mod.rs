@@ -8,11 +8,17 @@ mod flags;
 mod json;
 mod pool;
 mod rng;
+mod scratch;
 mod tempdir;
 
-pub use bench::{bench_header, smoke_mode, BenchReport, Bencher};
+pub use bench::{
+    bench_header, smoke_mode, BenchReport, Bencher, TrialStats,
+};
 pub use flags::Flags;
 pub use json::{escape_json, parse_json, Json};
 pub use pool::WorkerPool;
 pub use rng::Rng;
+pub use scratch::{
+    reset_scratch_stats, scratch_allocs, scratch_hits, with_scratch,
+};
 pub use tempdir::TempDir;

@@ -1,0 +1,138 @@
+//! Per-worker scratch arena for the numeric hot path.
+//!
+//! Every tile the reverse-loop kernel executes needs one accumulator
+//! block in the wide [`Element::Acc`](crate::quant::Element::Acc)
+//! domain.  Allocating that block per tile puts a `malloc`/`free` pair
+//! on the innermost serving path; this arena keeps one reusable buffer
+//! per element type **per worker thread** (worker threads each execute
+//! many tiles per dispatch, and the serial path reuses the caller
+//! thread's buffer across entire forward passes).  Buffers only ever
+//! grow — a smaller tile reuses the capacity of the largest tile shape
+//! seen so far — and are re-zeroed to the requested fill value on every
+//! acquisition, so reuse is observationally identical to a fresh
+//! `vec![zero; len]`.
+//!
+//! The arena is plain safe Rust: a `thread_local!` map from the
+//! buffer's element `TypeId` to its `Vec`.  The buffer is *removed*
+//! from the map for the duration of the closure, so a nested
+//! `with_scratch` of the same type simply takes a second buffer instead
+//! of aliasing the first.
+//!
+//! [`scratch_allocs`] / [`scratch_hits`] expose the current thread's
+//! acquisition counters so tests can assert that two successive tiles
+//! reuse (and correctly re-zero) the same backing buffer.
+
+use std::any::{Any, TypeId};
+use std::cell::{Cell, RefCell};
+use std::collections::HashMap;
+
+thread_local! {
+    static ARENA: RefCell<HashMap<TypeId, Box<dyn Any>>> =
+        RefCell::new(HashMap::new());
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+    static HITS: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Run `f` with a scratch slice of `len` elements, every element set to
+/// `zero`.  The backing buffer is reused from this thread's arena when
+/// its capacity suffices (counted by [`scratch_hits`]); otherwise a
+/// fresh allocation is made (counted by [`scratch_allocs`]).
+pub fn with_scratch<A, R>(
+    len: usize,
+    zero: A,
+    f: impl FnOnce(&mut [A]) -> R,
+) -> R
+where
+    A: Copy + Send + 'static,
+{
+    let key = TypeId::of::<Vec<A>>();
+    let mut buf: Vec<A> = ARENA
+        .with(|a| a.borrow_mut().remove(&key))
+        .and_then(|b| b.downcast::<Vec<A>>().ok())
+        .map(|b| *b)
+        .unwrap_or_default();
+    if buf.capacity() < len {
+        ALLOCS.with(|c| c.set(c.get() + 1));
+        buf = Vec::with_capacity(len);
+    } else {
+        HITS.with(|c| c.set(c.get() + 1));
+    }
+    buf.clear();
+    buf.resize(len, zero);
+    let r = f(&mut buf);
+    ARENA.with(|a| a.borrow_mut().insert(key, Box::new(buf)));
+    r
+}
+
+/// Fresh allocations this thread's arena has made (capacity misses).
+pub fn scratch_allocs() -> u64 {
+    ALLOCS.with(|c| c.get())
+}
+
+/// Buffer reuses this thread's arena has served (capacity hits).
+pub fn scratch_hits() -> u64 {
+    HITS.with(|c| c.get())
+}
+
+/// Reset this thread's arena counters (test isolation); the buffers
+/// themselves are kept so a reset never forces a re-allocation.
+pub fn reset_scratch_stats() {
+    ALLOCS.with(|c| c.set(0));
+    HITS.with(|c| c.set(0));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn second_acquisition_reuses_the_buffer() {
+        // use a type no other test in this binary touches, so the
+        // per-thread counters are exact
+        #[derive(Clone, Copy, PartialEq, Debug)]
+        struct Probe(u64);
+        reset_scratch_stats();
+        let a0 = scratch_allocs();
+        with_scratch(64, Probe(0), |s| {
+            assert_eq!(s.len(), 64);
+            s[0] = Probe(7);
+        });
+        assert_eq!(scratch_allocs(), a0 + 1, "first use allocates");
+        with_scratch(32, Probe(1), |s| {
+            // re-zeroed to the new fill, not the stale Probe(7)
+            assert!(s.iter().all(|v| *v == Probe(1)), "must be re-zeroed");
+        });
+        assert_eq!(scratch_allocs(), a0 + 1, "smaller request reuses");
+        assert!(scratch_hits() >= 1);
+        with_scratch(128, Probe(2), |s| assert_eq!(s.len(), 128));
+        assert_eq!(scratch_allocs(), a0 + 2, "growth allocates once more");
+        with_scratch(128, Probe(3), |s| {
+            assert!(s.iter().all(|v| *v == Probe(3)));
+        });
+        assert_eq!(scratch_allocs(), a0 + 2, "steady state: no allocs");
+    }
+
+    #[test]
+    fn nested_same_type_does_not_alias() {
+        let outer = with_scratch(8, 1u128, |s| {
+            s[0] = 42;
+            let inner = with_scratch(8, 2u128, |t| {
+                assert!(t.iter().all(|v| *v == 2));
+                t[0]
+            });
+            assert_eq!(s[0], 42, "inner call must not clobber the outer");
+            s[0] + inner
+        });
+        assert_eq!(outer, 44);
+    }
+
+    #[test]
+    fn distinct_types_get_distinct_buffers() {
+        with_scratch(4, 1.5f64, |s| {
+            with_scratch(4, 3i8, |t| {
+                assert!(s.iter().all(|v| *v == 1.5));
+                assert!(t.iter().all(|v| *v == 3));
+            });
+        });
+    }
+}

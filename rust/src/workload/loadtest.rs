@@ -70,6 +70,9 @@ pub struct LoadtestOpts {
     pub closed: usize,
     /// Think time between a closed-loop client's completions.
     pub think: Duration,
+    /// Write the final trial's windowed latency-drift histogram shards
+    /// as CSV (`ServingReport::drift_csv`) to this path.
+    pub drift_csv: Option<PathBuf>,
 }
 
 impl Default for LoadtestOpts {
@@ -82,6 +85,7 @@ impl Default for LoadtestOpts {
             shard_batches: true,
             closed: 0,
             think: Duration::ZERO,
+            drift_csv: None,
         }
     }
 }
@@ -410,6 +414,13 @@ pub fn run_loadtest(trace: &Trace, opts: &LoadtestOpts) -> Result<LoadtestReport
         walls.push(wall);
 
         let report = coord.report_for_wall(wall);
+        if trial + 1 == opts.trials {
+            if let Some(path) = &opts.drift_csv {
+                std::fs::write(path, report.drift_csv()).with_context(
+                    || format!("writing drift CSV to {}", path.display()),
+                )?;
+            }
+        }
         shed += trial_shed;
         rejected += trial_rejected;
         deferred += report.deferred;

@@ -42,6 +42,7 @@ fn burst_loadtest_reproduces_the_variation_verdict() {
                 ..Default::default()
             },
             trials: 5,
+            drift_csv: Some(dir.path().join("drift.csv")),
             ..Default::default()
         },
     )
@@ -112,6 +113,16 @@ fn burst_loadtest_reproduces_the_variation_verdict() {
     assert!(rendered.contains("p99_ms"), "{rendered}");
     assert!(rendered.contains("att_pct"), "{rendered}");
     assert!(rendered.contains("accounting: submitted"), "{rendered}");
+
+    // --drift-csv landed the final trial's windowed drift shards
+    let csv = std::fs::read_to_string(dir.path().join("drift.csv")).unwrap();
+    let mut lines = csv.lines();
+    assert_eq!(
+        lines.next(),
+        Some("window_start_s,count,p50_s,p99_s"),
+        "{csv}"
+    );
+    assert!(lines.next().is_some(), "64 requests must fill a window");
 }
 
 /// Same seed + scenario file ⇒ identical arrival timestamps and request

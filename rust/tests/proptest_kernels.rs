@@ -1,0 +1,108 @@
+//! Bit-identity properties of the restructured (autovectorization-
+//! friendly) deconvolution kernels against their frozen scalar
+//! references (`deconv_*_ref`), across random geometries, tile sizes,
+//! strides, zero-skip settings and element types.
+//!
+//! The restructure moved loop-invariant arithmetic (tap spans, row
+//! bases, hoisted bounds) without reordering any per-output-element tap
+//! accumulation, so the results must be **bit-for-bit** equal — not
+//! merely close — in `f32` as well as fixed point, and the reverse
+//! loop's `OpStats` accounting (the FPGA cycle model's input) must be
+//! untouched too.
+
+use edgedcnn::deconv::{
+    deconv_reverse_loop, deconv_reverse_loop_ref, deconv_standard,
+    deconv_standard_ref, deconv_tdc, deconv_tdc_ref, ReverseLoopOpts,
+};
+use edgedcnn::quant::{Element, Q16_16, Q8_8};
+use edgedcnn::tensor::TensorT;
+use edgedcnn::util::Rng;
+
+const CASES: usize = 120;
+
+/// Random legal layer geometry (small: every case runs six kernels).
+fn random_geometry(
+    rng: &mut Rng,
+) -> (usize, usize, usize, usize, usize, usize, usize) {
+    loop {
+        let k = rng.range_usize(1, 8);
+        let s = rng.range_usize(1, 4);
+        let p = rng.range_usize(0, k.max(1));
+        let i_h = rng.range_usize(1, 7);
+        let c_in = rng.range_usize(1, 4);
+        let c_out = rng.range_usize(1, 4);
+        let n = rng.range_usize(1, 3);
+        let o = (i_h - 1) * s + k;
+        if o > 2 * p {
+            return (n, c_in, c_out, k, s, p, i_h);
+        }
+    }
+}
+
+/// One random case at one element type: all three kernels bit-equal to
+/// their frozen references, reverse-loop stats equal too.
+fn check_case<T: Element>(rng: &mut Rng, case: usize, label: &str) {
+    let (n, c_in, c_out, k, s, p, i_h) = random_geometry(rng);
+    let tile = rng.range_usize(1, 13);
+    let zero_skip = rng.gen_bool(0.5);
+    let x = TensorT::<T>::from_fn(vec![n, c_in, i_h, i_h], |_| {
+        T::from_f32(rng.range_f32(-1.0, 1.0))
+    });
+    // ~1/3 exact zeros so the zero-skip predicate and the branchless
+    // skip paths are both exercised
+    let w = TensorT::<T>::from_fn(vec![c_in, c_out, k, k], |_| {
+        if rng.gen_bool(1.0 / 3.0) {
+            T::ZERO
+        } else {
+            T::from_f32(rng.range_f32(-1.0, 1.0))
+        }
+    });
+    let b: Vec<T> = (0..c_out)
+        .map(|_| T::from_f32(rng.range_f32(-0.5, 0.5)))
+        .collect();
+    let ctx = format!(
+        "{label} case {case}: n {n} c_in {c_in} c_out {c_out} k {k} s {s} \
+         p {p} i_h {i_h} tile {tile} zero_skip {zero_skip}"
+    );
+
+    let want = deconv_standard_ref(&x, &w, &b, s, p);
+    let got = deconv_standard(&x, &w, &b, s, p);
+    assert_eq!(got.shape(), want.shape(), "standard shape, {ctx}");
+    assert!(got.data() == want.data(), "standard data, {ctx}");
+
+    let opts = ReverseLoopOpts { tile, zero_skip };
+    let (want_rl, want_stats) = deconv_reverse_loop_ref(&x, &w, &b, s, p, opts);
+    let (got_rl, got_stats) = deconv_reverse_loop(&x, &w, &b, s, p, opts);
+    assert_eq!(got_rl.shape(), want_rl.shape(), "reverse-loop shape, {ctx}");
+    assert!(got_rl.data() == want_rl.data(), "reverse-loop data, {ctx}");
+    assert_eq!(got_stats, want_stats, "reverse-loop OpStats, {ctx}");
+
+    let want_tdc = deconv_tdc_ref(&x, &w, &b, s, p);
+    let got_tdc = deconv_tdc(&x, &w, &b, s, p);
+    assert_eq!(got_tdc.shape(), want_tdc.shape(), "tdc shape, {ctx}");
+    assert!(got_tdc.data() == want_tdc.data(), "tdc data, {ctx}");
+}
+
+#[test]
+fn prop_f32_kernels_bit_identical_to_frozen_references() {
+    let mut rng = Rng::seed_from_u64(0xF32_BEEF);
+    for case in 0..CASES {
+        check_case::<f32>(&mut rng, case, "f32");
+    }
+}
+
+#[test]
+fn prop_q8_8_kernels_bit_identical_to_frozen_references() {
+    let mut rng = Rng::seed_from_u64(0x0808_BEEF);
+    for case in 0..CASES {
+        check_case::<Q8_8>(&mut rng, case, "q8.8");
+    }
+}
+
+#[test]
+fn prop_q16_16_kernels_bit_identical_to_frozen_references() {
+    let mut rng = Rng::seed_from_u64(0x1616_BEEF);
+    for case in 0..CASES {
+        check_case::<Q16_16>(&mut rng, case, "q16.16");
+    }
+}

@@ -305,6 +305,11 @@ fn execute_batch(
     {
         let mut m = shared.metrics.lock().unwrap();
         m.record_batch(outcome.execute_s, batch.n_images, outcome.ops);
+        // hot-path arena high-water as observed by this lane thread
+        // (covers the serial path and the worker pool's inline job);
+        // pool-worker arenas are scoped per dispatch and die before
+        // this read, so the column is the lane-thread view by design
+        m.record_scratch_hwm(crate::util::scratch_hwm_bytes());
         m.record_energy(outcome.energy_j);
         m.record_backend_batch(
             backend.name(),

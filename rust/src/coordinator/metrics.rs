@@ -110,6 +110,10 @@ pub struct MetricsRegistry {
     ops: u64,
     energy_j: f64,
     wall_s: f64,
+    /// High-water mark of the hot-path scratch arena as observed by the
+    /// lane thread (bytes).  Max-monoid: merging shards takes the max,
+    /// matching the semantics of a high-water mark.
+    scratch_hwm_bytes: u64,
     backends: BTreeMap<String, BackendStats>,
     lanes: BTreeMap<String, LaneQueueStats>,
 }
@@ -132,6 +136,7 @@ impl Default for MetricsRegistry {
             ops: 0,
             energy_j: 0.0,
             wall_s: 0.0,
+            scratch_hwm_bytes: 0,
             backends: BTreeMap::new(),
             lanes: BTreeMap::new(),
         }
@@ -251,6 +256,14 @@ impl MetricsRegistry {
         self.deferred += 1;
     }
 
+    /// Fold one observation of the hot-path scratch-arena high-water
+    /// mark (bytes, as read by the observing thread via
+    /// [`crate::util::scratch_hwm_bytes`]).  Keeps the max: the column
+    /// answers "how big did the per-worker arena ever get this window".
+    pub fn record_scratch_hwm(&mut self, bytes: usize) {
+        self.scratch_hwm_bytes = self.scratch_hwm_bytes.max(bytes as u64);
+    }
+
     /// Scheduler telemetry: one batch dispatched to `lane`, which then
     /// held `depth` not-yet-executed batches.
     pub fn record_lane_dispatch(&mut self, lane: &str, depth: usize) {
@@ -297,6 +310,8 @@ impl MetricsRegistry {
         self.ops += other.ops;
         self.energy_j += other.energy_j;
         self.wall_s = self.wall_s.max(other.wall_s);
+        self.scratch_hwm_bytes =
+            self.scratch_hwm_bytes.max(other.scratch_hwm_bytes);
         for (name, b) in &other.backends {
             let mine = self.backends.entry(name.clone()).or_default();
             mine.batches += b.batches;
@@ -434,6 +449,7 @@ impl MetricsRegistry {
             },
             mean_power_w: mean_power,
             gops_per_w: if mean_power > 0.0 { gops / mean_power } else { 0.0 },
+            scratch_hwm_bytes: self.scratch_hwm_bytes,
             per_backend,
             lanes,
         }
@@ -560,6 +576,11 @@ pub struct ServingReport {
     pub mean_batch: f64,
     pub mean_power_w: f64,
     pub gops_per_w: f64,
+    /// High-water mark of the hot-path scratch arena (bytes) as
+    /// observed by the lane thread — the serving-side view of
+    /// [`crate::util::scratch_hwm_bytes`].  Additive schema field:
+    /// absent in pre-blocking v1 reports, defaults to 0 on read.
+    pub scratch_hwm_bytes: u64,
     /// Per-backend columns, sorted by lane name.
     pub per_backend: Vec<BackendReport>,
     /// Per-lane scheduler telemetry, sorted by lane name.
@@ -707,7 +728,8 @@ impl ServingReport {
              \"latency_drift\": {},\n  \"drift_windows\": [{}],\n  \
              \"images_per_s\": {},\n  \
              \"gops\": {},\n  \"mean_batch\": {},\n  \"mean_power_w\": {},\n  \
-             \"gops_per_w\": {},\n  \"per_backend\": [\n{}\n  ],\n  \
+             \"gops_per_w\": {},\n  \"scratch_hwm_bytes\": {},\n  \
+             \"per_backend\": [\n{}\n  ],\n  \
              \"lanes\": [\n{}\n  ]\n}}\n",
             self.requests,
             self.images,
@@ -729,6 +751,7 @@ impl ServingReport {
             self.mean_batch,
             self.mean_power_w,
             self.gops_per_w,
+            self.scratch_hwm_bytes,
             per_backend,
             lanes,
         )
@@ -801,6 +824,11 @@ impl ServingReport {
             mean_batch: v.req("mean_batch")?.as_f64()?,
             mean_power_w: v.req("mean_power_w")?.as_f64()?,
             gops_per_w: v.req("gops_per_w")?.as_f64()?,
+            // additive field: pre-blocking v1 reports simply lack it
+            scratch_hwm_bytes: match v.get("scratch_hwm_bytes") {
+                Some(x) => x.as_u64()?,
+                None => 0,
+            },
             per_backend: v
                 .req("per_backend")?
                 .as_arr()?
@@ -856,6 +884,14 @@ impl ServingReport {
         }
         if self.deferred > 0 {
             out.push_str(&format!("\ndeferred {:>6}  (backpressure)", self.deferred));
+        }
+        // its own line (never appended to a backend row): the backend
+        // lines below must keep img/s as their trailing field
+        if self.scratch_hwm_bytes > 0 {
+            out.push_str(&format!(
+                "\nscratch  {:>6} B  (hot-path arena high-water, per lane thread)",
+                self.scratch_hwm_bytes
+            ));
         }
         // per-backend columns keep img/s as the trailing field (the CI
         // smoke awk keys off it)
@@ -1108,6 +1144,7 @@ mod tests {
             m.record_shed(PriorityClass::Low);
         }
         m.record_deferred();
+        m.record_scratch_hwm(4096 * (site as usize + 1));
         m.record_lane_dispatch("fpga0", 1 + site as usize);
         m.record_cost_refresh("gpu0");
         m.set_wall(1.0 + 0.1 * site as f64);
@@ -1147,6 +1184,10 @@ mod tests {
         assert_eq!(rep.shed, 1);
         assert_eq!(rep.deferred, 3);
         assert!((rep.wall_s - 1.2).abs() < 1e-12, "fleet wall = max site wall");
+        assert_eq!(
+            rep.scratch_hwm_bytes, 12288,
+            "fleet scratch HWM = max site HWM, not the sum"
+        );
         let fpga = rep.per_backend.iter().find(|x| x.name == "fpga0").unwrap();
         assert_eq!(fpga.batches, 3);
         let normal = fpga
@@ -1195,6 +1236,34 @@ mod tests {
         let err = ServingReport::from_json(&v9).unwrap_err().to_string();
         assert!(err.contains("newer than this build"), "{err}");
         assert!(ServingReport::from_json("{}").is_err());
+    }
+
+    #[test]
+    fn scratch_hwm_is_a_max_monoid_and_defaults_on_old_reports() {
+        let mut m = MetricsRegistry::new();
+        m.record_scratch_hwm(9000);
+        m.record_scratch_hwm(4000);
+        m.set_wall(1.0);
+        let r = m.report();
+        assert_eq!(r.scratch_hwm_bytes, 9000, "HWM keeps the max");
+        let s = r.render();
+        assert!(s.contains("scratch"), "{s}");
+        assert!(s.contains("9000 B"), "{s}");
+        // zero HWM (no hot-path telemetry) stays off the report text
+        assert!(!MetricsRegistry::new().report().render().contains("scratch"));
+        // JSON roundtrip carries the column; a report written before
+        // the field existed parses with the 0 default
+        let json = r.to_json();
+        assert_eq!(
+            ServingReport::from_json(&json).unwrap().scratch_hwm_bytes,
+            9000
+        );
+        let legacy = json.replacen("  \"scratch_hwm_bytes\": 9000,\n", "", 1);
+        assert!(!legacy.contains("scratch_hwm_bytes"));
+        assert_eq!(
+            ServingReport::from_json(&legacy).unwrap().scratch_hwm_bytes,
+            0
+        );
     }
 
     #[test]

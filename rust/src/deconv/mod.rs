@@ -13,6 +13,12 @@
 //! All three are verified equal (and equal to the Python oracles through
 //! the AOT artifacts) by unit, integration and property tests.  The
 //! [`OpStats`] accounting they emit is what the FPGA cycle model consumes.
+//!
+//! Each kernel also has a `*_blocked` entry point restructured around
+//! the two-level [`BlockSchedule`] (macro-tile → micro-tile → lane
+//! accumulators) shared with the CU simulator and the tune table
+//! ([`crate::tune`]); every legal schedule is bit-identical to the
+//! frozen scalar references, tensors *and* op counts.
 
 mod offsets;
 mod reference;
@@ -26,13 +32,18 @@ pub use reference::{
     deconv_reverse_loop_ref, deconv_standard_ref, deconv_tdc_ref,
 };
 pub use reverse_loop::{
-    deconv_reverse_loop, deconv_reverse_loop_par, OpStats, ReverseLoopOpts,
+    deconv_reverse_loop, deconv_reverse_loop_blocked,
+    deconv_reverse_loop_par, OpStats, ReverseLoopOpts,
 };
-pub use standard::deconv_standard;
+pub use standard::{deconv_standard, deconv_standard_blocked};
 pub use tdc::{
-    deconv_tdc, tdc_filter_count, tdc_subfilter_extent, tdc_transform_weights,
+    deconv_tdc, deconv_tdc_blocked, tdc_filter_count, tdc_subfilter_extent,
+    tdc_transform_weights,
 };
-pub use tiling::{input_tile_extent, legal_tiles, TileSchedule};
+pub use tiling::{
+    input_tile_extent, legal_block_schedules, legal_tiles, BlockSchedule,
+    TileSchedule, SUPPORTED_LANES,
+};
 
 use crate::config::{DeconvLayerCfg, NetworkCfg};
 use crate::quant::Element;

@@ -11,10 +11,18 @@
 //! software mirror of the paper's spatial CU parallelism.  Both paths run
 //! the same per-tile kernel in the same order per tile, so they are
 //! **bit-identical** (tensors *and* op counts), which the integration and
-//! property tests assert.  Tile jobs are claimed in adaptively sized
-//! chunks ([`WorkerPool::map_indexed_auto`] — the first tile's measured
-//! cost seeds the claim granularity) to amortize dispatch overhead;
-//! chunking never changes results (each job still owns its slot).
+//! property tests assert.
+//!
+//! Execution follows the two-level [`BlockSchedule`] geometry shared
+//! with the CU simulator: micro-tile jobs (the `ReverseLoopOpts::tile`
+//! factor — unchanged OpStats geometry) are grouped into **macro-tiles**
+//! of `macro_tiles` consecutive jobs, which are the units
+//! [`WorkerPool::map_indexed_auto`] claims (the first macro-tile's
+//! measured cost seeds the claim granularity), and the innermost column
+//! walk runs `lanes`-wide **lane accumulators** over independent output
+//! columns.  Neither level changes results: macro grouping only batches
+//! disjoint jobs, and each output column keeps its own accumulation
+//! chain at any lane width.
 //!
 //! Generic over the element type ([`Element`]): each tile accumulates in
 //! the wide [`Element::Acc`] domain and narrows once at the one-shot
@@ -25,7 +33,7 @@
 
 use super::offsets::stride_hole_offsets;
 use super::standard::shape4;
-use super::tiling::input_tile_extent;
+use super::tiling::{input_tile_extent, BlockSchedule};
 use crate::quant::Element;
 use crate::tensor::TensorT;
 use crate::util::{with_scratch, WorkerPool};
@@ -188,25 +196,30 @@ impl TapSpan {
     }
 }
 
-/// Execute Algorithm 1 for one tile job: returns the finished output
-/// block (`[c_out, tile_h, tile_w]`, row-major) and the tile's op
-/// counts.  This is the kernel both the serial and the parallel path
-/// run, so their numerics are identical by construction.
+/// Execute Algorithm 1 for one micro-tile job, appending the finished
+/// output block (`[c_out, tile_h, tile_w]`, row-major, narrowed) to
+/// `out` and returning the tile's op counts.  This is the kernel both
+/// the serial and the parallel path run, so their numerics are
+/// identical by construction.
 ///
 /// SIMD-shaped formulation: per-tap output/input ranges are hoisted
 /// ([`TapSpan`]), the accumulator block comes from the per-worker
 /// scratch arena ([`with_scratch`]) instead of a per-tile allocation,
-/// and the innermost loop is a contiguous walk of one input row against
-/// a (unit- or `S`-strided) accumulator row — no division, no bounds
-/// check, no branch per element, so it autovectorizes for `f32` and
-/// `Fixed` alike.  Bit-identity with the pinned scalar reference
-/// ([`super::reference`]) holds because each output element still
-/// receives its taps in ascending `(ci, kh, kw)` order with the same
-/// [`Element::mac`]; only loop-invariant arithmetic moved.
-fn execute_tile<T: Element>(
+/// and the innermost loop walks one input row against a (unit- or
+/// `S`-strided) accumulator row in `LANES`-wide register blocks
+/// (`[Element::Acc; LANES]` over independent output columns) — no
+/// division, no bounds check, no branch per element, so it
+/// autovectorizes for `f32` and `Fixed` alike.  Bit-identity with the
+/// pinned scalar reference ([`super::reference`]) holds for **any**
+/// lane width because each output column keeps its own accumulation
+/// chain: every output element still receives its taps in ascending
+/// `(ci, kh, kw)` order with the same [`Element::mac`]; only
+/// loop-invariant arithmetic and the traversal batching moved.
+fn tile_kernel<T: Element, const LANES: usize>(
     ctx: &TileCtx<'_, T>,
     job: TileJob,
-) -> (Vec<T>, OpStats) {
+    out: &mut Vec<T>,
+) -> OpStats {
     let TileJob {
         bi,
         th,
@@ -263,7 +276,7 @@ fn execute_tile<T: Element>(
     // Per-tile accumulator block in the wide domain, leased from the
     // per-worker scratch arena (re-zeroed on acquisition); narrowed
     // once at the one-shot write below.
-    let out = with_scratch(
+    with_scratch(
         ctx.c_out * tile_h * tile_w,
         T::ACC_ZERO,
         |block| {
@@ -317,16 +330,57 @@ fn execute_tile<T: Element>(
                                 if s == 1 {
                                     let brow =
                                         &mut block[row_off..][..cols];
-                                    for (o, &xv) in
-                                        brow.iter_mut().zip(xrow)
+                                    let mut ob =
+                                        brow.chunks_exact_mut(LANES);
+                                    let mut xb =
+                                        xrow.chunks_exact(LANES);
+                                    for (o_lane, x_lane) in
+                                        (&mut ob).zip(&mut xb)
+                                    {
+                                        let mut lane: [T::Acc; LANES] =
+                                            (&*o_lane)
+                                                .try_into()
+                                                .expect("lane chunk");
+                                        for l in 0..LANES {
+                                            lane[l] = T::mac(
+                                                lane[l], wv, x_lane[l],
+                                            );
+                                        }
+                                        o_lane.copy_from_slice(&lane);
+                                    }
+                                    for (o, &xv) in ob
+                                        .into_remainder()
+                                        .iter_mut()
+                                        .zip(xb.remainder())
                                     {
                                         *o = T::mac(*o, wv, xv);
                                     }
                                 } else {
                                     let brow = &mut block[row_off..]
                                         [..(cols - 1) * s + 1];
-                                    let mut bidx = 0;
-                                    for &xv in xrow {
+                                    let mut j = 0usize;
+                                    while j + LANES <= cols {
+                                        let mut lane =
+                                            [T::ACC_ZERO; LANES];
+                                        for l in 0..LANES {
+                                            lane[l] =
+                                                brow[(j + l) * s];
+                                        }
+                                        for l in 0..LANES {
+                                            lane[l] = T::mac(
+                                                lane[l],
+                                                wv,
+                                                xrow[j + l],
+                                            );
+                                        }
+                                        for l in 0..LANES {
+                                            brow[(j + l) * s] =
+                                                lane[l];
+                                        }
+                                        j += LANES;
+                                    }
+                                    let mut bidx = j * s;
+                                    for &xv in &xrow[j..] {
                                         brow[bidx] =
                                             T::mac(brow[bidx], wv, xv);
                                         bidx += s;
@@ -339,14 +393,62 @@ fn execute_tile<T: Element>(
                 // one-shot write of the finished output block
                 stats.ext_write_bytes += eb * (tile_h * tile_w) as u64;
             }
-            block.iter().map(|&a| T::narrow(a)).collect::<Vec<T>>()
+            // narrow the finished block into the caller's (pre-sized)
+            // macro buffer — no per-tile result allocation
+            out.extend(block.iter().map(|&a| T::narrow(a)));
         },
     );
+    stats
+}
+
+/// Route one micro-tile to the monomorphized `LANES`-wide kernel
+/// instance.  Unsupported widths are rounded down by
+/// [`BlockSchedule::normalized`] before dispatch; 4 is the defensive
+/// fallback.
+fn execute_tile_into<T: Element>(
+    ctx: &TileCtx<'_, T>,
+    job: TileJob,
+    lanes: usize,
+    out: &mut Vec<T>,
+) -> OpStats {
+    match lanes {
+        1 => tile_kernel::<T, 1>(ctx, job, out),
+        2 => tile_kernel::<T, 2>(ctx, job, out),
+        8 => tile_kernel::<T, 8>(ctx, job, out),
+        _ => tile_kernel::<T, 4>(ctx, job, out),
+    }
+}
+
+/// One macro-tile: run its member micro-tile jobs sequentially on this
+/// worker, concatenating their finished blocks (in job order) into one
+/// buffer — a single allocation per macro-tile instead of one per tile
+/// — and merging their [`OpStats`].  Blocking changes neither tensors
+/// nor stats: member output regions are disjoint and every `OpStats`
+/// field is a commutative `u64` sum.
+fn execute_macro<T: Element>(
+    ctx: &TileCtx<'_, T>,
+    jobs: &[TileJob],
+    lanes: usize,
+) -> (Vec<T>, OpStats) {
+    let total: usize = jobs
+        .iter()
+        .map(|j| ctx.c_out * j.tile_h * j.tile_w)
+        .sum();
+    let mut out = Vec::with_capacity(total);
+    let mut stats = OpStats::default();
+    for &job in jobs {
+        let tile_stats = execute_tile_into(ctx, job, lanes, &mut out);
+        stats.merge(&tile_stats);
+    }
     (out, stats)
 }
 
-/// Shared driver: enumerate jobs, run them on the given pool (chunked
-/// claims for small tiles), merge the blocks and stats in job order.
+/// Shared driver: enumerate micro-tile jobs, group them into
+/// macro-tiles per the [`BlockSchedule`], run the macro-tiles on the
+/// given pool, merge the blocks and stats in job order.
+///
+/// Invariant: `sched.micro == opts.tile` — the micro-tile *is* the
+/// OpStats tile factor, so blocking is invisible to the stats contract.
 fn run_reverse_loop<T: Element>(
     x: &TensorT<T>,
     w: &TensorT<T>,
@@ -354,6 +456,7 @@ fn run_reverse_loop<T: Element>(
     stride: usize,
     padding: usize,
     opts: ReverseLoopOpts,
+    sched: BlockSchedule,
     pool: &WorkerPool,
 ) -> (TensorT<T>, OpStats) {
     let [n, c_in, i_h, i_w] = shape4(x);
@@ -392,12 +495,20 @@ fn run_reverse_loop<T: Element>(
         t_i: input_tile_extent(t, k, s),
     };
     let jobs = tile_jobs(n, o_h, o_w, t);
-    // Adaptive chunked dispatch: the first tile's measured cost seeds
-    // the claim granularity — tiny tiles get batched claims (amortized
-    // dispatch), heavy tiles get per-job claims (best balance).
-    // Results are identical for any chunk size (slots are per-job).
-    let results =
-        pool.map_indexed_auto(jobs.len(), |i| execute_tile(&ctx, jobs[i]));
+    // Macro-tile dispatch: `macro_tiles` consecutive micro-tile jobs
+    // form one pool claim unit whose combined input footprint targets
+    // L2, and the first macro-tile's measured cost seeds the adaptive
+    // claim granularity ([`WorkerPool::map_indexed_auto`]).  Results
+    // are identical for any grouping (each macro owns its slot and its
+    // members run in job order).
+    let g = sched.macro_tiles.max(1);
+    let lanes = sched.lanes;
+    let n_macro = jobs.len().div_ceil(g);
+    let results = pool.map_indexed_auto(n_macro, |m| {
+        let lo = m * g;
+        let hi = (lo + g).min(jobs.len());
+        execute_macro(&ctx, &jobs[lo..hi], lanes)
+    });
 
     // Deterministic merge in job order: one-shot block writes into the
     // (disjoint) output regions, exact OpStats accumulation.  Rows are
@@ -405,17 +516,27 @@ fn run_reverse_loop<T: Element>(
     // row is a single memcpy.
     let mut y = TensorT::zeros(vec![n, c_out, o_h, o_w]);
     let ydata = y.data_mut();
-    for (job, (block, tile_stats)) in jobs.iter().zip(&results) {
-        stats.merge(tile_stats);
-        for co in 0..c_out {
-            let base = co * job.tile_h * job.tile_w;
-            for r in 0..job.tile_h {
-                let src = &block[base + r * job.tile_w..][..job.tile_w];
-                let dst_off = ((job.bi * c_out + co) * o_h + job.th + r)
-                    * o_w
-                    + job.tw;
-                ydata[dst_off..dst_off + job.tile_w].copy_from_slice(src);
+    for (m, (mblock, mstats)) in results.iter().enumerate() {
+        stats.merge(mstats);
+        let lo = m * g;
+        let hi = (lo + g).min(jobs.len());
+        let mut off = 0usize;
+        for job in &jobs[lo..hi] {
+            for co in 0..c_out {
+                let base = off + co * job.tile_h * job.tile_w;
+                for r in 0..job.tile_h {
+                    let src =
+                        &mblock[base + r * job.tile_w..][..job.tile_w];
+                    let dst_off = ((job.bi * c_out + co) * o_h
+                        + job.th
+                        + r)
+                        * o_w
+                        + job.tw;
+                    ydata[dst_off..dst_off + job.tile_w]
+                        .copy_from_slice(src);
+                }
             }
+            off += c_out * job.tile_h * job.tile_w;
         }
     }
     (y, stats)
@@ -436,7 +557,17 @@ pub fn deconv_reverse_loop<T: Element>(
     padding: usize,
     opts: ReverseLoopOpts,
 ) -> (TensorT<T>, OpStats) {
-    run_reverse_loop(x, w, b, stride, padding, opts, &WorkerPool::new(1))
+    let sched = classic_schedule::<T>(x, w, stride, padding, opts.tile);
+    run_reverse_loop(
+        x,
+        w,
+        b,
+        stride,
+        padding,
+        opts,
+        sched,
+        &WorkerPool::new(1),
+    )
 }
 
 /// [`deconv_reverse_loop`] with the output tiles sharded across a
@@ -452,7 +583,75 @@ pub fn deconv_reverse_loop_par<T: Element>(
     opts: ReverseLoopOpts,
     pool: &WorkerPool,
 ) -> (TensorT<T>, OpStats) {
-    run_reverse_loop(x, w, b, stride, padding, opts, pool)
+    let sched = classic_schedule::<T>(x, w, stride, padding, opts.tile);
+    run_reverse_loop(x, w, b, stride, padding, opts, sched, pool)
+}
+
+/// Reverse-loop deconvolution driven by an explicit two-level
+/// [`BlockSchedule`] — the autotuner's entry point and the production
+/// dispatch for tuned shapes.  `sched: None` consults the persisted
+/// tune table ([`crate::tune`]) for this (kernel, element, shape) and
+/// falls back to the static default when no entry matches.
+///
+/// Bit-identical to [`deconv_reverse_loop`] *called at
+/// `tile == sched.micro`* — tensors and [`OpStats`] — for every legal
+/// (macro, lanes) pair, which the property tests pin against the frozen
+/// scalar references.
+pub fn deconv_reverse_loop_blocked<T: Element>(
+    x: &TensorT<T>,
+    w: &TensorT<T>,
+    b: &[T],
+    stride: usize,
+    padding: usize,
+    zero_skip: bool,
+    sched: Option<BlockSchedule>,
+    pool: &WorkerPool,
+) -> (TensorT<T>, OpStats) {
+    let sched = sched.map(BlockSchedule::normalized).unwrap_or_else(|| {
+        let [_, c_in, i_h, _] = shape4(x);
+        let [_, c_out, k, _] = shape4(w);
+        let o_h = super::output_size(i_h, k, stride, padding);
+        crate::tune::schedule_for::<T>(
+            crate::tune::TuneKernel::ReverseLoop,
+            c_in,
+            c_out,
+            k,
+            stride,
+            o_h,
+            None,
+        )
+    });
+    let opts = ReverseLoopOpts {
+        tile: sched.micro,
+        zero_skip,
+    };
+    run_reverse_loop(x, w, b, stride, padding, opts, sched, pool)
+}
+
+/// Resolve the schedule for a classic (tile-factor) call site: the
+/// micro-tile is pinned to the caller's `tile` (the OpStats geometry is
+/// part of the kernel contract), while macro grouping and lane width
+/// come from the tuned table when a matching entry exists, else the
+/// static default.
+fn classic_schedule<T: Element>(
+    x: &TensorT<T>,
+    w: &TensorT<T>,
+    stride: usize,
+    padding: usize,
+    tile: usize,
+) -> BlockSchedule {
+    let [_, c_in, i_h, _] = shape4(x);
+    let [_, c_out, k, _] = shape4(w);
+    let o_h = super::output_size(i_h, k, stride, padding);
+    crate::tune::schedule_for::<T>(
+        crate::tune::TuneKernel::ReverseLoop,
+        c_in,
+        c_out,
+        k,
+        stride,
+        o_h,
+        Some(tile),
+    )
 }
 
 /// First o ≥ start with o ≡ f (mod s).
@@ -822,6 +1021,94 @@ mod tests {
                 );
             }
         }
+    }
+
+    /// Two-level blocking is invisible: every (macro, lanes) pair —
+    /// including widths that don't divide the tile — reproduces the
+    /// frozen scalar reference bit for bit, tensors AND OpStats, on
+    /// serial and parallel pools alike.
+    #[test]
+    fn blocked_is_bit_identical_for_any_macro_and_lane_width() {
+        use crate::deconv::deconv_reverse_loop_ref;
+        let mut rng = Rng::seed_from_u64(47);
+        for (n, c_in, c_out, k, s, p, i_h, tile) in [
+            (1, 2, 3, 4, 2, 1, 5, 4),
+            (2, 3, 2, 7, 1, 0, 3, 5),
+            (1, 2, 2, 3, 3, 1, 4, 6),
+        ] {
+            let x = rand_tensor(vec![n, c_in, i_h, i_h], &mut rng);
+            let mut w = rand_tensor(vec![c_in, c_out, k, k], &mut rng);
+            for (i, v) in w.data_mut().iter_mut().enumerate() {
+                if i % 3 == 0 {
+                    *v = 0.0;
+                }
+            }
+            let b: Vec<f32> =
+                (0..c_out).map(|_| rng.range_f32(-0.5, 0.5)).collect();
+            for zero_skip in [false, true] {
+                let opts = ReverseLoopOpts { tile, zero_skip };
+                let (want, want_stats) =
+                    deconv_reverse_loop_ref(&x, &w, &b, s, p, opts);
+                for macro_tiles in [1usize, 2, 3, 8] {
+                    for lanes in [1usize, 2, 4, 8] {
+                        let sched = BlockSchedule {
+                            micro: tile,
+                            macro_tiles,
+                            lanes,
+                        };
+                        for workers in [1usize, 4] {
+                            let pool = WorkerPool::new(workers);
+                            let (got, got_stats) =
+                                deconv_reverse_loop_blocked(
+                                    &x,
+                                    &w,
+                                    &b,
+                                    s,
+                                    p,
+                                    zero_skip,
+                                    Some(sched),
+                                    &pool,
+                                );
+                            assert_eq!(
+                                got.data(),
+                                want.data(),
+                                "macro={macro_tiles} lanes={lanes} \
+                                 w={workers} zs={zero_skip}"
+                            );
+                            assert_eq!(
+                                got_stats, want_stats,
+                                "OpStats must survive blocking exactly"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// The default (no explicit schedule, no tune table) blocked entry
+    /// matches the classic entry exactly at the default tile factor.
+    #[test]
+    fn blocked_default_schedule_matches_classic_entry() {
+        let mut rng = Rng::seed_from_u64(53);
+        let x = rand_tensor(vec![1, 2, 6, 6], &mut rng);
+        let w = rand_tensor(vec![2, 3, 4, 4], &mut rng);
+        let b = vec![0.25, -0.5, 0.75];
+        let opts = ReverseLoopOpts::default();
+        let (want, want_stats) =
+            deconv_reverse_loop(&x, &w, &b, 2, 1, opts);
+        let (got, got_stats) = deconv_reverse_loop_blocked(
+            &x,
+            &w,
+            &b,
+            2,
+            1,
+            opts.zero_skip,
+            None,
+            &WorkerPool::new(1),
+        );
+        assert_eq!(got.data(), want.data());
+        assert_eq!(got_stats, want_stats);
     }
 
     #[test]

@@ -19,8 +19,10 @@
 //! output elements — so `f32` results are bit-identical to the pinned
 //! scalar reference ([`super::reference::deconv_standard_ref`]).
 
+use super::tiling::BlockSchedule;
 use crate::quant::Element;
 use crate::tensor::TensorT;
+use crate::util::{with_scratch, WorkerPool};
 
 /// Transposed convolution by scattering each input pixel to
 /// `o = i·S + k - P` (Eq. 1), accumulating over overlaps.
@@ -108,6 +110,239 @@ pub(crate) fn shape4<T: Element>(t: &TensorT<T>) -> [usize; 4] {
     let s = t.shape();
     assert_eq!(s.len(), 4, "expected rank-4 tensor, got {s:?}");
     [s[0], s[1], s[2], s[3]]
+}
+
+/// Shared read-only context for the blocked scatter jobs.
+struct StdCtx<'a, T: Element> {
+    x: &'a TensorT<T>,
+    w: &'a TensorT<T>,
+    b: &'a [T],
+    s: usize,
+    p: usize,
+    c_in: usize,
+    c_out: usize,
+    k: usize,
+    i_h: usize,
+    i_w: usize,
+    o_w: usize,
+}
+
+/// One output-row block of one `(bi, co)` plane — the blocked scatter's
+/// unit of work.
+#[derive(Debug, Clone, Copy)]
+struct StdJob {
+    bi: usize,
+    co: usize,
+    /// Output rows `[r0, r1)`.
+    r0: usize,
+    r1: usize,
+}
+
+/// Scatter Eq. 1 into one row block, appending the narrowed rows to
+/// `out`.  The input-row range is pre-restricted to the rows that can
+/// reach the block (`oh = ih·S + kh − P ∈ [r0, r1)` for some `kh`), and
+/// the innermost kernel-row zip runs `LANES`-wide lane accumulators
+/// over independent output columns.  Per output element the
+/// contribution order is still ascending `(ci, ih, iw, kh, kw)` — the
+/// reference order — because restricting `ih` to the superset of rows
+/// touching the block drops only zero-contribution iterations, and
+/// each lane column keeps its own chain.
+fn standard_block_kernel<T: Element, const LANES: usize>(
+    ctx: &StdCtx<'_, T>,
+    job: StdJob,
+    out: &mut Vec<T>,
+) {
+    let StdJob { bi, co, r0, r1 } = job;
+    let (s, p, k) = (ctx.s, ctx.p, ctx.k);
+    let (i_h, i_w, o_w) = (ctx.i_h, ctx.i_w, ctx.o_w);
+    let rows = r1 - r0;
+    let xdata = ctx.x.data();
+    let wdata = ctx.w.data();
+    // Input rows that can touch this block:
+    // ih·S ≥ r0 + P − (K−1)  and  ih·S ≤ r1 − 1 + P.
+    let si = s as i64;
+    let lo_num = r0 as i64 + p as i64 - (k as i64 - 1);
+    let ih_lo = (lo_num + si - 1).div_euclid(si).max(0) as usize;
+    let ih_hi = ((r1 as i64 - 1 + p as i64).div_euclid(si))
+        .min(i_h as i64 - 1);
+    with_scratch(rows * o_w, T::ACC_ZERO, |plane| {
+        let bw = ctx.b[co].widen();
+        for v in plane.iter_mut() {
+            *v = bw;
+        }
+        if ih_hi >= ih_lo as i64 {
+            let ih_hi = ih_hi as usize;
+            for ci in 0..ctx.c_in {
+                let x_img =
+                    &xdata[(bi * ctx.c_in + ci) * i_h * i_w..][..i_h * i_w];
+                let w_chan =
+                    &wdata[(ci * ctx.c_out + co) * k * k..][..k * k];
+                for ih in ih_lo..=ih_hi {
+                    let xrow = &x_img[ih * i_w..][..i_w];
+                    for (iw, &v) in xrow.iter().enumerate() {
+                        if v.is_zero() {
+                            continue;
+                        }
+                        let ow_base = (iw * s) as i64 - p as i64;
+                        let kw_lo =
+                            (-ow_base).clamp(0, k as i64) as usize;
+                        let kw_hi = (o_w as i64 - ow_base)
+                            .clamp(0, k as i64)
+                            as usize;
+                        if kw_lo >= kw_hi {
+                            continue;
+                        }
+                        let ow_first = (ow_base + kw_lo as i64) as usize;
+                        for kh in 0..k {
+                            let oh = (ih * s + kh) as i64 - p as i64;
+                            if oh < r0 as i64 || oh >= r1 as i64 {
+                                continue;
+                            }
+                            let wrow = &w_chan[kh * k + kw_lo..]
+                                [..kw_hi - kw_lo];
+                            let arow = &mut plane[(oh as usize - r0)
+                                * o_w
+                                + ow_first..]
+                                [..kw_hi - kw_lo];
+                            let mut ab = arow.chunks_exact_mut(LANES);
+                            let mut wb = wrow.chunks_exact(LANES);
+                            for (a_lane, w_lane) in
+                                (&mut ab).zip(&mut wb)
+                            {
+                                let mut lane: [T::Acc; LANES] =
+                                    (&*a_lane)
+                                        .try_into()
+                                        .expect("lane chunk");
+                                for l in 0..LANES {
+                                    lane[l] =
+                                        T::mac(lane[l], w_lane[l], v);
+                                }
+                                a_lane.copy_from_slice(&lane);
+                            }
+                            for (a, &wv) in ab
+                                .into_remainder()
+                                .iter_mut()
+                                .zip(wb.remainder())
+                            {
+                                *a = T::mac(*a, wv, v);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        out.extend(plane.iter().map(|&a| T::narrow(a)));
+    });
+}
+
+fn standard_block_into<T: Element>(
+    ctx: &StdCtx<'_, T>,
+    job: StdJob,
+    lanes: usize,
+    out: &mut Vec<T>,
+) {
+    match lanes {
+        1 => standard_block_kernel::<T, 1>(ctx, job, out),
+        2 => standard_block_kernel::<T, 2>(ctx, job, out),
+        8 => standard_block_kernel::<T, 8>(ctx, job, out),
+        _ => standard_block_kernel::<T, 4>(ctx, job, out),
+    }
+}
+
+/// [`deconv_standard`] restructured around a two-level
+/// [`BlockSchedule`]: `micro`-row output blocks of each `(bi, co)`
+/// plane are the jobs, `macro_tiles` consecutive jobs form one pool
+/// claim unit, and the innermost kernel-row zip runs `lanes`-wide
+/// accumulators.  Bit-identical to [`deconv_standard`] (and therefore
+/// to the frozen scalar reference) for every legal schedule, which the
+/// property tests pin.
+///
+/// `sched: None` consults the persisted tune table for this (kernel,
+/// element, shape), falling back to the static default.
+pub fn deconv_standard_blocked<T: Element>(
+    x: &TensorT<T>,
+    w: &TensorT<T>,
+    b: &[T],
+    stride: usize,
+    padding: usize,
+    sched: Option<BlockSchedule>,
+    pool: &WorkerPool,
+) -> TensorT<T> {
+    let [n, c_in, i_h, i_w] = shape4(x);
+    let [wc_in, c_out, k, k2] = shape4(w);
+    assert_eq!(c_in, wc_in, "weight C_in mismatch");
+    assert_eq!(k, k2, "kernel must be square");
+    assert_eq!(b.len(), c_out, "bias length mismatch");
+    let o_h = super::output_size(i_h, k, stride, padding);
+    let o_w = super::output_size(i_w, k, stride, padding);
+    let sched = sched.map(BlockSchedule::normalized).unwrap_or_else(|| {
+        crate::tune::schedule_for::<T>(
+            crate::tune::TuneKernel::Standard,
+            c_in,
+            c_out,
+            k,
+            stride,
+            o_h,
+            None,
+        )
+    });
+    let ctx = StdCtx {
+        x,
+        w,
+        b,
+        s: stride,
+        p: padding,
+        c_in,
+        c_out,
+        k,
+        i_h,
+        i_w,
+        o_w,
+    };
+    // Row-block jobs in (bi, co, r0) order — disjoint output regions.
+    let micro = sched.micro.max(1);
+    let mut jobs = Vec::new();
+    for bi in 0..n {
+        for co in 0..c_out {
+            let mut r0 = 0;
+            while r0 < o_h {
+                let r1 = (r0 + micro).min(o_h);
+                jobs.push(StdJob { bi, co, r0, r1 });
+                r0 = r1;
+            }
+        }
+    }
+    let g = sched.macro_tiles.max(1);
+    let lanes = sched.lanes;
+    let n_macro = jobs.len().div_ceil(g);
+    let results = pool.map_indexed_auto(n_macro, |m| {
+        let lo = m * g;
+        let hi = (lo + g).min(jobs.len());
+        let member = &jobs[lo..hi];
+        let total: usize =
+            member.iter().map(|j| (j.r1 - j.r0) * o_w).sum();
+        let mut out = Vec::with_capacity(total);
+        for &job in member {
+            standard_block_into(&ctx, job, lanes, &mut out);
+        }
+        out
+    });
+    let mut y = TensorT::zeros(vec![n, c_out, o_h, o_w]);
+    let ydata = y.data_mut();
+    for (m, mblock) in results.iter().enumerate() {
+        let lo = m * g;
+        let hi = (lo + g).min(jobs.len());
+        let mut off = 0usize;
+        for job in &jobs[lo..hi] {
+            let len = (job.r1 - job.r0) * o_w;
+            let dst =
+                ((job.bi * c_out + job.co) * o_h + job.r0) * o_w;
+            ydata[dst..dst + len]
+                .copy_from_slice(&mblock[off..off + len]);
+            off += len;
+        }
+    }
+    y
 }
 
 #[cfg(test)]
@@ -205,6 +440,62 @@ mod tests {
                 "({n},{c_in},{c_out},{k},{s},{p},{i_h}): f32 must match \
                  the scalar reference bit for bit"
             );
+        }
+    }
+
+    /// Row-blocked, lane-accumulated scatter is bit-identical to the
+    /// frozen scalar reference for every (micro, macro, lanes) triple,
+    /// serial and parallel.
+    #[test]
+    fn blocked_is_bit_identical_to_pinned_scalar_reference() {
+        use crate::deconv::deconv_standard_ref;
+        use crate::util::Rng;
+        let mut rng = Rng::seed_from_u64(41);
+        for (n, c_in, c_out, k, s, p, i_h) in
+            [(1, 2, 3, 4, 2, 1, 5), (2, 3, 2, 7, 1, 0, 3)]
+        {
+            let x = Tensor::from_fn(vec![n, c_in, i_h, i_h], |_| {
+                rng.range_f32(-1.0, 1.0)
+            });
+            let mut w = Tensor::from_fn(vec![c_in, c_out, k, k], |_| {
+                rng.range_f32(-1.0, 1.0)
+            });
+            for (i, v) in w.data_mut().iter_mut().enumerate() {
+                if i % 3 == 0 {
+                    *v = 0.0;
+                }
+            }
+            let b: Vec<f32> =
+                (0..c_out).map(|_| rng.range_f32(-0.5, 0.5)).collect();
+            let want = deconv_standard_ref(&x, &w, &b, s, p);
+            for micro in [1usize, 3, 5, 64] {
+                for macro_tiles in [1usize, 2, 8] {
+                    for lanes in [1usize, 2, 4, 8] {
+                        let sched = BlockSchedule {
+                            micro,
+                            macro_tiles,
+                            lanes,
+                        };
+                        for workers in [1usize, 4] {
+                            let got = deconv_standard_blocked(
+                                &x,
+                                &w,
+                                &b,
+                                s,
+                                p,
+                                Some(sched),
+                                &WorkerPool::new(workers),
+                            );
+                            assert_eq!(
+                                got.data(),
+                                want.data(),
+                                "micro={micro} macro={macro_tiles} \
+                                 lanes={lanes} w={workers}"
+                            );
+                        }
+                    }
+                }
+            }
         }
     }
 

@@ -9,8 +9,10 @@
 //! zero-padding overhead the paper's reverse-loop algorithm avoids.
 
 use super::standard::shape4;
+use super::tiling::BlockSchedule;
 use crate::quant::Element;
 use crate::tensor::TensorT;
+use crate::util::WorkerPool;
 
 /// Number of sub-convolution filters the TDC transform produces per
 /// original filter: `stride²`.
@@ -195,6 +197,221 @@ pub fn deconv_tdc<T: Element>(
     y
 }
 
+/// Shared read-only context for the blocked TDC gather jobs.
+struct TdcCtx<'a, T: Element> {
+    x: &'a TensorT<T>,
+    w: &'a TensorT<T>,
+    b: &'a [T],
+    taps_h: &'a [Vec<(usize, usize)>],
+    taps_w: &'a [Vec<(usize, usize)>],
+    c_in: usize,
+    c_out: usize,
+    k: usize,
+    i_h: usize,
+    i_w: usize,
+    o_w: usize,
+}
+
+/// One output-row block of one `(bi, co)` plane.
+#[derive(Debug, Clone, Copy)]
+struct TdcJob {
+    bi: usize,
+    co: usize,
+    r0: usize,
+    r1: usize,
+}
+
+/// Gather one row block, appending narrowed pixels row-major to `out`.
+/// The `ow` walk runs in `LANES`-wide blocks whose `[Element::Acc;
+/// LANES]` accumulators each own one output column: per column the
+/// taps still accumulate in ascending `(kh, kw, ci)` order, so any
+/// lane width is bit-identical to the scalar gather.
+fn tdc_block_kernel<T: Element, const LANES: usize>(
+    ctx: &TdcCtx<'_, T>,
+    job: TdcJob,
+    out: &mut Vec<T>,
+) {
+    let TdcJob { bi, co, r0, r1 } = job;
+    let (k, c_in) = (ctx.k, ctx.c_in);
+    let (i_h, i_w, o_w) = (ctx.i_h, ctx.i_w, ctx.o_w);
+    let xdata = ctx.x.data();
+    let wdata = ctx.w.data();
+    let w_ci_stride = ctx.c_out * k * k;
+    let x_ci_stride = i_h * i_w;
+    let bias = ctx.b[co].widen();
+    for oh in r0..r1 {
+        let th = &ctx.taps_h[oh];
+        let mut ow = 0usize;
+        while ow + LANES <= o_w {
+            let mut lane = [T::ACC_ZERO; LANES];
+            for l in 0..LANES {
+                let mut acc = bias;
+                for &(kh, ih) in th {
+                    for &(kw, iw) in &ctx.taps_w[ow + l] {
+                        let mut wi = (co * k + kh) * k + kw;
+                        let mut xi = (bi * c_in * i_h + ih) * i_w + iw;
+                        for _ in 0..c_in {
+                            acc = T::mac(acc, wdata[wi], xdata[xi]);
+                            wi += w_ci_stride;
+                            xi += x_ci_stride;
+                        }
+                    }
+                }
+                lane[l] = acc;
+            }
+            for &acc in &lane {
+                out.push(T::narrow(acc));
+            }
+            ow += LANES;
+        }
+        while ow < o_w {
+            let mut acc = bias;
+            for &(kh, ih) in th {
+                for &(kw, iw) in &ctx.taps_w[ow] {
+                    let mut wi = (co * k + kh) * k + kw;
+                    let mut xi = (bi * c_in * i_h + ih) * i_w + iw;
+                    for _ in 0..c_in {
+                        acc = T::mac(acc, wdata[wi], xdata[xi]);
+                        wi += w_ci_stride;
+                        xi += x_ci_stride;
+                    }
+                }
+            }
+            out.push(T::narrow(acc));
+            ow += 1;
+        }
+    }
+}
+
+fn tdc_block_into<T: Element>(
+    ctx: &TdcCtx<'_, T>,
+    job: TdcJob,
+    lanes: usize,
+    out: &mut Vec<T>,
+) {
+    match lanes {
+        1 => tdc_block_kernel::<T, 1>(ctx, job, out),
+        2 => tdc_block_kernel::<T, 2>(ctx, job, out),
+        8 => tdc_block_kernel::<T, 8>(ctx, job, out),
+        _ => tdc_block_kernel::<T, 4>(ctx, job, out),
+    }
+}
+
+/// [`deconv_tdc`] restructured around a two-level [`BlockSchedule`]:
+/// `micro`-row blocks of each `(bi, co)` plane are the jobs,
+/// `macro_tiles` consecutive jobs form one pool claim unit, and the
+/// pixel walk runs `lanes`-wide independent-column accumulators.
+/// Bit-identical to [`deconv_tdc`] (and the frozen scalar reference)
+/// for every legal schedule; `sched: None` consults the persisted tune
+/// table, falling back to the static default.
+pub fn deconv_tdc_blocked<T: Element>(
+    x: &TensorT<T>,
+    w: &TensorT<T>,
+    b: &[T],
+    stride: usize,
+    padding: usize,
+    sched: Option<BlockSchedule>,
+    pool: &WorkerPool,
+) -> TensorT<T> {
+    let [n, c_in, i_h, i_w] = shape4(x);
+    let [_, c_out, k, _] = shape4(w);
+    let s = stride;
+    let p = padding;
+    let o_h = super::output_size(i_h, k, s, p);
+    let o_w = super::output_size(i_w, k, s, p);
+    let sched = sched.map(BlockSchedule::normalized).unwrap_or_else(|| {
+        crate::tune::schedule_for::<T>(
+            crate::tune::TuneKernel::Tdc,
+            c_in,
+            c_out,
+            k,
+            stride,
+            o_h,
+            None,
+        )
+    });
+    // Same pre-resolved tap pairs as the serial gather.
+    let taps_along = |o_extent: usize,
+                      i_extent: usize|
+     -> Vec<Vec<(usize, usize)>> {
+        (0..o_extent)
+            .map(|o| {
+                (0..k)
+                    .filter_map(|kk| {
+                        let num = o as i64 + p as i64 - kk as i64;
+                        if num % s as i64 != 0 {
+                            return None;
+                        }
+                        let i = num / s as i64;
+                        if i < 0 || i >= i_extent as i64 {
+                            return None;
+                        }
+                        Some((kk, i as usize))
+                    })
+                    .collect()
+            })
+            .collect()
+    };
+    let taps_h = taps_along(o_h, i_h);
+    let taps_w = taps_along(o_w, i_w);
+    let ctx = TdcCtx {
+        x,
+        w,
+        b,
+        taps_h: &taps_h,
+        taps_w: &taps_w,
+        c_in,
+        c_out,
+        k,
+        i_h,
+        i_w,
+        o_w,
+    };
+    let micro = sched.micro.max(1);
+    let mut jobs = Vec::new();
+    for bi in 0..n {
+        for co in 0..c_out {
+            let mut r0 = 0;
+            while r0 < o_h {
+                let r1 = (r0 + micro).min(o_h);
+                jobs.push(TdcJob { bi, co, r0, r1 });
+                r0 = r1;
+            }
+        }
+    }
+    let g = sched.macro_tiles.max(1);
+    let lanes = sched.lanes;
+    let n_macro = jobs.len().div_ceil(g);
+    let results = pool.map_indexed_auto(n_macro, |m| {
+        let lo = m * g;
+        let hi = (lo + g).min(jobs.len());
+        let member = &jobs[lo..hi];
+        let total: usize =
+            member.iter().map(|j| (j.r1 - j.r0) * o_w).sum();
+        let mut out = Vec::with_capacity(total);
+        for &job in member {
+            tdc_block_into(&ctx, job, lanes, &mut out);
+        }
+        out
+    });
+    let mut y = TensorT::<T>::zeros(vec![n, c_out, o_h, o_w]);
+    let ydata = y.data_mut();
+    for (m, mblock) in results.iter().enumerate() {
+        let lo = m * g;
+        let hi = (lo + g).min(jobs.len());
+        let mut off = 0usize;
+        for job in &jobs[lo..hi] {
+            let len = (job.r1 - job.r0) * o_w;
+            let dst =
+                ((job.bi * c_out + job.co) * o_h + job.r0) * o_w;
+            ydata[dst..dst + len]
+                .copy_from_slice(&mblock[off..off + len]);
+            off += len;
+        }
+    }
+    y
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -286,6 +503,55 @@ mod tests {
                 "({c_in},{c_out},{k},{s},{p},{i_h}): f32 must match the \
                  scalar reference bit for bit"
             );
+        }
+    }
+
+    /// Blocked gather is bit-identical to the frozen scalar reference
+    /// for every (micro, macro, lanes) triple, serial and parallel.
+    #[test]
+    fn blocked_is_bit_identical_to_pinned_scalar_reference() {
+        use crate::deconv::deconv_tdc_ref;
+        let mut rng = Rng::seed_from_u64(43);
+        for (c_in, c_out, k, s, p, i_h) in
+            [(2, 3, 4, 2, 1, 5), (1, 2, 3, 2, 1, 4), (2, 1, 7, 1, 0, 3)]
+        {
+            let x = Tensor::from_fn(vec![2, c_in, i_h, i_h], |_| {
+                rng.range_f32(-1.0, 1.0)
+            });
+            let w = Tensor::from_fn(vec![c_in, c_out, k, k], |_| {
+                rng.range_f32(-1.0, 1.0)
+            });
+            let b: Vec<f32> =
+                (0..c_out).map(|_| rng.range_f32(-0.5, 0.5)).collect();
+            let want = deconv_tdc_ref(&x, &w, &b, s, p);
+            for micro in [1usize, 3, 64] {
+                for macro_tiles in [1usize, 2, 8] {
+                    for lanes in [1usize, 2, 4, 8] {
+                        let sched = BlockSchedule {
+                            micro,
+                            macro_tiles,
+                            lanes,
+                        };
+                        for workers in [1usize, 4] {
+                            let got = deconv_tdc_blocked(
+                                &x,
+                                &w,
+                                &b,
+                                s,
+                                p,
+                                Some(sched),
+                                &WorkerPool::new(workers),
+                            );
+                            assert_eq!(
+                                got.data(),
+                                want.data(),
+                                "micro={micro} macro={macro_tiles} \
+                                 lanes={lanes} w={workers}"
+                            );
+                        }
+                    }
+                }
+            }
         }
     }
 

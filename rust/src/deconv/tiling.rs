@@ -1,5 +1,6 @@
-//! Output-space tiling math — Eq. 5 and the tile-enumeration helpers the
-//! design-space exploration (Fig. 5) sweeps over.
+//! Output-space tiling math — Eq. 5, the tile-enumeration helpers the
+//! design-space exploration (Fig. 5) sweeps over, and the two-level
+//! [`BlockSchedule`] shared by the CPU kernels and the CU simulator.
 
 /// Eq. 5: input tile extent needed to cover a `T_OH`-wide output tile:
 /// `T_IH = ⌈T_OH / S⌉ + ⌈K / S⌉`.
@@ -58,6 +59,145 @@ impl TileSchedule {
     }
 }
 
+/// Lane-accumulator widths the blocked kernels monomorphize for.
+pub const SUPPORTED_LANES: [usize; 4] = [1, 2, 4, 8];
+
+/// Two-level blocking geometry — the single struct both the CPU
+/// kernels and the FPGA CU model consume, so software cache blocking
+/// and hardware DSE sweep one tile space.
+///
+/// The hierarchy, outermost first:
+///
+/// * **macro-tile** — `macro_tiles` consecutive micro-tile jobs
+///   claimed as one [`WorkerPool`](crate::util::WorkerPool) dispatch
+///   unit; its combined input footprint is what should fit in L2.
+/// * **micro-tile** — one `micro × micro` output tile, identical to
+///   the `ReverseLoopOpts::tile` factor (and to the CU workload's
+///   `tile_elems`), so `OpStats` geometry is unchanged by blocking.
+/// * **lane** — the innermost `[Acc; LANES]` accumulator block over
+///   *independent output columns*.  Each column keeps its own
+///   accumulation chain, so any lane width is bit-identical to the
+///   scalar references by construction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BlockSchedule {
+    /// Micro-tile output extent (`T_OH`).
+    pub micro: usize,
+    /// Micro-tiles per macro-tile (dispatch unit).
+    pub macro_tiles: usize,
+    /// Lane-accumulator width (must be in [`SUPPORTED_LANES`]).
+    pub lanes: usize,
+}
+
+impl BlockSchedule {
+    /// The static default used when no tuned schedule is available:
+    /// the caller's tile factor as the micro-tile, four micro-tiles
+    /// per macro-tile, four lanes.
+    pub fn default_for(tile: usize) -> Self {
+        BlockSchedule {
+            micro: tile.max(1),
+            macro_tiles: 4,
+            lanes: 4,
+        }
+        .normalized()
+    }
+
+    /// Clamp every field to a legal value: `micro ≥ 1`,
+    /// `macro_tiles ≥ 1`, and `lanes` rounded *down* to the nearest
+    /// supported width.  Dispatch always normalizes, so a hand-edited
+    /// tune file can never produce a zero-extent block.
+    pub fn normalized(self) -> Self {
+        let lanes = SUPPORTED_LANES
+            .iter()
+            .copied()
+            .filter(|l| *l <= self.lanes)
+            .max()
+            .unwrap_or(1);
+        BlockSchedule {
+            micro: self.micro.max(1),
+            macro_tiles: self.macro_tiles.max(1),
+            lanes,
+        }
+    }
+
+    /// Input bytes one micro-tile streams per image (Eq. 5 extent on
+    /// both axes, all input channels).
+    pub fn input_block_bytes(
+        &self,
+        k: usize,
+        s: usize,
+        c_in: usize,
+        elem_bytes: usize,
+    ) -> usize {
+        let t_i = input_tile_extent(self.micro, k, s);
+        c_in * t_i * t_i * elem_bytes
+    }
+
+    /// Accumulator bytes one micro-tile pins in the scratch arena
+    /// (all output channels, wide-accumulator domain).
+    pub fn acc_block_bytes(&self, c_out: usize, acc_bytes: usize) -> usize {
+        c_out * self.micro * self.micro * acc_bytes
+    }
+
+    /// Working set one micro-tile keeps hot — input block, one output
+    /// channel's weights, and the accumulator block.  The L1 residency
+    /// test of the cache roofline.
+    pub fn l1_footprint_bytes(
+        &self,
+        k: usize,
+        s: usize,
+        c_in: usize,
+        c_out: usize,
+        elem_bytes: usize,
+        acc_bytes: usize,
+    ) -> usize {
+        self.input_block_bytes(k, s, c_in, elem_bytes)
+            + c_in * k * k * elem_bytes
+            + self.acc_block_bytes(c_out, acc_bytes)
+    }
+
+    /// Working set one macro-tile keeps hot — every member micro-tile's
+    /// input block, the full weight tensor, and one accumulator block
+    /// (micro-tiles within a macro run sequentially, so accumulators
+    /// are reused, not stacked).  The L2 residency test.
+    pub fn l2_footprint_bytes(
+        &self,
+        k: usize,
+        s: usize,
+        c_in: usize,
+        c_out: usize,
+        elem_bytes: usize,
+        acc_bytes: usize,
+    ) -> usize {
+        self.macro_tiles * self.input_block_bytes(k, s, c_in, elem_bytes)
+            + c_in * c_out * k * k * elem_bytes
+            + self.acc_block_bytes(c_out, acc_bytes)
+    }
+}
+
+/// Every legal (micro, macro, lanes) triple for a network whose
+/// largest layer output is `o_max` at max stride `s_max`: micro from
+/// [`legal_tiles`], macro grouping and lane width from the supported
+/// power-of-two sets.  This is the space `edgedcnn tune` sweeps and
+/// `dse` scores — one enumeration for both.
+pub fn legal_block_schedules(
+    o_max: usize,
+    s_max: usize,
+) -> Vec<BlockSchedule> {
+    let mut out = Vec::new();
+    for micro in legal_tiles(o_max, s_max) {
+        for macro_tiles in [1usize, 2, 4, 8] {
+            for lanes in SUPPORTED_LANES {
+                out.push(BlockSchedule {
+                    micro,
+                    macro_tiles,
+                    lanes,
+                });
+            }
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -108,6 +248,58 @@ mod tests {
             assert!(!tiles.is_empty());
             assert!(tiles.iter().all(|t| t % s == 0 && *t >= 2));
         }
+    }
+
+    #[test]
+    fn block_schedule_normalizes_every_field() {
+        let s = BlockSchedule {
+            micro: 0,
+            macro_tiles: 0,
+            lanes: 0,
+        }
+        .normalized();
+        assert_eq!(s, BlockSchedule { micro: 1, macro_tiles: 1, lanes: 1 });
+        let s = BlockSchedule {
+            micro: 12,
+            macro_tiles: 3,
+            lanes: 7,
+        }
+        .normalized();
+        assert_eq!(s.lanes, 4, "lanes round down to a supported width");
+        assert_eq!(s.macro_tiles, 3);
+        assert_eq!(BlockSchedule::default_for(12).micro, 12);
+        assert_eq!(BlockSchedule::default_for(0).micro, 1);
+    }
+
+    #[test]
+    fn block_footprints_follow_eq5() {
+        let s = BlockSchedule {
+            micro: 12,
+            macro_tiles: 2,
+            lanes: 4,
+        };
+        // K=4, S=2 → t_i = 8; c_in=3 f32 input block = 3·8·8·4
+        assert_eq!(s.input_block_bytes(4, 2, 3, 4), 3 * 64 * 4);
+        assert_eq!(s.acc_block_bytes(5, 8), 5 * 144 * 8);
+        let l1 = s.l1_footprint_bytes(4, 2, 3, 5, 4, 8);
+        let l2 = s.l2_footprint_bytes(4, 2, 3, 5, 4, 8);
+        assert_eq!(l1, 3 * 64 * 4 + 3 * 16 * 4 + 5 * 144 * 8);
+        assert_eq!(l2, 2 * 3 * 64 * 4 + 3 * 5 * 16 * 4 + 5 * 144 * 8);
+        assert!(l2 > l1 - 5 * 144 * 8, "macro footprint dominates");
+    }
+
+    #[test]
+    fn legal_block_schedules_cover_the_cross_product() {
+        let space = legal_block_schedules(28, 2);
+        let micros = legal_tiles(28, 2);
+        assert_eq!(space.len(), micros.len() * 4 * SUPPORTED_LANES.len());
+        assert!(space.iter().all(|b| {
+            micros.contains(&b.micro)
+                && SUPPORTED_LANES.contains(&b.lanes)
+                && b.macro_tiles >= 1
+        }));
+        // degenerate outputs still enumerate something
+        assert!(!legal_block_schedules(1, 1).is_empty());
     }
 
     #[test]

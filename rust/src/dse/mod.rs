@@ -6,6 +6,17 @@
 //! slope) or that do not fit the fabric, and pick the throughput-optimal
 //! survivor as the network's unified `T_OH`.
 
+//!
+//! The cache-roofline sibling ([`cache`]) scores the *software* side of
+//! the same tile space: L1/L2 residency and per-byte reuse of every
+//! legal [`crate::deconv::BlockSchedule`], so the CPU blocking, the CU
+//! cycle model and the DSE all sweep one shared geometry.
+
+mod cache;
 mod roofline;
 
+pub use cache::{
+    best_block, explore_blocks, score_block_schedule, CacheModel,
+    CachePoint,
+};
 pub use roofline::{explore, optimal_tile, DesignPoint};

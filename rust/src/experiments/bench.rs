@@ -34,13 +34,14 @@ use crate::artifacts::write_synthetic;
 use crate::config::{BackendCfg, DeviceKind};
 use crate::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig};
 use crate::deconv::{
-    deconv_reverse_loop, deconv_reverse_loop_ref, deconv_standard,
-    deconv_tdc, ReverseLoopOpts,
+    deconv_reverse_loop, deconv_reverse_loop_blocked,
+    deconv_reverse_loop_ref, deconv_standard, deconv_tdc, ReverseLoopOpts,
 };
 use crate::quant::{Element, Q16_16, Q8_8};
 use crate::tensor::TensorT;
 use crate::util::{
     escape_json, parse_json, Bencher, Json, Rng, TempDir, TrialStats,
+    WorkerPool,
 };
 use anyhow::{bail, Context, Result};
 use std::time::Duration;
@@ -55,6 +56,15 @@ pub const BENCH_SCHEMA_VERSION: u64 = 2;
 /// must be than its frozen scalar reference, same run, same machine.
 pub const MIN_SPEEDUP_F32: f64 = 1.5;
 pub const MIN_SPEEDUP_FIXED: f64 = 1.2;
+
+/// Within-run ceiling on `blocked-*` vs `reverse-loop-*` medians: the
+/// cache-blocked dispatch (tune table or static default, host pool)
+/// may cost at most this factor over the plain tiled kernel — blocking
+/// must never regress the hot path it restructures.  Like the speedup
+/// gates, both sides are measured in the same run, so the gate is
+/// always enforced; the comparison widens by the same MAD-scaled noise
+/// band the absolute tier uses.
+pub const MAX_BLOCKED_RATIO: f64 = 1.10;
 
 /// Knobs of one suite run.
 #[derive(Debug, Clone)]
@@ -123,6 +133,10 @@ pub struct BenchSuite {
     pub smoke: bool,
     pub min_speedup_f32: f64,
     pub min_speedup_fixed: f64,
+    /// Ceiling on the within-run `blocked-*` / `reverse-loop-*` median
+    /// ratio.  Additive schema field: absent in pre-blocking suites and
+    /// defaulted to [`MAX_BLOCKED_RATIO`] on read.
+    pub max_blocked_ratio: f64,
     pub rows: Vec<KernelRow>,
     pub serving: Vec<ServingRow>,
 }
@@ -207,6 +221,15 @@ fn rows_for<T: Element>(
         bench("reverse-loop-ref")
             .run_trials(|| deconv_reverse_loop_ref(&x, &w, &b, g.s, g.p, rl)),
     );
+    // the cache-blocked production dispatch: schedule from the tune
+    // table when one is persisted, static default otherwise, host pool
+    let pool = WorkerPool::with_default_parallelism();
+    push(
+        format!("blocked-{suffix}"),
+        bench("blocked").run_trials(|| {
+            deconv_reverse_loop_blocked(&x, &w, &b, g.s, g.p, false, None, &pool)
+        }),
+    );
 }
 
 /// Drive one backend kind through the coordinator and record its row.
@@ -243,7 +266,7 @@ fn serving_row(
 /// (`provisional: false`).
 pub fn run_bench(opts: &BenchOpts) -> Result<BenchSuite> {
     let g = Geo::new(opts.smoke);
-    let mut rows = Vec::with_capacity(12);
+    let mut rows = Vec::with_capacity(15);
     rows_for::<f32>("f32", &g, opts, &mut rows);
     rows_for::<Q8_8>("q8.8", &g, opts, &mut rows);
     rows_for::<Q16_16>("q16.16", &g, opts, &mut rows);
@@ -261,6 +284,7 @@ pub fn run_bench(opts: &BenchOpts) -> Result<BenchSuite> {
         smoke: opts.smoke,
         min_speedup_f32: MIN_SPEEDUP_F32,
         min_speedup_fixed: MIN_SPEEDUP_FIXED,
+        max_blocked_ratio: MAX_BLOCKED_RATIO,
         rows,
         serving,
     })
@@ -276,6 +300,21 @@ impl BenchSuite {
         let vec = find(format!("reverse-loop-{suffix}"))?;
         let reference = find(format!("reverse-loop-ref-{suffix}"))?;
         Some(reference.stats.median_s / vec.stats.median_s)
+    }
+
+    /// Within-run cost of the cache-blocked dispatch over the plain
+    /// tiled kernel at one precision suffix, with the two rows' MAD
+    /// noise figures (for the gate's tolerance band).
+    pub fn blocked_ratio(&self, suffix: &str) -> Option<(f64, f64)> {
+        let find = |name: String| {
+            self.rows.iter().find(|r| r.name == name)
+        };
+        let blocked = find(format!("blocked-{suffix}"))?;
+        let rl = find(format!("reverse-loop-{suffix}"))?;
+        Some((
+            blocked.stats.median_s / rl.stats.median_s,
+            blocked.stats.rel_mad() + rl.stats.rel_mad(),
+        ))
     }
 
     pub fn to_json(&self) -> String {
@@ -320,11 +359,13 @@ impl BenchSuite {
             "{{\n  \"version\": {BENCH_SCHEMA_VERSION},\n  \
              \"provisional\": {},\n  \"smoke\": {},\n  \
              \"min_speedup_f32\": {},\n  \"min_speedup_fixed\": {},\n  \
+             \"max_blocked_ratio\": {},\n  \
              \"rows\": [\n{}\n  ],\n  \"serving\": [\n{}\n  ]\n}}\n",
             self.provisional,
             self.smoke,
             self.min_speedup_f32,
             self.min_speedup_fixed,
+            self.max_blocked_ratio,
             rows,
             serving,
         )
@@ -381,6 +422,11 @@ impl BenchSuite {
             smoke: as_bool(v.req("smoke")?)?,
             min_speedup_f32: v.req("min_speedup_f32")?.as_f64()?,
             min_speedup_fixed: v.req("min_speedup_fixed")?.as_f64()?,
+            // additive in schema v2: pre-blocking baselines lack it
+            max_blocked_ratio: match v.get("max_blocked_ratio") {
+                Some(x) => x.as_f64()?,
+                None => MAX_BLOCKED_RATIO,
+            },
             rows,
             serving,
         })
@@ -423,6 +469,13 @@ impl BenchSuite {
                      (gate {gate:.2}x)\n",
                 ));
             }
+            if let Some((ratio, _)) = self.blocked_ratio(suffix) {
+                out.push_str(&format!(
+                    "ratio blocked-{suffix} vs reverse-loop: {ratio:.2} \
+                     (gate {:.2})\n",
+                    self.max_blocked_ratio,
+                ));
+            }
         }
         for s in &self.serving {
             out.push_str(&format!(
@@ -460,6 +513,31 @@ pub fn compare_suites(base: &BenchSuite, fresh: &BenchSuite) -> Result<String> {
             )),
             None => failures.push(format!(
                 "fresh suite is missing the reverse-loop-{suffix} rows"
+            )),
+        }
+    }
+
+    // blocked-dispatch ratio gate: within-run like the speedups, the
+    // MAD noise of both rows widening the band the same way the
+    // absolute tier does
+    for suffix in ["f32", "q8.8", "q16.16"] {
+        match fresh.blocked_ratio(suffix) {
+            Some((ratio, rel_mad)) => {
+                let band = base.max_blocked_ratio + 8.0 * rel_mad;
+                if ratio <= band {
+                    out.push_str(&format!(
+                        "PASS ratio blocked-{suffix}: {ratio:.2} <= \
+                         {band:.2}\n"
+                    ));
+                } else {
+                    failures.push(format!(
+                        "ratio blocked-{suffix}: {ratio:.2} > gate \
+                         {band:.2} (blocking regressed the hot path)"
+                    ));
+                }
+            }
+            None => failures.push(format!(
+                "fresh suite is missing the blocked-{suffix} rows"
             )),
         }
     }
@@ -549,6 +627,7 @@ mod tests {
             smoke: true,
             min_speedup_f32: MIN_SPEEDUP_F32,
             min_speedup_fixed: MIN_SPEEDUP_FIXED,
+            max_blocked_ratio: MAX_BLOCKED_RATIO,
             rows,
             serving: vec![ServingRow {
                 name: "serve-fpga".to_string(),
@@ -566,6 +645,8 @@ mod tests {
             rows.push(row(&format!("reverse-loop-{suffix}"), 1e-3, 1e-5));
             rows.push(row(&format!("tdc-{suffix}"), 2e-3, 1e-5));
             rows.push(row(&format!("reverse-loop-ref-{suffix}"), 3e-3, 1e-5));
+            // blocked at 1.05x the plain loop: inside the 1.10 gate
+            rows.push(row(&format!("blocked-{suffix}"), 1.05e-3, 1e-5));
         }
         rows
     }
@@ -639,18 +720,60 @@ mod tests {
         };
         let suite = run_bench(&opts).unwrap();
         assert!(!suite.provisional, "a measured run is not provisional");
-        assert_eq!(suite.rows.len(), 12, "4 kernels x 3 precisions");
+        assert_eq!(suite.rows.len(), 15, "5 kernels x 3 precisions");
         for r in &suite.rows {
             assert!(r.stats.median_s > 0.0, "{}", r.name);
             assert!(r.macs > 0, "{}", r.name);
             assert!(r.img_per_s() > 0.0 && r.ns_per_mac() > 0.0);
         }
         assert!(suite.rows.iter().any(|r| r.name == "reverse-loop-q8.8"));
+        assert!(suite.rows.iter().any(|r| r.name == "blocked-q16.16"));
         for suffix in ["f32", "q8.8", "q16.16"] {
             assert!(suite.speedup(suffix).is_some(), "{suffix}");
+            let (ratio, _) = suite.blocked_ratio(suffix).unwrap();
+            assert!(ratio > 0.0, "{suffix}");
         }
         let rendered = suite.render();
         assert!(rendered.contains("reverse-loop-ref-q16.16"), "{rendered}");
         assert!(rendered.contains("speedup reverse-loop-f32"), "{rendered}");
+        assert!(rendered.contains("ratio blocked-f32"), "{rendered}");
+    }
+
+    #[test]
+    fn blocked_ratio_gate_trips_when_blocking_regresses() {
+        let base = suite(passing_rows(), true);
+        // in-gate run passes and prints the ratio PASS lines
+        let report =
+            compare_suites(&base, &suite(passing_rows(), false)).unwrap();
+        assert!(report.contains("PASS ratio blocked-f32"), "{report}");
+        // blocked 2x the plain loop: over the 1.10 gate even with the
+        // MAD band (quiet rows)
+        let mut slow = passing_rows();
+        slow.iter_mut()
+            .filter(|r| r.name == "blocked-q8.8")
+            .for_each(|r| r.stats.median_s = 2e-3);
+        let err = compare_suites(&base, &suite(slow, false))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("ratio blocked-q8.8"), "{err}");
+        assert!(err.contains("blocking regressed"), "{err}");
+        // a fresh suite without blocked rows cannot pass the gate
+        let legacy: Vec<KernelRow> = passing_rows()
+            .into_iter()
+            .filter(|r| !r.name.starts_with("blocked-"))
+            .collect();
+        let err = compare_suites(&base, &suite(legacy, false))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("missing the blocked-f32 rows"), "{err}");
+        // …but a *baseline* without the field still compares: the gate
+        // defaults on read (additive schema)
+        let mut legacy_base = suite(passing_rows(), true);
+        legacy_base.max_blocked_ratio = MAX_BLOCKED_RATIO;
+        let json = legacy_base
+            .to_json()
+            .replacen("  \"max_blocked_ratio\": 1.1,\n", "", 1);
+        let back = BenchSuite::from_json(&json).unwrap();
+        assert_eq!(back.max_blocked_ratio, MAX_BLOCKED_RATIO);
     }
 }

@@ -12,6 +12,7 @@
 //! the width/throughput trade the quantized path buys.
 
 use crate::config::{FpgaBoard, Precision};
+use crate::deconv::BlockSchedule;
 use crate::util::WorkerPool;
 
 /// One CU workload: a `T_OH × T_OW` output block for one output channel.
@@ -26,6 +27,29 @@ pub struct CuWorkload {
     pub macs_per_tap: usize,
     /// Output tile elements (bias init + final stream-out).
     pub tile_elems: usize,
+}
+
+impl CuWorkload {
+    /// The interior-tile workload of one [`BlockSchedule`] micro-tile —
+    /// the *same struct* the CPU kernels execute, so the cycle model and
+    /// the software blocking sweep one tile geometry.  `macs_per_tap` is
+    /// the `⌈T/S⌉²` output positions one weight tap touches;
+    /// `tile_elems` is the `T²` micro-tile.
+    pub fn from_block_schedule(
+        sched: &BlockSchedule,
+        c_in: usize,
+        k: usize,
+        stride: usize,
+    ) -> Self {
+        let t = sched.micro.max(1);
+        let s = stride.max(1);
+        CuWorkload {
+            c_in,
+            taps: k * k,
+            macs_per_tap: t.div_ceil(s) * t.div_ceil(s),
+            tile_elems: t * t,
+        }
+    }
 }
 
 /// CU timing parameters derived from the board.
@@ -205,6 +229,24 @@ mod tests {
             macs_per_tap: 36, // T=12, S=2 → 6×6
             tile_elems: 144,
         }
+    }
+
+    #[test]
+    fn block_schedule_yields_the_paper_workload() {
+        // T=12, S=2, K=4, 64 channels — exactly the canonical workload
+        // the other tests pin, built from the shared schedule struct.
+        let sched = BlockSchedule { micro: 12, macro_tiles: 4, lanes: 4 };
+        let w = CuWorkload::from_block_schedule(&sched, 64, 4, 2);
+        let pinned = wl();
+        assert_eq!(w.c_in, pinned.c_in);
+        assert_eq!(w.taps, pinned.taps);
+        assert_eq!(w.macs_per_tap, pinned.macs_per_tap);
+        assert_eq!(w.tile_elems, pinned.tile_elems);
+        // degenerate schedules clamp instead of dividing by zero
+        let z = BlockSchedule { micro: 0, macro_tiles: 1, lanes: 1 };
+        let w0 = CuWorkload::from_block_schedule(&z, 1, 3, 0);
+        assert_eq!(w0.tile_elems, 1);
+        assert_eq!(w0.macs_per_tap, 1);
     }
 
     #[test]

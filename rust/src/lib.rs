@@ -79,6 +79,7 @@ pub mod sparsity;
 pub mod stats;
 pub mod telemetry;
 pub mod tensor;
+pub mod tune;
 pub mod util;
 pub mod workload;
 

@@ -69,7 +69,21 @@ COMMANDS:
                              exits nonzero on regression (speedup gates
                              always, absolute medians when the baseline
                              is not provisional); --no-serving skips
-                             the coordinator rows
+                             the coordinator rows.  The blocked-* rows
+                             time the cache-blocked dispatch (tune
+                             table when present, static default
+                             otherwise) and gate within-run against
+                             the plain reverse loop
+  tune      [--smoke] [--trials N] [--out FILE] [--json]
+                             bench-driven autotuner: sweep the legal
+                             (micro, macro, lanes) block schedules for
+                             every deconv kernel x precision cell of
+                             the bench geometry (pruned grid under
+                             --smoke), verify each candidate bit-
+                             identical, and persist the winners to
+                             TUNE_edgedcnn.json (--out overrides; the
+                             EDGEDCNN_TUNE env var points dispatch at
+                             a table elsewhere)
   loadtest  [--scenario NAME|FILE] [--trials N] [--requests N] [--seed S]
             [--backends fpga,gpu,cpu] [--queue-depth D] [--executors E]
             [--record FILE] [--replay FILE] [--no-shard] [--smoke]
@@ -343,6 +357,24 @@ fn main() -> Result<()> {
                 )?;
                 // a tripped gate is an Err → nonzero exit (CI fails)
                 print!("{}", exp::compare_suites(&base, &suite)?);
+            }
+        }
+        "tune" => {
+            let smoke = flags.has("smoke");
+            let mut opts = edgedcnn::tune::TuneOpts::new(smoke);
+            opts.trials = flags.get("trials", opts.trials)?;
+            let table = edgedcnn::tune::run_tune(&opts);
+            let out = flags
+                .get_opt::<std::path::PathBuf>("out")?
+                .unwrap_or_else(|| {
+                    std::path::PathBuf::from(edgedcnn::tune::TUNE_FILE)
+                });
+            std::fs::write(&out, table.to_json())?;
+            println!("tune table written to {}", out.display());
+            if flags.has("json") {
+                print!("{}", table.to_json());
+            } else {
+                print!("{}", table.render());
             }
         }
         "loadtest" => {

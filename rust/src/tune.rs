@@ -1,0 +1,586 @@
+//! `edgedcnn tune` — bench-driven autotuning over the legal block-
+//! schedule space, and the persisted tune table kernel dispatch
+//! consults.
+//!
+//! The tuner sweeps every legal `(micro, macro, lanes)` triple from
+//! [`legal_block_schedules`] (a pruned subset in `--smoke` mode) for
+//! each kernel × precision cell of the bench geometry, timing each
+//! candidate with the same robust-median harness the bench suite uses
+//! and keeping the fastest.  Winners persist to `TUNE_edgedcnn.json`
+//! (schema-versioned, hand-rolled JSON like every other artifact in
+//! this repo); at dispatch time [`schedule_for`] looks the calling
+//! shape up in the table loaded once per process from the
+//! `EDGEDCNN_TUNE` path (default `./TUNE_edgedcnn.json`), falling back
+//! to [`BlockSchedule::default_for`] when the file or the entry is
+//! absent.  A missing, malformed or future-versioned table is never an
+//! error on the hot path — dispatch silently uses the static default,
+//! so the tune file is a pure performance hint, not a correctness
+//! input (every candidate is bit-identical by construction, and the
+//! tuner asserts it anyway).
+
+use crate::deconv::{
+    deconv_reverse_loop, deconv_reverse_loop_blocked, deconv_standard,
+    deconv_standard_blocked, deconv_tdc, deconv_tdc_blocked,
+    legal_block_schedules, output_size, BlockSchedule, ReverseLoopOpts,
+};
+use crate::quant::{Element, Q16_16, Q8_8};
+use crate::tensor::TensorT;
+use crate::util::{escape_json, parse_json, Bencher, Rng, WorkerPool};
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::sync::OnceLock;
+
+/// Schema version of `TUNE_edgedcnn.json`.
+pub const TUNE_SCHEMA_VERSION: u64 = 1;
+/// Default tune-table path, relative to the working directory.
+pub const TUNE_FILE: &str = "TUNE_edgedcnn.json";
+/// Environment override for the tune-table path.
+pub const TUNE_ENV: &str = "EDGEDCNN_TUNE";
+/// Micro-tile the static default schedule uses when the caller does
+/// not pin one (the paper's T=12 working point).
+pub const DEFAULT_MICRO: usize = 12;
+
+/// Which deconvolution kernel a tune entry applies to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TuneKernel {
+    Standard,
+    ReverseLoop,
+    Tdc,
+}
+
+impl TuneKernel {
+    pub const ALL: [TuneKernel; 3] =
+        [TuneKernel::Standard, TuneKernel::ReverseLoop, TuneKernel::Tdc];
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            TuneKernel::Standard => "standard",
+            TuneKernel::ReverseLoop => "reverse-loop",
+            TuneKernel::Tdc => "tdc",
+        }
+    }
+}
+
+/// Precision label of an [`Element`] type, derived from its storage
+/// and accumulator widths (the same cell labels the bench suite uses).
+pub fn elem_label<T: Element>() -> String {
+    match (T::BYTES, std::mem::size_of::<T::Acc>()) {
+        (4, 4) => "f32".to_string(),
+        (2, 8) => "q8.8".to_string(),
+        (4, 8) => "q16.16".to_string(),
+        (b, a) => format!("elem{b}acc{a}"),
+    }
+}
+
+/// Lookup key of one tuned cell: kernel, precision, and the shape
+/// parameters the block geometry actually depends on.
+pub fn shape_key(
+    kernel: TuneKernel,
+    elem: &str,
+    c_in: usize,
+    c_out: usize,
+    k: usize,
+    s: usize,
+    o_h: usize,
+) -> String {
+    format!("{}/{elem}/k{k}s{s}ci{c_in}co{c_out}oh{o_h}", kernel.as_str())
+}
+
+/// One tuned winner: the fastest schedule seen and its median runtime
+/// (informational — dispatch only reads the schedule).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TuneEntry {
+    pub sched: BlockSchedule,
+    pub median_s: f64,
+}
+
+/// The persisted tune table: shape key → winning schedule.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TuneTable {
+    entries: BTreeMap<String, TuneEntry>,
+}
+
+impl TuneTable {
+    pub fn get(&self, key: &str) -> Option<&TuneEntry> {
+        self.entries.get(key)
+    }
+
+    pub fn insert(&mut self, key: String, entry: TuneEntry) {
+        self.entries.insert(key, entry);
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn to_json(&self) -> String {
+        let entries = self
+            .entries
+            .iter()
+            .map(|(key, e)| {
+                format!(
+                    "    {{\"key\": \"{}\", \"micro\": {}, \
+                     \"macro_tiles\": {}, \"lanes\": {}, \
+                     \"median_s\": {}}}",
+                    escape_json(key),
+                    e.sched.micro,
+                    e.sched.macro_tiles,
+                    e.sched.lanes,
+                    e.median_s,
+                )
+            })
+            .collect::<Vec<_>>()
+            .join(",\n");
+        format!(
+            "{{\n  \"version\": {TUNE_SCHEMA_VERSION},\n  \
+             \"entries\": [\n{entries}\n  ]\n}}\n"
+        )
+    }
+
+    pub fn from_json(s: &str) -> Result<TuneTable> {
+        let v = parse_json(s).context("parsing tune table JSON")?;
+        let version = v.req("version")?.as_u64()?;
+        if version != TUNE_SCHEMA_VERSION {
+            bail!(
+                "tune schema version {version} != {TUNE_SCHEMA_VERSION} \
+                 (refusing to dispatch off an unknown table)"
+            );
+        }
+        let mut entries = BTreeMap::new();
+        for e in v.req("entries")?.as_arr()? {
+            entries.insert(
+                e.req("key")?.as_str()?.to_string(),
+                TuneEntry {
+                    sched: BlockSchedule {
+                        micro: e.req("micro")?.as_usize()?,
+                        macro_tiles: e.req("macro_tiles")?.as_usize()?,
+                        lanes: e.req("lanes")?.as_usize()?,
+                    },
+                    median_s: e.req("median_s")?.as_f64()?,
+                },
+            );
+        }
+        Ok(TuneTable { entries })
+    }
+
+    /// Human-readable winners listing (the `edgedcnn tune` output).
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "== edgedcnn tune ({} entries) ==\n",
+            self.entries.len()
+        );
+        for (key, e) in &self.entries {
+            out.push_str(&format!(
+                "{:<44} micro {:>3}  macro {:>2}  lanes {:>2}  \
+                 median {:>9.4} ms\n",
+                key,
+                e.sched.micro,
+                e.sched.macro_tiles,
+                e.sched.lanes,
+                e.median_s * 1e3,
+            ));
+        }
+        out
+    }
+}
+
+/// The process-wide table, loaded once from `EDGEDCNN_TUNE` (default
+/// `./TUNE_edgedcnn.json`).  Unreadable or unparseable files resolve
+/// to the empty table — dispatch falls back to the static default.
+fn global_table() -> &'static TuneTable {
+    static TABLE: OnceLock<TuneTable> = OnceLock::new();
+    TABLE.get_or_init(|| {
+        let path = std::env::var(TUNE_ENV)
+            .unwrap_or_else(|_| TUNE_FILE.to_string());
+        std::fs::read_to_string(&path)
+            .ok()
+            .and_then(|s| TuneTable::from_json(&s).ok())
+            .unwrap_or_default()
+    })
+}
+
+/// [`schedule_for`] against an explicit table (the testable core).
+///
+/// A tuned entry wins; `pin_micro` overrides its micro-tile (the
+/// classic kernel entries pin `micro` to their caller's tile factor so
+/// `OpStats` geometry is schedule-independent, while macro grouping
+/// and lane width still come from the table).  On a miss the static
+/// default at the pinned (or [`DEFAULT_MICRO`]) tile applies.  The
+/// result is always normalized, so hand-edited tables cannot produce
+/// an illegal geometry.
+pub fn schedule_from_table<T: Element>(
+    table: &TuneTable,
+    kernel: TuneKernel,
+    c_in: usize,
+    c_out: usize,
+    k: usize,
+    s: usize,
+    o_h: usize,
+    pin_micro: Option<usize>,
+) -> BlockSchedule {
+    let key = shape_key(kernel, &elem_label::<T>(), c_in, c_out, k, s, o_h);
+    match table.get(&key) {
+        Some(e) => {
+            let mut sched = e.sched;
+            if let Some(m) = pin_micro {
+                sched.micro = m;
+            }
+            sched.normalized()
+        }
+        None => BlockSchedule::default_for(pin_micro.unwrap_or(DEFAULT_MICRO)),
+    }
+}
+
+/// Block schedule for one kernel invocation: the persisted tune
+/// table's entry for this (kernel, precision, shape), else the static
+/// default.  This is what every blocked kernel's dispatch calls.
+pub fn schedule_for<T: Element>(
+    kernel: TuneKernel,
+    c_in: usize,
+    c_out: usize,
+    k: usize,
+    s: usize,
+    o_h: usize,
+    pin_micro: Option<usize>,
+) -> BlockSchedule {
+    schedule_from_table::<T>(
+        global_table(),
+        kernel,
+        c_in,
+        c_out,
+        k,
+        s,
+        o_h,
+        pin_micro,
+    )
+}
+
+/// Knobs of one tuner run.
+#[derive(Debug, Clone)]
+pub struct TuneOpts {
+    /// Small geometry + pruned candidate set (the CI mode).
+    pub smoke: bool,
+    /// Timed trials per candidate.
+    pub trials: usize,
+    /// Untimed warm-up iterations per candidate.
+    pub warmup: usize,
+}
+
+impl TuneOpts {
+    pub fn new(smoke: bool) -> Self {
+        TuneOpts {
+            smoke,
+            trials: if smoke { 3 } else { 10 },
+            warmup: if smoke { 1 } else { 2 },
+        }
+    }
+}
+
+/// Tuning geometry — deliberately identical to the bench suite's
+/// smoke/full geometries, so the winners land on exactly the shape
+/// keys the `blocked-*` bench rows dispatch with.
+struct TuneGeo {
+    n: usize,
+    c_in: usize,
+    c_out: usize,
+    i: usize,
+    k: usize,
+    s: usize,
+    p: usize,
+}
+
+impl TuneGeo {
+    fn new(smoke: bool) -> Self {
+        if smoke {
+            TuneGeo { n: 2, c_in: 8, c_out: 8, i: 7, k: 4, s: 2, p: 1 }
+        } else {
+            TuneGeo { n: 4, c_in: 32, c_out: 32, i: 14, k: 4, s: 2, p: 1 }
+        }
+    }
+}
+
+/// The candidate schedules one cell sweeps: the full legal space, or
+/// in smoke mode a pruned subset (default micro-tile, coarse macro and
+/// lane grid) sized for CI.
+fn candidates(o_h: usize, s: usize, smoke: bool) -> Vec<BlockSchedule> {
+    let all = legal_block_schedules(o_h, s);
+    if !smoke {
+        return all;
+    }
+    let micro = all
+        .iter()
+        .map(|b| b.micro)
+        .filter(|m| *m <= DEFAULT_MICRO)
+        .max()
+        .unwrap_or(all[0].micro);
+    all.into_iter()
+        .filter(|b| {
+            b.micro == micro
+                && matches!(b.macro_tiles, 1 | 4)
+                && matches!(b.lanes, 1 | 4 | 8)
+        })
+        .collect()
+}
+
+/// Sweep one kernel × precision cell and record the winner.  Every
+/// candidate's output is asserted bit-identical to the unblocked
+/// kernel of the same family before it is timed — a slow tune run must
+/// never persist a wrong one.
+fn sweep_cell<T: Element>(
+    kernel: TuneKernel,
+    g: &TuneGeo,
+    cands: &[BlockSchedule],
+    opts: &TuneOpts,
+    pool: &WorkerPool,
+    table: &mut TuneTable,
+) {
+    let mut rng = Rng::seed_from_u64(0x7E4E);
+    let x = TensorT::<T>::from_fn(vec![g.n, g.c_in, g.i, g.i], |_| {
+        T::from_f32(rng.range_f32(-1.0, 1.0))
+    });
+    let w = TensorT::<T>::from_fn(vec![g.c_in, g.c_out, g.k, g.k], |_| {
+        T::from_f32(rng.range_f32(-0.5, 0.5))
+    });
+    let b: Vec<T> = (0..g.c_out)
+        .map(|_| T::from_f32(rng.range_f32(-0.1, 0.1)))
+        .collect();
+    let o_h = output_size(g.i, g.k, g.s, g.p);
+    let want: Vec<T> = match kernel {
+        TuneKernel::Standard => {
+            deconv_standard(&x, &w, &b, g.s, g.p).data().to_vec()
+        }
+        TuneKernel::ReverseLoop => {
+            let opts =
+                ReverseLoopOpts { tile: DEFAULT_MICRO, zero_skip: false };
+            deconv_reverse_loop(&x, &w, &b, g.s, g.p, opts).0.data().to_vec()
+        }
+        TuneKernel::Tdc => deconv_tdc(&x, &w, &b, g.s, g.p).data().to_vec(),
+    };
+    let mut best: Option<(BlockSchedule, f64)> = None;
+    for &sched in cands {
+        let run = || -> TensorT<T> {
+            match kernel {
+                TuneKernel::Standard => deconv_standard_blocked(
+                    &x,
+                    &w,
+                    &b,
+                    g.s,
+                    g.p,
+                    Some(sched),
+                    pool,
+                ),
+                TuneKernel::ReverseLoop => {
+                    deconv_reverse_loop_blocked(
+                        &x,
+                        &w,
+                        &b,
+                        g.s,
+                        g.p,
+                        false,
+                        Some(sched),
+                        pool,
+                    )
+                    .0
+                }
+                TuneKernel::Tdc => deconv_tdc_blocked(
+                    &x,
+                    &w,
+                    &b,
+                    g.s,
+                    g.p,
+                    Some(sched),
+                    pool,
+                ),
+            }
+        };
+        let got = run();
+        assert_eq!(
+            got.data(),
+            &want[..],
+            "tuner correctness guard: {} {sched:?}",
+            kernel.as_str()
+        );
+        let stats = Bencher::new("tune")
+            .iters(opts.trials)
+            .warmup(opts.warmup)
+            .run_trials(run);
+        let better = match best {
+            None => true,
+            Some((_, m)) => stats.median_s < m,
+        };
+        if better {
+            best = Some((sched, stats.median_s));
+        }
+    }
+    let (sched, median_s) = best.expect("non-empty candidate set");
+    table.insert(
+        shape_key(
+            kernel,
+            &elem_label::<T>(),
+            g.c_in,
+            g.c_out,
+            g.k,
+            g.s,
+            o_h,
+        ),
+        TuneEntry { sched, median_s },
+    );
+}
+
+/// Run the full tuner: every kernel × precision cell of the bench
+/// geometry, winners collected into a fresh table (the CLI persists it
+/// to [`TUNE_FILE`]).
+pub fn run_tune(opts: &TuneOpts) -> TuneTable {
+    let g = TuneGeo::new(opts.smoke);
+    let o_h = output_size(g.i, g.k, g.s, g.p);
+    let cands = candidates(o_h, g.s, opts.smoke);
+    let pool = WorkerPool::with_default_parallelism();
+    let mut table = TuneTable::default();
+    for kernel in TuneKernel::ALL {
+        sweep_cell::<f32>(kernel, &g, &cands, opts, &pool, &mut table);
+        sweep_cell::<Q8_8>(kernel, &g, &cands, opts, &pool, &mut table);
+        sweep_cell::<Q16_16>(kernel, &g, &cands, opts, &pool, &mut table);
+    }
+    table
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::deconv::SUPPORTED_LANES;
+
+    #[test]
+    fn elem_labels_cover_the_three_precisions() {
+        assert_eq!(elem_label::<f32>(), "f32");
+        assert_eq!(elem_label::<Q8_8>(), "q8.8");
+        assert_eq!(elem_label::<Q16_16>(), "q16.16");
+    }
+
+    #[test]
+    fn table_json_roundtrips_and_refuses_other_schemas() {
+        let mut t = TuneTable::default();
+        t.insert(
+            shape_key(TuneKernel::ReverseLoop, "f32", 8, 8, 4, 2, 14),
+            TuneEntry {
+                sched: BlockSchedule {
+                    micro: 12,
+                    macro_tiles: 4,
+                    lanes: 8,
+                },
+                median_s: 1.5e-3,
+            },
+        );
+        let json = t.to_json();
+        let back = TuneTable::from_json(&json).unwrap();
+        assert_eq!(back, t);
+        assert_eq!(back.to_json(), json, "stable re-serialization");
+        let v9 = json.replacen("\"version\": 1", "\"version\": 9", 1);
+        let err = TuneTable::from_json(&v9).unwrap_err().to_string();
+        assert!(err.contains("schema version 9"), "{err}");
+        assert!(TuneTable::from_json("{}").is_err());
+        let empty = TuneTable::default();
+        assert_eq!(TuneTable::from_json(&empty.to_json()).unwrap(), empty);
+        assert!(empty.is_empty());
+    }
+
+    #[test]
+    fn dispatch_prefers_the_tuned_entry_and_honours_the_pin() {
+        let mut t = TuneTable::default();
+        t.insert(
+            shape_key(TuneKernel::ReverseLoop, "f32", 8, 8, 4, 2, 14),
+            TuneEntry {
+                sched: BlockSchedule {
+                    micro: 6,
+                    macro_tiles: 8,
+                    lanes: 2,
+                },
+                median_s: 1e-3,
+            },
+        );
+        // hit: the tuned schedule verbatim
+        let s = schedule_from_table::<f32>(
+            &t,
+            TuneKernel::ReverseLoop,
+            8,
+            8,
+            4,
+            2,
+            14,
+            None,
+        );
+        assert_eq!(
+            s,
+            BlockSchedule { micro: 6, macro_tiles: 8, lanes: 2 }
+        );
+        // hit with a pinned micro: macro/lanes tuned, micro pinned
+        let s = schedule_from_table::<f32>(
+            &t,
+            TuneKernel::ReverseLoop,
+            8,
+            8,
+            4,
+            2,
+            14,
+            Some(12),
+        );
+        assert_eq!(
+            s,
+            BlockSchedule { micro: 12, macro_tiles: 8, lanes: 2 }
+        );
+        // miss (different precision): the static default
+        let s = schedule_from_table::<Q8_8>(
+            &t,
+            TuneKernel::ReverseLoop,
+            8,
+            8,
+            4,
+            2,
+            14,
+            None,
+        );
+        assert_eq!(s, BlockSchedule::default_for(DEFAULT_MICRO));
+        // miss with a pin: the default at the pinned micro
+        let s = schedule_from_table::<f32>(
+            &t,
+            TuneKernel::Standard,
+            8,
+            8,
+            4,
+            2,
+            14,
+            Some(5),
+        );
+        assert_eq!(s, BlockSchedule::default_for(5));
+    }
+
+    #[test]
+    fn smoke_sweep_tunes_every_cell_and_winners_are_legal() {
+        let opts = TuneOpts { smoke: true, trials: 1, warmup: 0 };
+        let table = run_tune(&opts);
+        assert_eq!(table.len(), 9, "3 kernels x 3 precisions");
+        let o_h = output_size(7, 4, 2, 1);
+        let key =
+            shape_key(TuneKernel::ReverseLoop, "q8.8", 8, 8, 4, 2, o_h);
+        let e = table.get(&key).expect("bench-geometry key present");
+        assert!(e.median_s > 0.0);
+        assert!(SUPPORTED_LANES.contains(&e.sched.lanes));
+        assert!(table.render().contains("reverse-loop/q8.8"));
+        // the persisted form round-trips and dispatch consults it
+        let back = TuneTable::from_json(&table.to_json()).unwrap();
+        let s = schedule_from_table::<Q8_8>(
+            &back,
+            TuneKernel::ReverseLoop,
+            8,
+            8,
+            4,
+            2,
+            o_h,
+            None,
+        );
+        assert_eq!(s, e.sched.normalized());
+    }
+}

@@ -19,6 +19,7 @@ pub use json::{escape_json, parse_json, Json};
 pub use pool::WorkerPool;
 pub use rng::Rng;
 pub use scratch::{
-    reset_scratch_stats, scratch_allocs, scratch_hits, with_scratch,
+    reset_scratch_stats, scratch_allocs, scratch_hits,
+    scratch_hwm_bytes, scratch_stats, with_scratch, ScratchStats,
 };
 pub use tempdir::TempDir;

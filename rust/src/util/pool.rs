@@ -134,10 +134,23 @@ impl WorkerPool {
         if n == 0 {
             return 1;
         }
-        let per_job = per_job_cost_ns.max(1.0);
+        // The cost probe can land on a degenerate job — an empty macro
+        // tile measures ~0 ns, and a pathological caller could even pass
+        // a non-finite duration.  Sanitize to the 1 ns floor so `ideal`
+        // is always a well-defined positive integer (a NaN or ±inf cost
+        // must never turn into a zero-length or oversized chunk).
+        let per_job = if per_job_cost_ns.is_finite() {
+            per_job_cost_ns.max(1.0)
+        } else {
+            1.0
+        };
         let ideal = (CLAIM_OVERHEAD_NS / (CLAIM_OVERHEAD_BUDGET * per_job))
             .ceil() as usize;
-        let balance_cap = (n / (workers.max(1) * 4)).max(1);
+        // `balance_cap ≤ max(n/4, 1) ≤ n` for every n ≥ 1, so the
+        // returned chunk is always in `1..=n`: dispatch never sees a
+        // zero-length chunk and never claims past the job set in one
+        // fetch, even when n is smaller than one macro-tile.
+        let balance_cap = (n / (workers.max(1) * 4)).max(1).min(n);
         ideal.clamp(1, balance_cap)
     }
 
@@ -328,6 +341,45 @@ mod tests {
         // degenerate inputs stay sane
         assert_eq!(WorkerPool::chunk_for_cost(0.0, 7, 4), 1);
         assert_eq!(WorkerPool::chunk_for_cost(1.0, 0, 4), 1);
+    }
+
+    #[test]
+    fn chunk_for_cost_survives_degenerate_probes() {
+        // an empty macro-tile measures ~0 ns; non-finite probes are the
+        // pathological caller — all must yield a chunk in 1..=n
+        for cost in [0.0, -1.0, f64::NAN, f64::INFINITY, f64::NEG_INFINITY]
+        {
+            for n in [1usize, 2, 3, 7, 100] {
+                for workers in [1usize, 4, 64] {
+                    let c = WorkerPool::chunk_for_cost(cost, n, workers);
+                    assert!(
+                        (1..=n).contains(&c),
+                        "cost={cost} n={n} w={workers} -> chunk={c}"
+                    );
+                }
+            }
+        }
+        // n smaller than one claim quantum: chunk must not exceed n
+        assert_eq!(WorkerPool::chunk_for_cost(1.0, 1, 1), 1);
+        assert_eq!(WorkerPool::chunk_for_cost(1.0, 2, 1), 1);
+        assert_eq!(WorkerPool::chunk_for_cost(f64::NAN, 1, 8), 1);
+    }
+
+    #[test]
+    fn adaptive_handles_job_sets_smaller_than_a_macro_tile() {
+        // blocked dispatch hands map_indexed_auto one job per macro
+        // tile; tiny outputs produce 1-3 jobs where the cost probe eats
+        // job 0 and the remainder must still all run exactly once
+        let pool = WorkerPool::new(8);
+        for n in 1..=6 {
+            let counter = AtomicU64::new(0);
+            let got = pool.map_indexed_auto(n, |i| {
+                counter.fetch_add(1, Ordering::Relaxed);
+                i
+            });
+            assert_eq!(counter.load(Ordering::Relaxed), n as u64);
+            assert_eq!(got, (0..n).collect::<Vec<_>>());
+        }
     }
 
     #[test]

@@ -31,6 +31,20 @@ thread_local! {
         RefCell::new(HashMap::new());
     static ALLOCS: Cell<u64> = const { Cell::new(0) };
     static HITS: Cell<u64> = const { Cell::new(0) };
+    static HWM_BYTES: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Snapshot of this thread's arena counters — see [`scratch_stats`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ScratchStats {
+    /// Fresh allocations (capacity misses) since the last reset.
+    pub allocs: u64,
+    /// Buffer reuses (capacity hits) since the last reset.
+    pub hits: u64,
+    /// Peak bytes borrowed by a single acquisition since the last
+    /// reset (`len · size_of::<A>()` — the high-water-mark that says
+    /// how much arena memory a kernel's tile geometry pins per worker).
+    pub hwm_bytes: u64,
 }
 
 /// Run `f` with a scratch slice of `len` elements, every element set to
@@ -46,6 +60,8 @@ where
     A: Copy + Send + 'static,
 {
     let key = TypeId::of::<Vec<A>>();
+    let borrowed = (len * std::mem::size_of::<A>()) as u64;
+    HWM_BYTES.with(|c| c.set(c.get().max(borrowed)));
     let mut buf: Vec<A> = ARENA
         .with(|a| a.borrow_mut().remove(&key))
         .and_then(|b| b.downcast::<Vec<A>>().ok())
@@ -74,11 +90,28 @@ pub fn scratch_hits() -> u64 {
     HITS.with(|c| c.get())
 }
 
-/// Reset this thread's arena counters (test isolation); the buffers
-/// themselves are kept so a reset never forces a re-allocation.
+/// Peak bytes borrowed by a single acquisition on this thread since
+/// the last [`reset_scratch_stats`].
+pub fn scratch_hwm_bytes() -> u64 {
+    HWM_BYTES.with(|c| c.get())
+}
+
+/// Full snapshot of this thread's arena counters.
+pub fn scratch_stats() -> ScratchStats {
+    ScratchStats {
+        allocs: scratch_allocs(),
+        hits: scratch_hits(),
+        hwm_bytes: scratch_hwm_bytes(),
+    }
+}
+
+/// Reset this thread's arena counters — including the borrowed-bytes
+/// high-water-mark — for test isolation; the buffers themselves are
+/// kept so a reset never forces a re-allocation.
 pub fn reset_scratch_stats() {
     ALLOCS.with(|c| c.set(0));
     HITS.with(|c| c.set(0));
+    HWM_BYTES.with(|c| c.set(0));
 }
 
 #[cfg(test)]
@@ -110,6 +143,24 @@ mod tests {
             assert!(s.iter().all(|v| *v == Probe(3)));
         });
         assert_eq!(scratch_allocs(), a0 + 2, "steady state: no allocs");
+    }
+
+    #[test]
+    fn hwm_tracks_the_peak_borrow_and_resets() {
+        #[derive(Clone, Copy)]
+        struct HwmProbe([u8; 8]);
+        reset_scratch_stats();
+        with_scratch(16, HwmProbe([0; 8]), |_| {});
+        assert_eq!(scratch_hwm_bytes(), 128, "16 × 8-byte elements");
+        with_scratch(4, HwmProbe([0; 8]), |_| {});
+        assert_eq!(scratch_hwm_bytes(), 128, "smaller borrow keeps peak");
+        with_scratch(32, HwmProbe([0; 8]), |_| {});
+        assert_eq!(scratch_hwm_bytes(), 256, "larger borrow raises peak");
+        let stats = scratch_stats();
+        assert_eq!(stats.hwm_bytes, 256);
+        assert_eq!(stats.allocs + stats.hits, 3);
+        reset_scratch_stats();
+        assert_eq!(scratch_hwm_bytes(), 0, "reset clears the peak");
     }
 
     #[test]

@@ -20,10 +20,14 @@ use edgedcnn::config::{BackendCfg, DeviceKind};
 use edgedcnn::coordinator::{
     BatcherConfig, Coordinator, CoordinatorConfig, InferenceResponse,
 };
-use edgedcnn::deconv::{deconv_reverse_loop, ReverseLoopOpts};
+use edgedcnn::deconv::{
+    deconv_reverse_loop, deconv_reverse_loop_blocked, BlockSchedule,
+    ReverseLoopOpts,
+};
 use edgedcnn::tensor::Tensor;
 use edgedcnn::util::{
-    reset_scratch_stats, scratch_allocs, scratch_hits, TempDir,
+    reset_scratch_stats, scratch_allocs, scratch_hits, scratch_hwm_bytes,
+    TempDir, WorkerPool,
 };
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::cell::Cell;
@@ -100,6 +104,48 @@ fn kernel_steady_state_allocates_a_small_constant_off_the_arena() {
     // and the warm pass produced the same numerics (sanity)
     let (y1, _) = deconv_reverse_loop(&x, &w, &b, 2, 1, opts);
     assert_eq!(y0.data(), y1.data());
+}
+
+#[test]
+fn blocked_dispatch_does_not_grow_the_scratch_high_water_mark() {
+    let x = Tensor::from_fn(vec![2, 4, 7, 7], |i| (i as f32 * 0.29).sin());
+    let w = Tensor::from_fn(vec![4, 6, 4, 4], |i| (i as f32 * 0.13).cos());
+    let b = vec![0.02f32; 6];
+    let opts = ReverseLoopOpts { tile: 8, zero_skip: false };
+    // plain serial kernel at tile 8: the baseline arena footprint
+    reset_scratch_stats();
+    let (want, want_stats) = deconv_reverse_loop(&x, &w, &b, 2, 1, opts);
+    let plain_hwm = scratch_hwm_bytes();
+    assert!(plain_hwm > 0, "the tile accumulator must go through the arena");
+    // blocked dispatch at micro == tile on a serial pool (inline, so
+    // the arena observed is this thread's): the accumulator block size
+    // depends only on the micro-tile, so macro grouping and lane
+    // blocking must leave the high-water mark untouched
+    let pool = WorkerPool::new(1);
+    for macro_tiles in [1usize, 2, 8] {
+        for lanes in [1usize, 4, 8] {
+            reset_scratch_stats();
+            let sched = BlockSchedule { micro: 8, macro_tiles, lanes };
+            let (got, got_stats) = deconv_reverse_loop_blocked(
+                &x,
+                &w,
+                &b,
+                2,
+                1,
+                false,
+                Some(sched),
+                &pool,
+            );
+            let blocked_hwm = scratch_hwm_bytes();
+            assert_eq!(got.data(), want.data(), "macro {macro_tiles} lanes {lanes}");
+            assert_eq!(got_stats, want_stats, "macro {macro_tiles} lanes {lanes}");
+            assert!(
+                blocked_hwm <= plain_hwm,
+                "macro {macro_tiles} lanes {lanes}: blocked HWM {blocked_hwm} \
+                 grew past the plain kernel's {plain_hwm}"
+            );
+        }
+    }
 }
 
 fn start_single_lane(dir: &TempDir, max_wait_ms: u64) -> Coordinator {

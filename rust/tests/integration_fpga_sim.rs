@@ -3,11 +3,17 @@
 //! speed-ups, pipelining benefits), and Table I legality.
 
 use edgedcnn::config::{celeba, mnist, network_by_name, PYNQ_Z2};
+use edgedcnn::deconv::{
+    deconv_reverse_loop_blocked, deconv_reverse_loop_ref, BlockSchedule,
+    ReverseLoopOpts,
+};
 use edgedcnn::fpga::{
     estimate_resources, measured_run, measurement_rng, simulate_layer,
-    simulate_network, SimOpts,
+    simulate_network, CuModel, CuWorkload, SimOpts,
 };
 use edgedcnn::stats::Summary;
+use edgedcnn::tensor::Tensor;
+use edgedcnn::util::WorkerPool;
 
 fn dense_opts(net: &edgedcnn::config::NetworkCfg) -> Vec<SimOpts> {
     net.layers.iter().map(|_| SimOpts::dense(net.tile)).collect()
@@ -130,6 +136,64 @@ fn table1_designs_fit_and_scale() {
         // near the -7020 limit)
         let u2 = estimate_resources(&net, net.tile, PYNQ_Z2.n_cu * 2);
         assert!(!u2.fits(&PYNQ_Z2));
+    }
+}
+
+#[test]
+fn cpu_blocking_and_cu_cycle_model_share_one_schedule_struct() {
+    // the unified-geometry contract: the BlockSchedule the CPU kernel
+    // executes is the same struct the CU cycle model consumes, so a
+    // tuned software schedule *is* a hardware design point
+    let (c_in, c_out, k, s, p, i_h) = (4usize, 3usize, 4usize, 2, 1, 7);
+    let pool = WorkerPool::new(2);
+    let x = Tensor::from_fn(vec![1, c_in, i_h, i_h], |i| (i as f32 * 0.31).sin());
+    let w = Tensor::from_fn(vec![c_in, c_out, k, k], |i| (i as f32 * 0.23).cos());
+    let b = vec![0.1f32; c_out];
+    for sched in [
+        BlockSchedule { micro: 6, macro_tiles: 2, lanes: 4 },
+        BlockSchedule { micro: 12, macro_tiles: 4, lanes: 8 },
+    ] {
+        // software side: the blocked kernel executes `sched` and stays
+        // bit-identical to the frozen scalar reference
+        let opts = ReverseLoopOpts { tile: sched.micro, zero_skip: false };
+        let (want, want_stats) = deconv_reverse_loop_ref(&x, &w, &b, s, p, opts);
+        let (got, got_stats) = deconv_reverse_loop_blocked(
+            &x, &w, &b, s, p, false, Some(sched), &pool,
+        );
+        assert_eq!(got.data(), want.data());
+        assert_eq!(got_stats, want_stats);
+
+        // hardware side: the SAME struct parameterizes the CU workload,
+        // and the model's cycle count is exactly the Algorithm 1 cost
+        // of that geometry
+        let wl = CuWorkload::from_block_schedule(&sched, c_in, k, s);
+        assert_eq!(wl.tile_elems, sched.micro * sched.micro);
+        assert_eq!(wl.macs_per_tap, sched.micro.div_ceil(s).pow(2));
+        assert_eq!(wl.taps, k * k);
+        let cu = CuModel {
+            lanes: sched.lanes,
+            workload_overhead: 12,
+            per_channel_overhead: 4,
+        };
+        let lanes = sched.lanes as u64;
+        let expect = 12
+            + (wl.tile_elems as u64).div_ceil(lanes)
+            + c_in as u64
+                * (4 + (k * k) as u64
+                    * (wl.macs_per_tap as u64).div_ceil(lanes));
+        assert_eq!(
+            cu.dense_cycles(&wl),
+            expect,
+            "micro {} lanes {}: cycle model diverged from the shared \
+             schedule geometry",
+            sched.micro,
+            sched.lanes
+        );
+        // per-workload MACs come from the same ⌈T/S⌉² the CPU tiles use
+        assert_eq!(
+            cu.dense_macs(&wl),
+            (c_in * k * k) as u64 * sched.micro.div_ceil(s).pow(2) as u64
+        );
     }
 }
 

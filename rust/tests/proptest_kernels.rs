@@ -11,12 +11,14 @@
 //! untouched too.
 
 use edgedcnn::deconv::{
-    deconv_reverse_loop, deconv_reverse_loop_ref, deconv_standard,
-    deconv_standard_ref, deconv_tdc, deconv_tdc_ref, ReverseLoopOpts,
+    deconv_reverse_loop, deconv_reverse_loop_blocked, deconv_reverse_loop_ref,
+    deconv_standard, deconv_standard_blocked, deconv_standard_ref, deconv_tdc,
+    deconv_tdc_blocked, deconv_tdc_ref, BlockSchedule, ReverseLoopOpts,
+    SUPPORTED_LANES,
 };
 use edgedcnn::quant::{Element, Q16_16, Q8_8};
 use edgedcnn::tensor::TensorT;
-use edgedcnn::util::Rng;
+use edgedcnn::util::{Rng, WorkerPool};
 
 const CASES: usize = 120;
 
@@ -83,6 +85,76 @@ fn check_case<T: Element>(rng: &mut Rng, case: usize, label: &str) {
     assert!(got_tdc.data() == want_tdc.data(), "tdc data, {ctx}");
 }
 
+/// One random case at one element type for the cache-blocked entry
+/// points: a random [`BlockSchedule`] (micro × macro × lanes) and a
+/// random pool width must leave all three blocked kernels bit-equal to
+/// the frozen scalar references — tensors *and*, for the reverse loop,
+/// its `OpStats` (the blocked dispatch pins `tile == micro`, so the
+/// stats geometry is part of the contract).
+fn check_blocked_case<T: Element>(rng: &mut Rng, case: usize, label: &str) {
+    let (n, c_in, c_out, k, s, p, i_h) = random_geometry(rng);
+    let sched = BlockSchedule {
+        micro: rng.range_usize(1, 13),
+        macro_tiles: rng.range_usize(1, 9),
+        lanes: SUPPORTED_LANES[rng.range_usize(0, SUPPORTED_LANES.len())],
+    };
+    let workers = rng.range_usize(1, 5);
+    let pool = WorkerPool::new(workers);
+    let zero_skip = rng.gen_bool(0.5);
+    let x = TensorT::<T>::from_fn(vec![n, c_in, i_h, i_h], |_| {
+        T::from_f32(rng.range_f32(-1.0, 1.0))
+    });
+    let w = TensorT::<T>::from_fn(vec![c_in, c_out, k, k], |_| {
+        if rng.gen_bool(1.0 / 3.0) {
+            T::ZERO
+        } else {
+            T::from_f32(rng.range_f32(-1.0, 1.0))
+        }
+    });
+    let b: Vec<T> = (0..c_out)
+        .map(|_| T::from_f32(rng.range_f32(-0.5, 0.5)))
+        .collect();
+    let ctx = format!(
+        "{label} blocked case {case}: n {n} c_in {c_in} c_out {c_out} k {k} \
+         s {s} p {p} i_h {i_h} micro {} macro {} lanes {} workers {workers} \
+         zero_skip {zero_skip}",
+        sched.micro, sched.macro_tiles, sched.lanes
+    );
+
+    let want = deconv_standard_ref(&x, &w, &b, s, p);
+    let got = deconv_standard_blocked(&x, &w, &b, s, p, Some(sched), &pool);
+    assert_eq!(got.shape(), want.shape(), "blocked standard shape, {ctx}");
+    assert!(got.data() == want.data(), "blocked standard data, {ctx}");
+
+    let opts = ReverseLoopOpts { tile: sched.micro, zero_skip };
+    let (want_rl, want_stats) = deconv_reverse_loop_ref(&x, &w, &b, s, p, opts);
+    let (got_rl, got_stats) = deconv_reverse_loop_blocked(
+        &x,
+        &w,
+        &b,
+        s,
+        p,
+        zero_skip,
+        Some(sched),
+        &pool,
+    );
+    assert_eq!(
+        got_rl.shape(),
+        want_rl.shape(),
+        "blocked reverse-loop shape, {ctx}"
+    );
+    assert!(
+        got_rl.data() == want_rl.data(),
+        "blocked reverse-loop data, {ctx}"
+    );
+    assert_eq!(got_stats, want_stats, "blocked reverse-loop OpStats, {ctx}");
+
+    let want_tdc = deconv_tdc_ref(&x, &w, &b, s, p);
+    let got_tdc = deconv_tdc_blocked(&x, &w, &b, s, p, Some(sched), &pool);
+    assert_eq!(got_tdc.shape(), want_tdc.shape(), "blocked tdc shape, {ctx}");
+    assert!(got_tdc.data() == want_tdc.data(), "blocked tdc data, {ctx}");
+}
+
 #[test]
 fn prop_f32_kernels_bit_identical_to_frozen_references() {
     let mut rng = Rng::seed_from_u64(0xF32_BEEF);
@@ -104,5 +176,29 @@ fn prop_q16_16_kernels_bit_identical_to_frozen_references() {
     let mut rng = Rng::seed_from_u64(0x1616_BEEF);
     for case in 0..CASES {
         check_case::<Q16_16>(&mut rng, case, "q16.16");
+    }
+}
+
+#[test]
+fn prop_f32_blocked_kernels_bit_identical_to_frozen_references() {
+    let mut rng = Rng::seed_from_u64(0xB10C_F32);
+    for case in 0..CASES {
+        check_blocked_case::<f32>(&mut rng, case, "f32");
+    }
+}
+
+#[test]
+fn prop_q8_8_blocked_kernels_bit_identical_to_frozen_references() {
+    let mut rng = Rng::seed_from_u64(0xB10C_0808);
+    for case in 0..CASES {
+        check_blocked_case::<Q8_8>(&mut rng, case, "q8.8");
+    }
+}
+
+#[test]
+fn prop_q16_16_blocked_kernels_bit_identical_to_frozen_references() {
+    let mut rng = Rng::seed_from_u64(0xB10C_1616);
+    for case in 0..CASES {
+        check_blocked_case::<Q16_16>(&mut rng, case, "q16.16");
     }
 }

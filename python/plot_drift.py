@@ -1,0 +1,123 @@
+"""Plot a loadtest latency-drift CSV (``edgedcnn loadtest --drift-csv``).
+
+The CSV is the final trial's windowed latency histogram shards, one row
+per elapsed-time window::
+
+    window_start_s,count,p50_s,p99_s
+    0,128,0.0021,0.0094
+    1,131,0.0022,0.0101
+    ...
+
+This script draws p50 and p99 per window on one axis (milliseconds) —
+the picture that makes latency drift over a run visible at a glance:
+flat lines mean a stationary system, a rising p99 with a flat p50 means
+tail degradation (queue buildup, thermal throttling in the GPU model).
+
+Usage::
+
+    edgedcnn loadtest --smoke --drift-csv drift.csv
+    python python/plot_drift.py drift.csv --out drift.png
+
+Requires matplotlib only at plot time; ``--summary`` prints a text table
+from the same CSV with no third-party imports at all.
+"""
+
+from __future__ import annotations
+
+import argparse
+import csv
+import sys
+
+
+def read_drift(path: str) -> list[dict[str, float]]:
+    """Parse the drift CSV into one dict per window, skipping rows with
+    no samples (their quantiles are meaningless)."""
+    rows: list[dict[str, float]] = []
+    with open(path, newline="") as f:
+        reader = csv.DictReader(f)
+        required = {"window_start_s", "count", "p50_s", "p99_s"}
+        missing = required - set(reader.fieldnames or [])
+        if missing:
+            raise SystemExit(
+                f"{path}: not a drift CSV (missing columns: "
+                f"{', '.join(sorted(missing))})"
+            )
+        for row in reader:
+            count = int(float(row["count"]))
+            if count == 0:
+                continue
+            rows.append(
+                {
+                    "window_start_s": float(row["window_start_s"]),
+                    "count": count,
+                    "p50_s": float(row["p50_s"]),
+                    "p99_s": float(row["p99_s"]),
+                }
+            )
+    if not rows:
+        raise SystemExit(f"{path}: no windows with samples")
+    return rows
+
+
+def print_summary(rows: list[dict[str, float]]) -> None:
+    print(f"{'window_s':>9} {'count':>7} {'p50_ms':>9} {'p99_ms':>9}")
+    for r in rows:
+        print(
+            f"{r['window_start_s']:>9.1f} {r['count']:>7d} "
+            f"{r['p50_s'] * 1e3:>9.3f} {r['p99_s'] * 1e3:>9.3f}"
+        )
+    worst = max(rows, key=lambda r: r["p99_s"])
+    print(
+        f"worst window: t={worst['window_start_s']:.1f}s "
+        f"p99={worst['p99_s'] * 1e3:.3f}ms over {worst['count']} samples"
+    )
+
+
+def plot(rows: list[dict[str, float]], out: str) -> None:
+    try:
+        import matplotlib
+
+        matplotlib.use("Agg")  # headless CI
+        import matplotlib.pyplot as plt
+    except ImportError:
+        raise SystemExit(
+            "matplotlib is not installed; use --summary for the text "
+            "table, or install matplotlib to render the PNG"
+        )
+    t = [r["window_start_s"] for r in rows]
+    p50 = [r["p50_s"] * 1e3 for r in rows]
+    p99 = [r["p99_s"] * 1e3 for r in rows]
+    fig, ax = plt.subplots(figsize=(8, 4))
+    ax.plot(t, p99, marker="o", markersize=3, label="p99", color="tab:red")
+    ax.plot(t, p50, marker="o", markersize=3, label="p50", color="tab:blue")
+    ax.set_xlabel("elapsed time (s)")
+    ax.set_ylabel("request latency (ms)")
+    ax.set_title("latency drift per window (edgedcnn loadtest)")
+    ax.legend()
+    ax.grid(True, alpha=0.3)
+    fig.tight_layout()
+    fig.savefig(out, dpi=120)
+    print(f"wrote {out} ({len(rows)} windows)")
+
+
+def main(argv: list[str] | None = None) -> None:
+    parser = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    parser.add_argument("csv", help="drift CSV from loadtest --drift-csv")
+    parser.add_argument(
+        "--out", default="drift.png", help="output PNG path (default: %(default)s)"
+    )
+    parser.add_argument(
+        "--summary",
+        action="store_true",
+        help="print a text table instead of rendering a PNG",
+    )
+    args = parser.parse_args(argv)
+    rows = read_drift(args.csv)
+    if args.summary:
+        print_summary(rows)
+    else:
+        plot(rows, args.out)
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

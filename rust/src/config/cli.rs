@@ -103,6 +103,26 @@ impl TrafficCfg {
     }
 }
 
+/// Observability sinks shared by the serving subcommands:
+/// `--trace-out FILE` (Chrome trace-event JSON of the sampled request
+/// lifecycles — load it in Perfetto / `chrome://tracing`) on `serve`,
+/// `loadtest` and `fleet`; `--prom-out FILE` (Prometheus text
+/// exposition of the serving report) on `serve`.
+#[derive(Debug, Clone, Default)]
+pub struct ObsCfg {
+    pub trace_out: Option<PathBuf>,
+    pub prom_out: Option<PathBuf>,
+}
+
+impl ObsCfg {
+    pub fn from_flags(flags: &Flags) -> Result<ObsCfg> {
+        Ok(ObsCfg {
+            trace_out: flags.get_opt("trace-out")?,
+            prom_out: flags.get_opt("prom-out")?,
+        })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -161,5 +181,20 @@ mod tests {
         assert!(
             TrafficCfg::from_flags(&flags(&["--deadline-ms", "0"])).is_err()
         );
+    }
+
+    #[test]
+    fn obs_cfg_parses_sink_paths() {
+        let o = ObsCfg::from_flags(&flags(&[
+            "--trace-out",
+            "trace.json",
+            "--prom-out",
+            "metrics.prom",
+        ]))
+        .unwrap();
+        assert_eq!(o.trace_out, Some(PathBuf::from("trace.json")));
+        assert_eq!(o.prom_out, Some(PathBuf::from("metrics.prom")));
+        let d = ObsCfg::from_flags(&flags(&[])).unwrap();
+        assert!(d.trace_out.is_none() && d.prom_out.is_none());
     }
 }

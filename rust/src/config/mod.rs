@@ -12,6 +12,6 @@ mod network;
 
 pub use crate::quant::{Precision, QFormat};
 pub use backend::{BackendCfg, DeviceKind};
-pub use cli::{PoolCfg, TrafficCfg};
+pub use cli::{ObsCfg, PoolCfg, TrafficCfg};
 pub use hw::{FpgaBoard, GpuBoard, PYNQ_Z2, JETSON_TX1};
 pub use network::{celeba, mnist, network_by_name, DeconvLayerCfg, NetworkCfg};

@@ -13,6 +13,7 @@
 
 use super::request::InferenceRequest;
 use crate::backend::CostModel;
+use crate::telemetry::RunClock;
 use std::collections::HashMap;
 use std::time::{Duration, Instant};
 
@@ -69,6 +70,9 @@ pub struct DynamicBatcher {
     /// slack computation.
     costs: HashMap<String, CostModel>,
     config: BatcherConfig,
+    /// Clock the cut stamp (queue-wait → batch-form boundary) is taken
+    /// against; injected so fleet sites stamp in their own skewed time.
+    clock: RunClock,
 }
 
 /// EDF ordering key of one queued request.
@@ -78,10 +82,17 @@ fn edf_key(r: &InferenceRequest, max_wait: Duration) -> (Instant, u8, u64) {
 
 impl DynamicBatcher {
     pub fn new(config: BatcherConfig) -> Self {
+        Self::with_clock(config, RunClock::default())
+    }
+
+    /// A batcher stamping cut times against an explicit run clock (the
+    /// coordinator passes its site clock so lifecycle spans cohere).
+    pub fn with_clock(config: BatcherConfig, clock: RunClock) -> Self {
         DynamicBatcher {
             queues: HashMap::new(),
             costs: HashMap::new(),
             config,
+            clock,
         }
     }
 
@@ -271,12 +282,16 @@ impl DynamicBatcher {
 
         let mut slots: Vec<Option<InferenceRequest>> =
             q.drain(..).map(Some).collect();
-        let requests: Vec<InferenceRequest> = take
+        let mut requests: Vec<InferenceRequest> = take
             .iter()
             .map(|&i| slots[i].take().expect("indices are unique"))
             .collect();
         // the untaken remainder keeps its EDF order
         q.extend(slots.into_iter().flatten());
+        // lifecycle stamp: the cut ends these requests' EDF queue wait
+        for r in &mut requests {
+            r.ctx.stamps.on_cut(&self.clock, now);
+        }
 
         let deadline = requests.iter().filter_map(|r| r.ctx.deadline).min();
         Batch {
@@ -309,6 +324,7 @@ mod tests {
             deadline: Some(arrival + Duration::from_millis(deadline_ms)),
             class: PriorityClass::Normal,
             seed: id,
+            stamps: Default::default(),
         };
         InferenceRequest::with_ctx(id, net, n, ctx)
     }
@@ -519,6 +535,7 @@ mod tests {
                 deadline: Some(now + Duration::from_millis(50)),
                 class,
                 seed: id,
+                stamps: Default::default(),
             };
             InferenceRequest::with_ctx(id, "mnist", 1, ctx)
         };

@@ -22,6 +22,7 @@ use crate::config::{
     network_by_name, DeviceKind, NetworkCfg, Precision, JETSON_TX1,
 };
 use crate::gpu::expected_gpu_network_time_at;
+use crate::telemetry::{RunClock, SpanRecord};
 use crate::tensor::{ImageBlock, Tensor};
 use crate::util::{Rng, WorkerPool};
 use anyhow::{Context, Result};
@@ -71,6 +72,9 @@ pub(crate) struct LaneShared {
     /// this lane at startup and re-probed on DVFS throttle transitions
     /// (see [`refresh_costs`]).
     pub costs: Arc<Mutex<HashMap<String, CostModel>>>,
+    /// The coordinator's run clock — the lane stamps execute start/end
+    /// and reply boundaries against it (see `telemetry::trace`).
+    pub clock: RunClock,
 }
 
 /// Re-probe every loaded network's cost model into the shared map —
@@ -243,7 +247,7 @@ fn execute_batch(
     backend: &mut dyn Backend,
     metas: &HashMap<String, NetMeta>,
     shared: &LaneShared,
-    batch: Batch,
+    mut batch: Batch,
 ) -> Result<(Vec<InferenceResponse>, bool)> {
     let meta = metas.get(&batch.network).ok_or_else(|| {
         anyhow::anyhow!("network {:?} not loaded", batch.network)
@@ -255,6 +259,9 @@ fn execute_batch(
     // the simulator stand-in and is deliberately excluded from the
     // deadline verdict (see DESIGN.md §Deadline scheduling)
     let started = Instant::now();
+    for req in &mut batch.requests {
+        req.ctx.stamps.on_exec_start(&shared.clock, started);
+    }
 
     // deterministic latents: one RNG per request, in order — identical
     // on every backend, which is what makes routing invisible to
@@ -270,6 +277,10 @@ fn execute_batch(
     let z = Tensor::new(vec![batch.n_images, meta.cfg.z_dim], latents)?;
 
     let outcome = backend.execute(&batch.network, &z)?;
+    let exec_ended = Instant::now();
+    for req in &mut batch.requests {
+        req.ctx.stamps.on_exec_end(&shared.clock, exec_ended);
+    }
     let seq = shared.exec_seq.fetch_add(1, Ordering::AcqRel);
     // GPU edge annotation at the *actual* batch size (launch overhead
     // amortizes with batching), boost clock, pro-rated per request
@@ -348,9 +359,11 @@ fn execute_batch(
     let n_batch = batch.n_images as f64;
     let mut responses = Vec::with_capacity(batch.requests.len());
     let mut row = 0usize;
+    let reply_at = Instant::now();
     for (req, (charged_s, deadline_met)) in
-        batch.requests.iter().zip(verdicts)
+        batch.requests.iter_mut().zip(verdicts)
     {
+        req.ctx.stamps.on_reply(&shared.clock, reply_at);
         let n = req.n_images;
         let images = batch_images.slice_images(row, n);
         row += n;
@@ -368,9 +381,35 @@ fn execute_batch(
             class: req.ctx.class,
             charged_s,
             deadline_met,
+            stamps: req.ctx.stamps,
             fpga_time_s: meta.fpga_s * n as f64,
             gpu_time_s: gpu_batch_s * share,
         });
+    }
+
+    // flight recorder drain: the lifecycle is complete now — fold the
+    // stage spans into the per-(backend, class) breakdown and push the
+    // deterministically head-sampled span sets into this lane's ring
+    {
+        let mut m = shared.metrics.lock().unwrap();
+        for req in &batch.requests {
+            let Some(spans) = req.ctx.stamps.stage_spans() else {
+                continue;
+            };
+            m.record_stages(backend.name(), req.ctx.class, &spans);
+            if req.ctx.stamps.sampled {
+                m.record_span(
+                    backend.name(),
+                    SpanRecord {
+                        id: req.id,
+                        seed: req.ctx.seed,
+                        class: req.ctx.class,
+                        n_images: req.n_images,
+                        stamps: req.ctx.stamps,
+                    },
+                );
+            }
+        }
     }
     Ok((responses, throttled))
 }

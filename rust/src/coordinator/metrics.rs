@@ -13,7 +13,10 @@
 
 use super::request::PriorityClass;
 use crate::stats::Welford;
-use crate::telemetry::{weighted_cv, LogHistogram, WindowedHistogram};
+use crate::telemetry::{
+    cv_of, weighted_cv, LogHistogram, SpanRecord, SpanRecorder, Stage,
+    WindowedHistogram, STAGE_COUNT,
+};
 use crate::util::{escape_json, parse_json, Json};
 use anyhow::Result;
 use std::collections::BTreeMap;
@@ -71,6 +74,25 @@ impl Default for BackendStats {
     }
 }
 
+/// Per-(backend, class) lifecycle-stage accumulators: one latency
+/// histogram shard plus one Welford series per stage — the histogram
+/// gives mergeable quantiles, the Welford gives the per-stage CV that
+/// separates device-execute jitter from queue-wait jitter.
+#[derive(Debug, Clone)]
+struct StageStats {
+    hist: [LogHistogram; STAGE_COUNT],
+    spread: [Welford; STAGE_COUNT],
+}
+
+impl Default for StageStats {
+    fn default() -> Self {
+        StageStats {
+            hist: std::array::from_fn(|_| LogHistogram::latency_default()),
+            spread: [Welford::new(); STAGE_COUNT],
+        }
+    }
+}
+
 /// Per-lane scheduler telemetry (dispatch-time queue depths).
 #[derive(Debug, Default, Clone)]
 struct LaneQueueStats {
@@ -116,6 +138,16 @@ pub struct MetricsRegistry {
     scratch_hwm_bytes: u64,
     backends: BTreeMap<String, BackendStats>,
     lanes: BTreeMap<String, LaneQueueStats>,
+    /// Lifecycle-stage accumulators, backend → class → 7 stage cells
+    /// (fed by the executor from completed [`StageStamps`] span sets).
+    ///
+    /// [`StageStamps`]: crate::telemetry::StageStamps
+    stages: BTreeMap<String, BTreeMap<PriorityClass, StageStats>>,
+    /// Per-lane flight-recorder rings of head-sampled span sets.  Not
+    /// part of the serving-report JSON (the report carries the folded
+    /// `stage_breakdown` instead); drained by the `--trace-out`
+    /// exporters via [`Self::span_lanes`].
+    spans: BTreeMap<String, SpanRecorder>,
 }
 
 impl Default for MetricsRegistry {
@@ -139,6 +171,8 @@ impl Default for MetricsRegistry {
             scratch_hwm_bytes: 0,
             backends: BTreeMap::new(),
             lanes: BTreeMap::new(),
+            stages: BTreeMap::new(),
+            spans: BTreeMap::new(),
         }
     }
 }
@@ -279,6 +313,47 @@ impl MetricsRegistry {
         self.lanes.entry(lane.to_string()).or_default().cost_refreshes += 1;
     }
 
+    /// Fold one completed request's lifecycle stage spans (indexed by
+    /// [`Stage::index`]) into the per-(backend, class) breakdown.  The
+    /// steady-state path allocates nothing: the key `String`s are
+    /// created only on a cell's first observation.
+    pub fn record_stages(
+        &mut self,
+        backend: &str,
+        class: PriorityClass,
+        spans: &[f64; STAGE_COUNT],
+    ) {
+        if !self.stages.contains_key(backend) {
+            self.stages.insert(backend.to_string(), BTreeMap::new());
+        }
+        let cell = self
+            .stages
+            .get_mut(backend)
+            .expect("just inserted")
+            .entry(class)
+            .or_default();
+        for (i, &s) in spans.iter().enumerate() {
+            cell.hist[i].record(s);
+            cell.spread[i].push(s);
+        }
+    }
+
+    /// Push one head-sampled span set into `lane`'s flight-recorder
+    /// ring (bounded, overwrite-oldest; the ring buffer is allocated
+    /// lazily on the lane's first sampled request, then reused).
+    pub fn record_span(&mut self, lane: &str, rec: SpanRecord) {
+        if !self.spans.contains_key(lane) {
+            self.spans.insert(lane.to_string(), SpanRecorder::new());
+        }
+        self.spans.get_mut(lane).expect("just inserted").push(rec);
+    }
+
+    /// The per-lane span rings, lane-name order (what the `--trace-out`
+    /// exporters hand to [`crate::telemetry::chrome_trace`]).
+    pub fn span_lanes(&self) -> impl Iterator<Item = (&str, &SpanRecorder)> {
+        self.spans.iter().map(|(name, ring)| (name.as_str(), ring))
+    }
+
     pub fn set_wall(&mut self, wall_s: f64) {
         self.wall_s = wall_s;
     }
@@ -336,6 +411,19 @@ impl MetricsRegistry {
             mine.max_depth = mine.max_depth.max(l.max_depth);
             mine.cost_refreshes += l.cost_refreshes;
         }
+        for (backend, classes) in &other.stages {
+            let mine = self.stages.entry(backend.clone()).or_default();
+            for (class, st) in classes {
+                let cell = mine.entry(*class).or_default();
+                for i in 0..STAGE_COUNT {
+                    cell.hist[i].merge(&st.hist[i]);
+                    cell.spread[i].merge(&st.spread[i]);
+                }
+            }
+        }
+        for (name, ring) in &other.spans {
+            self.spans.entry(name.clone()).or_default().merge(ring);
+        }
     }
 
     /// Rename every backend/lane key to `{prefix}{name}` — how the
@@ -350,6 +438,14 @@ impl MetricsRegistry {
         self.lanes = std::mem::take(&mut self.lanes)
             .into_iter()
             .map(|(name, l)| (format!("{prefix}{name}"), l))
+            .collect();
+        self.stages = std::mem::take(&mut self.stages)
+            .into_iter()
+            .map(|(name, s)| (format!("{prefix}{name}"), s))
+            .collect();
+        self.spans = std::mem::take(&mut self.spans)
+            .into_iter()
+            .map(|(name, r)| (format!("{prefix}{name}"), r))
             .collect();
     }
 
@@ -414,6 +510,29 @@ impl MetricsRegistry {
                 cost_refreshes: l.cost_refreshes,
             })
             .collect();
+        let mut stage_breakdown = Vec::new();
+        for (backend, classes) in &self.stages {
+            for (class, st) in classes {
+                stage_breakdown.push(StageBreakdown {
+                    backend: backend.clone(),
+                    class: *class,
+                    count: st.hist[0].count(),
+                    stages: Stage::ALL
+                        .into_iter()
+                        .map(|stage| {
+                            let i = stage.index();
+                            StageRow {
+                                stage,
+                                mean_s: st.hist[i].mean(),
+                                p50_s: st.hist[i].quantile(50.0),
+                                p99_s: st.hist[i].quantile(99.0),
+                                cv: cv_of(&st.spread[i]),
+                            }
+                        })
+                        .collect(),
+                });
+            }
+        }
         ServingReport {
             requests: self.requests,
             images: self.images,
@@ -450,6 +569,7 @@ impl MetricsRegistry {
             mean_power_w: mean_power,
             gops_per_w: if mean_power > 0.0 { gops / mean_power } else { 0.0 },
             scratch_hwm_bytes: self.scratch_hwm_bytes,
+            stage_breakdown,
             per_backend,
             lanes,
         }
@@ -530,6 +650,43 @@ pub struct BackendReport {
     pub deadline: Vec<ClassAttainment>,
 }
 
+/// One lifecycle stage's latency summary within a
+/// [`StageBreakdown`] cell.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StageRow {
+    pub stage: Stage,
+    /// Exact mean stage latency (tracked sum), seconds.
+    pub mean_s: f64,
+    /// Bucketed quantiles (2% relative error), seconds.
+    pub p50_s: f64,
+    pub p99_s: f64,
+    /// Coefficient of variation of the stage latency — the
+    /// stage-attributed form of the paper's run-to-run stability
+    /// metric (device-execute CV vs queue-wait CV).
+    pub cv: f64,
+}
+
+/// Stage-attributed latency breakdown of one (backend, class) cell —
+/// the flight recorder's aggregate consumer.  Additive schema section:
+/// legacy reports parse with it empty.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StageBreakdown {
+    /// Lane name (fleet folds carry the site prefix, e.g. `s0/fpga0`).
+    pub backend: String,
+    pub class: PriorityClass,
+    /// Completed requests folded into this cell.
+    pub count: u64,
+    /// One row per lifecycle stage, in [`Stage::ALL`] order.
+    pub stages: Vec<StageRow>,
+}
+
+impl StageBreakdown {
+    /// This cell's row for `stage` (`None` only on a malformed report).
+    pub fn stage(&self, stage: Stage) -> Option<&StageRow> {
+        self.stages.iter().find(|r| r.stage == stage)
+    }
+}
+
 /// Scheduler-side telemetry for one lane.
 #[derive(Debug, Clone, PartialEq)]
 pub struct LaneQueueReport {
@@ -581,6 +738,10 @@ pub struct ServingReport {
     /// [`crate::util::scratch_hwm_bytes`].  Additive schema field:
     /// absent in pre-blocking v1 reports, defaults to 0 on read.
     pub scratch_hwm_bytes: u64,
+    /// Stage-attributed latency cells, sorted by (backend, class).
+    /// Additive schema field: absent in pre-trace v1 reports, parsed
+    /// as empty.
+    pub stage_breakdown: Vec<StageBreakdown>,
     /// Per-backend columns, sorted by lane name.
     pub per_backend: Vec<BackendReport>,
     /// Per-lane scheduler telemetry, sorted by lane name.
@@ -624,6 +785,33 @@ fn backend_from_json(v: &Json) -> Result<BackendReport> {
             .as_arr()?
             .iter()
             .map(attainment_from_json)
+            .collect::<Result<Vec<_>>>()?,
+    })
+}
+
+fn stage_row_from_json(v: &Json) -> Result<StageRow> {
+    let name = v.req("stage")?.as_str()?;
+    let stage = Stage::parse(name)
+        .ok_or_else(|| anyhow::anyhow!("unknown lifecycle stage {name:?}"))?;
+    Ok(StageRow {
+        stage,
+        mean_s: v.req("mean_s")?.as_f64()?,
+        p50_s: v.req("p50_s")?.as_f64()?,
+        p99_s: v.req("p99_s")?.as_f64()?,
+        cv: v.req("cv")?.as_f64()?,
+    })
+}
+
+fn stage_breakdown_from_json(v: &Json) -> Result<StageBreakdown> {
+    Ok(StageBreakdown {
+        backend: v.req("backend")?.as_str()?.to_string(),
+        class: v.req("class")?.as_str()?.parse()?,
+        count: v.req("count")?.as_u64()?,
+        stages: v
+            .req("stages")?
+            .as_arr()?
+            .iter()
+            .map(stage_row_from_json)
             .collect::<Result<Vec<_>>>()?,
     })
 }
@@ -706,6 +894,37 @@ impl ServingReport {
             })
             .collect::<Vec<_>>()
             .join(",\n");
+        let stage_breakdown = self
+            .stage_breakdown
+            .iter()
+            .map(|cell| {
+                let rows = cell
+                    .stages
+                    .iter()
+                    .map(|r| {
+                        format!(
+                            "{{\"stage\": \"{}\", \"mean_s\": {}, \
+                             \"p50_s\": {}, \"p99_s\": {}, \"cv\": {}}}",
+                            r.stage.as_str(),
+                            r.mean_s,
+                            r.p50_s,
+                            r.p99_s,
+                            r.cv,
+                        )
+                    })
+                    .collect::<Vec<_>>()
+                    .join(", ");
+                format!(
+                    "    {{\"backend\": \"{}\", \"class\": \"{}\", \
+                     \"count\": {}, \"stages\": [{}]}}",
+                    escape_json(&cell.backend),
+                    cell.class,
+                    cell.count,
+                    rows,
+                )
+            })
+            .collect::<Vec<_>>()
+            .join(",\n");
         let drift_windows = self
             .drift_windows
             .iter()
@@ -729,6 +948,7 @@ impl ServingReport {
              \"images_per_s\": {},\n  \
              \"gops\": {},\n  \"mean_batch\": {},\n  \"mean_power_w\": {},\n  \
              \"gops_per_w\": {},\n  \"scratch_hwm_bytes\": {},\n  \
+             \"stage_breakdown\": [\n{}\n  ],\n  \
              \"per_backend\": [\n{}\n  ],\n  \
              \"lanes\": [\n{}\n  ]\n}}\n",
             self.requests,
@@ -752,9 +972,143 @@ impl ServingReport {
             self.mean_power_w,
             self.gops_per_w,
             self.scratch_hwm_bytes,
+            stage_breakdown,
             per_backend,
             lanes,
         )
+    }
+
+    /// Prometheus text-exposition export (version 0.0.4): the serving
+    /// counters, latency quantile summaries, per-backend columns, and
+    /// the stage-attributed breakdown as labeled series.  Written by
+    /// `serve --prom-out FILE`; format-pinned by a golden unit test.
+    pub fn prometheus_text(&self) -> String {
+        let mut out = String::new();
+        let counter = |o: &mut String, name: &str, help: &str, v: String| {
+            o.push_str(&format!(
+                "# HELP {name} {help}\n# TYPE {name} counter\n{name} {v}\n"
+            ));
+        };
+        counter(
+            &mut out,
+            "edgedcnn_requests_total",
+            "Requests resolved by the coordinator.",
+            self.requests.to_string(),
+        );
+        counter(
+            &mut out,
+            "edgedcnn_images_total",
+            "Images served.",
+            self.images.to_string(),
+        );
+        counter(
+            &mut out,
+            "edgedcnn_rejected_total",
+            "Requests turned away by overload admission control.",
+            self.rejected.to_string(),
+        );
+        counter(
+            &mut out,
+            "edgedcnn_shed_total",
+            "Requests shed at intake (deadline infeasible).",
+            self.shed.to_string(),
+        );
+        counter(
+            &mut out,
+            "edgedcnn_energy_joules_total",
+            "Device energy integrated over the serving window.",
+            format!("{}", self.mean_power_w * self.wall_s),
+        );
+        out.push_str(
+            "# HELP edgedcnn_latency_seconds Request end-to-end latency.\n\
+             # TYPE edgedcnn_latency_seconds summary\n",
+        );
+        for (q, v) in [
+            ("0.5", self.latency.p50_s),
+            ("0.95", self.latency.p95_s),
+            ("0.99", self.latency.p99_s),
+            ("0.999", self.latency.p999_s),
+        ] {
+            out.push_str(&format!(
+                "edgedcnn_latency_seconds{{quantile=\"{q}\"}} {v}\n"
+            ));
+        }
+        out.push_str(&format!(
+            "edgedcnn_latency_seconds_count {}\n",
+            self.requests
+        ));
+        out.push_str(
+            "# HELP edgedcnn_backend_images_total Images served per backend lane.\n\
+             # TYPE edgedcnn_backend_images_total counter\n",
+        );
+        for b in &self.per_backend {
+            out.push_str(&format!(
+                "edgedcnn_backend_images_total{{backend=\"{}\"}} {}\n",
+                escape_json(&b.name),
+                b.images
+            ));
+        }
+        out.push_str(
+            "# HELP edgedcnn_backend_latency_seconds Request latency per backend lane.\n\
+             # TYPE edgedcnn_backend_latency_seconds summary\n",
+        );
+        for b in &self.per_backend {
+            for (q, v) in [("0.5", b.p50_s), ("0.99", b.p99_s)] {
+                out.push_str(&format!(
+                    "edgedcnn_backend_latency_seconds{{backend=\"{}\",\
+                     quantile=\"{q}\"}} {v}\n",
+                    escape_json(&b.name),
+                ));
+            }
+        }
+        out.push_str(
+            "# HELP edgedcnn_backend_latency_cv Per-image device latency \
+             coefficient of variation per backend lane.\n\
+             # TYPE edgedcnn_backend_latency_cv gauge\n",
+        );
+        for b in &self.per_backend {
+            out.push_str(&format!(
+                "edgedcnn_backend_latency_cv{{backend=\"{}\"}} {}\n",
+                escape_json(&b.name),
+                b.latency_cv
+            ));
+        }
+        out.push_str(
+            "# HELP edgedcnn_stage_latency_seconds Lifecycle stage latency \
+             per (backend, class, stage).\n\
+             # TYPE edgedcnn_stage_latency_seconds summary\n",
+        );
+        for cell in &self.stage_breakdown {
+            for r in &cell.stages {
+                for (q, v) in [("0.5", r.p50_s), ("0.99", r.p99_s)] {
+                    out.push_str(&format!(
+                        "edgedcnn_stage_latency_seconds{{backend=\"{}\",\
+                         class=\"{}\",stage=\"{}\",quantile=\"{q}\"}} {v}\n",
+                        escape_json(&cell.backend),
+                        cell.class,
+                        r.stage.as_str(),
+                    ));
+                }
+            }
+        }
+        out.push_str(
+            "# HELP edgedcnn_stage_cv Lifecycle stage latency coefficient \
+             of variation per (backend, class, stage).\n\
+             # TYPE edgedcnn_stage_cv gauge\n",
+        );
+        for cell in &self.stage_breakdown {
+            for r in &cell.stages {
+                out.push_str(&format!(
+                    "edgedcnn_stage_cv{{backend=\"{}\",class=\"{}\",\
+                     stage=\"{}\"}} {}\n",
+                    escape_json(&cell.backend),
+                    cell.class,
+                    r.stage.as_str(),
+                    r.cv
+                ));
+            }
+        }
+        out
     }
 
     /// CSV export of the windowed drift histogram shards — one row per
@@ -828,6 +1182,15 @@ impl ServingReport {
             scratch_hwm_bytes: match v.get("scratch_hwm_bytes") {
                 Some(x) => x.as_u64()?,
                 None => 0,
+            },
+            // additive field: pre-trace v1 reports simply lack it
+            stage_breakdown: match v.get("stage_breakdown") {
+                Some(arr) => arr
+                    .as_arr()?
+                    .iter()
+                    .map(stage_breakdown_from_json)
+                    .collect::<Result<Vec<_>>>()?,
+                None => Vec::new(),
             },
             per_backend: v
                 .req("per_backend")?
@@ -926,6 +1289,27 @@ impl ServingReport {
                     d.attainment() * 100.0,
                 ));
             }
+        }
+        // stage-attributed variation: the queue-wait vs device-execute
+        // CV split that makes the paper's stability verdict explainable
+        for cell in &self.stage_breakdown {
+            let (Some(q), Some(d)) = (
+                cell.stage(Stage::QueueWait),
+                cell.stage(Stage::DeviceExecute),
+            ) else {
+                continue;
+            };
+            out.push_str(&format!(
+                "\nstages  {:<6} class {:<6} n {:>5}   queue p50 {:.2} ms cv {:.1}%   \
+                 device p50 {:.2} ms cv {:.1}%",
+                cell.backend,
+                cell.class,
+                cell.count,
+                q.p50_s * 1e3,
+                q.cv * 100.0,
+                d.p50_s * 1e3,
+                d.cv * 100.0,
+            ));
         }
         for l in &self.lanes {
             out.push_str(&format!(
@@ -1147,6 +1531,14 @@ mod tests {
         m.record_scratch_hwm(4096 * (site as usize + 1));
         m.record_lane_dispatch("fpga0", 1 + site as usize);
         m.record_cost_refresh("gpu0");
+        // identical stage spans on every site: the stage Welfords merge
+        // with zero Chan deltas, so the folded CV stays bit-exact under
+        // any association order (the fold test compares JSON strings)
+        m.record_stages(
+            "fpga0",
+            PriorityClass::Normal,
+            &[0.001, 0.002, 0.004, 0.008, 0.016, 0.032, 0.064],
+        );
         m.set_wall(1.0 + 0.1 * site as f64);
         m
     }
@@ -1264,6 +1656,135 @@ mod tests {
             ServingReport::from_json(&legacy).unwrap().scratch_hwm_bytes,
             0
         );
+    }
+
+    #[test]
+    fn stage_breakdown_separates_device_cv_from_queue_cv() {
+        let mut m = MetricsRegistry::new();
+        // fpga0: both stages steady; gpu0: steady queue, jittery device
+        for i in 0..8 {
+            let mut spans = [0.001; STAGE_COUNT];
+            spans[Stage::QueueWait.index()] = 0.004;
+            spans[Stage::DeviceExecute.index()] = 0.002;
+            m.record_stages("fpga0", PriorityClass::Normal, &spans);
+            spans[Stage::DeviceExecute.index()] =
+                0.002 * (1.0 + 0.2 * i as f64);
+            m.record_stages("gpu0", PriorityClass::Normal, &spans);
+        }
+        m.set_wall(1.0);
+        let r = m.report();
+        assert_eq!(r.stage_breakdown.len(), 2);
+        let fpga = &r.stage_breakdown[0];
+        assert_eq!(fpga.backend, "fpga0");
+        assert_eq!(fpga.class, PriorityClass::Normal);
+        assert_eq!(fpga.count, 8);
+        assert_eq!(fpga.stages.len(), STAGE_COUNT);
+        let dev = fpga.stage(Stage::DeviceExecute).unwrap();
+        assert_eq!(dev.cv, 0.0, "steady device must read zero CV");
+        assert!((dev.mean_s - 0.002).abs() < 1e-15);
+        let gpu = &r.stage_breakdown[1];
+        let gpu_dev = gpu.stage(Stage::DeviceExecute).unwrap();
+        assert!(gpu_dev.cv > 0.2, "device jitter must surface: {}", gpu_dev.cv);
+        let gpu_q = gpu.stage(Stage::QueueWait).unwrap();
+        assert_eq!(gpu_q.cv, 0.0, "steady queue wait must stay steady");
+        // JSON roundtrip carries the section bit-exactly
+        let back = ServingReport::from_json(&r.to_json()).unwrap();
+        assert_eq!(back, r);
+        // render shows the split
+        let s = r.render();
+        assert!(s.contains("stages  fpga0"), "{s}");
+        assert!(s.contains("device p50"), "{s}");
+    }
+
+    #[test]
+    fn stage_breakdown_is_schema_additive() {
+        let empty = MetricsRegistry::new().report();
+        let json = empty.to_json();
+        let legacy = json.replacen("  \"stage_breakdown\": [\n\n  ],\n", "", 1);
+        assert!(
+            !legacy.contains("stage_breakdown"),
+            "the section must strip cleanly: {legacy}"
+        );
+        let parsed = ServingReport::from_json(&legacy).unwrap();
+        assert!(parsed.stage_breakdown.is_empty(), "legacy parses as empty");
+    }
+
+    /// A fully-stamped span record for ring tests.
+    fn stamped(id: u64) -> SpanRecord {
+        use std::time::Duration;
+        let epoch = Instant::now();
+        let clock = crate::telemetry::RunClock::at(epoch);
+        let mut st = crate::telemetry::StageStamps::default();
+        let t = |k: u64| epoch + Duration::from_millis(k);
+        st.on_ingest(&clock, t(0), t(1), id);
+        st.on_admit(&clock, t(2));
+        st.on_cut(&clock, t(3));
+        st.on_dispatch(&clock, t(4));
+        st.on_exec_start(&clock, t(5));
+        st.on_exec_end(&clock, t(6));
+        st.on_reply(&clock, t(7));
+        SpanRecord {
+            id,
+            seed: id,
+            class: PriorityClass::Normal,
+            n_images: 1,
+            stamps: st,
+        }
+    }
+
+    #[test]
+    fn span_rings_merge_and_take_lane_prefixes() {
+        let mut a = MetricsRegistry::new();
+        a.record_span("fpga0", stamped(1));
+        let mut b = MetricsRegistry::new();
+        b.record_span("fpga0", stamped(2));
+        a.prefix_lanes("s0/");
+        b.prefix_lanes("s1/");
+        a.merge_from(&b);
+        let lanes: Vec<&str> = a.span_lanes().map(|(n, _)| n).collect();
+        assert_eq!(lanes, ["s0/fpga0", "s1/fpga0"]);
+        let total: usize = a.span_lanes().map(|(_, r)| r.len()).sum();
+        assert_eq!(total, 2);
+        // the rings stay out of the report JSON — the fold-bit-identity
+        // contract covers the report, the trace exporter drains rings
+        assert!(!a.report().to_json().contains("\"spans\""));
+    }
+
+    #[test]
+    fn prometheus_text_pins_the_exposition_format() {
+        let mut m = MetricsRegistry::new();
+        m.record_request(0.002, 2);
+        m.record_backend_batch("fpga0", "mnist", 2, 1_000, 0.001, 0.5);
+        m.record_backend_request("fpga0", 0.002);
+        m.record_stages(
+            "fpga0",
+            PriorityClass::Normal,
+            &[0.001; STAGE_COUNT],
+        );
+        m.set_wall(2.0);
+        let text = m.report().prometheus_text();
+        for needle in [
+            "# TYPE edgedcnn_requests_total counter",
+            "edgedcnn_requests_total 1",
+            "edgedcnn_images_total 2",
+            "edgedcnn_latency_seconds_count 1",
+            "edgedcnn_latency_seconds{quantile=\"0.5\"}",
+            "edgedcnn_backend_images_total{backend=\"fpga0\"} 2",
+            "edgedcnn_backend_latency_cv{backend=\"fpga0\"}",
+            "edgedcnn_stage_latency_seconds{backend=\"fpga0\",\
+             class=\"normal\",stage=\"queue_wait\",quantile=\"0.99\"}",
+            "edgedcnn_stage_cv{backend=\"fpga0\",class=\"normal\",\
+             stage=\"device_execute\"} 0",
+        ] {
+            assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
+        }
+        // exposition skeleton: every line is a comment or `name value`
+        for line in text.lines() {
+            assert!(
+                line.starts_with('#') || line.split(' ').count() == 2,
+                "malformed exposition line: {line:?}"
+            );
+        }
     }
 
     #[test]

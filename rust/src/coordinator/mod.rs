@@ -44,7 +44,7 @@ mod server;
 pub use batcher::{Batch, BatcherConfig, DynamicBatcher};
 pub use metrics::{
     BackendReport, ClassAttainment, DriftWindow, LaneQueueReport,
-    LatencyReport, MetricsRegistry, ServingReport,
+    LatencyReport, MetricsRegistry, ServingReport, StageBreakdown, StageRow,
 };
 pub use power::PowerMeter;
 pub use registry::{BackendRegistry, LaneInfo};

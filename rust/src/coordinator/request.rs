@@ -11,6 +11,7 @@
 //! deadlines and priority classes could not exist because no single
 //! struct survived the whole lifecycle.
 
+use crate::telemetry::StageStamps;
 use crate::tensor::ImageBlock;
 use std::fmt;
 use std::str::FromStr;
@@ -98,6 +99,10 @@ pub struct RequestCtx {
     pub class: PriorityClass,
     /// Latent seed (deterministic generation for reproducible tests).
     pub seed: u64,
+    /// Lifecycle stage stamps the coordinator fills in as the request
+    /// travels (intake → … → reply) — fixed-size so the context stays
+    /// `Copy`.  See `telemetry::trace`.
+    pub stamps: StageStamps,
 }
 
 impl RequestCtx {
@@ -108,6 +113,7 @@ impl RequestCtx {
             deadline: None,
             class: PriorityClass::Normal,
             seed,
+            stamps: StageStamps::default(),
         }
     }
 
@@ -207,6 +213,11 @@ pub struct InferenceResponse {
     /// Deadline verdict on the edge-charged completion (`None` =
     /// best-effort request).
     pub deadline_met: Option<bool>,
+    /// The completed lifecycle stamp set (every boundary filled in by
+    /// the time a response exists) — the span data the flight recorder
+    /// drained, returned so callers can reconcile stage spans against
+    /// `latency_s` without digging through telemetry snapshots.
+    pub stamps: StageStamps,
     /// Simulated edge-FPGA latency for the same work (annotation,
     /// independent of which backend actually served it).
     pub fpga_time_s: f64,
@@ -229,11 +240,15 @@ pub enum RequestOutcome {
     /// carries an image tensor and is much larger than the other arms.
     Served(Box<InferenceResponse>),
     /// Shed at intake: the deadline was already infeasible given queue
-    /// depth × predicted cost (shed-early instead of serve-late).
-    Shed,
+    /// depth × predicted cost (shed-early instead of serve-late).  The
+    /// context comes back with the denial so a fleet front tier can
+    /// resubmit it elsewhere with its arrival, deadline *and* intake
+    /// stamps intact — the spill hop stays on the request's timeline.
+    Shed { ctx: RequestCtx },
     /// Turned away by overload admission control (the deferred queue
-    /// outgrew the request's class budget).
-    Rejected,
+    /// outgrew the request's class budget).  Carries the context back,
+    /// like [`Shed`](RequestOutcome::Shed).
+    Rejected { ctx: RequestCtx },
     /// The reply channel dropped without a verdict — backend execution
     /// failure, unservable network, or coordinator shutdown.
     /// Infrastructure loss, not load shedding.
@@ -248,10 +263,10 @@ impl RequestOutcome {
     pub fn into_response(self) -> anyhow::Result<InferenceResponse> {
         match self {
             RequestOutcome::Served(resp) => Ok(*resp),
-            RequestOutcome::Shed => Err(anyhow::anyhow!(
+            RequestOutcome::Shed { .. } => Err(anyhow::anyhow!(
                 "request shed at intake (deadline infeasible)"
             )),
-            RequestOutcome::Rejected => Err(anyhow::anyhow!(
+            RequestOutcome::Rejected { .. } => Err(anyhow::anyhow!(
                 "request rejected (overload admission control)"
             )),
             RequestOutcome::Lost => Err(anyhow::anyhow!(
@@ -299,9 +314,10 @@ mod tests {
 
     #[test]
     fn denial_outcomes_map_to_descriptive_errors() {
+        let ctx = RequestCtx::new(0);
         for (outcome, needle) in [
-            (RequestOutcome::Shed, "shed"),
-            (RequestOutcome::Rejected, "rejected"),
+            (RequestOutcome::Shed { ctx }, "shed"),
+            (RequestOutcome::Rejected { ctx }, "rejected"),
             (RequestOutcome::Lost, "dropped"),
         ] {
             let err = outcome.into_response().unwrap_err().to_string();

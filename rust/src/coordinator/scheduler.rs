@@ -40,6 +40,7 @@ use super::request::{InferenceRequest, RequestOutcome};
 use super::routing::{choose_lane, retry_order, DeferredView, LaneView, Route};
 use crate::backend::CostModel;
 use crate::config::BackendCfg;
+use crate::telemetry::RunClock;
 use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
@@ -89,6 +90,9 @@ pub(crate) struct Scheduler {
     defer_seq: u64,
     waiters: HashMap<u64, mpsc::Sender<RequestOutcome>>,
     metrics: Arc<Mutex<MetricsRegistry>>,
+    /// The run clock every lifecycle stamp is taken against (site
+    /// epoch + seeded skew; see telemetry::trace).
+    clock: RunClock,
 }
 
 impl Scheduler {
@@ -183,9 +187,11 @@ impl Scheduler {
         any_model
     }
 
-    fn send(&mut self, lane: usize, batch: Batch) {
+    fn send(&mut self, lane: usize, mut batch: Batch) {
+        let now = Instant::now();
         let mut replies = Vec::with_capacity(batch.requests.len());
-        for r in &batch.requests {
+        for r in &mut batch.requests {
+            r.ctx.stamps.on_dispatch(&self.clock, now);
             if let Some(tx) = self.waiters.remove(&r.id) {
                 replies.push((r.id, tx));
             }
@@ -390,10 +396,11 @@ pub(crate) fn leader_thread(
     registry: BackendRegistry,
     outstanding: HashMap<String, Arc<AtomicUsize>>,
     metrics: Arc<Mutex<MetricsRegistry>>,
+    clock: RunClock,
     exec_handles: Vec<std::thread::JoinHandle<()>>,
 ) {
     let mut s = Scheduler {
-        batcher: DynamicBatcher::new(batcher_cfg),
+        batcher: DynamicBatcher::with_clock(batcher_cfg, clock),
         cfg: backend_cfg,
         shard_batches,
         lanes,
@@ -404,6 +411,7 @@ pub(crate) fn leader_thread(
         defer_seq: 0,
         waiters: HashMap::new(),
         metrics,
+        clock,
     };
     // retry tick while batches are deferred (lane drain is observed via
     // the shared depth counters, not messages)
@@ -489,8 +497,13 @@ fn ingest(
     shutdown: &mut bool,
 ) {
     match cmd {
-        LeaderCmd::Submit(req, reply) => {
+        LeaderCmd::Submit(mut req, reply) => {
             let now = Instant::now();
+            // lifecycle stamp: intake — also re-bases a spilled
+            // request's arrival into this site's clock
+            req.ctx
+                .stamps
+                .on_ingest(&s.clock, req.ctx.arrival, now, req.ctx.seed);
             // admission control (4a): with this much work already
             // waiting for lane capacity, reject instead of queueing
             // unboundedly — the low class yields its budget first
@@ -500,16 +513,19 @@ fn ingest(
             .ceil() as usize;
             if s.deferred.len() >= budget.max(1) {
                 s.metrics.lock().unwrap().record_rejected();
-                let _ = reply.send(RequestOutcome::Rejected);
+                let _ = reply.send(RequestOutcome::Rejected { ctx: req.ctx });
                 return;
             }
             // shed-early (4b): a deadline no capable lane can meet is
             // turned away at arrival, not served late
             if s.intake_infeasible(&req, now) {
                 s.metrics.lock().unwrap().record_shed(req.ctx.class);
-                let _ = reply.send(RequestOutcome::Shed);
+                let _ = reply.send(RequestOutcome::Shed { ctx: req.ctx });
                 return;
             }
+            // lifecycle stamp: admitted (the gap to ingest is the
+            // admission checks' own cost)
+            req.ctx.stamps.on_admit(&s.clock, Instant::now());
             // refresh the live cost hint the batcher's slack cutting
             // (and the deferred queue's EDF order) runs on
             if let Some(cm) = s.cheapest_cost(&req.network, req.n_images) {

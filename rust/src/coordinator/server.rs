@@ -26,6 +26,7 @@ use super::request::{
 };
 use super::scheduler::{leader_thread, LaneHandle, LeaderCmd};
 use crate::config::{BackendCfg, DeviceKind, Precision, QFormat};
+use crate::telemetry::RunClock;
 use crate::util::Rng;
 use anyhow::{Context, Result};
 use std::collections::HashMap;
@@ -58,6 +59,11 @@ pub struct CoordinatorConfig {
     /// batch-at-a-time dispatch.  Trades the per-network ordering
     /// guarantee for tail latency.
     pub shard_batches: bool,
+    /// Run clock every lifecycle stamp is taken against.  `None` (the
+    /// default) starts a fresh unskewed clock at coordinator startup;
+    /// the fleet passes a shared-epoch, per-site-skewed clock so
+    /// cross-site spans fold onto one timeline.
+    pub clock: Option<RunClock>,
 }
 
 impl Default for CoordinatorConfig {
@@ -70,6 +76,7 @@ impl Default for CoordinatorConfig {
             executors: 0,
             quant: None,
             shard_batches: false,
+            clock: None,
         }
     }
 }
@@ -217,6 +224,7 @@ pub struct RequestBuilder {
     arrival: Instant,
     deadline_at: Option<Instant>,
     deadline_in: Option<Duration>,
+    stamps: crate::telemetry::StageStamps,
 }
 
 impl RequestBuilder {
@@ -230,6 +238,7 @@ impl RequestBuilder {
             arrival: Instant::now(),
             deadline_at: None,
             deadline_in: None,
+            stamps: Default::default(),
         }
     }
 
@@ -282,6 +291,9 @@ impl RequestBuilder {
         self.deadline_in = None;
         self.class = ctx.class;
         self.seed = ctx.seed;
+        // carried stamps survive re-submission: a fleet spill re-ingests
+        // on the target site with the origin hop's intake intact
+        self.stamps = ctx.stamps;
         self
     }
 
@@ -294,6 +306,7 @@ impl RequestBuilder {
                 .or_else(|| self.deadline_in.map(|d| self.arrival + d)),
             class: self.class,
             seed: self.seed,
+            stamps: self.stamps,
         }
     }
 
@@ -331,6 +344,9 @@ impl Coordinator {
         let n_lanes = registry.lanes().len();
         anyhow::ensure!(n_lanes > 0, "backend pool is empty");
         let metrics = Arc::new(Mutex::new(MetricsRegistry::new()));
+        let clock = config
+            .clock
+            .unwrap_or_else(|| RunClock::at(Instant::now()));
         let precisions: HashMap<String, Precision> =
             logical.iter().cloned().collect();
         let outstanding: HashMap<String, Arc<AtomicUsize>> = logical
@@ -374,6 +390,7 @@ impl Coordinator {
                 outstanding: outstanding.clone(),
                 exec_seq: exec_seq.clone(),
                 costs: lane_costs.clone(),
+                clock,
             };
             let (tx_lane, rx_lane) = mpsc::channel::<LaneCmd>();
             let (tx_ready, rx_ready) = mpsc::channel();
@@ -426,6 +443,7 @@ impl Coordinator {
                     registry,
                     outstanding,
                     m,
+                    clock,
                     exec_handles,
                 )
             })

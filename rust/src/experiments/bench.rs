@@ -246,6 +246,7 @@ fn serving_row(
         executors: 0,
         quant: None,
         shard_batches: false,
+        clock: None,
     })
     .with_context(|| format!("starting a {} lane", kind.as_str()))?;
     let report = coord.serve_workload(&crate::coordinator::WorkloadSpec {

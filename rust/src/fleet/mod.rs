@@ -36,6 +36,7 @@ use crate::coordinator::{
     BatcherConfig, CoordinatorClient, CoordinatorConfig, MetricsRegistry,
     RequestCtx, RequestOutcome, ResponseHandle, ServingReport,
 };
+use crate::telemetry::{RunClock, StageStamps};
 use crate::util::{escape_json, Rng};
 use crate::workload::loadtest::event_ctx;
 use crate::workload::{Trace, TraceEvent};
@@ -135,6 +136,13 @@ pub struct FleetRun {
     /// Spilled requests another site eventually served.
     pub spill_served: u64,
     pub wall_s: f64,
+    /// Bounded sample of completed cross-site lifecycles (a served
+    /// request whose stamps retired an origin-site hop): the trace
+    /// export renders these as flow events even when head sampling
+    /// skipped them, and the integration suite checks the two-site
+    /// timeline stays monotone after skew correction.  Not part of the
+    /// JSON envelope.
+    pub spill_stamps: Vec<StageStamps>,
 }
 
 /// Fold per-site telemetry shards into one fleet registry.  Every
@@ -159,7 +167,13 @@ struct Tally {
     spill_served: AtomicU64,
     placed: Vec<AtomicU64>,
     spilled_in: Vec<AtomicU64>,
+    /// First `SPILL_STAMP_CAP` completed cross-site lifecycles.
+    spill_stamps: Mutex<Vec<StageStamps>>,
 }
+
+/// Cap on collected spill-lifecycle examples (diagnostics, not stats —
+/// the stage histograms carry the population).
+const SPILL_STAMP_CAP: usize = 64;
 
 impl Tally {
     fn new(n_sites: usize) -> Tally {
@@ -172,6 +186,7 @@ impl Tally {
             spill_served: AtomicU64::new(0),
             placed: (0..n_sites).map(|_| AtomicU64::new(0)).collect(),
             spilled_in: (0..n_sites).map(|_| AtomicU64::new(0)).collect(),
+            spill_stamps: Mutex::new(Vec::new()),
         }
     }
 }
@@ -232,7 +247,7 @@ fn resolve(
     let Job {
         network,
         n_images,
-        ctx,
+        mut ctx,
         key,
         mut tried,
         mut handle,
@@ -240,12 +255,27 @@ fn resolve(
     let mut spills = 0u64;
     loop {
         let outcome = handle.outcome();
-        if let RequestOutcome::Served(_) = outcome {
+        if let RequestOutcome::Served(resp) = &outcome {
             tally.served.fetch_add(1, Ordering::Relaxed);
             if spills > 0 {
                 tally.spill_served.fetch_add(1, Ordering::Relaxed);
+                if resp.stamps.spilled() && resp.stamps.complete() {
+                    let mut examples = tally.spill_stamps.lock().unwrap();
+                    if examples.len() < SPILL_STAMP_CAP {
+                        examples.push(resp.stamps);
+                    }
+                }
             }
             return;
+        }
+        // a denial hands the lifecycle context back with the denying
+        // site's intake stamps; carrying them into the resubmission
+        // lets the next site's re-ingest retire the hop (origin site +
+        // ingest time) onto the cross-site record
+        if let RequestOutcome::Shed { ctx: denied }
+        | RequestOutcome::Rejected { ctx: denied } = &outcome
+        {
+            ctx.stamps = denied.stamps;
         }
         if spill {
             if let Some((site, h)) = submit_next(
@@ -262,8 +292,8 @@ fn resolve(
             }
         }
         let cell = match outcome {
-            RequestOutcome::Shed => &tally.shed,
-            RequestOutcome::Rejected => &tally.rejected,
+            RequestOutcome::Shed { .. } => &tally.shed,
+            RequestOutcome::Rejected { .. } => &tally.rejected,
             _ => &tally.lost,
         };
         cell.fetch_add(1, Ordering::Relaxed);
@@ -304,6 +334,9 @@ pub fn run_fleet(trace: &Trace, cfg: &FleetCfg) -> Result<FleetRun> {
 
     let (networks, any_quant) = trace.networks();
     let mut rng = Rng::seed_from_u64(cfg.seed);
+    // all site clocks share one run epoch and differ only by their
+    // seeded skew, so folded spans re-base onto a single fleet timeline
+    let epoch = Instant::now();
     let mut sites = Vec::with_capacity(cfg.sites);
     for i in 0..cfg.sites {
         let skew_s = rng.range_f64(-cfg.skew_s, cfg.skew_s);
@@ -320,6 +353,7 @@ pub fn run_fleet(trace: &Trace, cfg: &FleetCfg) -> Result<FleetRun> {
                 executors: cfg.executors,
                 quant: any_quant.then_some(QFormat::new(16, 8)),
                 shard_batches: cfg.shard_batches,
+                clock: Some(RunClock::with_site(epoch, skew_s, i as u32)),
             },
         )?);
     }
@@ -467,10 +501,26 @@ pub fn run_fleet(trace: &Trace, cfg: &FleetCfg) -> Result<FleetRun> {
         spilled: tally.spilled.load(Ordering::Relaxed),
         spill_served: tally.spill_served.load(Ordering::Relaxed),
         wall_s,
+        spill_stamps: tally.spill_stamps.into_inner().unwrap(),
     })
 }
 
 impl FleetRun {
+    /// Perfetto-loadable Chrome trace of the run: the folded shards'
+    /// sampled span rings (one track per `s{i}/lane`), plus flow events
+    /// for collected cross-site lifecycles head sampling skipped (the
+    /// sampled ones already render their own spill flows).
+    pub fn chrome_trace(&self) -> String {
+        let folded = fold_shards(&self.shards);
+        let unsampled: Vec<StageStamps> = self
+            .spill_stamps
+            .iter()
+            .copied()
+            .filter(|s| !s.sampled)
+            .collect();
+        crate::telemetry::chrome_trace(folded.span_lanes(), &unsampled)
+    }
+
     /// Render the fleet summary followed by the merged serving report.
     /// The `accounting:` line is the same shape the loadtest prints
     /// (the CI smoke jobs parse both with one awk program).
@@ -576,6 +626,7 @@ mod tests {
             spilled: 3,
             spill_served: 2,
             wall_s: 1.5,
+            spill_stamps: Vec::new(),
         }
     }
 

@@ -8,7 +8,8 @@
 use anyhow::{bail, Result};
 use edgedcnn::artifacts::ArtifactDir;
 use edgedcnn::config::{
-    network_by_name, PoolCfg, Precision, TrafficCfg, JETSON_TX1, PYNQ_Z2,
+    network_by_name, ObsCfg, PoolCfg, Precision, TrafficCfg, JETSON_TX1,
+    PYNQ_Z2,
 };
 use edgedcnn::coordinator::{
     BatcherConfig, Coordinator, CoordinatorConfig, WorkloadSpec,
@@ -40,6 +41,7 @@ COMMANDS:
             [--interarrival-ms MS] [--seed S] [--executors E]
             [--backends fpga,gpu,cpu] [--queue-depth D] [--max-deferred N]
             [--quant qI.F] [--shard] [--json]
+            [--trace-out FILE] [--prom-out FILE]
                              drive the edge-serving coordinator over a
                              heterogeneous device-backend pool (one FIFO
                              lane per --backends entry; batches route to
@@ -53,7 +55,11 @@ COMMANDS:
                              --queue-depth bounds each lane's queue
                              (backpressure), --executors E cycles the
                              backends list to E lanes, --json prints the
-                             versioned report schema instead of the table
+                             versioned report schema instead of the table;
+                             --trace-out writes the sampled request
+                             lifecycles as Chrome trace-event JSON
+                             (Perfetto-loadable), --prom-out writes the
+                             report as Prometheus text exposition
   bench     [--smoke] [--trials N] [--json] [--out FILE]
             [--compare FILE] [--no-serving]
                              regression-defended microbenchmark suite
@@ -88,7 +94,7 @@ COMMANDS:
             [--backends fpga,gpu,cpu] [--queue-depth D] [--executors E]
             [--record FILE] [--replay FILE] [--no-shard] [--smoke]
             [--closed N] [--think-ms T] [--deadline-ms D]
-            [--drift-csv FILE]
+            [--drift-csv FILE] [--trace-out FILE]
                              scenario-driven load generation against the
                              backend pool, repeated over N seeded
                              trials, with the paper's Table-2-style run-
@@ -113,7 +119,12 @@ COMMANDS:
                              --deadline-ms overrides the scenario's
                              relative deadline; --drift-csv writes the
                              final trial's windowed latency-drift
-                             histogram shards as CSV; --smoke is the
+                             histogram shards as CSV (plot with
+                             python/plot_drift.py); --trace-out writes
+                             the final trial's sampled request
+                             lifecycles as Chrome trace-event JSON
+                             (Perfetto-loadable, one track per lane,
+                             one slice per stage); --smoke is the
                              short CI mode
   fleet     [--sites N] [--scenario NAME|FILE] [--requests N] [--seed S]
             [--backends fpga,gpu,cpu] [--queue-depth D] [--max-deferred N]
@@ -121,6 +132,7 @@ COMMANDS:
             [--no-spill] [--skew-ms MS] [--fail-site I] [--fail-at-ms MS]
             [--fleet-seed S] [--replay FILE] [--record FILE]
             [--deadline-ms D] [--no-shard] [--smoke] [--json]
+            [--trace-out FILE]
                              distributed edge fleet: replay one trace
                              across N per-site coordinators (each with
                              its own backend pool and seeded clock skew
@@ -143,7 +155,12 @@ COMMANDS:
                              --max-deferred / --executors) mean exactly
                              what they do for loadtest; --json prints
                              the fleet envelope with the embedded
-                             versioned report schema
+                             versioned report schema; --trace-out
+                             writes the fleet's sampled request
+                             lifecycles as Chrome trace-event JSON —
+                             one Perfetto process per site (clock-skew
+                             corrected) with flow arrows following each
+                             spilled request across sites
   quant     [--network NET] [--samples N] [--seed S]
             [--bits B --frac F] [--export]
                              fixed-point quantized inference: sweep
@@ -313,6 +330,7 @@ fn main() -> Result<()> {
                 executors: pool.executors,
                 quant,
                 shard_batches: flags.has("shard"),
+                clock: None,
             })?;
             let report = coord.serve_workload(&WorkloadSpec {
                 network,
@@ -321,6 +339,22 @@ fn main() -> Result<()> {
                 interarrival: Duration::from_secs_f64(interarrival_ms / 1e3),
                 seed,
             })?;
+            let obs = ObsCfg::from_flags(&flags)?;
+            if let Some(path) = &obs.trace_out {
+                let snapshot = coord.metrics_snapshot();
+                std::fs::write(
+                    path,
+                    edgedcnn::telemetry::chrome_trace(
+                        snapshot.span_lanes(),
+                        &[],
+                    ),
+                )?;
+                println!("trace written to {}", path.display());
+            }
+            if let Some(path) = &obs.prom_out {
+                std::fs::write(path, report.prometheus_text())?;
+                println!("prometheus metrics written to {}", path.display());
+            }
             if flags.has("json") {
                 print!("{}", report.to_json());
             } else {
@@ -398,6 +432,7 @@ fn main() -> Result<()> {
                     closed: flags.get("closed", 0usize)?,
                     think: Duration::from_secs_f64(think_ms / 1e3),
                     drift_csv: flags.get_opt("drift-csv")?,
+                    trace_out: ObsCfg::from_flags(&flags)?.trace_out,
                 },
             )?;
             print!("{}", report.render());
@@ -427,6 +462,10 @@ fn main() -> Result<()> {
                 fail_at_s: fail_at_ms / 1e3,
             };
             let run = run_fleet(&trace, &cfg)?;
+            if let Some(path) = &ObsCfg::from_flags(&flags)?.trace_out {
+                std::fs::write(path, run.chrome_trace())?;
+                println!("trace written to {}", path.display());
+            }
             if flags.has("json") {
                 print!("{}", run.to_json());
             } else {

@@ -29,6 +29,8 @@ pub struct LogHistogram {
     inv_ln_growth: f64,
     counts: Vec<u64>,
     underflow: u64,
+    /// Samples refused by [`Self::record`] (non-finite or negative).
+    dropped: u64,
     total: u64,
     sum: f64,
     min_seen: f64,
@@ -51,6 +53,7 @@ impl LogHistogram {
             inv_ln_growth: 1.0 / growth.ln(),
             counts: vec![0; n.max(1)],
             underflow: 0,
+            dropped: 0,
             total: 0,
             sum: 0.0,
             min_seen: f64::INFINITY,
@@ -70,8 +73,15 @@ impl LogHistogram {
         self.rel_err
     }
 
-    /// Record one sample.
+    /// Record one sample.  Non-finite or negative values are *refused*
+    /// and counted in [`Self::dropped`] — a NaN would otherwise poison
+    /// the exact sum forever and land in bucket 0 (`NaN as usize == 0`),
+    /// silently bending the median toward the floor.
     pub fn record(&mut self, v: f64) {
+        if !v.is_finite() || v < 0.0 {
+            self.dropped += 1;
+            return;
+        }
         self.total += 1;
         self.sum += v;
         self.min_seen = self.min_seen.min(v);
@@ -92,7 +102,9 @@ impl LogHistogram {
     /// — HdrHistogram's expected-interval scheme.
     pub fn record_corrected(&mut self, v: f64, expected_interval_s: f64) {
         self.record(v);
-        if expected_interval_s <= 0.0 {
+        if !v.is_finite() || v < 0.0 || expected_interval_s <= 0.0 {
+            // a refused sample back-fills nothing (an inf stall must
+            // not spin the back-fill budget recording 10⁴ drops)
             return;
         }
         let mut missing = v - expected_interval_s;
@@ -108,6 +120,13 @@ impl LogHistogram {
 
     pub fn count(&self) -> u64 {
         self.total
+    }
+
+    /// Samples refused by [`Self::record`] (non-finite or negative).
+    /// Excluded from `count`/`sum`/extremes/quantiles; merges
+    /// additively like every other counter.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
     }
 
     pub fn sum(&self) -> f64 {
@@ -180,6 +199,7 @@ impl LogHistogram {
             *a += b;
         }
         self.underflow += other.underflow;
+        self.dropped += other.dropped;
         self.total += other.total;
         self.sum += other.sum;
         self.min_seen = self.min_seen.min(other.min_seen);
@@ -315,8 +335,30 @@ impl WindowedHistogram {
     /// semilattice: fleet folds give the same ring in any association
     /// order (asserted by a property test).
     pub fn merge(&mut self, other: &WindowedHistogram) {
-        assert_eq!(self.ring.len(), other.ring.len(), "ring length mismatch");
-        assert!(self.slice_s == other.slice_s, "window slice mismatch");
+        self.try_merge(other).expect("windowed histogram merge");
+    }
+
+    /// Fallible form of [`Self::merge`].  Merging rings of different
+    /// `slice_s` (or ring length) has no defined semantics — the
+    /// slot ↔ epoch mapping disagrees, so "the same window" does not
+    /// exist on both sides — and is *refused* with an error instead of
+    /// silently mixing slices of different widths.
+    pub fn try_merge(
+        &mut self,
+        other: &WindowedHistogram,
+    ) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.slice_s == other.slice_s,
+            "window slice mismatch: {} s vs {} s",
+            self.slice_s,
+            other.slice_s
+        );
+        anyhow::ensure!(
+            self.ring.len() == other.ring.len(),
+            "ring length mismatch: {} vs {}",
+            self.ring.len(),
+            other.ring.len()
+        );
         for (slot, theirs) in other.ring.iter().enumerate() {
             if theirs.epoch == u64::MAX {
                 continue;
@@ -329,6 +371,7 @@ impl WindowedHistogram {
             }
             // else ours is newer: the other's slice already aged out
         }
+        Ok(())
     }
 }
 
@@ -457,6 +500,54 @@ mod tests {
     }
 
     #[test]
+    fn non_finite_and_negative_samples_are_dropped_not_recorded() {
+        let mut h = LogHistogram::latency_default();
+        h.record(0.005);
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY, -1e-3] {
+            h.record(bad);
+        }
+        assert_eq!(h.count(), 1, "refused samples never enter the total");
+        assert_eq!(h.dropped(), 4);
+        assert_eq!(h.min(), 0.005, "extremes untouched by refused samples");
+        assert_eq!(h.max(), 0.005);
+        assert!((h.sum() - 0.005).abs() < 1e-15, "sum stays finite");
+        let q = h.quantile(50.0);
+        assert!(
+            (q / 0.005 - 1.0).abs() <= h.relative_error() + 1e-12,
+            "median unbent by the NaN: {q}"
+        );
+    }
+
+    #[test]
+    fn corrected_path_refuses_bad_samples_without_backfill() {
+        let mut c = LogHistogram::latency_default();
+        c.record_corrected(f64::INFINITY, 0.1);
+        assert_eq!(c.count(), 0);
+        assert_eq!(c.dropped(), 1, "an inf stall must not spin the budget");
+        c.record_corrected(f64::NAN, 0.1);
+        c.record_corrected(-0.5, 0.1);
+        assert_eq!(c.count(), 0);
+        assert_eq!(c.dropped(), 3);
+        // a bad *interval* degrades to a plain record, never a spin
+        c.record_corrected(0.05, f64::NAN);
+        assert_eq!(c.count(), 1);
+        assert_eq!(c.dropped(), 3);
+    }
+
+    #[test]
+    fn dropped_counter_merges_additively() {
+        let mut a = LogHistogram::latency_default();
+        a.record(-5.0);
+        a.record(0.001);
+        let mut b = LogHistogram::latency_default();
+        b.record(f64::NAN);
+        b.record(f64::INFINITY);
+        a.merge(&b);
+        assert_eq!(a.dropped(), 3);
+        assert_eq!(a.count(), 1);
+    }
+
+    #[test]
     #[should_panic]
     fn merge_rejects_geometry_mismatch() {
         let mut a = LogHistogram::new(1e-6, 1.0, 0.02);
@@ -570,6 +661,34 @@ mod tests {
         c.merge(&new);
         assert_eq!(c.merged().count(), 2);
         assert_eq!(c.windows().len(), 1);
+    }
+
+    #[test]
+    fn windowed_merge_refuses_mismatched_slices() {
+        let mut a = WindowedHistogram::latency_default(0.25, 4);
+        let err = a
+            .try_merge(&WindowedHistogram::latency_default(0.5, 4))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("window slice mismatch"), "{err}");
+        let err = a
+            .try_merge(&WindowedHistogram::latency_default(0.25, 8))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("ring length mismatch"), "{err}");
+        // the refusal left the target untouched, and matching geometry
+        // still merges
+        let mut d = WindowedHistogram::latency_default(0.25, 4);
+        d.record(0.1, 0.002);
+        a.try_merge(&d).unwrap();
+        assert_eq!(a.merged().count(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "window slice mismatch")]
+    fn windowed_merge_panics_on_slice_mismatch() {
+        let mut a = WindowedHistogram::latency_default(0.25, 4);
+        a.merge(&WindowedHistogram::latency_default(0.5, 4));
     }
 
     #[test]

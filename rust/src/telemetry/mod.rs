@@ -11,6 +11,11 @@
 //!   the drift column that localizes a deadline-miss burst in time at
 //!   O(ring) memory.
 //! * [`SloCounter`] — deadline attainment as two integers.
+//! * [`trace`] — the request-lifecycle flight recorder: per-stage span
+//!   stamps carried on the request context against a skewable
+//!   [`RunClock`], drained into bounded per-lane [`SpanRecorder`]
+//!   rings under deterministic seed-keyed head sampling, and exported
+//!   as Perfetto-loadable Chrome trace JSON ([`chrome_trace`]).
 //! * [`variation`](variation_of) — repeated-trial coefficient of
 //!   variation and seeded-bootstrap confidence intervals over
 //!   throughput/latency/energy, the statistic behind the paper's
@@ -19,8 +24,13 @@
 
 mod histogram;
 mod slo;
+pub mod trace;
 mod variation;
 
 pub use histogram::{nearest_rank, LogHistogram, WindowedHistogram};
 pub use slo::SloCounter;
+pub use trace::{
+    chrome_trace, head_sample, RunClock, SpanRecord, SpanRecorder, Stage,
+    StageStamps, NO_SITE, SPAN_RING_CAPACITY, STAGE_COUNT,
+};
 pub use variation::{cv_of, variation_of, weighted_cv, Variation};

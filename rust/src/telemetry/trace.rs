@@ -1,0 +1,761 @@
+//! Request-lifecycle flight recorder — per-stage spans for every
+//! request the coordinator serves, recorded at fixed cost and exported
+//! as a Chrome trace-event file Perfetto can open.
+//!
+//! The lifecycle has seven observable stages (see DESIGN.md §Tracing):
+//! intake → admission → EDF queue wait → batch formation → dispatch →
+//! device execute → reply.  Each boundary is a single clock stamp
+//! carried on the request's [`RequestCtx`](crate::coordinator::RequestCtx)
+//! (`StageStamps` — fixed-size, `Copy`, so the context stays `Copy`),
+//! taken against a per-coordinator [`RunClock`]: a monotonic offset
+//! from a run epoch plus the site's seeded clock skew.  In a fleet the
+//! sites share one epoch but disagree by their skews — exactly the
+//! imperfect-clock replay model of DESIGN.md §Fleet — and every stamp
+//! carries the skew it was taken under, so a fold can re-base spans to
+//! fleet time after the fact ([`StageStamps::rebased_starts`]).
+//!
+//! Completed span sets drain into per-lane [`SpanRecorder`] ring
+//! buffers: fixed capacity, overwrite-oldest, one pre-allocated buffer
+//! per lane — zero steady-state allocation, per the hotpath discipline.
+//! Which requests drain is decided by [`head_sample`]: a deterministic
+//! predicate over the request's *latent seed*, so replaying a recorded
+//! trace reproduces the bit-identical sampled span set on any machine.
+
+use crate::coordinator::PriorityClass;
+use crate::util::escape_json;
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// Number of lifecycle stages a completed request's span set covers.
+pub const STAGE_COUNT: usize = 7;
+
+/// Site id meaning "no site" (single-coordinator runs use site 0; a
+/// request that never spilled has `prev_site == NO_SITE`).
+pub const NO_SITE: u32 = u32::MAX;
+
+/// Default per-lane span ring capacity.
+pub const SPAN_RING_CAPACITY: usize = 1024;
+
+/// One lifecycle stage of the request's journey.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Stage {
+    /// Scheduled arrival → the intake gate (generator/submission lag —
+    /// charged to the system, the coordinated-omission stance).
+    Intake,
+    /// Intake entry → admission verdict (feasibility + budget checks).
+    Admission,
+    /// Admission → the EDF batcher cutting a batch containing it.
+    QueueWait,
+    /// Batch cut → the scheduler handing the batch to a lane.
+    BatchForm,
+    /// Lane hand-off → the lane thread starting execution (FIFO wait).
+    Dispatch,
+    /// Backend execute call, start → end.
+    DeviceExecute,
+    /// Execute end → the response being materialized and sent.
+    Reply,
+}
+
+impl Stage {
+    pub const ALL: [Stage; STAGE_COUNT] = [
+        Stage::Intake,
+        Stage::Admission,
+        Stage::QueueWait,
+        Stage::BatchForm,
+        Stage::Dispatch,
+        Stage::DeviceExecute,
+        Stage::Reply,
+    ];
+
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Stage::Intake => "intake",
+            Stage::Admission => "admission",
+            Stage::QueueWait => "queue_wait",
+            Stage::BatchForm => "batch_form",
+            Stage::Dispatch => "dispatch",
+            Stage::DeviceExecute => "device_execute",
+            Stage::Reply => "reply",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Stage> {
+        Stage::ALL.into_iter().find(|st| st.as_str() == s)
+    }
+}
+
+/// The clock every stamp is taken against: a monotonic offset from a
+/// shared run epoch, plus the owning site's seeded skew — site `i`'s
+/// clock reads `true_run_time + skew_s`, the fleet's imperfect-clock
+/// model made observable.  Reading the clock never allocates.
+#[derive(Debug, Clone, Copy)]
+pub struct RunClock {
+    epoch: Instant,
+    skew_s: f64,
+    site: u32,
+}
+
+impl RunClock {
+    /// A skew-free clock for a standalone coordinator (site 0).
+    pub fn at(epoch: Instant) -> Self {
+        RunClock { epoch, skew_s: 0.0, site: 0 }
+    }
+
+    /// A fleet site's clock: shared epoch, seeded skew, site id.
+    pub fn with_site(epoch: Instant, skew_s: f64, site: u32) -> Self {
+        RunClock { epoch, skew_s, site }
+    }
+
+    pub fn site(&self) -> u32 {
+        self.site
+    }
+
+    pub fn skew_s(&self) -> f64 {
+        self.skew_s
+    }
+
+    /// This site's clock reading for instant `t` (seconds; signed — an
+    /// arrival scheduled before the epoch reads negative).
+    pub fn offset_of(&self, t: Instant) -> f64 {
+        let raw = if t >= self.epoch {
+            t.duration_since(self.epoch).as_secs_f64()
+        } else {
+            -self.epoch.duration_since(t).as_secs_f64()
+        };
+        raw + self.skew_s
+    }
+
+    /// This site's clock reading for "now".
+    pub fn now_s(&self) -> f64 {
+        self.offset_of(Instant::now())
+    }
+}
+
+impl Default for RunClock {
+    fn default() -> Self {
+        RunClock::at(Instant::now())
+    }
+}
+
+/// Deterministic head-sampling predicate: a SplitMix64 finalizer over
+/// the request's latent seed keeps half of all requests.  Keyed off
+/// the *seed* — not arrival order, thread timing or wall clock — so a
+/// recorded trace replayed anywhere reproduces the bit-identical
+/// sampled span set.
+pub fn head_sample(seed: u64) -> bool {
+    mix64(seed ^ 0x9E37_79B9_7F4A_7C15) & 1 == 0
+}
+
+fn mix64(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// The stamp set one request accumulates across its lifecycle.  All
+/// offsets are in the stamping site's clock (`NaN` = not stamped yet);
+/// everything from `ingest_s` on is guaranteed same-site, because a
+/// spill hop re-bases `arrival_s` into the landing site's clock and
+/// retires the home hop into the `prev_*` fields.  Fixed-size and
+/// `Copy` so `RequestCtx` stays `Copy`.
+#[derive(Debug, Clone, Copy)]
+pub struct StageStamps {
+    /// Scheduled arrival, re-based into `site`'s clock at ingest.
+    pub arrival_s: f64,
+    pub ingest_s: f64,
+    pub admit_s: f64,
+    pub cut_s: f64,
+    pub dispatch_s: f64,
+    pub exec_start_s: f64,
+    pub exec_end_s: f64,
+    pub reply_s: f64,
+    /// Site whose clock stamped everything from `ingest_s` on.
+    pub site: u32,
+    /// That site's clock skew — carried so folds can re-base.
+    pub skew_s: f64,
+    /// Home site a spill hop left (`NO_SITE`: never spilled).  Only the
+    /// first hop is retained: home → final landing site is the story a
+    /// flow event tells.
+    pub prev_site: u32,
+    pub prev_skew_s: f64,
+    /// The home site's intake stamp, on the home site's own clock.
+    pub prev_ingest_s: f64,
+    /// Deterministic head-sampling verdict ([`head_sample`]).
+    pub sampled: bool,
+}
+
+impl Default for StageStamps {
+    fn default() -> Self {
+        StageStamps {
+            arrival_s: f64::NAN,
+            ingest_s: f64::NAN,
+            admit_s: f64::NAN,
+            cut_s: f64::NAN,
+            dispatch_s: f64::NAN,
+            exec_start_s: f64::NAN,
+            exec_end_s: f64::NAN,
+            reply_s: f64::NAN,
+            site: NO_SITE,
+            skew_s: 0.0,
+            prev_site: NO_SITE,
+            prev_skew_s: 0.0,
+            prev_ingest_s: f64::NAN,
+            sampled: false,
+        }
+    }
+}
+
+impl StageStamps {
+    /// Stamp intake at `now`.  A re-ingest on a *different* site (a
+    /// fleet spill hop) retires the previous hop into `prev_*`, voids
+    /// the abandoned hop's later stamps, and re-bases the arrival into
+    /// the new site's clock — so every subsequent same-site span is a
+    /// plain difference, no skew arithmetic at record time.
+    pub fn on_ingest(
+        &mut self,
+        clock: &RunClock,
+        arrival: Instant,
+        now: Instant,
+        seed: u64,
+    ) {
+        if self.site != NO_SITE && self.site != clock.site() {
+            if self.prev_site == NO_SITE {
+                self.prev_site = self.site;
+                self.prev_skew_s = self.skew_s;
+                self.prev_ingest_s = self.ingest_s;
+            }
+            self.admit_s = f64::NAN;
+            self.cut_s = f64::NAN;
+            self.dispatch_s = f64::NAN;
+            self.exec_start_s = f64::NAN;
+            self.exec_end_s = f64::NAN;
+            self.reply_s = f64::NAN;
+        }
+        self.site = clock.site();
+        self.skew_s = clock.skew_s();
+        self.arrival_s = clock.offset_of(arrival);
+        self.ingest_s = clock.offset_of(now);
+        self.sampled = head_sample(seed);
+    }
+
+    pub fn on_admit(&mut self, clock: &RunClock, now: Instant) {
+        self.admit_s = clock.offset_of(now);
+    }
+
+    pub fn on_cut(&mut self, clock: &RunClock, now: Instant) {
+        self.cut_s = clock.offset_of(now);
+    }
+
+    pub fn on_dispatch(&mut self, clock: &RunClock, now: Instant) {
+        self.dispatch_s = clock.offset_of(now);
+    }
+
+    pub fn on_exec_start(&mut self, clock: &RunClock, now: Instant) {
+        self.exec_start_s = clock.offset_of(now);
+    }
+
+    pub fn on_exec_end(&mut self, clock: &RunClock, now: Instant) {
+        self.exec_end_s = clock.offset_of(now);
+    }
+
+    pub fn on_reply(&mut self, clock: &RunClock, now: Instant) {
+        self.reply_s = clock.offset_of(now);
+    }
+
+    /// True once every lifecycle boundary is stamped.
+    pub fn complete(&self) -> bool {
+        self.starts().iter().all(|t| t.is_finite())
+            && self.reply_s.is_finite()
+    }
+
+    /// True if this request overflowed cross-site at least once.
+    pub fn spilled(&self) -> bool {
+        self.prev_site != NO_SITE
+    }
+
+    /// Stage start stamps in lifecycle order, site-local clock.
+    fn starts(&self) -> [f64; STAGE_COUNT] {
+        [
+            self.arrival_s,
+            self.ingest_s,
+            self.admit_s,
+            self.cut_s,
+            self.dispatch_s,
+            self.exec_start_s,
+            self.exec_end_s,
+        ]
+    }
+
+    /// Per-stage durations in seconds, indexed by [`Stage::index`],
+    /// clamped non-negative (all boundaries are same-site stamps of one
+    /// monotonic clock, so only f64 noise can go sub-zero).  `None`
+    /// until the lifecycle completed.
+    pub fn stage_spans(&self) -> Option<[f64; STAGE_COUNT]> {
+        if !self.complete() {
+            return None;
+        }
+        let s = self.starts();
+        let mut out = [0.0; STAGE_COUNT];
+        for i in 0..STAGE_COUNT {
+            let end = if i + 1 < STAGE_COUNT { s[i + 1] } else { self.reply_s };
+            out[i] = (end - s[i]).max(0.0);
+        }
+        Some(out)
+    }
+
+    /// Stage start times re-based to *fleet* time (site skew removed) —
+    /// the skew-corrected coherent timeline the exporter renders.
+    pub fn rebased_starts(&self) -> Option<[f64; STAGE_COUNT]> {
+        if !self.complete() {
+            return None;
+        }
+        Some(self.starts().map(|t| t - self.skew_s))
+    }
+
+    /// The home-site intake stamp re-based to fleet time (`None` when
+    /// the request never spilled).
+    pub fn rebased_prev_ingest(&self) -> Option<f64> {
+        if self.spilled() {
+            Some(self.prev_ingest_s - self.prev_skew_s)
+        } else {
+            None
+        }
+    }
+}
+
+/// One drained span set: the request identity plus its stamps.
+#[derive(Debug, Clone, Copy)]
+pub struct SpanRecord {
+    pub id: u64,
+    pub seed: u64,
+    pub class: PriorityClass,
+    pub n_images: usize,
+    pub stamps: StageStamps,
+}
+
+/// Bounded per-lane ring of [`SpanRecord`]s: fixed capacity, overwrite
+/// oldest.  The buffer is allocated once (lane warm-up); every
+/// steady-state push is a slot overwrite — zero allocation, per the
+/// hotpath discipline.
+#[derive(Debug, Clone)]
+pub struct SpanRecorder {
+    buf: Vec<SpanRecord>,
+    /// Oldest slot once the ring is full (also the next write slot).
+    head: usize,
+    cap: usize,
+    overwritten: u64,
+}
+
+impl SpanRecorder {
+    pub fn new() -> Self {
+        Self::with_capacity(SPAN_RING_CAPACITY)
+    }
+
+    pub fn with_capacity(cap: usize) -> Self {
+        let cap = cap.max(1);
+        SpanRecorder {
+            buf: Vec::with_capacity(cap),
+            head: 0,
+            cap,
+            overwritten: 0,
+        }
+    }
+
+    pub fn push(&mut self, rec: SpanRecord) {
+        if self.buf.len() < self.cap {
+            self.buf.push(rec);
+        } else {
+            self.buf[self.head] = rec;
+            self.head = (self.head + 1) % self.cap;
+            self.overwritten += 1;
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Records the ring has dropped to make room (overwrite-oldest).
+    pub fn overwritten(&self) -> u64 {
+        self.overwritten
+    }
+
+    /// Retained records, oldest → newest.
+    pub fn iter(&self) -> impl Iterator<Item = &SpanRecord> {
+        let (tail, head) = self.buf.split_at(self.head);
+        head.iter().chain(tail.iter())
+    }
+
+    /// Append another ring's records in order (fleet shard fold); the
+    /// combined ring keeps the newest `capacity()` records overall.
+    pub fn merge(&mut self, other: &SpanRecorder) {
+        for r in other.iter() {
+            self.push(*r);
+        }
+    }
+}
+
+impl Default for SpanRecorder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Render per-lane span rings as Chrome trace-event JSON (the format
+/// Perfetto and `chrome://tracing` load): one track per lane
+/// (`pid` = site, `tid` = lane), one complete (`"ph":"X"`) event per
+/// lifecycle stage of every sampled request, and a flow-event pair
+/// (`"s"` → `"f"`) plus a home-hop slice for every spill between site
+/// tracks.  `spill_hops` carries hop stamp sets the rings never saw
+/// (requests denied everywhere, or unsampled) so a fleet export always
+/// shows its spills.  All timestamps are re-based to fleet time — the
+/// per-site clock-skew correction — so a spilled request's cross-site
+/// timeline renders coherently.
+pub fn chrome_trace<'a>(
+    lanes: impl IntoIterator<Item = (&'a str, &'a SpanRecorder)>,
+    spill_hops: &[StageStamps],
+) -> String {
+    let mut events: Vec<String> = Vec::new();
+    let mut sites_seen: BTreeMap<u32, ()> = BTreeMap::new();
+    let mut flow_id: u64 = 0;
+    // ts must be non-negative for chrome://tracing; clamp the rare
+    // pre-epoch arrival stamp to the epoch
+    let us = |t: f64| (t.max(0.0) * 1e6).round() as u64;
+
+    for (tid, (lane, ring)) in lanes.into_iter().enumerate() {
+        let tid = tid as u64 + 1;
+        let mut lane_site = None;
+        for rec in ring.iter() {
+            let (Some(starts), Some(spans)) =
+                (rec.stamps.rebased_starts(), rec.stamps.stage_spans())
+            else {
+                continue;
+            };
+            let site = if rec.stamps.site == NO_SITE { 0 } else { rec.stamps.site };
+            sites_seen.insert(site, ());
+            if lane_site.is_none() {
+                lane_site = Some(site);
+                events.push(format!(
+                    "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":{site},\
+                     \"tid\":{tid},\"args\":{{\"name\":\"{}\"}}}}",
+                    escape_json(lane)
+                ));
+            }
+            for stage in Stage::ALL {
+                let i = stage.index();
+                events.push(format!(
+                    "{{\"name\":\"{}\",\"cat\":\"stage\",\"ph\":\"X\",\
+                     \"ts\":{},\"dur\":{},\"pid\":{site},\"tid\":{tid},\
+                     \"args\":{{\"id\":{},\"seed\":{},\"class\":\"{}\",\
+                     \"images\":{}}}}}",
+                    stage.as_str(),
+                    us(starts[i]),
+                    us(spans[i]),
+                    rec.id,
+                    rec.seed,
+                    rec.class.as_str(),
+                    rec.n_images,
+                ));
+            }
+            if let Some(prev_t) = rec.stamps.rebased_prev_ingest() {
+                flow_id += 1;
+                spill_events(
+                    &mut events,
+                    &mut sites_seen,
+                    flow_id,
+                    rec.stamps.prev_site,
+                    prev_t,
+                    site,
+                    tid,
+                    starts[Stage::Intake.index()]
+                        + spans[Stage::Intake.index()],
+                );
+            }
+        }
+    }
+
+    // hop stamp sets the rings never captured (denied or unsampled)
+    for hop in spill_hops {
+        let Some(prev_t) = hop.rebased_prev_ingest() else { continue };
+        if !hop.ingest_s.is_finite() {
+            continue;
+        }
+        let site = if hop.site == NO_SITE { 0 } else { hop.site };
+        sites_seen.insert(site, ());
+        flow_id += 1;
+        spill_events(
+            &mut events,
+            &mut sites_seen,
+            flow_id,
+            hop.prev_site,
+            prev_t,
+            site,
+            0,
+            hop.ingest_s - hop.skew_s,
+        );
+    }
+
+    let mut meta: Vec<String> = sites_seen
+        .keys()
+        .map(|site| {
+            format!(
+                "{{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":{site},\
+                 \"args\":{{\"name\":\"site{site}\"}}}}"
+            )
+        })
+        .collect();
+    meta.extend(events);
+    format!(
+        "{{\"displayTimeUnit\":\"ms\",\"traceEvents\":[{}]}}\n",
+        meta.join(",")
+    )
+}
+
+/// The three events one spill hop renders: a home-hop slice on the
+/// origin site's spill track, and the `"s"` → `"f"` flow pair landing
+/// on the destination's intake.
+#[allow(clippy::too_many_arguments)]
+fn spill_events(
+    events: &mut Vec<String>,
+    sites_seen: &mut BTreeMap<u32, ()>,
+    flow_id: u64,
+    prev_site: u32,
+    prev_t: f64,
+    site: u32,
+    tid: u64,
+    land_t: f64,
+) {
+    let us = |t: f64| (t.max(0.0) * 1e6).round() as u64;
+    let prev_site = if prev_site == NO_SITE { 0 } else { prev_site };
+    sites_seen.insert(prev_site, ());
+    let dur = ((land_t - prev_t).max(1e-6) * 1e6).round() as u64;
+    events.push(format!(
+        "{{\"name\":\"spill_origin\",\"cat\":\"spill\",\"ph\":\"X\",\
+         \"ts\":{},\"dur\":{dur},\"pid\":{prev_site},\"tid\":0}}",
+        us(prev_t)
+    ));
+    events.push(format!(
+        "{{\"name\":\"spill\",\"cat\":\"spill\",\"ph\":\"s\",\
+         \"id\":{flow_id},\"ts\":{},\"pid\":{prev_site},\"tid\":0}}",
+        us(prev_t)
+    ));
+    events.push(format!(
+        "{{\"name\":\"spill\",\"cat\":\"spill\",\"ph\":\"f\",\"bp\":\"e\",\
+         \"id\":{flow_id},\"ts\":{},\"pid\":{site},\"tid\":{tid}}}",
+        us(land_t)
+    ));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::parse_json;
+    use std::time::Duration;
+
+    fn clock(skew_ms: f64, site: u32, epoch: Instant) -> RunClock {
+        RunClock::with_site(epoch, skew_ms / 1000.0, site)
+    }
+
+    /// Walk a request through every boundary on one clock, `step` apart.
+    fn full_stamps(clock: &RunClock, epoch: Instant, seed: u64) -> StageStamps {
+        let mut st = StageStamps::default();
+        let t = |k: u32| epoch + Duration::from_millis(k as u64);
+        st.on_ingest(clock, t(0), t(1), seed);
+        st.on_admit(clock, t(2));
+        st.on_cut(clock, t(4));
+        st.on_dispatch(clock, t(5));
+        st.on_exec_start(clock, t(6));
+        st.on_exec_end(clock, t(9));
+        st.on_reply(clock, t(10));
+        st
+    }
+
+    #[test]
+    fn stage_spans_telescope_to_end_to_end() {
+        let epoch = Instant::now();
+        let c = clock(0.0, 0, epoch);
+        let st = full_stamps(&c, epoch, 7);
+        assert!(st.complete());
+        assert!(!st.spilled());
+        let spans = st.stage_spans().unwrap();
+        let total: f64 = spans.iter().sum();
+        let e2e = st.reply_s - st.arrival_s;
+        assert!(
+            (total - e2e).abs() < 1e-9,
+            "spans must telescope: {total} vs {e2e}"
+        );
+        // and each boundary is where the walk put it
+        assert!((spans[Stage::DeviceExecute.index()] - 0.003).abs() < 1e-9);
+        assert!((spans[Stage::Intake.index()] - 0.001).abs() < 1e-9);
+    }
+
+    #[test]
+    fn skewed_clocks_rebase_to_a_monotone_cross_site_timeline() {
+        let epoch = Instant::now();
+        // home site runs 5 ms fast, landing site 4 ms slow: the raw
+        // stamps lie about ordering, the re-based ones cannot
+        let home = clock(5.0, 0, epoch);
+        let land = clock(-4.0, 1, epoch);
+        let mut st = StageStamps::default();
+        let t = |k: u64| epoch + Duration::from_millis(k);
+        st.on_ingest(&home, t(0), t(1), 3);
+        // denied at home; the fleet resubmits the same ctx at site 1
+        st.on_ingest(&land, t(0), t(3), 3);
+        assert!(st.spilled());
+        assert_eq!(st.prev_site, 0);
+        assert_eq!(st.site, 1);
+        // raw: home ingest reads 6 ms, landing ingest reads -1 ms —
+        // non-monotone on the face of it
+        assert!(st.prev_ingest_s > st.ingest_s);
+        // re-based: 1 ms then 3 ms — coherent
+        let prev = st.rebased_prev_ingest().unwrap();
+        let ingest = st.ingest_s - st.skew_s;
+        assert!(prev < ingest, "skew correction restores order");
+        assert!((prev - 0.001).abs() < 1e-9);
+        assert!((ingest - 0.003).abs() < 1e-9);
+        // complete the landing hop: spans are same-site differences
+        st.on_admit(&land, t(4));
+        st.on_cut(&land, t(5));
+        st.on_dispatch(&land, t(6));
+        st.on_exec_start(&land, t(7));
+        st.on_exec_end(&land, t(8));
+        st.on_reply(&land, t(9));
+        let spans = st.stage_spans().unwrap();
+        let total: f64 = spans.iter().sum();
+        assert!((total - 0.009).abs() < 1e-9, "arrival → reply, skew-free");
+        let starts = st.rebased_starts().unwrap();
+        for w in starts.windows(2) {
+            assert!(w[0] <= w[1] + 1e-12, "re-based timeline monotone");
+        }
+    }
+
+    #[test]
+    fn head_sampling_is_deterministic_and_near_half() {
+        let kept = (0..10_000u64).filter(|s| head_sample(*s)).count();
+        assert!(
+            (3_500..=6_500).contains(&kept),
+            "a mixed predicate keeps about half: {kept}"
+        );
+        for seed in [0u64, 1, 42, u64::MAX] {
+            assert_eq!(head_sample(seed), head_sample(seed));
+        }
+    }
+
+    #[test]
+    fn span_ring_overwrites_oldest_at_fixed_capacity() {
+        let epoch = Instant::now();
+        let c = clock(0.0, 0, epoch);
+        let mut ring = SpanRecorder::with_capacity(4);
+        for id in 0..6u64 {
+            ring.push(SpanRecord {
+                id,
+                seed: id,
+                class: PriorityClass::Normal,
+                n_images: 1,
+                stamps: full_stamps(&c, epoch, id),
+            });
+        }
+        assert_eq!(ring.len(), 4);
+        assert_eq!(ring.capacity(), 4);
+        assert_eq!(ring.overwritten(), 2);
+        let ids: Vec<u64> = ring.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![2, 3, 4, 5], "oldest → newest, oldest dropped");
+        // merge appends in order under the same bound
+        let mut other = SpanRecorder::with_capacity(4);
+        other.push(SpanRecord {
+            id: 9,
+            seed: 9,
+            class: PriorityClass::Low,
+            n_images: 2,
+            stamps: full_stamps(&c, epoch, 9),
+        });
+        ring.merge(&other);
+        let ids: Vec<u64> = ring.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![3, 4, 5, 9]);
+    }
+
+    #[test]
+    fn chrome_trace_renders_stages_and_spill_flows() {
+        let epoch = Instant::now();
+        let c0 = clock(2.0, 0, epoch);
+        let c1 = clock(-1.0, 1, epoch);
+        let mut ring = SpanRecorder::with_capacity(8);
+        ring.push(SpanRecord {
+            id: 1,
+            seed: 1,
+            class: PriorityClass::Normal,
+            n_images: 2,
+            stamps: full_stamps(&c0, epoch, 1),
+        });
+        // a spilled request that landed on site 1
+        let mut spilled = StageStamps::default();
+        let t = |k: u64| epoch + Duration::from_millis(k);
+        spilled.on_ingest(&c0, t(0), t(1), 2);
+        spilled.on_ingest(&c1, t(0), t(3), 2);
+        spilled.on_admit(&c1, t(4));
+        spilled.on_cut(&c1, t(5));
+        spilled.on_dispatch(&c1, t(6));
+        spilled.on_exec_start(&c1, t(7));
+        spilled.on_exec_end(&c1, t(8));
+        spilled.on_reply(&c1, t(9));
+        let mut ring1 = SpanRecorder::with_capacity(8);
+        ring1.push(SpanRecord {
+            id: 2,
+            seed: 2,
+            class: PriorityClass::High,
+            n_images: 1,
+            stamps: spilled,
+        });
+        let lanes: Vec<(&str, &SpanRecorder)> =
+            vec![("s0/fpga0", &ring), ("s1/fpga0", &ring1)];
+        let json = chrome_trace(lanes, &[]);
+
+        let v = parse_json(&json).expect("trace must be valid JSON");
+        let evs = v.req("traceEvents").unwrap().as_arr().unwrap();
+        for stage in Stage::ALL {
+            assert!(
+                evs.iter().any(|e| {
+                    e.req("ph").unwrap().as_str().unwrap() == "X"
+                        && e.req("name").unwrap().as_str().unwrap()
+                            == stage.as_str()
+                }),
+                "missing a complete event for stage {}",
+                stage.as_str()
+            );
+        }
+        for ph in ["s", "f"] {
+            assert!(
+                evs.iter().any(|e| {
+                    e.req("ph").unwrap().as_str().unwrap() == ph
+                }),
+                "spilled record must emit a {ph} flow event"
+            );
+        }
+        // both site tracks named
+        assert!(json.contains("site0") && json.contains("site1"));
+
+        // an un-ringed denial hop still renders its flow pair
+        let mut denied = StageStamps::default();
+        denied.on_ingest(&c0, t(0), t(1), 5);
+        denied.on_ingest(&c1, t(0), t(2), 5);
+        let empty: Vec<(&str, &SpanRecorder)> = Vec::new();
+        let json = chrome_trace(empty, &[denied]);
+        let v = parse_json(&json).unwrap();
+        let evs = v.req("traceEvents").unwrap().as_arr().unwrap();
+        assert!(evs.iter().any(|e| {
+            e.req("ph").unwrap().as_str().unwrap() == "s"
+        }));
+    }
+}

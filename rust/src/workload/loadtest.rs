@@ -42,7 +42,8 @@ use crate::coordinator::{
 };
 use crate::stats::Welford;
 use crate::telemetry::{
-    variation_of, weighted_cv, LogHistogram, SloCounter, Variation,
+    chrome_trace, variation_of, weighted_cv, LogHistogram, SloCounter,
+    Variation,
 };
 use crate::util::Rng;
 use anyhow::{Context, Result};
@@ -73,6 +74,9 @@ pub struct LoadtestOpts {
     /// Write the final trial's windowed latency-drift histogram shards
     /// as CSV (`ServingReport::drift_csv`) to this path.
     pub drift_csv: Option<PathBuf>,
+    /// Write the final trial's sampled request lifecycles as a Chrome
+    /// trace-event JSON file (Perfetto-loadable; one track per lane).
+    pub trace_out: Option<PathBuf>,
 }
 
 impl Default for LoadtestOpts {
@@ -86,6 +90,7 @@ impl Default for LoadtestOpts {
             closed: 0,
             think: Duration::ZERO,
             drift_csv: None,
+            trace_out: None,
         }
     }
 }
@@ -251,6 +256,7 @@ pub(crate) fn event_ctx(e: &TraceEvent, arrival: Instant) -> RequestCtx {
             .map(|d| arrival + Duration::from_secs_f64(d)),
         class: e.class,
         seed: e.seed,
+        stamps: Default::default(),
     }
 }
 
@@ -367,6 +373,7 @@ pub fn run_loadtest(trace: &Trace, opts: &LoadtestOpts) -> Result<LoadtestReport
             executors: opts.executors,
             quant: any_quant.then_some(QFormat::new(16, 8)),
             shard_batches: opts.shard_batches,
+            clock: None,
         })
         .with_context(|| format!("starting the pool for trial {trial}"))?;
 
@@ -405,8 +412,8 @@ pub fn run_loadtest(trace: &Trace, opts: &LoadtestOpts) -> Result<LoadtestReport
                         .push(per_image);
                     lane.dev_all.push(per_image);
                 }
-                RequestOutcome::Shed => trial_shed += 1,
-                RequestOutcome::Rejected => trial_rejected += 1,
+                RequestOutcome::Shed { .. } => trial_shed += 1,
+                RequestOutcome::Rejected { .. } => trial_rejected += 1,
                 RequestOutcome::Lost => lost += 1,
             }
         }
@@ -419,6 +426,15 @@ pub fn run_loadtest(trace: &Trace, opts: &LoadtestOpts) -> Result<LoadtestReport
                 std::fs::write(path, report.drift_csv()).with_context(
                     || format!("writing drift CSV to {}", path.display()),
                 )?;
+            }
+            if let Some(path) = &opts.trace_out {
+                // single-site run: the span rings alone carry every
+                // sampled lifecycle, no cross-site hops to splice in
+                let snapshot = coord.metrics_snapshot();
+                std::fs::write(path, chrome_trace(snapshot.span_lanes(), &[]))
+                    .with_context(|| {
+                        format!("writing Chrome trace to {}", path.display())
+                    })?;
             }
         }
         shed += trial_shed;

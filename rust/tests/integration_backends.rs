@@ -39,6 +39,7 @@ fn start_pool(
         executors: 0,
         quant,
         shard_batches: false,
+        clock: None,
     })
 }
 
@@ -191,6 +192,7 @@ fn sharded_mixed_pool_stays_deterministic() {
         executors: 0,
         quant: None,
         shard_batches: true,
+        clock: None,
     })
     .unwrap();
     // a burst that batches then shards across the capable lanes

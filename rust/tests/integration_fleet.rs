@@ -7,7 +7,10 @@
 //! (2) cross-site overflow spill engages under a flash crowd with the
 //! `submitted = served + shed + rejected + lost` accounting intact;
 //! (3) the versioned JSON report schema round-trips; (4) a mid-run site
-//! failure goes drain-then-dark and the fold still closes.
+//! failure goes drain-then-dark and the fold still closes; (5) a
+//! spilled request's two-site lifecycle re-bases onto one monotone
+//! fleet timeline under seeded clock skew, and the fleet Chrome-trace
+//! export splices the hop in as a flow-event pair.
 
 use edgedcnn::artifacts::write_synthetic;
 use edgedcnn::config::{BackendCfg, DeviceKind};
@@ -209,6 +212,100 @@ fn flash_crowd_spills_cross_site_and_accounting_stays_closed() {
     assert_eq!(v.req("sites").unwrap().as_arr().unwrap().len(), 3);
     let report = v.req("report").unwrap();
     assert_eq!(report.req("version").unwrap().as_u64().unwrap(), 1);
+}
+
+/// The flight-recorder acceptance claim: with deliberately skewed site
+/// clocks, a served spilled request's two-site lifecycle re-bases onto
+/// ONE monotone fleet timeline — home-site intake before every
+/// landing-site stamp, landing stamps in lifecycle order — and the
+/// fleet Chrome trace export renders the hop as a flow-event pair
+/// between the site tracks.
+#[test]
+fn spilled_lifecycle_rebases_onto_a_monotone_two_site_timeline() {
+    let dir = synthetic_dir();
+    let mut scenario = Scenario::builtin("flash").unwrap();
+    scenario.requests = 48;
+    let trace = Trace::generate(&scenario).unwrap();
+
+    // flash against depth-1/defer-1 sites forces spills, but only a
+    // spilled request that is also *served* carries the full two-site
+    // timeline — retry a few fleet seeds until one completes
+    let mut picked = None;
+    for seed in [11u64, 13, 29] {
+        let run = run_fleet(
+            &trace,
+            &FleetCfg {
+                artifacts_dir: dir.path().to_path_buf(),
+                sites: 3,
+                skew_s: 0.004,
+                backends: BackendCfg {
+                    kinds: vec![DeviceKind::Fpga],
+                    max_queue_depth: 1,
+                    admit_max_deferred: 1,
+                    ..Default::default()
+                },
+                seed,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert!(run.spilled > 0, "flash vs depth-1 sites must spill");
+        if !run.spill_stamps.is_empty() {
+            picked = Some(run);
+            break;
+        }
+    }
+    let run = picked
+        .expect("three flash seeds served no spilled request end to end");
+    assert!(run.spill_served > 0);
+
+    for s in &run.spill_stamps {
+        assert!(s.spilled() && s.complete(), "examples are full spills");
+        assert_ne!(s.site, s.prev_site, "the hop crossed sites");
+        let home_ingest = s.rebased_prev_ingest().unwrap();
+        let starts = s.rebased_starts().unwrap();
+        // skew-corrected ordering: scheduled arrival, then the home
+        // hop's intake, then the entire landing-site lifecycle
+        assert!(
+            starts[0] <= home_ingest,
+            "arrival {} must precede home intake {home_ingest}",
+            starts[0]
+        );
+        assert!(
+            home_ingest <= starts[1],
+            "home intake {home_ingest} must precede landing ingest {}",
+            starts[1]
+        );
+        for w in starts[1..].windows(2) {
+            assert!(
+                w[0] <= w[1] + 1e-12,
+                "landing timeline must stay monotone: {starts:?}"
+            );
+        }
+        // stage spans still telescope arrival -> reply (same-site
+        // differences, so the site skews cancel out of the sum)
+        let spans = s.stage_spans().unwrap();
+        let total: f64 = spans.iter().sum();
+        close(total, s.reply_s - s.arrival_s, "spill spans telescope");
+    }
+
+    // the fleet trace export splices the hop in as a flow pair
+    let json = run.chrome_trace();
+    let v = parse_json(&json).expect("fleet trace must be valid JSON");
+    let evs = v.req("traceEvents").unwrap().as_arr().unwrap();
+    for ph in ["s", "f"] {
+        assert!(
+            evs.iter()
+                .any(|e| e.req("ph").unwrap().as_str().unwrap() == ph),
+            "fleet trace must carry a \"{ph}\" flow event for the spill"
+        );
+    }
+    assert!(
+        evs.iter().any(|e| {
+            e.req("name").unwrap().as_str().unwrap() == "spill_origin"
+        }),
+        "the home hop renders a spill_origin slice"
+    );
 }
 
 /// The site-failure scenario: one site fail-stops mid-run

@@ -11,8 +11,10 @@ use edgedcnn::artifacts::write_synthetic;
 use edgedcnn::config::{BackendCfg, DeviceKind};
 use edgedcnn::coordinator::{
     BatcherConfig, Coordinator, CoordinatorConfig, PriorityClass, RequestCtx,
+    StageBreakdown, WorkloadSpec,
 };
 use edgedcnn::quant::QFormat;
+use edgedcnn::telemetry::Stage;
 use edgedcnn::util::TempDir;
 use edgedcnn::workload::{run_loadtest, LoadtestOpts, Scenario, Trace};
 use std::collections::BTreeMap;
@@ -177,6 +179,7 @@ fn admission_control_rejects_and_accounts_under_flood() {
         executors: 0,
         quant: None,
         shard_batches: false,
+        clock: None,
     })
     .unwrap();
 
@@ -246,6 +249,7 @@ fn deferred_drain_order_and_no_starvation_across_networks() {
         executors: 0,
         quant: Some(QFormat::new(16, 8)),
         shard_batches: false,
+        clock: None,
     })
     .unwrap();
 
@@ -381,6 +385,157 @@ fn deadline_attainment_fpga_at_least_gpu_at_equal_deadlines() {
          deadlines: fpga {fpga_att:.3} ({fpga_met}/{fpga_late}) vs gpu \
          {gpu_att:.3} ({gpu_met}/{gpu_late})"
     );
+}
+
+/// The flight recorder's integration payoff: the stage breakdown
+/// separates *where* latency varies.  Aggregate request-latency CV
+/// mixes queue congestion with device jitter; the per-stage CV columns
+/// pull them apart — the FPGA lane's device-execute stage varies less
+/// than the GPU lane's (the paper's Table II claim at stage
+/// granularity), while both lanes' queue-wait variation under a backlog
+/// dwarfs the FPGA's device jitter (so the aggregate CV says nothing
+/// about the device until the stages are separated).
+#[test]
+fn stage_breakdown_separates_device_execute_cv_from_queue_wait() {
+    let dir = synthetic_dir();
+    let coord = Coordinator::start(CoordinatorConfig {
+        artifacts_dir: dir.path().to_path_buf(),
+        networks: vec!["mnist".to_string()],
+        // single-request batches: every device-execute span measures one
+        // 1-image execute, so the stage CV is pure device jitter (no
+        // batch-size mixing)
+        batcher: BatcherConfig {
+            max_batch: 1,
+            max_wait: Duration::from_millis(1),
+        },
+        backends: BackendCfg {
+            kinds: vec![DeviceKind::Fpga, DeviceKind::Gpu],
+            // the open-loop schedule outruns the pool on purpose (queue
+            // wait must be nonzero); nothing may be turned away
+            admit_max_deferred: 10_000,
+            ..Default::default()
+        },
+        executors: 0,
+        quant: None,
+        shard_batches: true,
+        clock: None,
+    })
+    .unwrap();
+    let report = coord
+        .serve_workload(&WorkloadSpec {
+            network: "mnist".to_string(),
+            requests: 64,
+            images_per_request: 1,
+            interarrival: Duration::from_millis(1),
+            seed: 42,
+        })
+        .unwrap();
+
+    // schema sanity: every cell carries all seven stages, finite and
+    // ordered
+    assert!(!report.stage_breakdown.is_empty(), "stages recorded");
+    let mut total = 0u64;
+    for cell in &report.stage_breakdown {
+        assert!(cell.count > 0, "{}: empty cell", cell.backend);
+        total += cell.count;
+        assert_eq!(cell.stages.len(), Stage::ALL.len());
+        for row in &cell.stages {
+            assert!(row.mean_s.is_finite() && row.mean_s >= 0.0);
+            assert!(row.p99_s >= row.p50_s, "{}: {:?}", cell.backend, row);
+            assert!(row.cv.is_finite() && row.cv >= 0.0);
+        }
+    }
+    assert_eq!(total, 64, "every served request decomposed into stages");
+
+    let cell = |prefix: &str| -> &StageBreakdown {
+        report
+            .stage_breakdown
+            .iter()
+            .find(|c| c.backend.starts_with(prefix))
+            .unwrap_or_else(|| panic!("no {prefix} cell"))
+    };
+    let fpga_dev = cell("fpga").stage(Stage::DeviceExecute).unwrap();
+    let gpu_dev = cell("gpu").stage(Stage::DeviceExecute).unwrap();
+    let fpga_queue = cell("fpga").stage(Stage::QueueWait).unwrap();
+
+    // the device-stage CV gap: FPGA executes with bounded jitter, the
+    // GPU model carries measurement noise + interference stalls
+    assert!(
+        fpga_dev.cv < gpu_dev.cv,
+        "FPGA device-execute must vary less: fpga cv {:.4} vs gpu cv {:.4}",
+        fpga_dev.cv,
+        gpu_dev.cv
+    );
+    // …and queue congestion (which aggregate latency CV folds in) is a
+    // different axis entirely: under this backlog the FPGA lane's
+    // queue-wait varies far more than its device execute
+    assert!(
+        fpga_queue.cv > fpga_dev.cv,
+        "queue-wait cv {:.4} must dominate fpga device cv {:.4}",
+        fpga_queue.cv,
+        fpga_dev.cv
+    );
+    assert!(
+        fpga_queue.mean_s > 0.0,
+        "the open-loop schedule must actually build a queue"
+    );
+}
+
+/// Stage spans must telescope to the end-to-end latency the response
+/// reports — for the f32 network *and* its fixed-point `.q` twin (the
+/// quantized path shares the lifecycle plumbing, not just the f32
+/// path).  Both numbers measure charged-arrival → reply with separate
+/// `Instant` captures, so equality holds to sub-millisecond slack.
+#[test]
+fn stage_spans_telescope_to_reported_latency_for_both_precisions() {
+    let dir = synthetic_dir();
+    let coord = Coordinator::start(CoordinatorConfig {
+        artifacts_dir: dir.path().to_path_buf(),
+        networks: vec!["mnist".to_string()],
+        batcher: BatcherConfig {
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+        },
+        backends: BackendCfg {
+            kinds: vec![DeviceKind::Fpga],
+            admit_max_deferred: 10_000,
+            ..Default::default()
+        },
+        executors: 0,
+        quant: Some(QFormat::new(16, 8)),
+        shard_batches: false,
+        clock: None,
+    })
+    .unwrap();
+
+    for network in ["mnist", "mnist.q"] {
+        for i in 0..16u64 {
+            let resp = coord
+                .request(network)
+                .images(2)
+                .seed(3000 + i)
+                .blocking()
+                .unwrap();
+            let spans = resp
+                .stamps
+                .stage_spans()
+                .expect("served request has a complete lifecycle");
+            let sum: f64 = spans.iter().sum();
+            let tolerance = 2e-3 + 0.05 * resp.latency_s;
+            assert!(
+                (sum - resp.latency_s).abs() <= tolerance,
+                "{network} req {i}: stage sum {sum:.6} vs latency \
+                 {:.6} (tolerance {tolerance:.6}, spans {spans:?})",
+                resp.latency_s
+            );
+            // within the lifecycle, device execute is bounded by the
+            // response's own substrate wall time plus queueing slack
+            assert!(
+                spans[Stage::DeviceExecute.index()] > 0.0,
+                "{network} req {i}: device stage must take time"
+            );
+        }
+    }
 }
 
 /// Shed-at-intake and served-late are distinct columns: a deadline the

@@ -397,6 +397,7 @@ fn prop_edf_cut_never_serves_feasible_after_infeasible_same_class() {
                 deadline,
                 class: classes[rng.range_usize(0, classes.len())],
                 seed: id,
+                stamps: Default::default(),
             };
             if let Some(batch) =
                 b.push(InferenceRequest::with_ctx(id, "mnist", 1, ctx), t0)
@@ -517,6 +518,73 @@ fn prop_npy_roundtrip_random_shapes() {
         let (s2, d2) = read_npy_f32(&path).unwrap();
         assert_eq!(s2, shape);
         assert_eq!(d2, data);
+    }
+}
+
+/// Flight-recorder algebra: for ANY monotone boundary walk under ANY
+/// site skews — spilled or not — the seven stage spans are non-negative
+/// and telescope exactly to reply − arrival, the skew-corrected
+/// timeline is monotone, and a spill's home intake lands between the
+/// arrival and the landing-site ingest.
+#[test]
+fn prop_stage_spans_telescope_under_random_walks_and_skew() {
+    use edgedcnn::telemetry::{RunClock, StageStamps};
+    let mut rng = Rng::seed_from_u64(0xF11);
+    let epoch = Instant::now();
+    let at = |us: u64| epoch + Duration::from_micros(us);
+    fn step(rng: &mut Rng, t: &mut u64) -> u64 {
+        *t += 1 + rng.range_usize(0, 2000) as u64;
+        *t
+    }
+    for case in 0..200u64 {
+        let home = RunClock::with_site(epoch, rng.range_f64(-0.01, 0.01), 0);
+        let land = RunClock::with_site(epoch, rng.range_f64(-0.01, 0.01), 1);
+        let mut t = rng.range_usize(0, 1000) as u64;
+        let arrival = at(t);
+        let spilled = case % 3 == 0;
+        let mut st = StageStamps::default();
+        if spilled {
+            // a denied home hop: ingest there, then re-ingest on the
+            // landing site as the fleet's spill resubmission does
+            let ti = step(&mut rng, &mut t);
+            st.on_ingest(&home, arrival, at(ti), case);
+        }
+        let clock = if spilled { &land } else { &home };
+        let ti = step(&mut rng, &mut t);
+        st.on_ingest(clock, arrival, at(ti), case);
+        st.on_admit(clock, at(step(&mut rng, &mut t)));
+        st.on_cut(clock, at(step(&mut rng, &mut t)));
+        st.on_dispatch(clock, at(step(&mut rng, &mut t)));
+        st.on_exec_start(clock, at(step(&mut rng, &mut t)));
+        st.on_exec_end(clock, at(step(&mut rng, &mut t)));
+        st.on_reply(clock, at(step(&mut rng, &mut t)));
+
+        assert!(st.complete(), "case {case}: all boundaries stamped");
+        assert_eq!(st.spilled(), spilled, "case {case}");
+        let spans = st.stage_spans().unwrap();
+        assert!(spans.iter().all(|s| *s >= 0.0), "case {case}: {spans:?}");
+        let total: f64 = spans.iter().sum();
+        let e2e = st.reply_s - st.arrival_s;
+        assert!(
+            (total - e2e).abs() <= 1e-9 * (1.0 + e2e.abs()),
+            "case {case}: spans must telescope: {total} vs {e2e}"
+        );
+        let starts = st.rebased_starts().unwrap();
+        for w in starts.windows(2) {
+            assert!(
+                w[0] <= w[1] + 1e-12,
+                "case {case}: rebased timeline monotone: {starts:?}"
+            );
+        }
+        if let Some(prev) = st.rebased_prev_ingest() {
+            assert!(
+                starts[0] <= prev + 1e-12 && prev <= starts[1] + 1e-12,
+                "case {case}: home intake {prev} must land between \
+                 arrival {} and landing ingest {}",
+                starts[0],
+                starts[1]
+            );
+        }
     }
 }
 

@@ -279,14 +279,16 @@ impl ArtifactDir {
         let j = parse_json(&text)
             .with_context(|| format!("parsing {}", path.display()))?;
         let version = j.req("version")?.as_usize()?;
-        ensure!(version == 1, "unsupported quant sidecar version {version}");
+        ensure!(
+            version == 1 || version == 2,
+            "unsupported quant sidecar version {version}"
+        );
         let bits = j.req("bits")?.as_usize()? as u32;
         let frac = j.req("frac")?.as_usize()? as u32;
         let mut layers = Vec::new();
         for l in j.req("layers")?.as_arr()? {
             let wf = l.req("w")?.as_str()?;
             let bf = l.req("b")?.as_str()?;
-            let scale_exp = l.req("scale_exp")?.as_f64()? as i32;
             let (w_shape, w_raw) = read_npy_i32(&self.root.join(wf))
                 .with_context(|| format!("loading quantized weights {wf}"))?;
             let (b_shape, b_raw) = read_npy_i32(&self.root.join(bf))
@@ -299,11 +301,28 @@ impl ArtifactDir {
                 b_shape.len() == 1 && b_shape[0] == b_raw.len(),
                 "quantized bias file {bf} is not a vector"
             );
+            // v2 carries per-output-channel exponents; v1's single
+            // per-layer exponent expands to a uniform vector.
+            let scale_exps: Vec<i32> = if version >= 2 {
+                let arr = l.req("scale_exps")?.as_arr()?;
+                ensure!(
+                    arr.len() == b_raw.len(),
+                    "scale_exps length {} != {} output channels in {wf}",
+                    arr.len(),
+                    b_raw.len()
+                );
+                arr.iter()
+                    .map(|e| Ok(e.as_f64()? as i32))
+                    .collect::<Result<_>>()?
+            } else {
+                let e = l.req("scale_exp")?.as_f64()? as i32;
+                vec![e; b_raw.len()]
+            };
             layers.push(QuantLayerRaw {
                 w_shape,
                 w_raw,
                 b_raw,
-                scale_exp,
+                scale_exps,
             });
         }
         ensure!(!layers.is_empty(), "{name}: empty quant sidecar");
@@ -504,8 +523,10 @@ pub fn write_synthetic(
 
 /// Export a quantized weight set next to an artifact directory: per
 /// layer an `<i2>`/`<i4>` npy pair (`weights/<net>_l<i>_{wq,bq}.npy`)
-/// plus a `<net>_quant.json` sidecar carrying the format and the
-/// calibrated per-layer scales.  Returns the sidecar path.
+/// plus a versioned `<net>_quant.json` sidecar (schema v2) carrying the
+/// format and the calibrated per-output-channel scale exponents
+/// (`scale_exps`; v1 sidecars with a scalar per-layer `scale_exp` still
+/// import).  Returns the sidecar path.
 pub fn export_quantized(
     dir: &Path,
     name: &str,
@@ -532,13 +553,18 @@ pub fn export_quantized(
         if i > 0 {
             layers_json.push_str(",\n");
         }
+        let exps = l
+            .scale_exps
+            .iter()
+            .map(|e| e.to_string())
+            .collect::<Vec<_>>()
+            .join(", ");
         layers_json.push_str(&format!(
-            r#"  {{"w": "{wf}", "b": "{bf}", "scale_exp": {}}}"#,
-            l.scale_exp
+            r#"  {{"w": "{wf}", "b": "{bf}", "scale_exps": [{exps}]}}"#,
         ));
     }
     let sidecar = format!(
-        "{{\n \"version\": 1,\n \"network\": \"{name}\",\n \"bits\": {},\n \
+        "{{\n \"version\": 2,\n \"network\": \"{name}\",\n \"bits\": {},\n \
          \"frac\": {},\n \"layers\": [\n{layers_json}\n ]\n}}\n",
         fmt.bits, fmt.frac
     );
@@ -560,7 +586,11 @@ mod tests {
         let dir = TempDir::new().unwrap();
         let a = write_synthetic(dir.path(), &["mnist"], 2, 5).unwrap();
         let weights = a.load_weights("mnist").unwrap();
-        for fmt in [QFormat::new(16, 8), QFormat::new(32, 16)] {
+        for fmt in [
+            QFormat::new(8, 6),
+            QFormat::new(16, 8),
+            QFormat::new(32, 16),
+        ] {
             let gen =
                 QuantizedGenerator::quantize(fmt, &weights, Rounding::Nearest)
                     .unwrap();
@@ -574,6 +604,45 @@ mod tests {
         }
         // missing sidecar errors cleanly
         assert!(a.load_quantized("celeba").is_err());
+    }
+
+    #[test]
+    fn v1_sidecar_with_per_layer_scale_still_loads() {
+        let dir = TempDir::new().unwrap();
+        let a = write_synthetic(dir.path(), &["mnist"], 2, 5).unwrap();
+        let weights = a.load_weights("mnist").unwrap();
+        let gen = QuantizedGenerator::quantize(
+            QFormat::new(16, 8),
+            &weights,
+            Rounding::Nearest,
+        )
+        .unwrap();
+        export_quantized(dir.path(), "mnist", &gen).unwrap();
+        // rewrite the v2 sidecar as the legacy v1 schema: scalar
+        // per-layer "scale_exp" instead of the per-channel array
+        let n_layers = gen.export_raw().len();
+        let mut layers_json = String::new();
+        for i in 0..n_layers {
+            if i > 0 {
+                layers_json.push_str(",\n");
+            }
+            layers_json.push_str(&format!(
+                r#"  {{"w": "weights/mnist_l{i}_wq.npy", "b": "weights/mnist_l{i}_bq.npy", "scale_exp": -3}}"#,
+            ));
+        }
+        let v1 = format!(
+            "{{\n \"version\": 1,\n \"network\": \"mnist\",\n \"bits\": 16,\n \
+             \"frac\": 8,\n \"layers\": [\n{layers_json}\n ]\n}}\n"
+        );
+        std::fs::write(dir.path().join("mnist_quant.json"), v1).unwrap();
+        let (fmt, raw) = a.load_quantized("mnist").unwrap();
+        assert_eq!(fmt, QFormat::new(16, 8));
+        for l in &raw {
+            // the scalar expands to one exponent per output channel
+            assert_eq!(l.scale_exps, vec![-3; l.b_raw.len()]);
+        }
+        // and the expanded form still builds a generator
+        assert!(QuantizedGenerator::from_raw(fmt, &raw).is_ok());
     }
 
     #[test]

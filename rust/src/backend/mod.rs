@@ -240,10 +240,13 @@ mod tests {
         let gpu = Capabilities::of_kind(DeviceKind::Gpu);
         let cpu = Capabilities::of_kind(DeviceKind::Cpu);
         let q88 = Precision::Fixed(crate::quant::QFormat::new(16, 8));
+        let q8 = Precision::Fixed(crate::quant::QFormat::new(8, 6));
         assert!(fpga.supports(Precision::F32) && fpga.supports(q88));
         assert!(cpu.supports(Precision::F32) && cpu.supports(q88));
+        assert!(fpga.supports(q8) && cpu.supports(q8), "i8 datapath");
         assert!(gpu.supports(Precision::F32));
         assert!(!gpu.supports(q88), "the cuDNN baseline is f32-only");
+        assert!(!gpu.supports(q8), "`.q8` routes around the GPU too");
     }
 
     #[test]

@@ -114,7 +114,12 @@ pub(crate) fn load_net_spec(
     name: &str,
     precision: Precision,
 ) -> Result<NetSpec> {
-    let base = name.strip_suffix(".q").unwrap_or(name).to_string();
+    // `.q8` and `.q` twins both serve from the base f32 artifact set
+    let base = name
+        .strip_suffix(".q8")
+        .or_else(|| name.strip_suffix(".q"))
+        .unwrap_or(name)
+        .to_string();
     let manifest_net = artifacts.network(&base)?;
     let cfg = artifacts.network_cfg(&base)?;
     // sanity: manifest must agree with the built-in architecture

@@ -51,9 +51,16 @@ pub struct CoordinatorConfig {
     pub executors: usize,
     /// When set, every preloaded network also serves a fixed-point twin
     /// under the logical name `<name>.q` (quantized at startup with
-    /// per-layer scale calibration) — side by side with the f32 path.
-    /// Twins route only to fixed-point-capable backends (not the GPU).
+    /// per-output-channel scale calibration) — side by side with the
+    /// f32 path.  Twins route only to fixed-point-capable backends (not
+    /// the GPU).
     pub quant: Option<QFormat>,
+    /// When set, every preloaded network also serves an 8-bit twin
+    /// under the logical name `<name>.q8` (default format q2.6) —
+    /// independent of `quant`, so a pool can serve f32, `.q` and `.q8`
+    /// side by side.  Like `.q`, the `.q8` twins route around the
+    /// f32-only GPU lane.
+    pub quant8: Option<QFormat>,
     /// Intra-batch parallelism: split multi-request batches across the
     /// capable lanes (round-robin at request granularity) instead of
     /// batch-at-a-time dispatch.  Trades the per-network ordering
@@ -75,6 +82,7 @@ impl Default for CoordinatorConfig {
             backends: BackendCfg::default(),
             executors: 0,
             quant: None,
+            quant8: None,
             shard_batches: false,
             clock: None,
         }
@@ -82,8 +90,8 @@ impl Default for CoordinatorConfig {
 }
 
 /// All logical networks this config serves, with served precisions:
-/// the base (f32) networks plus their `.q` quantized twins when
-/// enabled.
+/// the base (f32) networks plus their `.q` / `.q8` quantized twins
+/// when enabled.
 fn logical_networks(config: &CoordinatorConfig) -> Vec<(String, Precision)> {
     let mut names: Vec<(String, Precision)> = config
         .networks
@@ -96,6 +104,14 @@ fn logical_networks(config: &CoordinatorConfig) -> Vec<(String, Precision)> {
                 .networks
                 .iter()
                 .map(|n| (format!("{n}.q"), Precision::Fixed(fmt))),
+        );
+    }
+    if let Some(fmt) = config.quant8 {
+        names.extend(
+            config
+                .networks
+                .iter()
+                .map(|n| (format!("{n}.q8"), Precision::Fixed(fmt))),
         );
     }
     names
@@ -652,5 +668,12 @@ mod tests {
             nets[1].1,
             Precision::Fixed(QFormat::new(16, 8))
         );
+        // the int8 twin is independent of `quant`: enabling both serves
+        // f32, `.q` and `.q8` side by side
+        cfg.quant8 = Some(QFormat::new(8, 6));
+        let nets = logical_networks(&cfg);
+        assert_eq!(nets.len(), 3);
+        assert_eq!(nets[2].0, "mnist.q8");
+        assert_eq!(nets[2].1, Precision::Fixed(QFormat::new(8, 6)));
     }
 }

@@ -415,6 +415,7 @@ fn execute_tile_into<T: Element>(
         1 => tile_kernel::<T, 1>(ctx, job, out),
         2 => tile_kernel::<T, 2>(ctx, job, out),
         8 => tile_kernel::<T, 8>(ctx, job, out),
+        16 => tile_kernel::<T, 16>(ctx, job, out),
         _ => tile_kernel::<T, 4>(ctx, job, out),
     }
 }

@@ -245,6 +245,7 @@ fn standard_block_into<T: Element>(
         1 => standard_block_kernel::<T, 1>(ctx, job, out),
         2 => standard_block_kernel::<T, 2>(ctx, job, out),
         8 => standard_block_kernel::<T, 8>(ctx, job, out),
+        16 => standard_block_kernel::<T, 16>(ctx, job, out),
         _ => standard_block_kernel::<T, 4>(ctx, job, out),
     }
 }

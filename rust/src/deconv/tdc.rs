@@ -293,6 +293,7 @@ fn tdc_block_into<T: Element>(
         1 => tdc_block_kernel::<T, 1>(ctx, job, out),
         2 => tdc_block_kernel::<T, 2>(ctx, job, out),
         8 => tdc_block_kernel::<T, 8>(ctx, job, out),
+        16 => tdc_block_kernel::<T, 16>(ctx, job, out),
         _ => tdc_block_kernel::<T, 4>(ctx, job, out),
     }
 }

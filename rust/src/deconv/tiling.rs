@@ -59,8 +59,10 @@ impl TileSchedule {
     }
 }
 
-/// Lane-accumulator widths the blocked kernels monomorphize for.
-pub const SUPPORTED_LANES: [usize; 4] = [1, 2, 4, 8];
+/// Lane-accumulator widths the blocked kernels monomorphize for (16
+/// exists for the ×4-packed i8 datapath, where each DSP-equivalent
+/// issues four MACs per cycle).
+pub const SUPPORTED_LANES: [usize; 5] = [1, 2, 4, 8, 16];
 
 /// Two-level blocking geometry — the single struct both the CPU
 /// kernels and the FPGA CU model consume, so software cache blocking

@@ -221,4 +221,33 @@ mod tests {
             "narrower elements feed more MACs per byte"
         );
     }
+
+    #[test]
+    fn int8_shrinks_footprints_and_admits_fatter_schedules() {
+        let (c_in, c_out, k, s) = SHAPE;
+        let sched = BlockSchedule { micro: 24, macro_tiles: 4, lanes: 8 };
+        let m = CacheModel::default();
+        // i8: 1-byte elements, 4-byte accumulators — strictly smaller
+        // working set than both q8.8 (2, 6) and f32 (4, 4)
+        let i8p = score_block_schedule(&m, sched, c_in, c_out, k, s, 1, 4);
+        let q16 = score_block_schedule(&m, sched, c_in, c_out, k, s, 2, 6);
+        let f32p = score_block_schedule(&m, sched, c_in, c_out, k, s, 4, 4);
+        assert!(i8p.l1_footprint < q16.l1_footprint);
+        assert!(i8p.l2_footprint < q16.l2_footprint);
+        assert!(i8p.l1_footprint < f32p.l1_footprint);
+        assert!(i8p.reuse > q16.reuse, "4× the MACs per streamed byte");
+        // a cache sized so this fat schedule spills at q8.8 widths but
+        // stays resident at i8 — the autotuner headroom the narrow
+        // store buys
+        let pinch = CacheModel {
+            l1_bytes: i8p.l1_footprint,
+            l2_bytes: i8p.l2_footprint,
+        };
+        let i8_pinched =
+            score_block_schedule(&pinch, sched, c_in, c_out, k, s, 1, 4);
+        let q16_pinched =
+            score_block_schedule(&pinch, sched, c_in, c_out, k, s, 2, 6);
+        assert!(i8_pinched.l1_resident && i8_pinched.l2_resident);
+        assert!(!q16_pinched.l1_resident);
+    }
 }

@@ -5,8 +5,9 @@
 //! timed through every kernel × precision cell: the three production
 //! kernels (`standard`, `reverse-loop`, `tdc`) plus the **frozen
 //! scalar reference** of the reverse loop
-//! ([`crate::deconv::deconv_reverse_loop_ref`]) in `f32`, Q8.8 and
-//! Q16.16.  Each cell records robust [`TrialStats`] (median + MAD +
+//! ([`crate::deconv::deconv_reverse_loop_ref`]) in `f32`, packed-int8
+//! Q2.6 (`q8`), Q8.8 and Q16.16.  Each cell records robust
+//! [`TrialStats`] (median + MAD +
 //! p99 over individually timed trials) and the derived img/s and
 //! ns/MAC figures; a serving section drives each backend kind through
 //! the coordinator over synthetic artifacts and records its img/s and
@@ -37,7 +38,7 @@ use crate::deconv::{
     deconv_reverse_loop, deconv_reverse_loop_blocked,
     deconv_reverse_loop_ref, deconv_standard, deconv_tdc, ReverseLoopOpts,
 };
-use crate::quant::{Element, Q16_16, Q8_8};
+use crate::quant::{Element, QFormat, Q16_16, Q2_6, Q8_8};
 use crate::tensor::TensorT;
 use crate::util::{
     escape_json, parse_json, Bencher, Json, Rng, TempDir, TrialStats,
@@ -117,7 +118,8 @@ impl KernelRow {
 /// One serving-path row (informational, never gated).
 #[derive(Debug, Clone, PartialEq)]
 pub struct ServingRow {
-    /// `serve-<backend>`, e.g. `serve-fpga`.
+    /// `serve-<backend>`, e.g. `serve-fpga` — or `serve-fpga-q8` for
+    /// the packed-int8 `.q8` twin.
     pub name: String,
     pub images_per_s: f64,
     pub p99_s: f64,
@@ -233,10 +235,13 @@ fn rows_for<T: Element>(
 }
 
 /// Drive one backend kind through the coordinator and record its row.
+/// `q8` serves the packed-int8 `mnist.q8` twin instead of f32 (only
+/// meaningful for kinds whose capability set admits fixed-point).
 fn serving_row(
     dir: &std::path::Path,
     kind: DeviceKind,
     smoke: bool,
+    q8: bool,
 ) -> Result<ServingRow> {
     let coord = Coordinator::start(CoordinatorConfig {
         artifacts_dir: dir.to_path_buf(),
@@ -245,19 +250,25 @@ fn serving_row(
         backends: BackendCfg { kinds: vec![kind], ..Default::default() },
         executors: 0,
         quant: None,
+        quant8: q8.then_some(QFormat::new(8, 6)),
         shard_batches: false,
         clock: None,
     })
     .with_context(|| format!("starting a {} lane", kind.as_str()))?;
+    let network = if q8 { "mnist.q8" } else { "mnist" };
     let report = coord.serve_workload(&crate::coordinator::WorkloadSpec {
-        network: "mnist".to_string(),
+        network: network.to_string(),
         requests: if smoke { 8 } else { 32 },
         images_per_request: 2,
         interarrival: Duration::from_millis(1),
         seed: 42,
     })?;
     Ok(ServingRow {
-        name: format!("serve-{}", kind.as_str()),
+        name: if q8 {
+            format!("serve-{}-q8", kind.as_str())
+        } else {
+            format!("serve-{}", kind.as_str())
+        },
         images_per_s: report.images_per_s,
         p99_s: report.latency.p99_s,
     })
@@ -267,8 +278,9 @@ fn serving_row(
 /// (`provisional: false`).
 pub fn run_bench(opts: &BenchOpts) -> Result<BenchSuite> {
     let g = Geo::new(opts.smoke);
-    let mut rows = Vec::with_capacity(15);
+    let mut rows = Vec::with_capacity(20);
     rows_for::<f32>("f32", &g, opts, &mut rows);
+    rows_for::<Q2_6>("q8", &g, opts, &mut rows);
     rows_for::<Q8_8>("q8.8", &g, opts, &mut rows);
     rows_for::<Q16_16>("q16.16", &g, opts, &mut rows);
 
@@ -277,8 +289,11 @@ pub fn run_bench(opts: &BenchOpts) -> Result<BenchSuite> {
         let dir = TempDir::new()?;
         write_synthetic(dir.path(), &["mnist"], 2, 17)?;
         for kind in [DeviceKind::Fpga, DeviceKind::Gpu, DeviceKind::Cpu] {
-            serving.push(serving_row(dir.path(), kind, opts.smoke)?);
+            serving.push(serving_row(dir.path(), kind, opts.smoke, false)?);
         }
+        // the packed-int8 twin on the FPGA lane (routes around the
+        // f32-only GPU, so only the fixed-point-capable kind gets a row)
+        serving.push(serving_row(dir.path(), DeviceKind::Fpga, opts.smoke, true)?);
     }
     Ok(BenchSuite {
         provisional: false,
@@ -458,7 +473,7 @@ impl BenchSuite {
                 r.ns_per_mac(),
             ));
         }
-        for suffix in ["f32", "q8.8", "q16.16"] {
+        for suffix in ["f32", "q8", "q8.8", "q16.16"] {
             if let Some(sp) = self.speedup(suffix) {
                 let gate = if suffix == "f32" {
                     self.min_speedup_f32
@@ -499,7 +514,7 @@ pub fn compare_suites(base: &BenchSuite, fresh: &BenchSuite) -> Result<String> {
 
     // ratio gates: within-run, always enforced, thresholds come off the
     // committed baseline (the defended trajectory)
-    for suffix in ["f32", "q8.8", "q16.16"] {
+    for suffix in ["f32", "q8", "q8.8", "q16.16"] {
         let gate = if suffix == "f32" {
             base.min_speedup_f32
         } else {
@@ -521,7 +536,7 @@ pub fn compare_suites(base: &BenchSuite, fresh: &BenchSuite) -> Result<String> {
     // blocked-dispatch ratio gate: within-run like the speedups, the
     // MAD noise of both rows widening the band the same way the
     // absolute tier does
-    for suffix in ["f32", "q8.8", "q16.16"] {
+    for suffix in ["f32", "q8", "q8.8", "q16.16"] {
         match fresh.blocked_ratio(suffix) {
             Some((ratio, rel_mad)) => {
                 let band = base.max_blocked_ratio + 8.0 * rel_mad;
@@ -641,7 +656,7 @@ mod tests {
     /// Every speedup gate passing at exactly the stated margins.
     fn passing_rows() -> Vec<KernelRow> {
         let mut rows = Vec::new();
-        for suffix in ["f32", "q8.8", "q16.16"] {
+        for suffix in ["f32", "q8", "q8.8", "q16.16"] {
             rows.push(row(&format!("standard-{suffix}"), 2e-3, 1e-5));
             rows.push(row(&format!("reverse-loop-{suffix}"), 1e-3, 1e-5));
             rows.push(row(&format!("tdc-{suffix}"), 2e-3, 1e-5));
@@ -721,15 +736,16 @@ mod tests {
         };
         let suite = run_bench(&opts).unwrap();
         assert!(!suite.provisional, "a measured run is not provisional");
-        assert_eq!(suite.rows.len(), 15, "5 kernels x 3 precisions");
+        assert_eq!(suite.rows.len(), 20, "5 kernels x 4 precisions");
         for r in &suite.rows {
             assert!(r.stats.median_s > 0.0, "{}", r.name);
             assert!(r.macs > 0, "{}", r.name);
             assert!(r.img_per_s() > 0.0 && r.ns_per_mac() > 0.0);
         }
+        assert!(suite.rows.iter().any(|r| r.name == "reverse-loop-q8"));
         assert!(suite.rows.iter().any(|r| r.name == "reverse-loop-q8.8"));
         assert!(suite.rows.iter().any(|r| r.name == "blocked-q16.16"));
-        for suffix in ["f32", "q8.8", "q16.16"] {
+        for suffix in ["f32", "q8", "q8.8", "q16.16"] {
             assert!(suite.speedup(suffix).is_some(), "{suffix}");
             let (ratio, _) = suite.blocked_ratio(suffix).unwrap();
             assert!(ratio > 0.0, "{suffix}");

@@ -8,9 +8,10 @@
 //! below it collapse quality for no latency win, above it buy nothing.
 
 use crate::artifacts::ArtifactDir;
-use crate::config::{network_by_name, FpgaBoard, Precision};
+use crate::config::{network_by_name, FpgaBoard, Precision, JETSON_TX1};
 use crate::deconv::generator_forward;
 use crate::fpga::{simulate_network, SimOpts};
+use crate::gpu::{self, GpuRunOpts, ThermalThrottle};
 use crate::quant::{psnr_db, QFormat, QuantizedGenerator, Rounding};
 use crate::sparsity::{mmd_biased, Mmd};
 use crate::tensor::Tensor;
@@ -21,8 +22,12 @@ use anyhow::{ensure, Result};
 #[derive(Debug, Clone)]
 pub struct QuantErrorPoint {
     pub format: QFormat,
-    /// PSNR of the quantized output vs the f32 reference (dB, peak 2.0).
+    /// PSNR of the quantized output vs the f32 reference (dB, peak 2.0),
+    /// with per-output-channel scale calibration (the production path).
     pub psnr_db: f64,
+    /// Same measurement at the per-layer (uniform) calibration — the
+    /// baseline the per-channel refinement is judged against.
+    pub psnr_per_layer_db: f64,
     /// Worst-case per-pixel deviation from the f32 reference.
     pub max_abs_err: f64,
     /// MMD of the quantized generator's distribution vs ground truth.
@@ -39,6 +44,10 @@ pub struct QuantErrorData {
     pub f32_mmd: f64,
     pub f32_time_s: f64,
     pub f32_gops_per_w: f64,
+    /// One deterministic TX1 reference run at f32 (the GPU has no int8
+    /// fallback in this model) — what the verdict line compares the
+    /// narrow-format FPGA efficiency against.
+    pub gpu_f32_gops_per_w: f64,
     pub points: Vec<QuantErrorPoint>,
 }
 
@@ -77,6 +86,21 @@ pub fn run_quant_error(
     let dense: Vec<SimOpts> =
         net.layers.iter().map(|_| SimOpts::dense(net.tile)).collect();
     let f32_sim = simulate_network(&net, board, &dense);
+    let gpu_f32_gops_per_w = {
+        let mut throttle = ThermalThrottle::new(JETSON_TX1);
+        let mut grng = Rng::seed_from_u64(seed ^ 0x9e37_79b9);
+        let runs = gpu::simulate_gpu_network(
+            &net,
+            &JETSON_TX1,
+            &GpuRunOpts::default(),
+            &mut throttle,
+            &mut grng,
+        );
+        let ops: u64 = runs.iter().map(|r| r.ops).sum();
+        let time: f64 = runs.iter().map(|r| r.time_s).sum();
+        let energy: f64 = runs.iter().map(|r| r.time_s * r.power_w).sum();
+        (ops as f64 / time / 1e9) / (energy / time)
+    };
 
     let pool = WorkerPool::with_default_parallelism();
     let mut points = Vec::with_capacity(formats.len());
@@ -85,6 +109,13 @@ pub fn run_quant_error(
             QuantizedGenerator::quantize(format, &weights, Rounding::Nearest)?;
         let (images, _stats) = qgen.generate(&net, &z, &pool);
         let psnr = psnr_db(&reference, &images, 2.0);
+        let per_layer = QuantizedGenerator::quantize_per_layer(
+            format,
+            &weights,
+            Rounding::Nearest,
+        )?;
+        let (images_layer, _) = per_layer.generate(&net, &z, &pool);
+        let psnr_per_layer = psnr_db(&reference, &images_layer, 2.0);
         let max_abs_err = reference
             .data()
             .iter()
@@ -102,6 +133,7 @@ pub fn run_quant_error(
         points.push(QuantErrorPoint {
             format,
             psnr_db: psnr,
+            psnr_per_layer_db: psnr_per_layer,
             max_abs_err,
             mmd,
             fpga_time_s: sim.total_time_s,
@@ -113,6 +145,7 @@ pub fn run_quant_error(
         f32_mmd,
         f32_time_s: f32_sim.total_time_s,
         f32_gops_per_w: f32_sim.gops_per_w,
+        gpu_f32_gops_per_w,
         points,
     })
 }
@@ -121,19 +154,21 @@ pub fn run_quant_error(
 pub fn render(data: &QuantErrorData) -> String {
     let mut s = format!(
         "{}: fixed-point sweep ({} formats)\n\
-         {:>8} {:>10} {:>10} {:>10} {:>12} {:>10}\n",
+         {:>8} {:>10} {:>10} {:>10} {:>10} {:>12} {:>10}\n",
         data.network,
         data.points.len(),
         "format",
         "PSNR dB",
+        "PSNR/lyr",
         "max|err|",
         "MMD",
         "latency ms",
         "GOps/s/W",
     );
     s.push_str(&format!(
-        "{:>8} {:>10} {:>10} {:>10.4} {:>12.3} {:>10.2}\n",
+        "{:>8} {:>10} {:>10} {:>10} {:>10.4} {:>12.3} {:>10.2}\n",
         "f32",
+        "-",
         "-",
         "-",
         data.f32_mmd,
@@ -142,13 +177,28 @@ pub fn render(data: &QuantErrorData) -> String {
     ));
     for p in &data.points {
         s.push_str(&format!(
-            "{:>8} {:>10.1} {:>10.4} {:>10.4} {:>12.3} {:>10.2}\n",
+            "{:>8} {:>10.1} {:>10.1} {:>10.4} {:>10.4} {:>12.3} {:>10.2}\n",
             p.format.to_string(),
             p.psnr_db,
+            p.psnr_per_layer_db,
             p.max_abs_err,
             p.mmd,
             p.fpga_time_s * 1e3,
             p.fpga_gops_per_w,
+        ));
+    }
+    // the FPGA-vs-GPU verdict restated at the packed-int8 datapath
+    if let Some(p) =
+        data.points.iter().find(|p| p.format == QFormat::new(8, 6))
+    {
+        s.push_str(&format!(
+            "verdict @ q2.6: FPGA {:.2} vs GPU f32 {:.2} GOps/s/W \
+             ({:.1}x) — per-channel {:.1} dB vs per-layer {:.1} dB\n",
+            p.fpga_gops_per_w,
+            data.gpu_f32_gops_per_w,
+            p.fpga_gops_per_w / data.gpu_f32_gops_per_w,
+            p.psnr_db,
+            p.psnr_per_layer_db,
         ));
     }
     s
@@ -188,5 +238,37 @@ mod tests {
         let table = render(&data);
         assert!(table.contains("q8.8"));
         assert!(table.contains("f32"));
+    }
+
+    #[test]
+    fn q8_per_channel_calibration_beats_per_layer() {
+        let dir = TempDir::new().unwrap();
+        let artifacts = write_synthetic(dir.path(), &["mnist"], 8, 5).unwrap();
+        let formats = vec![QFormat::new(8, 6)];
+        let data =
+            run_quant_error("mnist", &PYNQ_Z2, &artifacts, &formats, 8, 13)
+                .unwrap();
+        let p = &data.points[0];
+        // per-channel exponents are never larger than the layer's, so
+        // every weight quantizes on a grid at least as fine
+        assert!(
+            p.psnr_db >= p.psnr_per_layer_db,
+            "per-channel {:.2} dB must not trail per-layer {:.2} dB",
+            p.psnr_db,
+            p.psnr_per_layer_db
+        );
+        // and the int8 datapath restates the paper's verdict: the
+        // packed FPGA beats the f32 GPU on efficiency
+        assert!(data.gpu_f32_gops_per_w > 0.0);
+        assert!(
+            p.fpga_gops_per_w > data.gpu_f32_gops_per_w,
+            "FPGA q8 {:.2} vs GPU f32 {:.2}",
+            p.fpga_gops_per_w,
+            data.gpu_f32_gops_per_w
+        );
+        assert!(p.fpga_time_s < data.f32_time_s, "1-byte AXI words win");
+        let table = render(&data);
+        assert!(table.contains("verdict @ q2.6"), "{table}");
+        assert!(table.contains("q2.6"));
     }
 }

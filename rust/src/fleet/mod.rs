@@ -332,7 +332,7 @@ pub fn run_fleet(trace: &Trace, cfg: &FleetCfg) -> Result<FleetRun> {
         );
     }
 
-    let (networks, any_quant) = trace.networks();
+    let (networks, twins) = trace.networks();
     let mut rng = Rng::seed_from_u64(cfg.seed);
     // all site clocks share one run epoch and differ only by their
     // seeded skew, so folded spans re-base onto a single fleet timeline
@@ -351,7 +351,8 @@ pub fn run_fleet(trace: &Trace, cfg: &FleetCfg) -> Result<FleetRun> {
                 batcher: BatcherConfig::default(),
                 backends,
                 executors: cfg.executors,
-                quant: any_quant.then_some(QFormat::new(16, 8)),
+                quant: twins.q.then_some(QFormat::new(16, 8)),
+                quant8: twins.q8.then_some(QFormat::new(8, 6)),
                 shard_batches: cfg.shard_batches,
                 clock: Some(RunClock::with_site(epoch, skew_s, i as u32)),
             },

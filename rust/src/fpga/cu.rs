@@ -268,6 +268,25 @@ mod tests {
     }
 
     #[test]
+    fn int8_packs_four_lanes_per_dsp() {
+        use crate::config::QFormat;
+        let f32_cu = CuModel::from_board_at(&PYNQ_Z2, Precision::F32);
+        let q16 = CuModel::from_board_at(
+            &PYNQ_Z2,
+            Precision::Fixed(QFormat::new(16, 8)),
+        );
+        let q8 = CuModel::from_board_at(
+            &PYNQ_Z2,
+            Precision::Fixed(QFormat::new(8, 6)),
+        );
+        assert_eq!(q8.lanes, 4 * f32_cu.lanes, "×4 INT8 MACs per DSP");
+        assert_eq!(q8.lanes, 2 * q16.lanes);
+        let w = wl();
+        assert!(q8.dense_cycles(&w) < q16.dense_cycles(&w));
+        assert!(q8.dense_cycles(&w) < f32_cu.dense_cycles(&w));
+    }
+
+    #[test]
     fn dense_cycles_track_macs() {
         let cu = CuModel::from_board(&PYNQ_Z2);
         let w = wl();

@@ -545,6 +545,26 @@ mod tests {
                 assert_eq!(s32.compute_cycles, f.compute_cycles);
                 // the ops workload itself is precision-independent
                 assert_eq!(s16.ops, f.ops);
+                // 8-bit: 1-byte AXI words (no 2-byte floor) and ×4
+                // packed MAC lanes — at or under q8.8 on both axes
+                let s8 = simulate_layer(
+                    layer,
+                    &PYNQ_Z2,
+                    &SimOpts::dense_at(
+                        net.tile,
+                        Precision::Fixed(QFormat::new(8, 6)),
+                    ),
+                );
+                assert!(
+                    s8.read_cycles <= s16.read_cycles,
+                    "1-byte reads must not exceed 2-byte"
+                );
+                assert!(
+                    s8.compute_cycles < s16.compute_cycles,
+                    "×4 packing must beat ×2"
+                );
+                assert!(s8.time_s < f.time_s, "q8 must beat f32 end to end");
+                assert_eq!(s8.ops, f.ops);
             }
         }
     }

@@ -106,13 +106,16 @@ pub fn estimate_resources_at(
     let out_buf = (2 * ab * t_eff * t_eff).div_ceil(BRAM18_BYTES);
     let bram = BRAM_INFRA + n_cu * (in_buf + out_buf);
 
-    // Per-CU fabric scales with datapath width: 16-bit multiplier trees
-    // and narrower muxing trim ~1/4 of the CU fabric; a 32-bit integer
-    // datapath with its 64-bit accumulator chain costs slightly more
-    // than f32 (calibrated guesses on the same footing as the base
+    // Per-CU fabric scales with datapath width: 8-bit operand muxing
+    // and byte-wide line buffers trim ~3/8 of the CU fabric (the ×4
+    // DSP packing adds back a little routing over a naive byte path);
+    // 16-bit multiplier trees and narrower muxing trim ~1/4; a 32-bit
+    // integer datapath with its 64-bit accumulator chain costs slightly
+    // more than f32 (calibrated guesses on the same footing as the base
     // coefficients — the *scaling law* is what the DSE consumes).
     let (num, den): (usize, usize) = match precision {
         Precision::F32 => (1, 1),
+        Precision::Fixed(q) if q.bits <= 8 => (5, 8),
         Precision::Fixed(q) if q.bits <= 16 => (3, 4),
         Precision::Fixed(_) => (9, 8),
     };
@@ -182,6 +185,33 @@ mod tests {
             // BRAM trades: half-width input/AXI words vs the 48-bit
             // accumulator ping-pong — net within one block per CU
             assert!(q.bram18 <= f.bram18 + 16, "bram {} vs {}", q.bram18, f.bram18);
+            assert!(q.fits(&PYNQ_Z2));
+        }
+    }
+
+    #[test]
+    fn int8_packs_lanes_without_spending_dsps() {
+        use crate::config::QFormat;
+        let q8 = Precision::Fixed(QFormat::new(8, 6));
+        for net in [mnist(), celeba()] {
+            let f = estimate_resources_at(&net, net.tile, 16, Precision::F32);
+            let q = estimate_resources_at(&net, net.tile, 16, q8);
+            // DSP count flat vs f32 while the MAC lanes quadruple —
+            // the ×4 packing rides the same DSP budget
+            assert_eq!(q.dsp, f.dsp, "i8 packs into the same DSPs");
+            assert_eq!(q8.lane_factor(), 4 * Precision::F32.lane_factor());
+            // 1-byte elements: input buffers shrink vs both f32 and q16
+            let q16 = estimate_resources_at(
+                &net,
+                net.tile,
+                16,
+                Precision::Fixed(QFormat::new(16, 8)),
+            );
+            // byte-true buffer sizing (1-byte elements, i32 acc) can
+            // only shrink the block counts, never grow them
+            assert!(q.bram18 <= q16.bram18, "{} vs {}", q.bram18, q16.bram18);
+            assert!(q.bram18 <= f.bram18, "{} vs {}", q.bram18, f.bram18);
+            assert!(q.ff < q16.ff && q.lut < q16.lut);
             assert!(q.fits(&PYNQ_Z2));
         }
     }

@@ -49,7 +49,10 @@ COMMANDS:
                              report shows per-backend columns); --quant
                              additionally serves fixed-point twins as
                              NET.q (e.g. --quant q8.8 --network mnist.q)
-                             which route around the f32-only GPU,
+                             and --network NET.q8 serves the packed int8
+                             twin (per-channel q2.6 scales, x4 MAC lanes
+                             per DSP on the FPGA model) — both route
+                             around the f32-only GPU,
                              --shard splits batches across the capable
                              lanes (intra-batch parallelism),
                              --queue-depth bounds each lane's queue
@@ -313,12 +316,17 @@ fn main() -> Result<()> {
             let interarrival_ms = flags.get("interarrival-ms", 2.0f64)?;
             let seed = flags.get("seed", 42u64)?;
             let mut quant = parse_quant_flag(&flags)?;
-            if network.ends_with(".q") && quant.is_none() {
+            let mut quant8 = None;
+            if network.ends_with(".q8") {
+                quant8 = Some(QFormat::new(8, 6)); // default q2.6 twin
+            } else if network.ends_with(".q") && quant.is_none() {
                 quant = Some(QFormat::new(16, 8)); // default q8.8 twin
             }
-            // base network to preload: "mnist.q" serves from "mnist"
+            // base network to preload: "mnist.q" / "mnist.q8" serve
+            // from "mnist" (.q8 first: ".q8".strip_suffix(".q") = None)
             let base = network
-                .strip_suffix(".q")
+                .strip_suffix(".q8")
+                .or_else(|| network.strip_suffix(".q"))
                 .unwrap_or(network.as_str())
                 .to_string();
             let pool = PoolCfg::from_flags(&flags)?;
@@ -329,6 +337,7 @@ fn main() -> Result<()> {
                 backends: pool.backends,
                 executors: pool.executors,
                 quant,
+                quant8,
                 shard_batches: flags.has("shard"),
                 clock: None,
             })?;

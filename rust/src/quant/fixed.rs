@@ -1,11 +1,65 @@
-//! `Fixed<S, F>` — Qm.n fixed point over an `i16`/`i32` backing store
-//! with saturating element ops, configurable rounding and an exact
-//! (wrapping) `i64` accumulator, mirroring the DSP48 datapath: narrow
-//! multiplier inputs, wide accumulator, one round/saturate at write-back.
+//! `Fixed<S, F>` — Qm.n fixed point over an `i8`/`i16`/`i32` backing
+//! store with saturating element ops, configurable rounding and an exact
+//! (wrapping) accumulator sized to the storage (`i32` for i8, `i64`
+//! otherwise), mirroring the DSP48 datapath: narrow multiplier inputs,
+//! wide accumulator, one round/saturate at write-back.
 
 use super::element::Element;
 
-/// Integer backing store for a fixed-point element (`i16` or `i32`).
+/// Accumulator word backing a fixed-point MAC chain (`i32` or `i64`).
+/// Arithmetic is wrapping, so accumulation order never changes bits —
+/// the cross-kernel bit-exactness guarantee at every storage width.
+pub trait AccWord:
+    Copy + PartialEq + Eq + Send + Sync + std::fmt::Debug + 'static
+{
+    const ZERO: Self;
+
+    fn to_i64(self) -> i64;
+    /// Wrap an `i64` into the accumulator width (as-cast truncation).
+    fn from_i64_wrap(v: i64) -> Self;
+    fn wrapping_add(self, rhs: Self) -> Self;
+}
+
+impl AccWord for i32 {
+    const ZERO: i32 = 0;
+
+    #[inline]
+    fn to_i64(self) -> i64 {
+        self as i64
+    }
+
+    #[inline]
+    fn from_i64_wrap(v: i64) -> i32 {
+        v as i32
+    }
+
+    #[inline]
+    fn wrapping_add(self, rhs: i32) -> i32 {
+        i32::wrapping_add(self, rhs)
+    }
+}
+
+impl AccWord for i64 {
+    const ZERO: i64 = 0;
+
+    #[inline]
+    fn to_i64(self) -> i64 {
+        self
+    }
+
+    #[inline]
+    fn from_i64_wrap(v: i64) -> i64 {
+        v
+    }
+
+    #[inline]
+    fn wrapping_add(self, rhs: i64) -> i64 {
+        i64::wrapping_add(self, rhs)
+    }
+}
+
+/// Integer backing store for a fixed-point element (`i8`, `i16` or
+/// `i32`), paired with the accumulator width its MAC chain runs at.
 pub trait Storage:
     Copy + PartialEq + Eq + Send + Sync + std::fmt::Debug + 'static
 {
@@ -15,9 +69,34 @@ pub trait Storage:
     const MAX_I64: i64;
     const ZERO: Self;
 
+    /// Accumulator word for `w · x` chains over this storage.  `i8`
+    /// products are ≤ 2^14, so an `i32` accumulator is exact for every
+    /// realistic layer; wider stores keep the `i64` accumulator.
+    type Acc: AccWord;
+
     fn to_i64(self) -> i64;
     /// Saturate an `i64` into the storage range.
     fn from_i64_sat(v: i64) -> Self;
+}
+
+impl Storage for i8 {
+    const BITS: u32 = 8;
+    const BYTES: usize = 1;
+    const MIN_I64: i64 = i8::MIN as i64;
+    const MAX_I64: i64 = i8::MAX as i64;
+    const ZERO: i8 = 0;
+
+    type Acc = i32;
+
+    #[inline]
+    fn to_i64(self) -> i64 {
+        self as i64
+    }
+
+    #[inline]
+    fn from_i64_sat(v: i64) -> i8 {
+        v.clamp(i8::MIN as i64, i8::MAX as i64) as i8
+    }
 }
 
 impl Storage for i16 {
@@ -26,6 +105,8 @@ impl Storage for i16 {
     const MIN_I64: i64 = i16::MIN as i64;
     const MAX_I64: i64 = i16::MAX as i64;
     const ZERO: i16 = 0;
+
+    type Acc = i64;
 
     #[inline]
     fn to_i64(self) -> i64 {
@@ -44,6 +125,8 @@ impl Storage for i32 {
     const MIN_I64: i64 = i32::MIN as i64;
     const MAX_I64: i64 = i32::MAX as i64;
     const ZERO: i32 = 0;
+
+    type Acc = i64;
 
     #[inline]
     fn to_i64(self) -> i64 {
@@ -129,10 +212,10 @@ impl<S: Storage, const F: u32> Fixed<S, F> {
 }
 
 impl<S: Storage, const F: u32> Element for Fixed<S, F> {
-    type Acc = i64;
+    type Acc = S::Acc;
 
     const ZERO: Self = Fixed(S::ZERO);
-    const ACC_ZERO: i64 = 0;
+    const ACC_ZERO: S::Acc = <S::Acc as AccWord>::ZERO;
     const BYTES: usize = S::BYTES;
 
     #[inline]
@@ -153,34 +236,39 @@ impl<S: Storage, const F: u32> Element for Fixed<S, F> {
     /// Widen a Q(F) element into the Q(2F) accumulator domain, so the
     /// bias sits in the same units as the `w · x` products.
     #[inline]
-    fn widen(self) -> i64 {
-        self.0.to_i64() << F
+    fn widen(self) -> S::Acc {
+        S::Acc::from_i64_wrap(self.0.to_i64() << F)
     }
 
     /// Exact product, wrapping accumulation.  Wrapping (never
     /// saturating) addition keeps the chain commutative, which is the
     /// bit-exactness guarantee across kernels.  Overflow-freedom is a
-    /// separate, storage-dependent property: `i16` products are ≤ 2^30,
+    /// separate, storage-dependent property: `i8` products are ≤ 2^14
+    /// in an `i32` accumulator (2^17 of headroom over the deepest
+    /// reduction here — exact); `i16` products are ≤ 2^30 in `i64`,
     /// leaving 2^33 of headroom — no realistic layer wraps.  `i32`
     /// products can reach 2^62, so a 32-bit format *can* wrap the
     /// accumulator when calibrated magnitudes are extreme; the result
     /// is then deterministic and loop-order-independent but wrong-sign
     /// after [`Element::narrow`]'s saturation — the same finite-
     /// accumulator behaviour real wide-accumulator hardware exhibits.
-    /// The edge-serving formats are the 16-bit ones.
+    /// The edge-serving formats are the 8- and 16-bit ones.
     #[inline]
-    fn mac(acc: i64, w: Self, x: Self) -> i64 {
-        acc.wrapping_add(w.0.to_i64().wrapping_mul(x.0.to_i64()))
+    fn mac(acc: S::Acc, w: Self, x: Self) -> S::Acc {
+        acc.wrapping_add(S::Acc::from_i64_wrap(
+            w.0.to_i64().wrapping_mul(x.0.to_i64()),
+        ))
     }
 
     /// Q(2F) → Q(F): round half-up, then saturate into storage.
     #[inline]
-    fn narrow(acc: i64) -> Self {
+    fn narrow(acc: S::Acc) -> Self {
+        let a = acc.to_i64();
         if F == 0 {
-            return Fixed(S::from_i64_sat(acc));
+            return Fixed(S::from_i64_sat(a));
         }
         let half = 1i64 << (F.saturating_sub(1));
-        Fixed(S::from_i64_sat(acc.wrapping_add(half) >> F))
+        Fixed(S::from_i64_sat(a.wrapping_add(half) >> F))
     }
 
     #[inline]
@@ -199,6 +287,9 @@ impl<S: Storage, const F: u32> Element for Fixed<S, F> {
     }
 }
 
+/// Q2.6 — 8-bit, 6 fraction bits (the DPU-class INT8 serving format;
+/// labelled `q8` in bench/tune/serving output).
+pub type Q2_6 = Fixed<i8, 6>;
 /// Q12.4 — 16-bit, 4 fraction bits.
 pub type Q12_4 = Fixed<i16, 4>;
 /// Q10.6 — 16-bit, 6 fraction bits.
@@ -294,6 +385,68 @@ mod tests {
         assert_eq!(Element::relu(Q8_8::from_f32(2.0)).to_f32(), 2.0);
         let t = Element::tanh(Q4_12::from_f32(1000.0)).to_f32();
         assert!((t - 1.0).abs() < 2.0 * Q4_12::step(), "tanh(large)≈1: {t}");
+    }
+
+    #[test]
+    fn i8_roundtrip_and_saturation() {
+        // grid points are exact
+        for v in [-1.5f32, -0.25, 0.0, 0.5, 1.0, 1.984_375] {
+            assert_eq!(Q2_6::from_f32(v).to_f32(), v, "{v} is on the Q2.6 grid");
+        }
+        // off-grid error bounded by one step
+        for i in 0..100 {
+            let v = (i as f32 - 50.0) * 0.0317;
+            let q = Q2_6::from_f32(v);
+            assert!((q.to_f32() - v).abs() <= Q2_6::step());
+        }
+        assert_eq!(Q2_6::from_f32(1e9).raw(), i8::MAX);
+        assert_eq!(Q2_6::from_f32(-1e9).raw(), i8::MIN);
+        assert!(Q2_6::max_value_f32() < 2.0);
+        assert!(Q2_6::min_value_f32() >= -2.0);
+    }
+
+    #[test]
+    fn i8_mac_narrow_is_exact_in_i32() {
+        // 0.5 * 1.5 + 0.25 in Q2.6: all values on the grid, so exact
+        let w = Q2_6::from_f32(0.5);
+        let x = Q2_6::from_f32(1.5);
+        let b = Q2_6::from_f32(0.25);
+        let acc = Q2_6::mac(b.widen(), w, x);
+        assert_eq!(Q2_6::narrow(acc).to_f32(), 1.0);
+        // accumulator is i32, not i64
+        assert_eq!(std::mem::size_of::<<Q2_6 as Element>::Acc>(), 4);
+        // the deepest reduction in the model (512·49 taps at max
+        // magnitude 127·127) stays far below i32::MAX: the i32
+        // accumulator is exact, never wrapping.
+        let worst = 512i64 * 49 * 127 * 127;
+        assert!(worst < i32::MAX as i64);
+        // and narrow saturates an over-range accumulator
+        let big = Q2_6::from_f32(1.9);
+        let mut acc = <Q2_6 as Element>::ACC_ZERO;
+        for _ in 0..100 {
+            acc = Q2_6::mac(acc, big, big);
+        }
+        assert_eq!(Q2_6::narrow(acc).raw(), i8::MAX, "must clamp, not wrap");
+    }
+
+    #[test]
+    fn i8_matches_i16_on_shared_grid() {
+        // Q2.6 values live on the Q10.6 grid too: identical frac bits,
+        // so mac/narrow round identically where both representations
+        // are in range — the narrow store only changes saturation.
+        for (wv, xv, bv) in [(0.5f32, 0.75f32, 0.125f32), (-1.25, 0.5, 0.0)] {
+            let a8 = Q2_6::mac(
+                Q2_6::from_f32(bv).widen(),
+                Q2_6::from_f32(wv),
+                Q2_6::from_f32(xv),
+            );
+            let a16 = Q10_6::mac(
+                Q10_6::from_f32(bv).widen(),
+                Q10_6::from_f32(wv),
+                Q10_6::from_f32(xv),
+            );
+            assert_eq!(Q2_6::narrow(a8).to_f32(), Q10_6::narrow(a16).to_f32());
+        }
     }
 
     #[test]

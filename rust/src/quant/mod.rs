@@ -7,18 +7,20 @@
 //! * [`Element`] — the scalar trait [`crate::tensor::TensorT`], all
 //!   three deconvolution kernels and the generator forward are generic
 //!   over (`f32` is the identity backend);
-//! * [`Fixed<S, F>`](Fixed) — Qm.n fixed point over `i16`/`i32` with
-//!   saturating element ops, configurable [`Rounding`], and an exact
-//!   `i64` accumulator (the DSP48 shape: narrow inputs, wide
-//!   accumulator, one round/saturate at write-back);
+//! * [`Fixed<S, F>`](Fixed) — Qm.n fixed point over `i8`/`i16`/`i32`
+//!   with saturating element ops, configurable [`Rounding`], and an
+//!   exact wrapping accumulator sized to the store (`i32` for i8, `i64`
+//!   otherwise — the DSP48 shape: narrow inputs, wide accumulator, one
+//!   round/saturate at write-back);
 //! * [`QFormat`] / [`Precision`] — runtime descriptors threaded through
 //!   the config, the FPGA simulator (element/accumulator widths drive
 //!   the AXI byte counts, BRAM sizing and DSP lane packing) and the
 //!   artifact manifest;
-//! * [`QuantizedGenerator`] — per-layer scale-calibrated quantized
-//!   networks behind runtime format dispatch, used by the serving
-//!   coordinator (`<name>.q` logical networks), the `edgedcnn quant`
-//!   CLI and the quantization-error experiment.
+//! * [`QuantizedGenerator`] — per-output-channel scale-calibrated
+//!   quantized networks ([`ChannelScales`]) behind runtime format
+//!   dispatch, used by the serving coordinator (`<name>.q` / `<name>.q8`
+//!   logical networks), the `edgedcnn quant` CLI and the
+//!   quantization-error experiment.
 
 mod element;
 mod fixed;
@@ -26,10 +28,12 @@ mod net;
 
 pub use element::Element;
 pub use fixed::{
-    Fixed, Rounding, Storage, Q10_6, Q12_4, Q16_16, Q4_12, Q6_10, Q8_24, Q8_8,
+    AccWord, Fixed, Rounding, Storage, Q10_6, Q12_4, Q16_16, Q2_6, Q4_12,
+    Q6_10, Q8_24, Q8_8,
 };
 pub use net::{
-    calibrate_pow2_exp, generator_forward_quant, quantize_network,
+    calibrate_channel_exps, calibrate_pow2_exp, generator_forward_quant,
+    quantize_network, quantize_network_per_layer, ChannelScales,
     QuantLayerRaw, QuantizedGenerator, QuantizedLayer,
 };
 
@@ -71,6 +75,7 @@ impl fmt::Display for QFormat {
 /// sweep's grid).
 pub fn supported_formats() -> Vec<QFormat> {
     vec![
+        QFormat::new(8, 6),
         QFormat::new(16, 4),
         QFormat::new(16, 6),
         QFormat::new(16, 8),
@@ -101,22 +106,26 @@ impl Precision {
     }
 
     /// Bytes per accumulator word the datapath carries for each output
-    /// element before write-back: one f32 register, the DSP48's 48-bit
-    /// accumulator for 16-bit operands, a 64-bit chain for 32-bit.
+    /// element before write-back: one f32 register, a 32-bit exact
+    /// accumulator for 8-bit operands, the DSP48's 48-bit accumulator
+    /// for 16-bit operands, a 64-bit chain for 32-bit.
     pub fn acc_bytes(self) -> u64 {
         match self {
             Precision::F32 => 4,
+            Precision::Fixed(q) if q.bits <= 8 => 4,
             Precision::Fixed(q) if q.bits <= 16 => 6,
             Precision::Fixed(_) => 8,
         }
     }
 
-    /// MAC-lane multiplier relative to the f32 datapath: two 16-bit
-    /// MACs pack into one DSP48 (pre-adder/SIMD packing), so the CU
-    /// issues twice the MACs per cycle at the same DSP budget.
+    /// MAC-lane multiplier relative to the f32 datapath: four 8-bit
+    /// MACs pack into one DSP48 (INT8 packing à la DPUCZDX8G), two
+    /// 16-bit MACs pack via the pre-adder/SIMD path, so the CU issues
+    /// 4×/2× the MACs per cycle at the same DSP budget.
     pub fn lane_factor(self) -> usize {
         match self {
             Precision::F32 => 1,
+            Precision::Fixed(q) if q.bits <= 8 => 4,
             Precision::Fixed(q) if q.bits <= 16 => 2,
             Precision::Fixed(_) => 1,
         }
@@ -215,6 +224,7 @@ mod tests {
         assert_eq!(q.int_bits(), 8);
         assert!((q.step() - 1.0 / 256.0).abs() < 1e-12);
         assert_eq!(QFormat::new(32, 16).to_string(), "q16.16");
+        assert_eq!(QFormat::new(8, 6).to_string(), "q2.6");
     }
 
     #[test]
@@ -227,6 +237,10 @@ mod tests {
         assert_eq!(
             "q16.16".parse::<Precision>().unwrap(),
             Precision::Fixed(QFormat::new(32, 16))
+        );
+        assert_eq!(
+            "q2.6".parse::<Precision>().unwrap(),
+            Precision::Fixed(QFormat::new(8, 6))
         );
         for p in [Precision::F32, Precision::Fixed(QFormat::new(16, 12))] {
             assert_eq!(p.to_string().parse::<Precision>().unwrap(), p);
@@ -248,6 +262,10 @@ mod tests {
         assert_eq!(q32.elem_bytes(), 4);
         assert_eq!(q32.acc_bytes(), 8);
         assert_eq!(q32.lane_factor(), 1);
+        let q8 = Precision::Fixed(QFormat::new(8, 6));
+        assert_eq!(q8.elem_bytes(), 1, "no 2-byte floor on i8 elements");
+        assert_eq!(q8.acc_bytes(), 4);
+        assert_eq!(q8.lane_factor(), 4, "×4 INT8 MACs per DSP");
     }
 
     #[test]

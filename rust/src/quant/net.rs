@@ -1,8 +1,9 @@
-//! Quantized networks: per-layer power-of-two scale calibration, the
-//! fixed-point generator forward (reverse-loop kernels + shift/LUT
-//! epilogue), and [`QuantizedGenerator`] — the runtime-dispatch wrapper
-//! that lets non-generic code (coordinator, CLI, artifact I/O) own a
-//! quantized network without naming a concrete `Fixed<S, F>` type.
+//! Quantized networks: per-output-channel power-of-two scale
+//! calibration ([`ChannelScales`]), the fixed-point generator forward
+//! (reverse-loop kernels + shift/LUT epilogue), and
+//! [`QuantizedGenerator`] — the runtime-dispatch wrapper that lets
+//! non-generic code (coordinator, CLI, artifact I/O) own a quantized
+//! network without naming a concrete `Fixed<S, F>` type.
 
 use super::element::Element;
 use super::fixed::{Fixed, Rounding, Storage};
@@ -13,14 +14,57 @@ use crate::tensor::{Tensor, TensorT};
 use crate::util::WorkerPool;
 use anyhow::{ensure, Result};
 
-/// One quantized deconvolution layer: weights and bias stored as
-/// `stored · 2^scale_exp ≈ real`, so the kernel runs scale-free and the
-/// epilogue undoes the scale with a single shift.
+/// Per-output-channel power-of-two scale exponents for one layer:
+/// channel `co` stores `stored · 2^exps[co] ≈ real`.  Every exponent is
+/// a shift, so the epilogue stays multiplier-free — the per-channel
+/// refinement narrow 8-bit stores need (one outlier channel no longer
+/// drags the whole layer's resolution down), at zero datapath cost.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ChannelScales {
+    exps: Vec<i32>,
+}
+
+impl ChannelScales {
+    pub fn new(exps: Vec<i32>) -> Self {
+        ChannelScales { exps }
+    }
+
+    /// The pre-PR-10 per-layer form: one exponent for every channel
+    /// (how v1 `_quant.json` sidecars import).
+    pub fn uniform(e: i32, c_out: usize) -> Self {
+        ChannelScales {
+            exps: vec![e; c_out],
+        }
+    }
+
+    /// Exponent for output channel `co`.
+    #[inline]
+    pub fn exp(&self, co: usize) -> i32 {
+        self.exps[co]
+    }
+
+    pub fn exps(&self) -> &[i32] {
+        &self.exps
+    }
+
+    pub fn len(&self) -> usize {
+        self.exps.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.exps.is_empty()
+    }
+}
+
+/// One quantized deconvolution layer: weights and bias of output
+/// channel `co` stored as `stored · 2^scales.exp(co) ≈ real`, so the
+/// kernel runs scale-free and the epilogue undoes each channel's scale
+/// with a single shift.
 pub struct QuantizedLayer<S: Storage, const F: u32> {
     pub w: TensorT<Fixed<S, F>>,
     pub b: Vec<Fixed<S, F>>,
-    /// Per-layer power-of-two weight scale exponent (calibrated).
-    pub scale_exp: i32,
+    /// Per-output-channel power-of-two scale exponents (calibrated).
+    pub scales: ChannelScales,
 }
 
 /// Calibrate the per-layer power-of-two scale: the smallest exponent
@@ -40,10 +84,15 @@ pub fn calibrate_pow2_exp<S: Storage, const F: u32>(
         .iter()
         .chain(b.iter())
         .fold(0.0f32, |m, v| m.max(v.abs()));
+    exp_for_max_abs(max_abs, Fixed::<S, F>::max_value_f32())
+}
+
+/// Smallest exponent `e` (clamped to ±30) such that `max_abs / 2^e`
+/// fits `limit`.
+fn exp_for_max_abs(max_abs: f32, limit: f32) -> i32 {
     if max_abs == 0.0 || !max_abs.is_finite() {
         return 0;
     }
-    let limit = Fixed::<S, F>::max_value_f32();
     let mut e = ((max_abs / limit).log2().ceil() as i32).clamp(-30, 30);
     // guard against log2/powi rounding right at the boundary
     while max_abs / 2f32.powi(e) > limit && e < 30 {
@@ -52,7 +101,34 @@ pub fn calibrate_pow2_exp<S: Storage, const F: u32>(
     e
 }
 
-/// Quantize a whole weight set with per-layer calibrated scales.
+/// Calibrate one exponent *per output channel* of a `[c_in, c_out, k,
+/// k]` weight tensor (bias `b[co]` participates in channel `co`'s
+/// range, same reasoning as [`calibrate_pow2_exp`]).  A quiet channel
+/// next to a loud one gets its own, smaller exponent — the per-layer
+/// calibration is exactly the uniform special case.
+pub fn calibrate_channel_exps<S: Storage, const F: u32>(
+    w: &Tensor,
+    b: &[f32],
+) -> ChannelScales {
+    assert_eq!(w.shape().len(), 4, "weights must be [c_in, c_out, k, k]");
+    let c_out = w.shape()[1];
+    let plane = w.shape()[2] * w.shape()[3];
+    let mut max_abs = vec![0.0f32; c_out];
+    for (i, v) in w.data().iter().enumerate() {
+        let co = (i / plane) % c_out;
+        max_abs[co] = max_abs[co].max(v.abs());
+    }
+    for (co, v) in b.iter().enumerate() {
+        max_abs[co] = max_abs[co].max(v.abs());
+    }
+    let limit = Fixed::<S, F>::max_value_f32();
+    ChannelScales::new(
+        max_abs.iter().map(|m| exp_for_max_abs(*m, limit)).collect(),
+    )
+}
+
+/// Quantize a whole weight set with per-output-channel calibrated
+/// scales.
 pub fn quantize_network<S: Storage, const F: u32>(
     weights: &[(Tensor, Vec<f32>)],
     rounding: Rounding,
@@ -60,8 +136,45 @@ pub fn quantize_network<S: Storage, const F: u32>(
     weights
         .iter()
         .map(|(w, b)| {
-            let scale_exp = calibrate_pow2_exp::<S, F>(w, b);
-            let inv = 2f32.powi(-scale_exp);
+            let scales = calibrate_channel_exps::<S, F>(w, b);
+            let c_out = w.shape()[1];
+            let plane = w.shape()[2] * w.shape()[3];
+            let wq = TensorT::from_fn(w.shape().to_vec(), |i| {
+                let co = (i / plane) % c_out;
+                let inv = 2f32.powi(-scales.exp(co));
+                Fixed::<S, F>::from_f32_round(w.data()[i] * inv, rounding)
+            });
+            let bq = b
+                .iter()
+                .enumerate()
+                .map(|(co, v)| {
+                    let inv = 2f32.powi(-scales.exp(co));
+                    Fixed::<S, F>::from_f32_round(*v * inv, rounding)
+                })
+                .collect();
+            QuantizedLayer {
+                w: wq,
+                b: bq,
+                scales,
+            }
+        })
+        .collect()
+}
+
+/// Per-layer (uniform) variant of [`quantize_network`]: one calibrated
+/// exponent for the whole layer.  This is the pre-per-channel
+/// behaviour, kept as the measurable baseline the per-channel
+/// refinement is compared against (`edgedcnn quant` reports both at
+/// the 8-bit formats, where the difference is largest).
+pub fn quantize_network_per_layer<S: Storage, const F: u32>(
+    weights: &[(Tensor, Vec<f32>)],
+    rounding: Rounding,
+) -> Vec<QuantizedLayer<S, F>> {
+    weights
+        .iter()
+        .map(|(w, b)| {
+            let e = calibrate_pow2_exp::<S, F>(w, b);
+            let inv = 2f32.powi(-e);
             let wq = TensorT::from_fn(w.shape().to_vec(), |i| {
                 Fixed::<S, F>::from_f32_round(w.data()[i] * inv, rounding)
             });
@@ -72,7 +185,7 @@ pub fn quantize_network<S: Storage, const F: u32>(
             QuantizedLayer {
                 w: wq,
                 b: bq,
-                scale_exp,
+                scales: ChannelScales::uniform(e, w.shape()[1]),
             }
         })
         .collect()
@@ -114,8 +227,13 @@ pub fn generator_forward_quant<S: Storage, const F: u32>(
             },
             pool,
         );
-        for v in y.data_mut().iter_mut() {
-            let r = v.scale_pow2(ql.scale_exp);
+        // per-channel shift epilogue: output is [n, c_out, o_h, o_w],
+        // so channel planes are contiguous
+        let c_out = y.shape()[1];
+        let plane = y.shape()[2] * y.shape()[3];
+        for (idx, v) in y.data_mut().iter_mut().enumerate() {
+            let co = (idx / plane) % c_out;
+            let r = v.scale_pow2(ql.scales.exp(co));
             *v = if i == last {
                 Element::tanh(r)
             } else {
@@ -135,7 +253,9 @@ pub struct QuantLayerRaw {
     pub w_shape: Vec<usize>,
     pub w_raw: Vec<i32>,
     pub b_raw: Vec<i32>,
-    pub scale_exp: i32,
+    /// One exponent per output channel (v1 sidecars import their single
+    /// per-layer exponent as a uniform vector).
+    pub scale_exps: Vec<i32>,
 }
 
 trait QuantForwardDyn: Send + Sync {
@@ -174,7 +294,7 @@ impl<S: Storage, const F: u32> QuantForwardDyn for QuantNet<S, F> {
                 w_shape: l.w.shape().to_vec(),
                 w_raw: l.w.data().iter().map(|q| q.raw().to_i64() as i32).collect(),
                 b_raw: l.b.iter().map(|q| q.raw().to_i64() as i32).collect(),
-                scale_exp: l.scale_exp,
+                scale_exps: l.scales.exps().to_vec(),
             })
             .collect()
     }
@@ -184,6 +304,7 @@ impl<S: Storage, const F: u32> QuantForwardDyn for QuantNet<S, F> {
 macro_rules! for_format {
     ($bits:expr, $frac:expr, $mk:ident) => {
         match ($bits, $frac) {
+            (8, 6) => $mk!(i8, 6),
             (16, 4) => $mk!(i16, 4),
             (16, 6) => $mk!(i16, 6),
             (16, 8) => $mk!(i16, 8),
@@ -230,6 +351,27 @@ impl QuantizedGenerator {
         Ok(QuantizedGenerator { inner })
     }
 
+    /// Like [`QuantizedGenerator::quantize`] but with the per-layer
+    /// (uniform) calibration — the baseline the per-channel refinement
+    /// is measured against.
+    pub fn quantize_per_layer(
+        format: QFormat,
+        weights: &[(Tensor, Vec<f32>)],
+        rounding: Rounding,
+    ) -> Result<Self> {
+        macro_rules! mk {
+            ($s:ty, $f:literal) => {
+                Box::new(QuantNet::<$s, $f> {
+                    layers: quantize_network_per_layer::<$s, $f>(
+                        weights, rounding,
+                    ),
+                }) as Box<dyn QuantForwardDyn>
+            };
+        }
+        let inner = for_format!(format.bits, format.frac, mk);
+        Ok(QuantizedGenerator { inner })
+    }
+
     /// Rebuild from raw storage words (artifact import); bit-exact
     /// against the exported generator.
     pub fn from_raw(format: QFormat, layers: &[QuantLayerRaw]) -> Result<Self> {
@@ -240,6 +382,13 @@ impl QuantizedGenerator {
                     ensure!(
                         l.w_shape.iter().product::<usize>() == l.w_raw.len(),
                         "quantized layer shape/data mismatch"
+                    );
+                    ensure!(
+                        l.scale_exps.len() == l.b_raw.len(),
+                        "quantized layer scale_exps/channel mismatch \
+                         ({} exps, {} channels)",
+                        l.scale_exps.len(),
+                        l.b_raw.len()
                     );
                     let w = TensorT::from_fn(l.w_shape.clone(), |i| {
                         Fixed::<$s, $f>::from_raw(
@@ -258,7 +407,7 @@ impl QuantizedGenerator {
                     built.push(QuantizedLayer {
                         w,
                         b,
-                        scale_exp: l.scale_exp,
+                        scales: ChannelScales::new(l.scale_exps.clone()),
                     });
                 }
                 Box::new(QuantNet::<$s, $f> { layers: built })
@@ -291,7 +440,7 @@ impl QuantizedGenerator {
 
 #[cfg(test)]
 mod tests {
-    use super::super::fixed::Q8_8;
+    use super::super::fixed::{Q2_6, Q8_8};
     use super::*;
     use crate::config::network_by_name;
     use crate::util::Rng;
@@ -350,18 +499,52 @@ mod tests {
     }
 
     #[test]
-    fn quantize_network_calibrates_per_layer() {
+    fn quantize_network_calibrates_per_channel() {
         let weights = tiny_weights(3);
         let q = quantize_network::<i16, 8>(&weights, Rounding::Nearest);
         assert_eq!(q.len(), weights.len());
         for (ql, (w, _)) in q.iter().zip(&weights) {
             assert_eq!(ql.w.shape(), w.shape());
-            // calibrated reconstruction error ≤ step · scale
-            let s = 2f32.powi(ql.scale_exp);
-            for (qv, fv) in ql.w.data().iter().zip(w.data()) {
+            let c_out = w.shape()[1];
+            let plane = w.shape()[2] * w.shape()[3];
+            assert_eq!(ql.scales.len(), c_out);
+            // calibrated reconstruction error ≤ step · channel scale
+            for (i, (qv, fv)) in ql.w.data().iter().zip(w.data()).enumerate()
+            {
+                let co = (i / plane) % c_out;
+                let s = 2f32.powi(ql.scales.exp(co));
                 let err = (qv.to_f32() * s - fv).abs();
                 assert!(err <= Q8_8::step() * s, "err={err} scale={s}");
             }
+        }
+    }
+
+    #[test]
+    fn per_channel_scales_isolate_outlier_channels() {
+        // channel 0 is loud (8.0), channel 1 is quiet (0.01): per-layer
+        // calibration would spend channel 1's resolution on channel 0's
+        // range; per-channel keeps the quiet channel sharp.
+        let w = Tensor::from_fn(vec![1, 2, 2, 2], |i| {
+            if i < 4 {
+                8.0
+            } else {
+                0.01
+            }
+        });
+        let b = vec![0.0f32, 0.0];
+        let scales = calibrate_channel_exps::<i8, 6>(&w, &b);
+        assert!(
+            scales.exp(0) > scales.exp(1),
+            "loud channel needs the bigger exponent: {:?}",
+            scales.exps()
+        );
+        let q = quantize_network::<i8, 6>(&[(w.clone(), b)], Rounding::Nearest);
+        // the quiet channel reconstructs to well under the per-layer
+        // step at the loud channel's scale
+        let s1 = 2f32.powi(q[0].scales.exp(1));
+        for i in 4..8 {
+            let err = (q[0].w.data()[i].to_f32() * s1 - w.data()[i]).abs();
+            assert!(err <= 0.5 * Q2_6::step() * s1, "err={err}");
         }
     }
 

@@ -23,7 +23,7 @@ use crate::deconv::{
     deconv_standard_blocked, deconv_tdc, deconv_tdc_blocked,
     legal_block_schedules, output_size, BlockSchedule, ReverseLoopOpts,
 };
-use crate::quant::{Element, Q16_16, Q8_8};
+use crate::quant::{Element, Q16_16, Q2_6, Q8_8};
 use crate::tensor::TensorT;
 use crate::util::{escape_json, parse_json, Bencher, Rng, WorkerPool};
 use anyhow::{bail, Context, Result};
@@ -66,6 +66,7 @@ impl TuneKernel {
 pub fn elem_label<T: Element>() -> String {
     match (T::BYTES, std::mem::size_of::<T::Acc>()) {
         (4, 4) => "f32".to_string(),
+        (1, 4) => "q8".to_string(),
         (2, 8) => "q8.8".to_string(),
         (4, 8) => "q16.16".to_string(),
         (b, a) => format!("elem{b}acc{a}"),
@@ -321,7 +322,8 @@ fn candidates(o_h: usize, s: usize, smoke: bool) -> Vec<BlockSchedule> {
         .filter(|b| {
             b.micro == micro
                 && matches!(b.macro_tiles, 1 | 4)
-                && matches!(b.lanes, 1 | 4 | 8)
+                // 16 keeps the doubled i8 lane width in the CI sweep
+                && matches!(b.lanes, 1 | 4 | 8 | 16)
         })
         .collect()
 }
@@ -442,6 +444,7 @@ pub fn run_tune(opts: &TuneOpts) -> TuneTable {
     let mut table = TuneTable::default();
     for kernel in TuneKernel::ALL {
         sweep_cell::<f32>(kernel, &g, &cands, opts, &pool, &mut table);
+        sweep_cell::<Q2_6>(kernel, &g, &cands, opts, &pool, &mut table);
         sweep_cell::<Q8_8>(kernel, &g, &cands, opts, &pool, &mut table);
         sweep_cell::<Q16_16>(kernel, &g, &cands, opts, &pool, &mut table);
     }
@@ -454,8 +457,9 @@ mod tests {
     use crate::deconv::SUPPORTED_LANES;
 
     #[test]
-    fn elem_labels_cover_the_three_precisions() {
+    fn elem_labels_cover_the_four_precisions() {
         assert_eq!(elem_label::<f32>(), "f32");
+        assert_eq!(elem_label::<Q2_6>(), "q8");
         assert_eq!(elem_label::<Q8_8>(), "q8.8");
         assert_eq!(elem_label::<Q16_16>(), "q16.16");
     }
@@ -561,14 +565,17 @@ mod tests {
     fn smoke_sweep_tunes_every_cell_and_winners_are_legal() {
         let opts = TuneOpts { smoke: true, trials: 1, warmup: 0 };
         let table = run_tune(&opts);
-        assert_eq!(table.len(), 9, "3 kernels x 3 precisions");
+        assert_eq!(table.len(), 12, "3 kernels x 4 precisions");
         let o_h = output_size(7, 4, 2, 1);
-        let key =
-            shape_key(TuneKernel::ReverseLoop, "q8.8", 8, 8, 4, 2, o_h);
-        let e = table.get(&key).expect("bench-geometry key present");
-        assert!(e.median_s > 0.0);
-        assert!(SUPPORTED_LANES.contains(&e.sched.lanes));
+        for elem in ["q8", "q8.8"] {
+            let key =
+                shape_key(TuneKernel::ReverseLoop, elem, 8, 8, 4, 2, o_h);
+            let e = table.get(&key).expect("bench-geometry key present");
+            assert!(e.median_s > 0.0);
+            assert!(SUPPORTED_LANES.contains(&e.sched.lanes));
+        }
         assert!(table.render().contains("reverse-loop/q8.8"));
+        assert!(table.render().contains("tdc/q8/"));
         // the persisted form round-trips and dispatch consults it
         let back = TuneTable::from_json(&table.to_json()).unwrap();
         let s = schedule_from_table::<Q8_8>(

@@ -345,7 +345,7 @@ pub fn run_loadtest(trace: &Trace, opts: &LoadtestOpts) -> Result<LoadtestReport
     anyhow::ensure!(!trace.events.is_empty(), "trace has no events");
 
     // networks to preload (base names) and whether any .q twin is mixed
-    let (networks, any_quant) = trace.networks();
+    let (networks, twins) = trace.networks();
 
     let mut overall = LogHistogram::latency_default();
     let mut overall_slo = SloCounter::new(trace.slo_s);
@@ -371,7 +371,8 @@ pub fn run_loadtest(trace: &Trace, opts: &LoadtestOpts) -> Result<LoadtestReport
             batcher: BatcherConfig::default(),
             backends,
             executors: opts.executors,
-            quant: any_quant.then_some(QFormat::new(16, 8)),
+            quant: twins.q.then_some(QFormat::new(16, 8)),
+            quant8: twins.q8.then_some(QFormat::new(8, 6)),
             shard_batches: opts.shard_batches,
             clock: None,
         })

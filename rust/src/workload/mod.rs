@@ -30,7 +30,7 @@ pub use loadtest::{
     run_loadtest, DeadlineVerdict, LaneVerdict, LoadtestOpts, LoadtestReport,
     VariationVerdict,
 };
-pub use scenario::{MixEntry, Scenario};
+pub use scenario::{MixEntry, Scenario, TwinMix};
 pub use trace::{Trace, TraceEvent};
 
 use crate::config::TrafficCfg;

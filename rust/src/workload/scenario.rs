@@ -132,9 +132,9 @@ impl Scenario {
     }
 
     /// Base (f32) networks the scenario touches, deduplicated, plus
-    /// whether any mix entry serves a `.q` precision twin (the
-    /// coordinator then enables quantized twins at startup).
-    pub fn networks(&self) -> (Vec<String>, bool) {
+    /// which `.q` / `.q8` precision twins the mix serves (the
+    /// coordinator then enables the matching twins at startup).
+    pub fn networks(&self) -> (Vec<String>, TwinMix) {
         base_networks(self.mix.iter().map(|e| e.network.as_str()))
     }
 
@@ -232,23 +232,51 @@ impl Scenario {
     }
 }
 
+/// Which precision twins a workload's logical names mix in (what the
+/// coordinator must enable at startup to serve them).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TwinMix {
+    /// Any `<name>.q` (16-bit default) twin referenced.
+    pub q: bool,
+    /// Any `<name>.q8` (8-bit) twin referenced.
+    pub q8: bool,
+}
+
+impl TwinMix {
+    pub fn any(&self) -> bool {
+        self.q || self.q8
+    }
+}
+
 /// Base (f32) network names behind an iterator of logical names,
-/// deduplicated in first-seen order, plus whether any name is a `.q`
-/// precision twin — the one place the twin-naming convention is
-/// decoded for workload purposes (scenarios *and* traces).
+/// deduplicated in first-seen order, plus which precision twins the
+/// names mix in — the one place the twin-naming convention is decoded
+/// for workload purposes (scenarios *and* traces).
 pub(crate) fn base_networks<'a>(
     names: impl Iterator<Item = &'a str>,
-) -> (Vec<String>, bool) {
+) -> (Vec<String>, TwinMix) {
     let mut bases: Vec<String> = Vec::new();
-    let mut any_quant = false;
+    let mut twins = TwinMix::default();
     for name in names {
-        let base = name.strip_suffix(".q").unwrap_or(name);
-        any_quant |= name.ends_with(".q");
+        // `.q8` checked first: a `.q8` name must not decode as `.q`
+        let base = match name.strip_suffix(".q8") {
+            Some(b) => {
+                twins.q8 = true;
+                b
+            }
+            None => match name.strip_suffix(".q") {
+                Some(b) => {
+                    twins.q = true;
+                    b
+                }
+                None => name,
+            },
+        };
         if !bases.iter().any(|b| b == base) {
             bases.push(base.to_string());
         }
     }
-    (bases, any_quant)
+    (bases, twins)
 }
 
 fn arrival_json(a: &ArrivalProcess) -> String {
@@ -330,9 +358,24 @@ mod tests {
 
     #[test]
     fn mix_names_the_precision_twins() {
-        let (bases, quant) = Scenario::builtin("burst").unwrap().networks();
+        let (bases, twins) = Scenario::builtin("burst").unwrap().networks();
         assert_eq!(bases, vec!["mnist".to_string()], "twins share one base");
-        assert!(quant, "the default mix serves a .q twin");
+        assert!(twins.q, "the default mix serves a .q twin");
+    }
+
+    #[test]
+    fn q8_twin_names_decode_separately_from_q() {
+        let (bases, twins) = base_networks(
+            ["mnist", "mnist.q8", "celeba.q"].iter().copied(),
+        );
+        assert_eq!(
+            bases,
+            vec!["mnist".to_string(), "celeba".to_string()],
+            ".q8 must strip to its base, not to \"mnist.q8\""
+        );
+        assert!(twins.q && twins.q8 && twins.any());
+        let (_, only8) = base_networks(["mnist.q8"].iter().copied());
+        assert!(only8.q8 && !only8.q, ".q8 is not a .q");
     }
 
     #[test]

@@ -86,11 +86,11 @@ impl Trace {
         self.events.last().map(|e| e.t_s).unwrap_or(0.0)
     }
 
-    /// Base (f32) networks the trace touches, deduplicated, plus
-    /// whether any event targets a `.q` precision twin — what a
-    /// coordinator must preload (and whether with quantized twins) to
-    /// serve this trace.
-    pub fn networks(&self) -> (Vec<String>, bool) {
+    /// Base (f32) networks the trace touches, deduplicated, plus which
+    /// `.q` / `.q8` precision twins the events target — what a
+    /// coordinator must preload (and which quantized twins to enable)
+    /// to serve this trace.
+    pub fn networks(&self) -> (Vec<String>, super::scenario::TwinMix) {
         super::scenario::base_networks(
             self.events.iter().map(|e| e.network.as_str()),
         )

@@ -162,6 +162,7 @@ fn start_single_lane(dir: &TempDir, max_wait_ms: u64) -> Coordinator {
         },
         executors: 0,
         quant: None,
+        quant8: None,
         shard_batches: false,
         clock: None,
     })

@@ -38,6 +38,7 @@ fn start_pool(
         },
         executors: 0,
         quant,
+        quant8: None,
         shard_batches: false,
         clock: None,
     })
@@ -191,6 +192,7 @@ fn sharded_mixed_pool_stays_deterministic() {
         },
         executors: 0,
         quant: None,
+        quant8: None,
         shard_batches: true,
         clock: None,
     })

@@ -178,6 +178,7 @@ fn admission_control_rejects_and_accounts_under_flood() {
         },
         executors: 0,
         quant: None,
+        quant8: None,
         shard_batches: false,
         clock: None,
     })
@@ -248,6 +249,7 @@ fn deferred_drain_order_and_no_starvation_across_networks() {
         },
         executors: 0,
         quant: Some(QFormat::new(16, 8)),
+        quant8: None,
         shard_batches: false,
         clock: None,
     })
@@ -417,6 +419,7 @@ fn stage_breakdown_separates_device_execute_cv_from_queue_wait() {
         },
         executors: 0,
         quant: None,
+        quant8: None,
         shard_batches: true,
         clock: None,
     })
@@ -503,6 +506,7 @@ fn stage_spans_telescope_to_reported_latency_for_both_precisions() {
         },
         executors: 0,
         quant: Some(QFormat::new(16, 8)),
+        quant8: None,
         shard_batches: false,
         clock: None,
     })

@@ -16,8 +16,11 @@ use edgedcnn::deconv::{
     deconv_tdc_blocked, deconv_tdc_ref, BlockSchedule, ReverseLoopOpts,
     SUPPORTED_LANES,
 };
-use edgedcnn::quant::{Element, Q16_16, Q8_8};
-use edgedcnn::tensor::TensorT;
+use edgedcnn::quant::{
+    calibrate_channel_exps, quantize_network, Element, Rounding, Q16_16, Q2_6,
+    Q8_8,
+};
+use edgedcnn::tensor::{Tensor, TensorT};
 use edgedcnn::util::{Rng, WorkerPool};
 
 const CASES: usize = 120;
@@ -180,6 +183,15 @@ fn prop_q16_16_kernels_bit_identical_to_frozen_references() {
 }
 
 #[test]
+fn prop_q2_6_kernels_bit_identical_to_frozen_references() {
+    // the packed-int8 datapath: i8 stores, exact i32 accumulation
+    let mut rng = Rng::seed_from_u64(0x0806_BEEF);
+    for case in 0..CASES {
+        check_case::<Q2_6>(&mut rng, case, "q2.6");
+    }
+}
+
+#[test]
 fn prop_f32_blocked_kernels_bit_identical_to_frozen_references() {
     let mut rng = Rng::seed_from_u64(0xB10C_F32);
     for case in 0..CASES {
@@ -200,5 +212,72 @@ fn prop_q16_16_blocked_kernels_bit_identical_to_frozen_references() {
     let mut rng = Rng::seed_from_u64(0xB10C_1616);
     for case in 0..CASES {
         check_blocked_case::<Q16_16>(&mut rng, case, "q16.16");
+    }
+}
+
+#[test]
+fn prop_q2_6_blocked_kernels_bit_identical_to_frozen_references() {
+    // blocked dispatch covers the doubled i8 lane widths (8 and 16)
+    let mut rng = Rng::seed_from_u64(0xB10C_0806);
+    for case in 0..CASES {
+        check_blocked_case::<Q2_6>(&mut rng, case, "q2.6");
+    }
+}
+
+#[test]
+fn prop_per_channel_calibration_error_bounded_by_half_a_step() {
+    // Per-output-channel calibrate → quantize → dequantize at Q2.6 with
+    // round-to-nearest: every weight and bias of channel `co` must land
+    // within half a quantization step *at that channel's scale* —
+    // 0.5 · 2^-6 · 2^exp(co) — not merely within the layer-wide bound a
+    // single shared exponent would give.  Calibration guarantees
+    // max|w|/2^exp(co) fits the representable range (the scale is an
+    // exact power of two, so the pre-quantization multiply is lossless),
+    // which makes the half-step bound exact, not statistical.
+    let mut rng = Rng::seed_from_u64(0xCA11_0806);
+    for case in 0..CASES {
+        let c_in = rng.range_usize(1, 4);
+        let c_out = rng.range_usize(1, 6);
+        let k = rng.range_usize(1, 6);
+        // per-channel magnitude spread of ~2^±6 so channels genuinely
+        // calibrate to different exponents
+        let mags: Vec<f32> = (0..c_out)
+            .map(|_| 2f32.powi(rng.range_usize(0, 13) as i32 - 6))
+            .collect();
+        let w = Tensor::from_fn(vec![c_in, c_out, k, k], |i| {
+            let co = (i / (k * k)) % c_out;
+            mags[co] * rng.range_f32(-1.0, 1.0)
+        });
+        let b: Vec<f32> = (0..c_out)
+            .map(|co| mags[co] * rng.range_f32(-0.5, 0.5))
+            .collect();
+        let scales = calibrate_channel_exps::<i8, 6>(&w, &b);
+        let q = quantize_network::<i8, 6>(
+            &[(w.clone(), b.clone())],
+            Rounding::Nearest,
+        );
+        assert_eq!(q[0].scales, scales, "case {case}: calibration agrees");
+        let plane = k * k;
+        for (i, (qv, fv)) in q[0].w.data().iter().zip(w.data()).enumerate() {
+            let co = (i / plane) % c_out;
+            let s = 2f32.powi(scales.exp(co));
+            let err = (qv.to_f32() * s - fv).abs();
+            assert!(
+                err <= 0.5 * Q2_6::step() * s,
+                "case {case} weight {i} (channel {co}): err {err} exceeds \
+                 half a step at scale 2^{}",
+                scales.exp(co)
+            );
+        }
+        for (co, (qv, fv)) in q[0].b.iter().zip(&b).enumerate() {
+            let s = 2f32.powi(scales.exp(co));
+            let err = (qv.to_f32() * s - fv).abs();
+            assert!(
+                err <= 0.5 * Q2_6::step() * s,
+                "case {case} bias {co}: err {err} exceeds half a step at \
+                 scale 2^{}",
+                scales.exp(co)
+            );
+        }
     }
 }
